@@ -1,0 +1,62 @@
+//! Quickstart: the smallest real end-to-end path through all three layers.
+//!
+//! Loads the AOT artifacts (L1 Pallas kernels + L2 JAX model compiled to
+//! HLO), runs a short real RL post-training job on the PJRT CPU runtime
+//! (L3), and shows Algorithm 1 admitting jobs onto a simulated cluster.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::rl::{CountingTask, RlJob};
+use rollmux::runtime::ModelRuntime;
+use rollmux::workload::profiles::table3_job;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. Scheduling: admit the paper's Table 3 job types. -------------
+    println!("== Algorithm 1 over the Table 3 job types ==");
+    let mut sched = InterGroupScheduler::new(PhaseModel::default());
+    for (i, ty) in "AABDD".chars().enumerate() {
+        let job = table3_job(ty, i, 0.0);
+        let name = job.name.clone();
+        let d = sched.schedule(job);
+        println!(
+            "  {name:<22} -> group {} {:?} (marginal ${:.2}/h)",
+            d.group_id, d.kind, d.marginal_cost
+        );
+    }
+    println!(
+        "  => {} groups, ${:.2}/h total (solo provisioning would be ${:.2}/h)\n",
+        sched.groups.len(),
+        sched.total_cost_per_hour(),
+        5.0 * 8.0 * (1.85 + 5.28)
+    );
+
+    // --- 2. Real execution: a short RL run on the tiny artifacts. --------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/tiny missing — run `make artifacts` for the real-execution half");
+        return Ok(());
+    }
+    println!("== Real RL post-training (tiny actor, counting task) ==");
+    let rt = Arc::new(ModelRuntime::load(dir)?);
+    println!(
+        "  platform={} params={} ({} leaves)",
+        rt.platform(),
+        rt.manifest.config.param_count,
+        rt.manifest.param_leaves.len()
+    );
+    let mut job = RlJob::new("quickstart", rt, Arc::new(CountingTask), 0)?;
+    for _ in 0..8 {
+        let log = job.run_iteration()?;
+        println!(
+            "  iter {:>2}: reward {:.3}  pg-loss {:+.4}  entropy {:.2}  (roll {:.2}s train {:.2}s sync {:.3}s)",
+            log.iter, log.mean_reward, log.loss, log.entropy, log.t_roll_s, log.t_train_s, log.t_sync_s
+        );
+    }
+    let first = job.history.first().unwrap().mean_reward;
+    let last = job.history.last().unwrap().mean_reward;
+    println!("  reward: {first:.3} -> {last:.3}");
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT compile path: lower the L2 model's phase functions to HLO text.
+
+Run once at build time (`make artifacts`); Python is never on the request
+path. For each ModelConfig this emits:
+
+    artifacts/<config>/init.hlo.txt          seed -> (params, m, v)
+    artifacts/<config>/rollout_step.hlo.txt  (params, tokens, pos, seed, temp)
+                                             -> (next_token, entropy)
+    artifacts/<config>/rollout_phase.hlo.txt  whole generation loop (fast path)
+    artifacts/<config>/train_step.hlo.txt    (params, m, v, step, tokens,
+                                              mask, adv, lr, ent_coef)
+                                             -> (params', m', v', loss, ent)
+    artifacts/<config>/forward.hlo.txt       (params, tokens) -> logits
+    artifacts/<config>/manifest.json         flat input/output tables
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` crate) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_specs(tree):
+    """Flatten a pytree of ShapeDtypeStructs into manifest rows."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    rows = []
+    for path, leaf in leaves:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        rows.append({
+            "name": name or "arg",
+            "shape": [int(s) for s in leaf.shape],
+            "dtype": str(leaf.dtype),
+        })
+    return rows
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(cfg: M.ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    b, t = cfg.batch, cfg.seq_len
+    params_spec = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    state_spec = (params_spec, params_spec, params_spec)  # params, m, v
+
+    scalar_i = _spec((), jnp.int32)
+    scalar_f = _spec((), jnp.float32)
+    tokens_spec = _spec((b, t), jnp.int32)
+    mask_spec = _spec((b, t), jnp.float32)
+    adv_spec = _spec((b,), jnp.float32)
+
+    entries = []
+
+    def emit(name, fn, args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_spec = jax.eval_shape(fn, *args)
+        entries.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": _leaf_specs(args),
+            "outputs": _leaf_specs(out_spec),
+        })
+        print(f"  {name}: {len(text)/1e6:.2f} MB HLO text")
+
+    emit("init", lambda seed: M.init_state(seed, cfg), (scalar_i,))
+    emit(
+        "rollout_step",
+        lambda p, toks, pos, seed, temp: M.rollout_step(p, toks, pos, seed, temp, cfg),
+        (params_spec, tokens_spec, scalar_i, scalar_i, scalar_f),
+    )
+    emit(
+        "rollout_phase",
+        lambda p, toks, seed, temp: M.rollout_phase(p, toks, seed, temp, cfg),
+        (params_spec, tokens_spec, scalar_i, scalar_f),
+    )
+    emit(
+        "train_step",
+        lambda p, m, v, step, toks, mask, adv, lr, ec: M.train_step(
+            p, m, v, step, toks, mask, adv, lr, ec, cfg),
+        (*state_spec, scalar_i, tokens_spec, mask_spec, adv_spec, scalar_f, scalar_f),
+    )
+    emit("forward", lambda p, toks: M.forward(p, toks, cfg), (params_spec, tokens_spec))
+
+    manifest = {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "seq_len": cfg.seq_len, "batch": cfg.batch,
+            "prompt_len": cfg.prompt_len,
+            "param_count": cfg.param_count(),
+        },
+        "param_leaves": [
+            {"name": n, "shape": list(s), "dtype": d}
+            for n, s, d in M.param_leaves(cfg)
+        ],
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="tiny,small",
+                    help="comma-separated ModelConfig names (see model.CONFIGS)")
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact root; one subdir per config")
+    args = ap.parse_args()
+    for name in args.config.split(","):
+        cfg = M.CONFIGS[name.strip()]
+        print(f"[aot] lowering config '{cfg.name}' "
+              f"({cfg.param_count()/1e6:.2f}M params)")
+        build_artifacts(cfg, os.path.join(args.out, cfg.name))
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: fused causal multi-head attention (flash-style).
+
+TPU adaptation of the GPU flash-attention idiom (DESIGN.md section
+"Hardware adaptation"): instead of warps + shared memory, each grid program
+owns one (batch*head, q-block) tile resident in VMEM and streams K/V tiles
+through an online-softmax `fori_loop`, so the [T, T] score matrix is never
+materialized in HBM. Matmuls accumulate in f32 (`preferred_element_type`)
+to target the MXU's native bf16xbf16->f32 mode.
+
+The kernel is lowered with `interpret=True`: on this CPU-only PJRT build a
+real Mosaic lowering cannot execute. Numerics are identical; TPU VMEM/MXU
+estimates live in DESIGN.md section "Performance targets".
+
+Autodiff: the training path wraps the kernel in `jax.custom_vjp` whose
+backward pass is the standard recompute formulation written in pure jnp
+(pallas_call has no differentiation rule). Forward numerics -- the part the
+paper's rollout hot-loop exercises -- always go through the kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 32
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One (batch*head, q-block) program of the online-softmax loop."""
+    block_q, d = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32) * scale  # [block_q, d], VMEM-resident
+    qi = pl.program_id(1)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k_tile = pl.load(k_ref, (0, pl.ds(kb * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (0, pl.ds(kb * block_k, block_k), slice(None)))
+        # MXU matmul: inputs stay in storage dtype, accumulate f32.
+        s = jax.lax.dot_general(
+            q, k_tile.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [block_q, block_k]
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, -jnp.inf)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v_tile.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return acc, m_new, l_new
+
+    # Causality: q block `qi` only attends to k blocks 0..qi (block_q == block_k).
+    n_kb = qi + 1
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, n_kb, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+def causal_attention_fwd(q, k, v, *, block: int = DEFAULT_BLOCK, scale=None):
+    """Fused causal attention over [B, H, T, D] via the Pallas kernel."""
+    b, h, t, d = q.shape
+    block = min(block, t)
+    assert t % block == 0, f"seq_len {t} must be a multiple of block {block}"
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    bh = b * h
+    qf, kf, vf = (x.reshape(bh, t, d) for x in (q, k, v))
+    grid = (bh, t // block)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=block, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block, d), lambda i, j: (i, j, 0)),  # q tile: HBM->VMEM per program
+            pl.BlockSpec((1, t, d), lambda i, j: (i, 0, 0)),      # k rows for this head
+            pl.BlockSpec((1, t, d), lambda i, j: (i, 0, 0)),      # v rows for this head
+        ],
+        out_specs=pl.BlockSpec((1, block, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=True,  # CPU-PJRT execution path; see module docstring
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def causal_attention(q, k, v, block: int = DEFAULT_BLOCK):
+    """Differentiable fused causal attention (kernel fwd, recompute bwd)."""
+    return causal_attention_fwd(q, k, v, block=block)
+
+
+def _attn_vjp_fwd(q, k, v, block):
+    return causal_attention_fwd(q, k, v, block=block), (q, k, v)
+
+
+def _attn_vjp_bwd(block, res, g):
+    q, k, v = res
+    # Standard recompute backward (the flash-attention bwd formulation's
+    # jnp transcription). Runs only inside train_step.
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.causal_attention_ref(q_, k_, v_), q, k, v)
+    return vjp(g)
+
+
+causal_attention.defvjp(_attn_vjp_fwd, _attn_vjp_bwd)

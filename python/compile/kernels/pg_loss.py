@@ -1,0 +1,162 @@
+"""L1 Pallas kernel: fused policy-gradient loss (+ analytic backward kernel).
+
+The RL training hot-spot. A naive implementation materializes the full
+[B, T, V] log-softmax tensor in HBM three times (log_softmax, gather,
+entropy). This kernel fuses log-sum-exp, the picked-logit gather, the
+advantage weighting and the entropy reduction into one VMEM-tiled pass,
+emitting only per-tile partial sums; and the backward pass is a second
+Pallas kernel computing the analytic gradient
+    dL/dlogits = mask*adv/denom * (softmax(logits) - onehot(action))
+so training never materializes log-probs either.
+
+Tiling: grid = (B, T/block_t); each program owns a [block_t, V] logits tile
+in VMEM. V is tiled implicitly by the compiler for the small vocabularies
+used here; for production vocabs an extra V-grid dimension would be added
+(see DESIGN.md "Performance targets").
+
+interpret=True: see attention.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 32
+
+
+def _fwd_kernel(logits_ref, actions_ref, adv_ref, mask_ref, loss_ref, ent_ref):
+    """Partial loss/entropy sums for one [block_t, V] tile."""
+    logits = logits_ref[0].astype(jnp.float32)        # [bt, V]
+    actions = actions_ref[0]                          # [bt]
+    mask = mask_ref[0].astype(jnp.float32)            # [bt]
+    adv = adv_ref[0]                                  # scalar advantage of row b
+    bt, v = logits.shape
+
+    m = logits.max(axis=-1, keepdims=True)
+    shifted = logits - m
+    sumexp = jnp.exp(shifted).sum(axis=-1, keepdims=True)
+    lse = m + jnp.log(sumexp)                         # [bt, 1]
+
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, (bt, v), 1)
+    picked = jnp.where(vocab_ids == actions[:, None], logits, 0.0).sum(axis=-1)
+    logp_a = picked - lse[:, 0]                       # log p(action)
+
+    probs = jnp.exp(shifted) / sumexp
+    ent = (probs * (lse - logits)).sum(axis=-1)       # -sum p log p
+
+    loss_ref[0, 0] = -(mask * adv * logp_a).sum()
+    ent_ref[0, 0] = (mask * ent).sum()
+
+
+def _bwd_kernel(logits_ref, actions_ref, coef_ref, ecoef_ref, dlogits_ref):
+    """Analytic gradient tile.
+
+    Combines both outputs' cotangents in one fused pass:
+      d(loss)/dlogits    = coef * (softmax - onehot)
+      d(entropy)/dlogits = -softmax * (logp + H_row)   (per-row entropy H)
+    where `coef` = g_loss*mask*adv/denom and `ecoef` = g_ent*mask/denom.
+    """
+    logits = logits_ref[0].astype(jnp.float32)
+    actions = actions_ref[0]
+    coef = coef_ref[0]                                # [bt]
+    ecoef = ecoef_ref[0]                              # [bt]
+    bt, v = logits.shape
+    m = logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    sumexp = e.sum(axis=-1, keepdims=True)
+    probs = e / sumexp
+    logp = (logits - m) - jnp.log(sumexp)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, (bt, v), 1)
+    onehot = (vocab_ids == actions[:, None]).astype(jnp.float32)
+    h_row = -(probs * logp).sum(axis=-1, keepdims=True)
+    d_loss = coef[:, None] * (probs - onehot)
+    d_ent = ecoef[:, None] * (-probs * (logp + h_row))
+    dlogits_ref[0] = (d_loss + d_ent).astype(dlogits_ref.dtype)
+
+
+def _tile(t: int, block_t: int) -> int:
+    """Largest divisor of t that is <= block_t (T-1 after the next-token
+    shift is rarely a power of two, so we adapt instead of asserting)."""
+    bt = min(block_t, t)
+    while t % bt != 0:
+        bt -= 1
+    return bt
+
+
+def pg_loss_fwd_parts(logits, actions, advantages, mask, *, block_t=DEFAULT_BLOCK_T):
+    """Run the forward kernel; returns per-(b, tile) partial sums."""
+    b, t, v = logits.shape
+    bt = _tile(t, block_t)
+    n_tiles = t // bt
+    grid = (b, n_tiles)
+    loss_parts, ent_parts = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, v), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_tiles), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_tiles), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, actions, advantages, mask)
+    return loss_parts, ent_parts
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def pg_loss(logits, actions, advantages, mask, block_t: int = DEFAULT_BLOCK_T):
+    """Fused policy-gradient loss. Returns (loss, entropy) scalars.
+
+    Gradients flow to `logits` only (actions/advantages/mask are data).
+    Both outputs are differentiable: the analytic backward kernel fuses the
+    loss gradient with the entropy gradient, so entropy-regularized PG
+    objectives (`loss - c*entropy`) never materialize log-probs in HBM.
+    """
+    loss_parts, ent_parts = pg_loss_fwd_parts(
+        logits, actions, advantages, mask, block_t=block_t)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return loss_parts.sum() / denom, ent_parts.sum() / denom
+
+
+def _pg_vjp_fwd(logits, actions, advantages, mask, block_t):
+    out = pg_loss(logits, actions, advantages, mask, block_t)
+    return out, (logits, actions, advantages, mask)
+
+
+def _pg_vjp_bwd(block_t, res, cotangents):
+    g_loss, g_ent = cotangents
+    logits, actions, advantages, mask = res
+    b, t, v = logits.shape
+    bt = _tile(t, block_t)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    # loss = -sum(mask*adv*logp_a)/denom and dlogp_a/dlogits = onehot-softmax,
+    # hence dL/dlogits = g * mask*adv/denom * (softmax - onehot).
+    coef = g_loss * mask * advantages[:, None] / denom  # [B, T]
+    ecoef = g_ent * mask / denom                        # [B, T]
+    dlogits = pl.pallas_call(
+        _bwd_kernel,
+        grid=(b, t // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, v), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bt), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, v), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, v), logits.dtype),
+        interpret=True,
+    )(logits, actions, coef, ecoef)
+    return (dlogits, None, None, None)
+
+
+pg_loss.defvjp(_pg_vjp_fwd, _pg_vjp_bwd)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the numerical ground truth: every Pallas kernel in this package is
+checked against the corresponding function here (pytest + hypothesis sweeps
+in python/tests/). They are deliberately written in the most obvious way --
+no tiling, no online softmax -- so a mismatch always indicts the kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v, *, scale=None):
+    """Reference multi-head causal attention.
+
+    Args:
+      q, k, v: [B, H, T, D] arrays.
+      scale: softmax scale; defaults to 1/sqrt(D).
+    Returns:
+      [B, H, T, D] attention output.
+    """
+    _, _, t, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def pg_loss_ref(logits, actions, advantages, mask):
+    """Reference policy-gradient (REINFORCE-with-advantage) loss.
+
+    loss = -sum_{b,t} mask[b,t] * advantage[b] * log p(actions[b,t]) / sum(mask)
+
+    Args:
+      logits:     [B, T, V] pre-softmax action logits.
+      actions:    [B, T] int32 taken actions (generated tokens).
+      advantages: [B] float32 per-sequence advantage.
+      mask:       [B, T] float32, 1.0 on generated (trainable) positions.
+    Returns:
+      (loss, entropy): scalars; entropy is the mean token entropy over mask.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, actions[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = -(mask * advantages[:, None] * picked).sum() / denom
+    probs = jnp.exp(logp)
+    ent = -(probs * logp).sum(-1)
+    entropy = (mask * ent).sum() / denom
+    return loss, entropy
+
+
+def pg_loss_grad_ref(logits, actions, advantages, mask):
+    """Analytic d(loss)/d(logits) for the reference PG loss (no entropy term).
+
+    dL/dlogits[b,t,:] = mask*adv/denom * (softmax(logits) - onehot(action))
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(actions, logits.shape[-1], dtype=logits.dtype)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    coef = (mask * advantages[:, None] / denom)[..., None]
+    return coef * (probs - onehot)

@@ -1,0 +1,226 @@
+"""L2: the RL post-training compute graph (actor transformer), in JAX.
+
+This is the model half of the paper's workload: a GPT-style decoder-only
+transformer actor whose three RL phases the Rust coordinator (L3)
+orchestrates:
+
+  * rollout  -> `rollout_step`:  one autoregressive decode step (sampling),
+  * training -> `train_step`:    policy-gradient loss + Adam update,
+  * sync     -> parameter copy (pure data movement, done by L3).
+
+All functions here are pure and fixed-shape so `aot.py` can lower each one
+once to an HLO artifact that rust/src/runtime/ executes via PJRT, with
+Python never on the request path. The attention hot-spot and the PG-loss
+hot-spot run through the L1 Pallas kernels (kernels/attention.py,
+kernels/pg_loss.py).
+"""
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import causal_attention
+from .kernels.pg_loss import pg_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + batch geometry for one AOT artifact set."""
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+    prompt_len: int  # positions [0, prompt_len) are the prompt; rest generated
+    attn_block: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        leaves = jax.eval_shape(lambda k: init_params(k, self), jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(int(jnp.prod(jnp.asarray(l.shape))) for l in jax.tree_util.tree_leaves(leaves))
+
+
+# Artifact configurations. `tiny` is the end-to-end default (CPU-friendly);
+# `small` exercises multi-head/multi-layer shapes; `medium` approximates the
+# per-step arithmetic of a production job at ~27M params and is used by the
+# runtime benchmarks; `large` (~124M, GPT-2-small class) is the paper-scale
+# config -- AOT-compilable here, but its train step is minutes/step on CPU
+# PJRT, so EXPERIMENTS.md trains `tiny`/`small` and documents the
+# substitution (DESIGN.md section 2).
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        ModelConfig("tiny", vocab=256, d_model=128, n_layers=2, n_heads=4,
+                    seq_len=64, batch=4, prompt_len=16),
+        ModelConfig("small", vocab=512, d_model=256, n_layers=4, n_heads=8,
+                    seq_len=128, batch=8, prompt_len=32),
+        ModelConfig("medium", vocab=4096, d_model=512, n_layers=8, n_heads=8,
+                    seq_len=256, batch=8, prompt_len=64),
+        ModelConfig("large", vocab=32768, d_model=768, n_layers=12, n_heads=12,
+                    seq_len=256, batch=8, prompt_len=64),
+    ]
+}
+
+
+def init_params(key, cfg: ModelConfig):
+    """Initialize the actor parameters (layers stacked for lax.scan)."""
+    k_embed, k_pos, k_layers, k_out = jax.random.split(key, 4)
+    d, l = cfg.d_model, cfg.n_layers
+    s = 0.02
+
+    def stack(k, shape, scale=s):
+        return jax.random.normal(k, (l,) + shape, jnp.float32) * scale
+
+    ks = jax.random.split(k_layers, 8)
+    return {
+        "embed": jax.random.normal(k_embed, (cfg.vocab, d), jnp.float32) * s,
+        "pos": jax.random.normal(k_pos, (cfg.seq_len, d), jnp.float32) * s,
+        "layers": {
+            "ln1_scale": jnp.ones((l, d)), "ln1_bias": jnp.zeros((l, d)),
+            "wq": stack(ks[0], (d, d)), "wk": stack(ks[1], (d, d)),
+            "wv": stack(ks[2], (d, d)), "wo": stack(ks[3], (d, d)),
+            "ln2_scale": jnp.ones((l, d)), "ln2_bias": jnp.zeros((l, d)),
+            "w1": stack(ks[4], (d, 4 * d)), "b1": jnp.zeros((l, 4 * d)),
+            "w2": stack(ks[5], (4 * d, d)), "b2": jnp.zeros((l, d)),
+        },
+        "ln_f_scale": jnp.ones((d,)), "ln_f_bias": jnp.zeros((d,)),
+        "unembed": jax.random.normal(k_out, (d, cfg.vocab), jnp.float32) * s,
+    }
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    """Actor forward: tokens [B, T] int32 -> logits [B, T, V]."""
+    b, t = tokens.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens] + params["pos"][None, :t]
+
+    def layer(x, lp):
+        y = _layernorm(x, lp["ln1_scale"], lp["ln1_bias"])
+        q = (y @ lp["wq"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        k = (y @ lp["wk"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        v = (y @ lp["wv"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        # L1 Pallas kernel: fused causal attention.
+        o = causal_attention(q, k, v, cfg.attn_block)
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        x = x + o @ lp["wo"]
+        y = _layernorm(x, lp["ln2_scale"], lp["ln2_bias"])
+        y = jax.nn.gelu(y @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+        return x + y, None
+
+    x, _ = jax.lax.scan(layer, x, params["layers"])
+    x = _layernorm(x, params["ln_f_scale"], params["ln_f_bias"])
+    return x @ params["unembed"]
+
+
+def rollout_step(params, tokens, pos, seed, temperature, cfg: ModelConfig):
+    """One autoregressive decode step (the rollout phase's inner loop).
+
+    Samples token at position `pos` given tokens[:, :pos]; fixed shapes so
+    the same HLO serves every step. Returns (next_token [B] i32, mean
+    entropy of the sampling distribution -- the rollout-progress signal the
+    intra-group scheduler's runtime hooks consume).
+    """
+    logits = forward(params, tokens, cfg)  # [B, T, V]
+    step_logits = jax.lax.dynamic_index_in_dim(
+        logits, pos - 1, axis=1, keepdims=False)  # [B, V]
+    step_logits = step_logits / jnp.maximum(temperature, 1e-4)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+    next_token = jax.random.categorical(key, step_logits, axis=-1)
+    logp = jax.nn.log_softmax(step_logits, axis=-1)
+    entropy = -(jnp.exp(logp) * logp).sum(-1).mean()
+    return next_token.astype(jnp.int32), entropy
+
+
+def rollout_phase(params, tokens, seed, temperature, cfg: ModelConfig):
+    """Whole rollout generation loop inside one HLO (the fast path).
+
+    Autoregressively fills positions [prompt_len, seq_len) of `tokens`.
+    One PJRT dispatch per rollout phase instead of one per token; the
+    per-token `rollout_step` artifact remains for the hook-driven
+    (long-tail-migration) execution mode. Returns (tokens, mean entropy).
+    """
+    b, t = tokens.shape
+
+    def body(pos, carry):
+        toks, ent_sum = carry
+        nxt, ent = rollout_step(params, toks, pos, seed, temperature, cfg)
+        toks = jax.lax.dynamic_update_slice_in_dim(
+            toks, nxt[:, None], pos, axis=1)
+        return toks, ent_sum + ent
+
+    tokens, ent_sum = jax.lax.fori_loop(
+        cfg.prompt_len, t, body, (tokens, jnp.float32(0.0)))
+    n_gen = t - cfg.prompt_len
+    return tokens, ent_sum / jnp.float32(max(n_gen, 1))
+
+
+def _loss_fn(params, tokens, mask, advantages, ent_coef, cfg: ModelConfig):
+    """Entropy-regularized PG loss on generated positions."""
+    logits = forward(params, tokens, cfg)[:, :-1]  # predict token t+1 at t
+    actions = tokens[:, 1:]
+    loss, entropy = pg_loss(logits, actions, advantages, mask[:, 1:])
+    # Entropy bonus flows through the fused backward kernel.
+    return loss - ent_coef * entropy, entropy
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """Bias-corrected Adam over arbitrary pytrees."""
+    step_f = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** (step_f + 1.0)
+    bc2 = 1.0 - b2 ** (step_f + 1.0)
+    new_m = jax.tree_util.tree_map(lambda mi, g: b1 * mi + (1 - b1) * g, m, grads)
+    new_v = jax.tree_util.tree_map(lambda vi, g: b2 * vi + (1 - b2) * g * g, v, grads)
+    new_p = jax.tree_util.tree_map(
+        lambda p, mi, vi: p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps),
+        params, new_m, new_v)
+    return new_p, new_m, new_v
+
+
+def train_step(params, m, v, step, tokens, mask, advantages, lr, ent_coef,
+               cfg: ModelConfig):
+    """One on-policy training step: fused entropy-regularized PG loss
+    fwd+bwd + Adam.
+
+    Single jax.value_and_grad pass (no recomputation); lowered once to HLO.
+    Returns (params', m', v', loss, entropy).
+    """
+    (loss, entropy), grads = jax.value_and_grad(
+        _loss_fn, has_aux=True)(params, tokens, mask, advantages, ent_coef, cfg)
+    new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr)
+    return new_p, new_m, new_v, loss, entropy
+
+
+def zeros_like_params(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def init_state(seed, cfg: ModelConfig):
+    """(params, m, v) from an integer seed -- the Init phase."""
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    return params, zeros_like_params(params), zeros_like_params(params)
+
+
+def param_leaves(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Flattened (path, shape, dtype) list -- the artifact manifest's param
+    table, consumed by rust/src/runtime/ to thread state between artifacts."""
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, tuple(int(s) for s in leaf.shape), str(leaf.dtype)))
+    return out

@@ -1,0 +1,167 @@
+"""Kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+This is the CORE L1 correctness signal: hypothesis sweeps shapes/dtypes
+and asserts allclose against the reference implementations, including the
+custom-vjp backward paths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import causal_attention, causal_attention_fwd
+from compile.kernels.pg_loss import pg_loss
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    log_t=st.integers(4, 7),   # T in {16..128}
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_fwd_matches_ref(b, h, log_t, d, seed):
+    t = 2 ** log_t
+    k = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(k, 3)
+    q, kx, v = (rand(x, (b, h, t, d), jnp.float32) for x in (kq, kk, kv))
+    out = causal_attention_fwd(q, kx, v)
+    expect = ref.causal_attention_ref(q, kx, v)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), block=st.sampled_from([8, 16, 32]))
+def test_attention_block_size_invariance(seed, block):
+    # The tiling schedule must not change the numerics.
+    k = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(k, 3)
+    q, kx, v = (rand(x, (2, 2, 64, 16), jnp.float32) for x in (kq, kk, kv))
+    a = causal_attention_fwd(q, kx, v, block=block)
+    b_ = causal_attention_fwd(q, kx, v, block=64)
+    np.testing.assert_allclose(a, b_, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_bf16_storage():
+    k = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(k, 3)
+    q, kx, v = (rand(x, (1, 2, 32, 16), jnp.bfloat16) for x in (kq, kk, kv))
+    out = causal_attention_fwd(q, kx, v)
+    assert out.dtype == jnp.bfloat16
+    expect = ref.causal_attention_ref(
+        q.astype(jnp.float32), kx.astype(jnp.float32), v.astype(jnp.float32))
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect, rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_attention_grads_match_ref(seed):
+    k = jax.random.PRNGKey(seed)
+    kq, kk, kv, kg = jax.random.split(k, 4)
+    q, kx, v = (rand(x, (2, 2, 32, 8), jnp.float32) for x in (kq, kk, kv))
+    g = rand(kg, (2, 2, 32, 8), jnp.float32)
+
+    def kernel_loss(q_, k_, v_):
+        return (causal_attention(q_, k_, v_) * g).sum()
+
+    def ref_loss(q_, k_, v_):
+        return (ref.causal_attention_ref(q_, k_, v_) * g).sum()
+
+    gk = jax.grad(kernel_loss, argnums=(0, 1, 2))(q, kx, v)
+    gr = jax.grad(ref_loss, argnums=(0, 1, 2))(q, kx, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_is_causal():
+    # Changing future keys/values must not affect earlier outputs.
+    k = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(k, 3)
+    q, kx, v = (rand(x, (1, 1, 32, 8), jnp.float32) for x in (kq, kk, kv))
+    base = causal_attention_fwd(q, kx, v)
+    kx2 = kx.at[:, :, 20:].set(99.0)
+    v2 = v.at[:, :, 20:].set(-99.0)
+    pert = causal_attention_fwd(q, kx2, v2)
+    np.testing.assert_allclose(base[:, :, :20], pert[:, :, :20], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[:, :, 21:], pert[:, :, 21:])
+
+
+# ------------------------------------------------------------------ pg_loss
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    t=st.sampled_from([7, 16, 31, 64]),  # deliberately includes non-powers
+    v=st.sampled_from([11, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pg_loss_matches_ref(b, t, v, seed):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    logits = jax.random.normal(k1, (b, t, v)) * 3.0
+    actions = jax.random.randint(k2, (b, t), 0, v)
+    adv = jax.random.normal(k3, (b,))
+    mask = (jax.random.uniform(k4, (b, t)) > 0.4).astype(jnp.float32)
+    loss, ent = pg_loss(logits, actions, adv, mask)
+    rloss, rent = ref.pg_loss_ref(logits, actions, adv, mask)
+    np.testing.assert_allclose(loss, rloss, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ent, rent, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), ent_coef=st.floats(0.0, 0.5))
+def test_pg_loss_grad_matches_ref(seed, ent_coef):
+    # The fused backward kernel: loss AND entropy cotangents.
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    b, t, v = 2, 24, 33
+    logits = jax.random.normal(k1, (b, t, v)) * 2.0
+    actions = jax.random.randint(k2, (b, t), 0, v)
+    adv = jax.random.normal(k3, (b,))
+    mask = (jax.random.uniform(k4, (b, t)) > 0.3).astype(jnp.float32)
+
+    def fused(lg):
+        l, e = pg_loss(lg, actions, adv, mask)
+        return l - ent_coef * e
+
+    def pure(lg):
+        l, e = ref.pg_loss_ref(lg, actions, adv, mask)
+        return l - ent_coef * e
+
+    np.testing.assert_allclose(
+        jax.grad(fused)(logits), jax.grad(pure)(logits), rtol=2e-4, atol=2e-5)
+
+
+def test_pg_loss_zero_mask_is_safe():
+    logits = jnp.zeros((2, 8, 16))
+    actions = jnp.zeros((2, 8), jnp.int32)
+    adv = jnp.ones((2,))
+    mask = jnp.zeros((2, 8))
+    loss, ent = pg_loss(logits, actions, adv, mask)
+    assert float(loss) == 0.0 and float(ent) == 0.0
+    g = jax.grad(lambda lg: pg_loss(lg, actions, adv, mask)[0])(logits)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_pg_loss_extreme_logits_stable():
+    # Log-sum-exp shift must keep huge logits finite.
+    logits = jnp.full((1, 8, 32), 1e4).at[0, :, 0].set(-1e4)
+    actions = jnp.zeros((1, 8), jnp.int32)
+    adv = jnp.ones((1,))
+    mask = jnp.ones((1, 8))
+    loss, ent = pg_loss(logits, actions, adv, mask)
+    assert np.isfinite(float(loss)) and np.isfinite(float(ent))

@@ -1,0 +1,52 @@
+//! Bench: PJRT runtime phase execution on the tiny artifacts — per-phase
+//! latency and the L3 dispatch overhead (literal prep + untuple) vs pure
+//! compute (paper-relevant: the request path must be scheduler-bound,
+//! not runtime-overhead-bound).
+
+use rollmux::runtime::ModelRuntime;
+use rollmux::util::bench;
+
+fn main() {
+    println!("== runtime_exec ==");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        println!("skipped: run `make artifacts` first");
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let rt = ModelRuntime::load(dir).expect("load");
+    println!("load+compile all artifacts: {:.2}s", t0.elapsed().as_secs_f64());
+
+    let mut state = rt.init(0).expect("init");
+    let (b, t, p) = (rt.batch(), rt.seq_len(), rt.prompt_len());
+    let mut prompt = vec![0i32; b * t];
+    for bi in 0..b {
+        for ti in 0..p {
+            prompt[bi * t + ti] = ((bi + ti) % rt.vocab()) as i32;
+        }
+    }
+    let stats = bench(2, 20, || rt.rollout(&state.params, &prompt, 1, 1.0).unwrap());
+    stats.report(&format!("rollout_phase ({} new tokens)", t - p));
+    let per_tok = stats.mean_s / (t - p) as f64;
+    println!("  -> {:.2} ms/token fused", per_tok * 1e3);
+
+    let stats1 = bench(2, 10, || {
+        rt.rollout_one_step(&state.params, &prompt, p as i32, 1, 1.0).unwrap()
+    });
+    stats1.report("rollout_one_step (hook-driven path)");
+    println!(
+        "  -> per-step dispatch overhead vs fused: {:.2}x",
+        stats1.mean_s / per_tok
+    );
+
+    let tokens = rt.rollout(&state.params, &prompt, 1, 1.0).unwrap().tokens;
+    let mask = vec![1.0f32; b * t];
+    let adv = vec![0.5f32; b];
+    let stats = bench(2, 20, || {
+        rt.train(&mut state, &tokens, &mask, &adv, 1e-3, 0.01).unwrap()
+    });
+    stats.report("train_step (fused PG + Adam)");
+
+    let stats = bench(2, 20, || rt.logits(&state.params, &prompt).unwrap());
+    stats.report("forward (logits only)");
+}

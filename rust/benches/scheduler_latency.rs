@@ -1,0 +1,50 @@
+//! Bench: inter-group scheduling decision latency (paper Table 5).
+//!
+//! Measures Algorithm 1's per-decision latency as the number of live jobs
+//! grows, plus the brute-force optimal solver at small sizes. Criterion is
+//! unavailable offline; this uses the in-tree harness (util::bench).
+
+use rollmux::baselines::optimal::optimal_partition_deadline;
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::util::{bench, rng::Rng};
+use rollmux::workload::profiles::{table6_job, SimProfile};
+
+fn main() {
+    println!("== scheduler_latency (Table 5) ==");
+    let model = PhaseModel::default();
+    for &n in &[5usize, 9, 13, 100, 500, 1000, 2000] {
+        let mut rng = Rng::new(7);
+        let jobs: Vec<_> = (0..n)
+            .map(|id| {
+                let slo = rng.uniform(1.0, 2.0);
+                table6_job(id, SimProfile::Mixed, &mut rng, slo, 0.0, 5)
+            })
+            .collect();
+        let mut sched = InterGroupScheduler::new(model);
+        for j in &jobs {
+            sched.schedule(j.clone());
+        }
+        let mut k = 0usize;
+        let stats = bench(2, if n >= 1000 { 8 } else { 30 }, || {
+            let slo = rng.uniform(1.0, 2.0);
+            let probe = table6_job(n + k, SimProfile::Mixed, &mut rng, slo, 0.0, 5);
+            k += 1;
+            let mut s2 = sched.clone();
+            s2.schedule(probe)
+        });
+        stats.report(&format!("algorithm1/decide @{n} jobs"));
+    }
+    // Brute force for reference (paper: 113 ms @5, >1 min @9, >5 h @13).
+    for &n in &[5usize, 7, 9] {
+        let mut rng = Rng::new(7);
+        let jobs: Vec<_> = (0..n)
+            .map(|id| {
+                let slo = rng.uniform(1.0, 2.0);
+                table6_job(id, SimProfile::Mixed, &mut rng, slo, 0.0, 5)
+            })
+            .collect();
+        let stats = bench(0, 3, || optimal_partition_deadline(&jobs, &model, 20.0));
+        stats.report(&format!("brute_force/partition @{n} jobs"));
+    }
+}

@@ -1,0 +1,35 @@
+//! Bench: discrete-event engine throughput (phases simulated per second)
+//! on the at-scale traces — the hot path of every Fig. 13/14/15 sweep.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::sim::engine::{SimConfig, Simulator};
+use rollmux::util::{bench, timed};
+use rollmux::workload::trace::{philly_trace, production_trace, SloPolicy};
+use rollmux::workload::profiles::SimProfile;
+
+fn main() {
+    println!("== simulator ==");
+    // Production trace replay (Fig. 13 inner loop).
+    for &n_jobs in &[50usize, 120, 200] {
+        let trace = production_trace(7, n_jobs);
+        let stats = bench(1, 5, || {
+            let cfg = SimConfig { seed: 7, ..Default::default() };
+            Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace.clone()).run()
+        });
+        stats.report(&format!("replay/production @{n_jobs} jobs"));
+    }
+    // Philly trace (Fig. 14/15 inner loop) with phase-count reporting.
+    let trace = philly_trace(7, 300, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+    let (res, secs) = timed(|| {
+        let cfg = SimConfig { seed: 7, ..Default::default() };
+        Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace.clone()).run()
+    });
+    let iters: usize = res.outcomes.values().map(|o| o.iters).sum();
+    println!(
+        "replay/philly @300 jobs: {:.2}s wall, {} iterations, {:.0} phases/s",
+        secs,
+        iters,
+        (iters * 4) as f64 / secs
+    );
+}

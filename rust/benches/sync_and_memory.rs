@@ -1,0 +1,31 @@
+//! Bench: sync planning + residency ledger + switch model micro-costs
+//! (all sit on the scheduler's per-decision path).
+
+use rollmux::memory::{cold_start_s, warm_start_s, ResidencyLedger};
+use rollmux::cluster::node::PoolKind;
+use rollmux::sync::{plan::plan_sync, topology::NetworkTopology, SyncScheme};
+use rollmux::util::bench;
+
+fn main() {
+    println!("== sync_and_memory ==");
+    let topo = NetworkTopology::default();
+    let stats = bench(100, 10_000, || {
+        plan_sync(SyncScheme::Hierarchical, 28e9, 16, 64, &topo).time_s
+    });
+    stats.report("sync/plan_hierarchical");
+    let stats = bench(100, 10_000, || {
+        (cold_start_s(14.0, PoolKind::Train), warm_start_s(14.0, PoolKind::Rollout))
+    });
+    stats.report("memory/switch_model");
+    let stats = bench(10, 2_000, || {
+        let mut l = ResidencyLedger::new(2048.0);
+        for j in 0..16 {
+            l.pin(j % 4, j, 240.0);
+        }
+        for j in 0..16 {
+            l.unpin(j % 4, j);
+        }
+        l.check_invariant()
+    });
+    stats.report("memory/residency_ledger 16 pin/unpin");
+}

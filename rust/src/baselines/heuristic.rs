@@ -1,0 +1,321 @@
+//! The §7.5 heuristic baselines: Random and Greedy (Most-Idle) group
+//! placement. Both reuse the co-execution-group machinery but replace
+//! Algorithm 1's cost-based search:
+//!
+//!  * Random — a random group that can *accommodate* the job (residency +
+//!    group-size cap only; no SLO or saturation reasoning), on random
+//!    rollout nodes; provisions a fresh group when none fits.
+//!  * Greedy (Most-Idle) — the group with the highest idle-time fraction,
+//!    placed on its most-idle rollout nodes.
+
+use crate::cluster::node::HOST_MEM_GB;
+use crate::cluster::PhaseModel;
+use crate::coordinator::group::{Group, GroupJob};
+use crate::coordinator::inter::{Decision, PlacementKind};
+use crate::sim::engine::GroupScheduler;
+use crate::util::rng::Rng;
+use crate::workload::job::{JobId, JobSpec};
+
+pub struct RandomScheduler {
+    pub model: PhaseModel,
+    pub groups: Vec<Group>,
+    pub max_group_size: usize,
+    rng: Rng,
+    next_group_id: usize,
+}
+
+pub struct GreedyScheduler {
+    pub model: PhaseModel,
+    pub groups: Vec<Group>,
+    pub max_group_size: usize,
+    next_group_id: usize,
+}
+
+/// Can the group physically hold this job (host memory + cap)?
+/// This is the ONLY feasibility notion the heuristics use — deliberately
+/// ignoring SLO and saturation, which is why they under-attain (§7.5).
+fn accommodates(g: &Group, spec: &JobSpec, cap: usize, nodes: &[usize]) -> bool {
+    if g.jobs.len() >= cap || g.n_roll_nodes < spec.n_roll_nodes() {
+        return false;
+    }
+    for &n in nodes {
+        let used: f64 = g
+            .jobs
+            .iter()
+            .filter(|j| j.roll_nodes.contains(&n))
+            .map(|j| j.spec.mem_roll_gb())
+            .sum();
+        if used + spec.mem_roll_gb() > HOST_MEM_GB {
+            return false;
+        }
+    }
+    let train_used: f64 = g.jobs.iter().map(|j| j.spec.mem_train_gb()).sum();
+    train_used + spec.mem_train_gb() <= HOST_MEM_GB
+}
+
+fn insert(g: &mut Group, spec: JobSpec, nodes: Vec<usize>, model: &PhaseModel) {
+    let gj = GroupJob::new(spec, model, nodes, g.train_gpus());
+    g.jobs.push(gj);
+}
+
+fn complete_in(groups: &mut Vec<Group>, job: JobId) {
+    for g in groups.iter_mut() {
+        if g.remove_job(job).is_some() {
+            break;
+        }
+    }
+    groups.retain(|g| !g.is_empty());
+}
+
+fn cost(groups: &[Group]) -> f64 {
+    groups.iter().map(|g| g.cost_per_hour()).sum()
+}
+
+fn gpus(groups: &[Group]) -> (usize, usize) {
+    (
+        groups.iter().map(|g| g.n_roll_nodes * 8).sum(),
+        groups.iter().map(|g| g.n_train_nodes * 8).sum(),
+    )
+}
+
+impl RandomScheduler {
+    pub fn new(model: PhaseModel, seed: u64, max_group_size: usize) -> Self {
+        RandomScheduler { model, groups: Vec::new(), max_group_size, rng: Rng::new(seed), next_group_id: 0 }
+    }
+}
+
+impl GroupScheduler for RandomScheduler {
+    fn place(&mut self, spec: JobSpec) -> Decision {
+        let k = spec.n_roll_nodes();
+        // The paper's Random: "a random group (OR A NEW ONE) that can
+        // accommodate it" — the fresh-group option is part of the random
+        // choice, so the heuristic regularly scales out (the §7.5 cost
+        // blow-up) while also packing incompatible jobs (the SLO misses).
+        let mut candidates: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (gi, g) in self.groups.iter().enumerate() {
+            if g.n_roll_nodes < k {
+                continue;
+            }
+            let nodes = self.rng.sample_indices(g.n_roll_nodes, k);
+            if accommodates(g, &spec, self.max_group_size, &nodes) {
+                candidates.push((gi, nodes));
+            }
+        }
+        // Uniform over accommodating groups + the new-group option.
+        let pick = self.rng.range(0, candidates.len() + 1);
+        if pick < candidates.len() {
+            let (gi, nodes) = candidates.swap_remove(pick);
+            let id = spec.id;
+            let gid = self.groups[gi].id;
+            insert(&mut self.groups[gi], spec, nodes.clone(), &self.model);
+            return Decision {
+                job: id,
+                group_id: gid,
+                kind: PlacementKind::DirectPack,
+                marginal_cost: 0.0,
+                roll_nodes: nodes,
+            };
+        }
+        let gid = self.next_group_id;
+        self.next_group_id += 1;
+        let g = Group::isolated(gid, spec.clone(), &self.model);
+        let nodes = g.jobs[0].roll_nodes.clone();
+        let delta = g.cost_per_hour();
+        self.groups.push(g);
+        Decision { job: spec.id, group_id: gid, kind: PlacementKind::Isolated, marginal_cost: delta, roll_nodes: nodes }
+    }
+
+    fn complete(&mut self, job: JobId) {
+        complete_in(&mut self.groups, job);
+    }
+    fn groups(&self) -> &[Group] {
+        &self.groups
+    }
+    fn cost_per_hour(&self) -> f64 {
+        cost(&self.groups)
+    }
+    fn gpus(&self) -> (usize, usize) {
+        gpus(&self.groups)
+    }
+}
+
+impl GreedyScheduler {
+    pub fn new(model: PhaseModel, max_group_size: usize) -> Self {
+        GreedyScheduler { model, groups: Vec::new(), max_group_size, next_group_id: 0 }
+    }
+
+    /// Idle fraction of a group under its current worst-case cycle.
+    fn idle_frac(g: &Group) -> f64 {
+        let (rb, tb) = g.bubble_fracs();
+        0.5 * (rb + tb)
+    }
+}
+
+impl GroupScheduler for GreedyScheduler {
+    fn place(&mut self, spec: JobSpec) -> Decision {
+        let k = spec.n_roll_nodes();
+        // Rank groups by idle fraction, most idle first. A FRESH isolated
+        // group is itself a candidate — its idle fraction is the new
+        // job's own dependency-bubble fraction, and since a solo job
+        // idles each pool while the other runs, Most-Idle frequently
+        // prefers scaling out (the §7.5 over-provisioning behavior).
+        let fresh = Group::isolated(usize::MAX, spec.clone(), &self.model);
+        let fresh_idle = Self::idle_frac(&fresh);
+        let mut ranked: Vec<(f64, usize)> = self
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(i, g)| (Self::idle_frac(g), i))
+            .collect();
+        ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        for (idle, gi) in ranked {
+            if idle < fresh_idle {
+                break; // a fresh group is idler than everything left
+            }
+            let g = &self.groups[gi];
+            if g.n_roll_nodes < k {
+                continue;
+            }
+            // Most-idle rollout nodes.
+            let mut by_load: Vec<(f64, usize)> =
+                (0..g.n_roll_nodes).map(|n| (g.roll_node_load(n), n)).collect();
+            by_load.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let nodes: Vec<usize> = by_load.iter().take(k).map(|&(_, n)| n).collect();
+            if accommodates(g, &spec, self.max_group_size, &nodes) {
+                let id = spec.id;
+                let gid = g.id;
+                insert(&mut self.groups[gi], spec, nodes.clone(), &self.model);
+                return Decision {
+                    job: id,
+                    group_id: gid,
+                    kind: PlacementKind::DirectPack,
+                    marginal_cost: 0.0,
+                    roll_nodes: nodes,
+                };
+            }
+        }
+        let gid = self.next_group_id;
+        self.next_group_id += 1;
+        let g = Group::isolated(gid, spec.clone(), &self.model);
+        let nodes = g.jobs[0].roll_nodes.clone();
+        let delta = g.cost_per_hour();
+        self.groups.push(g);
+        Decision { job: spec.id, group_id: gid, kind: PlacementKind::Isolated, marginal_cost: delta, roll_nodes: nodes }
+    }
+
+    fn complete(&mut self, job: JobId) {
+        complete_in(&mut self.groups, job);
+    }
+    fn groups(&self) -> &[Group] {
+        &self.groups
+    }
+    fn cost_per_hour(&self) -> f64 {
+        cost(&self.groups)
+    }
+    fn gpus(&self) -> (usize, usize) {
+        gpus(&self.groups)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::job::PhaseSpec;
+
+    fn direct_job(id: JobId, t_roll: f64, t_train: f64, slo: f64) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("j{id}"),
+            arrival_s: 0.0,
+            n_iters: 5,
+            slo,
+            n_roll_gpus: 8,
+            n_train_gpus: 8,
+            params_b: 7.0,
+            phases: PhaseSpec::Direct { t_roll, t_train, cv: 0.0 },
+        }
+    }
+
+    #[test]
+    fn random_ignores_slo() {
+        // Tight-SLO short jobs can land in a long job's group — the §7.5
+        // failure mode. Random picks uniformly over {groups, new}, so
+        // check statistically that SLO-incompatible packing happens.
+        let mut packed = 0;
+        for seed in 0..20 {
+            let mut s = RandomScheduler::new(PhaseModel::default(), seed, 5);
+            s.place(direct_job(0, 500.0, 400.0, 1.1));
+            let d = s.place(direct_job(1, 40.0, 30.0, 1.1));
+            if d.kind == PlacementKind::DirectPack {
+                packed += 1;
+            }
+        }
+        assert!(packed >= 5, "random never packed incompatibly ({packed}/20)");
+    }
+
+    #[test]
+    fn random_respects_residency() {
+        let mut s = RandomScheduler::new(PhaseModel::default(), 1, 16);
+        let mk = |id| JobSpec { params_b: 14.0, ..direct_job(id, 100.0, 80.0, 5.0) };
+        for id in 0..5 {
+            s.place(mk(id));
+        }
+        // 14B rollout = 445 GB; only 4 fit on a 2 TB node.
+        for g in &s.groups {
+            for n in 0..g.n_roll_nodes {
+                let used: f64 = g
+                    .jobs
+                    .iter()
+                    .filter(|j| j.roll_nodes.contains(&n))
+                    .map(|j| j.spec.mem_roll_gb())
+                    .sum();
+                assert!(used <= HOST_MEM_GB);
+            }
+        }
+        assert!(s.groups.len() >= 2);
+    }
+
+    #[test]
+    fn greedy_scales_out_and_packs_by_idleness() {
+        // The Most-Idle heuristic treats a fresh group as a candidate; a
+        // solo job idles each pool while the other runs (~50% idle), so
+        // greedy over-provisions readily — the §7.5 cost blow-up — and
+        // only packs into groups idler than a fresh one.
+        let mut s = GreedyScheduler::new(PhaseModel::default(), 5);
+        // Greedy ignores SLO/saturation when it packs: run many
+        // placements; as groups fill, their idleness drops below a fresh
+        // group's, so greedy both co-locates AND scales out.
+        for id in 0..30 {
+            s.place(direct_job(id, 50.0 + (id as f64 * 37.0) % 400.0,
+                                30.0 + (id as f64 * 53.0) % 300.0, 1.05));
+        }
+        let total_jobs: usize = s.groups.iter().map(|g| g.jobs.len()).sum();
+        assert_eq!(total_jobs, 30);
+        assert!(
+            s.groups.iter().any(|g| g.jobs.len() >= 2),
+            "greedy must sometimes co-locate (and thereby violate SLOs)"
+        );
+        assert!(s.groups.len() >= 2, "greedy must also scale out");
+    }
+
+    #[test]
+    fn group_cap_respected() {
+        let mut s = GreedyScheduler::new(PhaseModel::default(), 2);
+        for id in 0..6 {
+            s.place(direct_job(id, 100.0, 80.0, 10.0));
+        }
+        assert!(s.groups.iter().all(|g| g.jobs.len() <= 2));
+        assert_eq!(s.groups.len(), 3);
+    }
+
+    #[test]
+    fn completion_cleans_up() {
+        let mut s = RandomScheduler::new(PhaseModel::default(), 3, 5);
+        s.place(direct_job(0, 100.0, 80.0, 5.0));
+        s.place(direct_job(1, 90.0, 70.0, 5.0));
+        s.complete(0);
+        s.complete(1);
+        assert!(s.groups.is_empty());
+        assert_eq!(GroupScheduler::cost_per_hour(&s), 0.0);
+    }
+}

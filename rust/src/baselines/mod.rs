@@ -1,0 +1,13 @@
+//! Baseline systems the paper compares against (§7.1, §7.5).
+//!
+//! * [`analytic`]  — Solo-D, veRL co-location, Gavel+ (job-level sizing).
+//! * [`heuristic`] — Random and Greedy (Most-Idle) group placement.
+//! * [`optimal`]   — brute-force offline optimal (+ windowed variant).
+
+pub mod analytic;
+pub mod heuristic;
+pub mod optimal;
+
+pub use analytic::{evaluate, BaselineKind, BaselineResult};
+pub use heuristic::{GreedyScheduler, RandomScheduler};
+pub use optimal::{optimal_partition, PrePlacedScheduler};

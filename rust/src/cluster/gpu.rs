@@ -1,0 +1,78 @@
+//! GPU specifications and pricing — paper Table 1, verbatim.
+
+/// The two accelerator classes of the disaggregated testbed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GpuKind {
+    /// Inference-optimized: high HBM capacity/bandwidth, cheap, low FLOPs.
+    H20,
+    /// Compute-optimized: high FLOPs, expensive. Training pool.
+    H800,
+}
+
+/// Performance + cost spec (paper Table 1).
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    /// Dense BF16 compute, TFLOPS.
+    pub tflops: f64,
+    /// HBM capacity, GB.
+    pub hbm_gb: f64,
+    /// HBM bandwidth, TB/s.
+    pub hbm_tbps: f64,
+    /// Hourly rental cost, $ (paper's cost basis, ref [61]).
+    pub cost_per_hour: f64,
+}
+
+impl GpuKind {
+    pub const fn spec(self) -> GpuSpec {
+        match self {
+            GpuKind::H20 => GpuSpec {
+                tflops: 148.0,
+                hbm_gb: 96.0,
+                hbm_tbps: 4.0,
+                cost_per_hour: 1.85,
+            },
+            GpuKind::H800 => GpuSpec {
+                tflops: 989.5,
+                hbm_gb: 80.0,
+                hbm_tbps: 3.35,
+                cost_per_hour: 5.28,
+            },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuKind::H20 => "H20",
+            GpuKind::H800 => "H800",
+        }
+    }
+}
+
+/// Cost of `n` GPUs of `kind` for `hours`, in dollars.
+pub fn cost_usd(kind: GpuKind, n: usize, hours: f64) -> f64 {
+    kind.spec().cost_per_hour * n as f64 * hours
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        let h20 = GpuKind::H20.spec();
+        let h800 = GpuKind::H800.spec();
+        assert_eq!(h20.cost_per_hour, 1.85);
+        assert_eq!(h800.cost_per_hour, 5.28);
+        // Paper: "an H800 GPU is 2.85x more expensive than an H20 GPU".
+        assert!((h800.cost_per_hour / h20.cost_per_hour - 2.85).abs() < 0.01);
+        // H20's value proposition: more HBM bandwidth per dollar.
+        assert!(h20.hbm_tbps / h20.cost_per_hour > h800.hbm_tbps / h800.cost_per_hour);
+        // H800's: more FLOPs absolutely and per dollar.
+        assert!(h800.tflops / h800.cost_per_hour > h20.tflops / h20.cost_per_hour);
+    }
+
+    #[test]
+    fn cost_accounting() {
+        assert!((cost_usd(GpuKind::H20, 8, 2.0) - 29.6).abs() < 1e-9);
+    }
+}

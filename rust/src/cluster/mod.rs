@@ -1,0 +1,11 @@
+//! Cluster hardware model: GPU kinds (paper Table 1), nodes, resource
+//! pools, and the roofline-style phase-duration model that stands in for
+//! the paper's H20/H800 testbed (DESIGN.md section 2, hardware substitutions).
+
+pub mod gpu;
+pub mod node;
+pub mod roofline;
+
+pub use gpu::{GpuKind, GpuSpec};
+pub use node::{Node, NodeId, Pool, PoolKind};
+pub use roofline::{PhaseModel, PhaseTimes};

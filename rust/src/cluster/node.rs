@@ -1,0 +1,129 @@
+//! Nodes and resource pools.
+//!
+//! The testbed layout mirrors the paper: a rollout pool of 8-GPU H20 nodes
+//! and a training pool of 8-GPU H800 nodes, each node with host DRAM used
+//! as the warm-start actor cache (paper §3.2-C3: 1-2 TB per node limits
+//! residency to a handful of concurrent jobs).
+
+use super::gpu::GpuKind;
+
+pub type NodeId = usize;
+
+pub const GPUS_PER_NODE: usize = 8;
+/// Host memory per worker node, GB (paper: "even high-memory nodes
+/// (1-2 TB)"). We model the 2 TB configuration.
+pub const HOST_MEM_GB: f64 = 2048.0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Rollout,
+    Train,
+}
+
+impl PoolKind {
+    pub fn gpu(self) -> GpuKind {
+        match self {
+            PoolKind::Rollout => GpuKind::H20,
+            PoolKind::Train => GpuKind::H800,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolKind::Rollout => "rollout",
+            PoolKind::Train => "train",
+        }
+    }
+}
+
+/// A worker node: 8 GPUs of one kind + host DRAM for the actor cache.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: GpuKind,
+    pub gpus: usize,
+    pub host_mem_gb: f64,
+}
+
+impl Node {
+    pub fn new(id: NodeId, kind: GpuKind) -> Self {
+        Node { id, kind, gpus: GPUS_PER_NODE, host_mem_gb: HOST_MEM_GB }
+    }
+
+    pub fn cost_per_hour(&self) -> f64 {
+        self.kind.spec().cost_per_hour * self.gpus as f64
+    }
+}
+
+/// A homogeneous pool of nodes (the rollout or the training cluster).
+#[derive(Clone, Debug)]
+pub struct Pool {
+    pub kind: PoolKind,
+    pub nodes: Vec<Node>,
+}
+
+impl Pool {
+    /// Build a pool of `n_gpus` total GPUs (rounded up to whole nodes).
+    pub fn with_gpus(kind: PoolKind, n_gpus: usize) -> Self {
+        let n_nodes = n_gpus.div_ceil(GPUS_PER_NODE);
+        let nodes = (0..n_nodes).map(|i| Node::new(i, kind.gpu())).collect();
+        Pool { kind, nodes }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.gpus).sum()
+    }
+
+    pub fn cost_per_hour(&self) -> f64 {
+        self.nodes.iter().map(|n| n.cost_per_hour()).sum()
+    }
+}
+
+/// The two-pool disaggregated cluster (paper Fig. 1 bottom).
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub rollout: Pool,
+    pub train: Pool,
+}
+
+impl Cluster {
+    /// The paper's production testbed: 328 H20 + 328 H800.
+    pub fn paper_testbed() -> Self {
+        Cluster {
+            rollout: Pool::with_gpus(PoolKind::Rollout, 328),
+            train: Pool::with_gpus(PoolKind::Train, 328),
+        }
+    }
+
+    pub fn new(rollout_gpus: usize, train_gpus: usize) -> Self {
+        Cluster {
+            rollout: Pool::with_gpus(PoolKind::Rollout, rollout_gpus),
+            train: Pool::with_gpus(PoolKind::Train, train_gpus),
+        }
+    }
+
+    pub fn cost_per_hour(&self) -> f64 {
+        self.rollout.cost_per_hour() + self.train.cost_per_hour()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_rounding() {
+        let p = Pool::with_gpus(PoolKind::Rollout, 9);
+        assert_eq!(p.nodes.len(), 2);
+        assert_eq!(p.n_gpus(), 16);
+    }
+
+    #[test]
+    fn testbed_cost() {
+        let c = Cluster::paper_testbed();
+        assert_eq!(c.rollout.n_gpus(), 328);
+        assert_eq!(c.train.n_gpus(), 328);
+        // Solo-D full-provisioning burn rate: 328*(1.85+5.28) = $2338.64/h.
+        assert!((c.cost_per_hour() - 2338.64).abs() < 0.01);
+    }
+}

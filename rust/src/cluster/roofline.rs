@@ -1,0 +1,263 @@
+//! Roofline phase-duration model.
+//!
+//! Stands in for the paper's measured H20/H800 phase durations (DESIGN.md
+//! §2): rollout is modeled as HBM-bandwidth-bound autoregressive decoding
+//! (weights + KV-cache traffic per step), training as FLOPs-bound
+//! (6·P·tokens with an MFU factor), exactly the bounds the paper's §2
+//! workload characterization describes. The knobs below are calibrated so
+//! the Table 3 job types land in the paper's Fig. 2 duration ranges
+//! (50-900 s) with the reported rollout:train skews (e.g. Type-D ≈ 2.5×,
+//! Type-E ≈ 6×) — asserted by tests in workload/profiles.rs.
+
+use super::gpu::GpuKind;
+
+/// Transformer geometry for the Qwen-family sizes the paper uses.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelArch {
+    /// Parameter count, billions.
+    pub params_b: f64,
+    pub layers: usize,
+    pub d_model: usize,
+    /// KV width per token per layer (bytes, bf16, GQA-reduced).
+    pub kv_bytes_per_token_layer: f64,
+}
+
+impl ModelArch {
+    /// Nearest Qwen-2.5/3 geometry for a given size in billions.
+    pub fn for_size(params_b: f64) -> ModelArch {
+        // (layers, d_model, kv_heads_fraction) approximating Qwen configs.
+        let (layers, d_model) = if params_b <= 4.0 {
+            (36, 2048)
+        } else if params_b <= 9.0 {
+            (28, 3584)
+        } else if params_b <= 20.0 {
+            (48, 5120)
+        } else {
+            (64, 5120)
+        };
+        // GQA: kv width ~= d_model/4 per K and V, bf16 => 2 bytes each.
+        let kv = 2.0 * 2.0 * (d_model as f64 / 4.0);
+        ModelArch { params_b, layers, d_model, kv_bytes_per_token_layer: kv }
+    }
+
+    /// bf16 weight bytes.
+    pub fn weight_bytes(&self) -> f64 {
+        2.0 * self.params_b * 1e9
+    }
+
+    /// KV-cache bytes for one sequence at the given context length.
+    pub fn kv_bytes(&self, ctx_len: f64) -> f64 {
+        self.kv_bytes_per_token_layer * self.layers as f64 * ctx_len
+    }
+}
+
+/// Calibration constants for the roofline model.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseModel {
+    /// Achieved fraction of peak HBM bandwidth during decode.
+    pub mem_eff: f64,
+    /// Achieved MFU during training on H800-class GPUs.
+    pub train_mfu: f64,
+    /// Achieved MFU during prefill (compute-bound part of rollout).
+    pub prefill_mfu: f64,
+    /// Training work multiplier: PPO/GRPO-style extra passes (reference
+    /// policy forward, value model, n mini-epochs) over the plain 6·P·T.
+    pub train_passes: f64,
+    /// Fixed per-phase orchestration overhead (launch, reward eval), s.
+    pub phase_overhead_s: f64,
+}
+
+impl Default for PhaseModel {
+    fn default() -> Self {
+        PhaseModel {
+            mem_eff: 0.75,
+            train_mfu: 0.35,
+            prefill_mfu: 0.45,
+            train_passes: 2.5,
+            phase_overhead_s: 5.0,
+        }
+    }
+}
+
+/// Per-iteration phase durations (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub t_roll: f64,
+    pub t_train: f64,
+}
+
+impl PhaseTimes {
+    pub fn t_solo(&self) -> f64 {
+        self.t_roll + self.t_train
+    }
+}
+
+/// Workload inputs to the phase model (one RL iteration of one job).
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseInputs {
+    pub arch: ModelArch,
+    /// Sequences per iteration batch.
+    pub batch: usize,
+    /// Prompt tokens per sequence.
+    pub prompt_len: f64,
+    /// Generated tokens of the *longest* (phase-gating) response.
+    pub gate_gen_len: f64,
+    /// Mean generated tokens (drives training token volume).
+    pub mean_gen_len: f64,
+    /// Interaction turns (1 = single-turn RLVR).
+    pub turns: usize,
+    /// Environment/tool latency per extra turn, seconds.
+    pub env_latency_s: f64,
+    /// Tensor-parallel degree on the rollout / training side.
+    pub tp_roll: usize,
+    pub tp_train: usize,
+}
+
+impl PhaseModel {
+    /// One decode step (full batch, one token per sequence) on `n_gpus`.
+    /// Per-GPU traffic = sharded weights + this GPU's share of KV cache.
+    pub fn decode_step_s(
+        &self,
+        inp: &PhaseInputs,
+        ctx_len: f64,
+        n_gpus: usize,
+        gpu: GpuKind,
+    ) -> f64 {
+        let bw = gpu.spec().hbm_tbps * 1e12 * self.mem_eff;
+        let weight_read = inp.arch.weight_bytes() / inp.tp_roll as f64;
+        let seqs_per_group = inp.batch as f64 / (n_gpus as f64 / inp.tp_roll as f64);
+        let kv_read = inp.arch.kv_bytes(ctx_len) * seqs_per_group / inp.tp_roll as f64;
+        (weight_read + kv_read) / bw
+    }
+
+    /// Rollout phase duration: prefill + decode until the gating response
+    /// finishes + per-turn environment latency.
+    ///
+    /// Decode is split into (a) a weight-read term paid on every step until
+    /// the gating (longest) response finishes, and (b) an integrated
+    /// KV-cache term: each active sequence of length L reads
+    /// `sum_{t<=L} (prompt + t) ~ L*prompt + L^2/2` context tokens over its
+    /// lifetime, so KV traffic scales with the batch's *mean* length
+    /// (quadratically) while step count scales with the gate. Under
+    /// worst-case planning (every response at max tokens) both terms hit
+    /// their maxima — the paper's "most adverse stochastic conditions".
+    pub fn rollout_s(&self, inp: &PhaseInputs, n_gpus: usize, gpu: GpuKind) -> f64 {
+        let spec = gpu.spec();
+        let bw = spec.hbm_tbps * 1e12 * self.mem_eff;
+        // Prefill: compute-bound over prompt tokens (all turns re-prefill).
+        let prefill_tokens = inp.batch as f64 * inp.prompt_len * inp.turns as f64;
+        let prefill_flops = 2.0 * inp.arch.params_b * 1e9 * prefill_tokens;
+        let t_prefill = prefill_flops / (spec.tflops * 1e12 * self.prefill_mfu * n_gpus as f64);
+        // (a) weight reads, gated by the longest response.
+        let weight_read = inp.arch.weight_bytes() / inp.tp_roll as f64;
+        let t_weights = inp.gate_gen_len * weight_read / bw;
+        // (b) integrated KV traffic over all sequences' lifetimes.
+        let seqs_per_group = inp.batch as f64 / (n_gpus as f64 / inp.tp_roll as f64);
+        let l = inp.mean_gen_len;
+        let ctx_token_reads = l * inp.prompt_len + 0.5 * l * l;
+        let kv_bytes = inp.arch.kv_bytes(1.0) * ctx_token_reads * seqs_per_group / inp.tp_roll as f64;
+        let t_kv = kv_bytes / bw;
+        let t_env = inp.env_latency_s * (inp.turns.saturating_sub(1)) as f64;
+        t_prefill + t_weights + t_kv + t_env + self.phase_overhead_s
+    }
+
+    /// Training phase duration: FLOPs-bound over the iteration's tokens.
+    /// Multi-turn trajectories train on every turn's context, so prompt
+    /// tokens count once per turn.
+    pub fn train_s(&self, inp: &PhaseInputs, n_gpus: usize, gpu: GpuKind) -> f64 {
+        let spec = gpu.spec();
+        let tokens = inp.batch as f64
+            * (inp.prompt_len * inp.turns as f64 + inp.mean_gen_len);
+        let flops = 6.0 * inp.arch.params_b * 1e9 * tokens * self.train_passes;
+        flops / (spec.tflops * 1e12 * self.train_mfu * n_gpus as f64) + self.phase_overhead_s
+    }
+
+    /// Both phases on their native pools (H20 rollout, H800 train).
+    pub fn phase_times(&self, inp: &PhaseInputs, n_roll: usize, n_train: usize) -> PhaseTimes {
+        PhaseTimes {
+            t_roll: self.rollout_s(inp, n_roll, GpuKind::H20),
+            t_train: self.train_s(inp, n_train, GpuKind::H800),
+        }
+    }
+
+    /// Colocated (veRL-style) iteration: both phases on the H800 pool.
+    pub fn colocated_times(&self, inp: &PhaseInputs, n_gpus: usize) -> PhaseTimes {
+        PhaseTimes {
+            t_roll: self.rollout_s(inp, n_gpus, GpuKind::H800),
+            t_train: self.train_s(inp, n_gpus, GpuKind::H800),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn type_a_inputs() -> PhaseInputs {
+        // Table 3 Type-A: Qwen-2.5-7B, single-turn, 8K max len, bsz 256.
+        PhaseInputs {
+            arch: ModelArch::for_size(7.0),
+            batch: 256,
+            prompt_len: 1024.0,
+            gate_gen_len: 8192.0,
+            mean_gen_len: 3276.8, // ~0.4 of max under the heavy-tail sampler
+            turns: 1,
+            env_latency_s: 0.0,
+            tp_roll: 1,
+            tp_train: 1,
+        }
+    }
+
+    #[test]
+    fn fig2_duration_range() {
+        // Paper Fig. 2: production phase durations span ~50 to 900+ s.
+        let m = PhaseModel::default();
+        let t = m.phase_times(&type_a_inputs(), 8, 8);
+        assert!(t.t_roll > 40.0 && t.t_roll < 900.0, "t_roll={}", t.t_roll);
+        assert!(t.t_train > 30.0 && t.t_train < 900.0, "t_train={}", t.t_train);
+    }
+
+    #[test]
+    fn decode_is_memory_bound_tradeoff() {
+        // H20 (4.0 TB/s) must decode faster than H800 (3.35 TB/s): the
+        // entire premise of disaggregation (paper §2, Table 1).
+        let m = PhaseModel::default();
+        let inp = type_a_inputs();
+        let h20 = m.rollout_s(&inp, 8, GpuKind::H20);
+        let h800 = m.rollout_s(&inp, 8, GpuKind::H800);
+        assert!(h20 < h800, "H20 rollout {h20} should beat H800 {h800}");
+    }
+
+    #[test]
+    fn train_scales_with_gpus() {
+        let m = PhaseModel::default();
+        let inp = type_a_inputs();
+        let t8 = m.train_s(&inp, 8, GpuKind::H800);
+        let t16 = m.train_s(&inp, 16, GpuKind::H800);
+        assert!(t16 < t8);
+        // Near-linear minus the fixed overhead.
+        assert!((t8 - m.phase_overhead_s) / (t16 - m.phase_overhead_s) > 1.9);
+    }
+
+    #[test]
+    fn longer_generation_longer_rollout() {
+        let m = PhaseModel::default();
+        let mut inp = type_a_inputs();
+        let t1 = m.rollout_s(&inp, 8, GpuKind::H20);
+        inp.gate_gen_len = 16384.0;
+        inp.mean_gen_len *= 2.0;
+        let t2 = m.rollout_s(&inp, 8, GpuKind::H20);
+        assert!(t2 > 1.8 * t1, "{t2} vs {t1}");
+    }
+
+    #[test]
+    fn tp_shards_weight_traffic() {
+        let m = PhaseModel::default();
+        let mut inp = type_a_inputs();
+        inp.arch = ModelArch::for_size(32.0);
+        let tp1 = m.decode_step_s(&inp, 4096.0, 16, GpuKind::H20);
+        inp.tp_roll = 2;
+        let tp2 = m.decode_step_s(&inp, 4096.0, 16, GpuKind::H20);
+        assert!(tp2 < tp1);
+    }
+}

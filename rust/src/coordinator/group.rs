@@ -1,0 +1,319 @@
+//! The co-execution group abstraction (paper §4.1).
+//!
+//! A group is a set of jobs time-multiplexing a dedicated pair of rollout/
+//! training node pools. Groups are disjoint locality domains: every member
+//! job's state is pinned in the host DRAM of the group's nodes (residency
+//! constraint → warm starts), and scheduling decisions never cross groups.
+//!
+//! Conventions:
+//!  * node units are whole 8-GPU nodes (the paper's placement granularity);
+//!  * the training pool is shared by ALL member jobs — RollMux never
+//!    rescales a group's training pool, it adapts the arriving job's data-
+//!    parallel degree instead (paper footnote 2) — so training phases form
+//!    a single serial queue and `t_load` sums them;
+//!  * rollout jobs are pinned to specific node subsets, so rollout load is
+//!    per-node.
+
+use crate::cluster::node::{PoolKind, GPUS_PER_NODE, HOST_MEM_GB};
+use crate::cluster::{GpuKind, PhaseModel, PhaseTimes};
+use crate::memory::switching::SwitchModel;
+use crate::sync::{sync_time_s, SyncScheme};
+use crate::workload::job::{JobId, JobSpec};
+
+/// A member job with its conservative estimates and rollout pinning.
+#[derive(Clone, Debug)]
+pub struct GroupJob {
+    pub spec: JobSpec,
+    /// Worst-case phase estimate (max-token planning, paper §4.2).
+    pub est: PhaseTimes,
+    /// Hierarchical model-sync time per iteration.
+    pub t_sync: f64,
+    /// Warm-start cost paid on each phase activation.
+    pub warm_roll: f64,
+    pub warm_train: f64,
+    /// Group-local rollout node indices the job is pinned to.
+    pub roll_nodes: Vec<usize>,
+}
+
+impl GroupJob {
+    pub fn new(spec: JobSpec, model: &PhaseModel, roll_nodes: Vec<usize>, train_gpus: usize) -> Self {
+        let mut est = spec.worst_case(model);
+        // DP-rescale the training phase onto the group's training pool.
+        if train_gpus != spec.n_train_gpus && !matches!(spec.phases, crate::workload::PhaseSpec::Direct { .. }) {
+            est.t_train *= spec.n_train_gpus as f64 / train_gpus as f64;
+        }
+        let sw = SwitchModel::default();
+        let t_sync = sync_time_s(
+            SyncScheme::Hierarchical,
+            spec.model_bytes(),
+            train_gpus,
+            spec.n_roll_gpus,
+        );
+        GroupJob {
+            warm_roll: sw.warm_s(spec.params_b, PoolKind::Rollout),
+            warm_train: sw.warm_s(spec.params_b, PoolKind::Train),
+            spec,
+            est,
+            t_sync,
+            roll_nodes,
+        }
+    }
+
+    /// Effective rollout occupancy per meta-iteration (incl. warm switch).
+    pub fn roll_occupancy(&self) -> f64 {
+        self.est.t_roll + self.warm_roll
+    }
+
+    /// Effective training occupancy per meta-iteration.
+    pub fn train_occupancy(&self) -> f64 {
+        self.est.t_train + self.warm_train
+    }
+
+    /// Solo iteration time (what the SLO is defined against): dedicated
+    /// pools, no multiplexing, still pays the cross-cluster sync.
+    pub fn t_solo(&self) -> f64 {
+        self.est.t_roll + self.est.t_train + self.t_sync
+    }
+}
+
+/// A co-execution group: `(J_G, R_G, T_G, Φ_G)` in the paper's notation.
+#[derive(Clone, Debug)]
+pub struct Group {
+    pub id: usize,
+    pub jobs: Vec<GroupJob>,
+    pub n_roll_nodes: usize,
+    pub n_train_nodes: usize,
+}
+
+impl Group {
+    /// Provision a fresh, isolated group for one job (Fig. 5-bottom).
+    pub fn isolated(id: usize, spec: JobSpec, model: &PhaseModel) -> Self {
+        let n_roll_nodes = spec.n_roll_nodes();
+        let n_train_nodes = spec.n_train_nodes();
+        let job = GroupJob::new(spec, model, (0..n_roll_nodes).collect(), n_train_nodes * GPUS_PER_NODE);
+        Group { id, jobs: vec![job], n_roll_nodes, n_train_nodes }
+    }
+
+    pub fn train_gpus(&self) -> usize {
+        self.n_train_nodes * GPUS_PER_NODE
+    }
+
+    /// Aggregate hourly price of all provisioned GPUs — Cost(G).
+    pub fn cost_per_hour(&self) -> f64 {
+        let roll = (self.n_roll_nodes * GPUS_PER_NODE) as f64
+            * GpuKind::H20.spec().cost_per_hour;
+        let train = (self.n_train_nodes * GPUS_PER_NODE) as f64
+            * GpuKind::H800.spec().cost_per_hour;
+        roll + train
+    }
+
+    /// Natural cycle time: the longest member's solo iteration (T_cycle).
+    pub fn t_cycle(&self) -> f64 {
+        self.jobs.iter().map(|j| j.t_solo()).fold(0.0, f64::max)
+    }
+
+    /// Total rollout occupancy pinned to one rollout node per cycle.
+    pub fn roll_node_load(&self, node: usize) -> f64 {
+        self.jobs
+            .iter()
+            .filter(|j| j.roll_nodes.contains(&node))
+            .map(|j| j.roll_occupancy())
+            .sum()
+    }
+
+    /// Bottleneck load (paper §4.2):
+    /// `T_load = max(Σ_j T_train, max_n Σ_{j on n} T_roll)`.
+    pub fn t_load(&self) -> f64 {
+        let train: f64 = self.jobs.iter().map(|j| j.train_occupancy()).sum();
+        let roll = (0..self.n_roll_nodes)
+            .map(|n| self.roll_node_load(n))
+            .fold(0.0, f64::max);
+        train.max(roll)
+    }
+
+    /// Saturation predicate — Algorithm 1 line 4 prunes these.
+    pub fn is_saturated(&self) -> bool {
+        self.t_load() >= self.t_cycle()
+    }
+
+    /// Steady-state meta-iteration time of the round-robin schedule.
+    /// For unsaturated groups this equals `t_cycle` (Theorem 1); once load
+    /// exceeds the natural cycle, the bottleneck resource gates the cycle.
+    pub fn t_meta(&self) -> f64 {
+        self.t_cycle().max(self.t_load())
+    }
+
+    /// Expected co-execution iteration time of a member (paper §4.2's
+    /// `T_co-exec`): every job completes exactly one iteration per
+    /// meta-iteration.
+    pub fn co_exec_time(&self, _job: JobId) -> f64 {
+        self.t_meta()
+    }
+
+    /// SLO feasibility of the whole group (Algorithm 1 line 10).
+    pub fn slo_ok(&self) -> bool {
+        let t_meta = self.t_meta();
+        self.jobs.iter().all(|j| t_meta <= j.spec.slo * j.t_solo() + 1e-9)
+    }
+
+    /// Host-memory feasibility (Algorithm 1 line 8): rollout state on each
+    /// pinned rollout node, training state on every training node (the
+    /// training DP group spans the pool).
+    pub fn residency_ok(&self) -> bool {
+        for n in 0..self.n_roll_nodes {
+            let used: f64 = self
+                .jobs
+                .iter()
+                .filter(|j| j.roll_nodes.contains(&n))
+                .map(|j| j.spec.mem_roll_gb())
+                .sum();
+            if used > HOST_MEM_GB {
+                return false;
+            }
+        }
+        let train_used: f64 = self.jobs.iter().map(|j| j.spec.mem_train_gb()).sum();
+        train_used <= HOST_MEM_GB
+    }
+
+    /// Idle fraction of each pool under the worst-case round-robin cycle
+    /// (the "dependency bubble" measure).
+    pub fn bubble_fracs(&self) -> (f64, f64) {
+        let t_meta = self.t_meta();
+        if t_meta <= 0.0 {
+            return (0.0, 0.0);
+        }
+        let roll_busy: f64 = (0..self.n_roll_nodes)
+            .map(|n| self.roll_node_load(n))
+            .sum::<f64>()
+            / self.n_roll_nodes.max(1) as f64;
+        let train_busy: f64 = self.jobs.iter().map(|j| j.train_occupancy()).sum();
+        (
+            1.0 - (roll_busy / t_meta).min(1.0),
+            1.0 - (train_busy / t_meta).min(1.0),
+        )
+    }
+
+    pub fn job_ids(&self) -> Vec<JobId> {
+        self.jobs.iter().map(|j| j.spec.id).collect()
+    }
+
+    pub fn remove_job(&mut self, id: JobId) -> Option<GroupJob> {
+        let idx = self.jobs.iter().position(|j| j.spec.id == id)?;
+        Some(self.jobs.remove(idx))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::job::PhaseSpec;
+
+    pub fn direct_job(id: JobId, t_roll: f64, t_train: f64, slo: f64) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("j{id}"),
+            arrival_s: 0.0,
+            n_iters: 10,
+            slo,
+            n_roll_gpus: 8,
+            n_train_gpus: 8,
+            params_b: 7.0,
+            phases: PhaseSpec::Direct { t_roll, t_train, cv: 0.0 },
+        }
+    }
+
+    fn pack(group: &mut Group, spec: JobSpec, nodes: Vec<usize>) {
+        let model = PhaseModel::default();
+        let train_gpus = group.train_gpus();
+        let job = GroupJob::new(spec, &model, nodes, train_gpus);
+        group.jobs.push(job);
+    }
+
+    #[test]
+    fn isolated_group_is_unsaturated() {
+        let model = PhaseModel::default();
+        let g = Group::isolated(0, direct_job(0, 100.0, 80.0, 2.0), &model);
+        // One job: load = max phase < cycle = sum of phases (+sync).
+        assert!(!g.is_saturated());
+        assert!(g.slo_ok());
+        assert!(g.residency_ok());
+        assert!((g.cost_per_hour() - 8.0 * (1.85 + 5.28)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_complementary_jobs_fit_one_cycle() {
+        // Fig. 1-bottom: two similar jobs weave into one cycle.
+        let model = PhaseModel::default();
+        let mut g = Group::isolated(0, direct_job(0, 100.0, 80.0, 2.0), &model);
+        pack(&mut g, direct_job(1, 90.0, 70.0, 2.0), vec![0]);
+        // load_roll = 190+switches, load_train = 150+switches, cycle ~ 180+sync.
+        let t_cycle = g.t_cycle();
+        let t_load = g.t_load();
+        assert!(t_load > 150.0 && t_cycle > 180.0);
+        // Meta-iteration: both jobs complete per max(cycle, load).
+        assert!((g.t_meta() - t_cycle.max(t_load)).abs() < 1e-9);
+        // Bubbles shrink vs solo: solo training bubble ~ t_roll/(t_solo).
+        let (_, train_bubble) = g.bubble_fracs();
+        let solo = Group::isolated(1, direct_job(2, 100.0, 80.0, 2.0), &model);
+        let (_, solo_train_bubble) = solo.bubble_fracs();
+        assert!(train_bubble < solo_train_bubble);
+    }
+
+    #[test]
+    fn overpacking_saturates() {
+        let model = PhaseModel::default();
+        let mut g = Group::isolated(0, direct_job(0, 100.0, 80.0, 2.0), &model);
+        pack(&mut g, direct_job(1, 100.0, 80.0, 2.0), vec![0]);
+        pack(&mut g, direct_job(2, 100.0, 80.0, 2.0), vec![0]);
+        // 3 x 100s rollout on one node > ~185s cycle.
+        assert!(g.is_saturated());
+    }
+
+    #[test]
+    fn slo_violation_detected() {
+        let model = PhaseModel::default();
+        // Short job with tight SLO packed with a long job: meta-iteration
+        // is gated by the long job's cycle -> short job blows its SLO.
+        let mut g = Group::isolated(0, direct_job(0, 500.0, 400.0, 2.0), &model);
+        pack(&mut g, direct_job(1, 40.0, 30.0, 1.2), vec![0]);
+        assert!(!g.slo_ok());
+    }
+
+    #[test]
+    fn residency_limits_group_size() {
+        let model = PhaseModel::default();
+        // 14B jobs: rollout footprint 445 GB -> 4 fit in 2 TB, 5 don't.
+        let mk = |id| JobSpec { params_b: 14.0, ..direct_job(id, 100.0, 80.0, 10.0) };
+        let mut g = Group::isolated(0, mk(0), &model);
+        for id in 1..4 {
+            pack(&mut g, mk(id), vec![0]);
+        }
+        assert!(g.residency_ok(), "4 x 445 GB fits 2 TB");
+        pack(&mut g, mk(4), vec![0]);
+        assert!(!g.residency_ok(), "5 x 445 GB exceeds 2 TB");
+    }
+
+    #[test]
+    fn spatial_packing_across_nodes() {
+        let model = PhaseModel::default();
+        // Big job owning 2 rollout nodes; two small jobs pinned on
+        // different nodes -> per-node load stays below cycle.
+        let mut big = direct_job(0, 300.0, 150.0, 2.0);
+        big.n_roll_gpus = 16;
+        big.n_train_gpus = 16;
+        let mut g = Group::isolated(0, big, &model);
+        assert_eq!(g.n_roll_nodes, 2);
+        pack(&mut g, direct_job(1, 120.0, 60.0, 4.0), vec![0]);
+        pack(&mut g, direct_job(2, 120.0, 60.0, 4.0), vec![1]);
+        assert!(!g.is_saturated());
+        assert!(g.slo_ok());
+        // Same two jobs on the SAME node saturate it (Fig. 3's bad case).
+        let mut bad = g.clone();
+        bad.jobs[2].roll_nodes = vec![0];
+        assert!(bad.roll_node_load(0) > g.roll_node_load(0));
+    }
+}

@@ -1,0 +1,190 @@
+//! The intra-group scheduler — cyclic round-robin meta-iterations (§4.3).
+//!
+//! Within a co-execution group every active job executes exactly one
+//! rollout and one training phase per meta-iteration, serialized on the
+//! group's pools in a fixed cyclic order. Theorem 1 (proved in the paper's
+//! appendix, checked numerically here and by the proptests in
+//! rust/tests/prop_coordinator.rs): for unsaturated groups this schedule is
+//! utilization-optimal — the meta-iteration completes in `T_cycle` (the
+//! longest member's solo time) and any *repetition* of a phase strictly
+//! lowers aggregate utilization.
+
+use crate::workload::job::JobId;
+
+use super::group::Group;
+
+/// The cyclic execution order of a group (round-robin over member jobs).
+#[derive(Clone, Debug, Default)]
+pub struct RoundRobin {
+    order: Vec<JobId>,
+    cursor: usize,
+}
+
+impl RoundRobin {
+    pub fn from_group(g: &Group) -> Self {
+        RoundRobin { order: g.job_ids(), cursor: 0 }
+    }
+
+    pub fn add(&mut self, job: JobId) {
+        if !self.order.contains(&job) {
+            self.order.push(job);
+        }
+    }
+
+    pub fn remove(&mut self, job: JobId) {
+        if let Some(i) = self.order.iter().position(|&j| j == job) {
+            self.order.remove(i);
+            if self.cursor > i {
+                self.cursor -= 1;
+            }
+            if self.order.is_empty() {
+                self.cursor = 0;
+            } else {
+                self.cursor %= self.order.len();
+            }
+        }
+    }
+
+    /// Next job in cyclic order.
+    pub fn next(&mut self) -> Option<JobId> {
+        if self.order.is_empty() {
+            return None;
+        }
+        let j = self.order[self.cursor];
+        self.cursor = (self.cursor + 1) % self.order.len();
+        Some(j)
+    }
+
+    pub fn order(&self) -> &[JobId] {
+        &self.order
+    }
+}
+
+/// Aggregate pool utilizations of one meta-iteration of duration `t_meta`
+/// (the appendix's U_R and U_T).
+pub fn utilization(g: &Group, t_meta: f64) -> (f64, f64) {
+    let roll_work: f64 = g.jobs.iter().map(|j| j.roll_occupancy()).sum();
+    let train_work: f64 = g.jobs.iter().map(|j| j.train_occupancy()).sum();
+    // Normalize per node so multi-node groups compare fairly.
+    let u_r = roll_work / (t_meta * g.n_roll_nodes as f64);
+    let u_t = train_work / t_meta;
+    (u_r, u_t)
+}
+
+/// Meta-iteration time if job `k`'s phases were executed TWICE per cycle
+/// (the appendix's perturbation): the repetition can only start after the
+/// slowest job, extending the cycle by at least T_k_solo.
+pub fn cycle_with_repetition(g: &Group, k: JobId) -> f64 {
+    let extra = g
+        .jobs
+        .iter()
+        .find(|j| j.spec.id == k)
+        .map(|j| j.t_solo())
+        .unwrap_or(0.0);
+    g.t_meta() + extra
+}
+
+/// Theorem 1 check: utilization delta from repeating job `k` once.
+/// Returns (ΔU_R + ΔU_T); the theorem guarantees this is <= 0 for
+/// unsaturated groups.
+pub fn repetition_utilization_delta(g: &Group, k: JobId) -> f64 {
+    let t0 = g.t_meta();
+    let (u_r0, u_t0) = utilization(g, t0);
+    let t1 = cycle_with_repetition(g, k);
+    let job = g.jobs.iter().find(|j| j.spec.id == k).expect("job in group");
+    let roll_work: f64 = g.jobs.iter().map(|j| j.roll_occupancy()).sum::<f64>()
+        + job.roll_occupancy();
+    let train_work: f64 = g.jobs.iter().map(|j| j.train_occupancy()).sum::<f64>()
+        + job.train_occupancy();
+    let u_r1 = roll_work / (t1 * g.n_roll_nodes as f64);
+    let u_t1 = train_work / t1;
+    (u_r1 + u_t1) - (u_r0 + u_t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::PhaseModel;
+    use crate::coordinator::group::GroupJob;
+    use crate::workload::job::{JobSpec, PhaseSpec};
+
+    fn direct_job(id: JobId, t_roll: f64, t_train: f64) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("j{id}"),
+            arrival_s: 0.0,
+            n_iters: 10,
+            slo: 10.0,
+            n_roll_gpus: 8,
+            n_train_gpus: 8,
+            params_b: 7.0,
+            phases: PhaseSpec::Direct { t_roll, t_train, cv: 0.0 },
+        }
+    }
+
+    fn group_of(specs: Vec<JobSpec>) -> Group {
+        let model = PhaseModel::default();
+        let mut g = Group::isolated(0, specs[0].clone(), &model);
+        for s in specs.into_iter().skip(1) {
+            let gj = GroupJob::new(s, &model, vec![0], g.train_gpus());
+            g.jobs.push(gj);
+        }
+        g
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let g = group_of(vec![direct_job(0, 10.0, 10.0), direct_job(1, 10.0, 10.0)]);
+        let mut rr = RoundRobin::from_group(&g);
+        assert_eq!(rr.next(), Some(0));
+        assert_eq!(rr.next(), Some(1));
+        assert_eq!(rr.next(), Some(0));
+        rr.remove(0);
+        assert_eq!(rr.next(), Some(1));
+        assert_eq!(rr.next(), Some(1));
+        rr.add(2);
+        assert_eq!(rr.order(), &[1, 2]);
+    }
+
+    #[test]
+    fn remove_before_cursor_keeps_order() {
+        let mut rr = RoundRobin { order: vec![0, 1, 2], cursor: 2 };
+        rr.remove(0); // cursor pointed at 2; must still yield 2 next
+        assert_eq!(rr.next(), Some(2));
+        assert_eq!(rr.next(), Some(1));
+    }
+
+    #[test]
+    fn theorem1_repetition_never_helps() {
+        // Unsaturated groups: repeating any member's phases lowers
+        // aggregate utilization (appendix bound ΔU <= 0).
+        let g = group_of(vec![
+            direct_job(0, 120.0, 90.0),
+            direct_job(1, 60.0, 40.0),
+        ]);
+        assert!(!g.is_saturated());
+        for k in [0, 1] {
+            let d = repetition_utilization_delta(&g, k);
+            assert!(d <= 1e-9, "repeating job {k} increased utilization by {d}");
+        }
+    }
+
+    #[test]
+    fn theorem1_meta_iteration_equals_cycle_when_unsaturated() {
+        let g = group_of(vec![
+            direct_job(0, 120.0, 90.0),
+            direct_job(1, 50.0, 40.0),
+        ]);
+        assert!(!g.is_saturated());
+        assert!((g.t_meta() - g.t_cycle()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_improves_with_packing() {
+        let solo = group_of(vec![direct_job(0, 120.0, 90.0)]);
+        let packed = group_of(vec![direct_job(0, 120.0, 90.0), direct_job(1, 60.0, 45.0)]);
+        let (ur0, ut0) = utilization(&solo, solo.t_meta());
+        let (ur1, ut1) = utilization(&packed, packed.t_meta());
+        assert!(ur1 > ur0 && ut1 > ut0, "packing must raise both utilizations");
+    }
+}

@@ -1,0 +1,133 @@
+//! Long-tail migration (paper §4.3, Fig. 7).
+//!
+//! Rollout batches are gated by a few straggler responses. Once a
+//! threshold (80%) of responses complete, the intra-group scheduler
+//! interrupts the phase, consolidates the surviving long-tail responses
+//! onto a small subset of the job's rollout nodes, and releases the rest —
+//! letting the next job's rollout start immediately on the freed nodes.
+
+use crate::workload::job::IterSample;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationPolicy {
+    /// Completion fraction that triggers consolidation (paper: 80%).
+    pub threshold: f64,
+    /// Migration cost: pausing generation, moving KV/state of the tail
+    /// requests to the kept nodes, seconds.
+    pub migrate_cost_s: f64,
+    pub enabled: bool,
+}
+
+impl Default for MigrationPolicy {
+    fn default() -> Self {
+        MigrationPolicy { threshold: 0.8, migrate_cost_s: 3.0, enabled: true }
+    }
+}
+
+/// The plan for one rollout phase on `k` nodes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MigrationPlan {
+    /// Seconds into the (post-warm-start) rollout when migration fires.
+    pub trigger_at_s: f64,
+    /// Whole nodes kept busy by the consolidated tail. For single-node
+    /// jobs this is 0: the tail squeezes onto a GPU subset of the node
+    /// (paper Fig. 7 consolidates at device granularity) and the node is
+    /// handed to the next job — the sub-node capacity the tail borrows is
+    /// `tail_gpu_frac` (see DESIGN.md §9 for the approximation).
+    pub nodes_kept: usize,
+    /// Nodes released for the next job at `trigger_at_s`.
+    pub nodes_freed: usize,
+    /// Fraction of one node's GPUs the tail occupies after consolidation
+    /// (busy-time accounting for the sub-node case).
+    pub tail_gpu_frac: f64,
+    /// Total duration of the phase's tail (>= no-migration duration:
+    /// consolidation adds `migrate_cost_s`).
+    pub tail_end_s: f64,
+}
+
+impl MigrationPolicy {
+    /// Decide whether/how to migrate this phase's tail. Returns None when
+    /// migration is disabled or there is no tail to migrate.
+    pub fn plan(&self, sample: &IterSample, k_nodes: usize) -> Option<MigrationPlan> {
+        if !self.enabled || k_nodes == 0 {
+            return None;
+        }
+        let trigger_at_s = sample.tail_start_frac * sample.t_roll;
+        if trigger_at_s >= sample.t_roll {
+            return None; // no tail: batch finished together
+        }
+        // Whole nodes the consolidated tail needs; 0 means a sub-node GPU
+        // subset suffices and every node is released.
+        let nodes_kept =
+            ((sample.tail_gpu_frac * k_nodes as f64).floor() as usize).min(k_nodes - 1);
+        let nodes_freed = k_nodes - nodes_kept;
+        // The tail continues on fewer devices. Decode is bandwidth-bound
+        // per sequence; consolidating only the surviving tail does not
+        // slow the stragglers (latency-, not throughput-bound), so the
+        // tail still ends at t_roll, plus the migration pause.
+        Some(MigrationPlan {
+            trigger_at_s,
+            nodes_kept,
+            nodes_freed,
+            tail_gpu_frac: sample.tail_gpu_frac,
+            tail_end_s: sample.t_roll + self.migrate_cost_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t_roll: f64, tail_start_frac: f64, tail_gpu_frac: f64) -> IterSample {
+        IterSample { t_roll, t_train: 50.0, tail_start_frac, tail_gpu_frac }
+    }
+
+    #[test]
+    fn plan_frees_majority() {
+        let p = MigrationPolicy::default();
+        let plan = p.plan(&sample(100.0, 0.6, 0.3), 4).unwrap();
+        assert_eq!(plan.nodes_kept, 1);
+        assert_eq!(plan.nodes_freed, 3);
+        assert!((plan.trigger_at_s - 60.0).abs() < 1e-9);
+        assert!(plan.tail_end_s > 100.0, "consolidation pause counted");
+    }
+
+    #[test]
+    fn single_node_job_frees_its_node() {
+        // Sub-node consolidation (paper Fig. 7 at device granularity):
+        // the tail squeezes onto a GPU subset, the node is released.
+        let p = MigrationPolicy::default();
+        let plan = p.plan(&sample(100.0, 0.6, 0.2), 1).unwrap();
+        assert_eq!(plan.nodes_kept, 0);
+        assert_eq!(plan.nodes_freed, 1);
+    }
+
+    #[test]
+    fn disabled_policy_never_plans() {
+        let p = MigrationPolicy { enabled: false, ..Default::default() };
+        assert_eq!(p.plan(&sample(100.0, 0.6, 0.2), 4), None);
+    }
+
+    #[test]
+    fn no_tail_no_migration() {
+        let p = MigrationPolicy::default();
+        assert_eq!(p.plan(&sample(100.0, 1.0, 0.2), 4), None);
+    }
+
+    #[test]
+    fn work_conservation() {
+        // Migration never shortens the tail itself, only frees nodes:
+        // tail_end >= t_roll (invariant 4 in DESIGN.md §6).
+        let p = MigrationPolicy::default();
+        for ts in [0.2, 0.5, 0.9] {
+            for tg in [0.1, 0.3, 0.5] {
+                if let Some(plan) = p.plan(&sample(200.0, ts, tg), 8) {
+                    assert!(plan.tail_end_s >= 200.0);
+                    assert!(plan.nodes_kept + plan.nodes_freed == 8);
+                    assert!(plan.nodes_freed >= 1);
+                }
+            }
+        }
+    }
+}

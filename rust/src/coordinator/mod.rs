@@ -1,0 +1,17 @@
+//! The RollMux coordinator — the paper's system contribution.
+//!
+//! Two-tier scheduling over co-execution groups:
+//!  * [`group`]    — the co-execution group abstraction (§4.1);
+//!  * [`inter`]    — online inter-group placement, Algorithm 1 (§4.2);
+//!  * [`intra`]    — round-robin meta-iterations + Theorem 1 (§4.3);
+//!  * [`migration`] — long-tail migration (§4.3, Fig. 7).
+
+pub mod group;
+pub mod inter;
+pub mod intra;
+pub mod migration;
+
+pub use group::{Group, GroupJob};
+pub use inter::{Decision, InterGroupScheduler, PlacementKind};
+pub use intra::RoundRobin;
+pub use migration::{MigrationPlan, MigrationPolicy};

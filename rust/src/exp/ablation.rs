@@ -1,0 +1,112 @@
+//! Ablations (§7.3): Fig. 11 (long-tail distribution + request migration)
+//! and Fig. 12 (topology-aware model synchronization).
+
+use crate::sim::engine::{SimConfig, Simulator};
+use crate::sync::{plan::plan_sync, SyncScheme};
+use crate::sync::topology::NetworkTopology;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::{f, ratio, Table};
+use crate::workload::lengths::LengthDist;
+use crate::workload::profiles::table3_job;
+
+use super::ExpOpts;
+
+/// Fig. 11-left: generation-length distribution (heavy tail);
+/// Fig. 11-right: migration throughput gains (paper: 1.06-1.28x).
+pub fn fig11(opts: &ExpOpts) {
+    // Left panel: length percentiles per (model, max len) config.
+    let mut t = Table::new(
+        "Fig. 11 (left) — rollout generation length distribution (tokens)",
+        &["config", "p50", "p80", "p95", "p99", "max", "% at cap"],
+    );
+    for (name, cap) in [("7B-4k", 4096.0), ("7B-8k", 8192.0), ("14B-4k", 4096.0), ("14B-8k", 8192.0)] {
+        let d = LengthDist::production(cap);
+        let mut rng = Rng::new(opts.seed);
+        let xs: Vec<f64> = (0..20_000).map(|_| d.sample(&mut rng)).collect();
+        let at_cap = xs.iter().filter(|&&x| x >= cap - 1.0).count() as f64 / xs.len() as f64;
+        t.row(vec![
+            name.to_string(),
+            f(stats::percentile(&xs, 50.0), 0),
+            f(stats::percentile(&xs, 80.0), 0),
+            f(stats::percentile(&xs, 95.0), 0),
+            f(stats::percentile(&xs, 99.0), 0),
+            f(stats::percentile(&xs, 100.0), 0),
+            f(100.0 * at_cap, 1),
+        ]);
+    }
+    t.print();
+    println!("(long tail: p50 << max; a few % of requests reach the token cap)\n");
+
+    // Right panel: co-executed job pairs with/without migration.
+    let mut t2 = Table::new(
+        "Fig. 11 (right) — long-tail migration: end-to-end throughput gain",
+        &["pair", "makespan w/o mig (s)", "with mig (s)", "speedup"],
+    );
+    let pairs: Vec<(&str, char, char)> = vec![
+        ("7B-8k x2 (A+A)", 'A', 'A'),
+        ("14B-8k x2 (B+B)", 'B', 'B'),
+        ("7B+14B (A+B)", 'A', 'B'),
+        ("multi-turn (D+D)", 'D', 'D'),
+    ];
+    for (name, a, b) in pairs {
+        let mk_trace = || {
+            let mut t0 = table3_job(a, 0, 0.0);
+            let mut t1 = table3_job(b, 1, 0.0);
+            t0.n_iters = (12.0 * opts.scale).max(4.0) as usize;
+            t1.n_iters = t0.n_iters;
+            t0.slo = 5.0;
+            t1.slo = 5.0;
+            vec![t0, t1]
+        };
+        // Force both jobs onto one rollout node (the contended setting the
+        // paper's ablation measures) and toggle only the migration knob.
+        let mut with = SimConfig { seed: opts.seed, ..Default::default() };
+        with.migration.enabled = true;
+        let mut without = with.clone();
+        without.migration.enabled = false;
+        let r_with =
+            Simulator::new(with, super::micro::NaiveColocate::new(), mk_trace()).run();
+        let r_without =
+            Simulator::new(without, super::micro::NaiveColocate::new(), mk_trace()).run();
+        t2.row(vec![
+            name.to_string(),
+            f(r_without.makespan_s, 0),
+            f(r_with.makespan_s, 0),
+            ratio(r_without.makespan_s / r_with.makespan_s),
+        ]);
+    }
+    t2.print();
+    println!("paper: migration improves end-to-end throughput by 1.06x-1.28x\n");
+}
+
+/// Fig. 12: model synchronization time, flat AllGather (veRL) vs
+/// RollMux's hierarchical two-stage transfer.
+pub fn fig12(_opts: &ExpOpts) {
+    let topo = NetworkTopology::default();
+    let mut t = Table::new(
+        "Fig. 12 — model sync time across the 20 Gbps inter-cluster link (s)",
+        &["setting", "model", "veRL AllGather", "RollMux hier.", "speedup", "copies over slow link"],
+    );
+    for (setting, n_train, n_roll) in [("single-node 8->8", 8, 8), ("multi-node 16->16", 16, 16)] {
+        for params_b in [7.0, 14.0, 32.0] {
+            let bytes = 2.0 * params_b * 1e9;
+            let flat = plan_sync(SyncScheme::FlatAllGather, bytes, n_train, n_roll, &topo);
+            let hier = plan_sync(SyncScheme::Hierarchical, bytes, n_train, n_roll, &topo);
+            t.row(vec![
+                setting.to_string(),
+                format!("{params_b}B"),
+                f(flat.time_s, 1),
+                f(hier.time_s, 1),
+                ratio(flat.time_s / hier.time_s),
+                format!("{} vs 1", n_roll),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "paper: 7.87x-8.33x single-node, 2.62x-2.75x multi-node (their multi-node\n\
+         baseline partially parallelizes; ours is pure AllGather so the full\n\
+         n_roll x gap persists — the invariant is 'exactly one copy crosses the link')\n"
+    );
+}

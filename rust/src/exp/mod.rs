@@ -1,0 +1,67 @@
+//! Experiment harness: one runner per table/figure of the paper's
+//! evaluation (§7). `rollmux exp <id>` regenerates the corresponding
+//! rows/series; EXPERIMENTS.md records paper-vs-measured for each.
+
+pub mod ablation;
+pub mod atscale;
+pub mod micro;
+pub mod motivation;
+pub mod simstudy;
+
+/// Common experiment options from the CLI.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    pub seed: u64,
+    /// Scale factor for trace sizes (1.0 = paper scale where feasible).
+    pub scale: f64,
+    /// Print gantt charts where available.
+    pub gantt: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { seed: 7, scale: 1.0, gantt: false }
+    }
+}
+
+pub type Runner = fn(&ExpOpts);
+
+/// The experiment registry: id -> (description, runner).
+pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
+    vec![
+        ("fig2", "Workload heterogeneity: top-10 production job types", motivation::fig2 as Runner),
+        ("fig3", "Naive time-multiplexing bad case: two rollout-heavy jobs", micro::fig3),
+        ("fig4", "Cold vs warm start latency across model sizes", motivation::fig4),
+        ("table2", "Actor memory footprints per 8-GPU node", motivation::table2),
+        ("fig10a", "Micro-bench: temporal multiplexing (Type-A x2)", micro::fig10a),
+        ("fig10b", "Micro-bench: train multiplexing (Type-D x2 + E)", micro::fig10b),
+        ("fig10c", "Micro-bench: spatial multiplexing (Type-C + D x2)", micro::fig10c),
+        ("table4", "Co-execution interference overhead", micro::table4),
+        ("fig11", "Long-tail lengths + migration ablation", ablation::fig11),
+        ("fig12", "Topology-aware model sync vs flat AllGather", ablation::fig12),
+        ("fig13", "At-scale production trace replay (cost, GPUs, bubbles)", atscale::fig13),
+        ("fig14a", "Sensitivity: workload type", simstudy::fig14a),
+        ("fig14b", "Sensitivity: SLO tightness", simstudy::fig14b),
+        ("fig14c", "Sensitivity: max group residency", simstudy::fig14c),
+        ("table5", "Scheduler decision latency vs concurrent jobs", simstudy::table5),
+        ("fig15", "Simulation end-to-end: cost + SLO attainment", simstudy::fig15),
+    ]
+}
+
+pub fn run(id: &str, opts: &ExpOpts) -> bool {
+    for (name, desc, runner) in registry() {
+        if name == id {
+            println!("### {name} — {desc}\n");
+            runner(opts);
+            return true;
+        }
+    }
+    false
+}
+
+pub fn run_all(opts: &ExpOpts) {
+    for (name, desc, runner) in registry() {
+        println!("\n### {name} — {desc}\n");
+        runner(opts);
+    }
+}

@@ -1,0 +1,91 @@
+//! Motivation experiments: Fig. 2 (workload heterogeneity), Fig. 4
+//! (cold/warm start latency), Table 2 (memory footprints).
+
+use crate::cluster::node::PoolKind;
+use crate::cluster::PhaseModel;
+use crate::memory::{cold_start_s, rollout_footprint_gb, train_footprint_gb, warm_start_s};
+use crate::util::rng::Rng;
+use crate::util::table::{f, ratio, Table};
+use crate::workload::profiles::fig2_archetypes;
+
+use super::ExpOpts;
+
+/// Fig. 2: phase durations of the top-10 production job archetypes.
+/// Paper: durations span ~50-900+ s with strong rollout/train skew for
+/// multi-turn jobs.
+pub fn fig2(opts: &ExpOpts) {
+    let model = PhaseModel::default();
+    let mut rng = Rng::new(opts.seed);
+    let mut t = Table::new(
+        "Fig. 2 — top-10 job types: expected phase durations (s)",
+        &["job type", "T_roll", "T_train", "T_solo", "roll:train"],
+    );
+    let mut min = f64::MAX;
+    let mut max: f64 = 0.0;
+    for job in fig2_archetypes() {
+        let e = job.expected(&model, &mut rng);
+        min = min.min(e.t_roll.min(e.t_train));
+        max = max.max(e.t_roll.max(e.t_train));
+        t.row(vec![
+            job.name.clone(),
+            f(e.t_roll, 1),
+            f(e.t_train, 1),
+            f(e.t_solo(), 1),
+            ratio(e.t_roll / e.t_train),
+        ]);
+    }
+    t.print();
+    println!(
+        "phase-duration spread: {:.0}s .. {:.0}s ({}x) — paper reports 50s to 900+s\n\
+         (multi-turn [M] jobs show the paper's 3-4x rollout skew)",
+        min, max, (max / min) as u64
+    );
+}
+
+/// Fig. 4: cold vs warm start latency per model size, rollout + training.
+/// Paper: cold up to ~80 s; warm up to 48x faster.
+pub fn fig4(_opts: &ExpOpts) {
+    let mut t = Table::new(
+        "Fig. 4 — context switch latency on an 8-GPU node (s)",
+        &["model", "cold roll", "warm roll", "speedup", "cold train", "warm train", "speedup"],
+    );
+    for p in [3.0, 7.0, 14.0, 32.0] {
+        let cr = cold_start_s(p, PoolKind::Rollout);
+        let wr = warm_start_s(p, PoolKind::Rollout);
+        let ct = cold_start_s(p, PoolKind::Train);
+        let wt = warm_start_s(p, PoolKind::Train);
+        t.row(vec![
+            format!("{p}B"),
+            f(cr, 1),
+            f(wr, 2),
+            ratio(cr / wr),
+            f(ct, 1),
+            f(wt, 2),
+            ratio(ct / wt),
+        ]);
+    }
+    t.print();
+    println!("paper: cold start up to ~80 s; warm start up to 48x faster\n");
+}
+
+/// Table 2: host-memory footprint of cached actors per 8-GPU node.
+pub fn table2(_opts: &ExpOpts) {
+    let mut t = Table::new(
+        "Table 2 — actor cache footprint per 8-GPU node (GB)",
+        &["model", "rollout", "train", "fit in 2TB (roll)", "paper (roll/train)"],
+    );
+    let paper = [(3.0, "113.4/156.2"), (7.0, "275.7/240.0"), (14.0, "445.4/456.1"), (32.0, "490.3/520.4")];
+    for (p, pp) in paper {
+        let r = rollout_footprint_gb(p);
+        let tr = train_footprint_gb(p);
+        t.row(vec![
+            format!("{p}B"),
+            f(r, 1),
+            f(tr, 1),
+            format!("{}", (2048.0 / r) as usize),
+            pp.to_string(),
+        ]);
+    }
+    t.print();
+    println!("(anchored on the paper's measured values; interpolated between sizes)\n");
+}

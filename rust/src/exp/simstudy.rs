@@ -1,0 +1,217 @@
+//! §7.5: trace-driven scheduler study — Fig. 14 sensitivity analysis,
+//! Fig. 15 end-to-end simulation, Table 5 decision latency.
+
+use crate::baselines::heuristic::{GreedyScheduler, RandomScheduler};
+use crate::baselines::optimal::{optimal_partition_deadline, PrePlacedScheduler};
+use crate::cluster::PhaseModel;
+use crate::coordinator::inter::InterGroupScheduler;
+use crate::sim::engine::{SimConfig, SimResult, Simulator};
+use crate::util::rng::Rng;
+use crate::util::table::{f, pct, ratio, Table};
+use crate::workload::job::JobSpec;
+use crate::workload::profiles::{table6_job, SimProfile};
+use crate::workload::trace::{philly_trace, SloPolicy};
+
+use super::ExpOpts;
+
+const OPT_WINDOW: usize = 7;
+
+fn n_jobs(opts: &ExpOpts) -> usize {
+    ((300.0 * opts.scale) as usize).clamp(30, 300)
+}
+
+struct PolicyRow {
+    name: &'static str,
+    cost_per_h: f64,
+    slo: f64,
+    peak_gpus: usize,
+}
+
+fn run_policies(opts: &ExpOpts, trace: &[JobSpec], cap: usize) -> Vec<PolicyRow> {
+    let model = PhaseModel::default();
+    let cfg = || SimConfig { seed: opts.seed, ..Default::default() };
+    let run = |r: SimResult| (r.avg_cost_per_hour, r.slo_attainment(), r.peak_roll_gpus + r.peak_train_gpus);
+
+    let opt = PrePlacedScheduler::windowed(trace, model, OPT_WINDOW.min(cap * 2));
+    let (opt_c, opt_s, opt_g) = run(Simulator::new(cfg(), opt, trace.to_vec()).run());
+
+    let mux = InterGroupScheduler::with_max_group_size(model, cap);
+    let (mux_c, mux_s, mux_g) = run(Simulator::new(cfg(), mux, trace.to_vec()).run());
+
+    let rnd = RandomScheduler::new(model, opts.seed, cap);
+    let (rnd_c, rnd_s, rnd_g) = run(Simulator::new(cfg(), rnd, trace.to_vec()).run());
+
+    let grd = GreedyScheduler::new(model, cap);
+    let (grd_c, grd_s, grd_g) = run(Simulator::new(cfg(), grd, trace.to_vec()).run());
+
+    vec![
+        PolicyRow { name: "Offline Opt (windowed)", cost_per_h: opt_c, slo: opt_s, peak_gpus: opt_g },
+        PolicyRow { name: "RollMux", cost_per_h: mux_c, slo: mux_s, peak_gpus: mux_g },
+        PolicyRow { name: "Greedy (Most-Idle)", cost_per_h: grd_c, slo: grd_s, peak_gpus: grd_g },
+        PolicyRow { name: "Random", cost_per_h: rnd_c, slo: rnd_s, peak_gpus: rnd_g },
+    ]
+}
+
+fn print_rows(title: &str, rows: &[PolicyRow]) {
+    // NOTE: "Offline Opt" is the windowed brute force (DESIGN.md §9) — an
+    // under-approximation of the true offline optimum, so ratios slightly
+    // below 1.0x are possible when RollMux's unwindowed packing wins.
+    let opt = rows[0].cost_per_h.max(1e-9);
+    let mut t = Table::new(title, &["policy", "avg $/h", "x optimal", "SLO attain", "peak GPUs"]);
+    for r in rows {
+        t.row(vec![
+            r.name.to_string(),
+            f(r.cost_per_h, 1),
+            ratio(r.cost_per_h / opt),
+            pct(r.slo),
+            format!("{}", r.peak_gpus),
+        ]);
+    }
+    t.print();
+}
+
+/// Fig. 14a — workload-type sensitivity.
+pub fn fig14a(opts: &ExpOpts) {
+    let n = n_jobs(opts) / 2; // four workloads; keep total runtime sane
+    for profile in [SimProfile::Balanced, SimProfile::RolloutHeavy, SimProfile::TrainHeavy, SimProfile::Mixed] {
+        let trace = philly_trace(opts.seed, n, profile, SloPolicy::Drawn(1.0, 2.0));
+        let rows = run_policies(opts, &trace, 5);
+        print_rows(&format!("Fig. 14a — workload = {profile:?} ({n} jobs)"), &rows);
+    }
+    println!(
+        "paper: RollMux 1.01-1.12x optimal at 100% SLO; Random 1.72-2.00x at 37-58%;\n\
+         Greedy 1.38-1.89x at 42-61%\n"
+    );
+}
+
+/// Fig. 14b — SLO-tightness sensitivity.
+pub fn fig14b(opts: &ExpOpts) {
+    let n = n_jobs(opts) / 2;
+    for (name, slo) in [
+        ("uniform 1.2", SloPolicy::Uniform(1.2)),
+        ("uniform 1.5", SloPolicy::Uniform(1.5)),
+        ("uniform 2.0", SloPolicy::Uniform(2.0)),
+        ("Unif(1,2)", SloPolicy::Drawn(1.0, 2.0)),
+    ] {
+        let trace = philly_trace(opts.seed, n, SimProfile::Mixed, slo);
+        let rows = run_policies(opts, &trace, 5);
+        print_rows(&format!("Fig. 14b — SLO = {name} ({n} jobs)"), &rows);
+    }
+    println!(
+        "paper: RollMux stays 100% / near-optimal at every tightness; baselines\n\
+         recover somewhat only at loose SLOs (38-43% -> 71-73%)\n"
+    );
+}
+
+/// Fig. 14c — max-group-residency sensitivity.
+pub fn fig14c(opts: &ExpOpts) {
+    let n = n_jobs(opts) / 2;
+    let trace = philly_trace(opts.seed, n, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+    for cap in [2usize, 3, 4, 5] {
+        let rows = run_policies(opts, &trace, cap);
+        print_rows(&format!("Fig. 14c — max group size = {cap} ({n} jobs)"), &rows);
+    }
+    println!("paper: performance is insensitive to the cap; even size 2-3 suffices\n");
+}
+
+/// Fig. 15 — end-to-end simulation under the realistic mixed workload.
+pub fn fig15(opts: &ExpOpts) {
+    let n = n_jobs(opts);
+    let trace = philly_trace(opts.seed, n, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+    let rows = run_policies(opts, &trace, 5);
+    print_rows(
+        &format!("Fig. 15 — mixed workload, SLO~Unif(1,2), cap 5 ({n} jobs)"),
+        &rows,
+    );
+    println!(
+        "paper: RollMux 0.87 k$/h = 1.06x optimal at 100% SLO; Random 1.97x @60%;\n\
+         Greedy 1.66x @62%; baselines spike to 5 k$/h (1400 GPUs) under load\n"
+    );
+}
+
+/// Table 5 — decision latency vs number of concurrent jobs, RollMux's
+/// Algorithm 1 vs the brute-force optimal solver.
+pub fn table5(opts: &ExpOpts) {
+    let model = PhaseModel::default();
+    let mut t = Table::new(
+        "Table 5 — placement decision latency",
+        &["concurrent jobs", "RollMux (ms)", "Brute-force Opt"],
+    );
+    for &n in &[5usize, 9, 13, 100, 500, 1000, 2000] {
+        // Build a scheduler with n live jobs.
+        let mut rng = Rng::new(opts.seed);
+        let jobs: Vec<JobSpec> = (0..n)
+            .map(|id| {
+                let slo = rng.uniform(1.0, 2.0);
+                table6_job(id, SimProfile::Mixed, &mut rng, slo, 0.0, 5)
+            })
+            .collect();
+        let mut sched = InterGroupScheduler::new(model);
+        for j in &jobs {
+            sched.schedule(j.clone());
+        }
+        // Measure the marginal decision: schedule one probe job into a
+        // cloned state, repeated.
+        let trials = if n >= 1000 { 5 } else { 20 };
+        let mut total = 0.0;
+        for k in 0..trials {
+            let slo = rng.uniform(1.0, 2.0);
+            let probe = table6_job(n + k, SimProfile::Mixed, &mut rng, slo, 0.0, 5);
+            let mut s2 = sched.clone();
+            let t0 = std::time::Instant::now();
+            s2.schedule(probe);
+            total += t0.elapsed().as_secs_f64();
+        }
+        let mux_ms = total / trials as f64 * 1e3;
+
+        // Brute force: only feasible for tiny n (paper: >5 h at 13 jobs).
+        let opt_cell = if n <= 9 {
+            let t0 = std::time::Instant::now();
+            let (_, _, _, timed_out) = optimal_partition_deadline(&jobs, &model, 30.0);
+            let el = t0.elapsed().as_secs_f64();
+            if timed_out {
+                ">30 s (truncated)".to_string()
+            } else {
+                format!("{:.0} ms", el * 1e3)
+            }
+        } else if n <= 13 {
+            let t0 = std::time::Instant::now();
+            let (_, _, _, timed_out) = optimal_partition_deadline(&jobs, &model, 10.0);
+            let el = t0.elapsed().as_secs_f64();
+            if timed_out {
+                ">10 s (truncated; paper: >5 h)".to_string()
+            } else {
+                format!("{:.0} ms", el * 1e3)
+            }
+        } else {
+            "intractable".to_string()
+        };
+        t.row(vec![format!("{n}"), f(mux_ms, 2), opt_cell]);
+    }
+    t.print();
+    println!(
+        "paper: RollMux 5.6 ms @5 jobs -> 591 ms @2000 (near-linear);\n\
+         brute force 113 ms @5, >1 min @9, >5 h @13\n"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig15_shape_small() {
+        // Shape contract at small scale: RollMux near Opt on cost,
+        // attainment >= Greedy >= ~Random, Random most expensive-ish.
+        let opts = ExpOpts { seed: 11, scale: 0.15, gantt: false };
+        let trace = philly_trace(opts.seed, 40, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+        let rows = run_policies(&opts, &trace, 5);
+        let (opt, mux, grd, rnd) = (&rows[0], &rows[1], &rows[2], &rows[3]);
+        assert!(mux.cost_per_h <= 1.45 * opt.cost_per_h, "RollMux {} vs opt {}", mux.cost_per_h, opt.cost_per_h);
+        assert!(mux.slo >= 0.97, "RollMux attainment {}", mux.slo);
+        assert!(mux.slo >= grd.slo - 1e-9, "greedy should not beat RollMux on SLO");
+        assert!(mux.slo >= rnd.slo - 1e-9);
+        // Heuristics miss SLOs on mixed workloads.
+        assert!(rnd.slo < 1.0 || grd.slo < 1.0, "at least one heuristic should violate");
+    }
+}

@@ -1,0 +1,35 @@
+//! RollMux: phase-level multiplexing for disaggregated RL post-training.
+//!
+//! Reproduction of the CS.DC 2025 paper (see DESIGN.md). The crate is the
+//! L3 layer of a three-layer stack: a Rust cluster scheduler + execution
+//! plane (this crate), a JAX model compiled once to HLO artifacts (L2,
+//! `python/compile/model.py`), and Pallas kernels for the compute
+//! hot-spots (L1, `python/compile/kernels/`).
+//!
+//! Module map (see DESIGN.md §4 for the full inventory):
+//! * [`cluster`] — GPU specs, nodes/pools, roofline phase-duration model.
+//! * [`workload`] — job specs, heavy-tail lengths, profiles, traces.
+//! * [`memory`] — actor footprints, residency ledger, warm/cold switching.
+//! * [`sync`] — cross-cluster model synchronization plans.
+//! * [`sim`] — discrete-event cluster simulator.
+//! * [`coordinator`] — the paper's contribution: co-execution groups,
+//!   inter-group scheduling (Alg. 1), intra-group round-robin, migration.
+//! * [`baselines`] — Solo-D, veRL-colocated, Gavel+, Random, Greedy, Opt.
+//! * [`phase`] — phase-centric control plane (permits, queues, hooks).
+//! * [`runtime`] — PJRT execution of the AOT HLO artifacts.
+//! * [`rl`] — the real on-policy RL loop over the runtime.
+//! * [`metrics`] — cost/utilization/SLO accounting, gantt export.
+//! * [`exp`] — the experiment harness (one runner per paper table/figure).
+pub mod baselines;
+pub mod cluster;
+pub mod coordinator;
+pub mod exp;
+pub mod memory;
+pub mod metrics;
+pub mod phase;
+pub mod rl;
+pub mod runtime;
+pub mod sim;
+pub mod sync;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,142 @@
+//! RollMux CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   exp <id> [--seed N] [--scale F] [--gantt]   regenerate a paper table/figure
+//!   exp all  [...]                              run every experiment
+//!   list                                        list experiment ids
+//!   run [--seed N] [--scale F]                  admit a synthetic trace live
+//!   info                                        print cluster + artifact info
+//!
+//! (Arg parsing is hand-rolled: this offline build has no clap — see
+//! Cargo.toml.)
+
+use rollmux::exp::{self, ExpOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = args.iter();
+    match it.next().map(String::as_str) {
+        Some("exp") => {
+            let id = it.next().cloned().unwrap_or_else(|| {
+                eprintln!("usage: rollmux exp <id>|all [--seed N] [--scale F] [--gantt]");
+                std::process::exit(2);
+            });
+            let opts = parse_opts(&args[2..]);
+            if id == "all" {
+                exp::run_all(&opts);
+            } else if !exp::run(&id, &opts) {
+                eprintln!("unknown experiment '{id}'; try `rollmux list`");
+                std::process::exit(2);
+            }
+        }
+        Some("list") => {
+            println!("experiments (rollmux exp <id>):");
+            for (name, desc, _) in exp::registry() {
+                println!("  {name:<8} {desc}");
+            }
+        }
+        Some("run") => {
+            let opts = parse_opts(&args[1..]);
+            serve_demo(&opts);
+        }
+        Some("info") => info(),
+        _ => {
+            eprintln!(
+                "rollmux — phase-level multiplexing for disaggregated RL post-training\n\
+                 usage: rollmux <exp|list|run|info> ...\n\
+                 try:   rollmux list"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_opts(rest: &[String]) -> ExpOpts {
+    let mut opts = ExpOpts::default();
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--seed" => {
+                i += 1;
+                opts.seed = rest.get(i).and_then(|s| s.parse().ok()).unwrap_or(opts.seed);
+            }
+            "--scale" => {
+                i += 1;
+                opts.scale = rest.get(i).and_then(|s| s.parse().ok()).unwrap_or(opts.scale);
+            }
+            "--gantt" => opts.gantt = true,
+            other => {
+                eprintln!("ignoring unknown flag {other}");
+            }
+        }
+        i += 1;
+    }
+    opts
+}
+
+/// Live demo: admit a small synthetic trace through Algorithm 1 and print
+/// each decision as it happens, then the final cluster state.
+fn serve_demo(opts: &ExpOpts) {
+    use rollmux::cluster::PhaseModel;
+    use rollmux::coordinator::inter::InterGroupScheduler;
+    use rollmux::util::rng::Rng;
+    use rollmux::workload::profiles::{table6_job, SimProfile};
+
+    let n = (12.0 * opts.scale).max(6.0) as usize;
+    let mut rng = Rng::new(opts.seed);
+    let mut sched = InterGroupScheduler::new(PhaseModel::default());
+    println!("admitting {n} jobs through Algorithm 1:\n");
+    for id in 0..n {
+        let slo = rng.uniform(1.0, 2.0);
+        let job = table6_job(id, SimProfile::Mixed, &mut rng, slo, 0.0, 10);
+        let name = job.name.clone();
+        let d = sched.schedule(job);
+        println!(
+            "job {id:>3} {name:<22} -> group {:<3} {:?} (marginal ${:.2}/h)",
+            d.group_id, d.kind, d.marginal_cost
+        );
+    }
+    println!(
+        "\ncluster: {} groups, {} H20 + {} H800 GPUs, ${:.2}/h total",
+        sched.groups.len(),
+        sched.gpus_in_use().0,
+        sched.gpus_in_use().1,
+        sched.total_cost_per_hour()
+    );
+    for g in &sched.groups {
+        println!(
+            "  group {:>2}: {} jobs, {}xH20-node {}xH800-node, cycle {:.0}s load {:.0}s",
+            g.id,
+            g.jobs.len(),
+            g.n_roll_nodes,
+            g.n_train_nodes,
+            g.t_cycle(),
+            g.t_load()
+        );
+    }
+}
+
+fn info() {
+    use rollmux::cluster::GpuKind;
+    println!("RollMux reproduction — see DESIGN.md / EXPERIMENTS.md");
+    for kind in [GpuKind::H20, GpuKind::H800] {
+        let s = kind.spec();
+        println!(
+            "  {:>5}: {:>6.1} TFLOPS, {:>3.0} GB HBM @ {:.2} TB/s, ${:.2}/h",
+            kind.name(),
+            s.tflops,
+            s.hbm_gb,
+            s.hbm_tbps,
+            s.cost_per_hour
+        );
+    }
+    for cfg in ["tiny", "small", "medium", "large"] {
+        let path = format!("artifacts/{cfg}/manifest.json");
+        let status = if std::path::Path::new(&path).exists() {
+            "built"
+        } else {
+            "missing (make artifacts)"
+        };
+        println!("  artifacts/{cfg}: {status}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Job-state memory management: actor footprints (paper Table 2), the
+//! host-DRAM residency ledger that backs warm starts (§3.2-C3, §4.1), and
+//! the cold/warm context-switch latency model (Fig. 4).
+
+pub mod footprint;
+pub mod residency;
+pub mod switching;
+
+pub use footprint::{rollout_footprint_gb, train_footprint_gb};
+pub use residency::ResidencyLedger;
+pub use switching::{cold_start_s, warm_start_s, SwitchModel};

@@ -1,0 +1,122 @@
+//! Host-DRAM residency ledger (paper §4.1 "memory residency" constraint).
+//!
+//! A co-execution group pins every member job's working set in the host
+//! memory of the nodes it is placed on, so that context switches are warm
+//! (DRAM→HBM) instead of cold (network/disk + control-plane rebuild). The
+//! ledger tracks per-node pinned bytes and refuses placements that exceed
+//! capacity — Algorithm 1 line 8.
+
+use std::collections::HashMap;
+
+use crate::cluster::node::NodeId;
+use crate::workload::job::JobId;
+
+#[derive(Clone, Debug)]
+pub struct ResidencyLedger {
+    capacity_gb: f64,
+    /// node -> (job -> pinned GB)
+    pinned: HashMap<NodeId, HashMap<JobId, f64>>,
+}
+
+impl ResidencyLedger {
+    pub fn new(capacity_gb: f64) -> Self {
+        ResidencyLedger { capacity_gb, pinned: HashMap::new() }
+    }
+
+    pub fn capacity_gb(&self) -> f64 {
+        self.capacity_gb
+    }
+
+    pub fn used_gb(&self, node: NodeId) -> f64 {
+        self.pinned.get(&node).map(|m| m.values().sum()).unwrap_or(0.0)
+    }
+
+    pub fn free_gb(&self, node: NodeId) -> f64 {
+        self.capacity_gb - self.used_gb(node)
+    }
+
+    pub fn can_fit(&self, node: NodeId, gb: f64) -> bool {
+        self.free_gb(node) >= gb
+    }
+
+    /// Pin `gb` of job state on `node`. Fails (returns false, no change)
+    /// if the node would exceed capacity.
+    pub fn pin(&mut self, node: NodeId, job: JobId, gb: f64) -> bool {
+        if !self.can_fit(node, gb) {
+            return false;
+        }
+        *self.pinned.entry(node).or_default().entry(job).or_insert(0.0) += gb;
+        true
+    }
+
+    /// Release all of a job's state on a node. Returns freed GB.
+    pub fn unpin(&mut self, node: NodeId, job: JobId) -> f64 {
+        self.pinned.get_mut(&node).and_then(|m| m.remove(&job)).unwrap_or(0.0)
+    }
+
+    /// Release a job everywhere (job completion).
+    pub fn unpin_all(&mut self, job: JobId) -> f64 {
+        let mut freed = 0.0;
+        for m in self.pinned.values_mut() {
+            freed += m.remove(&job).unwrap_or(0.0);
+        }
+        freed
+    }
+
+    /// Is the job's state resident on this node (warm-startable)?
+    pub fn is_resident(&self, node: NodeId, job: JobId) -> bool {
+        self.pinned.get(&node).is_some_and(|m| m.contains_key(&job))
+    }
+
+    /// Jobs resident on a node.
+    pub fn residents(&self, node: NodeId) -> Vec<JobId> {
+        let mut v: Vec<JobId> =
+            self.pinned.get(&node).map(|m| m.keys().cloned().collect()).unwrap_or_default();
+        v.sort_unstable();
+        v
+    }
+
+    /// Invariant check (used by proptests): no node over capacity.
+    pub fn check_invariant(&self) -> bool {
+        self.pinned.keys().all(|&n| self.used_gb(n) <= self.capacity_gb + 1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_unpin_cycle() {
+        let mut l = ResidencyLedger::new(100.0);
+        assert!(l.pin(0, 1, 60.0));
+        assert!(l.is_resident(0, 1));
+        assert!(!l.pin(0, 2, 50.0), "over capacity must be refused");
+        assert!(l.pin(0, 2, 40.0));
+        assert!((l.free_gb(0) - 0.0).abs() < 1e-9);
+        assert_eq!(l.unpin(0, 1), 60.0);
+        assert!(l.pin(0, 3, 55.0));
+        assert!(l.check_invariant());
+    }
+
+    #[test]
+    fn unpin_all_spans_nodes() {
+        let mut l = ResidencyLedger::new(100.0);
+        l.pin(0, 7, 10.0);
+        l.pin(1, 7, 20.0);
+        l.pin(1, 8, 5.0);
+        assert_eq!(l.unpin_all(7), 30.0);
+        assert!(!l.is_resident(0, 7));
+        assert!(l.is_resident(1, 8));
+    }
+
+    #[test]
+    fn refused_pin_leaves_state_unchanged() {
+        let mut l = ResidencyLedger::new(50.0);
+        l.pin(0, 1, 30.0);
+        let before = l.used_gb(0);
+        assert!(!l.pin(0, 2, 30.0));
+        assert_eq!(l.used_gb(0), before);
+        assert!(!l.is_resident(0, 2));
+    }
+}

@@ -1,0 +1,147 @@
+//! Metrics export: structured (JSON) dumps of simulation and baseline
+//! results for offline plotting, plus compact human summaries.
+
+use std::path::Path;
+
+use crate::baselines::BaselineResult;
+use crate::sim::engine::SimResult;
+use crate::sim::gantt;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Full structured dump of a simulation result.
+pub fn sim_result_json(r: &SimResult) -> Json {
+    let outcomes = {
+        let mut ids: Vec<_> = r.outcomes.keys().copied().collect();
+        ids.sort_unstable();
+        arr(ids
+            .into_iter()
+            .map(|id| {
+                let o = &r.outcomes[&id];
+                obj(vec![
+                    ("job", num(id as f64)),
+                    ("arrival_s", num(o.arrival_s)),
+                    ("finish_s", num(o.finish_s)),
+                    ("solo_est_s", num(o.solo_est_s)),
+                    ("solo_actual_s", num(o.solo_actual_s)),
+                    ("slo", num(o.slo)),
+                    ("slowdown", num(o.slowdown())),
+                    ("slo_met", Json::Bool(o.slo_met())),
+                    ("iters", num(o.iters as f64)),
+                    ("migrations", num(o.migrations as f64)),
+                ])
+            })
+            .collect())
+    };
+    let (rb, tb) = r.bubble_fracs();
+    obj(vec![
+        ("cost_usd", num(r.cost_usd)),
+        ("avg_cost_per_hour", num(r.avg_cost_per_hour)),
+        ("slo_attainment", num(r.slo_attainment())),
+        ("iters_per_kusd", num(r.iters_per_kusd())),
+        ("peak_roll_gpus", num(r.peak_roll_gpus as f64)),
+        ("peak_train_gpus", num(r.peak_train_gpus as f64)),
+        ("roll_bubble", num(rb)),
+        ("train_bubble", num(tb)),
+        ("makespan_s", num(r.makespan_s)),
+        (
+            "usage_curve",
+            arr(r.usage_curve
+                .iter()
+                .map(|&(t, rg, tg)| arr(vec![num(t), num(rg as f64), num(tg as f64)]))
+                .collect()),
+        ),
+        ("timeline", gantt::to_json(&r.records)),
+        ("outcomes", outcomes),
+    ])
+}
+
+/// Structured dump of an analytic baseline result.
+pub fn baseline_json(r: &BaselineResult) -> Json {
+    obj(vec![
+        ("name", s(&r.name)),
+        ("cost_usd", num(r.cost_usd)),
+        ("avg_cost_per_hour", num(r.avg_cost_per_hour)),
+        ("slo_attainment", num(r.slo_attainment)),
+        ("iters_per_kusd", num(r.iters_per_kusd)),
+        ("peak_roll_gpus", num(r.peak_roll_gpus as f64)),
+        ("peak_train_gpus", num(r.peak_train_gpus as f64)),
+        ("roll_bubble", num(r.roll_bubble)),
+        ("train_bubble", num(r.train_bubble)),
+        ("makespan_s", num(r.makespan_s)),
+    ])
+}
+
+/// One-line human summary of a simulation result.
+pub fn summary(name: &str, r: &SimResult) -> String {
+    let (rb, tb) = r.bubble_fracs();
+    format!(
+        "{name}: ${:.0}/h avg (${:.1}k total), SLO {:.1}%, peak {}+{} GPUs, bubbles {:.0}%/{:.0}%",
+        r.avg_cost_per_hour,
+        r.cost_usd / 1000.0,
+        100.0 * r.slo_attainment(),
+        r.peak_roll_gpus,
+        r.peak_train_gpus,
+        100.0 * rb,
+        100.0 * tb
+    )
+}
+
+/// Write any Json to a file (pretty enough for diffing: compact JSON).
+pub fn write_json(path: impl AsRef<Path>, j: &Json) -> std::io::Result<()> {
+    std::fs::write(path, j.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{run_rollmux, SimConfig};
+    use crate::workload::job::{JobSpec, PhaseSpec};
+
+    fn small_result() -> SimResult {
+        let trace = vec![JobSpec {
+            id: 0,
+            name: "j".into(),
+            arrival_s: 0.0,
+            n_iters: 3,
+            slo: 2.0,
+            n_roll_gpus: 8,
+            n_train_gpus: 8,
+            params_b: 7.0,
+            phases: PhaseSpec::Direct { t_roll: 50.0, t_train: 30.0, cv: 0.0 },
+        }];
+        run_rollmux(SimConfig { record_gantt: true, ..Default::default() }, trace)
+    }
+
+    #[test]
+    fn json_roundtrips_and_has_fields() {
+        let r = small_result();
+        let j = sim_result_json(&r);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert!(parsed.get("cost_usd").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(parsed.get("slo_attainment").unwrap().as_f64(), Some(1.0));
+        let outs = parsed.get("outcomes").unwrap().as_arr().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].get("iters").unwrap().as_usize(), Some(3));
+        assert!(!parsed.get("timeline").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn summary_is_compact() {
+        let r = small_result();
+        let line = summary("test", &r);
+        assert!(line.contains("SLO 100.0%"));
+        assert!(line.len() < 160);
+    }
+
+    #[test]
+    fn write_json_to_disk() {
+        let r = small_result();
+        let dir = std::env::temp_dir().join(format!("rollmux_metrics_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("result.json");
+        write_json(&path, &sim_result_json(&r)).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(back.get("makespan_s").is_some());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

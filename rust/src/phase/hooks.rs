@@ -1,0 +1,84 @@
+//! Runtime hooks (@rollmux.runtime_hook, paper §5.1): progress and
+//! transition events flowing from executing phases to the scheduler.
+
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum HookEvent {
+    /// (job, phase name, fraction complete in [0,1]) — e.g. token
+    /// generation progress; drives long-tail migration detection.
+    Progress(usize, &'static str, f64),
+    /// Phase finished; scheduler should enqueue the job's next phase.
+    PhaseDone(usize, &'static str),
+}
+
+type Handler = Box<dyn Fn(&HookEvent) + Send + Sync>;
+
+/// Fan-out event bus. Clone-cheap.
+#[derive(Clone, Default)]
+pub struct HookBus {
+    handlers: Arc<Mutex<Vec<Handler>>>,
+    log: Arc<Mutex<Vec<HookEvent>>>,
+}
+
+impl HookBus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn subscribe(&self, f: impl Fn(&HookEvent) + Send + Sync + 'static) {
+        self.handlers.lock().unwrap().push(Box::new(f));
+    }
+
+    pub fn emit(&self, ev: HookEvent) {
+        for h in self.handlers.lock().unwrap().iter() {
+            h(&ev);
+        }
+        self.log.lock().unwrap().push(ev);
+    }
+
+    /// Events seen so far (test/observability aid).
+    pub fn log(&self) -> Vec<HookEvent> {
+        self.log.lock().unwrap().clone()
+    }
+
+    /// True once `job`'s `phase` has reported progress >= `frac` —
+    /// the tail-bound detector of §4.3.
+    pub fn progress_reached(&self, job: usize, phase: &str, frac: f64) -> bool {
+        self.log
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|e| matches!(e, HookEvent::Progress(j, p, f) if *j == job && *p == phase && *f >= frac))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn handlers_fire() {
+        let bus = HookBus::new();
+        let n = Arc::new(AtomicUsize::new(0));
+        let n2 = n.clone();
+        bus.subscribe(move |_| {
+            n2.fetch_add(1, Ordering::SeqCst);
+        });
+        bus.emit(HookEvent::Progress(1, "rollout", 0.5));
+        bus.emit(HookEvent::PhaseDone(1, "rollout"));
+        assert_eq!(n.load(Ordering::SeqCst), 2);
+        assert_eq!(bus.log().len(), 2);
+    }
+
+    #[test]
+    fn tail_detection() {
+        let bus = HookBus::new();
+        bus.emit(HookEvent::Progress(3, "rollout", 0.5));
+        assert!(!bus.progress_reached(3, "rollout", 0.8));
+        bus.emit(HookEvent::Progress(3, "rollout", 0.85));
+        assert!(bus.progress_reached(3, "rollout", 0.8));
+        assert!(!bus.progress_reached(4, "rollout", 0.8));
+    }
+}

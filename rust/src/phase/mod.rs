@@ -1,0 +1,15 @@
+//! Phase-centric control plane (paper §5.1).
+//!
+//! Phases — not jobs — are the schedulable entities. A [`PhaseBroker`]
+//! owns one FIFO queue per resource pool; a phase blocks in `acquire`
+//! until it holds a *run permit* (the @rollmux.phase decorator's shim in
+//! the paper), runs, and releases on drop. A [`HookBus`] carries runtime
+//! hooks: phase progress (token generation fraction) and transitions, the
+//! signals the intra-group scheduler uses for round-robin hand-off and
+//! long-tail migration.
+
+pub mod broker;
+pub mod hooks;
+
+pub use broker::{PhaseBroker, PhaseGuard, ResourceId};
+pub use hooks::{HookBus, HookEvent};

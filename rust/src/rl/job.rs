@@ -1,0 +1,136 @@
+//! A live RL post-training job: the Rollout → Train → Sync loop over the
+//! PJRT runtime, with per-phase timing the control plane consumes.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::{ModelRuntime, TrainState};
+use crate::util::rng::Rng;
+
+use super::tasks::{advantages_from_rewards, Task};
+
+/// One iteration's log entry.
+#[derive(Clone, Debug)]
+pub struct IterLog {
+    pub iter: usize,
+    pub mean_reward: f64,
+    pub loss: f32,
+    pub entropy: f32,
+    pub t_roll_s: f64,
+    pub t_train_s: f64,
+    pub t_sync_s: f64,
+}
+
+pub struct RlJob {
+    pub name: String,
+    pub runtime: Arc<ModelRuntime>,
+    pub task: Arc<dyn Task>,
+    pub lr: f32,
+    pub temperature: f32,
+    /// Entropy-bonus coefficient (collapse prevention).
+    pub ent_coef: f32,
+    /// Training mini-epochs per iteration (PPO-style re-use of the batch).
+    pub train_epochs: usize,
+    pub state: TrainState,
+    pub iter: usize,
+    pub history: Vec<IterLog>,
+    rng: Rng,
+    /// Rollout-side parameter copy (the disaggregated "inference actor"):
+    /// rollout always reads these, which are only refreshed by sync —
+    /// making the on-policy dependency explicit in the data plane.
+    rollout_params: Vec<xla::Literal>,
+}
+
+impl RlJob {
+    pub fn new(name: &str, runtime: Arc<ModelRuntime>, task: Arc<dyn Task>, seed: u64) -> Result<RlJob> {
+        let state = runtime.init(seed as i32)?;
+        let rollout_params = clone_params(&state.params)?;
+        Ok(RlJob {
+            name: name.to_string(),
+            runtime,
+            task,
+            lr: 2e-3,
+            temperature: 1.0,
+            ent_coef: 0.01,
+            train_epochs: 1,
+            state,
+            iter: 0,
+            history: Vec::new(),
+            rng: Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15),
+            rollout_params,
+        })
+    }
+
+    /// Rollout phase: generate a batch of trajectories with the *rollout*
+    /// parameter copy and score them with the task verifier.
+    pub fn rollout_phase(&mut self) -> Result<(Vec<i32>, Vec<f64>, f32)> {
+        let rt = &self.runtime;
+        let (b, t, p, v) = (rt.batch(), rt.seq_len(), rt.prompt_len(), rt.vocab());
+        let prompts = self.task.make_prompts(&mut self.rng, b, t, p, v);
+        let seed = (self.iter as i32).wrapping_mul(2654435761u32 as i32) ^ 17;
+        let out = rt.rollout(&self.rollout_params, &prompts, seed, self.temperature)?;
+        let rewards: Vec<f64> = (0..b)
+            .map(|bi| self.task.reward(&out.tokens[bi * t..(bi + 1) * t], p, v))
+            .collect();
+        Ok((out.tokens, rewards, out.entropy))
+    }
+
+    /// Training phase: policy-gradient step on the collected batch.
+    pub fn train_phase(&mut self, tokens: &[i32], rewards: &[f64]) -> Result<(f32, f32)> {
+        let rt = &self.runtime;
+        let (b, t, p) = (rt.batch(), rt.seq_len(), rt.prompt_len());
+        let mut mask = vec![0f32; b * t];
+        for bi in 0..b {
+            for ti in p..t {
+                mask[bi * t + ti] = 1.0;
+            }
+        }
+        let adv = advantages_from_rewards(rewards);
+        let mut out = rt.train(&mut self.state, tokens, &mask, &adv, self.lr, self.ent_coef)?;
+        for _ in 1..self.train_epochs {
+            out = rt.train(&mut self.state, tokens, &mask, &adv, self.lr, self.ent_coef)?;
+        }
+        Ok((out.loss, out.entropy))
+    }
+
+    /// Sync phase: propagate updated parameters to the rollout actor
+    /// (host-side copy here; the cross-cluster variant streams shards —
+    /// sync::plan models its cost, the end_to_end example charges it).
+    pub fn sync_phase(&mut self) -> Result<usize> {
+        self.rollout_params = clone_params(&self.state.params)?;
+        Ok(self.rollout_params.iter().map(|l| l.size_bytes()).sum())
+    }
+
+    /// One full on-policy iteration (no external scheduling).
+    pub fn run_iteration(&mut self) -> Result<IterLog> {
+        let t0 = std::time::Instant::now();
+        let (tokens, rewards, _ent) = self.rollout_phase()?;
+        let t_roll = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let (loss, entropy) = self.train_phase(&tokens, &rewards)?;
+        let t_train = t1.elapsed().as_secs_f64();
+
+        let t2 = std::time::Instant::now();
+        self.sync_phase()?;
+        let t_sync = t2.elapsed().as_secs_f64();
+
+        let log = IterLog {
+            iter: self.iter,
+            mean_reward: crate::util::stats::mean(&rewards),
+            loss,
+            entropy,
+            t_roll_s: t_roll,
+            t_train_s: t_train,
+            t_sync_s: t_sync,
+        };
+        self.history.push(log.clone());
+        self.iter += 1;
+        Ok(log)
+    }
+}
+
+fn clone_params(params: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    params.iter().map(crate::runtime::model::clone_lit).collect()
+}

@@ -1,0 +1,13 @@
+//! The real on-policy RL loop over the PJRT runtime.
+//!
+//! This is the workload half of the end-to-end validation (DESIGN.md §7):
+//! actual RL post-training jobs — synthetic verifiable-reward tasks over
+//! the AOT-compiled transformer — whose rollout/train/sync phases the
+//! RollMux control plane (phase::PhaseBroker) multiplexes across worker
+//! pools.
+
+pub mod job;
+pub mod tasks;
+
+pub use job::{IterLog, RlJob};
+pub use tasks::{advantages_from_rewards, CountingTask, EchoTask, Task};

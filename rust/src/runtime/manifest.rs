@@ -1,0 +1,175 @@
+//! Artifact manifest parsing (`artifacts/<config>/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("arg").to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing dtype"))?
+                .to_string(),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model geometry captured at AOT time.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub param_count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub param_leaves: Vec<TensorSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let c = j.get("config").ok_or_else(|| anyhow!("missing config"))?;
+        let us = |k: &str| -> Result<usize> {
+            c.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("missing config.{k}"))
+        };
+        let config = ModelConfig {
+            name: c.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+            vocab: us("vocab")?,
+            d_model: us("d_model")?,
+            n_layers: us("n_layers")?,
+            n_heads: us("n_heads")?,
+            seq_len: us("seq_len")?,
+            batch: us("batch")?,
+            prompt_len: us("prompt_len")?,
+            param_count: us("param_count")?,
+        };
+
+        let param_leaves = j
+            .get("param_leaves")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing param_leaves"))?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+            .iter()
+            .map(|a| {
+                let name = a.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+                let file = dir.join(a.get("file").and_then(Json::as_str).unwrap_or(""));
+                let specs = |k: &str| -> Result<Vec<TensorSpec>> {
+                    a.get(k)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("artifact {name}: missing {k}"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect()
+                };
+                Ok(ArtifactSpec { inputs: specs("inputs")?, outputs: specs("outputs")?, name, file })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest { dir, config, param_leaves, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Total bytes of one parameter set (f32).
+    pub fn param_bytes(&self) -> usize {
+        self.param_leaves.iter().map(|l| l.elements() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/tiny not built");
+            return;
+        };
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.config.name, "tiny");
+        assert_eq!(m.config.vocab, 256);
+        assert!(m.config.param_count > 100_000);
+        for name in ["init", "rollout_step", "rollout_phase", "train_step", "forward"] {
+            let a = m.artifact(name).unwrap();
+            assert!(a.file.exists(), "{:?} missing", a.file);
+            assert!(!a.outputs.is_empty());
+        }
+        // init: seed -> params ++ m ++ v (3x the param leaves).
+        let init = m.artifact("init").unwrap();
+        assert_eq!(init.inputs.len(), 1);
+        assert_eq!(init.outputs.len(), 3 * m.param_leaves.len());
+        // train_step inputs: 3n state + step + tokens + mask + adv + lr + ent_coef.
+        let train = m.artifact("train_step").unwrap();
+        assert_eq!(train.inputs.len(), 3 * m.param_leaves.len() + 6);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/nowhere").is_err());
+    }
+}

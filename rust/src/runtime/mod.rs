@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO artifacts emitted by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at request time: the artifacts are compiled once
+//! (`make artifacts`), and this module is the only bridge — HLO text →
+//! `HloModuleProto::from_text_file` → `PjRtClient::compile` → `execute`.
+//! Model/optimizer state lives host-side as `xla::Literal`s between calls
+//! (the in-process analog of the paper's host-DRAM actor cache: PJRT
+//! returns a tuple buffer per execution, so state round-trips through the
+//! host — see DESIGN.md §2).
+
+pub mod manifest;
+pub mod model;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use model::{ModelRuntime, RolloutOut, TrainOut, TrainState};

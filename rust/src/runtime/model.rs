@@ -1,0 +1,226 @@
+//! Typed execution of the model artifacts over a PJRT CPU client.
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// Model + optimizer state, host-resident between executions (the
+/// in-process actor cache; see module docs in `runtime`).
+pub struct TrainState {
+    /// Flattened parameter leaves in manifest order.
+    pub params: Vec<xla::Literal>,
+    /// Adam first/second moments, same order.
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    /// Optimizer step counter.
+    pub step: i32,
+}
+
+impl TrainState {
+    /// Approximate host bytes held by this state (weights + moments).
+    pub fn resident_bytes(&self) -> usize {
+        self.params
+            .iter()
+            .chain(&self.m)
+            .chain(&self.v)
+            .map(|l| l.size_bytes())
+            .sum()
+    }
+}
+
+pub struct RolloutOut {
+    /// Completed token grid [B, T] (prompt + generated).
+    pub tokens: Vec<i32>,
+    /// Mean sampling entropy (nats) — the rollout progress signal.
+    pub entropy: f32,
+}
+
+pub struct TrainOut {
+    pub loss: f32,
+    pub entropy: f32,
+}
+
+/// A compiled model: PJRT executables for each phase function.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    init: xla::PjRtLoadedExecutable,
+    rollout_step: xla::PjRtLoadedExecutable,
+    rollout_phase: xla::PjRtLoadedExecutable,
+    train_step: xla::PjRtLoadedExecutable,
+    forward: xla::PjRtLoadedExecutable,
+}
+
+fn compile(client: &xla::PjRtClient, a: &ArtifactSpec) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        a.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("loading HLO text {:?}", a.file))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {}", a.name))
+}
+
+impl ModelRuntime {
+    /// Load and compile every artifact of a config directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(ModelRuntime {
+            init: compile(&client, manifest.artifact("init")?)?,
+            rollout_step: compile(&client, manifest.artifact("rollout_step")?)?,
+            rollout_phase: compile(&client, manifest.artifact("rollout_phase")?)?,
+            train_step: compile(&client, manifest.artifact("train_step")?)?,
+            forward: compile(&client, manifest.artifact("forward")?)?,
+            client,
+            manifest,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.config.batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.manifest.config.seq_len
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.manifest.config.prompt_len
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.manifest.config.vocab
+    }
+
+    /// Execute and untuple (the PJRT wrapper returns one tuple buffer).
+    /// Takes references: parameter literals stay host-resident across
+    /// calls and are never copied on dispatch.
+    fn exec(&self, exe: &xla::PjRtLoadedExecutable, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<&xla::Literal>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// The Init phase: build (params, m, v) from an integer seed.
+    pub fn init(&self, seed: i32) -> Result<TrainState> {
+        let seed = xla::Literal::scalar(seed);
+        let outs = self.exec(&self.init, &[&seed])?;
+        let n = self.manifest.param_leaves.len();
+        ensure!(outs.len() == 3 * n, "init returned {} leaves, want {}", outs.len(), 3 * n);
+        let mut it = outs.into_iter();
+        let params: Vec<_> = it.by_ref().take(n).collect();
+        let m: Vec<_> = it.by_ref().take(n).collect();
+        let v: Vec<_> = it.collect();
+        Ok(TrainState { params, m, v, step: 0 })
+    }
+
+    fn tokens_literal(&self, tokens: &[i32]) -> Result<xla::Literal> {
+        let (b, t) = (self.batch(), self.seq_len());
+        ensure!(tokens.len() == b * t, "tokens len {} != {}x{}", tokens.len(), b, t);
+        Ok(xla::Literal::vec1(tokens).reshape(&[b as i64, t as i64])?)
+    }
+
+    /// One whole rollout phase in a single dispatch (generation loop is
+    /// inside the HLO — the fast path).
+    pub fn rollout(&self, params: &[xla::Literal], prompt_tokens: &[i32], seed: i32, temperature: f32) -> Result<RolloutOut> {
+        let extras = [
+            self.tokens_literal(prompt_tokens)?,
+            xla::Literal::scalar(seed),
+            xla::Literal::scalar(temperature),
+        ];
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 3);
+        args.extend(params.iter());
+        args.extend(extras.iter());
+        let outs = self.exec(&self.rollout_phase, &args)?;
+        ensure!(outs.len() == 2, "rollout_phase returned {}", outs.len());
+        Ok(RolloutOut {
+            tokens: outs[0].to_vec::<i32>()?,
+            entropy: outs[1].get_first_element::<f32>()?,
+        })
+    }
+
+    /// One decode step (hook-driven path: the caller observes progress
+    /// between steps, enabling phase-level preemption/migration hooks).
+    pub fn rollout_one_step(&self, params: &[xla::Literal], tokens: &[i32], pos: i32, seed: i32, temperature: f32) -> Result<(Vec<i32>, f32)> {
+        let extras = [
+            self.tokens_literal(tokens)?,
+            xla::Literal::scalar(pos),
+            xla::Literal::scalar(seed),
+            xla::Literal::scalar(temperature),
+        ];
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 4);
+        args.extend(params.iter());
+        args.extend(extras.iter());
+        let outs = self.exec(&self.rollout_step, &args)?;
+        Ok((outs[0].to_vec::<i32>()?, outs[1].get_first_element::<f32>()?))
+    }
+
+    /// One entropy-regularized policy-gradient + Adam training step;
+    /// updates `state` in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(&self, state: &mut TrainState, tokens: &[i32], mask: &[f32], advantages: &[f32], lr: f32, ent_coef: f32) -> Result<TrainOut> {
+        let (b, t) = (self.batch(), self.seq_len());
+        ensure!(mask.len() == b * t && advantages.len() == b);
+        let n = self.manifest.param_leaves.len();
+        let extras = [
+            xla::Literal::scalar(state.step),
+            self.tokens_literal(tokens)?,
+            xla::Literal::vec1(mask).reshape(&[b as i64, t as i64])?,
+            xla::Literal::vec1(advantages),
+            xla::Literal::scalar(lr),
+            xla::Literal::scalar(ent_coef),
+        ];
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 6);
+        for set in [&state.params, &state.m, &state.v] {
+            args.extend(set.iter());
+        }
+        args.extend(extras.iter());
+        let outs = self.exec(&self.train_step, &args)?;
+        ensure!(outs.len() == 3 * n + 2, "train_step returned {}", outs.len());
+        let mut it = outs.into_iter();
+        state.params = it.by_ref().take(n).collect();
+        state.m = it.by_ref().take(n).collect();
+        state.v = it.by_ref().take(n).collect();
+        let loss = it.next().unwrap().get_first_element::<f32>()?;
+        let entropy = it.next().unwrap().get_first_element::<f32>()?;
+        state.step += 1;
+        Ok(TrainOut { loss, entropy })
+    }
+
+    /// Full-precision logits (test/debug path).
+    pub fn logits(&self, params: &[xla::Literal], tokens: &[i32]) -> Result<Vec<f32>> {
+        let toks = self.tokens_literal(tokens)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 1);
+        args.extend(params.iter());
+        args.push(&toks);
+        let outs = self.exec(&self.forward, &args)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Literal has no Clone; round-trip through raw bytes (used by the state
+/// checkpoint/restore path in rl::actor_cache).
+pub fn clone_lit(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let ty = shape.primitive_type();
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let mut out = xla::Literal::create_from_shape(ty, &dims);
+    match l.ty()? {
+        xla::ElementType::F32 => {
+            let v = l.to_vec::<f32>()?;
+            out.copy_raw_from(&v)?;
+        }
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>()?;
+            out.copy_raw_from(&v)?;
+        }
+        other => anyhow::bail!("unsupported dtype {other:?}"),
+    }
+    Ok(out)
+}

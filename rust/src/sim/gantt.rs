@@ -1,0 +1,129 @@
+//! ASCII gantt rendering of a simulated timeline (the left panels of the
+//! paper's Fig. 10), plus JSON export for offline plotting.
+
+use std::collections::BTreeMap;
+
+use super::engine::{PhaseKind, PhaseRecord};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Render a per-resource gantt chart. Each row is one resource lane
+/// (rollout node or a group's train pool); time is bucketed into `width`
+/// columns; cells show the job id (letter) running there.
+pub fn render(records: &[PhaseRecord], width: usize) -> String {
+    if records.is_empty() {
+        return "(empty timeline)\n".to_string();
+    }
+    let t_end = records.iter().map(|r| r.end).fold(0.0, f64::max);
+    let t0 = 0.0;
+    let scale = (t_end - t0) / width as f64;
+
+    // lane key -> label
+    let mut lanes: BTreeMap<String, Vec<(f64, f64, char)>> = BTreeMap::new();
+    for r in records {
+        let glyph = job_glyph(r.job);
+        match r.kind {
+            PhaseKind::Rollout => {
+                for &n in &r.roll_nodes {
+                    lanes
+                        .entry(format!("g{}/roll{:02}", r.group, n))
+                        .or_default()
+                        .push((r.start, r.end, glyph));
+                }
+            }
+            PhaseKind::Train => {
+                lanes
+                    .entry(format!("g{}/train ", r.group))
+                    .or_default()
+                    .push((r.start, r.end, glyph));
+            }
+            _ => {}
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "gantt: {:.0}s total, one column = {:.1}s; lanes are resources, letters are jobs\n",
+        t_end, scale
+    ));
+    for (label, spans) in lanes {
+        let mut row = vec!['.'; width];
+        for (start, end, glyph) in spans {
+            let a = ((start - t0) / scale) as usize;
+            let b = (((end - t0) / scale).ceil() as usize).min(width);
+            for c in row.iter_mut().take(b).skip(a.min(width)) {
+                *c = glyph;
+            }
+        }
+        out.push_str(&format!("{label:>12} |{}|\n", row.iter().collect::<String>()));
+    }
+    out
+}
+
+fn job_glyph(job: usize) -> char {
+    let alphabet = "ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz";
+    alphabet.chars().nth(job % alphabet.len()).unwrap()
+}
+
+/// JSON export of the raw timeline (for external plotting).
+pub fn to_json(records: &[PhaseRecord]) -> Json {
+    arr(records
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("job", num(r.job as f64)),
+                ("group", num(r.group as f64)),
+                (
+                    "kind",
+                    s(match r.kind {
+                        PhaseKind::Init => "init",
+                        PhaseKind::Rollout => "rollout",
+                        PhaseKind::Train => "train",
+                        PhaseKind::Sync => "sync",
+                    }),
+                ),
+                ("iter", num(r.iter as f64)),
+                ("start", num(r.start)),
+                ("end", num(r.end)),
+                (
+                    "roll_nodes",
+                    arr(r.roll_nodes.iter().map(|&n| num(n as f64)).collect()),
+                ),
+            ])
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(job: usize, kind: PhaseKind, start: f64, end: f64, nodes: Vec<usize>) -> PhaseRecord {
+        PhaseRecord { job, group: 0, kind, iter: 0, start, end, roll_nodes: nodes }
+    }
+
+    #[test]
+    fn renders_lanes() {
+        let records = vec![
+            rec(0, PhaseKind::Rollout, 0.0, 50.0, vec![0]),
+            rec(0, PhaseKind::Train, 50.0, 80.0, vec![]),
+            rec(1, PhaseKind::Rollout, 50.0, 100.0, vec![0]),
+        ];
+        let g = render(&records, 20);
+        assert!(g.contains("g0/roll00"));
+        assert!(g.contains("g0/train"));
+        assert!(g.contains('A') && g.contains('B'));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let records = vec![rec(3, PhaseKind::Sync, 1.0, 2.0, vec![])];
+        let j = to_json(&records);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.idx(0).unwrap().get("kind").unwrap().as_str(), Some("sync"));
+    }
+
+    #[test]
+    fn empty_timeline() {
+        assert!(render(&[], 10).contains("empty"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Discrete-event cluster simulator.
+//!
+//! Replays job traces against a pluggable group scheduler (RollMux's
+//! Algorithm 1 or the §7.5 baselines), executing phases with sampled
+//! stochastic durations on the groups' node pools, applying warm/cold
+//! context switches, hierarchical model sync, and long-tail migration.
+//! This is the substrate standing in for the paper's 656-GPU testbed
+//! (DESIGN.md §2): every reported metric — provisioning cost, GPU usage,
+//! bubbles, SLO attainment — is computed from the event timeline.
+
+pub mod engine;
+pub mod gantt;
+
+pub use engine::{GroupScheduler, PhaseKind, PhaseRecord, SimConfig, SimResult, Simulator};

@@ -1,0 +1,20 @@
+//! Cross-cluster model synchronization (paper §5.2, Fig. 8, Fig. 12).
+//!
+//! After each training phase the updated parameters must move from the
+//! training cluster (H800) to the rollout cluster (H20). The two clusters
+//! are joined by a slow Ethernet link (20 Gbps in the paper's testbed)
+//! while each cluster has a fast internal fabric (400 Gbps InfiniBand +
+//! NVLink inside a node). Two strategies are modeled:
+//!
+//!  * `flat_allgather` — the veRL-style baseline: every rollout GPU
+//!    independently fetches a full parameter copy across the slow link.
+//!  * `hierarchical` — RollMux: (1) inter-cluster scatter: the model is
+//!    split into N shards, each training GPU streams one shard to a peer
+//!    rollout GPU over parallel P2P streams (exactly ONE model copy
+//!    crosses the slow link); (2) intra-cluster broadcast over IB/NVLink.
+
+pub mod plan;
+pub mod topology;
+
+pub use plan::{sync_time_s, SyncPlan, SyncScheme};
+pub use topology::NetworkTopology;

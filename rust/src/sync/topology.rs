@@ -1,0 +1,52 @@
+//! Network topology constants for the disaggregated testbed (paper §7.1).
+
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkTopology {
+    /// Cross-cluster Ethernet, bits/s (paper: 20 Gbps, shared).
+    pub inter_cluster_bps: f64,
+    /// Intra-cluster InfiniBand per node, bits/s (paper: 400 Gbps).
+    pub intra_cluster_bps: f64,
+    /// Intra-node NVLink aggregate, bytes/s (H800-class: ~400 GB/s eff.).
+    pub nvlink_bytes_ps: f64,
+    /// Per-transfer software latency (connection setup, NCCL launch), s.
+    pub alpha_s: f64,
+    /// Fraction of nominal bandwidth achieved by bulk transfers.
+    pub efficiency: f64,
+}
+
+impl Default for NetworkTopology {
+    fn default() -> Self {
+        NetworkTopology {
+            inter_cluster_bps: 20e9,
+            intra_cluster_bps: 400e9,
+            nvlink_bytes_ps: 400e9,
+            alpha_s: 0.15,
+            efficiency: 0.85,
+        }
+    }
+}
+
+impl NetworkTopology {
+    /// Effective cross-cluster bandwidth in bytes/s.
+    pub fn inter_bytes_ps(&self) -> f64 {
+        self.inter_cluster_bps / 8.0 * self.efficiency
+    }
+
+    /// Effective per-node IB bandwidth in bytes/s.
+    pub fn intra_bytes_ps(&self) -> f64 {
+        self.intra_cluster_bps / 8.0 * self.efficiency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_hierarchy() {
+        let t = NetworkTopology::default();
+        // The whole point: intra-cluster is ~20x faster than inter-cluster.
+        assert!(t.intra_bytes_ps() / t.inter_bytes_ps() >= 10.0);
+        assert!(t.nvlink_bytes_ps > t.intra_bytes_ps());
+    }
+}

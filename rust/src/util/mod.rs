@@ -1,0 +1,82 @@
+//! Support layer: PRNG, JSON, stats, tables, timing.
+//!
+//! This environment is offline with only the `xla` + `anyhow` crate closure
+//! vendored, so the conveniences that would normally come from rand/serde/
+//! criterion live here instead (see Cargo.toml note).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Simple benchmark helper used by the harness=false bench binaries:
+/// warms up, then reports mean/p50/p99 over `iters` runs of `f`.
+pub struct BenchStats {
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub iters: usize,
+}
+
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchStats {
+        mean_s: stats::mean(&samples),
+        p50_s: stats::percentile(&samples, 50.0),
+        p99_s: stats::percentile(&samples, 99.0),
+        iters,
+    }
+}
+
+impl BenchStats {
+    pub fn report(&self, name: &str) {
+        println!(
+            "{name:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  (n={})",
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p99_s),
+            self.iters
+        );
+    }
+}
+
+/// Human duration: ns/us/ms/s autoscaled.
+pub fn fmt_dur(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(super::fmt_dur(2e-9).ends_with("ns"));
+        assert!(super::fmt_dur(2e-5).ends_with("us"));
+        assert!(super::fmt_dur(2e-2).ends_with("ms"));
+        assert!(super::fmt_dur(2.0).ends_with(" s"));
+    }
+}

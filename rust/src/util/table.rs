@@ -1,0 +1,115 @@
+//! ASCII table rendering for the experiment harness (the `rollmux exp ...`
+//! commands print paper-style rows with this).
+
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push(' ');
+                s.push_str(cell);
+                s.push_str(&" ".repeat(widths[c] - cell.len() + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with the given number of decimals.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, x)
+}
+
+/// Format a ratio as "1.84x".
+pub fn ratio(x: f64) -> String {
+    format!("{:.2}x", x)
+}
+
+/// Format a fraction as a percentage.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("t", &["a", "bbbb"]);
+        t.row(vec!["xxxxx".into(), "1".into()]);
+        let r = t.render();
+        assert!(r.contains("| a     | bbbb |"));
+        assert!(r.contains("| xxxxx | 1    |"));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(f(1.2345, 2), "1.23");
+        assert_eq!(ratio(1.839), "1.84x");
+        assert_eq!(pct(0.999), "99.9%");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        Table::new("t", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+}

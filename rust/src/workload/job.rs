@@ -1,0 +1,209 @@
+//! RL post-training job specifications.
+//!
+//! A job is the unit the inter-group scheduler admits; its phases are the
+//! units the intra-group scheduler runs. Phase durations come from one of
+//! two sources: the roofline model over a model architecture (testbed-style
+//! experiments, §7.2-7.4) or direct (T_roll, T_train) draws (the Table 6
+//! simulation profiles, §7.5).
+
+use crate::cluster::roofline::{PhaseInputs, PhaseModel, PhaseTimes};
+use crate::cluster::GpuKind;
+use crate::memory::{rollout_footprint_gb, train_footprint_gb};
+use crate::util::rng::Rng;
+use crate::workload::lengths::{summarize_batch, BatchLengths, LengthDist};
+
+pub type JobId = usize;
+
+/// How phase durations are derived.
+#[derive(Clone, Debug)]
+pub enum PhaseSpec {
+    /// Roofline model over an architecture + heavy-tailed lengths.
+    Roofline { inputs: PhaseInputs, lengths: LengthDist },
+    /// Direct durations (Table 6 style); `cv` adds lognormal jitter and the
+    /// implied tail shape is taken from a production LengthDist.
+    Direct { t_roll: f64, t_train: f64, cv: f64 },
+}
+
+/// One RL post-training job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub name: String,
+    /// Arrival time into the cluster, seconds.
+    pub arrival_s: f64,
+    /// Iterations to run (defines job length together with phase times).
+    pub n_iters: usize,
+    /// SLO: tolerated slowdown of iteration time vs solo execution (>1).
+    pub slo: f64,
+    /// GPUs the job requests on each pool (Table 3's N_R / N_T).
+    pub n_roll_gpus: usize,
+    pub n_train_gpus: usize,
+    /// Model size in billions (drives memory footprints + switch costs).
+    pub params_b: f64,
+    pub phases: PhaseSpec,
+}
+
+/// Phase realization for one iteration, sampled by the simulator.
+#[derive(Clone, Copy, Debug)]
+pub struct IterSample {
+    pub t_roll: f64,
+    pub t_train: f64,
+    /// Fraction of t_roll at which MIGRATION_THRESHOLD of responses are
+    /// done (long-tail migration trigger point). 1.0 = no tail to migrate.
+    pub tail_start_frac: f64,
+    /// Fraction of rollout capacity the tail still needs after migration.
+    pub tail_gpu_frac: f64,
+}
+
+impl JobSpec {
+    /// Conservative worst-case phase estimate (paper §4.2: assume every
+    /// response reaches the max token limit). This is what admission
+    /// control plans against.
+    pub fn worst_case(&self, model: &PhaseModel) -> PhaseTimes {
+        match &self.phases {
+            PhaseSpec::Roofline { inputs, lengths } => {
+                let mut w = *inputs;
+                w.gate_gen_len = lengths.max_tokens;
+                w.mean_gen_len = lengths.max_tokens;
+                model.phase_times(&w, self.n_roll_gpus, self.n_train_gpus)
+            }
+            PhaseSpec::Direct { t_roll, t_train, cv } => {
+                // Worst case = +3 sigma of the jitter.
+                let k = 1.0 + 3.0 * cv;
+                PhaseTimes { t_roll: t_roll * k, t_train: t_train * k }
+            }
+        }
+    }
+
+    /// Expected (mean-length) phase estimate — used for reporting only,
+    /// never for admission.
+    pub fn expected(&self, model: &PhaseModel, rng: &mut Rng) -> PhaseTimes {
+        match &self.phases {
+            PhaseSpec::Roofline { inputs, lengths } => {
+                let mut w = *inputs;
+                let batch = lengths.sample_batch(rng, inputs.batch.min(512));
+                let b = summarize_batch(&batch);
+                w.gate_gen_len = b.max;
+                w.mean_gen_len = b.mean;
+                model.phase_times(&w, self.n_roll_gpus, self.n_train_gpus)
+            }
+            PhaseSpec::Direct { t_roll, t_train, .. } => {
+                PhaseTimes { t_roll: *t_roll, t_train: *t_train }
+            }
+        }
+    }
+
+    /// Sample one iteration's actual durations + tail shape.
+    pub fn sample_iter(&self, model: &PhaseModel, rng: &mut Rng) -> IterSample {
+        match &self.phases {
+            PhaseSpec::Roofline { inputs, lengths } => {
+                let batch = lengths.sample_batch(rng, inputs.batch.min(512));
+                let b: BatchLengths = summarize_batch(&batch);
+                let mut w = *inputs;
+                w.gate_gen_len = b.max;
+                w.mean_gen_len = b.mean;
+                let t = model.phase_times(&w, self.n_roll_gpus, self.n_train_gpus);
+                // Where in the rollout does the threshold fall? Durations
+                // scale ~linearly in the gating length.
+                let mut w80 = *inputs;
+                w80.gate_gen_len = b.threshold_len;
+                w80.mean_gen_len = b.mean.min(b.threshold_len);
+                let t80 = model.rollout_s(&w80, self.n_roll_gpus, GpuKind::H20);
+                IterSample {
+                    t_roll: t.t_roll,
+                    t_train: t.t_train,
+                    tail_start_frac: (t80 / t.t_roll).clamp(0.0, 1.0),
+                    tail_gpu_frac: (b.tail_frac * 1.5).clamp(0.05, 0.5),
+                }
+            }
+            PhaseSpec::Direct { t_roll, t_train, cv } => {
+                let jit = |rng: &mut Rng, base: f64| {
+                    if *cv <= 0.0 {
+                        base
+                    } else {
+                        let sigma = (1.0 + cv * cv).ln().sqrt();
+                        let mu = -0.5 * sigma * sigma;
+                        (base * rng.lognormal(mu, sigma)).min(base * (1.0 + 3.0 * cv))
+                    }
+                };
+                IterSample {
+                    t_roll: jit(rng, *t_roll),
+                    t_train: jit(rng, *t_train),
+                    // Production-like tail: 80% of work done ~60% in.
+                    tail_start_frac: rng.uniform(0.55, 0.8),
+                    tail_gpu_frac: rng.uniform(0.15, 0.3),
+                }
+            }
+        }
+    }
+
+    /// Host-DRAM footprint per rollout node (GB) — residency constraint.
+    pub fn mem_roll_gb(&self) -> f64 {
+        rollout_footprint_gb(self.params_b)
+    }
+
+    /// Host-DRAM footprint per training node (GB).
+    pub fn mem_train_gb(&self) -> f64 {
+        train_footprint_gb(self.params_b)
+    }
+
+    /// bf16 model bytes (for sync-time modeling).
+    pub fn model_bytes(&self) -> f64 {
+        2.0 * self.params_b * 1e9
+    }
+
+    /// Rollout nodes requested (8 GPUs per node).
+    pub fn n_roll_nodes(&self) -> usize {
+        self.n_roll_gpus.div_ceil(crate::cluster::node::GPUS_PER_NODE)
+    }
+
+    pub fn n_train_nodes(&self) -> usize {
+        self.n_train_gpus.div_ceil(crate::cluster::node::GPUS_PER_NODE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::profiles;
+
+    #[test]
+    fn worst_case_dominates_samples() {
+        // Admission-control soundness depends on this: no sampled
+        // iteration may exceed the conservative estimate.
+        let model = PhaseModel::default();
+        let mut rng = Rng::new(3);
+        for job in profiles::table3_jobs(0.0) {
+            let wc = job.worst_case(&model);
+            for _ in 0..200 {
+                let s = job.sample_iter(&model, &mut rng);
+                assert!(
+                    s.t_roll <= wc.t_roll * (1.0 + 1e-9),
+                    "{}: sampled roll {} > worst-case {}",
+                    job.name, s.t_roll, wc.t_roll
+                );
+                assert!(s.t_train <= wc.t_train * (1.0 + 1e-9));
+                assert!((0.0..=1.0).contains(&s.tail_start_frac));
+                assert!((0.0..=0.5).contains(&s.tail_gpu_frac));
+            }
+        }
+    }
+
+    #[test]
+    fn direct_jobs_jitter_bounded() {
+        let job = JobSpec {
+            id: 0, name: "d".into(), arrival_s: 0.0, n_iters: 10, slo: 1.5,
+            n_roll_gpus: 8, n_train_gpus: 8, params_b: 7.0,
+            phases: PhaseSpec::Direct { t_roll: 100.0, t_train: 50.0, cv: 0.2 },
+        };
+        let model = PhaseModel::default();
+        let wc = job.worst_case(&model);
+        assert!((wc.t_roll - 160.0).abs() < 1e-9);
+        let mut rng = Rng::new(5);
+        for _ in 0..500 {
+            let s = job.sample_iter(&model, &mut rng);
+            assert!(s.t_roll <= wc.t_roll && s.t_train <= wc.t_train);
+            assert!(s.t_roll > 0.0);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Heavy-tailed response-length model (paper §3.2-C2, Fig. 11-left).
+//!
+//! LLM rollout generation lengths follow a long-tailed distribution where a
+//! small fraction of "straggler" responses run to the configured maximum
+//! token limit. We model this as a lognormal body truncated at the max,
+//! plus an explicit probability mass *at* the max (responses cut off by the
+//! limit) — the two features that drive skewness bubbles and the paper's
+//! conservative admission planning.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LengthDist {
+    /// Hard cap: the job's configured maximum new tokens.
+    pub max_tokens: f64,
+    /// Median of the lognormal body, as a fraction of max_tokens.
+    pub median_frac: f64,
+    /// Sigma of the underlying normal (tail heaviness).
+    pub sigma: f64,
+}
+
+impl LengthDist {
+    /// A production-like default: median ~22% of the cap, heavy tail.
+    /// Roughly reproduces Fig. 11-left: most responses finish early, a few
+    /// percent hit the cap.
+    pub fn production(max_tokens: f64) -> Self {
+        LengthDist { max_tokens, median_frac: 0.22, sigma: 0.85 }
+    }
+
+    /// Draw one response length in tokens (1 ..= max_tokens).
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let mu = (self.median_frac * self.max_tokens).ln();
+        let x = rng.lognormal(mu, self.sigma);
+        x.clamp(1.0, self.max_tokens)
+    }
+
+    /// Draw a full rollout batch of lengths.
+    pub fn sample_batch(&self, rng: &mut Rng, batch: usize) -> Vec<f64> {
+        (0..batch).map(|_| self.sample(rng)).collect()
+    }
+
+    /// Monte-Carlo mean (cached callers should hold the result).
+    pub fn mean(&self, rng: &mut Rng, n: usize) -> f64 {
+        let s: f64 = (0..n).map(|_| self.sample(rng)).sum();
+        s / n as f64
+    }
+}
+
+/// Shape of one sampled rollout batch, summarized for the simulator:
+/// the gating (max) length, the mean, and the p-th percentile length that
+/// long-tail migration keys off (paper §4.3: trigger at 80% completion).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchLengths {
+    pub max: f64,
+    pub mean: f64,
+    /// Length by which `migration_threshold` of responses have finished.
+    pub threshold_len: f64,
+    /// Fraction of responses still running past the threshold.
+    pub tail_frac: f64,
+}
+
+pub const MIGRATION_THRESHOLD: f64 = 0.80;
+
+pub fn summarize_batch(lengths: &[f64]) -> BatchLengths {
+    assert!(!lengths.is_empty());
+    let mut sorted: Vec<f64> = lengths.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let max = sorted[n - 1];
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let k = (((n as f64) * MIGRATION_THRESHOLD).ceil() as usize).clamp(1, n) - 1;
+    let threshold_len = sorted[k];
+    let tail = n - 1 - k;
+    BatchLengths { max, mean, threshold_len, tail_frac: tail as f64 / n as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_cap() {
+        let d = LengthDist::production(8192.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((1.0..=8192.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn is_long_tailed() {
+        // Fig. 11-left shape: median well below mean, stragglers near cap.
+        let d = LengthDist::production(8192.0);
+        let mut rng = Rng::new(2);
+        let xs = d.sample_batch(&mut rng, 50_000);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[xs.len() / 2];
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let frac_at_cap = xs.iter().filter(|&&x| x >= 8191.0).count() as f64 / xs.len() as f64;
+        assert!(mean > 1.15 * median, "mean {mean} median {median}");
+        assert!(frac_at_cap > 0.005 && frac_at_cap < 0.20, "cap mass {frac_at_cap}");
+        // Gate (max) far above the p80 length: migration has room to win.
+        let p80 = sorted[(0.8 * xs.len() as f64) as usize];
+        assert!(sorted[xs.len() - 1] > 1.5 * p80);
+    }
+
+    #[test]
+    fn batch_summary() {
+        let lengths = vec![10.0, 20.0, 30.0, 40.0, 100.0];
+        let b = summarize_batch(&lengths);
+        assert_eq!(b.max, 100.0);
+        assert_eq!(b.threshold_len, 40.0);
+        assert!((b.tail_frac - 0.2).abs() < 1e-9);
+        assert!((b.mean - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_summary_single() {
+        let b = summarize_batch(&[7.0]);
+        assert_eq!(b.max, 7.0);
+        assert_eq!(b.tail_frac, 0.0);
+    }
+}

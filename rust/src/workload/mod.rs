@@ -1,0 +1,9 @@
+//! Workload layer: job specs, heavy-tail length model, profiles, traces.
+
+pub mod job;
+pub mod lengths;
+pub mod profiles;
+pub mod trace;
+
+pub use job::{IterSample, JobId, JobSpec, PhaseSpec};
+pub use lengths::LengthDist;

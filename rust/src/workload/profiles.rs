@@ -1,0 +1,267 @@
+//! Workload profiles: the paper's Table 3 micro-benchmark job types, the
+//! Table 6 simulation profiles, and the Fig. 2 production archetypes.
+
+use crate::cluster::roofline::PhaseInputs;
+use crate::cluster::roofline::ModelArch;
+use crate::util::rng::Rng;
+use crate::workload::job::{JobId, JobSpec, PhaseSpec};
+use crate::workload::lengths::LengthDist;
+
+/// Build the roofline PhaseInputs for a job archetype.
+#[allow(clippy::too_many_arguments)]
+fn roofline_spec(
+    id: JobId,
+    name: &str,
+    params_b: f64,
+    max_new_tokens: f64,
+    batch: usize,
+    turns: usize,
+    env_latency_s: f64,
+    n_roll: usize,
+    n_train: usize,
+    tp_roll: usize,
+    tp_train: usize,
+    slo: f64,
+    n_iters: usize,
+    arrival_s: f64,
+) -> JobSpec {
+    // `max_new_tokens` is the job's *total* generation budget per request
+    // (for multi-turn jobs the per-turn budget is smaller; turns add env
+    // latency + re-prefill, not extra generation volume).
+    let lengths = LengthDist::production(max_new_tokens);
+    let inputs = PhaseInputs {
+        arch: ModelArch::for_size(params_b),
+        batch,
+        prompt_len: 1024.0,
+        gate_gen_len: lengths.max_tokens,
+        mean_gen_len: lengths.max_tokens,
+        turns,
+        env_latency_s,
+        tp_roll,
+        tp_train,
+    };
+    JobSpec {
+        id,
+        name: name.to_string(),
+        arrival_s,
+        n_iters,
+        slo,
+        n_roll_gpus: n_roll,
+        n_train_gpus: n_train,
+        params_b,
+        phases: PhaseSpec::Roofline { inputs, lengths },
+    }
+}
+
+/// Paper Table 3: the five micro-benchmark job types.
+///
+/// | Job    | Turns  | Model        | Len | Bsz | N_T | N_R |
+/// | Type-A | Single | Qwen-2.5-7B  |  8K | 256 |  8  |  8  |
+/// | Type-B | Single | Qwen-2.5-14B |  8K | 256 |  8  |  8  |
+/// | Type-C | Single | Qwen-2.5-32B |  8K | 256 | 16  | 16  |
+/// | Type-D | Multi  | Qwen-3-8B    |  8K*| 256 |  8  |  8  |
+/// | Type-E | Multi  | Qwen-3-14B   | 16K*| 64  |  8  |  8  |
+pub fn table3_job(ty: char, id: JobId, arrival_s: f64) -> JobSpec {
+    match ty {
+        'A' => roofline_spec(id, "Type-A(7B-1turn-8K)", 7.0, 8192.0, 256, 1, 0.0,
+                             8, 8, 1, 1, 2.0, 50, arrival_s),
+        'B' => roofline_spec(id, "Type-B(14B-1turn-8K)", 14.0, 8192.0, 256, 1, 0.0,
+                             8, 8, 1, 2, 2.0, 50, arrival_s),
+        'C' => roofline_spec(id, "Type-C(32B-1turn-8K)", 32.0, 8192.0, 256, 1, 0.0,
+                             16, 16, 2, 4, 2.0, 50, arrival_s),
+        'D' => roofline_spec(id, "Type-D(8B-multi-8K)", 8.0, 8192.0, 256, 4, 40.0,
+                             8, 8, 1, 1, 2.0, 50, arrival_s),
+        'E' => roofline_spec(id, "Type-E(14B-multi-16K)", 14.0, 16384.0, 64, 6, 45.0,
+                             8, 8, 1, 2, 2.0, 50, arrival_s),
+        _ => panic!("unknown Table 3 job type {ty}"),
+    }
+}
+
+pub fn table3_jobs(arrival_s: f64) -> Vec<JobSpec> {
+    "ABCDE".chars().enumerate().map(|(i, c)| table3_job(c, i, arrival_s)).collect()
+}
+
+/// Paper Fig. 2: the ten most popular production job archetypes
+/// (model size, max len, single/multi-turn).
+pub fn fig2_archetypes() -> Vec<JobSpec> {
+    let specs: [(&str, f64, f64, usize, usize, f64); 10] = [
+        // name, params_b, max_new, batch, turns, env_s
+        ("3B-4K[S]", 3.0, 4096.0, 256, 1, 0.0),
+        ("3B-8K[M]", 3.0, 8192.0, 256, 3, 30.0),
+        ("7B-4K[S]", 7.0, 4096.0, 256, 1, 0.0),
+        ("7B-8K[S]", 7.0, 8192.0, 256, 1, 0.0),
+        ("7B-8K[M]", 7.0, 8192.0, 128, 4, 45.0),
+        ("14B-8K[S]", 14.0, 8192.0, 256, 1, 0.0),
+        ("14B-16K[M]", 14.0, 16384.0, 64, 6, 60.0),
+        ("32B-8K[S]", 32.0, 8192.0, 256, 1, 0.0),
+        ("32B-16K[S]", 32.0, 16384.0, 128, 1, 0.0),
+        ("32B-32K[M]", 32.0, 32768.0, 64, 4, 90.0),
+    ];
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(name, p, len, bsz, turns, env))| {
+            let (nr, nt, tpr, tpt) = if p >= 20.0 { (16, 16, 2, 4) } else { (8, 8, 1, 2) };
+            roofline_spec(i, name, p, len, bsz, turns, env, nr, nt, tpr, tpt, 2.0, 50, 0.0)
+        })
+        .collect()
+}
+
+/// Table 6 workload classes for the §7.5 simulations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimProfile {
+    Balanced,
+    RolloutHeavy,
+    TrainHeavy,
+    Mixed,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimSize {
+    Small,
+    Medium,
+    Large,
+}
+
+/// Table 6: Uniform ranges for (T_roll, T_train) per profile x size.
+pub fn table6_ranges(profile: SimProfile, size: SimSize) -> ((f64, f64), (f64, f64)) {
+    use SimProfile::*;
+    use SimSize::*;
+    match (profile, size) {
+        (Balanced, Small) => ((50.0, 100.0), (50.0, 100.0)),
+        (Balanced, Medium) => ((100.0, 200.0), (100.0, 200.0)),
+        (Balanced, Large) => ((200.0, 300.0), (200.0, 300.0)),
+        (RolloutHeavy, Small) => ((100.0, 200.0), (25.0, 50.0)),
+        (RolloutHeavy, Medium) => ((200.0, 400.0), (50.0, 100.0)),
+        (RolloutHeavy, Large) => ((400.0, 600.0), (100.0, 200.0)),
+        (TrainHeavy, Small) => ((25.0, 50.0), (100.0, 200.0)),
+        (TrainHeavy, Medium) => ((50.0, 100.0), (200.0, 400.0)),
+        (TrainHeavy, Large) => ((100.0, 200.0), (400.0, 600.0)),
+        (Mixed, _) => unreachable!("Mixed draws uniformly over the nine configs"),
+    }
+}
+
+/// Draw a Table 6 job. Model size (for residency footprints) scales with
+/// the size class; GPU demand is one node per pool (the simulation's unit).
+pub fn table6_job(
+    id: JobId,
+    profile: SimProfile,
+    rng: &mut Rng,
+    slo: f64,
+    arrival_s: f64,
+    n_iters: usize,
+) -> JobSpec {
+    use SimProfile::*;
+    let (profile, size) = if profile == Mixed {
+        let p = [Balanced, RolloutHeavy, TrainHeavy][rng.range(0, 3)];
+        let s = [SimSize::Small, SimSize::Medium, SimSize::Large][rng.range(0, 3)];
+        (p, s)
+    } else {
+        let s = [SimSize::Small, SimSize::Medium, SimSize::Large][rng.range(0, 3)];
+        (profile, s)
+    };
+    let ((rl, rh), (tl, th)) = table6_ranges(profile, size);
+    let params_b = match size {
+        SimSize::Small => 3.0,
+        SimSize::Medium => 7.0,
+        SimSize::Large => 14.0,
+    };
+    JobSpec {
+        id,
+        name: format!("{profile:?}-{size:?}"),
+        arrival_s,
+        n_iters,
+        slo,
+        n_roll_gpus: 8,
+        n_train_gpus: 8,
+        params_b,
+        phases: PhaseSpec::Direct {
+            t_roll: rng.uniform(rl, rh),
+            t_train: rng.uniform(tl, th),
+            cv: 0.15,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::PhaseModel;
+
+    /// Calibration contract for the roofline model: Table 3 job types land
+    /// in the paper's Fig. 2 ranges with the reported phase skews.
+    #[test]
+    fn table3_calibration() {
+        let model = PhaseModel::default();
+        let mut rng = Rng::new(9);
+        for job in table3_jobs(0.0) {
+            let e = job.expected(&model, &mut rng);
+            assert!(
+                e.t_roll > 40.0 && e.t_roll < 1000.0,
+                "{} t_roll={}", job.name, e.t_roll
+            );
+            assert!(
+                e.t_train > 20.0 && e.t_train < 1000.0,
+                "{} t_train={}", job.name, e.t_train
+            );
+        }
+    }
+
+    #[test]
+    fn type_d_and_e_are_rollout_heavy() {
+        // Paper §7.2: T_D_roll ~ 2.5 T_D_train, T_E_roll ~ 6 T_E_train.
+        let model = PhaseModel::default();
+        let mut rng = Rng::new(11);
+        let d = table3_job('D', 0, 0.0);
+        let e = table3_job('E', 1, 0.0);
+        let (mut dr, mut dt, mut er, mut et) = (0.0, 0.0, 0.0, 0.0);
+        let n = 30;
+        for _ in 0..n {
+            let sd = d.expected(&model, &mut rng);
+            let se = e.expected(&model, &mut rng);
+            dr += sd.t_roll; dt += sd.t_train;
+            er += se.t_roll; et += se.t_train;
+        }
+        let ratio_d = dr / dt;
+        let ratio_e = er / et;
+        assert!((1.8..=3.5).contains(&ratio_d), "Type-D skew {ratio_d}");
+        assert!((4.0..=9.0).contains(&ratio_e), "Type-E skew {ratio_e}");
+    }
+
+    #[test]
+    fn fig2_shows_heterogeneity() {
+        // Fig. 2's point: phase durations are highly diverse (50-900+ s).
+        let model = PhaseModel::default();
+        let mut rng = Rng::new(13);
+        let durations: Vec<f64> = fig2_archetypes()
+            .iter()
+            .map(|j| {
+                let e = j.expected(&model, &mut rng);
+                e.t_roll + e.t_train
+            })
+            .collect();
+        let min = durations.iter().cloned().fold(f64::MAX, f64::min);
+        let max = durations.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min > 4.0, "spread {min}..{max} too uniform");
+    }
+
+    #[test]
+    fn table6_draws_in_range() {
+        let mut rng = Rng::new(17);
+        for profile in [SimProfile::Balanced, SimProfile::RolloutHeavy, SimProfile::TrainHeavy] {
+            for _ in 0..50 {
+                let j = table6_job(0, profile, &mut rng, 1.5, 0.0, 10);
+                if let PhaseSpec::Direct { t_roll, t_train, .. } = j.phases {
+                    match profile {
+                        SimProfile::RolloutHeavy => assert!(t_roll > t_train),
+                        SimProfile::TrainHeavy => assert!(t_train > t_roll),
+                        _ => {}
+                    }
+                    assert!(t_roll >= 25.0 && t_roll <= 600.0);
+                } else {
+                    panic!("table6 must be Direct");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Cross-module integration tests: traces → Algorithm 1 → event engine →
+//! metrics, compared against baselines (the simulated counterpart of
+//! examples/end_to_end.rs, fast enough for CI).
+
+use rollmux::baselines::heuristic::{GreedyScheduler, RandomScheduler};
+use rollmux::baselines::optimal::PrePlacedScheduler;
+use rollmux::baselines::{evaluate, BaselineKind};
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::sim::engine::{run_rollmux, SimConfig, Simulator};
+use rollmux::workload::profiles::{table3_job, SimProfile};
+use rollmux::workload::trace::{philly_trace, production_trace, SloPolicy};
+
+#[test]
+fn microbench_ordering_matches_paper() {
+    // Fig. 10a shape: RollMux beats Solo-D on cost-efficiency with 100%
+    // SLO attainment, for the temporal-mux pair.
+    let mut trace = vec![table3_job('A', 0, 0.0), table3_job('A', 1, 0.0)];
+    for j in &mut trace {
+        j.n_iters = 10;
+    }
+    let model = PhaseModel::default();
+    let mux = run_rollmux(SimConfig { seed: 7, ..Default::default() }, trace.clone());
+    let solo = evaluate(BaselineKind::SoloDisaggregation, &trace, &model, 7);
+    let verl = evaluate(BaselineKind::VerlColocated, &trace, &model, 7);
+    assert!(mux.iters_per_kusd() > solo.iters_per_kusd, "mux must beat Solo-D");
+    assert!(mux.iters_per_kusd() > verl.iters_per_kusd, "mux must beat veRL");
+    assert!((mux.slo_attainment() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn production_replay_beats_baselines() {
+    // Fig. 13 shape at reduced scale.
+    let trace = production_trace(5, 40);
+    let model = PhaseModel::default();
+    let mux = run_rollmux(SimConfig { seed: 5, ..Default::default() }, trace.clone());
+    let solo = evaluate(BaselineKind::SoloDisaggregation, &trace, &model, 5);
+    let verl = evaluate(BaselineKind::VerlColocated, &trace, &model, 5);
+    assert!(mux.cost_usd < solo.cost_usd, "{} vs {}", mux.cost_usd, solo.cost_usd);
+    assert!(mux.cost_usd < verl.cost_usd, "{} vs {}", mux.cost_usd, verl.cost_usd);
+    assert!(mux.slo_attainment() >= 0.999);
+    // Bubble reduction vs Solo-D on both pools.
+    let (rb, tb) = mux.bubble_fracs();
+    assert!(rb < solo.roll_bubble);
+    assert!(tb < solo.train_bubble);
+    // Peak GPUs below Solo-D's on both pools.
+    assert!(mux.peak_roll_gpus <= solo.peak_roll_gpus);
+    assert!(mux.peak_train_gpus <= solo.peak_train_gpus);
+}
+
+#[test]
+fn sensitivity_shape_rollmux_vs_heuristics() {
+    // Fig. 14/15 shape: RollMux ~optimal cost with full attainment;
+    // heuristics cost more and/or violate SLOs.
+    let trace = philly_trace(11, 60, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+    let model = PhaseModel::default();
+    let cfg = || SimConfig { seed: 11, ..Default::default() };
+
+    let opt = PrePlacedScheduler::windowed(&trace, model, 7);
+    let opt_res = Simulator::new(cfg(), opt, trace.clone()).run();
+    let mux_res = Simulator::new(cfg(), InterGroupScheduler::with_max_group_size(model, 5), trace.clone()).run();
+    let rnd_res = Simulator::new(cfg(), RandomScheduler::new(model, 11, 5), trace.clone()).run();
+    let grd_res = Simulator::new(cfg(), GreedyScheduler::new(model, 5), trace.clone()).run();
+
+    assert!((mux_res.slo_attainment() - 1.0).abs() < 1e-9, "RollMux 100% SLO");
+    assert!(
+        mux_res.avg_cost_per_hour <= 1.5 * opt_res.avg_cost_per_hour,
+        "RollMux {} vs opt {}",
+        mux_res.avg_cost_per_hour,
+        opt_res.avg_cost_per_hour
+    );
+    // Heuristics violate SLOs on mixed workloads.
+    assert!(rnd_res.slo_attainment() < 1.0, "random should violate some SLOs");
+    assert!(grd_res.slo_attainment() <= 1.0);
+    assert!(
+        rnd_res.slo_attainment() <= mux_res.slo_attainment()
+            && grd_res.slo_attainment() <= mux_res.slo_attainment()
+    );
+}
+
+#[test]
+fn warm_start_ablation_matters_at_scale() {
+    // Disabling the warm-start residency mechanism (every switch cold)
+    // must hurt end-to-end makespan on a multiplexed trace.
+    let mut trace = vec![
+        table3_job('A', 0, 0.0),
+        table3_job('A', 1, 0.0),
+        table3_job('B', 2, 0.0),
+    ];
+    for j in &mut trace {
+        j.n_iters = 8;
+        j.slo = 3.0;
+    }
+    let warm = run_rollmux(SimConfig { seed: 2, ..Default::default() }, trace.clone());
+    let mut cold_cfg = SimConfig { seed: 2, ..Default::default() };
+    cold_cfg.warm_starts = false;
+    let cold = run_rollmux(cold_cfg, trace);
+    assert!(
+        cold.makespan_s > warm.makespan_s,
+        "cold {} !> warm {}",
+        cold.makespan_s,
+        warm.makespan_s
+    );
+}
+
+#[test]
+fn sync_scheme_ablation() {
+    // Flat AllGather sync vs hierarchical inside the engine: hierarchical
+    // strictly shortens iterations for multi-GB models.
+    let mut trace = vec![table3_job('C', 0, 0.0)];
+    trace[0].n_iters = 6;
+    let hier = run_rollmux(SimConfig { seed: 3, ..Default::default() }, trace.clone());
+    let mut flat_cfg = SimConfig { seed: 3, ..Default::default() };
+    flat_cfg.sync_scheme = rollmux::sync::SyncScheme::FlatAllGather;
+    let flat = run_rollmux(flat_cfg, trace);
+    assert!(
+        flat.makespan_s > hier.makespan_s * 1.2,
+        "flat {} vs hier {}",
+        flat.makespan_s,
+        hier.makespan_s
+    );
+}
+
+#[test]
+fn group_cap_sensitivity_is_mild() {
+    // Fig. 14c: RollMux's cost is insensitive to the residency cap.
+    let trace = philly_trace(13, 40, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+    let model = PhaseModel::default();
+    let mut costs = Vec::new();
+    for cap in [2usize, 5] {
+        let res = Simulator::new(
+            SimConfig { seed: 13, ..Default::default() },
+            InterGroupScheduler::with_max_group_size(model, cap),
+            trace.clone(),
+        )
+        .run();
+        assert!((res.slo_attainment() - 1.0).abs() < 1e-9);
+        costs.push(res.avg_cost_per_hour);
+    }
+    let ratio = costs[0] / costs[1];
+    assert!((0.8..1.4).contains(&ratio), "cap-2 vs cap-5 cost ratio {ratio}");
+}

@@ -1,0 +1,243 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md §6).
+//!
+//! The offline environment has no proptest crate, so properties are
+//! checked over many seeded random cases with failure seeds printed for
+//! replay — same methodology, hand-rolled harness.
+
+use rollmux::baselines::heuristic::{GreedyScheduler, RandomScheduler};
+use rollmux::cluster::node::HOST_MEM_GB;
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::coordinator::intra::repetition_utilization_delta;
+use rollmux::coordinator::migration::MigrationPolicy;
+use rollmux::sim::engine::{GroupScheduler, SimConfig, Simulator};
+use rollmux::util::rng::Rng;
+use rollmux::workload::job::{IterSample, JobSpec, PhaseSpec};
+use rollmux::workload::profiles::{table6_job, SimProfile};
+
+const CASES: u64 = 60;
+
+fn random_jobs(seed: u64, n: usize) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| {
+            let slo = rng.uniform(1.0, 2.0);
+            let arrival = rng.uniform(0.0, 2000.0);
+            let mut j = table6_job(id, SimProfile::Mixed, &mut rng, slo, arrival, 0);
+            j.n_iters = rng.range(2, 8);
+            j
+        })
+        .collect()
+}
+
+/// Invariant 1 (admission soundness): with worst-case estimates, every
+/// group the scheduler ever creates satisfies every member's SLO and the
+/// non-over-saturation precondition — after every single admission.
+#[test]
+fn prop_admission_soundness() {
+    for seed in 0..CASES {
+        let mut s = InterGroupScheduler::new(PhaseModel::default());
+        for job in random_jobs(seed, 24) {
+            s.schedule(job);
+            for g in &s.groups {
+                assert!(g.slo_ok(), "seed {seed}: SLO violated in group {}", g.id);
+                assert!(
+                    g.t_load() <= g.t_cycle() + 1e-6,
+                    "seed {seed}: group {} over-saturated ({} > {})",
+                    g.id,
+                    g.t_load(),
+                    g.t_cycle()
+                );
+            }
+        }
+    }
+}
+
+/// Invariant 2 (residency): no node's pinned working set ever exceeds
+/// host memory — for RollMux AND for the heuristics (which check only
+/// this constraint).
+#[test]
+fn prop_residency_never_violated() {
+    for seed in 0..CASES {
+        let jobs = random_jobs(seed, 20);
+        let model = PhaseModel::default();
+        let mut muxes: Vec<Box<dyn GroupScheduler>> = vec![
+            Box::new(InterGroupScheduler::new(model)),
+            Box::new(RandomScheduler::new(model, seed, 5)),
+            Box::new(GreedyScheduler::new(model, 5)),
+        ];
+        for m in &mut muxes {
+            for job in &jobs {
+                m.place(job.clone());
+            }
+            for g in m.groups() {
+                assert!(g.residency_ok(), "seed {seed}: residency violated");
+                for n in 0..g.n_roll_nodes {
+                    let used: f64 = g
+                        .jobs
+                        .iter()
+                        .filter(|j| j.roll_nodes.contains(&n))
+                        .map(|j| j.spec.mem_roll_gb())
+                        .sum();
+                    assert!(used <= HOST_MEM_GB + 1e-9, "seed {seed}: node {n} over");
+                }
+            }
+        }
+    }
+}
+
+/// Invariant 3 (Theorem 1): in every unsaturated group the scheduler
+/// builds, repeating any member's phases lowers aggregate utilization,
+/// and the meta-iteration equals the natural cycle.
+#[test]
+fn prop_round_robin_optimality() {
+    for seed in 0..CASES {
+        let mut s = InterGroupScheduler::new(PhaseModel::default());
+        for job in random_jobs(seed, 16) {
+            s.schedule(job);
+        }
+        for g in &s.groups {
+            assert!(
+                (g.t_meta() - g.t_cycle()).abs() < 1e-9,
+                "seed {seed}: meta-iteration exceeds cycle in unsaturated group"
+            );
+            for id in g.job_ids() {
+                let d = repetition_utilization_delta(g, id);
+                assert!(
+                    d <= 1e-9,
+                    "seed {seed}: repeating job {id} raised utilization by {d}"
+                );
+            }
+        }
+    }
+}
+
+/// Invariant 4 (migration work conservation): the plan never shortens the
+/// tail, keeps at least one node, and frees + keeps exactly k nodes.
+#[test]
+fn prop_migration_conserves_work() {
+    let policy = MigrationPolicy::default();
+    for seed in 0..CASES * 10 {
+        let mut rng = Rng::new(seed);
+        let s = IterSample {
+            t_roll: rng.uniform(10.0, 1000.0),
+            t_train: rng.uniform(10.0, 500.0),
+            tail_start_frac: rng.uniform(0.0, 1.0),
+            tail_gpu_frac: rng.uniform(0.0, 0.6),
+        };
+        let k = rng.range(1, 9);
+        if let Some(plan) = policy.plan(&s, k) {
+            assert!(plan.tail_end_s >= s.t_roll, "seed {seed}: tail shortened");
+            assert!(plan.nodes_freed >= 1 && plan.nodes_kept + plan.nodes_freed == k);
+            assert!(plan.trigger_at_s <= s.t_roll + 1e-9);
+            assert!(plan.trigger_at_s >= 0.0);
+            assert!((0.0..=1.0).contains(&plan.tail_gpu_frac));
+        }
+    }
+}
+
+/// Invariant 5 (simulator sanity): for any random trace, the event
+/// simulator completes every job, busy <= provisioned, the cost integral
+/// is positive, and the on-policy dependency (rollout i after sync i-1)
+/// holds in the realized timeline.
+#[test]
+fn prop_simulator_accounting() {
+    for seed in 0..20 {
+        let jobs = random_jobs(seed, 12);
+        let n = jobs.len();
+        let cfg = SimConfig { seed, record_gantt: true, ..Default::default() };
+        let sched = InterGroupScheduler::new(cfg.model);
+        let res = Simulator::new(cfg, sched, jobs).run();
+        assert_eq!(res.outcomes.len(), n, "seed {seed}: jobs lost");
+        assert!(res.roll_busy_gpu_s <= res.roll_prov_gpu_s + 1e-6);
+        assert!(res.train_busy_gpu_s <= res.train_prov_gpu_s + 1e-6);
+        assert!(res.cost_usd > 0.0);
+        assert!(res.usage_curve.windows(2).all(|w| w[0].0 <= w[1].0));
+        for r in &res.records {
+            assert!(r.end >= r.start, "seed {seed}: negative phase");
+        }
+        use std::collections::HashMap;
+        let mut sync_end: HashMap<(usize, usize), f64> = HashMap::new();
+        for r in &res.records {
+            if matches!(r.kind, rollmux::sim::PhaseKind::Sync) {
+                sync_end.insert((r.job, r.iter), r.end);
+            }
+        }
+        for r in &res.records {
+            if matches!(r.kind, rollmux::sim::PhaseKind::Rollout) && r.iter > 0 {
+                let dep = sync_end.get(&(r.job, r.iter - 1)).copied().unwrap_or(0.0);
+                assert!(
+                    r.start >= dep - 1e-6,
+                    "seed {seed}: job {} iter {} rollout at {} before sync end {}",
+                    r.job,
+                    r.iter,
+                    r.start,
+                    dep
+                );
+            }
+        }
+    }
+}
+
+/// The paper's headline guarantee: RollMux keeps 100% SLO attainment on
+/// arbitrary Table-6 traces.
+#[test]
+fn prop_slo_attainment_100() {
+    for seed in 0..20 {
+        let jobs = random_jobs(seed + 1000, 16);
+        let cfg = SimConfig { seed, ..Default::default() };
+        let sched = InterGroupScheduler::new(cfg.model);
+        let res = Simulator::new(cfg, sched, jobs).run();
+        let att = res.slo_attainment();
+        assert!(
+            att >= 1.0 - 1e-9,
+            "seed {seed}: attainment {att} < 100% (violations: {:?})",
+            res.outcomes
+                .values()
+                .filter(|o| !o.slo_met())
+                .map(|o| o.slowdown())
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+/// Scheduler/simulator agreement: the admission-time analytic co-exec
+/// bound (t_meta) tracks the realized per-iteration time of deterministic
+/// (cv=0) jobs.
+#[test]
+fn prop_analytic_bounds_realized() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let jobs: Vec<JobSpec> = (0..3)
+            .map(|id| JobSpec {
+                id,
+                name: format!("j{id}"),
+                arrival_s: 0.0,
+                n_iters: 6,
+                slo: 10.0,
+                n_roll_gpus: 8,
+                n_train_gpus: 8,
+                params_b: 7.0,
+                phases: PhaseSpec::Direct {
+                    t_roll: rng.uniform(50.0, 300.0),
+                    t_train: rng.uniform(50.0, 300.0),
+                    cv: 0.0,
+                },
+            })
+            .collect();
+        let cfg = SimConfig { seed, ..Default::default() };
+        let mut sched = InterGroupScheduler::new(cfg.model);
+        for j in &jobs {
+            sched.schedule(j.clone());
+        }
+        let bound: f64 = sched.groups.iter().map(|g| g.t_meta()).fold(0.0, f64::max);
+        let res = Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), jobs).run();
+        for o in res.outcomes.values() {
+            let per_iter = (o.finish_s - o.arrival_s) / o.iters as f64;
+            assert!(
+                per_iter <= bound * 1.35 + 60.0,
+                "seed {seed}: realized {per_iter} >> bound {bound}"
+            );
+        }
+    }
+}
