@@ -1,14 +1,20 @@
 //! Bench: inter-group scheduling decision latency (paper Table 5).
 //!
 //! Measures Algorithm 1's per-decision latency as the number of live jobs
-//! grows, plus the brute-force optimal solver at small sizes. Criterion is
-//! unavailable offline; this uses the in-tree harness (util::bench).
+//! grows, the sustained placement throughput of the 2000-job regression
+//! workload, plus the brute-force optimal solver at small sizes.
+//! Criterion is unavailable offline; this uses the in-tree harness
+//! (util::bench). Set BENCH_JSON_OUT (scripts/bench.sh does) to collect
+//! machine-readable records for BENCH_1.json.
 
 use rollmux::baselines::optimal::optimal_partition_deadline;
 use rollmux::cluster::PhaseModel;
 use rollmux::coordinator::inter::InterGroupScheduler;
-use rollmux::util::{bench, rng::Rng};
+use rollmux::util::{bench, bench_with_setup, emit_bench_json, rng::Rng, timed};
+use rollmux::workload::job::{JobSpec, PhaseSpec};
 use rollmux::workload::profiles::{table6_job, SimProfile};
+
+const BIN: &str = "scheduler_latency";
 
 fn main() {
     println!("== scheduler_latency (Table 5) ==");
@@ -25,16 +31,64 @@ fn main() {
         for j in &jobs {
             sched.schedule(j.clone());
         }
+        // Time ONLY the marginal decision: the per-run state clone happens
+        // in the setup phase and is returned from the run so its teardown
+        // is also outside the samples (Table 5 methodology).
         let mut k = 0usize;
-        let stats = bench(2, if n >= 1000 { 8 } else { 30 }, || {
-            let slo = rng.uniform(1.0, 2.0);
-            let probe = table6_job(n + k, SimProfile::Mixed, &mut rng, slo, 0.0, 5);
-            k += 1;
-            let mut s2 = sched.clone();
-            s2.schedule(probe)
-        });
-        stats.report(&format!("algorithm1/decide @{n} jobs"));
+        let stats = bench_with_setup(
+            2,
+            if n >= 1000 { 8 } else { 30 },
+            || {
+                let slo = rng.uniform(1.0, 2.0);
+                let probe = table6_job(n + k, SimProfile::Mixed, &mut rng, slo, 0.0, 5);
+                k += 1;
+                (sched.clone(), probe)
+            },
+            |(mut s2, probe)| {
+                let d = s2.schedule(probe);
+                (s2, d)
+            },
+        );
+        stats.report_json(BIN, &format!("algorithm1/decide @{n} jobs"), 1.0);
     }
+
+    // Sustained throughput on the regression-gate workload: 2000
+    // placements from an empty cluster (matches the
+    // `decisions_scale_linearly` test trace).
+    let mk_job = |id: usize| JobSpec {
+        id,
+        name: format!("j{id}"),
+        arrival_s: 0.0,
+        n_iters: 10,
+        slo: 1.0 + (id % 10) as f64 / 10.0,
+        n_roll_gpus: 8,
+        n_train_gpus: 8,
+        params_b: 7.0,
+        phases: PhaseSpec::Direct {
+            t_roll: 50.0 + (id % 17) as f64 * 20.0,
+            t_train: 40.0 + (id % 13) as f64 * 25.0,
+            cv: 0.0,
+        },
+    };
+    let (groups, secs) = timed(|| {
+        let mut s = InterGroupScheduler::new(model);
+        for id in 0..2000 {
+            s.schedule(mk_job(id));
+        }
+        s.groups.len()
+    });
+    println!(
+        "algorithm1/place_2000_from_empty: {:.3}s wall, {} groups, {:.0} placements/s",
+        secs,
+        groups,
+        2000.0 / secs
+    );
+    emit_bench_json(
+        BIN,
+        "algorithm1/place_2000_from_empty",
+        &[("wall_s", secs), ("placements_per_s", 2000.0 / secs), ("groups", groups as f64)],
+    );
+
     // Brute force for reference (paper: 113 ms @5, >1 min @9, >5 h @13).
     for &n in &[5usize, 7, 9] {
         let mut rng = Rng::new(7);
@@ -45,6 +99,6 @@ fn main() {
             })
             .collect();
         let stats = bench(0, 3, || optimal_partition_deadline(&jobs, &model, 20.0));
-        stats.report(&format!("brute_force/partition @{n} jobs"));
+        stats.report_json(BIN, &format!("brute_force/partition @{n} jobs"), 1.0);
     }
 }

@@ -1,35 +1,57 @@
 //! Bench: discrete-event engine throughput (phases simulated per second)
 //! on the at-scale traces — the hot path of every Fig. 13/14/15 sweep.
+//! Set BENCH_JSON_OUT (scripts/bench.sh does) to collect machine-readable
+//! records for BENCH_1.json.
 
 use rollmux::cluster::PhaseModel;
 use rollmux::coordinator::inter::InterGroupScheduler;
 use rollmux::sim::engine::{SimConfig, Simulator};
-use rollmux::util::{bench, timed};
+use rollmux::util::{bench, emit_bench_json, timed};
 use rollmux::workload::trace::{philly_trace, production_trace, SloPolicy};
 use rollmux::workload::profiles::SimProfile;
+
+const BIN: &str = "simulator";
 
 fn main() {
     println!("== simulator ==");
     // Production trace replay (Fig. 13 inner loop).
     for &n_jobs in &[50usize, 120, 200] {
         let trace = production_trace(7, n_jobs);
+        // Iterations are trace-determined; count them once for phases/s
+        // (each iteration = rollout + train + sync, plus one init/job).
+        let probe = {
+            let cfg = SimConfig { seed: 7, ..Default::default() };
+            Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace.clone()).run()
+        };
+        let iters: usize = probe.outcomes.values().map(|o| o.iters).sum();
+        let phases = iters * 3 + n_jobs;
         let stats = bench(1, 5, || {
             let cfg = SimConfig { seed: 7, ..Default::default() };
             Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace.clone()).run()
         });
-        stats.report(&format!("replay/production @{n_jobs} jobs"));
+        stats.report_json(BIN, &format!("replay/production @{n_jobs} jobs"), phases as f64);
     }
     // Philly trace (Fig. 14/15 inner loop) with phase-count reporting.
+    // Same phase definition as the production records above: rollout +
+    // train + sync per iteration, one init per job.
     let trace = philly_trace(7, 300, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
     let (res, secs) = timed(|| {
         let cfg = SimConfig { seed: 7, ..Default::default() };
         Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace.clone()).run()
     });
     let iters: usize = res.outcomes.values().map(|o| o.iters).sum();
+    let phases_per_s = (iters * 3 + trace.len()) as f64 / secs;
     println!(
         "replay/philly @300 jobs: {:.2}s wall, {} iterations, {:.0} phases/s",
-        secs,
-        iters,
-        (iters * 4) as f64 / secs
+        secs, iters, phases_per_s
+    );
+    emit_bench_json(
+        BIN,
+        "replay/philly @300 jobs",
+        &[
+            ("wall_s", secs),
+            ("iterations", iters as f64),
+            ("phases_per_s", phases_per_s),
+        ],
     );
 }

@@ -34,33 +34,27 @@ pub struct GreedyScheduler {
 /// Can the group physically hold this job (host memory + cap)?
 /// This is the ONLY feasibility notion the heuristics use — deliberately
 /// ignoring SLO and saturation, which is why they under-attain (§7.5).
+/// Reads the group's cached per-node memory aggregates: O(pinned nodes).
 fn accommodates(g: &Group, spec: &JobSpec, cap: usize, nodes: &[usize]) -> bool {
-    if g.jobs.len() >= cap || g.n_roll_nodes < spec.n_roll_nodes() {
+    if g.jobs().len() >= cap || g.n_roll_nodes < spec.n_roll_nodes() {
         return false;
     }
     for &n in nodes {
-        let used: f64 = g
-            .jobs
-            .iter()
-            .filter(|j| j.roll_nodes.contains(&n))
-            .map(|j| j.spec.mem_roll_gb())
-            .sum();
-        if used + spec.mem_roll_gb() > HOST_MEM_GB {
+        if g.roll_node_mem(n) + spec.mem_roll_gb() > HOST_MEM_GB {
             return false;
         }
     }
-    let train_used: f64 = g.jobs.iter().map(|j| j.spec.mem_train_gb()).sum();
-    train_used + spec.mem_train_gb() <= HOST_MEM_GB
+    g.train_mem_gb() + spec.mem_train_gb() <= HOST_MEM_GB
 }
 
 fn insert(g: &mut Group, spec: JobSpec, nodes: Vec<usize>, model: &PhaseModel) {
     let gj = GroupJob::new(spec, model, nodes, g.train_gpus());
-    g.jobs.push(gj);
+    g.admit(gj);
 }
 
 fn complete_in(groups: &mut Vec<Group>, job: JobId) {
     for g in groups.iter_mut() {
-        if g.remove_job(job).is_some() {
+        if g.retract(job).is_some() {
             break;
         }
     }
@@ -119,7 +113,7 @@ impl GroupScheduler for RandomScheduler {
         let gid = self.next_group_id;
         self.next_group_id += 1;
         let g = Group::isolated(gid, spec.clone(), &self.model);
-        let nodes = g.jobs[0].roll_nodes.clone();
+        let nodes = g.jobs()[0].roll_nodes.clone();
         let delta = g.cost_per_hour();
         self.groups.push(g);
         Decision { job: spec.id, group_id: gid, kind: PlacementKind::Isolated, marginal_cost: delta, roll_nodes: nodes }
@@ -167,7 +161,7 @@ impl GroupScheduler for GreedyScheduler {
             .enumerate()
             .map(|(i, g)| (Self::idle_frac(g), i))
             .collect();
-        ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        ranked.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         for (idle, gi) in ranked {
             if idle < fresh_idle {
                 break; // a fresh group is idler than everything left
@@ -179,7 +173,7 @@ impl GroupScheduler for GreedyScheduler {
             // Most-idle rollout nodes.
             let mut by_load: Vec<(f64, usize)> =
                 (0..g.n_roll_nodes).map(|n| (g.roll_node_load(n), n)).collect();
-            by_load.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            by_load.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
             let nodes: Vec<usize> = by_load.iter().take(k).map(|&(_, n)| n).collect();
             if accommodates(g, &spec, self.max_group_size, &nodes) {
                 let id = spec.id;
@@ -197,7 +191,7 @@ impl GroupScheduler for GreedyScheduler {
         let gid = self.next_group_id;
         self.next_group_id += 1;
         let g = Group::isolated(gid, spec.clone(), &self.model);
-        let nodes = g.jobs[0].roll_nodes.clone();
+        let nodes = g.jobs()[0].roll_nodes.clone();
         let delta = g.cost_per_hour();
         self.groups.push(g);
         Decision { job: spec.id, group_id: gid, kind: PlacementKind::Isolated, marginal_cost: delta, roll_nodes: nodes }
@@ -264,7 +258,7 @@ mod tests {
         for g in &s.groups {
             for n in 0..g.n_roll_nodes {
                 let used: f64 = g
-                    .jobs
+                    .jobs()
                     .iter()
                     .filter(|j| j.roll_nodes.contains(&n))
                     .map(|j| j.spec.mem_roll_gb())
@@ -289,10 +283,10 @@ mod tests {
             s.place(direct_job(id, 50.0 + (id as f64 * 37.0) % 400.0,
                                 30.0 + (id as f64 * 53.0) % 300.0, 1.05));
         }
-        let total_jobs: usize = s.groups.iter().map(|g| g.jobs.len()).sum();
+        let total_jobs: usize = s.groups.iter().map(|g| g.jobs().len()).sum();
         assert_eq!(total_jobs, 30);
         assert!(
-            s.groups.iter().any(|g| g.jobs.len() >= 2),
+            s.groups.iter().any(|g| g.jobs().len() >= 2),
             "greedy must sometimes co-locate (and thereby violate SLOs)"
         );
         assert!(s.groups.len() >= 2, "greedy must also scale out");
@@ -304,7 +298,7 @@ mod tests {
         for id in 0..6 {
             s.place(direct_job(id, 100.0, 80.0, 10.0));
         }
-        assert!(s.groups.iter().all(|g| g.jobs.len() <= 2));
+        assert!(s.groups.iter().all(|g| g.jobs().len() <= 2));
         assert_eq!(s.groups.len(), 3);
     }
 

@@ -85,7 +85,7 @@ pub fn optimal_partition_deadline(
                         g2.n_roll_nodes += 1; // fresh node in this group
                     }
                     let gj = GroupJob::new(spec.clone(), ctx.model, vec![node], g2.train_gpus());
-                    g2.jobs.push(gj);
+                    g2.admit(gj);
                     if !feasible(&g2) {
                         continue;
                     }
@@ -99,7 +99,7 @@ pub fn optimal_partition_deadline(
         }
         // New isolated group (always feasible).
         let g = Group::isolated(groups.len(), spec.clone(), ctx.model);
-        let nodes = g.jobs[0].roll_nodes.clone();
+        let nodes = g.jobs()[0].roll_nodes.clone();
         groups.push(g);
         acc.push(Assignment { group: groups.len() - 1, roll_nodes: nodes });
         recurse(ctx, i + 1, groups, acc);
@@ -172,8 +172,7 @@ impl GroupScheduler for PrePlacedScheduler {
                 self.next_group_id += 1;
                 let mut g = Group::isolated(gid, spec.clone(), &self.model);
                 // Isolated ctor pinned to nodes 0..k; repin per plan.
-                g.jobs[0].roll_nodes = nodes.clone();
-                g.n_roll_nodes = g.n_roll_nodes.max(nodes.iter().max().unwrap_or(&0) + 1);
+                g.repin(spec.id, nodes.clone());
                 self.groups.push(g);
                 self.live.insert(key, gid);
                 return Decision {
@@ -189,7 +188,7 @@ impl GroupScheduler for PrePlacedScheduler {
         let need = nodes.iter().max().unwrap_or(&0) + 1;
         g.n_roll_nodes = g.n_roll_nodes.max(need);
         let gj = GroupJob::new(spec.clone(), &self.model, nodes.clone(), g.train_gpus());
-        g.jobs.push(gj);
+        g.admit(gj);
         Decision {
             job: spec.id,
             group_id: gid,
@@ -201,7 +200,7 @@ impl GroupScheduler for PrePlacedScheduler {
 
     fn complete(&mut self, job: JobId) {
         for g in &mut self.groups {
-            if g.remove_job(job).is_some() {
+            if g.retract(job).is_some() {
                 break;
             }
         }

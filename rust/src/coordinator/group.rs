@@ -13,6 +13,18 @@
 //!    a single serial queue and `t_load` sums them;
 //!  * rollout jobs are pinned to specific node subsets, so rollout load is
 //!    per-node.
+//!
+//! Performance model (EXPERIMENTS.md §Perf): membership is mutated only
+//! through [`Group::admit`] / [`Group::retract`] / [`Group::repin`], which
+//! maintain cached aggregates — per-node rollout load and memory vectors,
+//! summed train load/memory, the natural cycle, the bottleneck rollout
+//! load and the tightest member SLO budget. Every scheduling predicate
+//! (`t_cycle`, `t_load`, `is_saturated`, `slo_ok`, `residency_ok`) is O(1),
+//! and [`Group::evaluate_admit`] answers "what if this job joined here?"
+//! in O(pinned nodes) without cloning the group. The caches are built by
+//! in-member-order floating-point folds, so they are *bit-identical* to a
+//! from-scratch recomputation over `jobs()` (property-tested in
+//! `rust/tests/prop_coordinator.rs`).
 
 use crate::cluster::node::{PoolKind, GPUS_PER_NODE, HOST_MEM_GB};
 use crate::cluster::{GpuKind, PhaseModel, PhaseTimes};
@@ -77,70 +89,226 @@ impl GroupJob {
 }
 
 /// A co-execution group: `(J_G, R_G, T_G, Φ_G)` in the paper's notation.
+///
+/// Invariant: the cached aggregate fields always reflect `jobs` (see the
+/// module docs); hence membership is private and mutated only through the
+/// `admit`/`retract`/`repin` operations.
 #[derive(Clone, Debug)]
 pub struct Group {
     pub id: usize,
-    pub jobs: Vec<GroupJob>,
+    jobs: Vec<GroupJob>,
     pub n_roll_nodes: usize,
     pub n_train_nodes: usize,
+    /// Σ roll_occupancy of jobs pinned to each node (index = node).
+    roll_load: Vec<f64>,
+    /// Σ mem_roll_gb pinned to each node (index = node).
+    roll_mem: Vec<f64>,
+    /// Σ train_occupancy over members (the serial training queue).
+    train_load: f64,
+    /// Σ mem_train_gb over members.
+    train_mem: f64,
+    /// max t_solo over members (the natural cycle, T_cycle).
+    t_cycle: f64,
+    /// max over nodes of `roll_load` (the rollout bottleneck).
+    max_roll_load: f64,
+    /// min over members of slo_j * t_solo_j (tightest SLO budget).
+    slo_budget: f64,
+    /// true once any rollout node's pinned memory exceeds host DRAM.
+    mem_over: bool,
 }
 
 impl Group {
+    /// An empty group with the given pools (members join via `admit`).
+    pub fn empty(id: usize, n_roll_nodes: usize, n_train_nodes: usize) -> Self {
+        Group {
+            id,
+            jobs: Vec::new(),
+            n_roll_nodes,
+            n_train_nodes,
+            roll_load: Vec::new(),
+            roll_mem: Vec::new(),
+            train_load: 0.0,
+            train_mem: 0.0,
+            t_cycle: 0.0,
+            max_roll_load: 0.0,
+            slo_budget: f64::INFINITY,
+            mem_over: false,
+        }
+    }
+
     /// Provision a fresh, isolated group for one job (Fig. 5-bottom).
     pub fn isolated(id: usize, spec: JobSpec, model: &PhaseModel) -> Self {
         let n_roll_nodes = spec.n_roll_nodes();
         let n_train_nodes = spec.n_train_nodes();
         let job = GroupJob::new(spec, model, (0..n_roll_nodes).collect(), n_train_nodes * GPUS_PER_NODE);
-        Group { id, jobs: vec![job], n_roll_nodes, n_train_nodes }
+        let mut g = Group::empty(id, n_roll_nodes, n_train_nodes);
+        g.admit(job);
+        g
+    }
+
+    /// Member jobs, in admission order.
+    pub fn jobs(&self) -> &[GroupJob] {
+        &self.jobs
+    }
+
+    /// Admit a member: O(pinned nodes) cache update, no recomputation.
+    /// Grows the rollout pool if the job is pinned past it (the scheduler's
+    /// rollout-scaling placement pins to fresh trailing nodes).
+    pub fn admit(&mut self, job: GroupJob) {
+        if let Some(&max_pin) = job.roll_nodes.iter().max() {
+            if max_pin + 1 > self.n_roll_nodes {
+                self.n_roll_nodes = max_pin + 1;
+            }
+        }
+        self.accumulate_caches(&job);
+        self.jobs.push(job);
+    }
+
+    /// Release a member (job completion). Rebuilds the caches with the
+    /// same in-order folds as `admit`, so cached values stay bit-identical
+    /// to from-scratch recomputation (no float-subtraction drift).
+    pub fn retract(&mut self, id: JobId) -> Option<GroupJob> {
+        let idx = self.jobs.iter().position(|j| j.spec.id == id)?;
+        let job = self.jobs.remove(idx);
+        self.rebuild_caches();
+        Some(job)
+    }
+
+    /// Re-pin a member's rollout nodes (used by the offline-optimal replay
+    /// and tests); grows the pool to cover the new pins.
+    pub fn repin(&mut self, id: JobId, roll_nodes: Vec<usize>) {
+        if let Some(j) = self.jobs.iter_mut().find(|j| j.spec.id == id) {
+            j.roll_nodes = roll_nodes;
+        }
+        let max_pin = self.jobs.iter().flat_map(|j| j.roll_nodes.iter().copied()).max();
+        if let Some(m) = max_pin {
+            if m + 1 > self.n_roll_nodes {
+                self.n_roll_nodes = m + 1;
+            }
+        }
+        self.rebuild_caches();
+    }
+
+    /// Drop trailing rollout nodes no remaining member is pinned to
+    /// (deprovisioning compaction on job completion).
+    pub fn compact_trailing_nodes(&mut self) {
+        let max_used = self
+            .jobs
+            .iter()
+            .flat_map(|j| j.roll_nodes.iter().copied())
+            .max()
+            .unwrap_or(0);
+        self.n_roll_nodes = self.n_roll_nodes.min(max_used + 1);
+        self.roll_load.truncate(self.n_roll_nodes);
+        self.roll_mem.truncate(self.n_roll_nodes);
+    }
+
+    /// Fold one job into the cached aggregates (append-order fold — the
+    /// only way caches are ever built, which keeps them bitwise equal to
+    /// scratch recomputation).
+    fn accumulate_caches(&mut self, job: &GroupJob) {
+        self.t_cycle = self.t_cycle.max(job.t_solo());
+        self.train_load += job.train_occupancy();
+        self.train_mem += job.spec.mem_train_gb();
+        self.slo_budget = self.slo_budget.min(job.spec.slo * job.t_solo());
+        let occ = job.roll_occupancy();
+        let mem = job.spec.mem_roll_gb();
+        for (i, &n) in job.roll_nodes.iter().enumerate() {
+            if job.roll_nodes[..i].contains(&n) {
+                continue; // a duplicated pin counts once (set semantics)
+            }
+            if self.roll_load.len() <= n {
+                self.roll_load.resize(n + 1, 0.0);
+                self.roll_mem.resize(n + 1, 0.0);
+            }
+            self.roll_load[n] += occ;
+            self.roll_mem[n] += mem;
+            if self.roll_load[n] > self.max_roll_load {
+                self.max_roll_load = self.roll_load[n];
+            }
+            if self.roll_mem[n] > HOST_MEM_GB {
+                self.mem_over = true;
+            }
+        }
+    }
+
+    fn rebuild_caches(&mut self) {
+        self.roll_load.clear();
+        self.roll_mem.clear();
+        self.train_load = 0.0;
+        self.train_mem = 0.0;
+        self.t_cycle = 0.0;
+        self.max_roll_load = 0.0;
+        self.slo_budget = f64::INFINITY;
+        self.mem_over = false;
+        let jobs = std::mem::take(&mut self.jobs);
+        for job in &jobs {
+            self.accumulate_caches(job);
+        }
+        self.jobs = jobs;
     }
 
     pub fn train_gpus(&self) -> usize {
         self.n_train_nodes * GPUS_PER_NODE
     }
 
-    /// Aggregate hourly price of all provisioned GPUs — Cost(G).
-    pub fn cost_per_hour(&self) -> f64 {
-        let roll = (self.n_roll_nodes * GPUS_PER_NODE) as f64
+    /// Hourly price of an (n_roll_nodes, n_train_nodes) provisioning — the
+    /// exact expression behind `cost_per_hour`, exposed so marginal costs
+    /// can be computed without materializing hypothetical groups.
+    pub fn cost_for(n_roll_nodes: usize, n_train_nodes: usize) -> f64 {
+        let roll = (n_roll_nodes * GPUS_PER_NODE) as f64
             * GpuKind::H20.spec().cost_per_hour;
-        let train = (self.n_train_nodes * GPUS_PER_NODE) as f64
+        let train = (n_train_nodes * GPUS_PER_NODE) as f64
             * GpuKind::H800.spec().cost_per_hour;
         roll + train
     }
 
+    /// Aggregate hourly price of all provisioned GPUs — Cost(G).
+    pub fn cost_per_hour(&self) -> f64 {
+        Self::cost_for(self.n_roll_nodes, self.n_train_nodes)
+    }
+
     /// Natural cycle time: the longest member's solo iteration (T_cycle).
     pub fn t_cycle(&self) -> f64 {
-        self.jobs.iter().map(|j| j.t_solo()).fold(0.0, f64::max)
+        self.t_cycle
     }
 
     /// Total rollout occupancy pinned to one rollout node per cycle.
     pub fn roll_node_load(&self, node: usize) -> f64 {
-        self.jobs
-            .iter()
-            .filter(|j| j.roll_nodes.contains(&node))
-            .map(|j| j.roll_occupancy())
-            .sum()
+        self.roll_load.get(node).copied().unwrap_or(0.0)
+    }
+
+    /// Host memory pinned to one rollout node, GB.
+    pub fn roll_node_mem(&self, node: usize) -> f64 {
+        self.roll_mem.get(node).copied().unwrap_or(0.0)
+    }
+
+    /// Σ train_occupancy over members (the serial training queue).
+    pub fn train_queue_load(&self) -> f64 {
+        self.train_load
+    }
+
+    /// Σ mem_train_gb over members, GB.
+    pub fn train_mem_gb(&self) -> f64 {
+        self.train_mem
     }
 
     /// Bottleneck load (paper §4.2):
     /// `T_load = max(Σ_j T_train, max_n Σ_{j on n} T_roll)`.
     pub fn t_load(&self) -> f64 {
-        let train: f64 = self.jobs.iter().map(|j| j.train_occupancy()).sum();
-        let roll = (0..self.n_roll_nodes)
-            .map(|n| self.roll_node_load(n))
-            .fold(0.0, f64::max);
-        train.max(roll)
+        self.train_load.max(self.max_roll_load)
     }
 
     /// Saturation predicate — Algorithm 1 line 4 prunes these.
     pub fn is_saturated(&self) -> bool {
-        self.t_load() >= self.t_cycle()
+        self.t_load() >= self.t_cycle
     }
 
     /// Steady-state meta-iteration time of the round-robin schedule.
     /// For unsaturated groups this equals `t_cycle` (Theorem 1); once load
     /// exceeds the natural cycle, the bottleneck resource gates the cycle.
     pub fn t_meta(&self) -> f64 {
-        self.t_cycle().max(self.t_load())
+        self.t_cycle.max(self.t_load())
     }
 
     /// Expected co-execution iteration time of a member (paper §4.2's
@@ -150,29 +318,73 @@ impl Group {
         self.t_meta()
     }
 
-    /// SLO feasibility of the whole group (Algorithm 1 line 10).
+    /// SLO feasibility of the whole group (Algorithm 1 line 10):
+    /// `t_meta <= min_j slo_j * t_solo_j` within tolerance.
     pub fn slo_ok(&self) -> bool {
-        let t_meta = self.t_meta();
-        self.jobs.iter().all(|j| t_meta <= j.spec.slo * j.t_solo() + 1e-9)
+        self.t_meta() <= self.slo_budget + 1e-9
     }
 
     /// Host-memory feasibility (Algorithm 1 line 8): rollout state on each
     /// pinned rollout node, training state on every training node (the
     /// training DP group spans the pool).
     pub fn residency_ok(&self) -> bool {
-        for n in 0..self.n_roll_nodes {
-            let used: f64 = self
-                .jobs
-                .iter()
-                .filter(|j| j.roll_nodes.contains(&n))
-                .map(|j| j.spec.mem_roll_gb())
-                .sum();
-            if used > HOST_MEM_GB {
-                return false;
+        !self.mem_over && self.train_mem <= HOST_MEM_GB
+    }
+
+    /// Clone-free feasibility + marginal-cost check of admitting `probe`
+    /// pinned to `roll_nodes`, with the rollout pool grown by
+    /// `added_nodes` fresh nodes (Algorithm 1 lines 6-14, previously a
+    /// full-group clone per candidate). Returns the provisioning delta
+    /// Δ $/h when every constraint — residency, SLO of all members, and
+    /// the Fig. 6 non-over-saturation guard (Theorem 1's precondition) —
+    /// holds, `None` otherwise. `probe` must have been built against this
+    /// group's `train_gpus()`.
+    pub fn evaluate_admit(&self, probe: &GroupJob, roll_nodes: &[usize], added_nodes: usize) -> Option<f64> {
+        let new_cycle = self.t_cycle.max(probe.t_solo());
+        // The training queue alone must fit the cycle (Fig. 6 precheck;
+        // implied by the final guard, kept first as the cheapest filter).
+        let new_train_load = self.train_load + probe.train_occupancy();
+        if new_train_load > new_cycle + 1e-9 {
+            return None;
+        }
+        // Per-node rollout load and memory on the touched nodes.
+        let occ = probe.roll_occupancy();
+        let probe_mem = probe.spec.mem_roll_gb();
+        let mut new_max_roll = self.max_roll_load;
+        for (i, &n) in roll_nodes.iter().enumerate() {
+            if roll_nodes[..i].contains(&n) {
+                continue;
+            }
+            let load = self.roll_node_load(n) + occ;
+            if load > new_cycle + 1e-9 {
+                return None;
+            }
+            if load > new_max_roll {
+                new_max_roll = load;
+            }
+            if self.roll_node_mem(n) + probe_mem > HOST_MEM_GB {
+                return None;
             }
         }
-        let train_used: f64 = self.jobs.iter().map(|j| j.spec.mem_train_gb()).sum();
-        train_used <= HOST_MEM_GB
+        // Residency (line 8): untouched nodes are unchanged, so the only
+        // pre-existing way to fail is a node already over the limit.
+        if self.mem_over || self.train_mem + probe.spec.mem_train_gb() > HOST_MEM_GB {
+            return None;
+        }
+        // SLO of every member and of the probe itself (line 10).
+        let new_t_load = new_train_load.max(new_max_roll);
+        let new_t_meta = new_cycle.max(new_t_load);
+        let budget = self.slo_budget.min(probe.spec.slo * probe.t_solo());
+        if new_t_meta > budget + 1e-9 {
+            return None;
+        }
+        // Fig. 6: never *create* an over-saturated group — the bottleneck
+        // load must stay within the natural cycle so Theorem 1's
+        // optimality precondition keeps holding.
+        if new_t_load > new_cycle + 1e-9 {
+            return None;
+        }
+        Some(Self::cost_for(self.n_roll_nodes + added_nodes, self.n_train_nodes) - self.cost_per_hour())
     }
 
     /// Idle fraction of each pool under the worst-case round-robin cycle
@@ -186,7 +398,7 @@ impl Group {
             .map(|n| self.roll_node_load(n))
             .sum::<f64>()
             / self.n_roll_nodes.max(1) as f64;
-        let train_busy: f64 = self.jobs.iter().map(|j| j.train_occupancy()).sum();
+        let train_busy = self.train_load;
         (
             1.0 - (roll_busy / t_meta).min(1.0),
             1.0 - (train_busy / t_meta).min(1.0),
@@ -195,11 +407,6 @@ impl Group {
 
     pub fn job_ids(&self) -> Vec<JobId> {
         self.jobs.iter().map(|j| j.spec.id).collect()
-    }
-
-    pub fn remove_job(&mut self, id: JobId) -> Option<GroupJob> {
-        let idx = self.jobs.iter().position(|j| j.spec.id == id)?;
-        Some(self.jobs.remove(idx))
     }
 
     pub fn is_empty(&self) -> bool {
@@ -229,8 +436,7 @@ mod tests {
     fn pack(group: &mut Group, spec: JobSpec, nodes: Vec<usize>) {
         let model = PhaseModel::default();
         let train_gpus = group.train_gpus();
-        let job = GroupJob::new(spec, &model, nodes, train_gpus);
-        group.jobs.push(job);
+        group.admit(GroupJob::new(spec, &model, nodes, train_gpus));
     }
 
     #[test]
@@ -298,6 +504,46 @@ mod tests {
     }
 
     #[test]
+    fn retract_restores_feasibility_and_caches() {
+        let model = PhaseModel::default();
+        let mk = |id| JobSpec { params_b: 14.0, ..direct_job(id, 100.0, 80.0, 10.0) };
+        let mut g = Group::isolated(0, mk(0), &model);
+        for id in 1..5 {
+            pack(&mut g, mk(id), vec![0]);
+        }
+        assert!(!g.residency_ok());
+        let before = g.roll_node_load(0);
+        assert!(g.retract(4).is_some());
+        assert!(g.residency_ok(), "retract must release node memory");
+        assert!(g.roll_node_load(0) < before);
+        assert!(g.retract(4).is_none(), "double retract returns None");
+        assert_eq!(g.jobs().len(), 4);
+    }
+
+    #[test]
+    fn evaluate_admit_matches_materialized_admission() {
+        // The clone-free evaluation must agree with actually admitting.
+        let model = PhaseModel::default();
+        let mut g = Group::isolated(0, direct_job(0, 100.0, 80.0, 2.0), &model);
+        let probe = GroupJob::new(direct_job(1, 80.0, 60.0, 2.0), &model, vec![], g.train_gpus());
+        let delta = g.evaluate_admit(&probe, &[0], 0);
+        assert_eq!(delta, Some(0.0), "direct pack into bubbles is free");
+        let mut job = probe;
+        job.roll_nodes = vec![0];
+        g.admit(job);
+        assert!(g.slo_ok() && g.residency_ok());
+        assert!(g.t_load() <= g.t_cycle() + 1e-9);
+        // A third rollout-heavy job over-saturates node 0 -> infeasible
+        // there, but scaling onto a fresh node is feasible at one H20
+        // node's Δ (train-light so the serial training queue still fits).
+        let probe2 = GroupJob::new(direct_job(2, 100.0, 20.0, 2.0), &model, vec![], g.train_gpus());
+        assert_eq!(g.evaluate_admit(&probe2, &[0], 0), None);
+        let scaled = g.evaluate_admit(&probe2, &[1], 1);
+        assert!(scaled.is_some());
+        assert!((scaled.unwrap() - 8.0 * 1.85).abs() < 1e-9);
+    }
+
+    #[test]
     fn spatial_packing_across_nodes() {
         let model = PhaseModel::default();
         // Big job owning 2 rollout nodes; two small jobs pinned on
@@ -313,7 +559,7 @@ mod tests {
         assert!(g.slo_ok());
         // Same two jobs on the SAME node saturate it (Fig. 3's bad case).
         let mut bad = g.clone();
-        bad.jobs[2].roll_nodes = vec![0];
+        bad.repin(2, vec![0]);
         assert!(bad.roll_node_load(0) > g.roll_node_load(0));
     }
 }

@@ -63,8 +63,8 @@ impl RoundRobin {
 /// Aggregate pool utilizations of one meta-iteration of duration `t_meta`
 /// (the appendix's U_R and U_T).
 pub fn utilization(g: &Group, t_meta: f64) -> (f64, f64) {
-    let roll_work: f64 = g.jobs.iter().map(|j| j.roll_occupancy()).sum();
-    let train_work: f64 = g.jobs.iter().map(|j| j.train_occupancy()).sum();
+    let roll_work: f64 = g.jobs().iter().map(|j| j.roll_occupancy()).sum();
+    let train_work: f64 = g.jobs().iter().map(|j| j.train_occupancy()).sum();
     // Normalize per node so multi-node groups compare fairly.
     let u_r = roll_work / (t_meta * g.n_roll_nodes as f64);
     let u_t = train_work / t_meta;
@@ -76,7 +76,7 @@ pub fn utilization(g: &Group, t_meta: f64) -> (f64, f64) {
 /// slowest job, extending the cycle by at least T_k_solo.
 pub fn cycle_with_repetition(g: &Group, k: JobId) -> f64 {
     let extra = g
-        .jobs
+        .jobs()
         .iter()
         .find(|j| j.spec.id == k)
         .map(|j| j.t_solo())
@@ -91,10 +91,10 @@ pub fn repetition_utilization_delta(g: &Group, k: JobId) -> f64 {
     let t0 = g.t_meta();
     let (u_r0, u_t0) = utilization(g, t0);
     let t1 = cycle_with_repetition(g, k);
-    let job = g.jobs.iter().find(|j| j.spec.id == k).expect("job in group");
-    let roll_work: f64 = g.jobs.iter().map(|j| j.roll_occupancy()).sum::<f64>()
+    let job = g.jobs().iter().find(|j| j.spec.id == k).expect("job in group");
+    let roll_work: f64 = g.jobs().iter().map(|j| j.roll_occupancy()).sum::<f64>()
         + job.roll_occupancy();
-    let train_work: f64 = g.jobs.iter().map(|j| j.train_occupancy()).sum::<f64>()
+    let train_work: f64 = g.jobs().iter().map(|j| j.train_occupancy()).sum::<f64>()
         + job.train_occupancy();
     let u_r1 = roll_work / (t1 * g.n_roll_nodes as f64);
     let u_t1 = train_work / t1;
@@ -127,7 +127,7 @@ mod tests {
         let mut g = Group::isolated(0, specs[0].clone(), &model);
         for s in specs.into_iter().skip(1) {
             let gj = GroupJob::new(s, &model, vec![0], g.train_gpus());
-            g.jobs.push(gj);
+            g.admit(gj);
         }
         g
     }

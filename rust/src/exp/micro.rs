@@ -46,20 +46,20 @@ impl GroupScheduler for NaiveColocate {
         let id = spec.id;
         if self.groups.is_empty() {
             let g = Group::isolated(0, spec, &self.model);
-            let nodes = g.jobs[0].roll_nodes.clone();
+            let nodes = g.jobs()[0].roll_nodes.clone();
             self.groups.push(g);
             Decision { job: id, group_id: 0, kind: PlacementKind::Isolated, marginal_cost: 0.0, roll_nodes: nodes }
         } else {
             let g = &mut self.groups[0];
             let nodes: Vec<usize> = (0..spec.n_roll_nodes()).collect();
             let gj = GroupJob::new(spec, &self.model, nodes.clone(), g.train_gpus());
-            g.jobs.push(gj);
+            g.admit(gj);
             Decision { job: id, group_id: 0, kind: PlacementKind::DirectPack, marginal_cost: 0.0, roll_nodes: nodes }
         }
     }
     fn complete(&mut self, job: usize) {
         for g in &mut self.groups {
-            g.remove_job(job);
+            g.retract(job);
         }
         self.groups.retain(|g| !g.is_empty());
     }

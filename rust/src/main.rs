@@ -107,7 +107,7 @@ fn serve_demo(opts: &ExpOpts) {
         println!(
             "  group {:>2}: {} jobs, {}xH20-node {}xH800-node, cycle {:.0}s load {:.0}s",
             g.id,
-            g.jobs.len(),
+            g.jobs().len(),
             g.n_roll_nodes,
             g.n_train_nodes,
             g.t_cycle(),

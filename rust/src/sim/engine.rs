@@ -5,9 +5,18 @@
 //! resource (the DP group spans it — paper footnote 2). Phases wait in
 //! per-group FIFO queues (the runtime-hook-driven queues of §5.1) and are
 //! dispatched work-conservingly as resources free up.
+//!
+//! Hot-path layout (EXPERIMENTS.md §Perf): job runtime state lives in a
+//! dense slab (`Vec<JobRt>`, slots assigned in arrival order, never
+//! reused) and events carry slot indices, so per-event bookkeeping is
+//! plain indexed loads instead of `HashMap` probes. Per-group node
+//! occupancy is a dense `Vec<Option<slot>>`, and the phase queue is a
+//! true FIFO `VecDeque`: entries are enqueued at non-decreasing
+//! (time, seq), so insertion order IS the old sorted order and the
+//! per-dispatch sort the seed engine paid is dropped entirely.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::cluster::node::GPUS_PER_NODE;
 use crate::cluster::{GpuKind, PhaseModel};
@@ -189,10 +198,13 @@ impl SimResult {
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum Ev {
+    /// Index into the trace (the job has no slot yet).
     Arrival(usize),
     /// Rollout tail consolidated onto `kept` nodes; free the rest.
-    TailFree(JobId, usize),
-    PhaseDone(JobId, PhaseKind, usize),
+    /// Carries the job's slab slot.
+    TailFree(usize, usize),
+    /// (slot, kind, iter).
+    PhaseDone(usize, PhaseKind, usize),
 }
 
 #[derive(Clone, Debug)]
@@ -204,7 +216,7 @@ struct Event {
 
 impl PartialEq for Event {
     fn eq(&self, o: &Self) -> bool {
-        self.t == o.t && self.seq == o.seq
+        self.t.total_cmp(&o.t) == Ordering::Equal && self.seq == o.seq
     }
 }
 impl Eq for Event {}
@@ -215,16 +227,23 @@ impl PartialOrd for Event {
 }
 impl Ord for Event {
     fn cmp(&self, o: &Self) -> Ordering {
-        // min-heap by (time, seq)
-        o.t.partial_cmp(&self.t).unwrap().then(o.seq.cmp(&self.seq))
+        // min-heap by (time, seq); total_cmp keeps the heap sane even if
+        // a NaN duration ever slips in (it sorts last instead of
+        // panicking mid-pop).
+        o.t.total_cmp(&self.t).then(o.seq.cmp(&self.seq))
     }
 }
 
-/// Runtime state of an admitted job.
+/// Runtime state of an admitted job (one dense slab entry; slots are
+/// assigned in arrival order and never reused, so a slot in a stale event
+/// can never alias a different job).
 struct JobRt {
     spec: JobSpec,
     group: usize,
     roll_nodes: Vec<usize>,
+    /// The group's training GPUs at admission (constant: RollMux never
+    /// rescales a group's training pool — paper footnote 2).
+    train_gpus: usize,
     /// t_train scale from DP-rescale onto the group pool.
     train_scale: f64,
     t_sync: f64,
@@ -242,36 +261,61 @@ struct JobRt {
     /// Consolidation pause to apply when the rollout completes (set when
     /// a migration actually fired).
     tail_penalty: f64,
-    /// Nodes still held by the rollout tail (after migration fires).
-    waiting_since: f64,
+    /// Finished: stale events against this slot are ignored.
+    done: bool,
 }
 
 /// Pending phase request in a group's FIFO queue.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 struct Pending {
-    job: JobId,
+    slot: usize,
     kind: PhaseKind,
-    enqueued: f64,
-    seq: u64,
 }
 
 #[derive(Default)]
 struct GroupRt {
-    /// busy[node] = true while a phase (or its tail) holds the node.
-    roll_busy: HashMap<usize, JobId>,
-    train_busy: Option<JobId>,
-    queue: Vec<Pending>,
+    /// roll_busy[node] = Some(slot) while a phase (or its tail) holds the
+    /// node; indices past the end are free (pool growth is lazy).
+    roll_busy: Vec<Option<usize>>,
+    train_busy: Option<usize>,
+    /// FIFO queue; see module docs for why no sort is needed.
+    queue: VecDeque<Pending>,
+}
+
+impl GroupRt {
+    fn node_free(&self, n: usize) -> bool {
+        !matches!(self.roll_busy.get(n), Some(Some(_)))
+    }
+
+    fn occupy(&mut self, n: usize, slot: usize) {
+        if self.roll_busy.len() <= n {
+            self.roll_busy.resize(n + 1, None);
+        }
+        self.roll_busy[n] = Some(slot);
+    }
+
+    fn release_if_held(&mut self, n: usize, slot: usize) {
+        if let Some(b) = self.roll_busy.get_mut(n) {
+            if *b == Some(slot) {
+                *b = None;
+            }
+        }
+    }
 }
 
 pub struct Simulator<S: GroupScheduler> {
     pub cfg: SimConfig,
     pub sched: S,
-    trace: Vec<JobSpec>,
+    /// Specs are taken (not cloned) out of the trace on arrival.
+    trace: Vec<Option<JobSpec>>,
     events: BinaryHeap<Event>,
     seq: u64,
     now: f64,
-    jobs: HashMap<JobId, JobRt>,
-    groups: HashMap<usize, GroupRt>,
+    /// Dense job slab, arrival order; never shrinks.
+    jobs: Vec<JobRt>,
+    /// Dense per-group runtime, indexed by group id (ids are handed out
+    /// monotonically by every scheduler implementation).
+    group_rt: Vec<GroupRt>,
     res: SimResult,
     /// Cost integration state.
     last_rate_change: f64,
@@ -285,12 +329,12 @@ impl<S: GroupScheduler> Simulator<S> {
         let mut sim = Simulator {
             cfg,
             sched,
-            trace,
+            trace: trace.into_iter().map(Some).collect(),
             events: BinaryHeap::new(),
             seq: 0,
             now: 0.0,
-            jobs: HashMap::new(),
-            groups: HashMap::new(),
+            jobs: Vec::new(),
+            group_rt: Vec::new(),
             res: SimResult::default(),
             last_rate_change: 0.0,
             cur_rate_per_h: 0.0,
@@ -298,7 +342,7 @@ impl<S: GroupScheduler> Simulator<S> {
             cur_train_gpus: 0,
         };
         for i in 0..sim.trace.len() {
-            let t = sim.trace[i].arrival_s;
+            let t = sim.trace[i].as_ref().expect("fresh trace").arrival_s;
             sim.push(t, Ev::Arrival(i));
         }
         sim
@@ -337,8 +381,8 @@ impl<S: GroupScheduler> Simulator<S> {
             self.now = t;
             match ev {
                 Ev::Arrival(i) => self.on_arrival(i),
-                Ev::PhaseDone(job, kind, iter) => self.on_phase_done(job, kind, iter),
-                Ev::TailFree(job, kept) => self.on_tail_free(job, kept),
+                Ev::PhaseDone(slot, kind, iter) => self.on_phase_done(slot, kind, iter),
+                Ev::TailFree(slot, kept) => self.on_tail_free(slot, kept),
             }
         }
         self.integrate_cost();
@@ -351,8 +395,14 @@ impl<S: GroupScheduler> Simulator<S> {
         self.res
     }
 
+    fn ensure_group_rt(&mut self, gid: usize) {
+        if self.group_rt.len() <= gid {
+            self.group_rt.resize_with(gid + 1, GroupRt::default);
+        }
+    }
+
     fn on_arrival(&mut self, idx: usize) {
-        let spec = self.trace[idx].clone();
+        let spec = self.trace[idx].take().expect("arrival fires once per job");
         let id = spec.id;
         let d = self.sched.place(spec.clone());
         self.rate_changed();
@@ -363,59 +413,61 @@ impl<S: GroupScheduler> Simulator<S> {
             .iter()
             .find(|g| g.id == d.group_id)
             .expect("placed group exists");
-        let gj = group.jobs.iter().find(|j| j.spec.id == id).expect("job in group");
+        let gj = group.jobs().iter().find(|j| j.spec.id == id).expect("job in group");
+        let train_gpus = group.train_gpus();
         let train_scale = if matches!(spec.phases, PhaseSpec::Direct { .. }) {
             1.0
         } else {
-            spec.n_train_gpus as f64 / group.train_gpus() as f64
+            spec.n_train_gpus as f64 / train_gpus as f64
         };
         let t_sync = sync_time_s(
             self.cfg.sync_scheme,
             spec.model_bytes(),
-            group.train_gpus(),
+            train_gpus,
             spec.n_roll_gpus,
         );
         let solo_est_iter_s = gj.t_solo();
+        let cold = self.cfg.switch.cold_s(spec.params_b, crate::cluster::node::PoolKind::Rollout);
         let mut rng = Rng::new(self.cfg.seed ^ (id as u64).wrapping_mul(0x9E37_79B9));
         let rt = JobRt {
             group: d.group_id,
-            roll_nodes: d.roll_nodes.clone(),
+            roll_nodes: d.roll_nodes,
+            train_gpus,
             train_scale,
             t_sync,
             iter: 0,
             solo_s: 0.0,
             solo_est_iter_s,
-            init_s: 0.0,
+            init_s: cold,
             migrations: 0,
             rng: rng.fork(1),
             cur_troll: 0.0,
             cur_ttrain: 0.0,
             cur_roll_end: 0.0,
             tail_penalty: 0.0,
-            waiting_since: self.now,
+            done: false,
             spec,
         };
-        self.jobs.insert(id, rt);
-        self.groups.entry(d.group_id).or_default();
+        let slot = self.jobs.len();
+        self.jobs.push(rt);
+        self.ensure_group_rt(d.group_id);
 
         // One-time Init (cold start of the job's state into the caches).
-        let cold = self.cfg.switch.cold_s(self.jobs[&id].spec.params_b, crate::cluster::node::PoolKind::Rollout);
-        self.jobs.get_mut(&id).unwrap().init_s = cold;
         let t_done = self.now + cold;
-        self.record(id, d.group_id, PhaseKind::Init, 0, self.now, t_done, vec![]);
-        self.push(t_done, Ev::PhaseDone(id, PhaseKind::Init, 0));
+        self.record(slot, PhaseKind::Init, 0, self.now, t_done, &[]);
+        self.push(t_done, Ev::PhaseDone(slot, PhaseKind::Init, 0));
     }
 
-    fn sample_iteration(&mut self, id: JobId) {
-        let rt = self.jobs.get_mut(&id).unwrap();
+    fn sample_iteration(&mut self, slot: usize) {
+        let rt = &mut self.jobs[slot];
         let s = rt.spec.sample_iter(&self.cfg.model, &mut rt.rng);
         rt.cur_troll = s.t_roll;
         rt.cur_ttrain = s.t_train * rt.train_scale;
         rt.solo_s += s.t_roll + rt.cur_ttrain + rt.t_sync;
     }
 
-    fn switch_cost(&self, id: JobId, pool: crate::cluster::node::PoolKind) -> f64 {
-        let p = self.jobs[&id].spec.params_b;
+    fn switch_cost(&self, slot: usize, pool: crate::cluster::node::PoolKind) -> f64 {
+        let p = self.jobs[slot].spec.params_b;
         if self.cfg.warm_starts {
             self.cfg.switch.warm_s(p, pool)
         } else {
@@ -423,29 +475,22 @@ impl<S: GroupScheduler> Simulator<S> {
         }
     }
 
-    fn enqueue(&mut self, id: JobId, kind: PhaseKind) {
-        let g = self.jobs[&id].group;
-        self.seq += 1;
-        let p = Pending { job: id, kind, enqueued: self.now, seq: self.seq };
-        self.groups.get_mut(&g).unwrap().queue.push(p);
-        self.jobs.get_mut(&id).unwrap().waiting_since = self.now;
-        self.try_dispatch(g);
+    fn enqueue(&mut self, slot: usize, kind: PhaseKind) {
+        let gid = self.jobs[slot].group;
+        self.group_rt[gid].queue.push_back(Pending { slot, kind });
+        self.try_dispatch(gid);
     }
 
     /// Work-conserving FIFO dispatch over the group's queue.
     fn try_dispatch(&mut self, gid: usize) {
         loop {
-            let grt = self.groups.get_mut(&gid).unwrap();
-            grt.queue.sort_by(|a, b| {
-                a.enqueued.partial_cmp(&b.enqueued).unwrap().then(a.seq.cmp(&b.seq))
-            });
+            let grt = &self.group_rt[gid];
             let mut started = None;
             for (qi, p) in grt.queue.iter().enumerate() {
                 match p.kind {
                     PhaseKind::Rollout => {
-                        let nodes = &self.jobs[&p.job].roll_nodes;
-                        let free = nodes.iter().all(|n| !grt.roll_busy.contains_key(n));
-                        if free {
+                        let nodes = &self.jobs[p.slot].roll_nodes;
+                        if nodes.iter().all(|&n| grt.node_free(n)) {
                             started = Some(qi);
                             break;
                         }
@@ -460,207 +505,223 @@ impl<S: GroupScheduler> Simulator<S> {
                 }
             }
             let Some(qi) = started else { return };
-            let p = self.groups.get_mut(&gid).unwrap().queue.remove(qi);
-            self.start_phase(gid, p.job, p.kind);
+            let p = self.group_rt[gid].queue.remove(qi).expect("queue index valid");
+            self.start_phase(gid, p.slot, p.kind);
         }
     }
 
-    fn start_phase(&mut self, gid: usize, id: JobId, kind: PhaseKind) {
-        let iter = self.jobs[&id].iter;
+    fn start_phase(&mut self, gid: usize, slot: usize, kind: PhaseKind) {
+        let iter = self.jobs[slot].iter;
         match kind {
             PhaseKind::Rollout => {
-                let warm = self.switch_cost(id, crate::cluster::node::PoolKind::Rollout);
-                let (nodes, t_roll) = {
-                    let rt = &self.jobs[&id];
-                    (rt.roll_nodes.clone(), rt.cur_troll)
-                };
-                let grt = self.groups.get_mut(&gid).unwrap();
-                for &n in &nodes {
-                    grt.roll_busy.insert(n, id);
+                let warm = self.switch_cost(slot, crate::cluster::node::PoolKind::Rollout);
+                let t_roll = self.jobs[slot].cur_troll;
+                let n_pins = self.jobs[slot].roll_nodes.len();
+                for i in 0..n_pins {
+                    let n = self.jobs[slot].roll_nodes[i];
+                    self.group_rt[gid].occupy(n, slot);
                 }
                 // Long-tail migration (paper §4.3): the plan is prepared
                 // here, but whether to consolidate is decided when the
                 // threshold is reached — only if another rollout is then
                 // actually waiting for these nodes (opportunistic).
-                let rt = self.jobs.get_mut(&id).unwrap();
-                let sample = crate::workload::job::IterSample {
-                    t_roll,
-                    t_train: rt.cur_ttrain,
-                    tail_start_frac: {
-                        // re-derive the tail from the job's stream so the
-                        // plan matches this iteration deterministically
-                        rt.rng.fork(iter as u64).uniform(0.55, 0.85)
-                    },
-                    tail_gpu_frac: rt.rng.fork(iter as u64 ^ 0xabc).uniform(0.1, 0.35),
-                };
                 let end = self.now + warm + t_roll;
-                self.jobs.get_mut(&id).unwrap().cur_roll_end = end;
-                if let Some(plan) = self.cfg.migration.plan(&sample, nodes.len()) {
+                let sample = {
+                    let rt = &mut self.jobs[slot];
+                    let sample = crate::workload::job::IterSample {
+                        t_roll,
+                        t_train: rt.cur_ttrain,
+                        tail_start_frac: {
+                            // re-derive the tail from the job's stream so the
+                            // plan matches this iteration deterministically
+                            rt.rng.fork(iter as u64).uniform(0.55, 0.85)
+                        },
+                        tail_gpu_frac: rt.rng.fork(iter as u64 ^ 0xabc).uniform(0.1, 0.35),
+                    };
+                    rt.cur_roll_end = end;
+                    sample
+                };
+                if let Some(plan) = self.cfg.migration.plan(&sample, n_pins) {
                     let t_check = self.now + warm + plan.trigger_at_s;
-                    self.push(t_check, Ev::TailFree(id, plan.nodes_kept));
+                    self.push(t_check, Ev::TailFree(slot, plan.nodes_kept));
                 }
                 // Busy accounting assumes no migration; adjusted in
                 // on_tail_free when a consolidation actually happens.
                 self.res.roll_busy_gpu_s +=
-                    (warm + t_roll) * nodes.len() as f64 * GPUS_PER_NODE as f64;
-                self.record(id, gid, PhaseKind::Rollout, iter, self.now, end, nodes);
-                self.push(end, Ev::PhaseDone(id, PhaseKind::Rollout, iter));
+                    (warm + t_roll) * n_pins as f64 * GPUS_PER_NODE as f64;
+                self.record_rollout(slot, iter, self.now, end);
+                self.push(end, Ev::PhaseDone(slot, PhaseKind::Rollout, iter));
             }
             PhaseKind::Train => {
-                let warm = self.switch_cost(id, crate::cluster::node::PoolKind::Train);
-                let t_train = self.jobs[&id].cur_ttrain;
-                let grt = self.groups.get_mut(&gid).unwrap();
-                grt.train_busy = Some(id);
+                let warm = self.switch_cost(slot, crate::cluster::node::PoolKind::Train);
+                let t_train = self.jobs[slot].cur_ttrain;
+                self.group_rt[gid].train_busy = Some(slot);
                 let end = self.now + warm + t_train;
-                let train_gpus = self
-                    .sched
-                    .groups()
-                    .iter()
-                    .find(|g| g.id == gid)
-                    .map(|g| g.train_gpus())
-                    .unwrap_or(8);
+                let train_gpus = self.jobs[slot].train_gpus;
                 self.res.train_busy_gpu_s += (warm + t_train) * train_gpus as f64;
-                self.record(id, gid, PhaseKind::Train, iter, self.now, end, vec![]);
-                self.push(end, Ev::PhaseDone(id, PhaseKind::Train, iter));
+                self.record(slot, PhaseKind::Train, iter, self.now, end, &[]);
+                self.push(end, Ev::PhaseDone(slot, PhaseKind::Train, iter));
             }
             _ => unreachable!(),
         }
     }
 
-    fn on_tail_free(&mut self, id: JobId, kept: usize) {
+    fn on_tail_free(&mut self, slot: usize, kept: usize) {
         // The rollout hit its completion threshold. Consolidate the tail
         // (paper Fig. 7-bottom) only if another rollout is actually
         // waiting for one of this job's nodes; otherwise let it run out.
-        let Some(rt) = self.jobs.get(&id) else { return };
-        if rt.cur_roll_end <= self.now {
+        if self.jobs[slot].done {
+            return;
+        }
+        if self.jobs[slot].cur_roll_end <= self.now {
             return; // phase already over (stale check)
         }
-        let gid = rt.group;
-        let nodes = rt.roll_nodes.clone();
+        let gid = self.jobs[slot].group;
         let has_waiter = {
-            let grt = self.groups.get(&gid).unwrap();
+            let grt = &self.group_rt[gid];
+            let nodes = &self.jobs[slot].roll_nodes;
             grt.queue.iter().any(|p| {
                 p.kind == PhaseKind::Rollout
-                    && self.jobs.get(&p.job).is_some_and(|w| {
-                        w.roll_nodes.iter().any(|n| nodes.contains(n))
-                    })
+                    && self.jobs[p.slot]
+                        .roll_nodes
+                        .iter()
+                        .any(|n| nodes.contains(n))
             })
         };
         if !has_waiter {
             return;
         }
         let penalty = self.cfg.migration.migrate_cost_s;
-        let remaining = {
-            let rt = self.jobs.get_mut(&id).unwrap();
+        let (remaining, n_pins) = {
+            let rt = &mut self.jobs[slot];
             rt.tail_penalty = penalty;
             rt.migrations += 1;
-            rt.cur_roll_end - self.now
+            (rt.cur_roll_end - self.now, rt.roll_nodes.len())
         };
         // Busy adjustment: freed nodes stop counting; the consolidated
         // tail occupies `kept` nodes plus a sub-node GPU fraction for the
         // remaining time (+ pause).
-        let freed = nodes.len() - kept;
+        let freed = n_pins - kept;
         self.res.roll_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
         self.res.roll_busy_gpu_s +=
             (remaining + penalty) * (kept as f64 + 0.25) * GPUS_PER_NODE as f64;
-        let grt = self.groups.get_mut(&gid).unwrap();
-        for &n in nodes.iter().skip(kept) {
-            if grt.roll_busy.get(&n) == Some(&id) {
-                grt.roll_busy.remove(&n);
-            }
+        for i in kept..n_pins {
+            let n = self.jobs[slot].roll_nodes[i];
+            self.group_rt[gid].release_if_held(n, slot);
         }
         self.try_dispatch(gid);
     }
 
-    fn on_phase_done(&mut self, id: JobId, kind: PhaseKind, iter: usize) {
-        let Some(rt) = self.jobs.get(&id) else { return };
-        let gid = rt.group;
+    fn on_phase_done(&mut self, slot: usize, kind: PhaseKind, iter: usize) {
+        if self.jobs[slot].done {
+            return;
+        }
+        let gid = self.jobs[slot].group;
         match kind {
             PhaseKind::Init => {
-                self.sample_iteration(id);
-                self.enqueue(id, PhaseKind::Rollout);
+                self.sample_iteration(slot);
+                self.enqueue(slot, PhaseKind::Rollout);
             }
             PhaseKind::Rollout => {
                 // If the tail was consolidated, its completion is delayed
                 // by the migration pause (applied exactly once).
                 {
-                    let rt = self.jobs.get_mut(&id).unwrap();
+                    let rt = &mut self.jobs[slot];
                     if rt.tail_penalty > 0.0 {
                         let p = std::mem::take(&mut rt.tail_penalty);
                         rt.cur_roll_end = self.now + p;
-                        self.push(self.now + p, Ev::PhaseDone(id, PhaseKind::Rollout, iter));
+                        self.push(self.now + p, Ev::PhaseDone(slot, PhaseKind::Rollout, iter));
                         return;
                     }
                 }
                 // Release any nodes still held.
-                let nodes = self.jobs[&id].roll_nodes.clone();
-                let grt = self.groups.get_mut(&gid).unwrap();
-                for &n in &nodes {
-                    if grt.roll_busy.get(&n) == Some(&id) {
-                        grt.roll_busy.remove(&n);
-                    }
+                let n_pins = self.jobs[slot].roll_nodes.len();
+                for i in 0..n_pins {
+                    let n = self.jobs[slot].roll_nodes[i];
+                    self.group_rt[gid].release_if_held(n, slot);
                 }
-                self.enqueue(id, PhaseKind::Train);
+                self.enqueue(slot, PhaseKind::Train);
                 self.try_dispatch(gid);
             }
             PhaseKind::Train => {
-                let grt = self.groups.get_mut(&gid).unwrap();
-                if grt.train_busy == Some(id) {
+                let grt = &mut self.group_rt[gid];
+                if grt.train_busy == Some(slot) {
                     grt.train_busy = None;
                 }
                 // Sync occupies the network, not the pools.
-                let t_sync = self.jobs[&id].t_sync;
+                let t_sync = self.jobs[slot].t_sync;
                 let end = self.now + t_sync;
-                self.record(id, gid, PhaseKind::Sync, iter, self.now, end, vec![]);
-                self.push(end, Ev::PhaseDone(id, PhaseKind::Sync, iter));
+                self.record(slot, PhaseKind::Sync, iter, self.now, end, &[]);
+                self.push(end, Ev::PhaseDone(slot, PhaseKind::Sync, iter));
                 self.try_dispatch(gid);
             }
             PhaseKind::Sync => {
-                let rt = self.jobs.get_mut(&id).unwrap();
+                let rt = &mut self.jobs[slot];
                 rt.iter += 1;
                 if rt.iter >= rt.spec.n_iters {
-                    self.finish_job(id);
+                    self.finish_job(slot);
                 } else {
-                    self.sample_iteration(id);
-                    self.enqueue(id, PhaseKind::Rollout);
+                    self.sample_iteration(slot);
+                    self.enqueue(slot, PhaseKind::Rollout);
                 }
             }
         }
     }
 
-    fn finish_job(&mut self, id: JobId) {
-        let rt = self.jobs.remove(&id).unwrap();
-        self.res.outcomes.insert(
-            id,
-            JobOutcome {
-                arrival_s: rt.spec.arrival_s,
-                finish_s: self.now,
-                solo_actual_s: rt.solo_s,
-                solo_est_s: rt.init_s + rt.solo_est_iter_s * rt.spec.n_iters as f64,
-                slo: rt.spec.slo,
-                iters: rt.iter,
-                migrations: rt.migrations,
-            },
-        );
+    fn finish_job(&mut self, slot: usize) {
+        let (id, gid, outcome) = {
+            let rt = &mut self.jobs[slot];
+            rt.done = true;
+            (
+                rt.spec.id,
+                rt.group,
+                JobOutcome {
+                    arrival_s: rt.spec.arrival_s,
+                    finish_s: self.now,
+                    solo_actual_s: rt.solo_s,
+                    solo_est_s: rt.init_s + rt.solo_est_iter_s * rt.spec.n_iters as f64,
+                    slo: rt.spec.slo,
+                    iters: rt.iter,
+                    migrations: rt.migrations,
+                },
+            )
+        };
+        self.res.outcomes.insert(id, outcome);
         self.sched.complete(id);
         self.rate_changed();
         // Re-dispatch in case the group shrank / freed capacity.
-        self.try_dispatch(rt.group);
+        self.try_dispatch(gid);
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn record(
-        &mut self,
-        job: JobId,
-        group: usize,
-        kind: PhaseKind,
-        iter: usize,
-        start: f64,
-        end: f64,
-        roll_nodes: Vec<usize>,
-    ) {
+    fn record(&mut self, slot: usize, kind: PhaseKind, iter: usize, start: f64, end: f64, roll_nodes: &[usize]) {
         if self.cfg.record_gantt {
-            self.res.records.push(PhaseRecord { job, group, kind, iter, start, end, roll_nodes });
+            let rt = &self.jobs[slot];
+            self.res.records.push(PhaseRecord {
+                job: rt.spec.id,
+                group: rt.group,
+                kind,
+                iter,
+                start,
+                end,
+                roll_nodes: roll_nodes.to_vec(),
+            });
+        }
+    }
+
+    /// Rollout record: the node list is only cloned when gantt recording
+    /// is on (the per-phase allocation the seed engine paid regardless).
+    fn record_rollout(&mut self, slot: usize, iter: usize, start: f64, end: f64) {
+        if self.cfg.record_gantt {
+            let rt = &self.jobs[slot];
+            self.res.records.push(PhaseRecord {
+                job: rt.spec.id,
+                group: rt.group,
+                kind: PhaseKind::Rollout,
+                iter,
+                start,
+                end,
+                roll_nodes: rt.roll_nodes.clone(),
+            });
         }
     }
 }
@@ -772,13 +833,13 @@ mod tests {
             }
         }
         for (_, mut spans) in by_node2 {
-            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            spans.sort_by(|a, b| a.0.total_cmp(&b.0));
             for w in spans.windows(2) {
                 assert!(w[1].0 >= w[0].1 - 1e-6, "overlap: {:?}", w);
             }
         }
         for (_, mut spans) in by_train {
-            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            spans.sort_by(|a, b| a.0.total_cmp(&b.0));
             for w in spans.windows(2) {
                 assert!(w[1].0 >= w[0].1 - 1e-6, "train overlap: {:?}", w);
             }
@@ -835,5 +896,29 @@ mod tests {
             cold.makespan_s,
             warm.makespan_s
         );
+    }
+
+    #[test]
+    fn gantt_off_records_nothing_but_same_outcomes() {
+        // The dense engine only materializes PhaseRecords when asked;
+        // outcomes must be identical either way (records are pure output).
+        let mk = || vec![
+            direct_job(0, 100.0, 80.0, 2.0, 6, 0.0),
+            direct_job(1, 80.0, 60.0, 2.0, 6, 50.0),
+        ];
+        let on = run_rollmux(cfg(), mk());
+        let off = run_rollmux(SimConfig::default(), mk());
+        assert!(!on.records.is_empty());
+        assert!(off.records.is_empty());
+        assert_eq!(on.outcomes.len(), off.outcomes.len());
+        for (id, o) in &on.outcomes {
+            let o2 = &off.outcomes[id];
+            assert_eq!(o.finish_s.to_bits(), o2.finish_s.to_bits());
+            assert_eq!(o.solo_actual_s.to_bits(), o2.solo_actual_s.to_bits());
+            assert_eq!(o.iters, o2.iters);
+            assert_eq!(o.migrations, o2.migrations);
+        }
+        assert_eq!(on.makespan_s.to_bits(), off.makespan_s.to_bits());
+        assert_eq!(on.cost_usd.to_bits(), off.cost_usd.to_bits());
     }
 }

@@ -37,15 +37,45 @@ pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchS
         std::hint::black_box(f());
         samples.push(t0.elapsed().as_secs_f64());
     }
-    BenchStats {
-        mean_s: stats::mean(&samples),
-        p50_s: stats::percentile(&samples, 50.0),
-        p99_s: stats::percentile(&samples, 99.0),
-        iters,
+    BenchStats::from_samples(samples)
+}
+
+/// Like [`bench`], but each run gets a fresh input built by `setup`
+/// OUTSIDE the timed region — for measuring an operation whose input
+/// must be rebuilt per run (e.g. a scheduler state that the measured
+/// call mutates) without folding the rebuild into the numbers.
+pub fn bench_with_setup<I, T>(
+    warmup: usize,
+    iters: usize,
+    mut setup: impl FnMut() -> I,
+    mut f: impl FnMut(I) -> T,
+) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f(setup()));
     }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let input = setup();
+        let t0 = Instant::now();
+        let out = std::hint::black_box(f(input));
+        samples.push(t0.elapsed().as_secs_f64());
+        // The result (which may own the bulky input, e.g. a cloned
+        // scheduler state) is dropped outside the timed region.
+        drop(out);
+    }
+    BenchStats::from_samples(samples)
 }
 
 impl BenchStats {
+    pub fn from_samples(samples: Vec<f64>) -> Self {
+        BenchStats {
+            mean_s: stats::mean(&samples),
+            p50_s: stats::percentile(&samples, 50.0),
+            p99_s: stats::percentile(&samples, 99.0),
+            iters: samples.len(),
+        }
+    }
+
     pub fn report(&self, name: &str) {
         println!(
             "{name:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  (n={})",
@@ -54,6 +84,49 @@ impl BenchStats {
             fmt_dur(self.p99_s),
             self.iters
         );
+    }
+
+    /// Report AND emit a machine-readable record (see [`emit_bench_json`]):
+    /// mean/p50/p99 seconds, sample count, and ops/s (`1/mean` scaled by
+    /// `ops_per_run` — e.g. placements per schedule call, phases per
+    /// simulated replay).
+    pub fn report_json(&self, bench_bin: &str, name: &str, ops_per_run: f64) {
+        self.report(name);
+        emit_bench_json(
+            bench_bin,
+            name,
+            &[
+                ("mean_s", self.mean_s),
+                ("p50_s", self.p50_s),
+                ("p99_s", self.p99_s),
+                ("iters", self.iters as f64),
+                ("ops_per_s", ops_per_run / self.mean_s.max(1e-12)),
+            ],
+        );
+    }
+}
+
+/// Append one benchmark record as a JSON line to the file named by the
+/// `BENCH_JSON_OUT` env var; no-op when unset. `scripts/bench.sh` points
+/// every bench binary at one file and assembles the repo-root
+/// `BENCH_1.json` from the collected lines, so the perf trajectory is
+/// machine-readable across PRs (ISSUE 1 acceptance).
+pub fn emit_bench_json(bench_bin: &str, name: &str, fields: &[(&str, f64)]) {
+    let Ok(path) = std::env::var("BENCH_JSON_OUT") else { return };
+    if path.is_empty() {
+        return;
+    }
+    let mut pairs = vec![("bench", json::s(bench_bin)), ("name", json::s(name))];
+    for &(k, v) in fields {
+        pairs.push((k, json::num(v)));
+    }
+    let line = json::obj(pairs).to_string();
+    use std::io::Write as _;
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{line}");
+        }
+        Err(e) => eprintln!("BENCH_JSON_OUT={path}: {e}"),
     }
 }
 
@@ -78,5 +151,53 @@ mod tests {
         assert!(super::fmt_dur(2e-5).ends_with("us"));
         assert!(super::fmt_dur(2e-2).ends_with("ms"));
         assert!(super::fmt_dur(2.0).ends_with(" s"));
+    }
+
+    #[test]
+    fn bench_with_setup_times_only_the_run() {
+        // Setup really burns ~5 ms per run; the samples must not see it.
+        let stats = super::bench_with_setup(
+            0,
+            5,
+            || std::thread::sleep(std::time::Duration::from_millis(5)),
+            |_unit| 42u64,
+        );
+        assert_eq!(stats.iters, 5);
+        assert!(stats.mean_s < 2e-3, "setup leaked into timing: {}", stats.mean_s);
+        assert!(stats.p99_s >= stats.p50_s);
+    }
+
+    #[test]
+    fn bench_with_setup_drops_result_outside_timing() {
+        // The run's RESULT can own expensive-to-drop state (e.g. a cloned
+        // scheduler); its teardown must not show up in the samples either.
+        struct SlowDrop;
+        impl Drop for SlowDrop {
+            fn drop(&mut self) {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+        let stats = super::bench_with_setup(0, 5, || (), |()| SlowDrop);
+        assert!(stats.mean_s < 2e-3, "drop leaked into timing: {}", stats.mean_s);
+    }
+
+    #[test]
+    fn bench_json_lines_are_valid_json() {
+        let dir = std::env::temp_dir().join(format!("rollmux_bench_{}", std::process::id()));
+        let path = dir.join("bench.jsonl");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("BENCH_JSON_OUT", &path);
+        super::emit_bench_json("unit", "case/a", &[("mean_s", 0.5), ("ops_per_s", 2.0)]);
+        super::emit_bench_json("unit", "case/b", &[("iters", 3.0)]);
+        std::env::remove_var("BENCH_JSON_OUT");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = super::json::Json::parse(line).expect("each record parses");
+            assert_eq!(j.get("bench").unwrap().as_str(), Some("unit"));
+            assert!(j.get("name").is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -7,6 +7,7 @@
 use rollmux::baselines::heuristic::{GreedyScheduler, RandomScheduler};
 use rollmux::cluster::node::HOST_MEM_GB;
 use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::group::{Group, GroupJob};
 use rollmux::coordinator::inter::InterGroupScheduler;
 use rollmux::coordinator::intra::repetition_utilization_delta;
 use rollmux::coordinator::migration::MigrationPolicy;
@@ -74,7 +75,7 @@ fn prop_residency_never_violated() {
                 assert!(g.residency_ok(), "seed {seed}: residency violated");
                 for n in 0..g.n_roll_nodes {
                     let used: f64 = g
-                        .jobs
+                        .jobs()
                         .iter()
                         .filter(|j| j.roll_nodes.contains(&n))
                         .map(|j| j.spec.mem_roll_gb())
@@ -238,6 +239,499 @@ fn prop_analytic_bounds_realized() {
                 per_iter <= bound * 1.35 + 60.0,
                 "seed {seed}: realized {per_iter} >> bound {bound}"
             );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 1 equivalence suite: the incremental `Group` caches and the
+// clone-free scheduler must be indistinguishable from the seed's
+// recompute-from-scratch definitions.
+// ---------------------------------------------------------------------------
+
+/// The seed's O(jobs x nodes) aggregate definitions, recomputed from
+/// scratch over the public member list. The incremental caches are built
+/// by the same in-order folds, so equality below is asserted BITWISE.
+mod scratch {
+    use super::*;
+
+    pub fn t_cycle(g: &Group) -> f64 {
+        g.jobs().iter().map(|j| j.t_solo()).fold(0.0, f64::max)
+    }
+
+    pub fn roll_node_load(g: &Group, node: usize) -> f64 {
+        g.jobs()
+            .iter()
+            .filter(|j| j.roll_nodes.contains(&node))
+            .map(|j| j.roll_occupancy())
+            .sum()
+    }
+
+    pub fn roll_node_mem(g: &Group, node: usize) -> f64 {
+        g.jobs()
+            .iter()
+            .filter(|j| j.roll_nodes.contains(&node))
+            .map(|j| j.spec.mem_roll_gb())
+            .sum()
+    }
+
+    pub fn t_load(g: &Group) -> f64 {
+        let train: f64 = g.jobs().iter().map(|j| j.train_occupancy()).sum();
+        let roll = (0..g.n_roll_nodes)
+            .map(|n| roll_node_load(g, n))
+            .fold(0.0, f64::max);
+        train.max(roll)
+    }
+
+    pub fn residency_ok(g: &Group) -> bool {
+        for n in 0..g.n_roll_nodes {
+            if roll_node_mem(g, n) > HOST_MEM_GB {
+                return false;
+            }
+        }
+        let train_used: f64 = g.jobs().iter().map(|j| j.spec.mem_train_gb()).sum();
+        train_used <= HOST_MEM_GB
+    }
+
+    pub fn slo_ok(g: &Group) -> bool {
+        let t_meta = t_cycle(g).max(t_load(g));
+        g.jobs().iter().all(|j| t_meta <= j.spec.slo * j.t_solo() + 1e-9)
+    }
+}
+
+fn assert_caches_match_scratch(g: &Group, ctx: &str) {
+    assert_eq!(
+        g.t_cycle().to_bits(),
+        scratch::t_cycle(g).to_bits(),
+        "{ctx}: t_cycle diverged ({} vs {})",
+        g.t_cycle(),
+        scratch::t_cycle(g)
+    );
+    assert_eq!(
+        g.t_load().to_bits(),
+        scratch::t_load(g).to_bits(),
+        "{ctx}: t_load diverged ({} vs {})",
+        g.t_load(),
+        scratch::t_load(g)
+    );
+    for n in 0..g.n_roll_nodes {
+        assert_eq!(
+            g.roll_node_load(n).to_bits(),
+            scratch::roll_node_load(g, n).to_bits(),
+            "{ctx}: roll load diverged on node {n}"
+        );
+        assert_eq!(
+            g.roll_node_mem(n).to_bits(),
+            scratch::roll_node_mem(g, n).to_bits(),
+            "{ctx}: roll mem diverged on node {n}"
+        );
+    }
+    assert_eq!(g.is_saturated(), g.t_load() >= g.t_cycle(), "{ctx}: saturation");
+    assert_eq!(g.residency_ok(), scratch::residency_ok(g), "{ctx}: residency");
+    assert_eq!(g.slo_ok(), scratch::slo_ok(g), "{ctx}: slo");
+}
+
+fn random_member(rng: &mut Rng, id: usize, g: &Group, model: &PhaseModel) -> GroupJob {
+    let spec = JobSpec {
+        id,
+        name: format!("m{id}"),
+        arrival_s: 0.0,
+        n_iters: 5,
+        slo: rng.uniform(1.0, 3.0),
+        n_roll_gpus: 8,
+        n_train_gpus: 8,
+        // Mix in 14B jobs so host memory limits actually trip.
+        params_b: if rng.chance(0.3) { 14.0 } else { 7.0 },
+        phases: PhaseSpec::Direct {
+            t_roll: rng.uniform(20.0, 400.0),
+            t_train: rng.uniform(20.0, 300.0),
+            cv: 0.0,
+        },
+    };
+    // Pin to 1-2 distinct nodes, occasionally one past the current pool
+    // (exercises admit's pool growth — the rollout-scaling placement).
+    let k = rng.range(1, 3);
+    let nodes = if rng.chance(0.2) {
+        (g.n_roll_nodes..g.n_roll_nodes + k).collect()
+    } else {
+        rng.sample_indices(g.n_roll_nodes.max(1), k.min(g.n_roll_nodes.max(1)))
+    };
+    GroupJob::new(spec, model, nodes, g.train_gpus())
+}
+
+/// ISSUE 1 property: after ANY sequence of admit / retract / repin /
+/// compaction, every cached aggregate is bitwise equal to the seed's
+/// from-scratch recomputation.
+#[test]
+fn prop_incremental_aggregates_match_scratch() {
+    let model = PhaseModel::default();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xA66);
+        let mut g = Group::isolated(
+            0,
+            JobSpec {
+                id: 0,
+                name: "seed".into(),
+                arrival_s: 0.0,
+                n_iters: 5,
+                slo: rng.uniform(1.5, 3.0),
+                n_roll_gpus: 8 * rng.range(1, 3),
+                n_train_gpus: 8,
+                params_b: 7.0,
+                phases: PhaseSpec::Direct {
+                    t_roll: rng.uniform(50.0, 300.0),
+                    t_train: rng.uniform(50.0, 200.0),
+                    cv: 0.0,
+                },
+            },
+            &model,
+        );
+        assert_caches_match_scratch(&g, &format!("seed {seed}: isolated"));
+        let mut next_id = 1usize;
+        let mut live: Vec<usize> = vec![0];
+        for step in 0..24 {
+            let ctx = format!("seed {seed} step {step}");
+            match rng.range(0, 10) {
+                // admit (weighted: groups mostly grow)
+                0..=4 => {
+                    let job = random_member(&mut rng, next_id, &g, &model);
+                    live.push(next_id);
+                    next_id += 1;
+                    g.admit(job);
+                }
+                // retract a random live member
+                5..=6 => {
+                    if live.len() > 1 {
+                        let vi = rng.range(0, live.len());
+                        let id = live.swap_remove(vi);
+                        assert!(g.retract(id).is_some(), "{ctx}: retract {id}");
+                        if !g.is_empty() && rng.chance(0.5) {
+                            g.compact_trailing_nodes();
+                        }
+                    }
+                }
+                // repin a random live member
+                7 => {
+                    let vi = rng.range(0, live.len());
+                    let k = rng.range(1, 3).min(g.n_roll_nodes.max(1));
+                    let nodes = rng.sample_indices(g.n_roll_nodes.max(1), k);
+                    g.repin(live[vi], nodes);
+                }
+                // clone-free candidate evaluation vs materialized admission
+                _ => {
+                    let probe = random_member(&mut rng, usize::MAX, &g, &model);
+                    let nodes = probe.roll_nodes.clone();
+                    let added = nodes.iter().filter(|&&n| n >= g.n_roll_nodes).count();
+                    let eval = g.evaluate_admit(&probe, &nodes, added);
+                    let mut g2 = g.clone();
+                    g2.admit(probe);
+                    let feasible = scratch::residency_ok(&g2)
+                        && scratch::slo_ok(&g2)
+                        && scratch::t_load(&g2) <= scratch::t_cycle(&g2) + 1e-9;
+                    match eval {
+                        Some(delta) => {
+                            assert!(feasible, "{ctx}: evaluate_admit accepted an infeasible candidate");
+                            let expect = g2.cost_per_hour() - g.cost_per_hour();
+                            assert_eq!(delta.to_bits(), expect.to_bits(), "{ctx}: Δ mismatch");
+                        }
+                        None => assert!(!feasible, "{ctx}: evaluate_admit rejected a feasible candidate"),
+                    }
+                }
+            }
+            assert_caches_match_scratch(&g, &ctx);
+        }
+    }
+}
+
+/// A faithful transcription of the SEED's Algorithm 1 (clone-per-candidate
+/// + recompute-from-scratch), kept as the behavioral reference for the
+/// clone-free scheduler. Decisions must match byte for byte.
+mod reference {
+    use super::*;
+    use rollmux::cluster::node::GPUS_PER_NODE;
+    use rollmux::cluster::GpuKind;
+    use rollmux::coordinator::inter::{Decision, PlacementKind};
+
+    #[derive(Clone)]
+    pub struct RefGroup {
+        pub id: usize,
+        pub jobs: Vec<GroupJob>,
+        pub n_roll_nodes: usize,
+        pub n_train_nodes: usize,
+    }
+
+    impl RefGroup {
+        fn isolated(id: usize, spec: JobSpec, model: &PhaseModel) -> Self {
+            let n_roll_nodes = spec.n_roll_nodes();
+            let n_train_nodes = spec.n_train_nodes();
+            let job = GroupJob::new(spec, model, (0..n_roll_nodes).collect(), n_train_nodes * GPUS_PER_NODE);
+            RefGroup { id, jobs: vec![job], n_roll_nodes, n_train_nodes }
+        }
+
+        fn train_gpus(&self) -> usize {
+            self.n_train_nodes * GPUS_PER_NODE
+        }
+
+        fn cost_per_hour(&self) -> f64 {
+            let roll = (self.n_roll_nodes * GPUS_PER_NODE) as f64
+                * GpuKind::H20.spec().cost_per_hour;
+            let train = (self.n_train_nodes * GPUS_PER_NODE) as f64
+                * GpuKind::H800.spec().cost_per_hour;
+            roll + train
+        }
+
+        fn t_cycle(&self) -> f64 {
+            self.jobs.iter().map(|j| j.t_solo()).fold(0.0, f64::max)
+        }
+
+        fn roll_node_load(&self, node: usize) -> f64 {
+            self.jobs
+                .iter()
+                .filter(|j| j.roll_nodes.contains(&node))
+                .map(|j| j.roll_occupancy())
+                .sum()
+        }
+
+        fn t_load(&self) -> f64 {
+            let train: f64 = self.jobs.iter().map(|j| j.train_occupancy()).sum();
+            let roll = (0..self.n_roll_nodes)
+                .map(|n| self.roll_node_load(n))
+                .fold(0.0, f64::max);
+            train.max(roll)
+        }
+
+        fn is_saturated(&self) -> bool {
+            self.t_load() >= self.t_cycle()
+        }
+
+        fn slo_ok(&self) -> bool {
+            let t_meta = self.t_cycle().max(self.t_load());
+            self.jobs.iter().all(|j| t_meta <= j.spec.slo * j.t_solo() + 1e-9)
+        }
+
+        fn residency_ok(&self) -> bool {
+            for n in 0..self.n_roll_nodes {
+                let used: f64 = self
+                    .jobs
+                    .iter()
+                    .filter(|j| j.roll_nodes.contains(&n))
+                    .map(|j| j.spec.mem_roll_gb())
+                    .sum();
+                if used > HOST_MEM_GB {
+                    return false;
+                }
+            }
+            let train_used: f64 = self.jobs.iter().map(|j| j.spec.mem_train_gb()).sum();
+            train_used <= HOST_MEM_GB
+        }
+    }
+
+    #[derive(Clone, Debug)]
+    struct Candidate {
+        kind: PlacementKind,
+        roll_nodes: Vec<usize>,
+    }
+
+    fn generate_placements(g: &RefGroup, spec: &JobSpec) -> Vec<Candidate> {
+        let mut out = Vec::with_capacity(2);
+        let k = spec.n_roll_nodes();
+        if g.n_roll_nodes >= k {
+            let mut by_load: Vec<(f64, usize)> =
+                (0..g.n_roll_nodes).map(|n| (g.roll_node_load(n), n)).collect();
+            by_load.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let nodes: Vec<usize> = by_load.iter().take(k).map(|&(_, n)| n).collect();
+            out.push(Candidate { kind: PlacementKind::DirectPack, roll_nodes: nodes });
+        }
+        let fresh: Vec<usize> = (g.n_roll_nodes..g.n_roll_nodes + k).collect();
+        out.push(Candidate { kind: PlacementKind::RolloutScale { added_nodes: k }, roll_nodes: fresh });
+        out
+    }
+
+    fn apply_candidate(g: &RefGroup, spec: &JobSpec, cand: &Candidate, model: &PhaseModel) -> RefGroup {
+        let mut g2 = g.clone();
+        if let PlacementKind::RolloutScale { added_nodes } = cand.kind {
+            g2.n_roll_nodes += added_nodes;
+        }
+        let job = GroupJob::new(spec.clone(), model, cand.roll_nodes.clone(), g2.train_gpus());
+        g2.jobs.push(job);
+        g2
+    }
+
+    pub struct RefScheduler {
+        pub model: PhaseModel,
+        pub groups: Vec<RefGroup>,
+        pub max_group_size: Option<usize>,
+        next_group_id: usize,
+    }
+
+    impl RefScheduler {
+        pub fn new(model: PhaseModel, max_group_size: Option<usize>) -> Self {
+            RefScheduler { model, groups: Vec::new(), max_group_size, next_group_id: 0 }
+        }
+
+        pub fn schedule(&mut self, spec: JobSpec) -> Decision {
+            let mut best: Option<(f64, usize, Candidate)> = None;
+            for (gi, g) in self.groups.iter().enumerate() {
+                if g.is_saturated() {
+                    continue;
+                }
+                if self.max_group_size.is_some_and(|cap| g.jobs.len() >= cap) {
+                    continue;
+                }
+                let probe = GroupJob::new(spec.clone(), &self.model, vec![], g.train_gpus());
+                let new_cycle = g.t_cycle().max(probe.t_solo());
+                let new_train_load: f64 =
+                    g.jobs.iter().map(|j| j.train_occupancy()).sum::<f64>()
+                        + probe.train_occupancy();
+                if new_train_load > new_cycle + 1e-9 {
+                    continue;
+                }
+                for cand in generate_placements(g, &spec) {
+                    let roll_ok = cand.roll_nodes.iter().all(|&n| {
+                        g.roll_node_load(n) + probe.roll_occupancy() <= new_cycle + 1e-9
+                    });
+                    if !roll_ok {
+                        continue;
+                    }
+                    let g2 = apply_candidate(g, &spec, &cand, &self.model);
+                    if !g2.residency_ok() || !g2.slo_ok() {
+                        continue;
+                    }
+                    if g2.t_load() > g2.t_cycle() + 1e-9 {
+                        continue;
+                    }
+                    let delta = g2.cost_per_hour() - g.cost_per_hour();
+                    if best.as_ref().is_none_or(|(d, _, _)| delta < *d) {
+                        best = Some((delta, gi, cand));
+                    }
+                }
+            }
+            let iso = RefGroup::isolated(usize::MAX, spec.clone(), &self.model);
+            let iso_delta = iso.cost_per_hour();
+            match best {
+                Some((delta, gi, cand)) if delta < iso_delta => {
+                    let g = &mut self.groups[gi];
+                    let new_g = apply_candidate(g, &spec, &cand, &self.model);
+                    *g = new_g;
+                    Decision {
+                        job: spec.id,
+                        group_id: g.id,
+                        kind: cand.kind,
+                        marginal_cost: delta,
+                        roll_nodes: cand.roll_nodes,
+                    }
+                }
+                _ => {
+                    let id = self.next_group_id;
+                    self.next_group_id += 1;
+                    let mut iso = iso;
+                    iso.id = id;
+                    let roll_nodes = iso.jobs[0].roll_nodes.clone();
+                    self.groups.push(iso);
+                    Decision {
+                        job: spec.id,
+                        group_id: id,
+                        kind: PlacementKind::Isolated,
+                        marginal_cost: iso_delta,
+                        roll_nodes,
+                    }
+                }
+            }
+        }
+
+        pub fn complete_job(&mut self, job: usize) {
+            for g in &mut self.groups {
+                let Some(idx) = g.jobs.iter().position(|j| j.spec.id == job) else {
+                    continue;
+                };
+                g.jobs.remove(idx);
+                if !g.jobs.is_empty() {
+                    let max_used = g
+                        .jobs
+                        .iter()
+                        .flat_map(|j| j.roll_nodes.iter().copied())
+                        .max()
+                        .unwrap_or(0);
+                    g.n_roll_nodes = g.n_roll_nodes.min(max_used + 1);
+                }
+                break;
+            }
+            self.groups.retain(|g| !g.jobs.is_empty());
+        }
+
+        pub fn total_cost_per_hour(&self) -> f64 {
+            self.groups.iter().map(|g| g.cost_per_hour()).sum()
+        }
+    }
+}
+
+/// ISSUE 1 property: on a seeded 500-job Table-6 trace (with interleaved
+/// completions), the clone-free scheduler returns byte-identical
+/// `Decision`s to the seed algorithm transcribed above.
+#[test]
+fn prop_schedule_matches_reference_500_jobs() {
+    let model = PhaseModel::default();
+    let mut rng = Rng::new(0xDEC15);
+    let mut fast = InterGroupScheduler::new(model);
+    let mut slow = reference::RefScheduler::new(model, None);
+    let mut live: Vec<usize> = Vec::new();
+    for id in 0..500 {
+        let slo = rng.uniform(1.0, 2.0);
+        let job = table6_job(id, SimProfile::Mixed, &mut rng, slo, 0.0, 5);
+        let d_fast = fast.schedule(job.clone());
+        let d_slow = slow.schedule(job);
+        assert_eq!(d_fast, d_slow, "job {id}: decisions diverged");
+        assert_eq!(
+            d_fast.marginal_cost.to_bits(),
+            d_slow.marginal_cost.to_bits(),
+            "job {id}: Δ bits diverged"
+        );
+        live.push(id);
+        // Interleave completions so retract/compaction paths are exercised.
+        if rng.chance(0.3) && live.len() > 4 {
+            let vi = rng.range(0, live.len());
+            let done = live.swap_remove(vi);
+            fast.complete_job(done);
+            slow.complete_job(done);
+        }
+        assert_eq!(fast.groups.len(), slow.groups.len(), "job {id}: group counts diverged");
+        assert_eq!(
+            fast.total_cost_per_hour().to_bits(),
+            slow.total_cost_per_hour().to_bits(),
+            "job {id}: cluster cost diverged"
+        );
+    }
+    // The two cluster states must be structurally identical at the end.
+    for (gf, gs) in fast.groups.iter().zip(&slow.groups) {
+        assert_eq!(gf.id, gs.id);
+        assert_eq!(gf.n_roll_nodes, gs.n_roll_nodes);
+        assert_eq!(gf.n_train_nodes, gs.n_train_nodes);
+        let ids_f: Vec<usize> = gf.jobs().iter().map(|j| j.spec.id).collect();
+        let ids_s: Vec<usize> = gs.jobs.iter().map(|j| j.spec.id).collect();
+        assert_eq!(ids_f, ids_s);
+        for (jf, js) in gf.jobs().iter().zip(&gs.jobs) {
+            assert_eq!(jf.roll_nodes, js.roll_nodes);
+            assert_eq!(jf.t_solo().to_bits(), js.t_solo().to_bits());
+        }
+    }
+}
+
+/// Same equivalence under a group-size cap (the §7.5 sensitivity knob).
+#[test]
+fn prop_schedule_matches_reference_capped() {
+    let model = PhaseModel::default();
+    let mut rng = Rng::new(0xCA9);
+    let mut fast = InterGroupScheduler::with_max_group_size(model, 5);
+    let mut slow = reference::RefScheduler::new(model, Some(5));
+    for id in 0..150 {
+        let slo = rng.uniform(1.0, 2.0);
+        let job = table6_job(id, SimProfile::Mixed, &mut rng, slo, 0.0, 5);
+        let d_fast = fast.schedule(job.clone());
+        let d_slow = slow.schedule(job);
+        assert_eq!(d_fast, d_slow, "job {id}: capped decisions diverged");
+        if rng.chance(0.25) && id > 4 {
+            fast.complete_job(id - 3);
+            slow.complete_job(id - 3);
         }
     }
 }

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Run the performance bench binaries and assemble the machine-readable
+# BENCH_1.json at the repository root (ISSUE 1: the perf trajectory is
+# tracked across PRs; see EXPERIMENTS.md §Perf for methodology).
+#
+# Usage: scripts/bench.sh [extra cargo args...]
+#   BENCH_OUT=path   override the output file (default: <repo>/BENCH_1.json)
+#
+# Each bench binary appends one JSON object per measurement to
+# $BENCH_JSON_OUT (see util::emit_bench_json); this script wraps the
+# collected lines into a single JSON document.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+OUT="${BENCH_OUT:-$ROOT/BENCH_1.json}"
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+export BENCH_JSON_OUT="$TMP/bench.jsonl"
+
+cd "$ROOT"
+cargo bench --bench scheduler_latency "$@"
+cargo bench --bench simulator "$@"
+# sync_and_memory measures per-decision micro-costs; cheap, keep it in.
+cargo bench --bench sync_and_memory "$@" || true
+
+if [[ ! -s "$BENCH_JSON_OUT" ]]; then
+    echo "error: benches produced no records at $BENCH_JSON_OUT" >&2
+    exit 1
+fi
+
+GIT_REV="$(git -C "$ROOT" rev-parse --short HEAD 2>/dev/null || echo unknown)"
+{
+    printf '{"schema":"rollmux-bench-v1","git_rev":"%s","entries":[\n' "$GIT_REV"
+    # Join the JSON lines with commas (each line is a complete object).
+    awk 'NR>1{printf(",\n")} {printf("%s", $0)} END{printf("\n")}' "$BENCH_JSON_OUT"
+    printf ']}\n'
+} > "$OUT"
+
+echo "wrote $OUT ($(grep -c '"name"' "$BENCH_JSON_OUT") entries)"
