@@ -1,0 +1,52 @@
+//! Bench: dispatch throughput of the extracted orchestration core
+//! (ISSUE 2) — one enqueue → policy pick → occupy → release round-trip
+//! per phase, the per-event cost both the simulator and the wall-clock
+//! driver pay. Set BENCH_JSON_OUT (scripts/bench.sh does) to collect
+//! machine-readable records for BENCH_2.json.
+
+use rollmux::coordinator::orchestrator::{CorePhase, GroupOrchestrator, IntraPolicyKind};
+use rollmux::util::bench;
+
+const BIN: &str = "orchestrator";
+const CYCLES: usize = 200;
+
+fn main() {
+    println!("== orchestrator ==");
+    for kind in IntraPolicyKind::all() {
+        for &n_jobs in &[4usize, 16, 64] {
+            // Half as many nodes as jobs: every cycle mixes immediate
+            // grants with queueing, like a packed co-execution group.
+            let n_nodes = (n_jobs / 2).max(1);
+            let stats = bench(2, 10, || {
+                let mut orc = GroupOrchestrator::new(kind);
+                for slot in 0..n_jobs {
+                    orc.admit(slot, slot, vec![slot % n_nodes], 100.0 + slot as f64);
+                }
+                let mut dispatched = 0usize;
+                for _ in 0..CYCLES {
+                    for slot in 0..n_jobs {
+                        orc.enqueue(slot, CorePhase::Rollout);
+                    }
+                    while let Some(st) = orc.next_dispatch() {
+                        orc.release_rollout(st.slot);
+                        dispatched += 1;
+                    }
+                    for slot in 0..n_jobs {
+                        orc.enqueue(slot, CorePhase::Train);
+                    }
+                    while let Some(st) = orc.next_dispatch() {
+                        orc.release_train(st.slot);
+                        dispatched += 1;
+                    }
+                }
+                assert_eq!(dispatched, CYCLES * n_jobs * 2);
+                dispatched
+            });
+            stats.report_json(
+                BIN,
+                &format!("dispatch/{} @{n_jobs} jobs", kind.name()),
+                (CYCLES * n_jobs * 2) as f64,
+            );
+        }
+    }
+}

@@ -58,6 +58,24 @@ impl RoundRobin {
     pub fn order(&self) -> &[JobId] {
         &self.order
     }
+
+    /// Cyclic distance from the cursor to `job` (0 = the cursor points at
+    /// `job`); `None` when the job is not a member. Used by the
+    /// orchestration core's `StrictRoundRobin` policy to rank feasible
+    /// requests without consuming the cursor.
+    pub fn distance(&self, job: JobId) -> Option<usize> {
+        let pos = self.order.iter().position(|&j| j == job)?;
+        let n = self.order.len();
+        Some((pos + n - self.cursor) % n)
+    }
+
+    /// Move the cursor just past `job` — the hand-off after its phase
+    /// dispatches. No-op for non-members.
+    pub fn advance_past(&mut self, job: JobId) {
+        if let Some(pos) = self.order.iter().position(|&j| j == job) {
+            self.cursor = (pos + 1) % self.order.len();
+        }
+    }
 }
 
 /// Aggregate pool utilizations of one meta-iteration of duration `t_meta`
@@ -144,6 +162,20 @@ mod tests {
         assert_eq!(rr.next(), Some(1));
         rr.add(2);
         assert_eq!(rr.order(), &[1, 2]);
+    }
+
+    #[test]
+    fn distance_and_advance() {
+        let mut rr = RoundRobin { order: vec![5, 6, 7], cursor: 1 };
+        assert_eq!(rr.distance(6), Some(0));
+        assert_eq!(rr.distance(7), Some(1));
+        assert_eq!(rr.distance(5), Some(2));
+        assert_eq!(rr.distance(9), None);
+        rr.advance_past(7); // cursor wraps to 5
+        assert_eq!(rr.distance(5), Some(0));
+        assert_eq!(rr.next(), Some(5));
+        rr.advance_past(9); // no-op
+        assert_eq!(rr.next(), Some(6));
     }
 
     #[test]

@@ -4,14 +4,22 @@
 //!  * [`group`]    — the co-execution group abstraction (§4.1);
 //!  * [`inter`]    — online inter-group placement, Algorithm 1 (§4.2);
 //!  * [`intra`]    — round-robin meta-iterations + Theorem 1 (§4.3);
+//!  * [`orchestrator`] — the group-local phase orchestration core with
+//!    pluggable dispatch policies (DESIGN.md §10), shared by the
+//!    discrete-event simulator and the wall-clock runtime driver;
 //!  * [`migration`] — long-tail migration (§4.3, Fig. 7).
 
 pub mod group;
 pub mod inter;
 pub mod intra;
 pub mod migration;
+pub mod orchestrator;
 
 pub use group::{Group, GroupJob};
 pub use inter::{Decision, InterGroupScheduler, PlacementKind};
 pub use intra::RoundRobin;
 pub use migration::{MigrationPlan, MigrationPolicy};
+pub use orchestrator::{
+    CorePhase, GroupOrchestrator, IntraPolicy, IntraPolicyKind, PhaseStart, QueuedPhase,
+    SloSlackPriority, StrictRoundRobin, WorkConservingFifo,
+};

@@ -1,0 +1,551 @@
+//! The group-local orchestration core (DESIGN.md §10).
+//!
+//! One `GroupOrchestrator` arbitrates the phase lifecycle of a single
+//! co-execution group: jobs cycle through Init → Rollout → Train → Sync,
+//! and the Rollout/Train legs contend for the group's resources (pinned
+//! rollout nodes, the serial training pool). The core owns the pending
+//! queue and the occupancy maps; *which* pending phase starts next is
+//! delegated to a pluggable [`IntraPolicy`].
+//!
+//! The same core is driven by two clocks:
+//!  * the discrete-event simulator (`sim::engine`) calls
+//!    `enqueue`/`next_dispatch`/`release_*` from its virtual-time event
+//!    loop;
+//!  * the wall-clock runtime (`runtime::driver`) calls the identical
+//!    sequence from real threads gated by `phase::PhaseBroker` permits,
+//!    emitting `phase::HookEvent`s as phases start and finish.
+//!
+//! Because both drivers feed the core the same call sequence for the same
+//! trace, they produce the same dispatch order — property-tested in
+//! `rust/tests/sim_runtime_parity.rs`.
+//!
+//! Policies:
+//!  * [`WorkConservingFifo`] — the default: scan the queue front-to-back
+//!    and start the first request whose resources are free. This is
+//!    exactly the pre-refactor engine dispatch, so default-policy
+//!    simulations are bit-identical to it (gated by
+//!    `rust/tests/sim_seed_equivalence.rs`).
+//!  * [`StrictRoundRobin`] — the paper's §4.3 cyclic order, built on
+//!    [`RoundRobin`]: among feasible requests pick the job closest to the
+//!    cursor in cyclic member order; the cursor hands off as each job's
+//!    rollout dispatches. Work conservation is preserved (resources never
+//!    idle while any feasible request waits), which is all Theorem 1
+//!    needs — for unsaturated groups the meta-iteration still completes
+//!    in `T_cycle` (property-tested in
+//!    `rust/tests/prop_intra_policy.rs`).
+//!  * [`SloSlackPriority`] — least-SLO-slack-first: feasible requests are
+//!    ranked by the job's static per-iteration SLO budget
+//!    `slo_j x T_solo_j`; tighter jobs dispatch first, FIFO breaks ties.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::workload::job::JobId;
+
+use super::intra::RoundRobin;
+
+/// Resource-holding phase kinds the orchestrator arbitrates. Init and
+/// Sync hold no pool resources (host-side load / network transfer), so
+/// drivers run them without consulting the core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorePhase {
+    Rollout,
+    Train,
+}
+
+impl CorePhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            CorePhase::Rollout => "rollout",
+            CorePhase::Train => "train",
+        }
+    }
+}
+
+/// Which dispatch policy a [`GroupOrchestrator`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum IntraPolicyKind {
+    #[default]
+    WorkConservingFifo,
+    StrictRoundRobin,
+    SloSlackPriority,
+}
+
+impl IntraPolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            IntraPolicyKind::WorkConservingFifo => "fifo",
+            IntraPolicyKind::StrictRoundRobin => "round-robin",
+            IntraPolicyKind::SloSlackPriority => "slo-slack",
+        }
+    }
+
+    pub fn all() -> [IntraPolicyKind; 3] {
+        [
+            IntraPolicyKind::WorkConservingFifo,
+            IntraPolicyKind::StrictRoundRobin,
+            IntraPolicyKind::SloSlackPriority,
+        ]
+    }
+
+    pub fn build(self) -> Box<dyn IntraPolicy> {
+        match self {
+            IntraPolicyKind::WorkConservingFifo => Box::new(WorkConservingFifo),
+            IntraPolicyKind::StrictRoundRobin => Box::new(StrictRoundRobin::default()),
+            IntraPolicyKind::SloSlackPriority => Box::new(SloSlackPriority),
+        }
+    }
+}
+
+/// The policy's view of one queued request (queue order is preserved in
+/// the slice handed to [`IntraPolicy::pick`]).
+#[derive(Clone, Copy, Debug)]
+pub struct QueuedPhase {
+    pub job: JobId,
+    pub kind: CorePhase,
+    /// Whether the request's resources are free right now. Infeasible
+    /// entries are shown (policies may track them) but must not be
+    /// picked.
+    pub feasible: bool,
+    /// The job's static per-iteration SLO budget, seconds
+    /// (`slo_j x T_solo_j` — smaller = tighter).
+    pub slo_slack_s: f64,
+}
+
+/// Decides dispatch order within a group. Implementations must be
+/// deterministic functions of the call sequence they have observed: both
+/// drivers replay the same sequence and expect the same picks.
+pub trait IntraPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Choose the queue index of the next request to dispatch among
+    /// `queued` (in queue order). Only `feasible` entries may be
+    /// returned; `None` leaves the queue untouched until a release.
+    fn pick(&mut self, queued: &[QueuedPhase]) -> Option<usize>;
+    fn on_admit(&mut self, _job: JobId) {}
+    fn on_complete(&mut self, _job: JobId) {}
+}
+
+/// Today's engine behavior: first feasible request in FIFO order.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkConservingFifo;
+
+impl IntraPolicy for WorkConservingFifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&mut self, queued: &[QueuedPhase]) -> Option<usize> {
+        queued.iter().position(|q| q.feasible)
+    }
+}
+
+/// §4.3 cyclic order over member jobs (work-conserving variant).
+#[derive(Clone, Debug, Default)]
+pub struct StrictRoundRobin {
+    rr: RoundRobin,
+}
+
+impl IntraPolicy for StrictRoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, queued: &[QueuedPhase]) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None; // (cyclic distance, queue idx)
+        for (qi, q) in queued.iter().enumerate() {
+            if !q.feasible {
+                continue;
+            }
+            // Members removed between enqueue and pick sort last.
+            let d = self.rr.distance(q.job).unwrap_or(usize::MAX);
+            if best.is_none_or(|(bd, _)| d < bd) {
+                best = Some((d, qi));
+            }
+        }
+        let (_, qi) = best?;
+        // The rollout leads a member's iteration: hand the cursor off as
+        // it dispatches (trains ride the serial pool without advancing).
+        if queued[qi].kind == CorePhase::Rollout {
+            self.rr.advance_past(queued[qi].job);
+        }
+        Some(qi)
+    }
+
+    fn on_admit(&mut self, job: JobId) {
+        self.rr.add(job);
+    }
+
+    fn on_complete(&mut self, job: JobId) {
+        self.rr.remove(job);
+    }
+}
+
+/// Least-SLO-slack-first: tightest per-iteration budget dispatches first.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloSlackPriority;
+
+impl IntraPolicy for SloSlackPriority {
+    fn name(&self) -> &'static str {
+        "slo-slack"
+    }
+
+    fn pick(&mut self, queued: &[QueuedPhase]) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (qi, q) in queued.iter().enumerate() {
+            if !q.feasible {
+                continue;
+            }
+            // Strict < keeps the earliest queue position on ties (FIFO
+            // tiebreak); total_cmp guards against a NaN budget.
+            if best.is_none_or(|(bs, _)| q.slo_slack_s.total_cmp(&bs).is_lt()) {
+                best = Some((q.slo_slack_s, qi));
+            }
+        }
+        best.map(|(_, qi)| qi)
+    }
+}
+
+/// A member registered with the orchestrator.
+#[derive(Clone, Debug)]
+struct Member {
+    job: JobId,
+    /// Group-local rollout nodes the member's rollouts pin to.
+    roll_nodes: Vec<usize>,
+    slo_slack_s: f64,
+}
+
+/// A queued phase request (driver-local `slot` handle + kind).
+#[derive(Clone, Copy, Debug)]
+struct Request {
+    slot: usize,
+    kind: CorePhase,
+}
+
+/// A granted dispatch, returned by [`GroupOrchestrator::next_dispatch`].
+/// The resources are already marked occupied when this is handed out;
+/// the driver runs the phase and calls the matching `release_*`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PhaseStart {
+    pub slot: usize,
+    pub job: JobId,
+    pub kind: CorePhase,
+}
+
+/// Group-local phase orchestration: queue + occupancy + policy.
+pub struct GroupOrchestrator {
+    policy: Box<dyn IntraPolicy>,
+    /// Keyed by the driver's slot handle: O(1) lookup on the dispatch
+    /// hot path (never iterated, so map order cannot leak into dispatch
+    /// decisions).
+    members: HashMap<usize, Member>,
+    /// roll_busy[node] = Some(slot) while a phase (or its migrated tail)
+    /// holds the node; indices past the end are free (pool growth is
+    /// lazy), mirroring the engine's historical occupancy map.
+    roll_busy: Vec<Option<usize>>,
+    train_busy: Option<usize>,
+    queue: VecDeque<Request>,
+    /// Reusable policy-view buffer (no per-dispatch allocation).
+    scratch: Vec<QueuedPhase>,
+}
+
+impl GroupOrchestrator {
+    pub fn new(kind: IntraPolicyKind) -> Self {
+        GroupOrchestrator {
+            policy: kind.build(),
+            members: HashMap::new(),
+            roll_busy: Vec::new(),
+            train_busy: None,
+            queue: VecDeque::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Register a member. `slot` is the driver's handle (slab index /
+    /// thread index) and must be unique among live members; `roll_nodes`
+    /// are the group-local nodes its rollouts pin to.
+    pub fn admit(&mut self, slot: usize, job: JobId, roll_nodes: Vec<usize>, slo_slack_s: f64) {
+        let prev = self.members.insert(slot, Member { job, roll_nodes, slo_slack_s });
+        debug_assert!(prev.is_none(), "slot {slot} admitted twice");
+        self.policy.on_admit(job);
+    }
+
+    /// Remove a finished member. Queued requests for it must already be
+    /// drained (a job finishes only after its last sync).
+    pub fn complete(&mut self, slot: usize) {
+        debug_assert!(
+            self.queue.iter().all(|r| r.slot != slot),
+            "slot {slot} completed with queued phases"
+        );
+        if let Some(m) = self.members.remove(&slot) {
+            self.policy.on_complete(m.job);
+        }
+    }
+
+    /// Append a phase request; call [`Self::next_dispatch`] in a loop to
+    /// drain whatever the policy now allows.
+    pub fn enqueue(&mut self, slot: usize, kind: CorePhase) {
+        debug_assert!(self.members.contains_key(&slot), "enqueue for unknown slot {slot}");
+        self.queue.push_back(Request { slot, kind });
+    }
+
+    /// Grant the next dispatch per the policy, marking its resources
+    /// occupied; `None` when nothing feasible (or queued) remains.
+    pub fn next_dispatch(&mut self) -> Option<PhaseStart> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        for r in &self.queue {
+            let m = self.members.get(&r.slot).expect("queued slot is a member");
+            let feasible = match r.kind {
+                CorePhase::Rollout => m.roll_nodes.iter().all(|&n| self.node_free(n)),
+                CorePhase::Train => self.train_busy.is_none(),
+            };
+            scratch.push(QueuedPhase {
+                job: m.job,
+                kind: r.kind,
+                feasible,
+                slo_slack_s: m.slo_slack_s,
+            });
+        }
+        let picked = self.policy.pick(&scratch);
+        let feasible_pick = picked.map(|qi| scratch[qi].feasible);
+        self.scratch = scratch;
+        let qi = picked?;
+        assert!(
+            feasible_pick == Some(true),
+            "policy {} picked an infeasible request",
+            self.policy.name()
+        );
+        let r = self.queue.remove(qi).expect("picked index in range");
+        let m = self.members.get(&r.slot).expect("queued slot is a member");
+        let job = m.job;
+        match r.kind {
+            CorePhase::Rollout => {
+                for i in 0..self.members[&r.slot].roll_nodes.len() {
+                    let n = self.members[&r.slot].roll_nodes[i];
+                    self.occupy(n, r.slot);
+                }
+            }
+            CorePhase::Train => self.train_busy = Some(r.slot),
+        }
+        Some(PhaseStart { slot: r.slot, job, kind: r.kind })
+    }
+
+    /// Release every rollout node the member still holds (phase end).
+    pub fn release_rollout(&mut self, slot: usize) {
+        if !self.members.contains_key(&slot) {
+            return;
+        }
+        for i in 0..self.members[&slot].roll_nodes.len() {
+            let n = self.members[&slot].roll_nodes[i];
+            self.release_if_held(n, slot);
+        }
+    }
+
+    /// Long-tail consolidation (§4.3): release the member's pinned nodes
+    /// past the first `kept` while the tail keeps running on the rest.
+    pub fn release_trailing_nodes(&mut self, slot: usize, kept: usize) {
+        if !self.members.contains_key(&slot) {
+            return;
+        }
+        for i in kept..self.members[&slot].roll_nodes.len() {
+            let n = self.members[&slot].roll_nodes[i];
+            self.release_if_held(n, slot);
+        }
+    }
+
+    /// Release the training pool if this member holds it.
+    pub fn release_train(&mut self, slot: usize) {
+        if self.train_busy == Some(slot) {
+            self.train_busy = None;
+        }
+    }
+
+    /// Is any *queued* rollout pinned to a node `slot` also pins? (The
+    /// migration trigger: consolidate only when someone actually waits.)
+    pub fn has_rollout_waiter_sharing(&self, slot: usize) -> bool {
+        let Some(m) = self.members.get(&slot) else { return false };
+        let nodes = &m.roll_nodes;
+        self.queue.iter().any(|r| {
+            r.kind == CorePhase::Rollout
+                && self
+                    .members
+                    .get(&r.slot)
+                    .map(|w| w.roll_nodes.iter().any(|n| nodes.contains(n)))
+                    .unwrap_or(false)
+        })
+    }
+
+    /// The member's pinned rollout nodes (admission-time copy).
+    pub fn roll_nodes(&self, slot: usize) -> &[usize] {
+        &self.members.get(&slot).expect("slot is a member").roll_nodes
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    fn node_free(&self, n: usize) -> bool {
+        !matches!(self.roll_busy.get(n), Some(Some(_)))
+    }
+
+    fn occupy(&mut self, n: usize, slot: usize) {
+        if self.roll_busy.len() <= n {
+            self.roll_busy.resize(n + 1, None);
+        }
+        debug_assert!(self.roll_busy[n].is_none(), "node {n} double-occupied");
+        self.roll_busy[n] = Some(slot);
+    }
+
+    fn release_if_held(&mut self, n: usize, slot: usize) {
+        if let Some(b) = self.roll_busy.get_mut(n) {
+            if *b == Some(slot) {
+                *b = None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(orc: &mut GroupOrchestrator) -> Vec<PhaseStart> {
+        let mut out = Vec::new();
+        while let Some(s) = orc.next_dispatch() {
+            out.push(s);
+        }
+        out
+    }
+
+    fn two_on_one_node(kind: IntraPolicyKind) -> GroupOrchestrator {
+        let mut orc = GroupOrchestrator::new(kind);
+        orc.admit(0, 10, vec![0], 300.0);
+        orc.admit(1, 11, vec![0], 200.0);
+        orc
+    }
+
+    #[test]
+    fn fifo_first_feasible_wins() {
+        let mut orc = two_on_one_node(IntraPolicyKind::WorkConservingFifo);
+        orc.enqueue(0, CorePhase::Rollout);
+        orc.enqueue(1, CorePhase::Rollout);
+        orc.enqueue(1, CorePhase::Train);
+        let starts = drain(&mut orc);
+        // Slot 0 takes the node; slot 1's rollout blocks but its train
+        // (different resource) dispatches — work conservation.
+        assert_eq!(
+            starts,
+            vec![
+                PhaseStart { slot: 0, job: 10, kind: CorePhase::Rollout },
+                PhaseStart { slot: 1, job: 11, kind: CorePhase::Train },
+            ]
+        );
+        assert_eq!(orc.queue_len(), 1);
+        // Release hands the node to the queued rollout.
+        orc.release_rollout(0);
+        assert_eq!(
+            drain(&mut orc),
+            vec![PhaseStart { slot: 1, job: 11, kind: CorePhase::Rollout }]
+        );
+    }
+
+    #[test]
+    fn round_robin_cycles_members() {
+        let mut orc = GroupOrchestrator::new(IntraPolicyKind::StrictRoundRobin);
+        // Three members on three distinct nodes: everything is feasible,
+        // so the pick order is purely the cyclic hand-off.
+        for slot in 0..3 {
+            orc.admit(slot, 20 + slot, vec![slot], 100.0);
+        }
+        // Enqueue in reverse order: RR must still cycle 20, 21, 22.
+        orc.enqueue(2, CorePhase::Rollout);
+        orc.enqueue(1, CorePhase::Rollout);
+        orc.enqueue(0, CorePhase::Rollout);
+        let jobs: Vec<JobId> = drain(&mut orc).iter().map(|s| s.job).collect();
+        assert_eq!(jobs, vec![20, 21, 22]);
+        // Next cycle starts where the cursor left off (after job 22 -> 20).
+        for slot in 0..3 {
+            orc.release_rollout(slot);
+        }
+        orc.enqueue(1, CorePhase::Rollout);
+        orc.enqueue(0, CorePhase::Rollout);
+        let jobs: Vec<JobId> = drain(&mut orc).iter().map(|s| s.job).collect();
+        assert_eq!(jobs, vec![20, 21]);
+    }
+
+    #[test]
+    fn round_robin_is_work_conserving() {
+        let mut orc = two_on_one_node(IntraPolicyKind::StrictRoundRobin);
+        orc.enqueue(0, CorePhase::Rollout);
+        assert_eq!(drain(&mut orc).len(), 1);
+        // Cursor now points at job 11; yet with 11 absent from the queue
+        // the node must not idle when 10 asks again.
+        orc.release_rollout(0);
+        orc.enqueue(0, CorePhase::Rollout);
+        let starts = drain(&mut orc);
+        assert_eq!(starts.len(), 1);
+        assert_eq!(starts[0].job, 10);
+    }
+
+    #[test]
+    fn slo_slack_prefers_tight_jobs() {
+        let mut orc = two_on_one_node(IntraPolicyKind::SloSlackPriority);
+        // Slot 1 (budget 200 s) is tighter than slot 0 (300 s): it jumps
+        // the queue even though slot 0 enqueued first.
+        orc.enqueue(0, CorePhase::Rollout);
+        orc.enqueue(1, CorePhase::Rollout);
+        let starts = drain(&mut orc);
+        assert_eq!(starts.len(), 1);
+        assert_eq!(starts[0].job, 11);
+        orc.release_rollout(1);
+        assert_eq!(drain(&mut orc)[0].job, 10);
+    }
+
+    #[test]
+    fn train_pool_is_serial() {
+        let mut orc = two_on_one_node(IntraPolicyKind::WorkConservingFifo);
+        orc.enqueue(0, CorePhase::Train);
+        orc.enqueue(1, CorePhase::Train);
+        assert_eq!(drain(&mut orc).len(), 1);
+        orc.release_train(0);
+        let starts = drain(&mut orc);
+        assert_eq!(starts, vec![PhaseStart { slot: 1, job: 11, kind: CorePhase::Train }]);
+    }
+
+    #[test]
+    fn trailing_release_frees_waiters_only_past_kept() {
+        let mut orc = GroupOrchestrator::new(IntraPolicyKind::WorkConservingFifo);
+        orc.admit(0, 0, vec![0, 1, 2], 100.0);
+        orc.admit(1, 1, vec![2], 100.0);
+        orc.enqueue(0, CorePhase::Rollout);
+        assert_eq!(drain(&mut orc).len(), 1);
+        orc.enqueue(1, CorePhase::Rollout);
+        assert!(orc.has_rollout_waiter_sharing(0));
+        assert!(drain(&mut orc).is_empty(), "node 2 still held");
+        // Consolidate the tail onto node 0: nodes 1 and 2 are released.
+        orc.release_trailing_nodes(0, 1);
+        let starts = drain(&mut orc);
+        assert_eq!(starts.len(), 1);
+        assert_eq!(starts[0].slot, 1);
+        assert!(!orc.has_rollout_waiter_sharing(0));
+    }
+
+    #[test]
+    fn complete_removes_member_from_rotation() {
+        let mut orc = two_on_one_node(IntraPolicyKind::StrictRoundRobin);
+        orc.complete(0);
+        assert_eq!(orc.member_count(), 1);
+        orc.enqueue(1, CorePhase::Rollout);
+        assert_eq!(drain(&mut orc)[0].job, 11);
+    }
+}

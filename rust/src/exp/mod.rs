@@ -39,6 +39,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("table4", "Co-execution interference overhead", micro::table4),
         ("fig11", "Long-tail lengths + migration ablation", ablation::fig11),
         ("fig12", "Topology-aware model sync vs flat AllGather", ablation::fig12),
+        ("intra", "Intra-group dispatch policy ablation (FIFO/RR/SLO-slack)", ablation::intra),
         ("fig13", "At-scale production trace replay (cost, GPUs, bubbles)", atscale::fig13),
         ("fig14a", "Sensitivity: workload type", simstudy::fig14a),
         ("fig14b", "Sensitivity: SLO tightness", simstudy::fig14b),

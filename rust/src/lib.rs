@@ -13,7 +13,9 @@
 //! * [`sync`] — cross-cluster model synchronization plans.
 //! * [`sim`] — discrete-event cluster simulator.
 //! * [`coordinator`] — the paper's contribution: co-execution groups,
-//!   inter-group scheduling (Alg. 1), intra-group round-robin, migration.
+//!   inter-group scheduling (Alg. 1), intra-group round-robin, migration,
+//!   and the shared orchestration core with pluggable dispatch policies
+//!   (DESIGN.md §10).
 //! * [`baselines`] — Solo-D, veRL-colocated, Gavel+, Random, Greedy, Opt.
 //! * [`phase`] — phase-centric control plane (permits, queues, hooks).
 //! * [`runtime`] — PJRT execution of the AOT HLO artifacts.

@@ -63,12 +63,15 @@ impl PhaseBroker {
     }
 
     /// Non-blocking attempt (used by tests and opportunistic dispatch).
+    /// A ticket is only minted on success: a failed attempt must not
+    /// advance the ticket counter, or ticket ids drift away from the
+    /// FIFO queue entries (ISSUE 2 cleanup).
     pub fn try_acquire(&self, resource: ResourceId) -> Option<PhaseGuard> {
-        let ticket = self.ticket();
         let mut rs = self.inner.resources.lock().unwrap();
         let r = &mut rs[resource];
         if r.holder.is_none() && r.queue.is_empty() {
-            r.holder = Some(ticket);
+            let ticket = self.ticket();
+            rs[resource].holder = Some(ticket);
             Some(PhaseGuard { broker: self.clone(), resource, ticket })
         } else {
             None
@@ -164,6 +167,36 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn failed_try_acquire_preserves_fifo_fairness() {
+        let broker = PhaseBroker::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let g = broker.acquire(0);
+        // Hammer failed non-blocking attempts between each blocking
+        // enqueue: they must neither mint tickets nor perturb the queue.
+        let mut handles = vec![];
+        for i in 0..5 {
+            assert!(broker.try_acquire(0).is_none());
+            let b = broker.clone();
+            let o = order.clone();
+            handles.push(std::thread::spawn(move || {
+                let _g = b.acquire(0);
+                o.lock().unwrap().push(i);
+            }));
+            while broker.waiters(0) != i + 1 {
+                std::thread::yield_now();
+            }
+            assert!(broker.try_acquire(0).is_none());
+        }
+        drop(g);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+        // Queue drained: a non-blocking attempt succeeds again.
+        assert!(broker.try_acquire(0).is_some());
     }
 
     #[test]

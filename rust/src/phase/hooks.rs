@@ -5,6 +5,9 @@ use std::sync::{Arc, Mutex};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum HookEvent {
+    /// Phase granted its run permit and starting execution (emitted by
+    /// the wall-clock driver as the orchestration core dispatches it).
+    PhaseStart(usize, &'static str),
     /// (job, phase name, fraction complete in [0,1]) — e.g. token
     /// generation progress; drives long-tail migration detection.
     Progress(usize, &'static str, f64),

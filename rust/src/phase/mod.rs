@@ -4,9 +4,14 @@
 //! owns one FIFO queue per resource pool; a phase blocks in `acquire`
 //! until it holds a *run permit* (the @rollmux.phase decorator's shim in
 //! the paper), runs, and releases on drop. A [`HookBus`] carries runtime
-//! hooks: phase progress (token generation fraction) and transitions, the
-//! signals the intra-group scheduler uses for round-robin hand-off and
-//! long-tail migration.
+//! hooks: phase starts/transitions and progress (token generation
+//! fraction), the signals the intra-group scheduler uses for round-robin
+//! hand-off and long-tail migration.
+//!
+//! Dispatch *order* is not decided here: the wall-clock driver
+//! (`runtime::driver`) consults the shared orchestration core
+//! (`coordinator::orchestrator`) for who runs next, then uses the broker
+//! purely as the mutual-exclusion permit layer (DESIGN.md §10).
 
 pub mod broker;
 pub mod hooks;

@@ -9,8 +9,16 @@
 //! returns a tuple buffer per execution, so state round-trips through the
 //! host — see DESIGN.md §2).
 
+//! Besides the PJRT execution path, [`driver`] hosts the wall-clock
+//! phase driver: it runs job lifecycles on real threads against the
+//! shared orchestration core (`coordinator::orchestrator`), gated by
+//! `phase::PhaseBroker` permits — the runtime counterpart of the
+//! discrete-event simulator (DESIGN.md §10).
+
+pub mod driver;
 pub mod manifest;
 pub mod model;
 
+pub use driver::{drive_group, plan_direct_job, DriveResult, IterPlan, JobPlan};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 pub use model::{ModelRuntime, RolloutOut, TrainOut, TrainState};

@@ -3,26 +3,32 @@
 //! Resources are whole nodes: each group's rollout nodes are individually
 //! tracked (jobs pin to subsets), the training pool is a single serial
 //! resource (the DP group spans it — paper footnote 2). Phases wait in
-//! per-group FIFO queues (the runtime-hook-driven queues of §5.1) and are
-//! dispatched work-conservingly as resources free up.
+//! per-group queues (the runtime-hook-driven queues of §5.1) owned by the
+//! shared orchestration core ([`GroupOrchestrator`], DESIGN.md §10): the
+//! engine feeds it enqueue/release calls from the virtual-time event loop
+//! and the core's [`IntraPolicyKind`] decides dispatch order. With the
+//! default `WorkConservingFifo` policy the dispatch is bit-identical to
+//! the historical in-engine FIFO scan (gated by
+//! `rust/tests/sim_seed_equivalence.rs`).
 //!
 //! Hot-path layout (EXPERIMENTS.md §Perf): job runtime state lives in a
 //! dense slab (`Vec<JobRt>`, slots assigned in arrival order, never
 //! reused) and events carry slot indices, so per-event bookkeeping is
 //! plain indexed loads instead of `HashMap` probes. Per-group node
-//! occupancy is a dense `Vec<Option<slot>>`, and the phase queue is a
-//! true FIFO `VecDeque`: entries are enqueued at non-decreasing
-//! (time, seq), so insertion order IS the old sorted order and the
-//! per-dispatch sort the seed engine paid is dropped entirely.
+//! occupancy is a dense `Vec<Option<slot>>` inside the orchestrator, and
+//! the phase queue is a true FIFO `VecDeque`: entries are enqueued at
+//! non-decreasing (time, seq), so insertion order IS the old sorted order
+//! and the per-dispatch sort the seed engine paid is dropped entirely.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::cluster::node::GPUS_PER_NODE;
 use crate::cluster::{GpuKind, PhaseModel};
 use crate::coordinator::group::Group;
 use crate::coordinator::inter::{Decision, InterGroupScheduler};
 use crate::coordinator::migration::MigrationPolicy;
+use crate::coordinator::orchestrator::{CorePhase, GroupOrchestrator, IntraPolicyKind};
 use crate::memory::switching::SwitchModel;
 use crate::sync::{sync_time_s, SyncScheme};
 use crate::util::rng::Rng;
@@ -88,6 +94,9 @@ pub struct SimConfig {
     /// If false, every phase activation pays a cold start (ablation).
     pub warm_starts: bool,
     pub sync_scheme: SyncScheme,
+    /// Intra-group dispatch policy (DESIGN.md §10). The default
+    /// `WorkConservingFifo` reproduces the historical engine exactly.
+    pub intra: IntraPolicyKind,
     /// Record per-phase gantt entries (disable for big sweeps).
     pub record_gantt: bool,
 }
@@ -101,6 +110,7 @@ impl Default for SimConfig {
             switch: SwitchModel::default(),
             warm_starts: true,
             sync_scheme: SyncScheme::Hierarchical,
+            intra: IntraPolicyKind::default(),
             record_gantt: false,
         }
     }
@@ -261,46 +271,12 @@ struct JobRt {
     /// Consolidation pause to apply when the rollout completes (set when
     /// a migration actually fired).
     tail_penalty: f64,
+    /// Sub-node GPU fraction the consolidated tail occupies (from the
+    /// armed `MigrationPlan`; consumed by the busy accounting in
+    /// `on_tail_free`).
+    tail_frac: f64,
     /// Finished: stale events against this slot are ignored.
     done: bool,
-}
-
-/// Pending phase request in a group's FIFO queue.
-#[derive(Clone, Copy, Debug)]
-struct Pending {
-    slot: usize,
-    kind: PhaseKind,
-}
-
-#[derive(Default)]
-struct GroupRt {
-    /// roll_busy[node] = Some(slot) while a phase (or its tail) holds the
-    /// node; indices past the end are free (pool growth is lazy).
-    roll_busy: Vec<Option<usize>>,
-    train_busy: Option<usize>,
-    /// FIFO queue; see module docs for why no sort is needed.
-    queue: VecDeque<Pending>,
-}
-
-impl GroupRt {
-    fn node_free(&self, n: usize) -> bool {
-        !matches!(self.roll_busy.get(n), Some(Some(_)))
-    }
-
-    fn occupy(&mut self, n: usize, slot: usize) {
-        if self.roll_busy.len() <= n {
-            self.roll_busy.resize(n + 1, None);
-        }
-        self.roll_busy[n] = Some(slot);
-    }
-
-    fn release_if_held(&mut self, n: usize, slot: usize) {
-        if let Some(b) = self.roll_busy.get_mut(n) {
-            if *b == Some(slot) {
-                *b = None;
-            }
-        }
-    }
 }
 
 pub struct Simulator<S: GroupScheduler> {
@@ -313,9 +289,12 @@ pub struct Simulator<S: GroupScheduler> {
     now: f64,
     /// Dense job slab, arrival order; never shrinks.
     jobs: Vec<JobRt>,
-    /// Dense per-group runtime, indexed by group id (ids are handed out
-    /// monotonically by every scheduler implementation).
-    group_rt: Vec<GroupRt>,
+    /// Per-group orchestration core, indexed by group id. REQUIRES dense
+    /// ids: every in-tree `GroupScheduler` hands them out monotonically
+    /// from 0 (at most one new group per arrival). A scheduler returning
+    /// sparse or sentinel ids would make `ensure_group_rt` allocate
+    /// `gid + 1` slots.
+    group_rt: Vec<GroupOrchestrator>,
     res: SimResult,
     /// Cost integration state.
     last_rate_change: f64,
@@ -396,8 +375,9 @@ impl<S: GroupScheduler> Simulator<S> {
     }
 
     fn ensure_group_rt(&mut self, gid: usize) {
+        let intra = self.cfg.intra;
         if self.group_rt.len() <= gid {
-            self.group_rt.resize_with(gid + 1, GroupRt::default);
+            self.group_rt.resize_with(gid + 1, || GroupOrchestrator::new(intra));
         }
     }
 
@@ -445,12 +425,22 @@ impl<S: GroupScheduler> Simulator<S> {
             cur_ttrain: 0.0,
             cur_roll_end: 0.0,
             tail_penalty: 0.0,
+            tail_frac: 0.0,
             done: false,
             spec,
         };
         let slot = self.jobs.len();
         self.jobs.push(rt);
         self.ensure_group_rt(d.group_id);
+        {
+            // Register with the group's orchestration core: the job's
+            // pinned nodes plus its static SLO budget (slo x T_solo, the
+            // SloSlackPriority key).
+            let rt = &self.jobs[slot];
+            let slack = rt.spec.slo * rt.solo_est_iter_s;
+            let nodes = rt.roll_nodes.clone();
+            self.group_rt[d.group_id].admit(slot, id, nodes, slack);
+        }
 
         // One-time Init (cold start of the job's state into the caches).
         let t_done = self.now + cold;
@@ -477,50 +467,37 @@ impl<S: GroupScheduler> Simulator<S> {
 
     fn enqueue(&mut self, slot: usize, kind: PhaseKind) {
         let gid = self.jobs[slot].group;
-        self.group_rt[gid].queue.push_back(Pending { slot, kind });
-        self.try_dispatch(gid);
+        let core = match kind {
+            PhaseKind::Rollout => CorePhase::Rollout,
+            PhaseKind::Train => CorePhase::Train,
+            _ => unreachable!("only rollout/train queue"),
+        };
+        self.group_rt[gid].enqueue(slot, core);
+        self.drain_dispatch(gid);
     }
 
-    /// Work-conserving FIFO dispatch over the group's queue.
-    fn try_dispatch(&mut self, gid: usize) {
-        loop {
-            let grt = &self.group_rt[gid];
-            let mut started = None;
-            for (qi, p) in grt.queue.iter().enumerate() {
-                match p.kind {
-                    PhaseKind::Rollout => {
-                        let nodes = &self.jobs[p.slot].roll_nodes;
-                        if nodes.iter().all(|&n| grt.node_free(n)) {
-                            started = Some(qi);
-                            break;
-                        }
-                    }
-                    PhaseKind::Train => {
-                        if grt.train_busy.is_none() {
-                            started = Some(qi);
-                            break;
-                        }
-                    }
-                    _ => unreachable!("only rollout/train queue"),
-                }
-            }
-            let Some(qi) = started else { return };
-            let p = self.group_rt[gid].queue.remove(qi).expect("queue index valid");
-            self.start_phase(gid, p.slot, p.kind);
+    /// Drain the group's orchestration core: start every phase the
+    /// dispatch policy grants (the core marks resources occupied as it
+    /// grants them).
+    fn drain_dispatch(&mut self, gid: usize) {
+        while let Some(start) = self.group_rt[gid].next_dispatch() {
+            let kind = match start.kind {
+                CorePhase::Rollout => PhaseKind::Rollout,
+                CorePhase::Train => PhaseKind::Train,
+            };
+            self.start_phase(start.slot, kind);
         }
     }
 
-    fn start_phase(&mut self, gid: usize, slot: usize, kind: PhaseKind) {
+    fn start_phase(&mut self, slot: usize, kind: PhaseKind) {
         let iter = self.jobs[slot].iter;
         match kind {
             PhaseKind::Rollout => {
                 let warm = self.switch_cost(slot, crate::cluster::node::PoolKind::Rollout);
                 let t_roll = self.jobs[slot].cur_troll;
                 let n_pins = self.jobs[slot].roll_nodes.len();
-                for i in 0..n_pins {
-                    let n = self.jobs[slot].roll_nodes[i];
-                    self.group_rt[gid].occupy(n, slot);
-                }
+                // (node occupancy was marked by the orchestrator when it
+                // granted this dispatch)
                 // Long-tail migration (paper §4.3): the plan is prepared
                 // here, but whether to consolidate is decided when the
                 // threshold is reached — only if another rollout is then
@@ -543,6 +520,7 @@ impl<S: GroupScheduler> Simulator<S> {
                 };
                 if let Some(plan) = self.cfg.migration.plan(&sample, n_pins) {
                     let t_check = self.now + warm + plan.trigger_at_s;
+                    self.jobs[slot].tail_frac = plan.tail_gpu_frac;
                     self.push(t_check, Ev::TailFree(slot, plan.nodes_kept));
                 }
                 // Busy accounting assumes no migration; adjusted in
@@ -555,7 +533,7 @@ impl<S: GroupScheduler> Simulator<S> {
             PhaseKind::Train => {
                 let warm = self.switch_cost(slot, crate::cluster::node::PoolKind::Train);
                 let t_train = self.jobs[slot].cur_ttrain;
-                self.group_rt[gid].train_busy = Some(slot);
+                // (the training pool was marked busy by the orchestrator)
                 let end = self.now + warm + t_train;
                 let train_gpus = self.jobs[slot].train_gpus;
                 self.res.train_busy_gpu_s += (warm + t_train) * train_gpus as f64;
@@ -577,39 +555,28 @@ impl<S: GroupScheduler> Simulator<S> {
             return; // phase already over (stale check)
         }
         let gid = self.jobs[slot].group;
-        let has_waiter = {
-            let grt = &self.group_rt[gid];
-            let nodes = &self.jobs[slot].roll_nodes;
-            grt.queue.iter().any(|p| {
-                p.kind == PhaseKind::Rollout
-                    && self.jobs[p.slot]
-                        .roll_nodes
-                        .iter()
-                        .any(|n| nodes.contains(n))
-            })
-        };
-        if !has_waiter {
+        if !self.group_rt[gid].has_rollout_waiter_sharing(slot) {
             return;
         }
         let penalty = self.cfg.migration.migrate_cost_s;
-        let (remaining, n_pins) = {
+        let (remaining, n_pins, tail_frac) = {
             let rt = &mut self.jobs[slot];
             rt.tail_penalty = penalty;
             rt.migrations += 1;
-            (rt.cur_roll_end - self.now, rt.roll_nodes.len())
+            (rt.cur_roll_end - self.now, rt.roll_nodes.len(), rt.tail_frac)
         };
         // Busy adjustment: freed nodes stop counting; the consolidated
-        // tail occupies `kept` nodes plus a sub-node GPU fraction for the
-        // remaining time (+ pause).
+        // tail occupies `kept` nodes plus the plan's sub-node GPU
+        // fraction for the remaining time (+ pause). (The seed engine
+        // hard-coded 0.25 here instead of the `MigrationPlan`'s computed
+        // `tail_gpu_frac` — fixed in ISSUE 2, regression-tested by
+        // `tail_busy_accounting_uses_plan_fraction`.)
         let freed = n_pins - kept;
         self.res.roll_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
         self.res.roll_busy_gpu_s +=
-            (remaining + penalty) * (kept as f64 + 0.25) * GPUS_PER_NODE as f64;
-        for i in kept..n_pins {
-            let n = self.jobs[slot].roll_nodes[i];
-            self.group_rt[gid].release_if_held(n, slot);
-        }
-        self.try_dispatch(gid);
+            (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64;
+        self.group_rt[gid].release_trailing_nodes(slot, kept);
+        self.drain_dispatch(gid);
     }
 
     fn on_phase_done(&mut self, slot: usize, kind: PhaseKind, iter: usize) {
@@ -634,26 +601,19 @@ impl<S: GroupScheduler> Simulator<S> {
                         return;
                     }
                 }
-                // Release any nodes still held.
-                let n_pins = self.jobs[slot].roll_nodes.len();
-                for i in 0..n_pins {
-                    let n = self.jobs[slot].roll_nodes[i];
-                    self.group_rt[gid].release_if_held(n, slot);
-                }
+                // Release any nodes still held, then queue the train;
+                // `enqueue` leaves the group fully drained.
+                self.group_rt[gid].release_rollout(slot);
                 self.enqueue(slot, PhaseKind::Train);
-                self.try_dispatch(gid);
             }
             PhaseKind::Train => {
-                let grt = &mut self.group_rt[gid];
-                if grt.train_busy == Some(slot) {
-                    grt.train_busy = None;
-                }
+                self.group_rt[gid].release_train(slot);
                 // Sync occupies the network, not the pools.
                 let t_sync = self.jobs[slot].t_sync;
                 let end = self.now + t_sync;
                 self.record(slot, PhaseKind::Sync, iter, self.now, end, &[]);
                 self.push(end, Ev::PhaseDone(slot, PhaseKind::Sync, iter));
-                self.try_dispatch(gid);
+                self.drain_dispatch(gid);
             }
             PhaseKind::Sync => {
                 let rt = &mut self.jobs[slot];
@@ -687,10 +647,11 @@ impl<S: GroupScheduler> Simulator<S> {
             )
         };
         self.res.outcomes.insert(id, outcome);
+        self.group_rt[gid].complete(slot);
         self.sched.complete(id);
         self.rate_changed();
         // Re-dispatch in case the group shrank / freed capacity.
-        self.try_dispatch(gid);
+        self.drain_dispatch(gid);
     }
 
     fn record(&mut self, slot: usize, kind: PhaseKind, iter: usize, start: f64, end: f64, roll_nodes: &[usize]) {
@@ -920,5 +881,97 @@ mod tests {
         }
         assert_eq!(on.makespan_s.to_bits(), off.makespan_s.to_bits());
         assert_eq!(on.cost_usd.to_bits(), off.cost_usd.to_bits());
+    }
+
+    /// ISSUE 2 bugfix regression: the migrated tail's busy accounting
+    /// must use the `MigrationPlan`'s computed `tail_gpu_frac`, not the
+    /// 0.25 the seed engine hard-coded. The trace forces exactly one
+    /// migration (job 1 queued behind job 0 on the shared node) and the
+    /// expected integral is rebuilt from the engine's own seeded RNG
+    /// streams.
+    #[test]
+    fn tail_busy_accounting_uses_plan_fraction() {
+        let t_roll = 100.0;
+        let t_train = 80.0;
+        let trace = vec![
+            direct_job(0, t_roll, t_train, 2.0, 1, 0.0),
+            direct_job(1, 80.0, 60.0, 2.0, 1, 0.0),
+        ];
+        let c = cfg();
+        let res = run_rollmux(c.clone(), trace);
+        assert_eq!(res.outcomes[&0].migrations, 1, "job 0's tail must consolidate");
+        assert_eq!(res.outcomes[&1].migrations, 0, "job 1 has no waiter");
+
+        // Replicate job 0's per-job RNG stream: root = seed ^ id*c (id=0),
+        // the JobRt stream is fork(1), one sample_iter draw precedes the
+        // rollout, then the two tail forks the engine takes in
+        // start_phase.
+        let spec = direct_job(0, t_roll, t_train, 2.0, 1, 0.0);
+        let mut root = Rng::new(c.seed ^ 0u64.wrapping_mul(0x9E37_79B9));
+        let mut jrng = root.fork(1);
+        let _ = spec.sample_iter(&c.model, &mut jrng);
+        let ts = jrng.fork(0).uniform(0.55, 0.85);
+        let tg = jrng.fork(0 ^ 0xabc).uniform(0.1, 0.35);
+
+        let warm = c.switch.warm_s(7.0, crate::cluster::node::PoolKind::Rollout);
+        let cold = c.switch.cold_s(7.0, crate::cluster::node::PoolKind::Rollout);
+        let base = cold + warm;
+        let remaining = (base + t_roll) - (base + ts * t_roll);
+        let penalty = c.migration.migrate_cost_s;
+        let expect = (warm + t_roll) * 8.0          // job 0's rollout, full pin
+            + (warm + 80.0) * 8.0                   // job 1's rollout (no migration)
+            - remaining * 8.0                       // the freed node stops counting
+            + (remaining + penalty) * tg * 8.0;     // consolidated sub-node tail
+        assert!(
+            (res.roll_busy_gpu_s - expect).abs() < 1e-6,
+            "busy {} vs expected {} (ts {ts}, tg {tg})",
+            res.roll_busy_gpu_s,
+            expect
+        );
+        // Guard against the seed bug whenever the sampled fraction is
+        // distinguishable from the hard-coded constant.
+        if (tg - 0.25).abs() > 1e-3 {
+            let buggy = (warm + t_roll) * 8.0 + (warm + 80.0) * 8.0 - remaining * 8.0
+                + (remaining + penalty) * 0.25 * 8.0;
+            assert!(
+                (res.roll_busy_gpu_s - buggy).abs() > 1e-9,
+                "accounting still uses the hard-coded 0.25 fraction"
+            );
+        }
+    }
+
+    #[test]
+    fn all_policies_complete_jobs_and_conserve_accounting() {
+        for kind in IntraPolicyKind::all() {
+            let trace = vec![
+                direct_job(0, 100.0, 80.0, 4.0, 6, 0.0),
+                direct_job(1, 80.0, 60.0, 4.0, 6, 30.0),
+                direct_job(2, 60.0, 40.0, 6.0, 6, 60.0),
+            ];
+            let mut c = cfg();
+            c.intra = kind;
+            let res = run_rollmux(c, trace);
+            assert_eq!(res.outcomes.len(), 3, "{kind:?}: jobs lost");
+            for o in res.outcomes.values() {
+                assert_eq!(o.iters, 6, "{kind:?}: iterations lost");
+            }
+            assert!(res.roll_busy_gpu_s <= res.roll_prov_gpu_s + 1e-6, "{kind:?}");
+            assert!(res.train_busy_gpu_s <= res.train_prov_gpu_s + 1e-6, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn default_policy_is_work_conserving_fifo() {
+        assert_eq!(SimConfig::default().intra, IntraPolicyKind::WorkConservingFifo);
+        let mk = || vec![
+            direct_job(0, 100.0, 80.0, 2.0, 6, 0.0),
+            direct_job(1, 80.0, 60.0, 2.0, 6, 50.0),
+        ];
+        let a = run_rollmux(SimConfig::default(), mk());
+        let mut c = SimConfig::default();
+        c.intra = IntraPolicyKind::WorkConservingFifo;
+        let b = run_rollmux(c, mk());
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits());
     }
 }

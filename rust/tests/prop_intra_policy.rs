@@ -1,0 +1,130 @@
+//! ISSUE 2 property tests over the pluggable intra-group dispatch
+//! policies (DESIGN.md §10).
+//!
+//! Theorem 1 (§4.3) says the round-robin meta-iteration of an
+//! unsaturated group completes in `T_cycle`; until now that was only
+//! checked analytically (`coordinator::intra`). Here the claim is
+//! exercised through the REAL event engine: on unsaturated groups,
+//! `StrictRoundRobin` and `WorkConservingFifo` realize the same
+//! per-iteration time (both ≈ the admission-time `t_meta` bound), and
+//! the `SloSlackPriority` reordering never lowers SLO attainment on a
+//! 200-job trace.
+
+use rollmux::cluster::node::PoolKind;
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::coordinator::orchestrator::IntraPolicyKind;
+use rollmux::memory::switching::SwitchModel;
+use rollmux::sim::engine::{SimConfig, SimResult, Simulator};
+use rollmux::util::rng::Rng;
+use rollmux::workload::job::{JobSpec, PhaseSpec};
+use rollmux::workload::profiles::SimProfile;
+use rollmux::workload::trace::{philly_trace, SloPolicy};
+
+const CASES: u64 = 20;
+
+fn run_policy(kind: IntraPolicyKind, seed: u64, trace: Vec<JobSpec>) -> SimResult {
+    let mut cfg = SimConfig { seed, ..Default::default() };
+    cfg.intra = kind;
+    cfg.migration.enabled = false;
+    Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace).run()
+}
+
+/// Theorem 1 through the engine: for unsaturated groups the strict
+/// round-robin order and the work-conserving FIFO achieve the same
+/// realized meta-iteration time, and both stay within the admission-time
+/// `t_meta` bound (plus warm switches, which `T_solo` excludes, and the
+/// amortized cold start).
+#[test]
+fn prop_round_robin_matches_fifo_cycle_time_unsaturated() {
+    let sw = SwitchModel::default();
+    let warms = sw.warm_s(7.0, PoolKind::Rollout) + sw.warm_s(7.0, PoolKind::Train);
+    let cold = sw.cold_s(7.0, PoolKind::Rollout);
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x1D7A);
+        let n = rng.range(2, 5);
+        let n_iters = 20usize;
+        let jobs: Vec<JobSpec> = (0..n)
+            .map(|id| JobSpec {
+                id,
+                name: format!("j{id}"),
+                arrival_s: 0.0,
+                n_iters,
+                slo: 10.0,
+                n_roll_gpus: 8,
+                n_train_gpus: 8,
+                params_b: 7.0,
+                phases: PhaseSpec::Direct {
+                    t_roll: rng.uniform(40.0, 140.0),
+                    t_train: rng.uniform(30.0, 100.0),
+                    cv: 0.0,
+                },
+            })
+            .collect();
+        // Admission-time bound: every group Algorithm 1 builds for this
+        // trace is unsaturated (the Fig. 6 guard), with meta-iteration
+        // t_meta = t_cycle.
+        let mut sched = InterGroupScheduler::new(PhaseModel::default());
+        for j in &jobs {
+            sched.schedule(j.clone());
+        }
+        let t_meta = sched.groups.iter().map(|g| g.t_meta()).fold(0.0, f64::max);
+        for g in &sched.groups {
+            assert!(
+                g.t_load() <= g.t_cycle() + 1e-6,
+                "seed {seed}: admission over-saturated a group"
+            );
+        }
+
+        let fifo = run_policy(IntraPolicyKind::WorkConservingFifo, seed, jobs.clone());
+        let rr = run_policy(IntraPolicyKind::StrictRoundRobin, seed, jobs.clone());
+        assert_eq!(fifo.outcomes.len(), n, "seed {seed}: fifo lost jobs");
+        assert_eq!(rr.outcomes.len(), n, "seed {seed}: rr lost jobs");
+
+        let bound = (t_meta + warms) * 1.05 + (cold + 2.0 * t_meta) / n_iters as f64;
+        for (id, of) in &fifo.outcomes {
+            let or = &rr.outcomes[id];
+            let per_f = (of.finish_s - of.arrival_s) / of.iters as f64;
+            let per_r = (or.finish_s - or.arrival_s) / or.iters as f64;
+            assert!(
+                per_f <= bound,
+                "seed {seed} job {id}: fifo per-iter {per_f} > bound {bound} (t_meta {t_meta})"
+            );
+            assert!(
+                per_r <= bound,
+                "seed {seed} job {id}: rr per-iter {per_r} > bound {bound} (t_meta {t_meta})"
+            );
+            // The two orders realize the same cycle: any difference is a
+            // startup/drain transient, < a fraction of one meta-cycle
+            // once amortized over the iterations.
+            assert!(
+                (per_f - per_r).abs() <= 0.1 * t_meta + 2.0 * warms,
+                "seed {seed} job {id}: fifo {per_f} vs rr {per_r} (t_meta {t_meta})"
+            );
+        }
+    }
+}
+
+/// The new least-SLO-slack-first scenario must not cost attainment: on a
+/// 200-job Philly trace it meets at least as many SLOs as FIFO (RollMux
+/// admission keeps both at 100%; the assertion is the ordering claim,
+/// not the absolute level).
+#[test]
+fn prop_slo_slack_never_lowers_attainment_200_jobs() {
+    let mk = || philly_trace(11, 200, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+    let fifo = run_policy(IntraPolicyKind::WorkConservingFifo, 11, mk());
+    let slack = run_policy(IntraPolicyKind::SloSlackPriority, 11, mk());
+    assert_eq!(fifo.outcomes.len(), 200, "fifo lost jobs");
+    assert_eq!(slack.outcomes.len(), 200, "slo-slack lost jobs");
+    let (af, asl) = (fifo.slo_attainment(), slack.slo_attainment());
+    assert!(
+        asl + 1e-9 >= af,
+        "SloSlackPriority lowered attainment: {asl} < {af}"
+    );
+    // Tight jobs must not be starved either: every job still finishes
+    // all its iterations.
+    for (id, o) in &slack.outcomes {
+        let expect = fifo.outcomes[id].iters;
+        assert_eq!(o.iters, expect, "job {id} iteration count changed");
+    }
+}

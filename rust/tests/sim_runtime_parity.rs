@@ -1,0 +1,204 @@
+//! Sim ↔ runtime parity (ISSUE 2 acceptance): the discrete-event
+//! simulator (virtual clock) and the wall-clock `runtime::driver` both
+//! drive the SAME orchestration core (`coordinator::orchestrator`), so
+//! replaying one trace through both must produce the same per-group
+//! dispatch order — for every dispatch policy.
+//!
+//! The trace uses deterministic Direct phases with migration disabled
+//! (the wall-clock driver does not consolidate tails), a fixed placement
+//! (two jobs contending on node 0, a third on node 1, everyone sharing
+//! the serial training pool), and arrivals that all land inside the
+//! first job's cold start so both drivers see the identical member set
+//! at every dispatch decision.
+
+use std::collections::HashMap;
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::group::{Group, GroupJob};
+use rollmux::coordinator::inter::{Decision, PlacementKind};
+use rollmux::coordinator::orchestrator::{CorePhase, IntraPolicyKind};
+use rollmux::memory::switching::SwitchModel;
+use rollmux::runtime::driver::{drive_group, plan_direct_job, JobPlan};
+use rollmux::sim::engine::{GroupScheduler, SimConfig, Simulator};
+use rollmux::sim::PhaseKind;
+use rollmux::sync::SyncScheme;
+use rollmux::workload::job::{JobId, JobSpec, PhaseSpec};
+
+fn direct_job(id: JobId, t_roll: f64, t_train: f64, slo: f64, iters: usize, arrival: f64) -> JobSpec {
+    JobSpec {
+        id,
+        name: format!("j{id}"),
+        arrival_s: arrival,
+        n_iters: iters,
+        slo,
+        n_roll_gpus: 8,
+        n_train_gpus: 8,
+        params_b: 7.0,
+        phases: PhaseSpec::Direct { t_roll, t_train, cv: 0.0 },
+    }
+}
+
+/// Jobs 0 and 1 contend on node 0; job 2 runs on node 1; all three share
+/// the serial training pool. Arrivals stay below the ~24 s cold start so
+/// the member set is complete before the first dispatch.
+fn trace() -> Vec<JobSpec> {
+    vec![
+        direct_job(0, 19.0, 7.0, 8.0, 2, 0.0),
+        direct_job(1, 11.0, 5.0, 8.0, 2, 3.1),
+        direct_job(2, 13.0, 17.0, 8.0, 2, 7.3),
+    ]
+}
+
+fn pins() -> HashMap<usize, Vec<usize>> {
+    HashMap::from([(0, vec![0]), (1, vec![0]), (2, vec![1])])
+}
+
+/// Places every job into one fixed group with prescribed pins — the
+/// parity test controls contention directly instead of going through
+/// Algorithm 1.
+struct FixedScheduler {
+    model: PhaseModel,
+    pins: HashMap<usize, Vec<usize>>,
+    group: Group,
+}
+
+impl FixedScheduler {
+    fn new() -> Self {
+        FixedScheduler {
+            model: PhaseModel::default(),
+            pins: pins(),
+            group: Group::empty(0, 2, 1),
+        }
+    }
+}
+
+impl GroupScheduler for FixedScheduler {
+    fn place(&mut self, spec: JobSpec) -> Decision {
+        let nodes = self.pins[&spec.id].clone();
+        let job = spec.id;
+        let gj = GroupJob::new(spec, &self.model, nodes.clone(), self.group.train_gpus());
+        self.group.admit(gj);
+        Decision {
+            job,
+            group_id: 0,
+            kind: PlacementKind::DirectPack,
+            marginal_cost: 0.0,
+            roll_nodes: nodes,
+        }
+    }
+
+    fn complete(&mut self, job: JobId) {
+        self.group.retract(job);
+    }
+
+    fn groups(&self) -> &[Group] {
+        std::slice::from_ref(&self.group)
+    }
+
+    fn cost_per_hour(&self) -> f64 {
+        self.group.cost_per_hour()
+    }
+
+    fn gpus(&self) -> (usize, usize) {
+        (self.group.n_roll_nodes * 8, self.group.n_train_nodes * 8)
+    }
+}
+
+/// The simulator's dispatch order: gantt records are pushed exactly when
+/// a phase is granted, so their order IS the grant order.
+fn sim_dispatch_order(policy: IntraPolicyKind) -> (Vec<(usize, CorePhase)>, f64) {
+    let mut cfg = SimConfig { record_gantt: true, ..Default::default() };
+    cfg.migration.enabled = false;
+    cfg.intra = policy;
+    let res = Simulator::new(cfg, FixedScheduler::new(), trace()).run();
+    let mut order = Vec::new();
+    let mut instants = Vec::new();
+    for r in &res.records {
+        // Every enqueue/grant/release in the engine happens at some
+        // record boundary (init ends enqueue rollouts, rollout ends
+        // enqueue trains, sync ends enqueue the next rollout), so the
+        // minimum gap between ANY two distinct boundaries bounds how
+        // close two wall-clock decision points can get.
+        instants.push(r.start);
+        instants.push(r.end);
+        let kind = match r.kind {
+            PhaseKind::Rollout => CorePhase::Rollout,
+            PhaseKind::Train => CorePhase::Train,
+            _ => continue,
+        };
+        order.push((r.job, kind));
+    }
+    instants.sort_by(f64::total_cmp);
+    let mut min_gap = f64::INFINITY;
+    for w in instants.windows(2) {
+        let gap = w[1] - w[0];
+        if gap > 1e-9 {
+            min_gap = min_gap.min(gap);
+        }
+    }
+    (order, min_gap)
+}
+
+fn runtime_dispatch_order(policy: IntraPolicyKind, time_scale: f64) -> Vec<(usize, CorePhase)> {
+    let sw = SwitchModel::default();
+    let pins = pins();
+    let plans: Vec<JobPlan> = trace()
+        .iter()
+        .map(|spec| plan_direct_job(spec, pins[&spec.id].clone(), 8, &sw, SyncScheme::Hierarchical))
+        .collect();
+    drive_group(policy, time_scale, &plans)
+        .order
+        .iter()
+        .map(|s| (s.job, s.kind))
+        .collect()
+}
+
+#[test]
+fn same_dispatch_order_under_every_policy() {
+    for policy in IntraPolicyKind::all() {
+        let (sim_order, min_gap) = sim_dispatch_order(policy);
+        // 3 jobs x 2 iterations x (rollout + train).
+        assert_eq!(sim_order.len(), 12, "{policy:?}: {sim_order:?}");
+        assert!(
+            min_gap > 0.3,
+            "{policy:?}: trace produces dispatch instants only {min_gap}s apart — \
+             widen the durations so wall-clock jitter cannot reorder them"
+        );
+        // Scale so the smallest virtual gap is ~25 ms of wall time, and
+        // retry with escalating coarser clocks: a deterministic
+        // divergence fails every attempt, a scheduling-jitter artifact
+        // on a loaded runner does not survive a 6x-wider margin.
+        let base = (0.025 / min_gap).clamp(0.004, 0.15);
+        let mut last = Vec::new();
+        let mut matched = false;
+        for mult in [1.0, 3.0, 6.0] {
+            last = runtime_dispatch_order(policy, (base * mult).min(0.3));
+            if last == sim_order {
+                matched = true;
+                break;
+            }
+        }
+        assert!(
+            matched,
+            "{policy:?}: wall-clock driver diverged from the simulator\n  sim: {sim_order:?}\n  rt:  {last:?}"
+        );
+    }
+}
+
+/// The two work-conserving reorderings must still execute the same
+/// multiset of phases per job — a cheap cross-policy sanity net on top
+/// of the order parity above.
+#[test]
+fn policies_agree_on_phase_counts() {
+    let mut counts: Vec<HashMap<(usize, CorePhase), usize>> = Vec::new();
+    for policy in IntraPolicyKind::all() {
+        let (order, _) = sim_dispatch_order(policy);
+        let mut m = HashMap::new();
+        for k in order {
+            *m.entry(k).or_insert(0) += 1;
+        }
+        counts.push(m);
+    }
+    assert_eq!(counts[0], counts[1]);
+    assert_eq!(counts[0], counts[2]);
+}

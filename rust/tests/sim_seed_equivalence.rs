@@ -1,0 +1,605 @@
+//! ISSUE 2 equivalence gate (same discipline as PR 1's cache-vs-scratch
+//! gates): the engine's dispatch was lifted into the shared orchestration
+//! core (`coordinator::orchestrator`), and with the default
+//! `WorkConservingFifo` policy every simulation must stay BIT-IDENTICAL
+//! to the pre-refactor engine.
+//!
+//! `mod seed` below is a faithful transcription of that engine — the
+//! monolithic in-struct FIFO queue + occupancy maps — kept as the
+//! behavioral reference. The one deliberate deviation is the ISSUE 2
+//! bugfix (the migrated tail's busy accounting uses the plan's
+//! `tail_gpu_frac`, not a hard-coded 0.25), which is applied to BOTH
+//! engines so this test isolates the orchestration refactor;
+//! `sim::engine::tests::tail_busy_accounting_uses_plan_fraction` pins
+//! the fix itself.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::sim::engine::{SimConfig, SimResult, Simulator};
+use rollmux::util::rng::Rng;
+use rollmux::workload::job::JobSpec;
+use rollmux::workload::profiles::{table6_job, SimProfile};
+
+mod seed {
+    //! The pre-refactor event engine, transcribed against the crate's
+    //! public API (Group/Decision/SwitchModel/Rng/etc. are unchanged).
+
+    use std::collections::{BinaryHeap, VecDeque};
+
+    use rollmux::cluster::node::GPUS_PER_NODE;
+    use rollmux::sim::engine::{GroupScheduler, PhaseKind, PhaseRecord, SimConfig, SimResult};
+    use rollmux::sync::sync_time_s;
+    use rollmux::util::rng::Rng;
+    use rollmux::workload::job::{JobSpec, PhaseSpec};
+
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    enum Ev {
+        Arrival(usize),
+        TailFree(usize, usize),
+        PhaseDone(usize, PhaseKind, usize),
+    }
+
+    #[derive(Clone, Debug)]
+    struct Event {
+        t: f64,
+        seq: u64,
+        ev: Ev,
+    }
+
+    impl PartialEq for Event {
+        fn eq(&self, o: &Self) -> bool {
+            self.t.total_cmp(&o.t) == std::cmp::Ordering::Equal && self.seq == o.seq
+        }
+    }
+    impl Eq for Event {}
+    impl PartialOrd for Event {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Event {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            o.t.total_cmp(&self.t).then(o.seq.cmp(&self.seq))
+        }
+    }
+
+    struct JobRt {
+        spec: JobSpec,
+        group: usize,
+        roll_nodes: Vec<usize>,
+        train_gpus: usize,
+        train_scale: f64,
+        t_sync: f64,
+        iter: usize,
+        solo_s: f64,
+        solo_est_iter_s: f64,
+        init_s: f64,
+        migrations: usize,
+        rng: Rng,
+        cur_troll: f64,
+        cur_ttrain: f64,
+        cur_roll_end: f64,
+        tail_penalty: f64,
+        tail_frac: f64,
+        done: bool,
+    }
+
+    #[derive(Clone, Copy, Debug)]
+    struct Pending {
+        slot: usize,
+        kind: PhaseKind,
+    }
+
+    #[derive(Default)]
+    struct GroupRt {
+        roll_busy: Vec<Option<usize>>,
+        train_busy: Option<usize>,
+        queue: VecDeque<Pending>,
+    }
+
+    impl GroupRt {
+        fn node_free(&self, n: usize) -> bool {
+            !matches!(self.roll_busy.get(n), Some(Some(_)))
+        }
+
+        fn occupy(&mut self, n: usize, slot: usize) {
+            if self.roll_busy.len() <= n {
+                self.roll_busy.resize(n + 1, None);
+            }
+            self.roll_busy[n] = Some(slot);
+        }
+
+        fn release_if_held(&mut self, n: usize, slot: usize) {
+            if let Some(b) = self.roll_busy.get_mut(n) {
+                if *b == Some(slot) {
+                    *b = None;
+                }
+            }
+        }
+    }
+
+    pub struct SeedSimulator<S: GroupScheduler> {
+        cfg: SimConfig,
+        sched: S,
+        trace: Vec<Option<JobSpec>>,
+        events: BinaryHeap<Event>,
+        seq: u64,
+        now: f64,
+        jobs: Vec<JobRt>,
+        group_rt: Vec<GroupRt>,
+        res: SimResult,
+        last_rate_change: f64,
+        cur_rate_per_h: f64,
+        cur_roll_gpus: usize,
+        cur_train_gpus: usize,
+    }
+
+    impl<S: GroupScheduler> SeedSimulator<S> {
+        pub fn new(cfg: SimConfig, sched: S, trace: Vec<JobSpec>) -> Self {
+            let mut sim = SeedSimulator {
+                cfg,
+                sched,
+                trace: trace.into_iter().map(Some).collect(),
+                events: BinaryHeap::new(),
+                seq: 0,
+                now: 0.0,
+                jobs: Vec::new(),
+                group_rt: Vec::new(),
+                res: SimResult::default(),
+                last_rate_change: 0.0,
+                cur_rate_per_h: 0.0,
+                cur_roll_gpus: 0,
+                cur_train_gpus: 0,
+            };
+            for i in 0..sim.trace.len() {
+                let t = sim.trace[i].as_ref().expect("fresh trace").arrival_s;
+                sim.push(t, Ev::Arrival(i));
+            }
+            sim
+        }
+
+        fn push(&mut self, t: f64, ev: Ev) {
+            self.seq += 1;
+            self.events.push(Event { t, seq: self.seq, ev });
+        }
+
+        fn integrate_cost(&mut self) {
+            let dt_h = (self.now - self.last_rate_change) / 3600.0;
+            self.res.cost_usd += dt_h * self.cur_rate_per_h;
+            let dt = self.now - self.last_rate_change;
+            self.res.roll_prov_gpu_s += dt * self.cur_roll_gpus as f64;
+            self.res.train_prov_gpu_s += dt * self.cur_train_gpus as f64;
+            self.last_rate_change = self.now;
+        }
+
+        fn rate_changed(&mut self) {
+            self.integrate_cost();
+            self.cur_rate_per_h = self.sched.cost_per_hour();
+            let (r, t) = self.sched.gpus();
+            self.cur_roll_gpus = r;
+            self.cur_train_gpus = t;
+            self.res.peak_roll_gpus = self.res.peak_roll_gpus.max(r);
+            self.res.peak_train_gpus = self.res.peak_train_gpus.max(t);
+            self.res.usage_curve.push((self.now, r, t));
+        }
+
+        pub fn run(mut self) -> SimResult {
+            while let Some(Event { t, ev, .. }) = self.events.pop() {
+                self.now = t;
+                match ev {
+                    Ev::Arrival(i) => self.on_arrival(i),
+                    Ev::PhaseDone(slot, kind, iter) => self.on_phase_done(slot, kind, iter),
+                    Ev::TailFree(slot, kept) => self.on_tail_free(slot, kept),
+                }
+            }
+            self.integrate_cost();
+            self.res.makespan_s = self.now;
+            self.res.avg_cost_per_hour = if self.now > 0.0 {
+                self.res.cost_usd / (self.now / 3600.0)
+            } else {
+                0.0
+            };
+            self.res
+        }
+
+        fn ensure_group_rt(&mut self, gid: usize) {
+            if self.group_rt.len() <= gid {
+                self.group_rt.resize_with(gid + 1, GroupRt::default);
+            }
+        }
+
+        fn on_arrival(&mut self, idx: usize) {
+            let spec = self.trace[idx].take().expect("arrival fires once per job");
+            let id = spec.id;
+            let d = self.sched.place(spec.clone());
+            self.rate_changed();
+
+            let group = self
+                .sched
+                .groups()
+                .iter()
+                .find(|g| g.id == d.group_id)
+                .expect("placed group exists");
+            let gj = group.jobs().iter().find(|j| j.spec.id == id).expect("job in group");
+            let train_gpus = group.train_gpus();
+            let train_scale = if matches!(spec.phases, PhaseSpec::Direct { .. }) {
+                1.0
+            } else {
+                spec.n_train_gpus as f64 / train_gpus as f64
+            };
+            let t_sync = sync_time_s(
+                self.cfg.sync_scheme,
+                spec.model_bytes(),
+                train_gpus,
+                spec.n_roll_gpus,
+            );
+            let solo_est_iter_s = gj.t_solo();
+            let cold = self
+                .cfg
+                .switch
+                .cold_s(spec.params_b, rollmux::cluster::node::PoolKind::Rollout);
+            let mut rng = Rng::new(self.cfg.seed ^ (id as u64).wrapping_mul(0x9E37_79B9));
+            let rt = JobRt {
+                group: d.group_id,
+                roll_nodes: d.roll_nodes,
+                train_gpus,
+                train_scale,
+                t_sync,
+                iter: 0,
+                solo_s: 0.0,
+                solo_est_iter_s,
+                init_s: cold,
+                migrations: 0,
+                rng: rng.fork(1),
+                cur_troll: 0.0,
+                cur_ttrain: 0.0,
+                cur_roll_end: 0.0,
+                tail_penalty: 0.0,
+                tail_frac: 0.0,
+                done: false,
+                spec,
+            };
+            let slot = self.jobs.len();
+            self.jobs.push(rt);
+            self.ensure_group_rt(d.group_id);
+
+            let t_done = self.now + cold;
+            self.record(slot, PhaseKind::Init, 0, self.now, t_done, &[]);
+            self.push(t_done, Ev::PhaseDone(slot, PhaseKind::Init, 0));
+        }
+
+        fn sample_iteration(&mut self, slot: usize) {
+            let rt = &mut self.jobs[slot];
+            let s = rt.spec.sample_iter(&self.cfg.model, &mut rt.rng);
+            rt.cur_troll = s.t_roll;
+            rt.cur_ttrain = s.t_train * rt.train_scale;
+            rt.solo_s += s.t_roll + rt.cur_ttrain + rt.t_sync;
+        }
+
+        fn switch_cost(&self, slot: usize, pool: rollmux::cluster::node::PoolKind) -> f64 {
+            let p = self.jobs[slot].spec.params_b;
+            if self.cfg.warm_starts {
+                self.cfg.switch.warm_s(p, pool)
+            } else {
+                self.cfg.switch.cold_s(p, pool)
+            }
+        }
+
+        fn enqueue(&mut self, slot: usize, kind: PhaseKind) {
+            let gid = self.jobs[slot].group;
+            self.group_rt[gid].queue.push_back(Pending { slot, kind });
+            self.try_dispatch(gid);
+        }
+
+        fn try_dispatch(&mut self, gid: usize) {
+            loop {
+                let grt = &self.group_rt[gid];
+                let mut started = None;
+                for (qi, p) in grt.queue.iter().enumerate() {
+                    match p.kind {
+                        PhaseKind::Rollout => {
+                            let nodes = &self.jobs[p.slot].roll_nodes;
+                            if nodes.iter().all(|&n| grt.node_free(n)) {
+                                started = Some(qi);
+                                break;
+                            }
+                        }
+                        PhaseKind::Train => {
+                            if grt.train_busy.is_none() {
+                                started = Some(qi);
+                                break;
+                            }
+                        }
+                        _ => unreachable!("only rollout/train queue"),
+                    }
+                }
+                let Some(qi) = started else { return };
+                let p = self.group_rt[gid].queue.remove(qi).expect("queue index valid");
+                self.start_phase(gid, p.slot, p.kind);
+            }
+        }
+
+        fn start_phase(&mut self, gid: usize, slot: usize, kind: PhaseKind) {
+            let iter = self.jobs[slot].iter;
+            match kind {
+                PhaseKind::Rollout => {
+                    let warm = self.switch_cost(slot, rollmux::cluster::node::PoolKind::Rollout);
+                    let t_roll = self.jobs[slot].cur_troll;
+                    let n_pins = self.jobs[slot].roll_nodes.len();
+                    for i in 0..n_pins {
+                        let n = self.jobs[slot].roll_nodes[i];
+                        self.group_rt[gid].occupy(n, slot);
+                    }
+                    let end = self.now + warm + t_roll;
+                    let sample = {
+                        let rt = &mut self.jobs[slot];
+                        let sample = rollmux::workload::job::IterSample {
+                            t_roll,
+                            t_train: rt.cur_ttrain,
+                            tail_start_frac: rt.rng.fork(iter as u64).uniform(0.55, 0.85),
+                            tail_gpu_frac: rt.rng.fork(iter as u64 ^ 0xabc).uniform(0.1, 0.35),
+                        };
+                        rt.cur_roll_end = end;
+                        sample
+                    };
+                    if let Some(plan) = self.cfg.migration.plan(&sample, n_pins) {
+                        let t_check = self.now + warm + plan.trigger_at_s;
+                        self.jobs[slot].tail_frac = plan.tail_gpu_frac;
+                        self.push(t_check, Ev::TailFree(slot, plan.nodes_kept));
+                    }
+                    self.res.roll_busy_gpu_s +=
+                        (warm + t_roll) * n_pins as f64 * GPUS_PER_NODE as f64;
+                    self.record_rollout(slot, iter, self.now, end);
+                    self.push(end, Ev::PhaseDone(slot, PhaseKind::Rollout, iter));
+                }
+                PhaseKind::Train => {
+                    let warm = self.switch_cost(slot, rollmux::cluster::node::PoolKind::Train);
+                    let t_train = self.jobs[slot].cur_ttrain;
+                    self.group_rt[gid].train_busy = Some(slot);
+                    let end = self.now + warm + t_train;
+                    let train_gpus = self.jobs[slot].train_gpus;
+                    self.res.train_busy_gpu_s += (warm + t_train) * train_gpus as f64;
+                    self.record(slot, PhaseKind::Train, iter, self.now, end, &[]);
+                    self.push(end, Ev::PhaseDone(slot, PhaseKind::Train, iter));
+                }
+                _ => unreachable!(),
+            }
+        }
+
+        fn on_tail_free(&mut self, slot: usize, kept: usize) {
+            if self.jobs[slot].done {
+                return;
+            }
+            if self.jobs[slot].cur_roll_end <= self.now {
+                return;
+            }
+            let gid = self.jobs[slot].group;
+            let has_waiter = {
+                let grt = &self.group_rt[gid];
+                let nodes = &self.jobs[slot].roll_nodes;
+                grt.queue.iter().any(|p| {
+                    p.kind == PhaseKind::Rollout
+                        && self.jobs[p.slot]
+                            .roll_nodes
+                            .iter()
+                            .any(|n| nodes.contains(n))
+                })
+            };
+            if !has_waiter {
+                return;
+            }
+            let penalty = self.cfg.migration.migrate_cost_s;
+            let (remaining, n_pins, tail_frac) = {
+                let rt = &mut self.jobs[slot];
+                rt.tail_penalty = penalty;
+                rt.migrations += 1;
+                (rt.cur_roll_end - self.now, rt.roll_nodes.len(), rt.tail_frac)
+            };
+            let freed = n_pins - kept;
+            self.res.roll_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
+            self.res.roll_busy_gpu_s +=
+                (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64;
+            for i in kept..n_pins {
+                let n = self.jobs[slot].roll_nodes[i];
+                self.group_rt[gid].release_if_held(n, slot);
+            }
+            self.try_dispatch(gid);
+        }
+
+        fn on_phase_done(&mut self, slot: usize, kind: PhaseKind, iter: usize) {
+            if self.jobs[slot].done {
+                return;
+            }
+            let gid = self.jobs[slot].group;
+            match kind {
+                PhaseKind::Init => {
+                    self.sample_iteration(slot);
+                    self.enqueue(slot, PhaseKind::Rollout);
+                }
+                PhaseKind::Rollout => {
+                    {
+                        let rt = &mut self.jobs[slot];
+                        if rt.tail_penalty > 0.0 {
+                            let p = std::mem::take(&mut rt.tail_penalty);
+                            rt.cur_roll_end = self.now + p;
+                            self.push(self.now + p, Ev::PhaseDone(slot, PhaseKind::Rollout, iter));
+                            return;
+                        }
+                    }
+                    let n_pins = self.jobs[slot].roll_nodes.len();
+                    for i in 0..n_pins {
+                        let n = self.jobs[slot].roll_nodes[i];
+                        self.group_rt[gid].release_if_held(n, slot);
+                    }
+                    self.enqueue(slot, PhaseKind::Train);
+                    self.try_dispatch(gid);
+                }
+                PhaseKind::Train => {
+                    let grt = &mut self.group_rt[gid];
+                    if grt.train_busy == Some(slot) {
+                        grt.train_busy = None;
+                    }
+                    let t_sync = self.jobs[slot].t_sync;
+                    let end = self.now + t_sync;
+                    self.record(slot, PhaseKind::Sync, iter, self.now, end, &[]);
+                    self.push(end, Ev::PhaseDone(slot, PhaseKind::Sync, iter));
+                    self.try_dispatch(gid);
+                }
+                PhaseKind::Sync => {
+                    let rt = &mut self.jobs[slot];
+                    rt.iter += 1;
+                    if rt.iter >= rt.spec.n_iters {
+                        self.finish_job(slot);
+                    } else {
+                        self.sample_iteration(slot);
+                        self.enqueue(slot, PhaseKind::Rollout);
+                    }
+                }
+            }
+        }
+
+        fn finish_job(&mut self, slot: usize) {
+            let (id, gid, outcome) = {
+                let rt = &mut self.jobs[slot];
+                rt.done = true;
+                (
+                    rt.spec.id,
+                    rt.group,
+                    rollmux::sim::engine::JobOutcome {
+                        arrival_s: rt.spec.arrival_s,
+                        finish_s: self.now,
+                        solo_actual_s: rt.solo_s,
+                        solo_est_s: rt.init_s + rt.solo_est_iter_s * rt.spec.n_iters as f64,
+                        slo: rt.spec.slo,
+                        iters: rt.iter,
+                        migrations: rt.migrations,
+                    },
+                )
+            };
+            self.res.outcomes.insert(id, outcome);
+            self.sched.complete(id);
+            self.rate_changed();
+            self.try_dispatch(gid);
+        }
+
+        fn record(&mut self, slot: usize, kind: PhaseKind, iter: usize, start: f64, end: f64, roll_nodes: &[usize]) {
+            if self.cfg.record_gantt {
+                let rt = &self.jobs[slot];
+                self.res.records.push(PhaseRecord {
+                    job: rt.spec.id,
+                    group: rt.group,
+                    kind,
+                    iter,
+                    start,
+                    end,
+                    roll_nodes: roll_nodes.to_vec(),
+                });
+            }
+        }
+
+        fn record_rollout(&mut self, slot: usize, iter: usize, start: f64, end: f64) {
+            if self.cfg.record_gantt {
+                let rt = &self.jobs[slot];
+                self.res.records.push(PhaseRecord {
+                    job: rt.spec.id,
+                    group: rt.group,
+                    kind: PhaseKind::Rollout,
+                    iter,
+                    start,
+                    end,
+                    roll_nodes: rt.roll_nodes.clone(),
+                });
+            }
+        }
+    }
+}
+
+fn random_jobs(seed: u64, n: usize) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| {
+            let slo = rng.uniform(1.0, 2.0);
+            let arrival = rng.uniform(0.0, 2000.0);
+            let mut j = table6_job(id, SimProfile::Mixed, &mut rng, slo, arrival, 0);
+            j.n_iters = rng.range(2, 8);
+            j
+        })
+        .collect()
+}
+
+fn assert_bitwise_equal(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}: job count");
+    for (id, oa) in &a.outcomes {
+        let ob = b.outcomes.get(id).unwrap_or_else(|| panic!("{ctx}: job {id} missing"));
+        assert_eq!(oa.finish_s.to_bits(), ob.finish_s.to_bits(), "{ctx}: job {id} finish");
+        assert_eq!(oa.arrival_s.to_bits(), ob.arrival_s.to_bits(), "{ctx}: job {id} arrival");
+        assert_eq!(oa.solo_actual_s.to_bits(), ob.solo_actual_s.to_bits(), "{ctx}: job {id} solo");
+        assert_eq!(oa.solo_est_s.to_bits(), ob.solo_est_s.to_bits(), "{ctx}: job {id} est");
+        assert_eq!(oa.slo.to_bits(), ob.slo.to_bits(), "{ctx}: job {id} slo");
+        assert_eq!(oa.iters, ob.iters, "{ctx}: job {id} iters");
+        assert_eq!(oa.migrations, ob.migrations, "{ctx}: job {id} migrations");
+    }
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits(), "{ctx}: cost");
+    assert_eq!(a.avg_cost_per_hour.to_bits(), b.avg_cost_per_hour.to_bits(), "{ctx}: rate");
+    assert_eq!(a.peak_roll_gpus, b.peak_roll_gpus, "{ctx}: peak roll");
+    assert_eq!(a.peak_train_gpus, b.peak_train_gpus, "{ctx}: peak train");
+    assert_eq!(a.roll_busy_gpu_s.to_bits(), b.roll_busy_gpu_s.to_bits(), "{ctx}: roll busy");
+    assert_eq!(a.train_busy_gpu_s.to_bits(), b.train_busy_gpu_s.to_bits(), "{ctx}: train busy");
+    assert_eq!(a.roll_prov_gpu_s.to_bits(), b.roll_prov_gpu_s.to_bits(), "{ctx}: roll prov");
+    assert_eq!(a.train_prov_gpu_s.to_bits(), b.train_prov_gpu_s.to_bits(), "{ctx}: train prov");
+    assert_eq!(a.usage_curve.len(), b.usage_curve.len(), "{ctx}: usage curve");
+    for (ua, ub) in a.usage_curve.iter().zip(&b.usage_curve) {
+        assert_eq!(ua.0.to_bits(), ub.0.to_bits(), "{ctx}: usage t");
+        assert_eq!((ua.1, ua.2), (ub.1, ub.2), "{ctx}: usage gpus");
+    }
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        assert_eq!(ra.job, rb.job, "{ctx}: record {i} job");
+        assert_eq!(ra.group, rb.group, "{ctx}: record {i} group");
+        assert_eq!(ra.kind, rb.kind, "{ctx}: record {i} kind");
+        assert_eq!(ra.iter, rb.iter, "{ctx}: record {i} iter");
+        assert_eq!(ra.start.to_bits(), rb.start.to_bits(), "{ctx}: record {i} start");
+        assert_eq!(ra.end.to_bits(), rb.end.to_bits(), "{ctx}: record {i} end");
+        assert_eq!(ra.roll_nodes, rb.roll_nodes, "{ctx}: record {i} nodes");
+    }
+}
+
+fn compare_on(cfg: SimConfig, trace: Vec<JobSpec>, ctx: &str) {
+    let new = Simulator::new(
+        cfg.clone(),
+        InterGroupScheduler::new(PhaseModel::default()),
+        trace.clone(),
+    )
+    .run();
+    let old = seed::SeedSimulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace)
+        .run();
+    assert_bitwise_equal(&new, &old, ctx);
+}
+
+/// Default-policy simulations are bit-identical to the pre-refactor
+/// engine on random Table-6 traces (migration + stochastic phases on,
+/// gantt on so dispatch order itself is pinned).
+#[test]
+fn default_policy_matches_seed_engine() {
+    for seed in 0..12u64 {
+        let cfg = SimConfig { seed, record_gantt: true, ..Default::default() };
+        compare_on(cfg, random_jobs(seed, 12), &format!("seed {seed}"));
+    }
+}
+
+/// Same equivalence under the ablation knobs the experiments flip (cold
+/// starts, no migration, gantt off).
+#[test]
+fn ablation_configs_match_seed_engine() {
+    let mut cold = SimConfig { seed: 3, ..Default::default() };
+    cold.warm_starts = false;
+    compare_on(cold, random_jobs(103, 10), "cold starts");
+
+    let mut nomig = SimConfig { seed: 4, record_gantt: true, ..Default::default() };
+    nomig.migration.enabled = false;
+    compare_on(nomig, random_jobs(104, 10), "migration off");
+
+    let gantt_off = SimConfig { seed: 5, ..Default::default() };
+    compare_on(gantt_off, random_jobs(105, 10), "gantt off");
+}

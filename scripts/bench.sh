@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # Run the performance bench binaries and assemble the machine-readable
-# BENCH_1.json at the repository root (ISSUE 1: the perf trajectory is
-# tracked across PRs; see EXPERIMENTS.md §Perf for methodology).
+# BENCH_N.json at the repository root (the perf trajectory is tracked
+# across PRs; see EXPERIMENTS.md §Perf for methodology). ISSUE 1
+# produced BENCH_1.json; ISSUE 2 adds the orchestration-core dispatch
+# bench and emits BENCH_2.json.
 #
 # Usage: scripts/bench.sh [extra cargo args...]
-#   BENCH_OUT=path   override the output file (default: <repo>/BENCH_1.json)
+#   BENCH_OUT=path   override the output file (default: <repo>/BENCH_2.json)
 #
 # Each bench binary appends one JSON object per measurement to
 # $BENCH_JSON_OUT (see util::emit_bench_json); this script wraps the
@@ -12,7 +14,7 @@
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
-OUT="${BENCH_OUT:-$ROOT/BENCH_1.json}"
+OUT="${BENCH_OUT:-$ROOT/BENCH_2.json}"
 TMP="$(mktemp -d)"
 trap 'rm -rf "$TMP"' EXIT
 export BENCH_JSON_OUT="$TMP/bench.jsonl"
@@ -20,6 +22,9 @@ export BENCH_JSON_OUT="$TMP/bench.jsonl"
 cd "$ROOT"
 cargo bench --bench scheduler_latency "$@"
 cargo bench --bench simulator "$@"
+# ISSUE 2: dispatch throughput of the extracted orchestration core, per
+# policy — keeps the refactor's hot path on the perf trajectory.
+cargo bench --bench orchestrator "$@"
 # sync_and_memory measures per-decision micro-costs; cheap, keep it in.
 cargo bench --bench sync_and_memory "$@" || true
 
