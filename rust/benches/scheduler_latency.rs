@@ -89,6 +89,61 @@ fn main() {
         &[("wall_s", secs), ("placements_per_s", 2000.0 / secs), ("groups", groups as f64)],
     );
 
+    // ISSUE 3 fleet-scale acceptance: 20k placements through the indexed
+    // scheduler vs the exhaustive reference scan (the pre-PR 3 decision
+    // path, kept as `schedule_reference`). Decisions are property-tested
+    // bit-identical; the acceptance bar is >= 5x placements/s
+    // (EXPERIMENTS.md §Perf PR 3). The job mix reuses the regression-gate
+    // shape so both runs build the same fleet.
+    const FLEET: usize = 20_000;
+    let (groups, secs) = timed(|| {
+        let mut s = InterGroupScheduler::new(model);
+        for id in 0..FLEET {
+            s.schedule(mk_job(id));
+        }
+        s.groups.len()
+    });
+    println!(
+        "algorithm1/place_20k_indexed: {:.3}s wall, {} groups, {:.0} placements/s",
+        secs,
+        groups,
+        FLEET as f64 / secs
+    );
+    emit_bench_json(
+        BIN,
+        "algorithm1/place_20k_indexed",
+        &[
+            ("wall_s", secs),
+            ("placements_per_s", FLEET as f64 / secs),
+            ("groups", groups as f64),
+        ],
+    );
+    let (groups_ref, secs_ref) = timed(|| {
+        let mut s = InterGroupScheduler::new(model);
+        for id in 0..FLEET {
+            s.schedule_reference(mk_job(id));
+        }
+        s.groups.len()
+    });
+    assert_eq!(groups, groups_ref, "indexed and reference scans must agree");
+    println!(
+        "algorithm1/place_20k_reference: {:.3}s wall, {:.0} placements/s, speedup {:.2}x",
+        secs_ref,
+        FLEET as f64 / secs_ref,
+        secs_ref / secs
+    );
+    emit_bench_json(
+        BIN,
+        "algorithm1/place_20k_reference",
+        &[
+            ("wall_s", secs_ref),
+            ("placements_per_s", FLEET as f64 / secs_ref),
+            // The acceptance ratio: how many times faster the indexed
+            // path is than this reference scan (>= 5 required).
+            ("speedup_indexed_over_reference", secs_ref / secs),
+        ],
+    );
+
     // Brute force for reference (paper: 113 ms @5, >1 min @9, >5 h @13).
     for &n in &[5usize, 7, 9] {
         let mut rng = Rng::new(7);

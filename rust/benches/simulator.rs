@@ -5,7 +5,7 @@
 
 use rollmux::cluster::PhaseModel;
 use rollmux::coordinator::inter::InterGroupScheduler;
-use rollmux::sim::engine::{SimConfig, Simulator};
+use rollmux::sim::engine::{EventQueueKind, SimConfig, Simulator};
 use rollmux::util::{bench, emit_bench_json, timed};
 use rollmux::workload::trace::{philly_trace, production_trace, SloPolicy};
 use rollmux::workload::profiles::SimProfile;
@@ -54,4 +54,35 @@ fn main() {
             ("phases_per_s", phases_per_s),
         ],
     );
+
+    // ISSUE 3: raw event-engine throughput (events/s), calendar queue vs
+    // the historical binary heap on the same trace. Results are
+    // property-tested bit-identical; only the queue changes.
+    for (name, kind) in [
+        ("engine/events_calendar @200 jobs", EventQueueKind::Calendar),
+        ("engine/events_heap @200 jobs", EventQueueKind::BinaryHeap),
+    ] {
+        let trace = production_trace(7, 200);
+        let events = {
+            let cfg = SimConfig { seed: 7, event_queue: kind, ..Default::default() };
+            Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace.clone())
+                .run()
+                .events_processed
+        };
+        let stats = bench(1, 5, || {
+            let cfg = SimConfig { seed: 7, event_queue: kind, ..Default::default() };
+            Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace.clone())
+                .run()
+        });
+        stats.report(name);
+        emit_bench_json(
+            BIN,
+            name,
+            &[
+                ("mean_s", stats.mean_s),
+                ("events", events as f64),
+                ("events_per_s", events as f64 / stats.mean_s.max(1e-12)),
+            ],
+        );
+    }
 }

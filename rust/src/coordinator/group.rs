@@ -25,6 +25,15 @@
 //! in-member-order floating-point folds, so they are *bit-identical* to a
 //! from-scratch recomputation over `jobs()` (property-tested in
 //! `rust/tests/prop_coordinator.rs`).
+//!
+//! ISSUE 3 (DESIGN.md §11): the same mutators also maintain
+//! [`Group::nodes_by_load`] — the rollout node ids in ascending
+//! `(pinned load, node id)` order — so GENERATEPLACEMENTS reads the k
+//! least-loaded nodes off a prefix instead of sorting every node per
+//! candidate. The order is repositioned per touched node on `admit`
+//! (binary search + shift) and rebuilt on `retract`/`repin` alongside the
+//! other caches; `rust/tests/prop_placement_index.rs` pins it bitwise
+//! against the full sort.
 
 use crate::cluster::node::{PoolKind, GPUS_PER_NODE, HOST_MEM_GB};
 use crate::cluster::{GpuKind, PhaseModel, PhaseTimes};
@@ -115,6 +124,10 @@ pub struct Group {
     slo_budget: f64,
     /// true once any rollout node's pinned memory exceeds host DRAM.
     mem_over: bool,
+    /// All rollout node ids (0..n_roll_nodes), ascending by
+    /// `(roll_node_load, node id)` — the exact total order the placement
+    /// ranking used to obtain by sorting. Maintained incrementally.
+    nodes_by_load: Vec<u32>,
 }
 
 impl Group {
@@ -133,6 +146,7 @@ impl Group {
             max_roll_load: 0.0,
             slo_budget: f64::INFINITY,
             mem_over: false,
+            nodes_by_load: (0..n_roll_nodes as u32).collect(),
         }
     }
 
@@ -160,7 +174,23 @@ impl Group {
                 self.n_roll_nodes = max_pin + 1;
             }
         }
+        self.sync_node_order();
+        // Detach the touched nodes from the load order before the fold
+        // mutates their loads, then re-insert them at their new ranks
+        // (binary search each way; untouched nodes never move).
+        for (i, &n) in job.roll_nodes.iter().enumerate() {
+            if job.roll_nodes[..i].contains(&n) {
+                continue;
+            }
+            self.order_remove(n);
+        }
         self.accumulate_caches(&job);
+        for (i, &n) in job.roll_nodes.iter().enumerate() {
+            if job.roll_nodes[..i].contains(&n) {
+                continue;
+            }
+            self.order_insert(n);
+        }
         self.jobs.push(job);
     }
 
@@ -201,6 +231,8 @@ impl Group {
         self.n_roll_nodes = self.n_roll_nodes.min(max_used + 1);
         self.roll_load.truncate(self.n_roll_nodes);
         self.roll_mem.truncate(self.n_roll_nodes);
+        let keep = self.n_roll_nodes as u32;
+        self.nodes_by_load.retain(|&n| n < keep);
     }
 
     /// Fold one job into the cached aggregates (append-order fold — the
@@ -246,6 +278,51 @@ impl Group {
             self.accumulate_caches(job);
         }
         self.jobs = jobs;
+        self.rebuild_node_order();
+    }
+
+    /// Rebuild the load order from scratch — same `(load, id)` total order
+    /// the incremental maintenance preserves.
+    fn rebuild_node_order(&mut self) {
+        let mut order: Vec<u32> = (0..self.n_roll_nodes as u32).collect();
+        let loads = &self.roll_load;
+        order.sort_by(|&a, &b| {
+            let la = loads.get(a as usize).copied().unwrap_or(0.0);
+            let lb = loads.get(b as usize).copied().unwrap_or(0.0);
+            la.total_cmp(&lb).then(a.cmp(&b))
+        });
+        self.nodes_by_load = order;
+    }
+
+    /// Ensure the load order covers every node up to `n_roll_nodes`
+    /// (freshly provisioned nodes enter with zero load).
+    fn sync_node_order(&mut self) {
+        while self.nodes_by_load.len() < self.n_roll_nodes {
+            let n = self.nodes_by_load.len();
+            self.order_insert(n);
+        }
+    }
+
+    /// Rank of node `n` under the current loads: the position of
+    /// `(roll_node_load(n), n)` in the ascending order.
+    fn order_pos(&self, n: u32) -> usize {
+        let load = self.roll_load.get(n as usize).copied().unwrap_or(0.0);
+        let loads = &self.roll_load;
+        self.nodes_by_load.partition_point(|&m| {
+            let lm = loads.get(m as usize).copied().unwrap_or(0.0);
+            lm.total_cmp(&load).then(m.cmp(&n)).is_lt()
+        })
+    }
+
+    fn order_remove(&mut self, n: usize) {
+        let pos = self.order_pos(n as u32);
+        debug_assert_eq!(self.nodes_by_load.get(pos).copied(), Some(n as u32));
+        self.nodes_by_load.remove(pos);
+    }
+
+    fn order_insert(&mut self, n: usize) {
+        let pos = self.order_pos(n as u32);
+        self.nodes_by_load.insert(pos, n as u32);
     }
 
     pub fn train_gpus(&self) -> usize {
@@ -286,6 +363,20 @@ impl Group {
     /// Σ train_occupancy over members (the serial training queue).
     pub fn train_queue_load(&self) -> f64 {
         self.train_load
+    }
+
+    /// `t_cycle - train_queue_load`: how much serial training occupancy
+    /// still fits the natural cycle. The inter-group scheduler's
+    /// unsaturated index buckets on this (DESIGN.md §11).
+    pub fn cycle_slack(&self) -> f64 {
+        self.t_cycle - self.train_load
+    }
+
+    /// Rollout node ids ascending by `(pinned load, id)` — maintained by
+    /// `admit`/`retract`/`repin`, so GENERATEPLACEMENTS takes its k
+    /// least-loaded nodes from the prefix without sorting.
+    pub fn nodes_by_load(&self) -> &[u32] {
+        &self.nodes_by_load
     }
 
     /// Σ mem_train_gb over members, GB.
@@ -541,6 +632,39 @@ mod tests {
         let scaled = g.evaluate_admit(&probe2, &[1], 1);
         assert!(scaled.is_some());
         assert!((scaled.unwrap() - 8.0 * 1.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_order_tracks_loads() {
+        let model = PhaseModel::default();
+        let mut big = direct_job(0, 300.0, 150.0, 4.0);
+        big.n_roll_gpus = 24; // 3 rollout nodes
+        big.n_train_gpus = 16;
+        let mut g = Group::isolated(0, big, &model);
+        let check = |g: &Group| {
+            let mut expect: Vec<(f64, u32)> = (0..g.n_roll_nodes)
+                .map(|n| (g.roll_node_load(n), n as u32))
+                .collect();
+            expect.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let expect: Vec<u32> = expect.into_iter().map(|(_, n)| n).collect();
+            assert_eq!(g.nodes_by_load(), &expect[..]);
+        };
+        check(&g);
+        pack(&mut g, direct_job(1, 120.0, 30.0, 6.0), vec![1]);
+        check(&g);
+        pack(&mut g, direct_job(2, 60.0, 20.0, 6.0), vec![2, 1]);
+        check(&g);
+        // Scaling pins past the pool: fresh node enters at zero load.
+        pack(&mut g, direct_job(3, 90.0, 10.0, 6.0), vec![4]);
+        assert_eq!(g.n_roll_nodes, 5);
+        check(&g);
+        g.retract(2);
+        check(&g);
+        g.repin(3, vec![0]);
+        check(&g);
+        g.compact_trailing_nodes();
+        assert_eq!(g.nodes_by_load().len(), g.n_roll_nodes);
+        check(&g);
     }
 
     #[test]

@@ -1,11 +1,16 @@
 //! Ablations (§7.3): Fig. 11 (long-tail distribution + request migration),
 //! Fig. 12 (topology-aware model synchronization), and the ISSUE 2
 //! intra-group dispatch-policy ablation over the orchestration core.
+//!
+//! ISSUE 3: the replay loops run on the parallel sweep harness
+//! (`util::par`) — runs computed concurrently, rows merged and printed
+//! in input order, byte-identical to the serial loops.
 
 use crate::cluster::PhaseModel;
 use crate::coordinator::inter::InterGroupScheduler;
 use crate::coordinator::orchestrator::IntraPolicyKind;
-use crate::sim::engine::{SimConfig, Simulator};
+use crate::sim::engine::{SimConfig, SimResult, Simulator};
+use crate::util::par;
 use crate::sync::{plan::plan_sync, SyncScheme};
 use crate::sync::topology::NetworkTopology;
 use crate::util::rng::Rng;
@@ -54,7 +59,9 @@ pub fn fig11(opts: &ExpOpts) {
         ("7B+14B (A+B)", 'A', 'B'),
         ("multi-turn (D+D)", 'D', 'D'),
     ];
-    for (name, a, b) in pairs {
+    // One task per pair (each runs its with/without-migration replays
+    // back to back); tasks run concurrently, rows merge in pair order.
+    let results: Vec<(String, f64, f64)> = par::parallel_map(pairs, |_, (name, a, b)| {
         let mk_trace = || {
             let mut t0 = table3_job(a, 0, 0.0);
             let mut t1 = table3_job(b, 1, 0.0);
@@ -74,11 +81,14 @@ pub fn fig11(opts: &ExpOpts) {
             Simulator::new(with, super::micro::NaiveColocate::new(), mk_trace()).run();
         let r_without =
             Simulator::new(without, super::micro::NaiveColocate::new(), mk_trace()).run();
+        (name.to_string(), r_without.makespan_s, r_with.makespan_s)
+    });
+    for (name, without_s, with_s) in results {
         t2.row(vec![
-            name.to_string(),
-            f(r_without.makespan_s, 0),
-            f(r_with.makespan_s, 0),
-            ratio(r_without.makespan_s / r_with.makespan_s),
+            name,
+            f(without_s, 0),
+            f(with_s, 0),
+            ratio(without_s / with_s),
         ]);
     }
     t2.print();
@@ -96,7 +106,8 @@ pub fn intra(opts: &ExpOpts) {
         &format!("Intra-group dispatch policies — Philly trace, {n} jobs"),
         &["policy", "makespan (h)", "SLO attain", "mean slowdown", "cost ($)", "iters/k$"],
     );
-    for kind in IntraPolicyKind::all() {
+    let kinds: Vec<IntraPolicyKind> = IntraPolicyKind::all().to_vec();
+    let results: Vec<(IntraPolicyKind, SimResult)> = par::parallel_map(kinds, |_, kind| {
         let mut cfg = SimConfig { seed: opts.seed, ..Default::default() };
         cfg.intra = kind;
         let res = Simulator::new(
@@ -105,6 +116,9 @@ pub fn intra(opts: &ExpOpts) {
             trace.clone(),
         )
         .run();
+        (kind, res)
+    });
+    for (kind, res) in &results {
         t.row(vec![
             kind.name().to_string(),
             f(res.makespan_s / 3600.0, 1),

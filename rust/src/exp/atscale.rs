@@ -1,13 +1,23 @@
 //! §7.4: at-scale replay of the two-week production trace — Fig. 13
 //! (provisioning cost, GPU usage, dependency bubbles).
+//!
+//! ISSUE 3: the three system replays (RollMux / Solo-D / veRL) run
+//! concurrently on the sweep harness (`util::par`); rows are merged and
+//! printed in fixed order, byte-identical to the serial version.
 
-use crate::baselines::{evaluate, BaselineKind};
+use crate::baselines::{evaluate, BaselineKind, BaselineResult};
 use crate::cluster::PhaseModel;
-use crate::sim::engine::{run_rollmux, SimConfig};
+use crate::sim::engine::{run_rollmux, SimConfig, SimResult};
+use crate::util::par;
 use crate::util::table::{f, pct, ratio, Table};
 use crate::workload::trace::production_trace;
 
 use super::ExpOpts;
+
+enum Fig13Run {
+    Mux(Box<SimResult>),
+    Base(BaselineResult),
+}
 
 pub fn fig13(opts: &ExpOpts) {
     let n_jobs = (200.0 * opts.scale).max(20.0) as usize;
@@ -15,10 +25,18 @@ pub fn fig13(opts: &ExpOpts) {
     let model = PhaseModel::default();
     println!("replaying {n_jobs} production jobs over a two-week span...\n");
 
-    let cfg = SimConfig { seed: opts.seed, ..Default::default() };
-    let mux = run_rollmux(cfg, trace.clone());
-    let solo = evaluate(BaselineKind::SoloDisaggregation, &trace, &model, opts.seed);
-    let verl = evaluate(BaselineKind::VerlColocated, &trace, &model, opts.seed);
+    let mut runs = par::parallel_map(vec![0usize, 1, 2], |_, k| match k {
+        0 => {
+            let cfg = SimConfig { seed: opts.seed, ..Default::default() };
+            Fig13Run::Mux(Box::new(run_rollmux(cfg, trace.clone())))
+        }
+        1 => Fig13Run::Base(evaluate(BaselineKind::SoloDisaggregation, &trace, &model, opts.seed)),
+        _ => Fig13Run::Base(evaluate(BaselineKind::VerlColocated, &trace, &model, opts.seed)),
+    });
+    let Fig13Run::Base(verl) = runs.pop().expect("three runs") else { unreachable!() };
+    let Fig13Run::Base(solo) = runs.pop().expect("three runs") else { unreachable!() };
+    let Fig13Run::Mux(mux) = runs.pop().expect("three runs") else { unreachable!() };
+    let mux = *mux;
 
     // Fig. 13a: provisioning cost.
     let mut t = Table::new(

@@ -1,11 +1,19 @@
 //! §7.5: trace-driven scheduler study — Fig. 14 sensitivity analysis,
 //! Fig. 15 end-to-end simulation, Table 5 decision latency.
+//!
+//! ISSUE 3: each figure's policy runs execute on the parallel sweep
+//! harness (`util::par`, DESIGN.md §11): the runs are computed
+//! concurrently with per-run RNG streams derived only from the run's own
+//! descriptor, then merged back in input order — so stdout is
+//! byte-identical to the serial loop (unit-tested bitwise below) while
+//! wall-clock scales with cores. `ROLLMUX_THREADS=1` forces serial.
 
 use crate::baselines::heuristic::{GreedyScheduler, RandomScheduler};
 use crate::baselines::optimal::{optimal_partition_deadline, PrePlacedScheduler};
 use crate::cluster::PhaseModel;
 use crate::coordinator::inter::InterGroupScheduler;
 use crate::sim::engine::{SimConfig, SimResult, Simulator};
+use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::table::{f, pct, ratio, Table};
 use crate::workload::job::JobSpec;
@@ -27,29 +35,54 @@ struct PolicyRow {
     peak_gpus: usize,
 }
 
+const POLICY_NAMES: [&str; 4] =
+    ["Offline Opt (windowed)", "RollMux", "Greedy (Most-Idle)", "Random"];
+
 fn run_policies(opts: &ExpOpts, trace: &[JobSpec], cap: usize) -> Vec<PolicyRow> {
+    run_policies_with(opts, trace, cap, par::max_threads())
+}
+
+/// The four policy replays of one figure row, computed on `workers`
+/// threads and merged back in fixed policy order.
+fn run_policies_with(
+    opts: &ExpOpts,
+    trace: &[JobSpec],
+    cap: usize,
+    workers: usize,
+) -> Vec<PolicyRow> {
     let model = PhaseModel::default();
-    let cfg = || SimConfig { seed: opts.seed, ..Default::default() };
-    let run = |r: SimResult| (r.avg_cost_per_hour, r.slo_attainment(), r.peak_roll_gpus + r.peak_train_gpus);
-
-    let opt = PrePlacedScheduler::windowed(trace, model, OPT_WINDOW.min(cap * 2));
-    let (opt_c, opt_s, opt_g) = run(Simulator::new(cfg(), opt, trace.to_vec()).run());
-
-    let mux = InterGroupScheduler::with_max_group_size(model, cap);
-    let (mux_c, mux_s, mux_g) = run(Simulator::new(cfg(), mux, trace.to_vec()).run());
-
-    let rnd = RandomScheduler::new(model, opts.seed, cap);
-    let (rnd_c, rnd_s, rnd_g) = run(Simulator::new(cfg(), rnd, trace.to_vec()).run());
-
-    let grd = GreedyScheduler::new(model, cap);
-    let (grd_c, grd_s, grd_g) = run(Simulator::new(cfg(), grd, trace.to_vec()).run());
-
-    vec![
-        PolicyRow { name: "Offline Opt (windowed)", cost_per_h: opt_c, slo: opt_s, peak_gpus: opt_g },
-        PolicyRow { name: "RollMux", cost_per_h: mux_c, slo: mux_s, peak_gpus: mux_g },
-        PolicyRow { name: "Greedy (Most-Idle)", cost_per_h: grd_c, slo: grd_s, peak_gpus: grd_g },
-        PolicyRow { name: "Random", cost_per_h: rnd_c, slo: rnd_s, peak_gpus: rnd_g },
-    ]
+    let results: Vec<SimResult> =
+        par::parallel_map_with(workers, (0..POLICY_NAMES.len()).collect(), |_, k| {
+            let cfg = SimConfig { seed: opts.seed, ..Default::default() };
+            match k {
+                0 => {
+                    let opt = PrePlacedScheduler::windowed(trace, model, OPT_WINDOW.min(cap * 2));
+                    Simulator::new(cfg, opt, trace.to_vec()).run()
+                }
+                1 => {
+                    let mux = InterGroupScheduler::with_max_group_size(model, cap);
+                    Simulator::new(cfg, mux, trace.to_vec()).run()
+                }
+                2 => {
+                    let grd = GreedyScheduler::new(model, cap);
+                    Simulator::new(cfg, grd, trace.to_vec()).run()
+                }
+                _ => {
+                    let rnd = RandomScheduler::new(model, opts.seed, cap);
+                    Simulator::new(cfg, rnd, trace.to_vec()).run()
+                }
+            }
+        });
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(k, r)| PolicyRow {
+            name: POLICY_NAMES[k],
+            cost_per_h: r.avg_cost_per_hour,
+            slo: r.slo_attainment(),
+            peak_gpus: r.peak_roll_gpus + r.peak_train_gpus,
+        })
+        .collect()
 }
 
 fn print_rows(title: &str, rows: &[PolicyRow]) {
@@ -198,6 +231,24 @@ pub fn table5(opts: &ExpOpts) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// ISSUE 3 acceptance: the parallel sweep's merged output is
+    /// bit-identical to the serial runner's (same rows, same float bits),
+    /// so the printed tables are byte-identical.
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_serial() {
+        let opts = ExpOpts { seed: 19, scale: 0.1, gantt: false };
+        let trace = philly_trace(opts.seed, 24, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+        let serial = run_policies_with(&opts, &trace, 5, 1);
+        let parallel = run_policies_with(&opts, &trace, 5, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.cost_per_h.to_bits(), b.cost_per_h.to_bits());
+            assert_eq!(a.slo.to_bits(), b.slo.to_bits());
+            assert_eq!(a.peak_gpus, b.peak_gpus);
+        }
+    }
 
     #[test]
     fn fig15_shape_small() {

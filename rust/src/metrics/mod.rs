@@ -43,6 +43,22 @@ pub fn sim_result_json(r: &SimResult) -> Json {
         ("roll_bubble", num(rb)),
         ("train_bubble", num(tb)),
         ("makespan_s", num(r.makespan_s)),
+        ("events_processed", num(r.events_processed as f64)),
+        // Streaming per-(group, node) / per-group busy integrals — the
+        // per-resource utilization view that used to require
+        // reconstructing intervals from the gantt timeline (available
+        // even when the timeline was not recorded).
+        (
+            "roll_node_busy_gpu_s",
+            arr(r.roll_node_busy_gpu_s
+                .iter()
+                .map(|nodes| arr(nodes.iter().map(|&b| num(b)).collect()))
+                .collect()),
+        ),
+        (
+            "train_group_busy_gpu_s",
+            arr(r.train_group_busy_gpu_s.iter().map(|&b| num(b)).collect()),
+        ),
         (
             "usage_curve",
             arr(r.usage_curve
@@ -123,6 +139,13 @@ mod tests {
         assert_eq!(outs.len(), 1);
         assert_eq!(outs[0].get("iters").unwrap().as_usize(), Some(3));
         assert!(!parsed.get("timeline").unwrap().as_arr().unwrap().is_empty());
+        // ISSUE 3: the streaming per-resource busy views are exported.
+        assert!(parsed.get("events_processed").unwrap().as_f64().unwrap() > 0.0);
+        let per_node = parsed.get("roll_node_busy_gpu_s").unwrap().as_arr().unwrap();
+        assert!(!per_node.is_empty());
+        assert!(per_node[0].as_arr().unwrap()[0].as_f64().unwrap() > 0.0);
+        let per_train = parsed.get("train_group_busy_gpu_s").unwrap().as_arr().unwrap();
+        assert!(per_train[0].as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -19,9 +19,21 @@
 //! the phase queue is a true FIFO `VecDeque`: entries are enqueued at
 //! non-decreasing (time, seq), so insertion order IS the old sorted order
 //! and the per-dispatch sort the seed engine paid is dropped entirely.
+//!
+//! ISSUE 3 (DESIGN.md §11): the pending-event set itself is a bucketed
+//! [`CalendarQueue`] by default — O(1)-ish push/pop for the engine's
+//! near-monotone virtual time — with the historical `BinaryHeap` kept
+//! behind [`EventQueueKind::BinaryHeap`] as the equivalence oracle
+//! (`rust/tests/prop_calendar_queue.rs` proves bit-identical
+//! `SimResult`s). Busy time is accumulated *streaming*, per
+//! (group, rollout node) and per group training pool, as phases start —
+//! so utilization/bubble accounting no longer needs the `record_gantt`
+//! timeline, and `record_gantt: false` sweeps allocate nothing per phase.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
+
+use super::calendar::CalendarQueue;
 
 use crate::cluster::node::GPUS_PER_NODE;
 use crate::cluster::{GpuKind, PhaseModel};
@@ -85,6 +97,19 @@ pub struct PhaseRecord {
     pub roll_nodes: Vec<usize>,
 }
 
+/// Which pending-event structure the engine runs on. Pop order is a total
+/// order on `(time, seq)` either way, so results are bit-identical
+/// (property-tested); the calendar queue is the fast default.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EventQueueKind {
+    /// Bucketed calendar ring tuned for near-monotone time (DESIGN.md §11).
+    #[default]
+    Calendar,
+    /// The historical binary heap — kept as the equivalence oracle and
+    /// bench baseline.
+    BinaryHeap,
+}
+
 #[derive(Clone, Debug)]
 pub struct SimConfig {
     pub seed: u64,
@@ -99,6 +124,8 @@ pub struct SimConfig {
     pub intra: IntraPolicyKind,
     /// Record per-phase gantt entries (disable for big sweeps).
     pub record_gantt: bool,
+    /// Pending-event structure (bit-identical results either way).
+    pub event_queue: EventQueueKind,
 }
 
 impl Default for SimConfig {
@@ -112,6 +139,7 @@ impl Default for SimConfig {
             sync_scheme: SyncScheme::Hierarchical,
             intra: IntraPolicyKind::default(),
             record_gantt: false,
+            event_queue: EventQueueKind::default(),
         }
     }
 }
@@ -169,6 +197,16 @@ pub struct SimResult {
     pub makespan_s: f64,
     /// (time, roll_gpus, train_gpus) usage curve.
     pub usage_curve: Vec<(f64, usize, usize)>,
+    /// Streaming busy GPU-seconds per (group id, group-local rollout
+    /// node), accumulated as phases start — available even with
+    /// `record_gantt: false` (no post-run interval reconstruction). A
+    /// migrated tail's sub-node fraction is attributed to the job's first
+    /// pinned node.
+    pub roll_node_busy_gpu_s: Vec<Vec<f64>>,
+    /// Streaming busy GPU-seconds per group training pool.
+    pub train_group_busy_gpu_s: Vec<f64>,
+    /// Events processed by the engine loop (the events/s bench metric).
+    pub events_processed: usize,
 }
 
 impl SimResult {
@@ -279,12 +317,43 @@ struct JobRt {
     done: bool,
 }
 
+/// The engine's pending-event set: the calendar ring by default, the
+/// historical heap as the oracle. Both pop the exact same `(t, seq)`
+/// total order.
+enum EventQueue {
+    Calendar(CalendarQueue<Ev>),
+    Heap(BinaryHeap<Event>),
+}
+
+impl EventQueue {
+    fn new(kind: EventQueueKind) -> Self {
+        match kind {
+            EventQueueKind::Calendar => EventQueue::Calendar(CalendarQueue::new(0.0)),
+            EventQueueKind::BinaryHeap => EventQueue::Heap(BinaryHeap::new()),
+        }
+    }
+
+    fn push(&mut self, t: f64, seq: u64, ev: Ev) {
+        match self {
+            EventQueue::Calendar(q) => q.push(t, seq, ev),
+            EventQueue::Heap(h) => h.push(Event { t, seq, ev }),
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, Ev)> {
+        match self {
+            EventQueue::Calendar(q) => q.pop().map(|(t, _, ev)| (t, ev)),
+            EventQueue::Heap(h) => h.pop().map(|e| (e.t, e.ev)),
+        }
+    }
+}
+
 pub struct Simulator<S: GroupScheduler> {
     pub cfg: SimConfig,
     pub sched: S,
     /// Specs are taken (not cloned) out of the trace on arrival.
     trace: Vec<Option<JobSpec>>,
-    events: BinaryHeap<Event>,
+    events: EventQueue,
     seq: u64,
     now: f64,
     /// Dense job slab, arrival order; never shrinks.
@@ -305,11 +374,12 @@ pub struct Simulator<S: GroupScheduler> {
 
 impl<S: GroupScheduler> Simulator<S> {
     pub fn new(cfg: SimConfig, sched: S, trace: Vec<JobSpec>) -> Self {
+        let events = EventQueue::new(cfg.event_queue);
         let mut sim = Simulator {
             cfg,
             sched,
             trace: trace.into_iter().map(Some).collect(),
-            events: BinaryHeap::new(),
+            events,
             seq: 0,
             now: 0.0,
             jobs: Vec::new(),
@@ -329,7 +399,29 @@ impl<S: GroupScheduler> Simulator<S> {
 
     fn push(&mut self, t: f64, ev: Ev) {
         self.seq += 1;
-        self.events.push(Event { t, seq: self.seq, ev });
+        self.events.push(t, self.seq, ev);
+    }
+
+    /// Streaming per-(group, node) rollout busy accumulation (GPU-s).
+    fn node_busy_add(&mut self, gid: usize, node: usize, gpu_s: f64) {
+        let v = &mut self.res.roll_node_busy_gpu_s;
+        if v.len() <= gid {
+            v.resize_with(gid + 1, Vec::new);
+        }
+        let nv = &mut v[gid];
+        if nv.len() <= node {
+            nv.resize(node + 1, 0.0);
+        }
+        nv[node] += gpu_s;
+    }
+
+    /// Streaming per-group training-pool busy accumulation (GPU-s).
+    fn train_busy_add(&mut self, gid: usize, gpu_s: f64) {
+        let v = &mut self.res.train_group_busy_gpu_s;
+        if v.len() <= gid {
+            v.resize(gid + 1, 0.0);
+        }
+        v[gid] += gpu_s;
     }
 
     fn integrate_cost(&mut self) {
@@ -355,9 +447,10 @@ impl<S: GroupScheduler> Simulator<S> {
 
     /// Run to completion, returning the results.
     pub fn run(mut self) -> SimResult {
-        while let Some(Event { t, ev, .. }) = self.events.pop() {
+        while let Some((t, ev)) = self.events.pop() {
             debug_assert!(t >= self.now - 1e-9, "time went backwards");
             self.now = t;
+            self.res.events_processed += 1;
             match ev {
                 Ev::Arrival(i) => self.on_arrival(i),
                 Ev::PhaseDone(slot, kind, iter) => self.on_phase_done(slot, kind, iter),
@@ -527,6 +620,11 @@ impl<S: GroupScheduler> Simulator<S> {
                 // on_tail_free when a consolidation actually happens.
                 self.res.roll_busy_gpu_s +=
                     (warm + t_roll) * n_pins as f64 * GPUS_PER_NODE as f64;
+                let gid = self.jobs[slot].group;
+                for i in 0..n_pins {
+                    let n = self.jobs[slot].roll_nodes[i];
+                    self.node_busy_add(gid, n, (warm + t_roll) * GPUS_PER_NODE as f64);
+                }
                 self.record_rollout(slot, iter, self.now, end);
                 self.push(end, Ev::PhaseDone(slot, PhaseKind::Rollout, iter));
             }
@@ -537,6 +635,8 @@ impl<S: GroupScheduler> Simulator<S> {
                 let end = self.now + warm + t_train;
                 let train_gpus = self.jobs[slot].train_gpus;
                 self.res.train_busy_gpu_s += (warm + t_train) * train_gpus as f64;
+                let gid = self.jobs[slot].group;
+                self.train_busy_add(gid, (warm + t_train) * train_gpus as f64);
                 self.record(slot, PhaseKind::Train, iter, self.now, end, &[]);
                 self.push(end, Ev::PhaseDone(slot, PhaseKind::Train, iter));
             }
@@ -575,6 +675,20 @@ impl<S: GroupScheduler> Simulator<S> {
         self.res.roll_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
         self.res.roll_busy_gpu_s +=
             (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64;
+        // Mirror the aggregate adjustment into the streaming per-node
+        // accumulators: freed nodes stop counting, kept nodes carry the
+        // consolidated tail, and the sub-node fraction is attributed to
+        // the job's first pinned node.
+        for i in 0..n_pins {
+            let n = self.jobs[slot].roll_nodes[i];
+            if i >= kept {
+                self.node_busy_add(gid, n, -remaining * GPUS_PER_NODE as f64);
+            } else {
+                self.node_busy_add(gid, n, (remaining + penalty) * GPUS_PER_NODE as f64);
+            }
+        }
+        let first = self.jobs[slot].roll_nodes[0];
+        self.node_busy_add(gid, first, (remaining + penalty) * tail_frac * GPUS_PER_NODE as f64);
         self.group_rt[gid].release_trailing_nodes(slot, kept);
         self.drain_dispatch(gid);
     }
@@ -881,6 +995,111 @@ mod tests {
         }
         assert_eq!(on.makespan_s.to_bits(), off.makespan_s.to_bits());
         assert_eq!(on.cost_usd.to_bits(), off.cost_usd.to_bits());
+        // The streaming busy accumulators never depended on the gantt.
+        assert_eq!(on.events_processed, off.events_processed);
+        assert_eq!(on.roll_node_busy_gpu_s.len(), off.roll_node_busy_gpu_s.len());
+        for (a, b) in on.roll_node_busy_gpu_s.iter().zip(&off.roll_node_busy_gpu_s) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        for (x, y) in on.train_group_busy_gpu_s.iter().zip(&off.train_group_busy_gpu_s) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// The streaming per-node/per-group accumulators must sum to the same
+    /// totals as the aggregate busy integrals (within float tolerance:
+    /// the aggregate is computed in its original, unchanged expression
+    /// order; the per-node mirror decomposes it).
+    #[test]
+    fn streaming_busy_matches_aggregate_totals() {
+        let trace = vec![
+            direct_job(0, 200.0, 50.0, 3.0, 8, 0.0),
+            direct_job(1, 200.0, 50.0, 3.0, 8, 0.0),
+            direct_job(2, 80.0, 60.0, 3.0, 8, 120.0),
+        ];
+        // Migration on: the tail adjustment path is exercised too.
+        let res = run_rollmux(cfg(), trace);
+        let roll_sum: f64 = res.roll_node_busy_gpu_s.iter().flatten().sum();
+        let train_sum: f64 = res.train_group_busy_gpu_s.iter().sum();
+        assert!(
+            (roll_sum - res.roll_busy_gpu_s).abs() < 1e-6 * res.roll_busy_gpu_s.max(1.0),
+            "per-node {} vs aggregate {}",
+            roll_sum,
+            res.roll_busy_gpu_s
+        );
+        assert!(
+            (train_sum - res.train_busy_gpu_s).abs() < 1e-6 * res.train_busy_gpu_s.max(1.0),
+            "per-group {} vs aggregate {}",
+            train_sum,
+            res.train_busy_gpu_s
+        );
+    }
+
+    /// Without migration, the streaming per-node busy must equal the
+    /// reconstruction from gantt records — the post-run HashMap+sort
+    /// rebuild the accumulators replace.
+    #[test]
+    fn streaming_busy_matches_record_reconstruction() {
+        let trace = vec![
+            direct_job(0, 100.0, 80.0, 2.0, 6, 0.0),
+            direct_job(1, 80.0, 60.0, 2.0, 6, 50.0),
+            direct_job(2, 60.0, 40.0, 3.0, 6, 100.0),
+        ];
+        let mut c = cfg();
+        c.migration.enabled = false;
+        let res = run_rollmux(c, trace);
+        let mut by_node: HashMap<(usize, usize), f64> = HashMap::new();
+        let mut by_train: HashMap<usize, f64> = HashMap::new();
+        for r in &res.records {
+            match r.kind {
+                PhaseKind::Rollout => {
+                    for &n in &r.roll_nodes {
+                        *by_node.entry((r.group, n)).or_default() +=
+                            (r.end - r.start) * GPUS_PER_NODE as f64;
+                    }
+                }
+                PhaseKind::Train => {
+                    *by_train.entry(r.group).or_default() += (r.end - r.start) * 8.0
+                }
+                _ => {}
+            }
+        }
+        for ((g, n), want) in by_node {
+            let got = res.roll_node_busy_gpu_s[g][n];
+            assert!((got - want).abs() < 1e-6, "group {g} node {n}: {got} vs {want}");
+        }
+        for (g, want) in by_train {
+            let got = res.train_group_busy_gpu_s[g];
+            assert!((got - want).abs() < 1e-6, "group {g} train: {got} vs {want}");
+        }
+    }
+
+    /// Calendar queue vs binary heap: identical results on a multiplexed
+    /// trace (the broad sweep lives in tests/prop_calendar_queue.rs).
+    #[test]
+    fn calendar_and_heap_engines_agree() {
+        let mk = || vec![
+            direct_job(0, 100.0, 80.0, 2.0, 6, 0.0),
+            direct_job(1, 80.0, 60.0, 2.0, 6, 50.0),
+            direct_job(2, 60.0, 40.0, 3.0, 6, 100.0),
+        ];
+        let cal = run_rollmux(cfg(), mk());
+        let mut c = cfg();
+        c.event_queue = EventQueueKind::BinaryHeap;
+        let heap = run_rollmux(c, mk());
+        assert_eq!(cal.makespan_s.to_bits(), heap.makespan_s.to_bits());
+        assert_eq!(cal.cost_usd.to_bits(), heap.cost_usd.to_bits());
+        assert_eq!(cal.events_processed, heap.events_processed);
+        assert_eq!(cal.outcomes.len(), heap.outcomes.len());
+        for (id, a) in &cal.outcomes {
+            let b = &heap.outcomes[id];
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(a.migrations, b.migrations);
+        }
+        assert_eq!(cal.records.len(), heap.records.len());
     }
 
     /// ISSUE 2 bugfix regression: the migrated tail's busy accounting

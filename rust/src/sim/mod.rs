@@ -8,7 +8,10 @@
 //! (DESIGN.md §2): every reported metric — provisioning cost, GPU usage,
 //! bubbles, SLO attainment — is computed from the event timeline.
 
+pub mod calendar;
 pub mod engine;
 pub mod gantt;
 
-pub use engine::{GroupScheduler, PhaseKind, PhaseRecord, SimConfig, SimResult, Simulator};
+pub use engine::{
+    EventQueueKind, GroupScheduler, PhaseKind, PhaseRecord, SimConfig, SimResult, Simulator,
+};

@@ -5,6 +5,7 @@
 //! criterion live here instead (see Cargo.toml note).
 
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,200 @@
+//! ISSUE 3 equivalence gates for the calendar event queue (DESIGN.md
+//! §11): pop order must match the `BinaryHeap`'s `(t, seq)` total order
+//! bit-for-bit, and the full engine must produce **bitwise** identical
+//! `SimResult`s under either queue — across the seed traces and all
+//! three intra-group dispatch policies.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::coordinator::orchestrator::IntraPolicyKind;
+use rollmux::sim::calendar::CalendarQueue;
+use rollmux::sim::engine::{EventQueueKind, SimConfig, SimResult, Simulator};
+use rollmux::util::rng::Rng;
+use rollmux::workload::job::JobSpec;
+use rollmux::workload::profiles::SimProfile;
+use rollmux::workload::trace::{philly_trace, production_trace, SloPolicy};
+
+/// Min-heap reference with the engine's exact (t, seq) total order.
+struct HeapEv(f64, u64);
+impl PartialEq for HeapEv {
+    fn eq(&self, o: &Self) -> bool {
+        self.0.total_cmp(&o.0) == std::cmp::Ordering::Equal && self.1 == o.1
+    }
+}
+impl Eq for HeapEv {}
+impl PartialOrd for HeapEv {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for HeapEv {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        o.0.total_cmp(&self.0).then(o.1.cmp(&self.1))
+    }
+}
+
+/// Pop-order equivalence against the heap's (t, seq) min ordering, on
+/// adversarial near-monotone streams: ties, sub-width gaps, horizon
+/// spikes, long idle jumps, bursts.
+#[test]
+fn prop_pop_order_matches_reference_ordering() {
+    for seed in 0..30u64 {
+        let mut q = CalendarQueue::new(0.0);
+        let mut heap = std::collections::BinaryHeap::new();
+        let mut rng = Rng::new(seed);
+        let mut now = 0.0;
+        let mut seq = 0u64;
+        let mut pushed = 0usize;
+        let mut popped = 0usize;
+        for step in 0..4000u64 {
+            let n_push = rng.range(1, 4);
+            for _ in 0..n_push {
+                let t = match (step + seq) % 9 {
+                    0 => now,
+                    1 => now + rng.uniform(0.0, 1e-4),
+                    2 => now + rng.exponential(3.0),
+                    3 => now + rng.exponential(400.0),
+                    4 => now + rng.uniform(0.0, 1e8),
+                    5 => now + rng.pareto(10.0, 1.1).min(1e10),
+                    _ => now + rng.exponential(60.0),
+                };
+                seq += 1;
+                q.push(t, seq, ());
+                heap.push(HeapEv(t, seq));
+                pushed += 1;
+            }
+            let n_pop = rng.range(0, 3);
+            for _ in 0..n_pop {
+                let Some((t, s, ())) = q.pop() else { break };
+                let want = heap.pop().expect("heap ran dry first");
+                assert_eq!(
+                    (t.to_bits(), s),
+                    (want.0.to_bits(), want.1),
+                    "seed {seed} step {step}: pop order diverged"
+                );
+                now = t;
+                popped += 1;
+            }
+        }
+        while let Some((t, s, ())) = q.pop() {
+            let want = heap.pop().expect("heap ran dry first");
+            assert_eq!((t.to_bits(), s), (want.0.to_bits(), want.1), "seed {seed}: drain diverged");
+            popped += 1;
+        }
+        assert!(heap.pop().is_none(), "seed {seed}: calendar dropped events");
+        assert_eq!(pushed, popped, "seed {seed}: push/pop count mismatch");
+    }
+}
+
+fn run(trace: Vec<JobSpec>, seed: u64, intra: IntraPolicyKind, queue: EventQueueKind) -> SimResult {
+    let cfg = SimConfig {
+        seed,
+        intra,
+        event_queue: queue,
+        record_gantt: true,
+        ..Default::default()
+    };
+    Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace).run()
+}
+
+/// Field-by-field bitwise comparison of two SimResults.
+fn assert_bitwise_equal(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.events_processed, b.events_processed, "{ctx}: event counts");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits(), "{ctx}: cost");
+    assert_eq!(
+        a.avg_cost_per_hour.to_bits(),
+        b.avg_cost_per_hour.to_bits(),
+        "{ctx}: avg cost"
+    );
+    assert_eq!(a.peak_roll_gpus, b.peak_roll_gpus, "{ctx}: peak roll");
+    assert_eq!(a.peak_train_gpus, b.peak_train_gpus, "{ctx}: peak train");
+    assert_eq!(a.roll_busy_gpu_s.to_bits(), b.roll_busy_gpu_s.to_bits(), "{ctx}: roll busy");
+    assert_eq!(a.train_busy_gpu_s.to_bits(), b.train_busy_gpu_s.to_bits(), "{ctx}: train busy");
+    assert_eq!(a.roll_prov_gpu_s.to_bits(), b.roll_prov_gpu_s.to_bits(), "{ctx}: roll prov");
+    assert_eq!(a.train_prov_gpu_s.to_bits(), b.train_prov_gpu_s.to_bits(), "{ctx}: train prov");
+    assert_eq!(a.usage_curve.len(), b.usage_curve.len(), "{ctx}: usage curve len");
+    for (x, y) in a.usage_curve.iter().zip(&b.usage_curve) {
+        assert_eq!(x.0.to_bits(), y.0.to_bits(), "{ctx}: usage curve time");
+        assert_eq!((x.1, x.2), (y.1, y.2), "{ctx}: usage curve gpus");
+    }
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}: outcome count");
+    for (id, oa) in &a.outcomes {
+        let ob = &b.outcomes[id];
+        assert_eq!(oa.arrival_s.to_bits(), ob.arrival_s.to_bits(), "{ctx} job {id}");
+        assert_eq!(oa.finish_s.to_bits(), ob.finish_s.to_bits(), "{ctx} job {id}");
+        assert_eq!(oa.solo_actual_s.to_bits(), ob.solo_actual_s.to_bits(), "{ctx} job {id}");
+        assert_eq!(oa.solo_est_s.to_bits(), ob.solo_est_s.to_bits(), "{ctx} job {id}");
+        assert_eq!(oa.iters, ob.iters, "{ctx} job {id}");
+        assert_eq!(oa.migrations, ob.migrations, "{ctx} job {id}");
+    }
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.job, rb.job, "{ctx}");
+        assert_eq!(ra.group, rb.group, "{ctx}");
+        assert_eq!(ra.kind, rb.kind, "{ctx}");
+        assert_eq!(ra.iter, rb.iter, "{ctx}");
+        assert_eq!(ra.start.to_bits(), rb.start.to_bits(), "{ctx}");
+        assert_eq!(ra.end.to_bits(), rb.end.to_bits(), "{ctx}");
+        assert_eq!(ra.roll_nodes, rb.roll_nodes, "{ctx}");
+    }
+    assert_eq!(a.roll_node_busy_gpu_s.len(), b.roll_node_busy_gpu_s.len(), "{ctx}");
+    for (va, vb) in a.roll_node_busy_gpu_s.iter().zip(&b.roll_node_busy_gpu_s) {
+        assert_eq!(va.len(), vb.len(), "{ctx}");
+        for (x, y) in va.iter().zip(vb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: per-node busy");
+        }
+    }
+    for (x, y) in a.train_group_busy_gpu_s.iter().zip(&b.train_group_busy_gpu_s) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: per-group train busy");
+    }
+}
+
+/// The headline gate: production + Philly seed traces, all three
+/// dispatch policies, calendar vs heap — bitwise equal SimResults.
+#[test]
+fn prop_engine_bitwise_equal_across_queues_and_policies() {
+    for seed in [7u64, 11, 23] {
+        for intra in IntraPolicyKind::all() {
+            let ctx = format!("production seed {seed} {intra:?}");
+            let a = run(production_trace(seed, 40), seed, intra, EventQueueKind::Calendar);
+            let b = run(production_trace(seed, 40), seed, intra, EventQueueKind::BinaryHeap);
+            assert_bitwise_equal(&a, &b, &ctx);
+
+            let ctx = format!("philly seed {seed} {intra:?}");
+            let trace = || philly_trace(seed, 30, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+            let a = run(trace(), seed, intra, EventQueueKind::Calendar);
+            let b = run(trace(), seed, intra, EventQueueKind::BinaryHeap);
+            assert_bitwise_equal(&a, &b, &ctx);
+        }
+    }
+}
+
+/// Migration-heavy contention (TailFree events interleave with phase
+/// completions at identical timestamps) stays bitwise equal too.
+#[test]
+fn prop_engine_bitwise_equal_under_migration_pressure() {
+    use rollmux::workload::job::PhaseSpec;
+    let mk = || -> Vec<JobSpec> {
+        (0..6)
+            .map(|id| JobSpec {
+                id,
+                name: format!("j{id}"),
+                arrival_s: (id as f64) * 15.0,
+                n_iters: 8,
+                slo: 4.0,
+                n_roll_gpus: 8,
+                n_train_gpus: 8,
+                params_b: 7.0,
+                phases: PhaseSpec::Direct { t_roll: 200.0, t_train: 40.0, cv: 0.0 },
+            })
+            .collect()
+    };
+    let a = run(mk(), 3, IntraPolicyKind::WorkConservingFifo, EventQueueKind::Calendar);
+    let b = run(mk(), 3, IntraPolicyKind::WorkConservingFifo, EventQueueKind::BinaryHeap);
+    assert_bitwise_equal(&a, &b, "migration pressure");
+    assert!(
+        a.outcomes.values().map(|o| o.migrations).sum::<usize>() > 0,
+        "the trace must actually exercise the migration path"
+    );
+}

@@ -1,0 +1,197 @@
+//! ISSUE 3 equivalence gates (DESIGN.md §11): the indexed sub-linear
+//! decision path must be **bitwise** equal to the exhaustive reference
+//! scan — same `Decision` stream, same Δ bits, same cluster state — on
+//! randomized fleet-scale traces with interleaved completions, and the
+//! maintained node-load order must equal the full sort it replaced.
+//!
+//! No proptest crate offline: seeded random cases, failure seeds printed
+//! by the assertion messages for replay.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::group::{Group, GroupJob};
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::util::rng::Rng;
+use rollmux::workload::profiles::{table6_job, SimProfile};
+
+/// Drive two schedulers with identical (schedule, complete) call streams,
+/// one through the indexed path and one through the exhaustive reference,
+/// asserting decision-by-decision bitwise equality.
+fn assert_equivalent(seed: u64, n_jobs: usize, cap: Option<usize>, complete_p: f64) {
+    let model = PhaseModel::default();
+    let mut indexed = match cap {
+        Some(c) => InterGroupScheduler::with_max_group_size(model, c),
+        None => InterGroupScheduler::new(model),
+    };
+    let mut reference = match cap {
+        Some(c) => InterGroupScheduler::with_max_group_size(model, c),
+        None => InterGroupScheduler::new(model),
+    };
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<usize> = Vec::new();
+    for id in 0..n_jobs {
+        let slo = rng.uniform(1.0, 2.0);
+        let job = table6_job(id, SimProfile::Mixed, &mut rng, slo, 0.0, 5);
+        let d_idx = indexed.schedule(job.clone());
+        let d_ref = reference.schedule_reference(job);
+        assert_eq!(d_idx, d_ref, "seed {seed} job {id}: decisions diverged");
+        assert_eq!(
+            d_idx.marginal_cost.to_bits(),
+            d_ref.marginal_cost.to_bits(),
+            "seed {seed} job {id}: Δ bits diverged"
+        );
+        live.push(id);
+        if rng.chance(complete_p) && live.len() > 4 {
+            let vi = rng.range(0, live.len());
+            let done = live.swap_remove(vi);
+            indexed.complete_job(done);
+            reference.complete_job(done);
+        }
+        debug_assert_state_eq(seed, id, &indexed, &reference);
+    }
+    // Full structural equality of the final cluster states.
+    assert_eq!(indexed.groups.len(), reference.groups.len(), "seed {seed}: group counts");
+    for (gi, gr) in indexed.groups.iter().zip(&reference.groups) {
+        assert_eq!(gi.id, gr.id);
+        assert_eq!(gi.n_roll_nodes, gr.n_roll_nodes);
+        assert_eq!(gi.n_train_nodes, gr.n_train_nodes);
+        let ids_i: Vec<usize> = gi.jobs().iter().map(|j| j.spec.id).collect();
+        let ids_r: Vec<usize> = gr.jobs().iter().map(|j| j.spec.id).collect();
+        assert_eq!(ids_i, ids_r, "seed {seed}: membership diverged in group {}", gi.id);
+        for (ji, jr) in gi.jobs().iter().zip(gr.jobs()) {
+            assert_eq!(ji.roll_nodes, jr.roll_nodes);
+            assert_eq!(ji.t_solo().to_bits(), jr.t_solo().to_bits());
+        }
+        assert_eq!(gi.nodes_by_load(), gr.nodes_by_load());
+    }
+}
+
+fn debug_assert_state_eq(
+    seed: u64,
+    id: usize,
+    indexed: &InterGroupScheduler,
+    reference: &InterGroupScheduler,
+) {
+    assert_eq!(
+        indexed.groups.len(),
+        reference.groups.len(),
+        "seed {seed} after job {id}: group counts diverged"
+    );
+    assert_eq!(
+        indexed.total_cost_per_hour().to_bits(),
+        reference.total_cost_per_hour().to_bits(),
+        "seed {seed} after job {id}: cluster cost diverged"
+    );
+}
+
+/// The headline ISSUE 3 gate: a randomized 2k-job trace with interleaved
+/// completions, uncapped.
+#[test]
+fn prop_indexed_matches_reference_2k_jobs() {
+    assert_equivalent(0x15_5E3, 2000, None, 0.3);
+}
+
+/// Same under the §7.5 group-size cap.
+#[test]
+fn prop_indexed_matches_reference_capped() {
+    assert_equivalent(0xCA9_3, 400, Some(5), 0.25);
+}
+
+/// Many small seeds: shakes out index-maintenance corner cases
+/// (saturation flips, group deprovisioning, empty index).
+#[test]
+fn prop_indexed_matches_reference_many_seeds() {
+    for seed in 0..25 {
+        assert_equivalent(seed, 60, None, 0.4);
+        assert_equivalent(1000 + seed, 40, Some(3), 0.5);
+    }
+}
+
+/// Index membership invariant: after any (schedule | complete) prefix,
+/// the indexed ids are exactly the live, unsaturated, below-cap groups,
+/// ascending.
+#[test]
+fn prop_index_membership_matches_predicate() {
+    for seed in 0..20u64 {
+        for cap in [None, Some(3usize)] {
+            let mut s = match cap {
+                Some(c) => InterGroupScheduler::with_max_group_size(PhaseModel::default(), c),
+                None => InterGroupScheduler::new(PhaseModel::default()),
+            };
+            let mut rng = Rng::new(0xA11CE ^ seed);
+            let mut live: Vec<usize> = Vec::new();
+            for id in 0..80 {
+                let slo = rng.uniform(1.0, 2.0);
+                s.schedule(table6_job(id, SimProfile::Mixed, &mut rng, slo, 0.0, 5));
+                live.push(id);
+                if rng.chance(0.35) && !live.is_empty() {
+                    let vi = rng.range(0, live.len());
+                    s.complete_job(live.swap_remove(vi));
+                }
+                let expect: Vec<usize> = s
+                    .groups
+                    .iter()
+                    .filter(|g| {
+                        !g.is_saturated() && cap.is_none_or(|c| g.jobs().len() < c)
+                    })
+                    .map(|g| g.id)
+                    .collect();
+                assert_eq!(
+                    s.indexed_group_ids(),
+                    expect,
+                    "seed {seed} cap {cap:?} after job {id}"
+                );
+            }
+        }
+    }
+}
+
+/// The maintained node-load order equals the full `(load, id)` sort after
+/// arbitrary admit/retract/repin/compaction sequences.
+#[test]
+fn prop_node_order_matches_full_sort() {
+    let model = PhaseModel::default();
+    for seed in 0..40 {
+        let mut rng = Rng::new(0xD0DE ^ seed);
+        let mut g = {
+            let slo = rng.uniform(1.0, 2.0);
+            Group::isolated(0, table6_job(0, SimProfile::Mixed, &mut rng, slo, 0.0, 5), &model)
+        };
+        let mut live: Vec<usize> = vec![0];
+        for id in 1..30 {
+            let op = rng.range(0, 10);
+            if op < 6 {
+                // Admit pinned to random (possibly fresh, possibly
+                // duplicated) nodes.
+                let slo = rng.uniform(1.0, 2.0);
+                let spec = table6_job(id, SimProfile::Mixed, &mut rng, slo, 0.0, 5);
+                let k = spec.n_roll_nodes().max(1);
+                let hi = g.n_roll_nodes + 2;
+                let nodes: Vec<usize> = (0..k).map(|_| rng.range(0, hi)).collect();
+                let train_gpus = g.train_gpus();
+                g.admit(GroupJob::new(spec, &model, nodes, train_gpus));
+                live.push(id);
+            } else if op < 8 && live.len() > 1 {
+                let vi = rng.range(0, live.len());
+                let done = live.swap_remove(vi);
+                assert!(g.retract(done).is_some());
+                if !g.is_empty() {
+                    g.compact_trailing_nodes();
+                }
+            } else if !live.is_empty() {
+                let target = live[rng.range(0, live.len())];
+                let hi = g.n_roll_nodes + 1;
+                g.repin(target, vec![rng.range(0, hi)]);
+            }
+            let mut expect: Vec<(f64, u32)> = (0..g.n_roll_nodes)
+                .map(|n| (g.roll_node_load(n), n as u32))
+                .collect();
+            expect.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let expect: Vec<u32> = expect.into_iter().map(|(_, n)| n).collect();
+            assert_eq!(
+                g.nodes_by_load(),
+                &expect[..],
+                "seed {seed} op {id}: node order diverged from full sort"
+            );
+        }
+    }
+}

@@ -2,11 +2,13 @@
 # Run the performance bench binaries and assemble the machine-readable
 # BENCH_N.json at the repository root (the perf trajectory is tracked
 # across PRs; see EXPERIMENTS.md §Perf for methodology). ISSUE 1
-# produced BENCH_1.json; ISSUE 2 adds the orchestration-core dispatch
-# bench and emits BENCH_2.json.
+# produced BENCH_1.json, ISSUE 2 BENCH_2.json; the generation is now a
+# parameter so each PR appends its own file instead of editing this
+# script (ISSUE 3 default: BENCH_3.json).
 #
-# Usage: scripts/bench.sh [extra cargo args...]
-#   BENCH_OUT=path   override the output file (default: <repo>/BENCH_2.json)
+# Usage: scripts/bench.sh [gen] [extra cargo args...]
+#   gen              bench generation number (default: 3 -> BENCH_3.json)
+#   BENCH_OUT=path   override the output file entirely
 #
 # Each bench binary appends one JSON object per measurement to
 # $BENCH_JSON_OUT (see util::emit_bench_json); this script wraps the
@@ -14,12 +16,21 @@
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
-OUT="${BENCH_OUT:-$ROOT/BENCH_2.json}"
+GEN="3"
+if [[ $# -ge 1 && "$1" =~ ^[0-9]+$ ]]; then
+    GEN="$1"
+    shift
+fi
+OUT="${BENCH_OUT:-$ROOT/BENCH_${GEN}.json}"
 TMP="$(mktemp -d)"
 trap 'rm -rf "$TMP"' EXIT
 export BENCH_JSON_OUT="$TMP/bench.jsonl"
 
 cd "$ROOT"
+# ISSUE 3: scheduler_latency now includes the 20k-job fleet-scale
+# placement benches (indexed vs exhaustive reference — the >= 5x
+# acceptance pair) and simulator the events/s engine benches (calendar
+# queue vs binary heap).
 cargo bench --bench scheduler_latency "$@"
 cargo bench --bench simulator "$@"
 # ISSUE 2: dispatch throughput of the extracted orchestration core, per
