@@ -5,9 +5,9 @@
 
 use rollmux::cluster::PhaseModel;
 use rollmux::coordinator::inter::InterGroupScheduler;
-use rollmux::sim::engine::{EventQueueKind, SimConfig, Simulator};
+use rollmux::sim::engine::{run_sim, EventQueueKind, Fidelity, SimConfig, Simulator};
 use rollmux::util::{bench, emit_bench_json, timed};
-use rollmux::workload::trace::{philly_trace, production_trace, SloPolicy};
+use rollmux::workload::trace::{fleet_trace, philly_trace, production_trace, SloPolicy};
 use rollmux::workload::profiles::SimProfile;
 
 const BIN: &str = "simulator";
@@ -82,6 +82,103 @@ fn main() {
                 ("mean_s", stats.mean_s),
                 ("events", events as f64),
                 ("events_per_s", events as f64 / stats.mean_s.max(1e-12)),
+            ],
+        );
+    }
+
+    // ISSUE 4: gantt recording off vs on — `record_gantt: false` is the
+    // allocation-free big-sweep configuration; outcomes are bit-identical
+    // either way (engine unit test), only the recording cost differs.
+    for (name, record) in [
+        ("engine/events_norecord @200 jobs", false),
+        ("engine/events_record @200 jobs", true),
+    ] {
+        let trace = production_trace(7, 200);
+        let events = {
+            let cfg = SimConfig { seed: 7, record_gantt: record, ..Default::default() };
+            Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace.clone())
+                .run()
+                .events_processed
+        };
+        let stats = bench(1, 5, || {
+            let cfg = SimConfig { seed: 7, record_gantt: record, ..Default::default() };
+            Simulator::new(cfg, InterGroupScheduler::new(PhaseModel::default()), trace.clone())
+                .run()
+        });
+        stats.report(name);
+        emit_bench_json(
+            BIN,
+            name,
+            &[
+                ("mean_s", stats.mean_s),
+                ("events", events as f64),
+                ("events_per_s", events as f64 / stats.mean_s.max(1e-12)),
+            ],
+        );
+    }
+
+    // ISSUE 4: the two-tier fleet series. The ≥10x acceptance pair runs
+    // both tiers on the SAME 10k-job trace (exact at 100k is minutes of
+    // wall-clock; set ROLLMUX_BENCH_EXACT_100K=1 to measure it anyway),
+    // and the fluid tier alone demonstrates the 100k-job sweep point.
+    let mk_cfg = |fidelity| SimConfig { seed: 7, fidelity, ..Default::default() };
+    let mk_sched = || InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8);
+    let trace10k = fleet_trace(7, 10_000, 1.0);
+    let (exact10, exact10_s) =
+        timed(|| run_sim(mk_cfg(Fidelity::Exact), mk_sched(), trace10k.clone()));
+    println!(
+        "exact/fleet_10k: {exact10_s:.2}s wall, {} events",
+        exact10.events_processed
+    );
+    emit_bench_json(
+        BIN,
+        "exact/fleet_10k",
+        &[("wall_s", exact10_s), ("events", exact10.events_processed as f64)],
+    );
+    let (fluid10, fluid10_s) =
+        timed(|| run_sim(mk_cfg(Fidelity::Fluid), mk_sched(), trace10k.clone()));
+    println!(
+        "fluid/fleet_10k: {fluid10_s:.2}s wall, {} events, {:.1}x vs exact",
+        fluid10.events_processed,
+        exact10_s / fluid10_s.max(1e-12)
+    );
+    emit_bench_json(
+        BIN,
+        "fluid/fleet_10k",
+        &[
+            ("wall_s", fluid10_s),
+            ("events", fluid10.events_processed as f64),
+            ("speedup_vs_exact", exact10_s / fluid10_s.max(1e-12)),
+        ],
+    );
+    let trace100k = fleet_trace(7, 100_000, 1.0);
+    let (fluid100, fluid100_s) =
+        timed(|| run_sim(mk_cfg(Fidelity::Fluid), mk_sched(), trace100k.clone()));
+    println!(
+        "fluid/fleet_100k: {fluid100_s:.2}s wall, {} events, SLO {:.3}",
+        fluid100.events_processed,
+        fluid100.slo_attainment()
+    );
+    emit_bench_json(
+        BIN,
+        "fluid/fleet_100k",
+        &[("wall_s", fluid100_s), ("events", fluid100.events_processed as f64)],
+    );
+    if std::env::var("ROLLMUX_BENCH_EXACT_100K").is_ok_and(|v| v == "1") {
+        let (exact100, exact100_s) =
+            timed(|| run_sim(mk_cfg(Fidelity::Exact), mk_sched(), trace100k));
+        println!(
+            "exact/fleet_100k: {exact100_s:.2}s wall, {} events, {:.1}x slower than fluid",
+            exact100.events_processed,
+            exact100_s / fluid100_s.max(1e-12)
+        );
+        emit_bench_json(
+            BIN,
+            "exact/fleet_100k",
+            &[
+                ("wall_s", exact100_s),
+                ("events", exact100.events_processed as f64),
+                ("slowdown_vs_fluid", exact100_s / fluid100_s.max(1e-12)),
             ],
         );
     }

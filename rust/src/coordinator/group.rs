@@ -497,7 +497,15 @@ impl Group {
     }
 
     pub fn job_ids(&self) -> Vec<JobId> {
-        self.jobs.iter().map(|j| j.spec.id).collect()
+        self.job_ids_iter().collect()
+    }
+
+    /// Member job ids in admission order, without allocating (ISSUE 4:
+    /// callers that only scan — membership checks, metrics folds — can
+    /// stream instead of materializing the `job_ids()` `Vec`; callers
+    /// that need ownership keep using `job_ids()`).
+    pub fn job_ids_iter(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.jobs.iter().map(|j| j.spec.id)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -665,6 +673,17 @@ mod tests {
         g.compact_trailing_nodes();
         assert_eq!(g.nodes_by_load().len(), g.n_roll_nodes);
         check(&g);
+    }
+
+    #[test]
+    fn job_ids_iter_matches_vec_in_admission_order() {
+        let model = PhaseModel::default();
+        let mut g = Group::isolated(0, direct_job(5, 100.0, 80.0, 4.0), &model);
+        pack(&mut g, direct_job(2, 60.0, 40.0, 4.0), vec![0]);
+        pack(&mut g, direct_job(9, 50.0, 30.0, 4.0), vec![0]);
+        let streamed: Vec<JobId> = g.job_ids_iter().collect();
+        assert_eq!(streamed, vec![5, 2, 9], "admission order, not sorted");
+        assert_eq!(streamed, g.job_ids());
     }
 
     #[test]

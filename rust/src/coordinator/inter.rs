@@ -392,6 +392,14 @@ impl InterGroupScheduler {
 
     pub fn find_group(&self, job: JobId) -> Option<&Group> {
         let &gid = self.job_group.get(&job)?;
+        self.group_by_id(gid)
+    }
+
+    /// O(1) group lookup by id via the positional map (`None` once the
+    /// group deprovisioned). The engine resolves every arrival's placed
+    /// group through this instead of a linear scan — at fleet scale the
+    /// scan was O(live groups) per arrival (ISSUE 4).
+    pub fn group_by_id(&self, gid: usize) -> Option<&Group> {
         let &gi = self.gid_to_idx.get(gid)?;
         self.groups.get(gi)
     }

@@ -107,17 +107,20 @@ pub fn intra(opts: &ExpOpts) {
         &["policy", "makespan (h)", "SLO attain", "mean slowdown", "cost ($)", "iters/k$"],
     );
     let kinds: Vec<IntraPolicyKind> = IntraPolicyKind::all().to_vec();
-    let results: Vec<(IntraPolicyKind, SimResult)> = par::parallel_map(kinds, |_, kind| {
-        let mut cfg = SimConfig { seed: opts.seed, ..Default::default() };
-        cfg.intra = kind;
-        let res = Simulator::new(
-            cfg,
-            InterGroupScheduler::new(PhaseModel::default()),
-            trace.clone(),
-        )
-        .run();
-        (kind, res)
-    });
+    // ISSUE 4: each worker keeps one simulator and rearms it per policy
+    // (`reset_with_trace` is bit-identical to fresh construction).
+    let results: Vec<(IntraPolicyKind, SimResult)> = par::parallel_map_pooled(
+        par::max_threads(),
+        kinds,
+        || None::<Simulator<InterGroupScheduler>>,
+        |slab, _, kind| {
+            let mut cfg = SimConfig { seed: opts.seed, ..Default::default() };
+            cfg.intra = kind;
+            let sched = InterGroupScheduler::new(PhaseModel::default());
+            let res = crate::sim::engine::run_pooled(slab, cfg, sched, trace.clone());
+            (kind, res)
+        },
+    );
     for (kind, res) in &results {
         t.row(vec![
             kind.name().to_string(),

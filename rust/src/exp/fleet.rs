@@ -1,0 +1,243 @@
+//! `rollmux exp fleet` — fleet-scale what-if sweep (ISSUE 4).
+//!
+//! Sweeps a 100k-job synthetic fleet trace (`workload::trace::fleet_trace`)
+//! across arrival-rate scales and group-size caps, replaying every point
+//! on the **fluid tier** (DESIGN.md §12). This sweep exists because of
+//! Tier B: the exact engine would replay tens of millions of phase
+//! events per point, the fluid tier replays ~3 events per job.
+//!
+//! Output discipline: the result tables go to **stdout** and are fully
+//! deterministic (the CI `ROLLMUX_THREADS={1,4}` matrix diffs them);
+//! wall-clock timings go to **stderr**.
+//!
+//! Every worker keeps ONE reusable [`FluidSimulator`] and rearms it with
+//! `reset_with_trace` between sweep points — the slab-reuse path the
+//! exact tier also grew this PR.
+
+use crate::cluster::PhaseModel;
+use crate::coordinator::inter::InterGroupScheduler;
+use crate::sim::engine::{run_sim, Fidelity, SimConfig, SimResult};
+use crate::sim::fluid::FluidSimulator;
+use crate::util::par;
+use crate::util::table::{f, pct, Table};
+use crate::util::timed;
+use crate::workload::trace::fleet_trace;
+
+use super::ExpOpts;
+
+struct FleetRow {
+    rate: f64,
+    cap: usize,
+    res: SimResult,
+    wall_s: f64,
+}
+
+fn run_points(opts: &ExpOpts, n_jobs: usize, points: Vec<(f64, usize)>) -> Vec<FleetRow> {
+    par::parallel_map_pooled(
+        par::max_threads(),
+        points,
+        || None::<FluidSimulator<InterGroupScheduler>>,
+        |slab, _, (rate, cap)| {
+            let trace = fleet_trace(opts.seed, n_jobs, rate);
+            let cfg = SimConfig {
+                seed: opts.seed,
+                fidelity: Fidelity::Fluid,
+                ..Default::default()
+            };
+            let sched = InterGroupScheduler::with_max_group_size(PhaseModel::default(), cap);
+            let (res, wall_s) = timed(|| crate::sim::fluid::run_pooled(slab, cfg, sched, trace));
+            FleetRow { rate, cap, res, wall_s }
+        },
+    )
+}
+
+pub fn fleet(opts: &ExpOpts) {
+    let n_jobs = ((100_000.0 * opts.scale) as usize).max(1_000);
+    let mut points = Vec::new();
+    for &rate in &[0.5, 1.0, 2.0] {
+        for &cap in &[4usize, 8] {
+            points.push((rate, cap));
+        }
+    }
+    println!(
+        "sweeping {n_jobs} synthetic fleet jobs per point across arrival rates x \
+         group caps ({} points, fluid tier)...\n",
+        points.len()
+    );
+    let rows = run_points(opts, n_jobs, points);
+
+    let mut t = Table::new(
+        &format!("Fleet sweep — {n_jobs} jobs/point, fluid tier"),
+        &[
+            "arrival x",
+            "cap",
+            "SLO attain",
+            "avg $/h",
+            "iters/k$",
+            "roll bubble",
+            "train bubble",
+            "peak GPUs",
+            "events",
+        ],
+    );
+    for r in &rows {
+        let (rb, tb) = r.res.bubble_fracs();
+        t.row(vec![
+            format!("{:.1}", r.rate),
+            format!("{}", r.cap),
+            pct(r.res.slo_attainment()),
+            f(r.res.avg_cost_per_hour, 0),
+            f(r.res.iters_per_kusd(), 1),
+            pct(rb),
+            pct(tb),
+            format!("{}", r.res.peak_roll_gpus + r.res.peak_train_gpus),
+            format!("{}", r.res.events_processed),
+        ]);
+    }
+    t.print();
+    for r in &rows {
+        eprintln!(
+            "  [timing] rate {:.1} cap {}: {:.2}s wall ({:.0} jobs/s)",
+            r.rate,
+            r.cap,
+            r.wall_s,
+            n_jobs as f64 / r.wall_s.max(1e-9)
+        );
+    }
+    // Optional machine-readable dump for offline plotting (stderr-only
+    // reporting keeps stdout deterministic for the CI thread matrix).
+    if let Ok(path) = std::env::var("ROLLMUX_FLEET_JSON") {
+        if !path.is_empty() {
+            let doc = crate::util::json::arr(
+                rows.iter()
+                    .map(|r| crate::metrics::fleet_point_json(r.rate, r.cap, &r.res))
+                    .collect(),
+            );
+            match crate::metrics::write_json(&path, &doc) {
+                Ok(()) => eprintln!("  wrote {path}"),
+                Err(e) => eprintln!("  ROLLMUX_FLEET_JSON={path}: {e}"),
+            }
+        }
+    }
+
+    // Fluid-vs-exact spot check on a common prefix-sized trace: the
+    // error the property suite bounds, shown on this trace family.
+    let n_check = n_jobs.min(2_000);
+    let trace = fleet_trace(opts.seed, n_check, 1.0);
+    let cfg_exact = SimConfig { seed: opts.seed, ..Default::default() };
+    let cfg_fluid = SimConfig { seed: opts.seed, fidelity: Fidelity::Fluid, ..Default::default() };
+    let (exact, exact_s) = timed(|| {
+        run_sim(
+            cfg_exact,
+            InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8),
+            trace.clone(),
+        )
+    });
+    let (fluid, fluid_s) = timed(|| {
+        run_sim(
+            cfg_fluid,
+            InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8),
+            trace,
+        )
+    });
+    let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-9);
+    let mut t2 = Table::new(
+        &format!("Fluid vs exact — {n_check} jobs, rate 1.0, cap 8"),
+        &["metric", "exact", "fluid", "rel err"],
+    );
+    let (erb, etb) = exact.bubble_fracs();
+    let (frb, ftb) = fluid.bubble_fracs();
+    for (name, a, b) in [
+        ("SLO attainment", exact.slo_attainment(), fluid.slo_attainment()),
+        ("iters/kUSD", exact.iters_per_kusd(), fluid.iters_per_kusd()),
+        ("rollout bubble", erb, frb),
+        ("train bubble", etb, ftb),
+        ("makespan (h)", exact.makespan_s / 3600.0, fluid.makespan_s / 3600.0),
+    ] {
+        t2.row(vec![name.to_string(), f(a, 4), f(b, 4), pct(rel(a, b))]);
+    }
+    t2.print();
+    eprintln!(
+        "  [timing] exact {exact_s:.2}s vs fluid {fluid_s:.2}s ({:.1}x) at {n_check} jobs; \
+         exact events {} vs fluid {}",
+        exact_s / fluid_s.max(1e-9),
+        exact.events_processed,
+        fluid.events_processed
+    );
+    println!(
+        "\n(fluid soundness domain + error-bound argument: DESIGN.md §12; the ≤2% bound is\n\
+         property-tested in rust/tests/prop_fluid.rs; wall-clock series: BENCH_4.json)"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The fleet sweep's merged rows must be bit-identical between the
+    /// serial and parallel harness paths (the `ROLLMUX_THREADS` CI
+    /// matrix diffs stdout; this pins the underlying numbers).
+    #[test]
+    fn fleet_sweep_parallel_matches_serial_bitwise() {
+        let opts = ExpOpts { seed: 13, scale: 0.0, gantt: false };
+        let points = vec![(0.5f64, 4usize), (1.0, 8)];
+        let n = 120;
+        let serial = {
+            let pts = points.clone();
+            par::parallel_map_pooled(
+                1,
+                pts,
+                || None::<FluidSimulator<InterGroupScheduler>>,
+                |slab, _, (rate, cap)| run_one(&opts, n, rate, cap, slab),
+            )
+        };
+        let parallel = par::parallel_map_pooled(
+            4,
+            points,
+            || None::<FluidSimulator<InterGroupScheduler>>,
+            |slab, _, (rate, cap)| run_one(&opts, n, rate, cap, slab),
+        );
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.slo_attainment().to_bits(), b.slo_attainment().to_bits());
+            assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits());
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(a.events_processed, b.events_processed);
+        }
+    }
+
+    fn run_one(
+        opts: &ExpOpts,
+        n: usize,
+        rate: f64,
+        cap: usize,
+        slab: &mut Option<FluidSimulator<InterGroupScheduler>>,
+    ) -> SimResult {
+        let trace = fleet_trace(opts.seed, n, rate);
+        let cfg = SimConfig { seed: opts.seed, fidelity: Fidelity::Fluid, ..Default::default() };
+        let sched = InterGroupScheduler::with_max_group_size(PhaseModel::default(), cap);
+        crate::sim::fluid::run_pooled(slab, cfg, sched, trace)
+    }
+
+    /// Fluid completes every job and stays in the exact tier's ballpark
+    /// on a small fleet prefix.
+    #[test]
+    fn fleet_fluid_tracks_exact_on_small_prefix() {
+        let trace = fleet_trace(3, 150, 1.0);
+        let exact = run_sim(
+            SimConfig { seed: 3, ..Default::default() },
+            InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8),
+            trace.clone(),
+        );
+        let fluid = run_sim(
+            SimConfig { seed: 3, fidelity: Fidelity::Fluid, ..Default::default() },
+            InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8),
+            trace,
+        );
+        assert_eq!(exact.outcomes.len(), fluid.outcomes.len());
+        assert!(fluid.events_processed < exact.events_processed / 5);
+        assert!((exact.slo_attainment() - fluid.slo_attainment()).abs() <= 0.05);
+        let rel = (exact.iters_per_kusd() - fluid.iters_per_kusd()).abs()
+            / exact.iters_per_kusd().max(1e-9);
+        assert!(rel <= 0.10, "iters/kUSD rel err {rel}");
+    }
+}

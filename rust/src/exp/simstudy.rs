@@ -12,7 +12,7 @@ use crate::baselines::heuristic::{GreedyScheduler, RandomScheduler};
 use crate::baselines::optimal::{optimal_partition_deadline, PrePlacedScheduler};
 use crate::cluster::PhaseModel;
 use crate::coordinator::inter::InterGroupScheduler;
-use crate::sim::engine::{SimConfig, SimResult, Simulator};
+use crate::sim::engine::{GroupScheduler, SimConfig, SimResult, Simulator};
 use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::table::{f, pct, ratio, Table};
@@ -44,6 +44,12 @@ fn run_policies(opts: &ExpOpts, trace: &[JobSpec], cap: usize) -> Vec<PolicyRow>
 
 /// The four policy replays of one figure row, computed on `workers`
 /// threads and merged back in fixed policy order.
+///
+/// ISSUE 4: the schedulers are boxed (`Box<dyn GroupScheduler>` is a
+/// scheduler too) so every worker drives ONE reusable simulator and
+/// rearms it with `reset_with_trace` between the policies it claims —
+/// no per-policy slab reconstruction. `reset_with_trace` is bit-identical
+/// to fresh construction (property-tested), so rows are unchanged.
 fn run_policies_with(
     opts: &ExpOpts,
     trace: &[JobSpec],
@@ -51,28 +57,22 @@ fn run_policies_with(
     workers: usize,
 ) -> Vec<PolicyRow> {
     let model = PhaseModel::default();
-    let results: Vec<SimResult> =
-        par::parallel_map_with(workers, (0..POLICY_NAMES.len()).collect(), |_, k| {
+    type BoxedSim = Simulator<Box<dyn GroupScheduler>>;
+    let results: Vec<SimResult> = par::parallel_map_pooled(
+        workers,
+        (0..POLICY_NAMES.len()).collect(),
+        || None::<BoxedSim>,
+        |slab, _, k| {
             let cfg = SimConfig { seed: opts.seed, ..Default::default() };
-            match k {
-                0 => {
-                    let opt = PrePlacedScheduler::windowed(trace, model, OPT_WINDOW.min(cap * 2));
-                    Simulator::new(cfg, opt, trace.to_vec()).run()
-                }
-                1 => {
-                    let mux = InterGroupScheduler::with_max_group_size(model, cap);
-                    Simulator::new(cfg, mux, trace.to_vec()).run()
-                }
-                2 => {
-                    let grd = GreedyScheduler::new(model, cap);
-                    Simulator::new(cfg, grd, trace.to_vec()).run()
-                }
-                _ => {
-                    let rnd = RandomScheduler::new(model, opts.seed, cap);
-                    Simulator::new(cfg, rnd, trace.to_vec()).run()
-                }
-            }
-        });
+            let sched: Box<dyn GroupScheduler> = match k {
+                0 => Box::new(PrePlacedScheduler::windowed(trace, model, OPT_WINDOW.min(cap * 2))),
+                1 => Box::new(InterGroupScheduler::with_max_group_size(model, cap)),
+                2 => Box::new(GreedyScheduler::new(model, cap)),
+                _ => Box::new(RandomScheduler::new(model, opts.seed, cap)),
+            };
+            crate::sim::engine::run_pooled(slab, cfg, sched, trace.to_vec())
+        },
+    );
     results
         .into_iter()
         .enumerate()

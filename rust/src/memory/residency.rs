@@ -6,7 +6,7 @@
 //! ledger tracks per-node pinned bytes and refuses placements that exceed
 //! capacity — Algorithm 1 line 8.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::node::NodeId;
 use crate::workload::job::JobId;
@@ -14,13 +14,19 @@ use crate::workload::job::JobId;
 #[derive(Clone, Debug)]
 pub struct ResidencyLedger {
     capacity_gb: f64,
-    /// node -> (job -> pinned GB)
-    pinned: HashMap<NodeId, HashMap<JobId, f64>>,
+    /// node -> (job -> pinned GB). BTreeMaps so iteration order is the
+    /// sorted id order [`Self::residents`] used to pay a collect+sort
+    /// for — [`Self::residents_iter`] streams it allocation-free
+    /// (ISSUE 4). The ledger sits outside the per-decision hot path
+    /// (`Group` keeps its own memory caches), so the O(log n) lookups
+    /// cost nothing that matters while making every traversal
+    /// deterministic.
+    pinned: BTreeMap<NodeId, BTreeMap<JobId, f64>>,
 }
 
 impl ResidencyLedger {
     pub fn new(capacity_gb: f64) -> Self {
-        ResidencyLedger { capacity_gb, pinned: HashMap::new() }
+        ResidencyLedger { capacity_gb, pinned: BTreeMap::new() }
     }
 
     pub fn capacity_gb(&self) -> f64 {
@@ -68,12 +74,15 @@ impl ResidencyLedger {
         self.pinned.get(&node).is_some_and(|m| m.contains_key(&job))
     }
 
-    /// Jobs resident on a node.
+    /// Jobs resident on a node, ascending by id.
     pub fn residents(&self, node: NodeId) -> Vec<JobId> {
-        let mut v: Vec<JobId> =
-            self.pinned.get(&node).map(|m| m.keys().cloned().collect()).unwrap_or_default();
-        v.sort_unstable();
-        v
+        self.residents_iter(node).collect()
+    }
+
+    /// Jobs resident on a node, ascending by id, without allocating — the
+    /// BTreeMap already iterates in sorted order.
+    pub fn residents_iter(&self, node: NodeId) -> impl Iterator<Item = JobId> + '_ {
+        self.pinned.get(&node).into_iter().flat_map(|m| m.keys().copied())
     }
 
     /// Invariant check (used by proptests): no node over capacity.
@@ -97,6 +106,18 @@ mod tests {
         assert_eq!(l.unpin(0, 1), 60.0);
         assert!(l.pin(0, 3, 55.0));
         assert!(l.check_invariant());
+    }
+
+    #[test]
+    fn residents_iter_is_sorted_and_matches_vec() {
+        let mut l = ResidencyLedger::new(500.0);
+        for &j in &[9usize, 2, 7, 4] {
+            assert!(l.pin(3, j, 10.0));
+        }
+        let streamed: Vec<JobId> = l.residents_iter(3).collect();
+        assert_eq!(streamed, vec![2, 4, 7, 9]);
+        assert_eq!(streamed, l.residents(3));
+        assert_eq!(l.residents_iter(99).count(), 0);
     }
 
     #[test]

@@ -71,6 +71,28 @@ pub fn sim_result_json(r: &SimResult) -> Json {
     ])
 }
 
+/// Structured dump of one fleet-sweep point (`rollmux exp fleet`,
+/// ISSUE 4): aggregates only — a 100k-job outcome list would dwarf the
+/// file and the fluid tier records no timeline anyway.
+pub fn fleet_point_json(rate: f64, cap: usize, r: &SimResult) -> Json {
+    let (rb, tb) = r.bubble_fracs();
+    obj(vec![
+        ("arrival_rate_scale", num(rate)),
+        ("group_cap", num(cap as f64)),
+        ("jobs", num(r.outcomes.len() as f64)),
+        ("slo_attainment", num(r.slo_attainment())),
+        ("avg_cost_per_hour", num(r.avg_cost_per_hour)),
+        ("cost_usd", num(r.cost_usd)),
+        ("iters_per_kusd", num(r.iters_per_kusd())),
+        ("roll_bubble", num(rb)),
+        ("train_bubble", num(tb)),
+        ("peak_roll_gpus", num(r.peak_roll_gpus as f64)),
+        ("peak_train_gpus", num(r.peak_train_gpus as f64)),
+        ("makespan_s", num(r.makespan_s)),
+        ("events_processed", num(r.events_processed as f64)),
+    ])
+}
+
 /// Structured dump of an analytic baseline result.
 pub fn baseline_json(r: &BaselineResult) -> Json {
     obj(vec![
@@ -154,6 +176,19 @@ mod tests {
         let line = summary("test", &r);
         assert!(line.contains("SLO 100.0%"));
         assert!(line.len() < 160);
+    }
+
+    #[test]
+    fn fleet_point_json_has_aggregates_only() {
+        let r = small_result();
+        let j = fleet_point_json(1.5, 4, &r);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("arrival_rate_scale").unwrap().as_f64(), Some(1.5));
+        assert_eq!(parsed.get("group_cap").unwrap().as_usize(), Some(4));
+        assert_eq!(parsed.get("jobs").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("slo_attainment").unwrap().as_f64(), Some(1.0));
+        assert!(parsed.get("outcomes").is_none(), "aggregates only");
+        assert!(parsed.get("timeline").is_none(), "aggregates only");
     }
 
     #[test]

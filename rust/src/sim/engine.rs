@@ -56,6 +56,13 @@ pub trait GroupScheduler {
     fn cost_per_hour(&self) -> f64;
     /// Provisioned (rollout, train) GPUs.
     fn gpus(&self) -> (usize, usize);
+    /// Look up a live group by id. The default scans; implementations
+    /// with an index override it (the engine resolves every arrival's
+    /// placed group through this — at fleet scale the default scan is
+    /// O(live groups) per arrival, ISSUE 4).
+    fn group(&self, gid: usize) -> Option<&Group> {
+        self.groups().iter().find(|g| g.id == gid)
+    }
 }
 
 impl GroupScheduler for InterGroupScheduler {
@@ -73,6 +80,33 @@ impl GroupScheduler for InterGroupScheduler {
     }
     fn gpus(&self) -> (usize, usize) {
         self.gpus_in_use()
+    }
+    fn group(&self, gid: usize) -> Option<&Group> {
+        self.group_by_id(gid)
+    }
+}
+
+/// Boxed schedulers are schedulers too, so heterogeneous sweep drivers
+/// can reuse one `Simulator<Box<dyn GroupScheduler>>`'s slabs across
+/// policies via [`Simulator::reset_with_trace`] (ISSUE 4).
+impl<S: GroupScheduler + ?Sized> GroupScheduler for Box<S> {
+    fn place(&mut self, spec: JobSpec) -> Decision {
+        (**self).place(spec)
+    }
+    fn complete(&mut self, job: JobId) {
+        (**self).complete(job)
+    }
+    fn groups(&self) -> &[Group] {
+        (**self).groups()
+    }
+    fn cost_per_hour(&self) -> f64 {
+        (**self).cost_per_hour()
+    }
+    fn gpus(&self) -> (usize, usize) {
+        (**self).gpus()
+    }
+    fn group(&self, gid: usize) -> Option<&Group> {
+        (**self).group(gid)
     }
 }
 
@@ -110,6 +144,23 @@ pub enum EventQueueKind {
     BinaryHeap,
 }
 
+/// Which simulation tier runs a trace (DESIGN.md §12).
+///
+/// * `Exact` — the event-exact discrete-event engine ([`Simulator`]),
+///   bit-identical across queues/policies (the PR 1-3 oracle discipline).
+/// * `Fluid` — the piecewise-constant-rate fast path
+///   ([`crate::sim::fluid::FluidSimulator`]): groups advance by
+///   closed-form phase rates between scheduler decision points, skipping
+///   intra-cycle events entirely. Bounded-error approximation
+///   (property-tested ≤2% on attainment / iters-per-kUSD / bubbles over
+///   its soundness domain), built for 100k-job fleet sweeps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Fidelity {
+    #[default]
+    Exact,
+    Fluid,
+}
+
 #[derive(Clone, Debug)]
 pub struct SimConfig {
     pub seed: u64,
@@ -126,6 +177,10 @@ pub struct SimConfig {
     pub record_gantt: bool,
     /// Pending-event structure (bit-identical results either way).
     pub event_queue: EventQueueKind,
+    /// Simulation tier: event-exact DES or the fluid fast path. Honored
+    /// by [`run_sim`]/[`run_rollmux`]; constructing a [`Simulator`]
+    /// directly always runs the exact tier.
+    pub fidelity: Fidelity,
 }
 
 impl Default for SimConfig {
@@ -140,6 +195,7 @@ impl Default for SimConfig {
             intra: IntraPolicyKind::default(),
             record_gantt: false,
             event_queue: EventQueueKind::default(),
+            fidelity: Fidelity::default(),
         }
     }
 }
@@ -370,6 +426,9 @@ pub struct Simulator<S: GroupScheduler> {
     cur_rate_per_h: f64,
     cur_roll_gpus: usize,
     cur_train_gpus: usize,
+    /// Reusable Roofline length-batch buffer: the per-iteration
+    /// `Vec<f64>` allocation `sample_iter` used to pay is gone (ISSUE 4).
+    scratch_lengths: Vec<f64>,
 }
 
 impl<S: GroupScheduler> Simulator<S> {
@@ -378,7 +437,7 @@ impl<S: GroupScheduler> Simulator<S> {
         let mut sim = Simulator {
             cfg,
             sched,
-            trace: trace.into_iter().map(Some).collect(),
+            trace: Vec::new(),
             events,
             seq: 0,
             now: 0.0,
@@ -389,12 +448,44 @@ impl<S: GroupScheduler> Simulator<S> {
             cur_rate_per_h: 0.0,
             cur_roll_gpus: 0,
             cur_train_gpus: 0,
+            scratch_lengths: Vec::new(),
         };
-        for i in 0..sim.trace.len() {
-            let t = sim.trace[i].as_ref().expect("fresh trace").arrival_s;
-            sim.push(t, Ev::Arrival(i));
-        }
+        sim.load_trace(trace);
         sim
+    }
+
+    fn load_trace(&mut self, trace: Vec<JobSpec>) {
+        self.trace.clear();
+        self.trace.extend(trace.into_iter().map(Some));
+        for i in 0..self.trace.len() {
+            let t = self.trace[i].as_ref().expect("fresh trace").arrival_s;
+            self.push(t, Ev::Arrival(i));
+        }
+    }
+
+    /// Rearm the simulator for another run, reusing its slabs (the job
+    /// slab, trace slab, orchestrator vector and sampling scratch keep
+    /// their capacity). Sweep drivers call this between points instead of
+    /// reconstructing a `Simulator` per point; the subsequent
+    /// [`Self::run_to_end`] is **bit-identical** to a fresh
+    /// `Simulator::new(cfg, sched, trace).run()` — every piece of
+    /// run-visible state is reset (the event queue is rebuilt so its
+    /// deterministic width-retune state starts fresh too). Property-
+    /// tested in `rust/tests/prop_fluid.rs`.
+    pub fn reset_with_trace(&mut self, cfg: SimConfig, sched: S, trace: Vec<JobSpec>) {
+        self.cfg = cfg;
+        self.sched = sched;
+        self.events = EventQueue::new(self.cfg.event_queue);
+        self.seq = 0;
+        self.now = 0.0;
+        self.jobs.clear();
+        self.group_rt.clear();
+        self.res = SimResult::default();
+        self.last_rate_change = 0.0;
+        self.cur_rate_per_h = 0.0;
+        self.cur_roll_gpus = 0;
+        self.cur_train_gpus = 0;
+        self.load_trace(trace);
     }
 
     fn push(&mut self, t: f64, ev: Ev) {
@@ -403,6 +494,8 @@ impl<S: GroupScheduler> Simulator<S> {
     }
 
     /// Streaming per-(group, node) rollout busy accumulation (GPU-s).
+    /// (Mirrored in `sim::fluid` — keep the accounting helpers in sync;
+    /// the cross-tier property tests compare these integrals.)
     fn node_busy_add(&mut self, gid: usize, node: usize, gpu_s: f64) {
         let v = &mut self.res.roll_node_busy_gpu_s;
         if v.len() <= gid {
@@ -447,6 +540,13 @@ impl<S: GroupScheduler> Simulator<S> {
 
     /// Run to completion, returning the results.
     pub fn run(mut self) -> SimResult {
+        self.run_to_end()
+    }
+
+    /// [`Self::run`] for a borrowed simulator: drains the loaded trace
+    /// and takes the result out, leaving the slabs behind for the next
+    /// [`Self::reset_with_trace`].
+    pub fn run_to_end(&mut self) -> SimResult {
         while let Some((t, ev)) = self.events.pop() {
             debug_assert!(t >= self.now - 1e-9, "time went backwards");
             self.now = t;
@@ -464,7 +564,7 @@ impl<S: GroupScheduler> Simulator<S> {
         } else {
             0.0
         };
-        self.res
+        std::mem::take(&mut self.res)
     }
 
     fn ensure_group_rt(&mut self, gid: usize) {
@@ -480,12 +580,7 @@ impl<S: GroupScheduler> Simulator<S> {
         let d = self.sched.place(spec.clone());
         self.rate_changed();
 
-        let group = self
-            .sched
-            .groups()
-            .iter()
-            .find(|g| g.id == d.group_id)
-            .expect("placed group exists");
+        let group = self.sched.group(d.group_id).expect("placed group exists");
         let gj = group.jobs().iter().find(|j| j.spec.id == id).expect("job in group");
         let train_gpus = group.train_gpus();
         let train_scale = if matches!(spec.phases, PhaseSpec::Direct { .. }) {
@@ -543,7 +638,7 @@ impl<S: GroupScheduler> Simulator<S> {
 
     fn sample_iteration(&mut self, slot: usize) {
         let rt = &mut self.jobs[slot];
-        let s = rt.spec.sample_iter(&self.cfg.model, &mut rt.rng);
+        let s = rt.spec.sample_iter_with(&self.cfg.model, &mut rt.rng, &mut self.scratch_lengths);
         rt.cur_troll = s.t_roll;
         rt.cur_ttrain = s.t_train * rt.train_scale;
         rt.solo_s += s.t_roll + rt.cur_ttrain + rt.t_sync;
@@ -801,10 +896,38 @@ impl<S: GroupScheduler> Simulator<S> {
     }
 }
 
-/// Convenience: run a trace under RollMux with the given config.
+/// Run one sweep point on a worker's pooled simulator slab: rearm the
+/// existing simulator via [`Simulator::reset_with_trace`] (bit-identical
+/// to fresh construction — property-tested), or construct it on first
+/// use. The one idiom every pooled sweep driver shares (ISSUE 4); the
+/// fluid counterpart is [`crate::sim::fluid::run_pooled`].
+pub fn run_pooled<S: GroupScheduler>(
+    slab: &mut Option<Simulator<S>>,
+    cfg: SimConfig,
+    sched: S,
+    trace: Vec<JobSpec>,
+) -> SimResult {
+    match slab {
+        Some(sim) => sim.reset_with_trace(cfg, sched, trace),
+        None => *slab = Some(Simulator::new(cfg, sched, trace)),
+    }
+    slab.as_mut().expect("slab populated").run_to_end()
+}
+
+/// Run a trace on the tier `cfg.fidelity` selects: the event-exact
+/// engine or the fluid fast path (DESIGN.md §12).
+pub fn run_sim<S: GroupScheduler>(cfg: SimConfig, sched: S, trace: Vec<JobSpec>) -> SimResult {
+    match cfg.fidelity {
+        Fidelity::Exact => Simulator::new(cfg, sched, trace).run(),
+        Fidelity::Fluid => crate::sim::fluid::FluidSimulator::new(cfg, sched, trace).run(),
+    }
+}
+
+/// Convenience: run a trace under RollMux with the given config (honors
+/// `cfg.fidelity`).
 pub fn run_rollmux(cfg: SimConfig, trace: Vec<JobSpec>) -> SimResult {
     let sched = InterGroupScheduler::new(cfg.model);
-    Simulator::new(cfg, sched, trace).run()
+    run_sim(cfg, sched, trace)
 }
 
 /// Reference: H20/H800 GPU hour prices (for cross-checks in tests).
@@ -1176,6 +1299,40 @@ mod tests {
             }
             assert!(res.roll_busy_gpu_s <= res.roll_prov_gpu_s + 1e-6, "{kind:?}");
             assert!(res.train_busy_gpu_s <= res.train_prov_gpu_s + 1e-6, "{kind:?}");
+        }
+    }
+
+    /// ISSUE 4: rearming a used simulator must be indistinguishable from
+    /// constructing a fresh one — every run-visible field resets.
+    #[test]
+    fn reset_with_trace_matches_fresh_construction() {
+        let mk = || vec![
+            direct_job(0, 100.0, 80.0, 2.0, 6, 0.0),
+            direct_job(1, 80.0, 60.0, 2.0, 6, 50.0),
+            direct_job(2, 60.0, 40.0, 3.0, 6, 100.0),
+        ];
+        let fresh = run_rollmux(cfg(), mk());
+        // Dirty the simulator with an unrelated run first.
+        let mut sim = Simulator::new(
+            SimConfig::default(),
+            InterGroupScheduler::new(PhaseModel::default()),
+            vec![direct_job(9, 50.0, 30.0, 4.0, 3, 0.0)],
+        );
+        let _ = sim.run_to_end();
+        let c = cfg();
+        sim.reset_with_trace(c.clone(), InterGroupScheduler::new(c.model), mk());
+        let reused = sim.run_to_end();
+        assert_eq!(fresh.makespan_s.to_bits(), reused.makespan_s.to_bits());
+        assert_eq!(fresh.cost_usd.to_bits(), reused.cost_usd.to_bits());
+        assert_eq!(fresh.events_processed, reused.events_processed);
+        assert_eq!(fresh.records.len(), reused.records.len());
+        assert_eq!(fresh.outcomes.len(), reused.outcomes.len());
+        for (id, a) in &fresh.outcomes {
+            let b = &reused.outcomes[id];
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+            assert_eq!(a.solo_actual_s.to_bits(), b.solo_actual_s.to_bits());
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(a.migrations, b.migrations);
         }
     }
 

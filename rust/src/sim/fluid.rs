@@ -1,0 +1,747 @@
+//! The fluid simulation tier (DESIGN.md §12) — Tier B of ISSUE 4.
+//!
+//! The exact engine (`sim::engine`) replays every phase of every
+//! iteration as a discrete event: a 100k-job fleet trace is tens of
+//! millions of events even with the calendar queue. This module trades
+//! event exactness for a **bounded-error closed form**: between
+//! scheduler decision points (arrivals, init completions, job
+//! completions) every co-execution group advances at a piecewise-
+//! constant iteration rate, skipping intra-cycle events entirely.
+//!
+//! Model. For an unsaturated group under any work-conserving dispatch
+//! order, the steady-state meta-iteration period is (Theorem 1, extended
+//! with the switch costs the engine actually pays)
+//!
+//! ```text
+//! P(G) = max( max_j  warm_roll_j + roll_j + warm_train_j + train_j + sync_j ,
+//!             max_n  Σ_{j pinned to n} (warm_roll_j + roll_j) ,
+//!                    Σ_j (warm_train_j + train_j) )
+//! ```
+//!
+//! — the longest member path, the busiest rollout node, or the serial
+//! training queue, whichever gates. Every member completes one
+//! iteration per `P`, so a member's finish time is its activation time
+//! plus `remaining_iters × P`, re-evaluated whenever membership changes.
+//!
+//! Exactness anchors (what keeps the error ≤2% on the property-test
+//! traces, `rust/tests/prop_fluid.rs`):
+//!
+//! * **Per-job durations replay the exact engine's RNG streams.** At
+//!   admission the fluid tier walks the job's per-job PRNG stream the
+//!   same way the engine does — one `sample_iter` plus the two
+//!   tail-shape forks per iteration — so the per-iteration *means* it
+//!   rates on (and the reported `solo_actual_s`) are bit-identical to
+//!   what the exact engine realizes, for any `PhaseSpec`.
+//! * **Busy integrals are progress-proportional.** Rollout/train busy
+//!   GPU-seconds accrue as `Δiters × occupancy`, so a completed job
+//!   contributes exactly its engine total (`n_iters × (warm + mean)`),
+//!   and the streaming per-(group, node) accumulators stay comparable.
+//! * **Join transients are modeled, not ignored.** A job entering an
+//!   occupied rotation waits about half the residual occupancy of its
+//!   pinned nodes before its first rollout; the fluid tier charges
+//!   `0.5 × shared-node load` between init end and rotation entry,
+//!   centering the one-cycle phase-in error the pure closed form has.
+//!
+//! Out of scope (documented soundness limits, DESIGN.md §12): long-tail
+//! migration (its pauses and sub-node tails are not modeled; `Fluid`
+//! reports zero migrations), per-round jitter of the cycle maximum
+//! (`E[max] ≥ max[E]` — the fluid period uses per-job means, so traces
+//! with high `cv` and near-equal co-members bias a few percent fast),
+//! and gantt records (`record_gantt` yields no `PhaseRecord`s — there
+//! are no per-phase events to record).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::cluster::node::GPUS_PER_NODE;
+use crate::sync::sync_time_s;
+use crate::util::rng::Rng;
+use crate::workload::job::{JobId, JobSpec, PhaseSpec};
+
+use super::engine::{GroupScheduler, JobOutcome, SimConfig, SimResult};
+
+/// Snap-to-completion tolerance, in iterations: absorbs the fp rounding
+/// of `(remaining × P) / P`.
+const EPS_ITERS: f64 = 1e-6;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum FEv {
+    /// Index into the trace.
+    Arrival(usize),
+    /// Cold init (+ modeled phase-in wait) done: the job enters its
+    /// group's rotation. Carries the job's slab slot.
+    Join(usize),
+    /// Predicted next completion inside a group: (group id, version at
+    /// scheduling time — stale checks discard outdated predictions).
+    Recheck(usize, u64),
+}
+
+#[derive(Clone, Debug)]
+struct FEvent {
+    t: f64,
+    seq: u64,
+    ev: FEv,
+}
+
+impl PartialEq for FEvent {
+    fn eq(&self, o: &Self) -> bool {
+        self.t.total_cmp(&o.t) == Ordering::Equal && self.seq == o.seq
+    }
+}
+impl Eq for FEvent {}
+impl PartialOrd for FEvent {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for FEvent {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // Min-heap on (time, seq) — the engine's exact total order.
+        o.t.total_cmp(&self.t).then(o.seq.cmp(&self.seq))
+    }
+}
+
+/// Fluid per-job state (dense slab, arrival order).
+struct FluidJob {
+    id: JobId,
+    gid: usize,
+    roll_nodes: Vec<usize>,
+    train_gpus: usize,
+    /// Mean per-iteration actual durations from the exact RNG replay.
+    occ_roll: f64,
+    occ_train: f64,
+    /// Member path: `occ_roll + occ_train + t_sync`.
+    path: f64,
+    /// Effective iterations (the engine always runs at least one).
+    n_eff: usize,
+    done_iters: f64,
+    finished: bool,
+    // Outcome bookkeeping.
+    arrival_s: f64,
+    slo: f64,
+    n_iters_raw: usize,
+    solo_actual_s: f64,
+    solo_est_iter_s: f64,
+    init_s: f64,
+}
+
+impl FluidJob {
+    fn remaining(&self) -> f64 {
+        (self.n_eff as f64 - self.done_iters).max(0.0)
+    }
+}
+
+/// Fluid per-group state (indexed by scheduler group id; ids are
+/// monotone and never reused).
+#[derive(Default)]
+struct FluidGroup {
+    /// Slots currently in the rotation (joined, unfinished).
+    members: Vec<usize>,
+    /// Slots admitted by the scheduler and not yet finished (includes
+    /// jobs still in init) — the join-delay estimate scans these.
+    admitted: Vec<usize>,
+    last_t: f64,
+    /// Current meta-iteration period `P`; meaningless while empty.
+    period: f64,
+    /// Bumped on every membership/period change; rechecks carrying an
+    /// older version are stale.
+    version: u64,
+}
+
+/// The fluid simulator: same inputs and `SimResult` surface as the exact
+/// [`super::engine::Simulator`], selected via `SimConfig::fidelity`
+/// (use [`super::engine::run_sim`]).
+pub struct FluidSimulator<S: GroupScheduler> {
+    pub cfg: SimConfig,
+    pub sched: S,
+    trace: Vec<Option<JobSpec>>,
+    events: BinaryHeap<FEvent>,
+    seq: u64,
+    now: f64,
+    jobs: Vec<FluidJob>,
+    groups: Vec<FluidGroup>,
+    res: SimResult,
+    // Cost integration state (mirrors the exact engine).
+    last_rate_change: f64,
+    cur_rate_per_h: f64,
+    cur_roll_gpus: usize,
+    cur_train_gpus: usize,
+    // Reusable scratch: Roofline length batches + per-node load folds.
+    scratch_lengths: Vec<f64>,
+    scratch_node_load: Vec<f64>,
+}
+
+impl<S: GroupScheduler> FluidSimulator<S> {
+    pub fn new(cfg: SimConfig, sched: S, trace: Vec<JobSpec>) -> Self {
+        let mut sim = FluidSimulator {
+            cfg,
+            sched,
+            trace: Vec::new(),
+            events: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            jobs: Vec::new(),
+            groups: Vec::new(),
+            res: SimResult::default(),
+            last_rate_change: 0.0,
+            cur_rate_per_h: 0.0,
+            cur_roll_gpus: 0,
+            cur_train_gpus: 0,
+            scratch_lengths: Vec::new(),
+            scratch_node_load: Vec::new(),
+        };
+        sim.load_trace(trace);
+        sim
+    }
+
+    fn load_trace(&mut self, trace: Vec<JobSpec>) {
+        self.trace.clear();
+        self.trace.extend(trace.into_iter().map(Some));
+        for i in 0..self.trace.len() {
+            let t = self.trace[i].as_ref().expect("fresh trace").arrival_s;
+            self.push(t, FEv::Arrival(i));
+        }
+    }
+
+    /// Rearm for another run, reusing the slabs (sweep drivers; the
+    /// exact-tier counterpart is `Simulator::reset_with_trace`).
+    pub fn reset_with_trace(&mut self, cfg: SimConfig, sched: S, trace: Vec<JobSpec>) {
+        self.cfg = cfg;
+        self.sched = sched;
+        self.events.clear();
+        self.seq = 0;
+        self.now = 0.0;
+        self.jobs.clear();
+        self.groups.clear();
+        self.res = SimResult::default();
+        self.last_rate_change = 0.0;
+        self.cur_rate_per_h = 0.0;
+        self.cur_roll_gpus = 0;
+        self.cur_train_gpus = 0;
+        self.load_trace(trace);
+    }
+
+    fn push(&mut self, t: f64, ev: FEv) {
+        self.seq += 1;
+        self.events.push(FEvent { t, seq: self.seq, ev });
+    }
+
+    // NOTE: the four accounting helpers below (node_busy_add,
+    // train_busy_add, integrate_cost, rate_changed) intentionally mirror
+    // `engine::Simulator`'s, expression for expression — the cross-tier
+    // property tests compare exactly these integrals, so a fix applied
+    // to one tier must land in both (divergence fails prop_fluid, it
+    // does not pass silently).
+    fn node_busy_add(&mut self, gid: usize, node: usize, gpu_s: f64) {
+        let v = &mut self.res.roll_node_busy_gpu_s;
+        if v.len() <= gid {
+            v.resize_with(gid + 1, Vec::new);
+        }
+        let nv = &mut v[gid];
+        if nv.len() <= node {
+            nv.resize(node + 1, 0.0);
+        }
+        nv[node] += gpu_s;
+    }
+
+    fn train_busy_add(&mut self, gid: usize, gpu_s: f64) {
+        let v = &mut self.res.train_group_busy_gpu_s;
+        if v.len() <= gid {
+            v.resize(gid + 1, 0.0);
+        }
+        v[gid] += gpu_s;
+    }
+
+    fn integrate_cost(&mut self) {
+        let dt_h = (self.now - self.last_rate_change) / 3600.0;
+        self.res.cost_usd += dt_h * self.cur_rate_per_h;
+        let dt = self.now - self.last_rate_change;
+        self.res.roll_prov_gpu_s += dt * self.cur_roll_gpus as f64;
+        self.res.train_prov_gpu_s += dt * self.cur_train_gpus as f64;
+        self.last_rate_change = self.now;
+    }
+
+    fn rate_changed(&mut self) {
+        self.integrate_cost();
+        self.cur_rate_per_h = self.sched.cost_per_hour();
+        let (r, t) = self.sched.gpus();
+        self.cur_roll_gpus = r;
+        self.cur_train_gpus = t;
+        self.res.peak_roll_gpus = self.res.peak_roll_gpus.max(r);
+        self.res.peak_train_gpus = self.res.peak_train_gpus.max(t);
+        self.res.usage_curve.push((self.now, r, t));
+    }
+
+    /// Run to completion, returning the results.
+    pub fn run(mut self) -> SimResult {
+        self.run_to_end()
+    }
+
+    pub fn run_to_end(&mut self) -> SimResult {
+        while let Some(e) = self.events.pop() {
+            debug_assert!(e.t >= self.now - 1e-9, "time went backwards");
+            self.now = e.t;
+            self.res.events_processed += 1;
+            match e.ev {
+                FEv::Arrival(i) => self.on_arrival(i),
+                FEv::Join(slot) => self.on_join(slot),
+                FEv::Recheck(gid, ver) => self.on_recheck(gid, ver),
+            }
+        }
+        self.integrate_cost();
+        self.res.makespan_s = self.now;
+        self.res.avg_cost_per_hour = if self.now > 0.0 {
+            self.res.cost_usd / (self.now / 3600.0)
+        } else {
+            0.0
+        };
+        std::mem::take(&mut self.res)
+    }
+
+    fn ensure_group(&mut self, gid: usize) {
+        if self.groups.len() <= gid {
+            self.groups.resize_with(gid + 1, FluidGroup::default);
+        }
+    }
+
+    fn on_arrival(&mut self, idx: usize) {
+        let spec = self.trace[idx].take().expect("arrival fires once per job");
+        let id = spec.id;
+        let d = self.sched.place(spec.clone());
+        self.rate_changed();
+
+        let group = self.sched.group(d.group_id).expect("placed group exists");
+        let gj = group.jobs().iter().find(|j| j.spec.id == id).expect("job in group");
+        let solo_est_iter_s = gj.t_solo();
+        let train_gpus = group.train_gpus();
+        let train_scale = if matches!(spec.phases, PhaseSpec::Direct { .. }) {
+            1.0
+        } else {
+            spec.n_train_gpus as f64 / train_gpus as f64
+        };
+        let t_sync = sync_time_s(
+            self.cfg.sync_scheme,
+            spec.model_bytes(),
+            train_gpus,
+            spec.n_roll_gpus,
+        );
+        let pool = crate::cluster::node::PoolKind::Rollout;
+        let cold = self.cfg.switch.cold_s(spec.params_b, pool);
+        let (warm_roll, warm_train) = if self.cfg.warm_starts {
+            (
+                self.cfg.switch.warm_s(spec.params_b, pool),
+                self.cfg.switch.warm_s(spec.params_b, crate::cluster::node::PoolKind::Train),
+            )
+        } else {
+            (
+                self.cfg.switch.cold_s(spec.params_b, pool),
+                self.cfg.switch.cold_s(spec.params_b, crate::cluster::node::PoolKind::Train),
+            )
+        };
+
+        // Replay the exact engine's per-job PRNG stream: one sample plus
+        // the two tail-shape forks per iteration, in the engine's order.
+        // The resulting per-iteration means (and solo_actual_s, which is
+        // accumulated with the engine's exact expression order) are
+        // bit-identical to the exact tier's realized values.
+        let n_eff = spec.n_iters.max(1);
+        let mut root = Rng::new(self.cfg.seed ^ (id as u64).wrapping_mul(0x9E37_79B9));
+        let mut rng = root.fork(1);
+        let mut sum_roll = 0.0;
+        let mut sum_train = 0.0;
+        let mut solo = 0.0;
+        for it in 0..n_eff {
+            let s = spec.sample_iter_with(&self.cfg.model, &mut rng, &mut self.scratch_lengths);
+            let tt = s.t_train * train_scale;
+            sum_roll += s.t_roll;
+            sum_train += tt;
+            solo += s.t_roll + tt + t_sync;
+            let _ = rng.fork(it as u64);
+            let _ = rng.fork(it as u64 ^ 0xabc);
+        }
+        let mean_roll = sum_roll / n_eff as f64;
+        let mean_train = sum_train / n_eff as f64;
+        let occ_roll = warm_roll + mean_roll;
+        let occ_train = warm_train + mean_train;
+
+        let slot = self.jobs.len();
+        self.jobs.push(FluidJob {
+            id,
+            gid: d.group_id,
+            roll_nodes: d.roll_nodes,
+            train_gpus,
+            occ_roll,
+            occ_train,
+            path: occ_roll + occ_train + t_sync,
+            n_eff,
+            done_iters: 0.0,
+            finished: false,
+            arrival_s: spec.arrival_s,
+            slo: spec.slo,
+            n_iters_raw: spec.n_iters,
+            solo_actual_s: solo,
+            solo_est_iter_s,
+            init_s: cold,
+        });
+
+        self.ensure_group(d.group_id);
+        // Phase-in wait: half the rollout occupancy other unfinished
+        // members already pin on this job's nodes (zero when it shares
+        // nothing — an isolated or disjointly-pinned join starts clean).
+        let mut shared = 0.0f64;
+        {
+            let g = &self.groups[d.group_id];
+            let me = &self.jobs[slot];
+            for &n in &me.roll_nodes {
+                let mut load = 0.0;
+                for &o in &g.admitted {
+                    if o != slot
+                        && !self.jobs[o].finished
+                        && self.jobs[o].roll_nodes.contains(&n)
+                    {
+                        load += self.jobs[o].occ_roll;
+                    }
+                }
+                shared = shared.max(load);
+            }
+        }
+        let delay = 0.5 * shared;
+        self.groups[d.group_id].admitted.push(slot);
+        self.push(self.now + cold + delay, FEv::Join(slot));
+    }
+
+    fn on_join(&mut self, slot: usize) {
+        let gid = self.jobs[slot].gid;
+        self.advance_group(gid);
+        let g = &mut self.groups[gid];
+        g.members.push(slot);
+        g.version += 1;
+        self.recompute_period(gid);
+        self.schedule_recheck(gid);
+    }
+
+    fn on_recheck(&mut self, gid: usize, version: u64) {
+        if self.groups[gid].version != version {
+            return; // stale prediction
+        }
+        self.advance_group(gid);
+        // Complete everything at (or within fp-epsilon of) its target, in
+        // join order — deterministic, mirroring the engine's event order.
+        let done: Vec<usize> = self.groups[gid]
+            .members
+            .iter()
+            .copied()
+            .filter(|&s| self.jobs[s].remaining() <= EPS_ITERS)
+            .collect();
+        for &slot in &done {
+            self.finish_job(slot);
+        }
+        let g = &mut self.groups[gid];
+        if !done.is_empty() {
+            g.members.retain(|s| !done.contains(s));
+            g.admitted.retain(|s| !done.contains(s));
+        }
+        g.version += 1;
+        self.recompute_period(gid);
+        self.schedule_recheck(gid);
+    }
+
+    fn finish_job(&mut self, slot: usize) {
+        let (id, outcome) = {
+            let j = &mut self.jobs[slot];
+            j.finished = true;
+            j.done_iters = j.n_eff as f64;
+            (
+                j.id,
+                JobOutcome {
+                    arrival_s: j.arrival_s,
+                    finish_s: self.now,
+                    solo_actual_s: j.solo_actual_s,
+                    solo_est_s: j.init_s + j.solo_est_iter_s * j.n_iters_raw as f64,
+                    slo: j.slo,
+                    iters: j.n_eff,
+                    migrations: 0,
+                },
+            )
+        };
+        self.res.outcomes.insert(id, outcome);
+        self.sched.complete(id);
+        self.rate_changed();
+    }
+
+    /// Advance a group's members from `last_t` to `now` at the current
+    /// rate, accruing progress-proportional busy time.
+    fn advance_group(&mut self, gid: usize) {
+        let dt = self.now - self.groups[gid].last_t;
+        self.groups[gid].last_t = self.now;
+        if dt <= 0.0 || self.groups[gid].members.is_empty() {
+            return;
+        }
+        let period = self.groups[gid].period;
+        if period <= 0.0 || !period.is_finite() {
+            return;
+        }
+        let di = dt / period;
+        let n_members = self.groups[gid].members.len();
+        for mi in 0..n_members {
+            let slot = self.groups[gid].members[mi];
+            let (di_j, occ_roll, occ_train, train_gpus, n_pins) = {
+                let j = &mut self.jobs[slot];
+                let di_j = di.min(j.remaining());
+                j.done_iters += di_j;
+                (di_j, j.occ_roll, j.occ_train, j.train_gpus, j.roll_nodes.len())
+            };
+            if di_j <= 0.0 {
+                continue;
+            }
+            self.res.roll_busy_gpu_s += di_j * occ_roll * (n_pins * GPUS_PER_NODE) as f64;
+            for pi in 0..n_pins {
+                let n = self.jobs[slot].roll_nodes[pi];
+                self.node_busy_add(gid, n, di_j * occ_roll * GPUS_PER_NODE as f64);
+            }
+            self.res.train_busy_gpu_s += di_j * occ_train * train_gpus as f64;
+            self.train_busy_add(gid, di_j * occ_train * train_gpus as f64);
+        }
+    }
+
+    /// Recompute the group's meta-iteration period `P` from its current
+    /// rotation (member paths, per-node rollout loads, the serial
+    /// training queue).
+    fn recompute_period(&mut self, gid: usize) {
+        let g = &self.groups[gid];
+        let mut period = 0.0f64;
+        let mut train_load = 0.0f64;
+        self.scratch_node_load.clear();
+        for &slot in &g.members {
+            let j = &self.jobs[slot];
+            period = period.max(j.path);
+            train_load += j.occ_train;
+            for (i, &n) in j.roll_nodes.iter().enumerate() {
+                if j.roll_nodes[..i].contains(&n) {
+                    continue; // duplicated pin counts once
+                }
+                if self.scratch_node_load.len() <= n {
+                    self.scratch_node_load.resize(n + 1, 0.0);
+                }
+                self.scratch_node_load[n] += j.occ_roll;
+            }
+        }
+        for &load in &self.scratch_node_load {
+            period = period.max(load);
+        }
+        self.groups[gid].period = period.max(train_load);
+    }
+
+    /// Queue the group's next predicted completion under the current
+    /// period (tagged with the version so membership changes void it).
+    fn schedule_recheck(&mut self, gid: usize) {
+        let g = &self.groups[gid];
+        if g.members.is_empty() {
+            return;
+        }
+        let mut rem_min = f64::INFINITY;
+        for &slot in &g.members {
+            rem_min = rem_min.min(self.jobs[slot].remaining());
+        }
+        let t = g.last_t + rem_min * g.period;
+        let version = g.version;
+        self.push(t, FEv::Recheck(gid, version));
+    }
+}
+
+/// Fluid counterpart of [`super::engine::run_pooled`]: rearm the
+/// worker's pooled fluid simulator or construct it on first use.
+pub fn run_pooled<S: GroupScheduler>(
+    slab: &mut Option<FluidSimulator<S>>,
+    cfg: SimConfig,
+    sched: S,
+    trace: Vec<JobSpec>,
+) -> SimResult {
+    match slab {
+        Some(sim) => sim.reset_with_trace(cfg, sched, trace),
+        None => *slab = Some(FluidSimulator::new(cfg, sched, trace)),
+    }
+    slab.as_mut().expect("slab populated").run_to_end()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::PhaseModel;
+    use crate::coordinator::inter::InterGroupScheduler;
+    use crate::sim::engine::{run_rollmux, run_sim, Fidelity, Simulator};
+
+    fn direct_job(
+        id: JobId,
+        t_roll: f64,
+        t_train: f64,
+        slo: f64,
+        iters: usize,
+        arrival: f64,
+    ) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("j{id}"),
+            arrival_s: arrival,
+            n_iters: iters,
+            slo,
+            n_roll_gpus: 8,
+            n_train_gpus: 8,
+            params_b: 7.0,
+            phases: PhaseSpec::Direct { t_roll, t_train, cv: 0.0 },
+        }
+    }
+
+    fn fluid_cfg() -> SimConfig {
+        SimConfig { fidelity: Fidelity::Fluid, ..Default::default() }
+    }
+
+    #[test]
+    fn solo_job_matches_exact_closed_form() {
+        // One job, one group: the fluid finish time is exactly
+        // cold + n x (warm_r + roll + warm_t + train + sync), which is
+        // also the exact engine's timeline.
+        let mk = || vec![direct_job(0, 100.0, 50.0, 2.0, 5, 0.0)];
+        let exact = run_rollmux(SimConfig::default(), mk());
+        let fluid = run_rollmux(fluid_cfg(), mk());
+        let a = exact.outcomes[&0].finish_s;
+        let b = fluid.outcomes[&0].finish_s;
+        assert!((a - b).abs() < 1e-6 * a.max(1.0), "exact {a} vs fluid {b}");
+        assert_eq!(fluid.outcomes[&0].iters, 5);
+        assert!((exact.makespan_s - fluid.makespan_s).abs() < 1e-6 * exact.makespan_s);
+        assert!((exact.cost_usd - fluid.cost_usd).abs() < 1e-6 * exact.cost_usd);
+    }
+
+    #[test]
+    fn solo_actual_is_bitwise_exact_replay() {
+        // The RNG replay must reproduce the engine's sampled solo time
+        // bit-for-bit — for stochastic Direct specs too.
+        let mk = || {
+            let mut a = direct_job(0, 120.0, 60.0, 3.0, 12, 0.0);
+            let mut b = direct_job(1, 90.0, 70.0, 3.0, 9, 40.0);
+            if let PhaseSpec::Direct { ref mut cv, .. } = a.phases {
+                *cv = 0.2;
+            }
+            if let PhaseSpec::Direct { ref mut cv, .. } = b.phases {
+                *cv = 0.1;
+            }
+            vec![a, b]
+        };
+        let exact = run_rollmux(SimConfig { seed: 5, ..Default::default() }, mk());
+        let fluid = run_rollmux(SimConfig { seed: 5, ..fluid_cfg() }, mk());
+        for id in [0usize, 1] {
+            assert_eq!(
+                exact.outcomes[&id].solo_actual_s.to_bits(),
+                fluid.outcomes[&id].solo_actual_s.to_bits(),
+                "job {id}: replayed RNG stream diverged"
+            );
+            assert_eq!(
+                exact.outcomes[&id].solo_est_s.to_bits(),
+                fluid.outcomes[&id].solo_est_s.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn multiplexed_pair_close_to_exact() {
+        let mk = || {
+            vec![
+                direct_job(0, 100.0, 80.0, 2.0, 40, 0.0),
+                direct_job(1, 80.0, 60.0, 2.0, 40, 0.0),
+            ]
+        };
+        let no_mig = |mut c: SimConfig| {
+            c.migration.enabled = false;
+            c
+        };
+        let exact = run_rollmux(no_mig(SimConfig::default()), mk());
+        let fluid = run_rollmux(no_mig(fluid_cfg()), mk());
+        assert_eq!(exact.outcomes.len(), fluid.outcomes.len());
+        assert!((exact.slo_attainment() - fluid.slo_attainment()).abs() <= 0.02 + 1e-12);
+        let rel = (exact.makespan_s - fluid.makespan_s).abs() / exact.makespan_s;
+        assert!(rel < 0.02, "makespan rel err {rel}");
+        // Busy integrals are progress-proportional: totals match.
+        let rel_busy =
+            (exact.roll_busy_gpu_s - fluid.roll_busy_gpu_s).abs() / exact.roll_busy_gpu_s;
+        assert!(rel_busy < 0.02, "roll busy rel err {rel_busy}");
+    }
+
+    #[test]
+    fn run_sim_dispatches_on_fidelity() {
+        let mk = || vec![direct_job(0, 60.0, 40.0, 2.0, 3, 0.0)];
+        let sched = InterGroupScheduler::new(PhaseModel::default());
+        let exact = run_sim(SimConfig::default(), sched, mk());
+        let sched = InterGroupScheduler::new(PhaseModel::default());
+        let fluid = run_sim(fluid_cfg(), sched, mk());
+        // The exact tier replays phase events; the fluid tier replays
+        // only arrival/join/recheck events — far fewer.
+        assert!(fluid.events_processed < exact.events_processed);
+        assert!(fluid.records.is_empty());
+        assert_eq!(fluid.outcomes.len(), 1);
+    }
+
+    #[test]
+    fn fluid_reset_matches_fresh() {
+        let mk = || {
+            vec![
+                direct_job(0, 100.0, 80.0, 2.0, 10, 0.0),
+                direct_job(1, 80.0, 60.0, 2.0, 10, 50.0),
+            ]
+        };
+        let fresh =
+            FluidSimulator::new(fluid_cfg(), InterGroupScheduler::new(PhaseModel::default()), mk())
+                .run();
+        let mut sim = FluidSimulator::new(
+            fluid_cfg(),
+            InterGroupScheduler::new(PhaseModel::default()),
+            vec![direct_job(7, 50.0, 30.0, 4.0, 3, 0.0)],
+        );
+        let _ = sim.run_to_end();
+        sim.reset_with_trace(fluid_cfg(), InterGroupScheduler::new(PhaseModel::default()), mk());
+        let reused = sim.run_to_end();
+        assert_eq!(fresh.makespan_s.to_bits(), reused.makespan_s.to_bits());
+        assert_eq!(fresh.cost_usd.to_bits(), reused.cost_usd.to_bits());
+        assert_eq!(fresh.events_processed, reused.events_processed);
+        for (id, a) in &fresh.outcomes {
+            let b = &reused.outcomes[id];
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn fluid_handles_simulator_unsupported_extras_gracefully() {
+        // record_gantt on: fluid has no phase events, records stay empty
+        // but outcomes are unaffected.
+        let mk = || vec![direct_job(0, 60.0, 40.0, 2.0, 4, 0.0)];
+        let mut cfg = fluid_cfg();
+        cfg.record_gantt = true;
+        let a = run_rollmux(cfg, mk());
+        let b = run_rollmux(fluid_cfg(), mk());
+        assert!(a.records.is_empty());
+        assert_eq!(
+            a.outcomes[&0].finish_s.to_bits(),
+            b.outcomes[&0].finish_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn exact_tier_untouched_by_fluid_module() {
+        // Simulator::new always runs exact regardless of cfg.fidelity
+        // (the documented contract).
+        let mk = || vec![direct_job(0, 60.0, 40.0, 2.0, 4, 0.0)];
+        let a = Simulator::new(
+            fluid_cfg(),
+            InterGroupScheduler::new(PhaseModel::default()),
+            mk(),
+        )
+        .run();
+        let b = Simulator::new(
+            SimConfig::default(),
+            InterGroupScheduler::new(PhaseModel::default()),
+            mk(),
+        )
+        .run();
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+}

@@ -8,10 +8,19 @@
 //! (DESIGN.md §2): every reported metric — provisioning cost, GPU usage,
 //! bubbles, SLO attainment — is computed from the event timeline.
 
+//! Two fidelity tiers (ISSUE 4, DESIGN.md §12): the event-exact engine
+//! ([`engine::Simulator`], bit-identical across queues/policies) and the
+//! fluid fast path ([`fluid::FluidSimulator`], bounded-error closed-form
+//! rates for fleet-scale sweeps). [`engine::run_sim`] dispatches on
+//! [`engine::Fidelity`].
+
 pub mod calendar;
 pub mod engine;
+pub mod fluid;
 pub mod gantt;
 
 pub use engine::{
-    EventQueueKind, GroupScheduler, PhaseKind, PhaseRecord, SimConfig, SimResult, Simulator,
+    run_sim, EventQueueKind, Fidelity, GroupScheduler, PhaseKind, PhaseRecord, SimConfig,
+    SimResult, Simulator,
 };
+pub use fluid::FluidSimulator;

@@ -45,9 +45,30 @@ where
     T: Send,
     F: Fn(usize, I) -> T + Sync,
 {
+    parallel_map_pooled(workers, items, || (), |_, i, item| f(i, item))
+}
+
+/// [`parallel_map_with`] with **per-worker scratch state**: each worker
+/// thread builds one `W` via `init` and hands `f` a `&mut` to it for
+/// every item it claims. The scratch never crosses threads (it is
+/// created and dropped on the worker), so `W` needs no `Send`/`Sync` —
+/// which is what lets sweep drivers keep a reusable
+/// `Simulator`/`FluidSimulator` per worker and rearm it with
+/// `reset_with_trace` between points instead of reconstructing the slabs
+/// (ISSUE 4). Determinism contract: `f` must give the same result for
+/// `(i, item)` regardless of scratch history — `reset_with_trace` is
+/// property-tested to guarantee exactly that for the simulators.
+pub fn parallel_map_pooled<W, I, T, FI, F>(workers: usize, items: Vec<I>, init: FI, f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    FI: Fn() -> W + Sync,
+    F: Fn(&mut W, usize, I) -> T + Sync,
+{
     let n = items.len();
     if workers <= 1 || n <= 1 {
-        return items.into_iter().enumerate().map(|(i, item)| f(i, item)).collect();
+        let mut w = init();
+        return items.into_iter().enumerate().map(|(i, item)| f(&mut w, i, item)).collect();
     }
     let workers = workers.min(n);
     let slots: Vec<Mutex<Option<I>>> = items.into_iter().map(|i| Mutex::new(Some(i))).collect();
@@ -55,14 +76,17 @@ where
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut w = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = slots[i].lock().unwrap().take().expect("slot claimed once");
+                    let r = f(&mut w, i, item);
+                    *out[i].lock().unwrap() = Some(r);
                 }
-                let item = slots[i].lock().unwrap().take().expect("slot claimed once");
-                let r = f(i, item);
-                *out[i].lock().unwrap() = Some(r);
             });
         }
     });
@@ -129,6 +153,31 @@ mod tests {
         uniq.dedup();
         assert_eq!(uniq.len(), a.len(), "per-run seeds must not collide");
         assert_ne!(run_seed(42, 0), run_seed(43, 0));
+    }
+
+    #[test]
+    fn pooled_scratch_is_per_worker_and_order_preserving() {
+        // Scratch accumulates across the items a worker claims; results
+        // must still land in input order and not depend on the scratch
+        // (the f-determinism contract the sweep drivers rely on).
+        let items: Vec<usize> = (0..32).collect();
+        let out = parallel_map_pooled(
+            4,
+            items,
+            Vec::<usize>::new,
+            |seen, i, x| {
+                assert_eq!(i, x);
+                seen.push(x); // per-worker history; never crosses threads
+                x * 3
+            },
+        );
+        assert_eq!(out, (0..32).map(|x| x * 3).collect::<Vec<_>>());
+        // Serial path: one scratch is reused across every item in order.
+        let out = parallel_map_pooled(1, (0..5usize).collect(), Vec::<usize>::new, |seen, _, x| {
+            seen.push(x);
+            seen.len()
+        });
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
     }
 
     #[test]

@@ -95,10 +95,23 @@ impl JobSpec {
 
     /// Sample one iteration's actual durations + tail shape.
     pub fn sample_iter(&self, model: &PhaseModel, rng: &mut Rng) -> IterSample {
+        let mut scratch = Vec::new();
+        self.sample_iter_with(model, rng, &mut scratch)
+    }
+
+    /// [`Self::sample_iter`] with a caller-owned scratch buffer for the
+    /// Roofline length batch, so the simulator's per-iteration hot loop
+    /// allocates nothing (ISSUE 4). Identical RNG stream and values.
+    pub fn sample_iter_with(
+        &self,
+        model: &PhaseModel,
+        rng: &mut Rng,
+        scratch: &mut Vec<f64>,
+    ) -> IterSample {
         match &self.phases {
             PhaseSpec::Roofline { inputs, lengths } => {
-                let batch = lengths.sample_batch(rng, inputs.batch.min(512));
-                let b: BatchLengths = summarize_batch(&batch);
+                lengths.sample_batch_into(rng, inputs.batch.min(512), scratch);
+                let b: BatchLengths = crate::workload::lengths::summarize_batch_in_place(scratch);
                 let mut w = *inputs;
                 w.gate_gen_len = b.max;
                 w.mean_gen_len = b.mean;

@@ -36,7 +36,22 @@ impl LengthDist {
 
     /// Draw a full rollout batch of lengths.
     pub fn sample_batch(&self, rng: &mut Rng, batch: usize) -> Vec<f64> {
-        (0..batch).map(|_| self.sample(rng)).collect()
+        let mut out = Vec::new();
+        self.sample_batch_into(rng, batch, &mut out);
+        out
+    }
+
+    /// Draw a full rollout batch into a caller-owned buffer (cleared
+    /// first). Same RNG stream and values as [`Self::sample_batch`] —
+    /// only the allocation moves to the caller, so the simulator's inner
+    /// loop can reuse one scratch `Vec` across every sampled iteration
+    /// (ISSUE 4; unit-tested below).
+    pub fn sample_batch_into(&self, rng: &mut Rng, batch: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(batch);
+        for _ in 0..batch {
+            out.push(self.sample(rng));
+        }
     }
 
     /// Monte-Carlo mean (cached callers should hold the result).
@@ -62,9 +77,18 @@ pub struct BatchLengths {
 pub const MIGRATION_THRESHOLD: f64 = 0.80;
 
 pub fn summarize_batch(lengths: &[f64]) -> BatchLengths {
-    assert!(!lengths.is_empty());
     let mut sorted: Vec<f64> = lengths.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    summarize_batch_in_place(&mut sorted)
+}
+
+/// [`summarize_batch`] without the defensive copy: sorts the buffer in
+/// place (the caller's scratch is refilled before its next use, so the
+/// reordering is invisible). Identical outputs — the sort runs over the
+/// same values under the same comparator.
+pub fn summarize_batch_in_place(lengths: &mut [f64]) -> BatchLengths {
+    assert!(!lengths.is_empty());
+    lengths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let sorted = &*lengths;
     let n = sorted.len();
     let max = sorted[n - 1];
     let mean = sorted.iter().sum::<f64>() / n as f64;
@@ -121,5 +145,34 @@ mod tests {
         let b = summarize_batch(&[7.0]);
         assert_eq!(b.max, 7.0);
         assert_eq!(b.tail_frac, 0.0);
+    }
+
+    /// ISSUE 4 satellite: the allocation-free batch path must consume the
+    /// identical RNG stream and produce the identical values as
+    /// `sample_batch` — and the in-place summary must match the copying
+    /// one bitwise.
+    #[test]
+    fn sample_batch_into_matches_sample_batch() {
+        let d = LengthDist::production(8192.0);
+        let mut a = Rng::new(23);
+        let mut b = Rng::new(23);
+        let mut scratch = Vec::new();
+        for round in 0..5 {
+            let batch = 64 + round * 17;
+            let owned = d.sample_batch(&mut a, batch);
+            d.sample_batch_into(&mut b, batch, &mut scratch);
+            assert_eq!(owned.len(), scratch.len());
+            for (x, y) in owned.iter().zip(&scratch) {
+                assert_eq!(x.to_bits(), y.to_bits(), "round {round}");
+            }
+            let s1 = summarize_batch(&owned);
+            let s2 = summarize_batch_in_place(&mut scratch);
+            assert_eq!(s1.max.to_bits(), s2.max.to_bits());
+            assert_eq!(s1.mean.to_bits(), s2.mean.to_bits());
+            assert_eq!(s1.threshold_len.to_bits(), s2.threshold_len.to_bits());
+            assert_eq!(s1.tail_frac.to_bits(), s2.tail_frac.to_bits());
+        }
+        // The two streams stayed in lock-step throughout.
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 }

@@ -113,6 +113,35 @@ pub fn philly_trace(seed: u64, n_jobs: usize, profile: SimProfile, slo: SloPolic
         .collect()
 }
 
+/// Synthetic fleet trace for the 100k-job what-if sweeps (`rollmux exp
+/// fleet`, ISSUE 4): Table-6 mixed job bodies, Poisson arrivals at
+/// `rate_scale x` a ~140 jobs/hour base rate, heavy-tailed durations
+/// (lognormal hours, mean ~6 h, clamped to 48 h). At `rate_scale = 1`
+/// and 100k jobs the fleet holds on the order of a thousand concurrent
+/// jobs — the regime the fluid tier exists for. Seeded + deterministic.
+pub fn fleet_trace(seed: u64, n_jobs: usize, rate_scale: f64) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed ^ 0xF1EE_7000);
+    let base_rate_per_h = 140.0 * rate_scale.max(1e-3);
+    let mean_gap_s = HOUR / base_rate_per_h;
+    let mut t = 0.0;
+    (0..n_jobs)
+        .map(|id| {
+            t += rng.exponential(mean_gap_s);
+            let slo = rng.uniform(1.0, 2.0);
+            let mut job = profiles::table6_job(id, SimProfile::Mixed, &mut rng, slo, t, 1);
+            let sigma: f64 = 0.9;
+            let mu = 6.0f64.ln() - 0.5 * sigma * sigma;
+            let dur_h = rng.lognormal(mu, sigma).clamp(0.25, 48.0);
+            let iter_s = match job.phases {
+                PhaseSpec::Direct { t_roll, t_train, .. } => t_roll + t_train,
+                _ => unreachable!("table6 bodies are Direct"),
+            };
+            job.n_iters = ((dur_h * HOUR) / iter_s).round().max(2.0) as usize;
+            job
+        })
+        .collect()
+}
+
 /// SLO assignment policies used in the §7.5 sensitivity study.
 #[derive(Clone, Copy, Debug)]
 pub enum SloPolicy {
@@ -187,6 +216,38 @@ mod tests {
         // Deterministic under the same seed.
         let again = philly_trace(7, 300, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
         assert_eq!(jobs.len(), again.len());
+        assert!(jobs.iter().zip(&again).all(|(a, b)| a.arrival_s == b.arrival_s));
+    }
+
+    #[test]
+    fn fleet_trace_statistics() {
+        let jobs = fleet_trace(5, 2_000, 1.0);
+        assert_eq!(jobs.len(), 2_000);
+        // Arrivals are cumulative (sorted) Poisson at ~140/h.
+        assert!(jobs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        let span_h = jobs.last().unwrap().arrival_s / HOUR;
+        let rate = 2_000.0 / span_h;
+        assert!((100.0..190.0).contains(&rate), "arrival rate {rate}/h");
+        // Doubling the rate scale halves the span.
+        let fast = fleet_trace(5, 2_000, 2.0);
+        let fast_span = fast.last().unwrap().arrival_s;
+        assert!(fast_span < jobs.last().unwrap().arrival_s * 0.75);
+        // Durations are heavy-tailed hours, bounded.
+        let durs: Vec<f64> = jobs
+            .iter()
+            .map(|j| {
+                let (tr, tt) = match j.phases {
+                    PhaseSpec::Direct { t_roll, t_train, .. } => (t_roll, t_train),
+                    _ => unreachable!(),
+                };
+                (tr + tt) * j.n_iters as f64 / HOUR
+            })
+            .collect();
+        let mean = crate::util::stats::mean(&durs);
+        assert!((3.0..12.0).contains(&mean), "mean duration {mean} h");
+        assert!(crate::util::stats::max(&durs) < 50.0);
+        // Deterministic under the same seed.
+        let again = fleet_trace(5, 2_000, 1.0);
         assert!(jobs.iter().zip(&again).all(|(a, b)| a.arrival_s == b.arrival_s));
     }
 

@@ -102,7 +102,7 @@ fn prop_round_robin_optimality() {
                 (g.t_meta() - g.t_cycle()).abs() < 1e-9,
                 "seed {seed}: meta-iteration exceeds cycle in unsaturated group"
             );
-            for id in g.job_ids() {
+            for id in g.job_ids_iter() {
                 let d = repetition_utilization_delta(g, id);
                 assert!(
                     d <= 1e-9,

@@ -1,0 +1,238 @@
+//! ISSUE 4 gates for the two-tier simulator (DESIGN.md §12).
+//!
+//! Three contracts:
+//!
+//! 1. **Fluid error bound.** On randomized multi-thousand-job traces
+//!    inside the fluid tier's documented soundness domain (deterministic
+//!    phase durations, migration off, tight SLO band → phase-locked
+//!    groups — see DESIGN.md §12 for why these delimit the domain), the
+//!    fluid tier tracks the exact engine within 2% relative error on
+//!    `slo_attainment`, `iters_per_kusd` and both bubble fractions.
+//! 2. **Exact replay anchor.** The fluid tier's per-job RNG replay
+//!    reproduces the exact engine's sampled `solo_actual_s` **bitwise**,
+//!    for every job, on any trace (including stochastic cv > 0 ones).
+//! 3. **Exact-tier stability.** The exact engine stays bit-identical to
+//!    its PR 3 behavior across all three intra policies with
+//!    `record_gantt` on/off, and `reset_with_trace` (the new slab-reuse
+//!    path every sweep driver now uses) is bit-identical to fresh
+//!    construction. The `fidelity` config field must not perturb a
+//!    directly-constructed `Simulator` at all.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::coordinator::orchestrator::IntraPolicyKind;
+use rollmux::sim::engine::{run_sim, Fidelity, SimConfig, SimResult, Simulator};
+use rollmux::util::rng::Rng;
+use rollmux::workload::job::{JobSpec, PhaseSpec};
+use rollmux::workload::profiles::SimProfile;
+use rollmux::workload::trace::{philly_trace, SloPolicy};
+
+/// Randomized trace inside the fluid soundness domain: deterministic
+/// Direct durations (cv = 0), balanced roll/train ratios (so packed
+/// groups run a dense serial training queue and phase-lock), a tight
+/// SLO band (bounds path heterogeneity inside any group), and enough
+/// iterations per job that one-cycle join transients amortize.
+fn locked_domain_trace(seed: u64, n_jobs: usize) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed ^ 0x51A6_D0E5);
+    let mut t = 0.0;
+    (0..n_jobs)
+        .map(|id| {
+            t += rng.exponential(45.0);
+            let t_roll = rng.uniform(90.0, 320.0);
+            let t_train = t_roll * rng.uniform(0.6, 0.95);
+            let slo = rng.uniform(1.15, 1.4);
+            let n_iters = rng.range(30, 90);
+            let params_b = [3.0, 7.0, 14.0][rng.range(0, 3)];
+            JobSpec {
+                id,
+                name: format!("fl{id}"),
+                arrival_s: t,
+                n_iters,
+                slo,
+                n_roll_gpus: 8,
+                n_train_gpus: 8,
+                params_b,
+                phases: PhaseSpec::Direct { t_roll, t_train, cv: 0.0 },
+            }
+        })
+        .collect()
+}
+
+fn run_tier(trace: Vec<JobSpec>, seed: u64, fidelity: Fidelity, migration: bool) -> SimResult {
+    let mut cfg = SimConfig { seed, fidelity, ..Default::default() };
+    cfg.migration.enabled = migration;
+    run_sim(cfg, InterGroupScheduler::with_max_group_size(PhaseModel::default(), 5), trace)
+}
+
+/// relative error with an absolute floor for near-zero denominators.
+fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let d = (a - b).abs();
+    d <= abs || d <= rel * a.abs().max(b.abs())
+}
+
+#[test]
+fn prop_fluid_error_bounded_on_soundness_domain() {
+    for &(seed, n_jobs) in &[(41u64, 2_000usize), (42, 600), (43, 600)] {
+        let trace = locked_domain_trace(seed, n_jobs);
+        let exact = run_tier(trace.clone(), seed, Fidelity::Exact, false);
+        let fluid = run_tier(trace, seed, Fidelity::Fluid, false);
+        let ctx = format!("seed {seed} ({n_jobs} jobs)");
+
+        assert_eq!(exact.outcomes.len(), fluid.outcomes.len(), "{ctx}: jobs lost");
+        for (id, oe) in &exact.outcomes {
+            let of = &fluid.outcomes[id];
+            assert_eq!(oe.iters, of.iters, "{ctx} job {id}: iteration counts");
+            // Contract 2: the replayed RNG stream is the engine's stream.
+            assert_eq!(
+                oe.solo_actual_s.to_bits(),
+                of.solo_actual_s.to_bits(),
+                "{ctx} job {id}: solo_actual replay diverged"
+            );
+            assert_eq!(
+                oe.solo_est_s.to_bits(),
+                of.solo_est_s.to_bits(),
+                "{ctx} job {id}: solo estimate diverged"
+            );
+        }
+
+        let (ae, af) = (exact.slo_attainment(), fluid.slo_attainment());
+        assert!(
+            (ae - af).abs() <= 0.02 + 1e-12,
+            "{ctx}: attainment exact {ae} vs fluid {af}"
+        );
+        let (ie, if_) = (exact.iters_per_kusd(), fluid.iters_per_kusd());
+        assert!(
+            close(ie, if_, 0.02, 1e-9),
+            "{ctx}: iters/kUSD exact {ie} vs fluid {if_}"
+        );
+        let (erb, etb) = exact.bubble_fracs();
+        let (frb, ftb) = fluid.bubble_fracs();
+        assert!(
+            close(erb, frb, 0.02, 0.01),
+            "{ctx}: rollout bubble exact {erb} vs fluid {frb}"
+        );
+        assert!(
+            close(etb, ftb, 0.02, 0.01),
+            "{ctx}: train bubble exact {etb} vs fluid {ftb}"
+        );
+    }
+}
+
+/// Outside the strict domain (stochastic durations cv = 0.15, migration
+/// on, the loose Unif(1,2) SLO band): the fluid tier must still land in
+/// the exact tier's neighborhood, and the per-job replay anchor holds
+/// exactly regardless.
+#[test]
+fn prop_fluid_sane_on_default_config() {
+    let trace = philly_trace(7, 150, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+    let exact = run_tier(trace.clone(), 7, Fidelity::Exact, true);
+    let fluid = run_tier(trace, 7, Fidelity::Fluid, true);
+    assert_eq!(exact.outcomes.len(), fluid.outcomes.len());
+    for (id, oe) in &exact.outcomes {
+        let of = &fluid.outcomes[id];
+        assert_eq!(
+            oe.solo_actual_s.to_bits(),
+            of.solo_actual_s.to_bits(),
+            "job {id}: replay anchor must hold under cv > 0 + migration"
+        );
+    }
+    assert!(
+        (exact.slo_attainment() - fluid.slo_attainment()).abs() <= 0.05,
+        "attainment exact {} vs fluid {}",
+        exact.slo_attainment(),
+        fluid.slo_attainment()
+    );
+    assert!(
+        close(exact.iters_per_kusd(), fluid.iters_per_kusd(), 0.10, 1e-9),
+        "iters/kUSD exact {} vs fluid {}",
+        exact.iters_per_kusd(),
+        fluid.iters_per_kusd()
+    );
+    let (erb, etb) = exact.bubble_fracs();
+    let (frb, ftb) = fluid.bubble_fracs();
+    assert!((erb - frb).abs() <= 0.05, "rollout bubble {erb} vs {frb}");
+    assert!((etb - ftb).abs() <= 0.05, "train bubble {etb} vs {ftb}");
+}
+
+/// Field-by-field bitwise comparison of everything except gantt records.
+fn assert_bitwise_equal_no_records(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.events_processed, b.events_processed, "{ctx}: event counts");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits(), "{ctx}: cost");
+    assert_eq!(a.roll_busy_gpu_s.to_bits(), b.roll_busy_gpu_s.to_bits(), "{ctx}: roll busy");
+    assert_eq!(a.train_busy_gpu_s.to_bits(), b.train_busy_gpu_s.to_bits(), "{ctx}: train busy");
+    assert_eq!(a.roll_prov_gpu_s.to_bits(), b.roll_prov_gpu_s.to_bits(), "{ctx}: roll prov");
+    assert_eq!(a.train_prov_gpu_s.to_bits(), b.train_prov_gpu_s.to_bits(), "{ctx}: train prov");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}: outcome count");
+    for (id, oa) in &a.outcomes {
+        let ob = &b.outcomes[id];
+        assert_eq!(oa.finish_s.to_bits(), ob.finish_s.to_bits(), "{ctx} job {id}: finish");
+        assert_eq!(
+            oa.solo_actual_s.to_bits(),
+            ob.solo_actual_s.to_bits(),
+            "{ctx} job {id}: solo"
+        );
+        assert_eq!(oa.iters, ob.iters, "{ctx} job {id}: iters");
+        assert_eq!(oa.migrations, ob.migrations, "{ctx} job {id}: migrations");
+    }
+    for (va, vb) in a.roll_node_busy_gpu_s.iter().zip(&b.roll_node_busy_gpu_s) {
+        for (x, y) in va.iter().zip(vb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: per-node busy");
+        }
+    }
+    for (x, y) in a.train_group_busy_gpu_s.iter().zip(&b.train_group_busy_gpu_s) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: per-group train busy");
+    }
+}
+
+/// Contract 3: the exact tier is bitwise stable across gantt on/off for
+/// every intra policy, `reset_with_trace` equals fresh construction, and
+/// the `fidelity` field is inert on a directly-constructed `Simulator`.
+#[test]
+fn prop_exact_tier_bitwise_stable_across_gantt_reset_and_fidelity() {
+    for seed in [3u64, 9] {
+        let mk = || philly_trace(seed, 40, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+        for intra in IntraPolicyKind::all() {
+            let ctx = format!("seed {seed} {intra:?}");
+            let mut on_cfg = SimConfig { seed, intra, record_gantt: true, ..Default::default() };
+            // fidelity is inert for a direct Simulator: set it to Fluid
+            // on one side on purpose.
+            on_cfg.fidelity = Fidelity::Fluid;
+            let off_cfg = SimConfig { seed, intra, record_gantt: false, ..Default::default() };
+
+            let on = Simulator::new(
+                on_cfg.clone(),
+                InterGroupScheduler::new(PhaseModel::default()),
+                mk(),
+            )
+            .run();
+            let off = Simulator::new(
+                off_cfg.clone(),
+                InterGroupScheduler::new(PhaseModel::default()),
+                mk(),
+            )
+            .run();
+            assert!(!on.records.is_empty(), "{ctx}: gantt on must record");
+            assert!(off.records.is_empty(), "{ctx}: gantt off must not record");
+            assert_bitwise_equal_no_records(&on, &off, &ctx);
+
+            // reset path: dirty a simulator with a different run, rearm
+            // it with the gantt-on config, expect bitwise-equal output.
+            let mut sim = Simulator::new(
+                off_cfg,
+                InterGroupScheduler::new(PhaseModel::default()),
+                philly_trace(seed + 100, 12, SimProfile::Mixed, SloPolicy::Uniform(1.5)),
+            );
+            let _ = sim.run_to_end();
+            sim.reset_with_trace(on_cfg, InterGroupScheduler::new(PhaseModel::default()), mk());
+            let reused = sim.run_to_end();
+            assert_bitwise_equal_no_records(&on, &reused, &format!("{ctx} (reset)"));
+            assert_eq!(on.records.len(), reused.records.len(), "{ctx}: reset records");
+            for (ra, rb) in on.records.iter().zip(&reused.records) {
+                assert_eq!(ra.start.to_bits(), rb.start.to_bits(), "{ctx}");
+                assert_eq!(ra.end.to_bits(), rb.end.to_bits(), "{ctx}");
+                assert_eq!(ra.job, rb.job, "{ctx}");
+            }
+        }
+    }
+}

@@ -4,10 +4,10 @@
 # across PRs; see EXPERIMENTS.md §Perf for methodology). ISSUE 1
 # produced BENCH_1.json, ISSUE 2 BENCH_2.json; the generation is now a
 # parameter so each PR appends its own file instead of editing this
-# script (ISSUE 3 default: BENCH_3.json).
+# script (ISSUE 4 default: BENCH_4.json).
 #
 # Usage: scripts/bench.sh [gen] [extra cargo args...]
-#   gen              bench generation number (default: 3 -> BENCH_3.json)
+#   gen              bench generation number (default: 4 -> BENCH_4.json)
 #   BENCH_OUT=path   override the output file entirely
 #
 # Each bench binary appends one JSON object per measurement to
@@ -16,7 +16,7 @@
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
-GEN="3"
+GEN="4"
 if [[ $# -ge 1 && "$1" =~ ^[0-9]+$ ]]; then
     GEN="$1"
     shift
@@ -30,7 +30,10 @@ cd "$ROOT"
 # ISSUE 3: scheduler_latency now includes the 20k-job fleet-scale
 # placement benches (indexed vs exhaustive reference — the >= 5x
 # acceptance pair) and simulator the events/s engine benches (calendar
-# queue vs binary heap).
+# queue vs binary heap). ISSUE 4 adds the gantt on/off events series and
+# the two-tier fleet series (fluid/fleet_100k, fluid-vs-exact at 10k —
+# the >= 10x acceptance pair; compare generations with
+# scripts/bench_compare.sh).
 cargo bench --bench scheduler_latency "$@"
 cargo bench --bench simulator "$@"
 # ISSUE 2: dispatch throughput of the extracted orchestration core, per

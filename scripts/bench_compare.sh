@@ -1,0 +1,75 @@
+#!/usr/bin/env bash
+# Compare two BENCH_N.json perf-trajectory files (scripts/bench.sh
+# output, schema rollmux-bench-v1) and FAIL when any entry shared by
+# both regressed more than the threshold (default 10%, override with
+# BENCH_REGRESSION_PCT).
+#
+# Usage: scripts/bench_compare.sh OLD.json NEW.json
+#   e.g. scripts/bench_compare.sh BENCH_3.json BENCH_4.json
+#
+# Entries are keyed by (bench, name). Per entry the first metric both
+# sides carry decides the verdict: rate metrics (ops_per_s, events_per_s,
+# phases_per_s, placements_per_s) regress when they DROP; mean_s (from
+# the warmup+multi-iteration harness) regresses when it RISES.
+# Single-sample `wall_s` entries are deliberately NOT gated — one timed()
+# run on a shared CI machine jitters well past any sane threshold — they
+# are trajectory data, not gates. Placeholder files (empty entries —
+# this container ships no toolchain) share nothing and pass benignly, so
+# the gate arms as soon as measured files exist on both sides; compare
+# like-for-like environments (same machine class for OLD and NEW).
+set -euo pipefail
+
+if [[ $# -ne 2 ]]; then
+    echo "usage: $0 OLD.json NEW.json" >&2
+    exit 2
+fi
+
+python3 - "$1" "$2" "${BENCH_REGRESSION_PCT:-10}" <<'PY'
+import json
+import sys
+
+old_path, new_path, thresh = sys.argv[1], sys.argv[2], float(sys.argv[3])
+
+def load(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    return {(e.get("bench", ""), e.get("name", "")): e for e in doc.get("entries", [])}
+
+old, new = load(old_path), load(new_path)
+shared = sorted(set(old) & set(new))
+if not shared:
+    print(f"bench_compare: no shared entries between {old_path} and {new_path} "
+          "(placeholder generation?); nothing to gate")
+    sys.exit(0)
+
+# (field, better-direction); wall_s is intentionally absent — see header.
+METRICS = (
+    ("ops_per_s", "high"),
+    ("events_per_s", "high"),
+    ("phases_per_s", "high"),
+    ("placements_per_s", "high"),
+    ("mean_s", "low"),
+)
+regressed = []
+for key in shared:
+    o, n = old[key], new[key]
+    for field, better in METRICS:
+        if field in o and field in n:
+            ov, nv = float(o[field]), float(n[field])
+            if ov <= 0:
+                break
+            delta_pct = (nv - ov) / ov * 100.0
+            loss_pct = -delta_pct if better == "high" else delta_pct
+            verdict = "REGRESSION" if loss_pct > thresh else "ok"
+            print(f"{key[0]}/{key[1]}: {field} {ov:.6g} -> {nv:.6g} "
+                  f"({delta_pct:+.1f}%) {verdict}")
+            if loss_pct > thresh:
+                regressed.append(key)
+            break
+
+if regressed:
+    print(f"bench_compare: {len(regressed)} shared entries regressed more than "
+          f"{thresh:.0f}%", file=sys.stderr)
+    sys.exit(1)
+print(f"bench_compare: {len(shared)} shared entries within {thresh:.0f}%")
+PY
