@@ -6,6 +6,7 @@
 use rollmux::cluster::PhaseModel;
 use rollmux::coordinator::inter::InterGroupScheduler;
 use rollmux::sim::engine::{run_sim, EventQueueKind, Fidelity, SimConfig, Simulator};
+use rollmux::sim::faults::FaultConfig;
 use rollmux::util::{bench, emit_bench_json, timed};
 use rollmux::workload::trace::{fleet_trace, philly_trace, production_trace, SloPolicy};
 use rollmux::workload::profiles::SimProfile;
@@ -163,6 +164,74 @@ fn main() {
         BIN,
         "fluid/fleet_100k",
         &[("wall_s", fluid100_s), ("events", fluid100.events_processed as f64)],
+    );
+
+    // ISSUE 5: the chaos series — the same fleet trace with failure
+    // injection (MTBF 1h, default crash/straggler mix). Measures the
+    // overhead the fault layer adds to the fluid fast path at 10k and
+    // 100k jobs (the fault-free numbers above are the baseline).
+    let mk_chaos_cfg = |fidelity| SimConfig {
+        seed: 7,
+        fidelity,
+        faults: Some(FaultConfig::with_mtbf(7, 3600.0)),
+        ..Default::default()
+    };
+    let (chaos10, chaos10_s) =
+        timed(|| run_sim(mk_chaos_cfg(Fidelity::Fluid), mk_sched(), trace10k.clone()));
+    println!(
+        "fluid/chaos_10k: {chaos10_s:.2}s wall, {} events, {} crashes, goodput {:.3}",
+        chaos10.events_processed,
+        chaos10.crashes,
+        chaos10.goodput_frac()
+    );
+    emit_bench_json(
+        BIN,
+        "fluid/chaos_10k",
+        &[
+            ("wall_s", chaos10_s),
+            ("events", chaos10.events_processed as f64),
+            ("crashes", chaos10.crashes as f64),
+            ("overhead_vs_faultfree", chaos10_s / fluid10_s.max(1e-12)),
+        ],
+    );
+    let (chaos100, chaos100_s) =
+        timed(|| run_sim(mk_chaos_cfg(Fidelity::Fluid), mk_sched(), trace100k.clone()));
+    println!(
+        "fluid/chaos_100k: {chaos100_s:.2}s wall, {} events, {} crashes, goodput {:.3}",
+        chaos100.events_processed,
+        chaos100.crashes,
+        chaos100.goodput_frac()
+    );
+    emit_bench_json(
+        BIN,
+        "fluid/chaos_100k",
+        &[
+            ("wall_s", chaos100_s),
+            ("events", chaos100.events_processed as f64),
+            ("crashes", chaos100.crashes as f64),
+            ("overhead_vs_faultfree", chaos100_s / fluid100_s.max(1e-12)),
+        ],
+    );
+    let (exact_chaos, exact_chaos_s) = timed(|| {
+        run_sim(
+            mk_chaos_cfg(Fidelity::Exact),
+            mk_sched(),
+            fleet_trace(7, 2_000, 1.0),
+        )
+    });
+    println!(
+        "exact/chaos_2k: {exact_chaos_s:.2}s wall, {} events, {} crashes",
+        exact_chaos.events_processed,
+        exact_chaos.crashes
+    );
+    emit_bench_json(
+        BIN,
+        "exact/chaos_2k",
+        &[
+            ("wall_s", exact_chaos_s),
+            ("events", exact_chaos.events_processed as f64),
+            ("crashes", exact_chaos.crashes as f64),
+        ],
     );
     if std::env::var("ROLLMUX_BENCH_EXACT_100K").is_ok_and(|v| v == "1") {
         let (exact100, exact100_s) =

@@ -31,10 +31,13 @@
 
 use std::collections::{BTreeMap, HashMap};
 
+use crate::cluster::node::{NodeId, HOST_MEM_GB};
 use crate::cluster::PhaseModel;
+use crate::memory::residency::ResidencyLedger;
 use crate::workload::job::{JobId, JobSpec};
 
 use super::group::{Group, GroupJob};
+use super::repair::{self, MemberFate, RepairOutcome};
 
 /// How a job was placed (paper Fig. 5).
 #[derive(Clone, Debug, PartialEq)]
@@ -182,6 +185,14 @@ pub struct InterGroupScheduler {
     scratch_gids: Vec<u32>,
     /// Scratch for the reference path's node ranking sort.
     scratch_by_load: Vec<(f64, usize)>,
+    /// Live mirror of every (group, rollout node) pin in host-DRAM GB —
+    /// the paper's §4.1 residency ledger, keyed by
+    /// [`Self::ledger_node`]. The chaos repair layer invalidates a
+    /// crashed node's pins through it (ISSUE 5); the per-node
+    /// feasibility math stays in `Group`'s caches (bit-identical
+    /// decisions), the ledger is the queryable source of truth for
+    /// *which jobs* are resident where.
+    ledger: ResidencyLedger,
 }
 
 impl InterGroupScheduler {
@@ -196,7 +207,42 @@ impl InterGroupScheduler {
             gid_to_idx: Vec::new(),
             scratch_gids: Vec::new(),
             scratch_by_load: Vec::new(),
+            ledger: ResidencyLedger::new(HOST_MEM_GB),
         }
+    }
+
+    /// The ledger's global node id for a group-local rollout node.
+    pub fn ledger_node(gid: usize, node: usize) -> NodeId {
+        debug_assert!(node < (1 << 20), "group-local node index out of range");
+        (gid << 20) | node
+    }
+
+    /// The residency ledger mirror (read-only; invariant-checked by the
+    /// chaos property tests after every crash/repair).
+    pub fn residency_ledger(&self) -> &ResidencyLedger {
+        &self.ledger
+    }
+
+    fn ledger_pin(&mut self, gid: usize, job: JobId, gb: f64, nodes: &[usize]) {
+        for (i, &n) in nodes.iter().enumerate() {
+            if nodes[..i].contains(&n) {
+                continue; // duplicated pin counts once (set semantics)
+            }
+            let ok = self.ledger.pin(Self::ledger_node(gid, n), job, gb);
+            debug_assert!(ok, "residency mirror refused a pin admission accepted");
+            let _ = ok;
+        }
+    }
+
+    fn ledger_unpin(&mut self, gid: usize, job: JobId, nodes: &[usize]) -> f64 {
+        let mut freed = 0.0;
+        for (i, &n) in nodes.iter().enumerate() {
+            if nodes[..i].contains(&n) {
+                continue;
+            }
+            freed += self.ledger.unpin(Self::ledger_node(gid, n), job);
+        }
+        freed
     }
 
     pub fn with_max_group_size(model: PhaseModel, cap: usize) -> Self {
@@ -219,7 +265,7 @@ impl InterGroupScheduler {
     /// Algorithm 1: place `spec`, mutate state, return the decision.
     /// Sub-linear candidate generation via the placement index.
     pub fn schedule(&mut self, spec: JobSpec) -> Decision {
-        self.place(spec, true)
+        self.place(spec, true, None)
     }
 
     /// The pre-index exhaustive scan (every live group, ascending id,
@@ -227,10 +273,15 @@ impl InterGroupScheduler {
     /// bench baseline. Decisions and state mutations are bit-identical to
     /// [`Self::schedule`] (property-tested).
     pub fn schedule_reference(&mut self, spec: JobSpec) -> Decision {
-        self.place(spec, false)
+        self.place(spec, false, None)
     }
 
-    fn place(&mut self, spec: JobSpec, indexed: bool) -> Decision {
+    /// `exclude`: a group id the scan must skip — spill re-placement
+    /// after a node crash excludes the damaged group so the evicted
+    /// member cannot land back on the node that just died (ISSUE 5).
+    /// `None` (every ordinary placement) is bit-identical to the pre-PR
+    /// path.
+    fn place(&mut self, spec: JobSpec, indexed: bool, exclude: Option<usize>) -> Decision {
         // One probe per distinct training-pool size: the DP-rescaled
         // estimates and sync time depend only on the group's train GPUs.
         // Keyed lookup (HashMap) replaces the historical linear probe
@@ -263,6 +314,9 @@ impl InterGroupScheduler {
 
         let mut best: Option<(f64, usize, Candidate)> = None; // (Δ, group idx, cand)
         'scan: for &gid in cands.iter() {
+            if exclude == Some(gid as usize) {
+                continue;
+            }
             let gi = self.gid_to_idx[gid as usize];
             let g = &self.groups[gi];
             // Line 4's cap companion: skip full groups.
@@ -309,7 +363,9 @@ impl InterGroupScheduler {
                 let mut job = probes.remove(&train_gpus).expect("winning group was probed");
                 job.roll_nodes = cand.roll_nodes.clone();
                 let jid = spec.id;
+                let mem_gb = spec.mem_roll_gb();
                 self.groups[gi].admit(job);
+                self.ledger_pin(gid, jid, mem_gb, &cand.roll_nodes);
                 self.job_group.insert(jid, gid);
                 self.index_refresh(gid);
                 Decision {
@@ -324,6 +380,7 @@ impl InterGroupScheduler {
                 let id = self.next_group_id;
                 self.next_group_id += 1;
                 let jid = spec.id;
+                let mem_gb = spec.mem_roll_gb();
                 let iso = Group::isolated(id, spec, &self.model);
                 let roll_nodes = iso.jobs()[0].roll_nodes.clone();
                 let idx = self.groups.len();
@@ -332,6 +389,7 @@ impl InterGroupScheduler {
                 }
                 self.gid_to_idx[id] = idx;
                 self.groups.push(iso);
+                self.ledger_pin(id, jid, mem_gb, &roll_nodes);
                 self.job_group.insert(jid, id);
                 self.index_refresh(id);
                 Decision {
@@ -353,29 +411,109 @@ impl InterGroupScheduler {
     pub fn complete_job(&mut self, job: JobId) {
         let Some(gid) = self.job_group.remove(&job) else { return };
         let gi = self.gid_to_idx[gid];
-        let emptied = {
-            let g = &mut self.groups[gi];
-            if g.retract(job).is_none() {
-                debug_assert!(false, "job map pointed at a group without the job");
-                return;
-            }
-            if g.is_empty() {
-                true
-            } else {
-                g.compact_trailing_nodes();
-                false
-            }
+        let Some(gj) = self.groups[gi].retract(job) else {
+            debug_assert!(false, "job map pointed at a group without the job");
+            return;
         };
-        if emptied {
-            self.index.remove(gid);
-            self.gid_to_idx[gid] = usize::MAX;
-            self.groups.remove(gi);
-            for i in gi..self.groups.len() {
-                self.gid_to_idx[self.groups[i].id] = i;
+        // Targeted ledger release: the retracted member's own pins, not
+        // an all-node sweep (unpin_all would walk every live node per
+        // completion at fleet scale).
+        self.ledger_unpin(gid, job, &gj.roll_nodes);
+        if self.groups[gi].is_empty() {
+            self.deprovision(gid);
+        } else {
+            self.groups[gi].compact_trailing_nodes();
+            self.index_refresh(gid);
+        }
+    }
+
+    /// Drop an emptied group: remove it from the index, invalidate its
+    /// positional entry, and fix up the groups behind it.
+    fn deprovision(&mut self, gid: usize) {
+        let gi = self.gid_to_idx[gid];
+        self.index.remove(gid);
+        self.gid_to_idx[gid] = usize::MAX;
+        self.groups.remove(gi);
+        for i in gi..self.groups.len() {
+            self.gid_to_idx[self.groups[i].id] = i;
+        }
+    }
+
+    /// Heal a group around a crashed rollout node (ISSUE 5, DESIGN.md
+    /// §13): invalidate the node's residency pins, then for every member
+    /// pinned to it — in admission order — either **repin** onto the
+    /// least-loaded surviving nodes (when the healed placement passes the
+    /// full Algorithm 1 feasibility check, [`repair::plan_repin`]) or
+    /// **spill** the member back through the inter-group scheduler with
+    /// the damaged group excluded. Returns `None` when the group id is no
+    /// longer live. The caller (either simulation tier) translates each
+    /// [`MemberFate`] into interrupts, cold restarts and re-dispatch.
+    pub fn repair_node_crash(&mut self, gid: usize, node: usize) -> Option<RepairOutcome> {
+        let gi = *self.gid_to_idx.get(gid)?;
+        if gi == usize::MAX {
+            return None;
+        }
+        // The crashed node's DRAM contents are gone, whole-node.
+        let mut freed_gb = self.ledger.evict_node(Self::ledger_node(gid, node));
+        let victims: Vec<JobId> = self.groups[gi]
+            .jobs()
+            .iter()
+            .filter(|j| j.roll_nodes.contains(&node))
+            .map(|j| j.spec.id)
+            .collect();
+        if victims.is_empty() {
+            return Some(RepairOutcome {
+                gid,
+                node,
+                fates: Vec::new(),
+                freed_gb,
+                group_deprovisioned: false,
+            });
+        }
+        // Keep the damaged group out of the index during surgery; it is
+        // re-indexed (or deprovisioned) once healing settles.
+        self.index.remove(gid);
+        let mut fates = Vec::with_capacity(victims.len());
+        for jid in victims {
+            let gi = self.gid_to_idx[gid];
+            let Some(job) = self.groups[gi].retract(jid) else {
+                debug_assert!(false, "victim vanished mid-repair");
+                continue;
+            };
+            // Release the member's surviving-node pins too: its
+            // checkpoint replay re-pins whatever the healed placement
+            // ends up using.
+            freed_gb += self.ledger_unpin(gid, jid, &job.roll_nodes);
+            self.job_group.remove(&jid);
+            match repair::plan_repin(&self.groups[gi], &job, node) {
+                Some(new_nodes) => {
+                    let mem_gb = job.spec.mem_roll_gb();
+                    let mut healed = job;
+                    healed.roll_nodes = new_nodes.clone();
+                    self.groups[gi].admit(healed);
+                    self.ledger_pin(gid, jid, mem_gb, &new_nodes);
+                    self.job_group.insert(jid, gid);
+                    fates.push(MemberFate::Repinned { job: jid, roll_nodes: new_nodes });
+                }
+                None => {
+                    // Algorithm 1 over the placement index, damaged
+                    // group excluded; pins are mirrored inside.
+                    let decision = self.place(job.spec.clone(), true, Some(gid));
+                    fates.push(MemberFate::Spilled { job: jid, decision });
+                }
             }
+        }
+        let group_deprovisioned = self.groups[self.gid_to_idx[gid]].is_empty();
+        if group_deprovisioned {
+            self.deprovision(gid);
         } else {
             self.index_refresh(gid);
         }
+        debug_assert!(
+            self.ledger.check_invariant(),
+            "residency invariant violated after crash/repair"
+        );
+        Some(RepairOutcome { gid, node, fates, freed_gb, group_deprovisioned })
     }
 
     /// Aggregate burn rate of all provisioned groups, $/h.
@@ -625,6 +763,132 @@ mod tests {
             }
         }
         assert_eq!(a.groups.len(), b.groups.len());
+    }
+
+    /// ISSUE 5: the residency-ledger mirror must agree with the Group
+    /// memory caches on every (group, node) through arbitrary
+    /// schedule/complete sequences, and empty out (node map included —
+    /// the satellite fix) once every job completes.
+    #[test]
+    fn ledger_mirrors_group_memory_and_empties_out() {
+        let mut s = InterGroupScheduler::new(PhaseModel::default());
+        let check_mirror = |s: &InterGroupScheduler| {
+            for g in &s.groups {
+                for n in 0..g.n_roll_nodes {
+                    let cached =
+                        s.residency_ledger().used_gb(InterGroupScheduler::ledger_node(g.id, n));
+                    let want = g.roll_node_mem(n);
+                    assert!(
+                        (cached - want).abs() < 1e-6,
+                        "group {} node {n}: ledger {cached} vs cache {want}",
+                        g.id
+                    );
+                }
+            }
+            assert!(s.residency_ledger().check_invariant());
+        };
+        for id in 0..40 {
+            let t_roll = 60.0 + (id % 5) as f64 * 30.0;
+            let t_train = 40.0 + (id % 3) as f64 * 25.0;
+            s.schedule(direct_job(id, t_roll, t_train, 1.5 + (id % 4) as f64 * 0.5));
+            if id >= 10 && id % 4 == 0 {
+                s.complete_job(id - 10);
+            }
+            check_mirror(&s);
+        }
+        for id in 0..40 {
+            s.complete_job(id);
+        }
+        assert!(s.groups.is_empty());
+        assert_eq!(
+            s.residency_ledger().tracked_nodes(),
+            0,
+            "full release must leave no node entries behind (ISSUE 5 satellite)"
+        );
+    }
+
+    /// ISSUE 5: crash healing — a feasible member repins onto the
+    /// surviving node, an infeasible one spills to a fresh group, pins
+    /// move with them, and the residency invariant holds throughout.
+    #[test]
+    fn repair_repins_feasible_member_and_spills_infeasible() {
+        let mut s = InterGroupScheduler::new(PhaseModel::default());
+        // j0 and j1 are rollout-heavy: j1 lands on a scaled fresh node.
+        s.schedule(direct_job(0, 200.0, 30.0, 5.0));
+        let d1 = s.schedule(direct_job(1, 200.0, 30.0, 5.0));
+        assert!(matches!(d1.kind, PlacementKind::RolloutScale { .. }), "{d1:?}");
+        // j2 is light: packs onto the least-loaded node (node 0).
+        let d2 = s.schedule(direct_job(2, 20.0, 10.0, 8.0));
+        assert_eq!(d2.kind, PlacementKind::DirectPack);
+        assert_eq!(d2.roll_nodes, vec![0]);
+        assert_eq!(s.groups.len(), 1);
+        let gid = s.groups[0].id;
+
+        let out = s.repair_node_crash(gid, 0).expect("group is live");
+        assert_eq!(out.gid, gid);
+        assert_eq!(out.node, 0);
+        assert!(out.freed_gb > 0.0, "the crash must invalidate pinned state");
+        assert!(!out.group_deprovisioned);
+        assert_eq!(out.fates.len(), 2, "both node-0 residents are victims");
+        // j0 (200s rollout) cannot move onto node 1 (j1's 200s already
+        // there) without blowing the cycle → spilled to a fresh group.
+        match &out.fates[0] {
+            MemberFate::Spilled { job, decision } => {
+                assert_eq!(*job, 0);
+                assert_eq!(decision.kind, PlacementKind::Isolated);
+                assert_ne!(decision.group_id, gid, "spill must leave the damaged group");
+            }
+            other => panic!("expected j0 spilled, got {other:?}"),
+        }
+        // j2 (20s) fits node 1 → healed in place.
+        match &out.fates[1] {
+            MemberFate::Repinned { job, roll_nodes } => {
+                assert_eq!(*job, 2);
+                assert_eq!(roll_nodes, &vec![1], "healed pin avoids the dead node");
+            }
+            other => panic!("expected j2 repinned, got {other:?}"),
+        }
+        // State is consistent: j1+j2 in the damaged group, j0 elsewhere.
+        assert_eq!(s.find_group(1).unwrap().id, gid);
+        assert_eq!(s.find_group(2).unwrap().id, gid);
+        assert_ne!(s.find_group(0).unwrap().id, gid);
+        assert!(s.residency_ledger().check_invariant());
+        assert_eq!(
+            s.residency_ledger().used_gb(InterGroupScheduler::ledger_node(gid, 0)),
+            0.0,
+            "no pins may remain on the crashed node"
+        );
+        for g in &s.groups {
+            assert!(g.slo_ok() && g.residency_ok(), "healed groups stay feasible");
+            assert!(g.t_load() <= g.t_cycle() + 1e-9);
+        }
+
+        // Crashing the (now resident-free) node again heals vacuously.
+        let again = s.repair_node_crash(gid, 0).expect("group still live");
+        assert!(again.fates.is_empty());
+        assert_eq!(again.freed_gb, 0.0);
+    }
+
+    /// ISSUE 5: a single-node isolated group cannot heal in place — the
+    /// member spills and the emptied group deprovisions.
+    #[test]
+    fn repair_deprovisions_emptied_group() {
+        let mut s = InterGroupScheduler::new(PhaseModel::default());
+        let d0 = s.schedule(direct_job(0, 100.0, 80.0, 2.0));
+        let gid = d0.group_id;
+        let out = s.repair_node_crash(gid, 0).expect("live group");
+        assert!(out.group_deprovisioned);
+        assert_eq!(out.fates.len(), 1);
+        let MemberFate::Spilled { job, decision } = &out.fates[0] else {
+            panic!("single-node member must spill");
+        };
+        assert_eq!(*job, 0);
+        assert_ne!(decision.group_id, gid);
+        assert!(s.group_by_id(gid).is_none(), "damaged group deprovisioned");
+        assert_eq!(s.find_group(0).unwrap().id, decision.group_id);
+        assert!(s.residency_ledger().check_invariant());
+        // Dead group ids are never resurrected.
+        assert!(s.repair_node_crash(gid, 0).is_none());
     }
 
     #[test]

@@ -7,18 +7,23 @@
 //!  * [`orchestrator`] — the group-local phase orchestration core with
 //!    pluggable dispatch policies (DESIGN.md §10), shared by the
 //!    discrete-event simulator and the wall-clock runtime driver;
-//!  * [`migration`] — long-tail migration (§4.3, Fig. 7).
+//!  * [`migration`] — long-tail migration (§4.3, Fig. 7);
+//!  * [`repair`]    — elastic group healing around node crashes
+//!    (ISSUE 5, DESIGN.md §13): repin / spill planning, victim
+//!    resolution, checkpoint-aware recovery delays.
 
 pub mod group;
 pub mod inter;
 pub mod intra;
 pub mod migration;
 pub mod orchestrator;
+pub mod repair;
 
 pub use group::{Group, GroupJob};
 pub use inter::{Decision, InterGroupScheduler, PlacementKind};
 pub use intra::RoundRobin;
 pub use migration::{MigrationPlan, MigrationPolicy};
+pub use repair::{MemberFate, RepairOutcome};
 pub use orchestrator::{
     CorePhase, GroupOrchestrator, IntraPolicy, IntraPolicyKind, PhaseStart, QueuedPhase,
     SloSlackPriority, StrictRoundRobin, WorkConservingFifo,

@@ -230,6 +230,12 @@ pub struct PhaseStart {
     pub kind: CorePhase,
 }
 
+/// Sentinel slot marking a rollout node held DOWN by the fault layer
+/// (ISSUE 5): `node_free` sees it occupied, so no rollout dispatches on
+/// a crashed node until its repair completes. Real driver slots are slab
+/// indices and can never reach this value.
+const DOWN_SLOT: usize = usize::MAX;
+
 /// Group-local phase orchestration: queue + occupancy + policy.
 pub struct GroupOrchestrator {
     policy: Box<dyn IntraPolicy>,
@@ -238,7 +244,8 @@ pub struct GroupOrchestrator {
     /// decisions).
     members: HashMap<usize, Member>,
     /// roll_busy[node] = Some(slot) while a phase (or its migrated tail)
-    /// holds the node; indices past the end are free (pool growth is
+    /// holds the node — or `Some(DOWN_SLOT)` while the fault layer holds
+    /// it down; indices past the end are free (pool growth is
     /// lazy), mirroring the engine's historical occupancy map.
     roll_busy: Vec<Option<usize>>,
     train_busy: Option<usize>,
@@ -364,6 +371,54 @@ impl GroupOrchestrator {
         if self.train_busy == Some(slot) {
             self.train_busy = None;
         }
+    }
+
+    /// Drop every queued (not yet dispatched) request of a member — the
+    /// fault layer cancels a crash victim's pending phases before
+    /// scheduling its checkpoint replay (ISSUE 5).
+    pub fn cancel_queued(&mut self, slot: usize) {
+        self.queue.retain(|r| r.slot != slot);
+    }
+
+    /// Re-pin a member after elastic repair: its future rollouts contend
+    /// for the healed node set. The member must hold no rollout nodes
+    /// (the fault layer releases them first).
+    pub fn set_roll_nodes(&mut self, slot: usize, roll_nodes: Vec<usize>) {
+        if let Some(m) = self.members.get_mut(&slot) {
+            m.roll_nodes = roll_nodes;
+        }
+    }
+
+    /// Hold a rollout node DOWN (node crash): no rollout dispatches on it
+    /// until [`Self::set_node_up`]. Queued requests pinned to it simply
+    /// wait — modeling a runtime that blocks on dead hardware while the
+    /// repair is in flight.
+    pub fn set_node_down(&mut self, n: usize) {
+        if self.roll_busy.len() <= n {
+            self.roll_busy.resize(n + 1, None);
+        }
+        // A node still held by a live phase is left alone: that happens
+        // only under schedulers without repair support (the fault layer
+        // releases victims first otherwise), and stealing the cell would
+        // wedge the holder's release.
+        if self.roll_busy[n].is_none() {
+            self.roll_busy[n] = Some(DOWN_SLOT);
+        }
+    }
+
+    /// Repair completed: the node rejoins the pool (callers re-drain the
+    /// dispatch loop afterwards).
+    pub fn set_node_up(&mut self, n: usize) {
+        if let Some(b) = self.roll_busy.get_mut(n) {
+            if *b == Some(DOWN_SLOT) {
+                *b = None;
+            }
+        }
+    }
+
+    /// Is the node currently held down by the fault layer?
+    pub fn node_down(&self, n: usize) -> bool {
+        matches!(self.roll_busy.get(n), Some(&Some(s)) if s == DOWN_SLOT)
     }
 
     /// Is any *queued* rollout pinned to a node `slot` also pins? (The
@@ -538,6 +593,49 @@ mod tests {
         assert_eq!(starts.len(), 1);
         assert_eq!(starts[0].slot, 1);
         assert!(!orc.has_rollout_waiter_sharing(0));
+    }
+
+    #[test]
+    fn down_node_blocks_dispatch_until_up() {
+        let mut orc = GroupOrchestrator::new(IntraPolicyKind::WorkConservingFifo);
+        orc.admit(0, 10, vec![0], 100.0);
+        orc.set_node_down(0);
+        assert!(orc.node_down(0));
+        orc.enqueue(0, CorePhase::Rollout);
+        assert!(drain(&mut orc).is_empty(), "rollout must wait on a dead node");
+        // The training pool is unaffected by rollout-node faults.
+        orc.enqueue(0, CorePhase::Train);
+        assert_eq!(drain(&mut orc).len(), 1);
+        orc.release_train(0);
+        orc.set_node_up(0);
+        assert!(!orc.node_down(0));
+        let starts = drain(&mut orc);
+        assert_eq!(starts.len(), 1);
+        assert_eq!(starts[0].kind, CorePhase::Rollout);
+    }
+
+    #[test]
+    fn cancel_queued_and_repin_support_crash_recovery() {
+        let mut orc = GroupOrchestrator::new(IntraPolicyKind::WorkConservingFifo);
+        orc.admit(0, 10, vec![0], 100.0);
+        orc.admit(1, 11, vec![0], 100.0);
+        orc.enqueue(0, CorePhase::Rollout);
+        assert_eq!(drain(&mut orc).len(), 1);
+        orc.enqueue(1, CorePhase::Rollout);
+        orc.enqueue(1, CorePhase::Train);
+        // Slot 1 crashes: cancel its queued work, re-pin it to node 1.
+        orc.cancel_queued(1);
+        assert_eq!(orc.queue_len(), 0);
+        orc.set_roll_nodes(1, vec![1]);
+        // Its replayed rollout now dispatches on the healed pin even
+        // while slot 0 still holds node 0.
+        orc.enqueue(1, CorePhase::Rollout);
+        let starts = drain(&mut orc);
+        assert_eq!(starts, vec![PhaseStart { slot: 1, job: 11, kind: CorePhase::Rollout }]);
+        // complete() after cancel passes its queue-drained debug assert.
+        orc.release_rollout(1);
+        orc.complete(1);
+        assert_eq!(orc.member_count(), 1);
     }
 
     #[test]

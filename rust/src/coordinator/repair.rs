@@ -1,0 +1,280 @@
+//! Elastic group repair — healing a co-execution group around a lost
+//! rollout node (ISSUE 5, DESIGN.md §13).
+//!
+//! A node crash destroys the host-DRAM residency that makes warm starts
+//! possible: every member pinned to the node loses its cached state and
+//! must cold-restart (the `memory::switching` cold path). The *group*,
+//! however, can usually survive — this module plans how:
+//!
+//!  1. **Repin.** Move the member's lost pin(s) onto the least-loaded
+//!     surviving nodes of the same group, provided the healed placement
+//!     still satisfies every Algorithm 1 constraint (per-node load within
+//!     the cycle, residency, all member SLOs — checked through the same
+//!     [`Group::evaluate_admit`] the admission path uses). When the
+//!     migration policy is enabled, the consolidation additionally pays
+//!     the §4.3 `migrate_cost_s` pause (live KV/state of surviving shards
+//!     moves instead of being re-fetched) — "migrate when the plan says
+//!     it pays".
+//!  2. **Spill.** When the damaged group can no longer hold the member,
+//!     it is retracted and re-placed through the ordinary inter-group
+//!     scheduler (Algorithm 1 over the placement index), with the damaged
+//!     group excluded — possibly landing in another group or a fresh
+//!     isolated one.
+//!
+//! Recovery is **checkpoint-aware**: jobs checkpoint at iteration
+//! boundaries (the sync phase publishes weights), so a healed member
+//! replays its in-flight iteration rather than restarting the job. The
+//! recovery delay both tiers charge is [`recovery_delay_s`].
+//!
+//! The actual group surgery lives in
+//! [`crate::coordinator::inter::InterGroupScheduler::repair_node_crash`]
+//! (it needs the scheduler's private index/ledger state); this module
+//! holds the pure planning pieces shared by both simulation tiers.
+
+use crate::cluster::node::PoolKind;
+use crate::coordinator::group::{Group, GroupJob};
+use crate::coordinator::inter::Decision;
+use crate::coordinator::migration::MigrationPolicy;
+use crate::memory::switching::SwitchModel;
+use crate::workload::job::JobId;
+
+/// What happened to one member of a damaged group.
+#[derive(Clone, Debug)]
+pub enum MemberFate {
+    /// Healed in place: the member stays in its group on new pins (its
+    /// state on the dead node is lost — it still cold-restarts).
+    Repinned { job: JobId, roll_nodes: Vec<usize> },
+    /// Evicted: the group could no longer hold the member; it was
+    /// re-placed through Algorithm 1 (damaged group excluded).
+    Spilled { job: JobId, decision: Decision },
+}
+
+impl MemberFate {
+    pub fn job(&self) -> JobId {
+        match self {
+            MemberFate::Repinned { job, .. } | MemberFate::Spilled { job, .. } => *job,
+        }
+    }
+}
+
+/// The outcome of healing one node crash, returned by
+/// `InterGroupScheduler::repair_node_crash` and consumed by both
+/// simulation tiers (which translate each fate into engine-level
+/// interrupts, cold restarts and re-dispatch).
+#[derive(Clone, Debug)]
+pub struct RepairOutcome {
+    /// The damaged group and its crashed group-local rollout node.
+    pub gid: usize,
+    pub node: usize,
+    /// Per-victim fates, in admission order (deterministic).
+    pub fates: Vec<MemberFate>,
+    /// Host-DRAM GB the crash invalidated in the residency ledger.
+    pub freed_gb: f64,
+    /// True when the damaged group emptied out and was deprovisioned.
+    pub group_deprovisioned: bool,
+}
+
+/// Resolve an opaque victim draw onto the currently provisioned rollout
+/// node set: groups in ascending-id order (the scheduler's `groups()`
+/// slice order), nodes in group-local order. Deterministic given the
+/// scheduler state; `None` when nothing is provisioned.
+pub fn pick_victim(groups: &[Group], victim: u64) -> Option<(usize, usize)> {
+    let total: usize = groups.iter().map(|g| g.n_roll_nodes).sum();
+    if total == 0 {
+        return None;
+    }
+    let mut idx = (victim % total as u64) as usize;
+    for g in groups {
+        if idx < g.n_roll_nodes {
+            return Some((g.id, idx));
+        }
+        idx -= g.n_roll_nodes;
+    }
+    None
+}
+
+/// Plan replacement pins for a member that lost `dead`: keep its
+/// surviving pins, fill the gap from the group's least-loaded surviving
+/// nodes, and accept only if the healed placement passes the full
+/// admission feasibility check. `g` must already have the member
+/// retracted (the caller is mid-surgery). Returns the healed pin list,
+/// or `None` when the group cannot hold the member any more (→ spill).
+pub fn plan_repin(g: &Group, member: &GroupJob, dead: usize) -> Option<Vec<usize>> {
+    // Unique pins, preserving order (duplicated pins count once — the
+    // same set semantics Group's caches use).
+    let mut pins: Vec<usize> = Vec::with_capacity(member.roll_nodes.len());
+    for &n in &member.roll_nodes {
+        if !pins.contains(&n) {
+            pins.push(n);
+        }
+    }
+    let k = pins.len();
+    pins.retain(|&n| n != dead);
+    let needed = k - pins.len();
+    if needed == 0 {
+        // Not actually pinned to the dead node; nothing to heal.
+        return Some(pins);
+    }
+    // Fill from the maintained least-loaded order, skipping the dead
+    // node and nodes the member already holds.
+    for &n in g.nodes_by_load() {
+        if pins.len() >= k {
+            break;
+        }
+        let n = n as usize;
+        if n == dead || pins.contains(&n) {
+            continue;
+        }
+        pins.push(n);
+    }
+    if pins.len() < k {
+        return None; // group too small to re-home the lost pins
+    }
+    g.evaluate_admit(member, &pins, 0).map(|_| pins)
+}
+
+/// The recovery delay a healed member pays before replaying its
+/// in-flight iteration: the cold-restart path (its host-DRAM state on
+/// the crashed node is gone — weights re-fetched, control plane
+/// rebuilt), plus the §4.3 consolidation pause when the member healed in
+/// place with migration enabled (surviving shards move live instead of
+/// idling through a second fetch).
+pub fn recovery_delay_s(
+    switch: &SwitchModel,
+    migration: &MigrationPolicy,
+    params_b: f64,
+    repinned: bool,
+) -> f64 {
+    let cold = switch.cold_s(params_b, PoolKind::Rollout);
+    if repinned && migration.enabled {
+        cold + migration.migrate_cost_s
+    } else {
+        cold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::PhaseModel;
+    use crate::workload::job::{JobSpec, PhaseSpec};
+
+    fn direct_job(id: JobId, t_roll: f64, t_train: f64, slo: f64) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("j{id}"),
+            arrival_s: 0.0,
+            n_iters: 10,
+            slo,
+            n_roll_gpus: 8,
+            n_train_gpus: 8,
+            params_b: 7.0,
+            phases: PhaseSpec::Direct { t_roll, t_train, cv: 0.0 },
+        }
+    }
+
+    #[test]
+    fn pick_victim_is_deterministic_and_in_range() {
+        let model = PhaseModel::default();
+        let mut big = direct_job(0, 300.0, 150.0, 4.0);
+        big.n_roll_gpus = 24; // 3 rollout nodes
+        let groups = vec![
+            Group::isolated(0, big, &model),
+            Group::isolated(3, direct_job(1, 100.0, 80.0, 2.0), &model),
+        ];
+        // 4 provisioned rollout nodes total: 3 in group 0, 1 in group 3.
+        for r in 0..16u64 {
+            let (gid, node) = pick_victim(&groups, r).unwrap();
+            match r % 4 {
+                0 => assert_eq!((gid, node), (0, 0)),
+                1 => assert_eq!((gid, node), (0, 1)),
+                2 => assert_eq!((gid, node), (0, 2)),
+                _ => assert_eq!((gid, node), (3, 0)),
+            }
+        }
+        assert_eq!(pick_victim(&[], 5), None);
+    }
+
+    #[test]
+    fn plan_repin_moves_pin_to_least_loaded_survivor() {
+        let model = PhaseModel::default();
+        let mut big = direct_job(0, 300.0, 150.0, 4.0);
+        big.n_roll_gpus = 24;
+        big.n_train_gpus = 16;
+        let mut g = Group::isolated(0, big, &model);
+        let train_gpus = g.train_gpus();
+        // A small member pinned to node 1 — then node 1 dies.
+        let member = GroupJob::new(direct_job(1, 60.0, 20.0, 6.0), &model, vec![1], train_gpus);
+        g.admit(member.clone());
+        let retracted = g.retract(1).unwrap();
+        let healed = plan_repin(&g, &retracted, 1).expect("group can re-home the member");
+        assert_eq!(healed.len(), 1);
+        assert_ne!(healed[0], 1, "healed pin must avoid the dead node");
+        assert!(healed[0] < g.n_roll_nodes);
+    }
+
+    #[test]
+    fn plan_repin_keeps_surviving_pins() {
+        let model = PhaseModel::default();
+        let mut big = direct_job(0, 300.0, 100.0, 4.0);
+        big.n_roll_gpus = 32; // 4 nodes
+        big.n_train_gpus = 16;
+        let mut g = Group::isolated(0, big, &model);
+        let train_gpus = g.train_gpus();
+        let mut small = direct_job(1, 80.0, 20.0, 6.0);
+        small.n_roll_gpus = 16; // pins 2 nodes
+        let member = GroupJob::new(small, &model, vec![0, 2], train_gpus);
+        g.admit(member);
+        let retracted = g.retract(1).unwrap();
+        let healed = plan_repin(&g, &retracted, 2).expect("heals");
+        assert_eq!(healed.len(), 2);
+        assert!(healed.contains(&0), "surviving pin kept");
+        assert!(!healed.contains(&2), "dead node avoided");
+    }
+
+    #[test]
+    fn single_node_group_cannot_heal() {
+        let model = PhaseModel::default();
+        let mut g = Group::isolated(0, direct_job(0, 100.0, 80.0, 2.0), &model);
+        assert_eq!(g.n_roll_nodes, 1);
+        let retracted = g.retract(0).unwrap();
+        assert_eq!(
+            plan_repin(&g, &retracted, 0),
+            None,
+            "no surviving node to re-home onto → spill"
+        );
+    }
+
+    #[test]
+    fn infeasible_heal_spills() {
+        // Two saturating members on node 0; node 1 dies under a third
+        // member whose load cannot move onto node 0 without blowing the
+        // cycle → plan_repin must refuse.
+        let model = PhaseModel::default();
+        let mut big = direct_job(0, 200.0, 40.0, 1.3);
+        big.n_roll_gpus = 16; // 2 nodes
+        let mut g = Group::isolated(0, big, &model);
+        let train_gpus = g.train_gpus();
+        let heavy = GroupJob::new(direct_job(1, 200.0, 10.0, 1.3), &model, vec![1], train_gpus);
+        g.admit(heavy);
+        let retracted = g.retract(1).unwrap();
+        // Node 0 already carries the big job's 200s rollout; adding
+        // another 200s exceeds the ~260s cycle.
+        assert_eq!(plan_repin(&g, &retracted, 1), None);
+    }
+
+    #[test]
+    fn recovery_delay_charges_cold_and_optional_migration() {
+        let sw = SwitchModel::default();
+        let mig_on = MigrationPolicy::default();
+        let mig_off = MigrationPolicy { enabled: false, ..Default::default() };
+        let cold = sw.cold_s(7.0, PoolKind::Rollout);
+        let d_spill = recovery_delay_s(&sw, &mig_on, 7.0, false);
+        let d_repin = recovery_delay_s(&sw, &mig_on, 7.0, true);
+        let d_repin_off = recovery_delay_s(&sw, &mig_off, 7.0, true);
+        assert!((d_spill - cold).abs() < 1e-9);
+        assert!((d_repin - (cold + mig_on.migrate_cost_s)).abs() < 1e-9);
+        assert!((d_repin_off - cold).abs() < 1e-9);
+        assert!(d_repin > d_spill, "in-place heal adds the consolidation pause");
+    }
+}

@@ -1,0 +1,268 @@
+//! `rollmux exp chaos` — failure injection at fleet scale (ISSUE 5,
+//! DESIGN.md §13, EXPERIMENTS.md §chaos).
+//!
+//! Sweeps MTBF × group-size caps over the synthetic fleet trace
+//! (`workload::trace::fleet_trace`) on the **fluid tier**, with the
+//! chaos stream (`sim::faults`) injecting node crashes and straggler
+//! slowdowns healed by `coordinator::repair`. The headline numbers are
+//! the recovery accounting: goodput below busy, recovery hours, crash /
+//! eviction / spill counts — the fault-tolerance axis the fault-free
+//! fleet sweep cannot see.
+//!
+//! Output discipline matches `exp fleet`: deterministic result tables on
+//! **stdout** (the CI `ROLLMUX_THREADS={1,4}` matrix diffs them),
+//! wall-clock timings on **stderr**, optional machine-readable dump via
+//! `ROLLMUX_CHAOS_JSON`.
+
+use crate::cluster::PhaseModel;
+use crate::coordinator::inter::InterGroupScheduler;
+use crate::sim::engine::{run_sim, Fidelity, SimConfig, SimResult};
+use crate::sim::faults::FaultConfig;
+use crate::sim::fluid::FluidSimulator;
+use crate::util::par;
+use crate::util::table::{f, pct, Table};
+use crate::util::timed;
+use crate::workload::trace::fleet_trace;
+
+use super::ExpOpts;
+
+const HOUR: f64 = 3600.0;
+
+struct ChaosRow {
+    mtbf_s: f64,
+    cap: usize,
+    res: SimResult,
+    wall_s: f64,
+}
+
+fn fault_cfg(opts: &ExpOpts, mtbf_s: f64) -> Option<FaultConfig> {
+    if !mtbf_s.is_finite() {
+        return None; // fault-free baseline row
+    }
+    // The documented default fault mix at this MTBF (crash/straggler
+    // split, repair time, stream cap all come from FaultConfig).
+    Some(FaultConfig::with_mtbf(opts.seed ^ 0xC4A0_5000, mtbf_s))
+}
+
+fn run_points(opts: &ExpOpts, n_jobs: usize, points: Vec<(f64, usize)>) -> Vec<ChaosRow> {
+    par::parallel_map_pooled(
+        par::max_threads(),
+        points,
+        || None::<FluidSimulator<InterGroupScheduler>>,
+        |slab, _, (mtbf_s, cap)| {
+            let trace = fleet_trace(opts.seed, n_jobs, 1.0);
+            let cfg = SimConfig {
+                seed: opts.seed,
+                fidelity: Fidelity::Fluid,
+                faults: fault_cfg(opts, mtbf_s),
+                ..Default::default()
+            };
+            let sched = InterGroupScheduler::with_max_group_size(PhaseModel::default(), cap);
+            let (res, wall_s) = timed(|| crate::sim::fluid::run_pooled(slab, cfg, sched, trace));
+            ChaosRow { mtbf_s, cap, res, wall_s }
+        },
+    )
+}
+
+fn mtbf_label(mtbf_s: f64) -> String {
+    if mtbf_s.is_finite() {
+        format!("{:.1}", mtbf_s / HOUR)
+    } else {
+        "inf".to_string()
+    }
+}
+
+pub fn chaos(opts: &ExpOpts) {
+    let n_jobs = ((100_000.0 * opts.scale) as usize).max(1_000);
+    // Small default sweep (keeps `exp all` bounded): a fault-free anchor
+    // row plus MTBF {4h, 1h} × caps {4, 8}.
+    let mut points = vec![(f64::INFINITY, 8usize)];
+    for &mtbf_h in &[4.0, 1.0] {
+        for &cap in &[4usize, 8] {
+            points.push((mtbf_h * HOUR, cap));
+        }
+    }
+    println!(
+        "sweeping {n_jobs} synthetic fleet jobs per point across MTBF x group caps \
+         ({} points, fluid tier + chaos stream)...\n",
+        points.len()
+    );
+    let rows = run_points(opts, n_jobs, points);
+
+    let mut t = Table::new(
+        &format!("Chaos sweep — {n_jobs} jobs/point, fluid tier"),
+        &[
+            "MTBF h",
+            "cap",
+            "SLO attain",
+            "goodput",
+            "recovery h",
+            "crashes",
+            "stragg",
+            "evict",
+            "spill",
+            "iters/k$",
+            "events",
+        ],
+    );
+    for r in &rows {
+        t.row(vec![
+            mtbf_label(r.mtbf_s),
+            format!("{}", r.cap),
+            pct(r.res.slo_attainment()),
+            pct(r.res.goodput_frac()),
+            f(r.res.recovery_time_s / HOUR, 1),
+            format!("{}", r.res.crashes),
+            format!("{}", r.res.stragglers),
+            format!("{}", r.res.evictions),
+            format!("{}", r.res.spills),
+            f(r.res.iters_per_kusd(), 1),
+            format!("{}", r.res.events_processed),
+        ]);
+    }
+    t.print();
+    for r in &rows {
+        eprintln!(
+            "  [timing] mtbf {} cap {}: {:.2}s wall ({:.0} jobs/s)",
+            mtbf_label(r.mtbf_s),
+            r.cap,
+            r.wall_s,
+            n_jobs as f64 / r.wall_s.max(1e-9)
+        );
+    }
+    if let Ok(path) = std::env::var("ROLLMUX_CHAOS_JSON") {
+        if !path.is_empty() {
+            let doc = crate::util::json::arr(
+                rows.iter()
+                    .map(|r| crate::metrics::chaos_point_json(r.mtbf_s, r.cap, &r.res))
+                    .collect(),
+            );
+            match crate::metrics::write_json(&path, &doc) {
+                Ok(()) => eprintln!("  wrote {path}"),
+                Err(e) => eprintln!("  ROLLMUX_CHAOS_JSON={path}: {e}"),
+            }
+        }
+    }
+
+    // Exact-vs-fluid chaos spot check: the same fault stream replayed
+    // event-exactly vs as piecewise rate changes, on a common prefix.
+    let n_check = n_jobs.min(1_000);
+    let mk_cfg = |fidelity| SimConfig {
+        seed: opts.seed,
+        fidelity,
+        faults: fault_cfg(opts, 2.0 * HOUR),
+        ..Default::default()
+    };
+    let mk_sched = || InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8);
+    let trace = fleet_trace(opts.seed, n_check, 1.0);
+    let (exact, exact_s) = timed(|| run_sim(mk_cfg(Fidelity::Exact), mk_sched(), trace.clone()));
+    let (fluid, fluid_s) = timed(|| run_sim(mk_cfg(Fidelity::Fluid), mk_sched(), trace));
+    let mut t2 = Table::new(
+        &format!("Chaos exact vs fluid — {n_check} jobs, MTBF 2.0 h, cap 8"),
+        &["metric", "exact", "fluid"],
+    );
+    t2.row(vec![
+        "SLO attainment".into(),
+        pct(exact.slo_attainment()),
+        pct(fluid.slo_attainment()),
+    ]);
+    t2.row(vec!["goodput frac".into(), pct(exact.goodput_frac()), pct(fluid.goodput_frac())]);
+    t2.row(vec![
+        "recovery h".into(),
+        f(exact.recovery_time_s / HOUR, 2),
+        f(fluid.recovery_time_s / HOUR, 2),
+    ]);
+    t2.row(vec![
+        "crashes".into(),
+        format!("{}", exact.crashes),
+        format!("{}", fluid.crashes),
+    ]);
+    t2.row(vec![
+        "spills+evictions".into(),
+        format!("{}", exact.spills + exact.evictions),
+        format!("{}", fluid.spills + fluid.evictions),
+    ]);
+    t2.print();
+    eprintln!(
+        "  [timing] exact {exact_s:.2}s vs fluid {fluid_s:.2}s at {n_check} jobs under chaos"
+    );
+    println!(
+        "\n(fault model, repair algorithm and fluid-tier fault semantics: DESIGN.md §13;\n\
+         zero-fault runs are property-tested bitwise identical to the fault-free engine\n\
+         in rust/tests/prop_faults.rs; wall-clock series: BENCH_5.json)"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The chaos sweep's merged rows must be bit-identical between the
+    /// serial and parallel harness paths (the CI thread matrix diffs the
+    /// stdout tables; this pins the underlying numbers).
+    #[test]
+    fn chaos_sweep_parallel_matches_serial_bitwise() {
+        let opts = ExpOpts { seed: 17, scale: 0.0, gantt: false };
+        let points = vec![(f64::INFINITY, 8usize), (1800.0, 4)];
+        let n = 100;
+        let run_one = |slab: &mut Option<FluidSimulator<InterGroupScheduler>>,
+                       (mtbf_s, cap): (f64, usize)| {
+            let trace = fleet_trace(opts.seed, n, 1.0);
+            let cfg = SimConfig {
+                seed: opts.seed,
+                fidelity: Fidelity::Fluid,
+                faults: fault_cfg(&opts, mtbf_s),
+                ..Default::default()
+            };
+            let sched = InterGroupScheduler::with_max_group_size(PhaseModel::default(), cap);
+            crate::sim::fluid::run_pooled(slab, cfg, sched, trace)
+        };
+        let serial = {
+            let pts = points.clone();
+            par::parallel_map_pooled(
+                1,
+                pts,
+                || None::<FluidSimulator<InterGroupScheduler>>,
+                |slab, _, p| run_one(slab, p),
+            )
+        };
+        let parallel = par::parallel_map_pooled(
+            4,
+            points,
+            || None::<FluidSimulator<InterGroupScheduler>>,
+            |slab, _, p| run_one(slab, p),
+        );
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+            assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits());
+            assert_eq!(a.events_processed, b.events_processed);
+            assert_eq!(a.crashes, b.crashes);
+            assert_eq!(a.recovery_time_s.to_bits(), b.recovery_time_s.to_bits());
+            assert_eq!(a.wasted_gpu_s.to_bits(), b.wasted_gpu_s.to_bits());
+        }
+    }
+
+    /// A nonzero-MTBF chaos point on a fleet trace shows the recovery
+    /// accounting the acceptance criteria name: crashes applied, goodput
+    /// strictly below busy, recovery time above zero, no jobs lost.
+    #[test]
+    fn chaos_fleet_point_shows_recovery_accounting() {
+        let opts = ExpOpts { seed: 7, scale: 0.0, gantt: false };
+        let n = 400;
+        let trace = fleet_trace(opts.seed, n, 1.0);
+        let cfg = SimConfig {
+            seed: opts.seed,
+            fidelity: Fidelity::Fluid,
+            faults: fault_cfg(&opts, 0.5 * HOUR),
+            ..Default::default()
+        };
+        let sched = InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8);
+        let res = run_sim(cfg, sched, trace);
+        assert_eq!(res.outcomes.len(), n, "chaos must not lose jobs");
+        assert!(res.crashes > 0);
+        assert!(res.recovery_time_s > 0.0);
+        assert!(res.wasted_gpu_s > 0.0);
+        assert!(res.goodput_frac() < 1.0, "goodput strictly below busy");
+        assert!(res.goodput_gpu_s() < res.roll_busy_gpu_s + res.train_busy_gpu_s);
+    }
+}

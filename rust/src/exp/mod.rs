@@ -4,6 +4,7 @@
 
 pub mod ablation;
 pub mod atscale;
+pub mod chaos;
 pub mod fleet;
 pub mod micro;
 pub mod motivation;
@@ -48,6 +49,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("table5", "Scheduler decision latency vs concurrent jobs", simstudy::table5),
         ("fig15", "Simulation end-to-end: cost + SLO attainment", simstudy::fig15),
         ("fleet", "100k-job fleet what-if sweep (fluid tier, ISSUE 4)", fleet::fleet),
+        ("chaos", "Failure injection: MTBF x caps with elastic repair (ISSUE 5)", chaos::chaos),
     ]
 }
 

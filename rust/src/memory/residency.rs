@@ -5,23 +5,42 @@
 //! (DRAM→HBM) instead of cold (network/disk + control-plane rebuild). The
 //! ledger tracks per-node pinned bytes and refuses placements that exceed
 //! capacity — Algorithm 1 line 8.
+//!
+//! ISSUE 5 made the ledger a live mirror of the inter-group scheduler's
+//! pins (the chaos tier invalidates a crashed node's pins through it, see
+//! `coordinator::repair`), which exposed two fleet-scale problems fixed
+//! here:
+//!  * `unpin`/`unpin_all` used to leave emptied per-node maps behind, so
+//!    dead nodes accumulated over 100k-job traces and were walked by
+//!    `check_invariant` (and kept `residents_iter` entries alive);
+//!    emptied node entries are now removed.
+//!  * `can_fit` summed the per-job map on every probe; each node now
+//!    carries a cached `used_gb`, maintained on pin/unpin and
+//!    property-tested against the recomputed sum.
 
 use std::collections::BTreeMap;
 
 use crate::cluster::node::NodeId;
 use crate::workload::job::JobId;
 
+/// One node's pinned state: the per-job map plus the cached total.
+#[derive(Clone, Debug, Default)]
+struct NodePins {
+    /// Cached Σ of `jobs` values, maintained incrementally on pin/unpin
+    /// (the `can_fit` probe no longer sums the map).
+    used_gb: f64,
+    jobs: BTreeMap<JobId, f64>,
+}
+
 #[derive(Clone, Debug)]
 pub struct ResidencyLedger {
     capacity_gb: f64,
-    /// node -> (job -> pinned GB). BTreeMaps so iteration order is the
-    /// sorted id order [`Self::residents`] used to pay a collect+sort
-    /// for — [`Self::residents_iter`] streams it allocation-free
-    /// (ISSUE 4). The ledger sits outside the per-decision hot path
-    /// (`Group` keeps its own memory caches), so the O(log n) lookups
-    /// cost nothing that matters while making every traversal
-    /// deterministic.
-    pinned: BTreeMap<NodeId, BTreeMap<JobId, f64>>,
+    /// node -> pinned state. BTreeMaps so iteration order is the sorted
+    /// id order [`Self::residents`] used to pay a collect+sort for —
+    /// [`Self::residents_iter`] streams it allocation-free (ISSUE 4).
+    /// Nodes with nothing pinned are NOT present (ISSUE 5: emptied
+    /// entries are removed so fleet traces don't accumulate dead nodes).
+    pinned: BTreeMap<NodeId, NodePins>,
 }
 
 impl ResidencyLedger {
@@ -33,8 +52,15 @@ impl ResidencyLedger {
         self.capacity_gb
     }
 
+    /// Cached pinned total for a node (0 for unknown nodes).
     pub fn used_gb(&self, node: NodeId) -> f64 {
-        self.pinned.get(&node).map(|m| m.values().sum()).unwrap_or(0.0)
+        self.pinned.get(&node).map(|p| p.used_gb).unwrap_or(0.0)
+    }
+
+    /// Recompute a node's pinned total from the per-job map — the oracle
+    /// the cached `used_gb` is property-tested against.
+    pub fn used_gb_recomputed(&self, node: NodeId) -> f64 {
+        self.pinned.get(&node).map(|p| p.jobs.values().sum()).unwrap_or(0.0)
     }
 
     pub fn free_gb(&self, node: NodeId) -> f64 {
@@ -51,27 +77,50 @@ impl ResidencyLedger {
         if !self.can_fit(node, gb) {
             return false;
         }
-        *self.pinned.entry(node).or_default().entry(job).or_insert(0.0) += gb;
+        let p = self.pinned.entry(node).or_default();
+        *p.jobs.entry(job).or_insert(0.0) += gb;
+        p.used_gb += gb;
         true
     }
 
-    /// Release all of a job's state on a node. Returns freed GB.
+    /// Release all of a job's state on a node. Returns freed GB. The
+    /// node's entry is dropped entirely once nothing remains pinned
+    /// (ISSUE 5 regression: the node map must shrink on full release).
     pub fn unpin(&mut self, node: NodeId, job: JobId) -> f64 {
-        self.pinned.get_mut(&node).and_then(|m| m.remove(&job)).unwrap_or(0.0)
-    }
-
-    /// Release a job everywhere (job completion).
-    pub fn unpin_all(&mut self, job: JobId) -> f64 {
-        let mut freed = 0.0;
-        for m in self.pinned.values_mut() {
-            freed += m.remove(&job).unwrap_or(0.0);
+        let Some(p) = self.pinned.get_mut(&node) else { return 0.0 };
+        let freed = p.jobs.remove(&job).unwrap_or(0.0);
+        if p.jobs.is_empty() {
+            self.pinned.remove(&node);
+        } else {
+            p.used_gb -= freed;
         }
         freed
     }
 
+    /// Release a job everywhere (job completion). Emptied node entries
+    /// are removed.
+    pub fn unpin_all(&mut self, job: JobId) -> f64 {
+        let mut freed = 0.0;
+        self.pinned.retain(|_, p| {
+            if let Some(gb) = p.jobs.remove(&job) {
+                freed += gb;
+                p.used_gb -= gb;
+            }
+            !p.jobs.is_empty()
+        });
+        freed
+    }
+
+    /// Drop every pin on a node (node crash: the DRAM contents are gone).
+    /// Returns the freed GB — the chaos tier charges a cold restart for
+    /// every job this evicts (`coordinator::repair`).
+    pub fn evict_node(&mut self, node: NodeId) -> f64 {
+        self.pinned.remove(&node).map(|p| p.used_gb).unwrap_or(0.0)
+    }
+
     /// Is the job's state resident on this node (warm-startable)?
     pub fn is_resident(&self, node: NodeId, job: JobId) -> bool {
-        self.pinned.get(&node).is_some_and(|m| m.contains_key(&job))
+        self.pinned.get(&node).is_some_and(|p| p.jobs.contains_key(&job))
     }
 
     /// Jobs resident on a node, ascending by id.
@@ -82,18 +131,31 @@ impl ResidencyLedger {
     /// Jobs resident on a node, ascending by id, without allocating — the
     /// BTreeMap already iterates in sorted order.
     pub fn residents_iter(&self, node: NodeId) -> impl Iterator<Item = JobId> + '_ {
-        self.pinned.get(&node).into_iter().flat_map(|m| m.keys().copied())
+        self.pinned.get(&node).into_iter().flat_map(|p| p.jobs.keys().copied())
     }
 
-    /// Invariant check (used by proptests): no node over capacity.
+    /// Number of nodes with at least one pin (the chaos regression tests
+    /// assert this shrinks back to zero after full release).
+    pub fn tracked_nodes(&self) -> usize {
+        self.pinned.len()
+    }
+
+    /// Invariant check (used by proptests and the chaos repair layer):
+    /// no node over capacity, every tracked node non-empty, and every
+    /// cached total within float tolerance of its recomputed sum.
     pub fn check_invariant(&self) -> bool {
-        self.pinned.keys().all(|&n| self.used_gb(n) <= self.capacity_gb + 1e-9)
+        self.pinned.iter().all(|(_, p)| {
+            !p.jobs.is_empty()
+                && p.used_gb <= self.capacity_gb + 1e-9
+                && (p.used_gb - p.jobs.values().sum::<f64>()).abs() < 1e-6
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn pin_unpin_cycle() {
@@ -139,5 +201,85 @@ mod tests {
         assert!(!l.pin(0, 2, 30.0));
         assert_eq!(l.used_gb(0), before);
         assert!(!l.is_resident(0, 2));
+    }
+
+    /// ISSUE 5 regression: full release must shrink the node map — the
+    /// old ledger left empty per-node maps behind forever, so 100k-job
+    /// fleet traces accumulated dead nodes that `check_invariant` and
+    /// `residents_iter` kept walking.
+    #[test]
+    fn node_map_shrinks_after_full_release() {
+        let mut l = ResidencyLedger::new(200.0);
+        for n in 0..50 {
+            assert!(l.pin(n, n + 1000, 10.0));
+            assert!(l.pin(n, n + 2000, 10.0));
+        }
+        assert_eq!(l.tracked_nodes(), 50);
+        // Targeted unpin path.
+        for n in 0..25 {
+            l.unpin(n, n + 1000);
+            assert_eq!(l.tracked_nodes(), 50, "node still holds the other job");
+            l.unpin(n, n + 2000);
+        }
+        assert_eq!(l.tracked_nodes(), 25, "unpin must drop emptied nodes");
+        // unpin_all path.
+        for n in 25..50 {
+            l.unpin_all(n + 1000);
+            l.unpin_all(n + 2000);
+        }
+        assert_eq!(l.tracked_nodes(), 0, "unpin_all must drop emptied nodes");
+        assert!(l.check_invariant());
+    }
+
+    #[test]
+    fn evict_node_drops_everything_on_it() {
+        let mut l = ResidencyLedger::new(100.0);
+        l.pin(4, 1, 10.0);
+        l.pin(4, 2, 20.0);
+        l.pin(5, 1, 10.0);
+        let freed = l.evict_node(4);
+        assert!((freed - 30.0).abs() < 1e-9);
+        assert_eq!(l.tracked_nodes(), 1);
+        assert!(!l.is_resident(4, 1) && !l.is_resident(4, 2));
+        assert!(l.is_resident(5, 1));
+        assert_eq!(l.evict_node(99), 0.0);
+    }
+
+    /// ISSUE 5 satellite: the cached per-node `used_gb` must track the
+    /// recomputed per-job sum through randomized pin/unpin/unpin_all/
+    /// evict sequences.
+    #[test]
+    fn prop_used_cache_matches_recomputed_sum() {
+        for seed in 0..20u64 {
+            let mut l = ResidencyLedger::new(10_000.0);
+            let mut rng = Rng::new(seed);
+            for step in 0..2_000 {
+                let node = rng.range(0, 12);
+                let job = rng.range(0, 30);
+                match rng.range(0, 10) {
+                    0..=5 => {
+                        l.pin(node, job, rng.uniform(1.0, 900.0));
+                    }
+                    6..=7 => {
+                        l.unpin(node, job);
+                    }
+                    8 => {
+                        l.unpin_all(job);
+                    }
+                    _ => {
+                        l.evict_node(node);
+                    }
+                }
+                for n in 0..12 {
+                    let cached = l.used_gb(n);
+                    let sum = l.used_gb_recomputed(n);
+                    assert!(
+                        (cached - sum).abs() < 1e-6,
+                        "seed {seed} step {step} node {n}: cache {cached} vs sum {sum}"
+                    );
+                }
+                assert!(l.check_invariant(), "seed {seed} step {step}");
+            }
+        }
     }
 }

@@ -28,6 +28,8 @@ pub fn sim_result_json(r: &SimResult) -> Json {
                     ("slo_met", Json::Bool(o.slo_met())),
                     ("iters", num(o.iters as f64)),
                     ("migrations", num(o.migrations as f64)),
+                    ("recoveries", num(o.recoveries as f64)),
+                    ("recovery_s", num(o.recovery_s)),
                 ])
             })
             .collect())
@@ -44,6 +46,14 @@ pub fn sim_result_json(r: &SimResult) -> Json {
         ("train_bubble", num(tb)),
         ("makespan_s", num(r.makespan_s)),
         ("events_processed", num(r.events_processed as f64)),
+        // Chaos-tier accounting (ISSUE 5; all zero on fault-free runs).
+        ("crashes", num(r.crashes as f64)),
+        ("stragglers", num(r.stragglers as f64)),
+        ("evictions", num(r.evictions as f64)),
+        ("spills", num(r.spills as f64)),
+        ("recovery_time_s", num(r.recovery_time_s)),
+        ("wasted_gpu_s", num(r.wasted_gpu_s)),
+        ("goodput_frac", num(r.goodput_frac())),
         // Streaming per-(group, node) / per-group busy integrals — the
         // per-resource utilization view that used to require
         // reconstructing intervals from the gantt timeline (available
@@ -90,6 +100,34 @@ pub fn fleet_point_json(rate: f64, cap: usize, r: &SimResult) -> Json {
         ("peak_train_gpus", num(r.peak_train_gpus as f64)),
         ("makespan_s", num(r.makespan_s)),
         ("events_processed", num(r.events_processed as f64)),
+    ])
+}
+
+/// Structured dump of one chaos-sweep point (`rollmux exp chaos`,
+/// ISSUE 5): the fleet aggregates plus recovery/goodput accounting.
+pub fn chaos_point_json(mtbf_s: f64, cap: usize, r: &SimResult) -> Json {
+    let (rb, tb) = r.bubble_fracs();
+    // The fault-free anchor row carries an infinite MTBF; bare `inf` is
+    // not valid JSON, so non-finite sweeps serialize as null.
+    let mtbf = if mtbf_s.is_finite() { num(mtbf_s) } else { Json::Null };
+    obj(vec![
+        ("mtbf_s", mtbf),
+        ("group_cap", num(cap as f64)),
+        ("jobs", num(r.outcomes.len() as f64)),
+        ("slo_attainment", num(r.slo_attainment())),
+        ("iters_per_kusd", num(r.iters_per_kusd())),
+        ("roll_bubble", num(rb)),
+        ("train_bubble", num(tb)),
+        ("makespan_s", num(r.makespan_s)),
+        ("events_processed", num(r.events_processed as f64)),
+        ("crashes", num(r.crashes as f64)),
+        ("stragglers", num(r.stragglers as f64)),
+        ("evictions", num(r.evictions as f64)),
+        ("spills", num(r.spills as f64)),
+        ("recovery_time_s", num(r.recovery_time_s)),
+        ("wasted_gpu_s", num(r.wasted_gpu_s)),
+        ("goodput_gpu_s", num(r.goodput_gpu_s())),
+        ("goodput_frac", num(r.goodput_frac())),
     ])
 }
 
@@ -189,6 +227,28 @@ mod tests {
         assert_eq!(parsed.get("slo_attainment").unwrap().as_f64(), Some(1.0));
         assert!(parsed.get("outcomes").is_none(), "aggregates only");
         assert!(parsed.get("timeline").is_none(), "aggregates only");
+    }
+
+    #[test]
+    fn chaos_point_json_has_recovery_fields() {
+        let r = small_result();
+        let j = chaos_point_json(3600.0, 8, &r);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("mtbf_s").unwrap().as_f64(), Some(3600.0));
+        assert_eq!(parsed.get("crashes").unwrap().as_usize(), Some(0));
+        // The fault-free anchor (infinite MTBF) must stay parseable.
+        let anchor = chaos_point_json(f64::INFINITY, 8, &r);
+        let parsed = Json::parse(&anchor.to_string()).expect("inf must not leak into JSON");
+        assert_eq!(parsed.get("mtbf_s"), Some(&Json::Null));
+        assert_eq!(parsed.get("recovery_time_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(parsed.get("goodput_frac").unwrap().as_f64(), Some(1.0));
+        assert!(parsed.get("goodput_gpu_s").unwrap().as_f64().unwrap() > 0.0);
+        // The full dump carries the chaos fields too.
+        let full = Json::parse(&sim_result_json(&r).to_string()).unwrap();
+        assert_eq!(full.get("crashes").unwrap().as_usize(), Some(0));
+        assert_eq!(full.get("goodput_frac").unwrap().as_f64(), Some(1.0));
+        let outs = full.get("outcomes").unwrap().as_arr().unwrap();
+        assert_eq!(outs[0].get("recoveries").unwrap().as_usize(), Some(0));
     }
 
     #[test]

@@ -34,6 +34,7 @@ use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
 
 use super::calendar::CalendarQueue;
+use super::faults::{FaultConfig, FaultKind, FaultStream};
 
 use crate::cluster::node::GPUS_PER_NODE;
 use crate::cluster::{GpuKind, PhaseModel};
@@ -41,6 +42,7 @@ use crate::coordinator::group::Group;
 use crate::coordinator::inter::{Decision, InterGroupScheduler};
 use crate::coordinator::migration::MigrationPolicy;
 use crate::coordinator::orchestrator::{CorePhase, GroupOrchestrator, IntraPolicyKind};
+use crate::coordinator::repair::{self, MemberFate, RepairOutcome};
 use crate::memory::switching::SwitchModel;
 use crate::sync::{sync_time_s, SyncScheme};
 use crate::util::rng::Rng;
@@ -63,6 +65,14 @@ pub trait GroupScheduler {
     fn group(&self, gid: usize) -> Option<&Group> {
         self.groups().iter().find(|g| g.id == gid)
     }
+    /// Heal a group around a crashed rollout node (ISSUE 5). The default
+    /// reports "no repair support": the fault layer then only holds the
+    /// node down until its repair completes (baselines don't replan).
+    /// `InterGroupScheduler` overrides with full elastic repair
+    /// (`coordinator::repair`).
+    fn repair_node_crash(&mut self, _gid: usize, _node: usize) -> Option<RepairOutcome> {
+        None
+    }
 }
 
 impl GroupScheduler for InterGroupScheduler {
@@ -83,6 +93,9 @@ impl GroupScheduler for InterGroupScheduler {
     }
     fn group(&self, gid: usize) -> Option<&Group> {
         self.group_by_id(gid)
+    }
+    fn repair_node_crash(&mut self, gid: usize, node: usize) -> Option<RepairOutcome> {
+        InterGroupScheduler::repair_node_crash(self, gid, node)
     }
 }
 
@@ -107,6 +120,9 @@ impl<S: GroupScheduler + ?Sized> GroupScheduler for Box<S> {
     }
     fn group(&self, gid: usize) -> Option<&Group> {
         (**self).group(gid)
+    }
+    fn repair_node_crash(&mut self, gid: usize, node: usize) -> Option<RepairOutcome> {
+        (**self).repair_node_crash(gid, node)
     }
 }
 
@@ -181,6 +197,12 @@ pub struct SimConfig {
     /// by [`run_sim`]/[`run_rollmux`]; constructing a [`Simulator`]
     /// directly always runs the exact tier.
     pub fidelity: Fidelity,
+    /// The chaos tier (ISSUE 5, DESIGN.md §13): a seeded fault stream
+    /// injected into either simulation tier. `None` (the default) and
+    /// `Some` with an empty stream are **bitwise identical** to the
+    /// fault-free engine (property-tested in
+    /// `rust/tests/prop_faults.rs`).
+    pub faults: Option<FaultConfig>,
 }
 
 impl Default for SimConfig {
@@ -196,6 +218,7 @@ impl Default for SimConfig {
             record_gantt: false,
             event_queue: EventQueueKind::default(),
             fidelity: Fidelity::default(),
+            faults: None,
         }
     }
 }
@@ -217,6 +240,13 @@ pub struct JobOutcome {
     pub iters: usize,
     /// Migration count (long-tail consolidations performed).
     pub migrations: usize,
+    /// Crash recoveries this job went through (ISSUE 5): each one is a
+    /// checkpoint-aware replay of the in-flight iteration after a cold
+    /// restart (and possibly a spill into another group).
+    pub recoveries: usize,
+    /// Total recovery delay the job paid (cold restarts + consolidation
+    /// pauses), seconds.
+    pub recovery_s: f64,
 }
 
 impl JobOutcome {
@@ -263,6 +293,21 @@ pub struct SimResult {
     pub train_group_busy_gpu_s: Vec<f64>,
     /// Events processed by the engine loop (the events/s bench metric).
     pub events_processed: usize,
+    /// Chaos-tier accounting (ISSUE 5, all zero without faults):
+    /// node-crash events applied.
+    pub crashes: usize,
+    /// Straggler events that actually slowed at least one rollout.
+    pub stragglers: usize,
+    /// Members healed in place (repinned + cold-restarted).
+    pub evictions: usize,
+    /// Members spilled into another group through Algorithm 1.
+    pub spills: usize,
+    /// Total recovery delay across all victims, seconds.
+    pub recovery_time_s: f64,
+    /// GPU-seconds of discarded or overhead work: progress of
+    /// interrupted phases replayed from the last iteration checkpoint,
+    /// plus straggler slowdown overhead. `goodput = busy - wasted`.
+    pub wasted_gpu_s: f64,
 }
 
 impl SimResult {
@@ -298,6 +343,22 @@ impl SimResult {
         let v: Vec<f64> = self.outcomes.values().map(|o| o.slowdown()).collect();
         crate::util::stats::mean(&v)
     }
+
+    /// Useful GPU-seconds: busy time minus the work crashes discarded
+    /// and stragglers burned (ISSUE 5). Equals busy exactly on
+    /// fault-free runs.
+    pub fn goodput_gpu_s(&self) -> f64 {
+        (self.roll_busy_gpu_s + self.train_busy_gpu_s - self.wasted_gpu_s).max(0.0)
+    }
+
+    /// Goodput as a fraction of busy time (1.0 on fault-free runs).
+    pub fn goodput_frac(&self) -> f64 {
+        let busy = self.roll_busy_gpu_s + self.train_busy_gpu_s;
+        if busy <= 0.0 {
+            return 1.0;
+        }
+        (self.goodput_gpu_s() / busy).clamp(0.0, 1.0)
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -305,10 +366,21 @@ enum Ev {
     /// Index into the trace (the job has no slot yet).
     Arrival(usize),
     /// Rollout tail consolidated onto `kept` nodes; free the rest.
-    /// Carries the job's slab slot.
-    TailFree(usize, usize),
-    /// (slot, kind, iter).
-    PhaseDone(usize, PhaseKind, usize),
+    /// Carries the job's slab slot and restart epoch.
+    TailFree(usize, usize, u32),
+    /// (slot, kind, iter, epoch). The epoch stamps the job's restart
+    /// generation (ISSUE 5): a crash bumps it, so phase events scheduled
+    /// before the interrupt are recognized as stale and dropped. Without
+    /// faults the epoch is always 0 and behavior is bit-identical to the
+    /// pre-chaos engine.
+    PhaseDone(usize, PhaseKind, usize, u32),
+    /// Apply the generated fault `events[idx]` (ISSUE 5).
+    Fault(usize),
+    /// A crashed node's repair completed: (group id, group-local node).
+    FaultRecover(usize, usize),
+    /// A crash victim's recovery delay elapsed: replay the in-flight
+    /// iteration from its last checkpoint. (slot, epoch).
+    Recover(usize, u32),
 }
 
 #[derive(Clone, Debug)]
@@ -371,6 +443,45 @@ struct JobRt {
     tail_frac: f64,
     /// Finished: stale events against this slot are ignored.
     done: bool,
+    /// Restart generation (ISSUE 5): bumped on every crash interrupt /
+    /// straggler re-schedule; events carrying an older epoch are stale.
+    epoch: u32,
+    /// The resource-holding phase currently executing (None while
+    /// queued / in init / in sync) — what a crash must truncate.
+    phase: Option<PhaseKind>,
+    /// Start time of the executing phase (busy-truncation accounting).
+    phase_start_s: f64,
+    /// Nominal end of the in-flight train phase (crash truncation).
+    cur_train_end: f64,
+    /// Whether the current iteration's durations have been sampled —
+    /// checkpoint replay re-enqueues WITHOUT resampling, so the replayed
+    /// iteration runs the same realized durations (solo accounting
+    /// counts it once).
+    iter_sampled: bool,
+    /// Busy GPU-seconds accrued for the in-flight iteration (reset at
+    /// the sync checkpoint): a crash discards the WHOLE iteration, so
+    /// everything accrued here — completed phases included — becomes
+    /// wasted work, not just the interrupted phase's spent time. Kept
+    /// in lockstep with the iteration's contributions to the busy
+    /// integrals (tail consolidation and straggler stretches included).
+    iter_busy_gpu_s: f64,
+    /// The part of `iter_busy_gpu_s` already charged to `wasted_gpu_s`
+    /// (straggler stretches are wasted immediately); a crash charges
+    /// only the difference so overhead is never double-counted.
+    iter_wasted_gpu_s: f64,
+    /// The in-flight rollout's tail was consolidated (§4.3): busy was
+    /// reshaped by `on_tail_free`, so crash truncation must not apply
+    /// the plain full-pin remainder subtraction. Survives the
+    /// `tail_penalty` take (the pause window), unlike the penalty field.
+    consolidated: bool,
+    /// An armed-but-unfired tail consolidation: `(t_check, nodes_kept)`.
+    /// Stragglers re-arm it at the stretched trigger (the epoch bump
+    /// would otherwise cancel the migration silently); crashes and
+    /// phase completion clear it.
+    pending_tail: Option<(f64, usize)>,
+    /// Chaos accounting mirrored into the JobOutcome.
+    recoveries: usize,
+    recovery_s: f64,
 }
 
 /// The engine's pending-event set: the calendar ring by default, the
@@ -414,6 +525,15 @@ pub struct Simulator<S: GroupScheduler> {
     now: f64,
     /// Dense job slab, arrival order; never shrinks.
     jobs: Vec<JobRt>,
+    /// job id -> slab slot for live lookups (the fault layer resolves
+    /// repair outcomes by job id).
+    job_slot: HashMap<JobId, usize>,
+    /// Armed fault stream (None without `cfg.faults`).
+    faults_rt: Option<FaultStream>,
+    /// (gid, node) -> latest repair deadline: overlapping crashes of the
+    /// same node extend the down window, and only the FaultRecover
+    /// matching the latest deadline brings the node back up.
+    node_down_until: HashMap<(usize, usize), f64>,
     /// Per-group orchestration core, indexed by group id. REQUIRES dense
     /// ids: every in-tree `GroupScheduler` hands them out monotonically
     /// from 0 (at most one new group per arrival). A scheduler returning
@@ -442,6 +562,9 @@ impl<S: GroupScheduler> Simulator<S> {
             seq: 0,
             now: 0.0,
             jobs: Vec::new(),
+            job_slot: HashMap::new(),
+            faults_rt: None,
+            node_down_until: HashMap::new(),
             group_rt: Vec::new(),
             res: SimResult::default(),
             last_rate_change: 0.0,
@@ -460,6 +583,15 @@ impl<S: GroupScheduler> Simulator<S> {
         for i in 0..self.trace.len() {
             let t = self.trace[i].as_ref().expect("fresh trace").arrival_s;
             self.push(t, Ev::Arrival(i));
+        }
+        self.job_slot.clear();
+        self.node_down_until.clear();
+        // Arm the chaos stream: one fault event is kept in flight at a
+        // time; each application pulls the next (so the stream length
+        // adapts to the realized makespan).
+        self.faults_rt = FaultStream::arm(self.cfg.faults.as_ref());
+        if let Some((h, t)) = self.faults_rt.as_mut().and_then(FaultStream::pull) {
+            self.push(t, Ev::Fault(h));
         }
     }
 
@@ -548,13 +680,35 @@ impl<S: GroupScheduler> Simulator<S> {
     /// [`Self::reset_with_trace`].
     pub fn run_to_end(&mut self) -> SimResult {
         while let Some((t, ev)) = self.events.pop() {
+            // Fault/repair events outliving the workload are inert:
+            // don't let them advance the clock past the last completion
+            // (the chain stops re-arming once all jobs finish).
+            if matches!(ev, Ev::Fault(_) | Ev::FaultRecover(..))
+                && self.res.outcomes.len() == self.trace.len()
+            {
+                continue;
+            }
+            // A superseded recovery (its victim was re-crashed before it
+            // fired) is pure noise; unlike stale phase events — which
+            // always precede their job's eventual completion — it can
+            // outlive the whole workload, so it must not touch the
+            // clock/makespan. (Recover only exists under faults, keeping
+            // fault-free runs bit-identical.)
+            if let Ev::Recover(slot, ep) = ev {
+                if self.jobs[slot].done || self.jobs[slot].epoch != ep {
+                    continue;
+                }
+            }
             debug_assert!(t >= self.now - 1e-9, "time went backwards");
             self.now = t;
             self.res.events_processed += 1;
             match ev {
                 Ev::Arrival(i) => self.on_arrival(i),
-                Ev::PhaseDone(slot, kind, iter) => self.on_phase_done(slot, kind, iter),
-                Ev::TailFree(slot, kept) => self.on_tail_free(slot, kept),
+                Ev::PhaseDone(slot, kind, iter, ep) => self.on_phase_done(slot, kind, iter, ep),
+                Ev::TailFree(slot, kept, ep) => self.on_tail_free(slot, kept, ep),
+                Ev::Fault(idx) => self.on_fault(idx),
+                Ev::FaultRecover(gid, node) => self.on_fault_recover(gid, node),
+                Ev::Recover(slot, ep) => self.on_recover(slot, ep),
             }
         }
         self.integrate_cost();
@@ -615,10 +769,22 @@ impl<S: GroupScheduler> Simulator<S> {
             tail_penalty: 0.0,
             tail_frac: 0.0,
             done: false,
+            epoch: 0,
+            phase: None,
+            phase_start_s: 0.0,
+            cur_train_end: 0.0,
+            iter_sampled: false,
+            iter_busy_gpu_s: 0.0,
+            iter_wasted_gpu_s: 0.0,
+            consolidated: false,
+            pending_tail: None,
+            recoveries: 0,
+            recovery_s: 0.0,
             spec,
         };
         let slot = self.jobs.len();
         self.jobs.push(rt);
+        self.job_slot.insert(id, slot);
         self.ensure_group_rt(d.group_id);
         {
             // Register with the group's orchestration core: the job's
@@ -633,7 +799,7 @@ impl<S: GroupScheduler> Simulator<S> {
         // One-time Init (cold start of the job's state into the caches).
         let t_done = self.now + cold;
         self.record(slot, PhaseKind::Init, 0, self.now, t_done, &[]);
-        self.push(t_done, Ev::PhaseDone(slot, PhaseKind::Init, 0));
+        self.push(t_done, Ev::PhaseDone(slot, PhaseKind::Init, 0, 0));
     }
 
     fn sample_iteration(&mut self, slot: usize) {
@@ -642,6 +808,7 @@ impl<S: GroupScheduler> Simulator<S> {
         rt.cur_troll = s.t_roll;
         rt.cur_ttrain = s.t_train * rt.train_scale;
         rt.solo_s += s.t_roll + rt.cur_ttrain + rt.t_sync;
+        rt.iter_sampled = true;
     }
 
     fn switch_cost(&self, slot: usize, pool: crate::cluster::node::PoolKind) -> f64 {
@@ -679,6 +846,7 @@ impl<S: GroupScheduler> Simulator<S> {
 
     fn start_phase(&mut self, slot: usize, kind: PhaseKind) {
         let iter = self.jobs[slot].iter;
+        let ep = self.jobs[slot].epoch;
         match kind {
             PhaseKind::Rollout => {
                 let warm = self.switch_cost(slot, crate::cluster::node::PoolKind::Rollout);
@@ -704,12 +872,17 @@ impl<S: GroupScheduler> Simulator<S> {
                         tail_gpu_frac: rt.rng.fork(iter as u64 ^ 0xabc).uniform(0.1, 0.35),
                     };
                     rt.cur_roll_end = end;
+                    rt.phase = Some(PhaseKind::Rollout);
+                    rt.phase_start_s = self.now;
+                    rt.consolidated = false;
+                    rt.iter_busy_gpu_s += (warm + t_roll) * n_pins as f64 * GPUS_PER_NODE as f64;
                     sample
                 };
                 if let Some(plan) = self.cfg.migration.plan(&sample, n_pins) {
                     let t_check = self.now + warm + plan.trigger_at_s;
                     self.jobs[slot].tail_frac = plan.tail_gpu_frac;
-                    self.push(t_check, Ev::TailFree(slot, plan.nodes_kept));
+                    self.jobs[slot].pending_tail = Some((t_check, plan.nodes_kept));
+                    self.push(t_check, Ev::TailFree(slot, plan.nodes_kept, ep));
                 }
                 // Busy accounting assumes no migration; adjusted in
                 // on_tail_free when a consolidation actually happens.
@@ -721,7 +894,7 @@ impl<S: GroupScheduler> Simulator<S> {
                     self.node_busy_add(gid, n, (warm + t_roll) * GPUS_PER_NODE as f64);
                 }
                 self.record_rollout(slot, iter, self.now, end);
-                self.push(end, Ev::PhaseDone(slot, PhaseKind::Rollout, iter));
+                self.push(end, Ev::PhaseDone(slot, PhaseKind::Rollout, iter, ep));
             }
             PhaseKind::Train => {
                 let warm = self.switch_cost(slot, crate::cluster::node::PoolKind::Train);
@@ -732,20 +905,28 @@ impl<S: GroupScheduler> Simulator<S> {
                 self.res.train_busy_gpu_s += (warm + t_train) * train_gpus as f64;
                 let gid = self.jobs[slot].group;
                 self.train_busy_add(gid, (warm + t_train) * train_gpus as f64);
+                {
+                    let rt = &mut self.jobs[slot];
+                    rt.phase = Some(PhaseKind::Train);
+                    rt.phase_start_s = self.now;
+                    rt.cur_train_end = end;
+                    rt.iter_busy_gpu_s += (warm + t_train) * train_gpus as f64;
+                }
                 self.record(slot, PhaseKind::Train, iter, self.now, end, &[]);
-                self.push(end, Ev::PhaseDone(slot, PhaseKind::Train, iter));
+                self.push(end, Ev::PhaseDone(slot, PhaseKind::Train, iter, ep));
             }
             _ => unreachable!(),
         }
     }
 
-    fn on_tail_free(&mut self, slot: usize, kept: usize) {
+    fn on_tail_free(&mut self, slot: usize, kept: usize, epoch: u32) {
         // The rollout hit its completion threshold. Consolidate the tail
         // (paper Fig. 7-bottom) only if another rollout is actually
         // waiting for one of this job's nodes; otherwise let it run out.
-        if self.jobs[slot].done {
+        if self.jobs[slot].done || self.jobs[slot].epoch != epoch {
             return;
         }
+        self.jobs[slot].pending_tail = None; // this armed check is consumed
         if self.jobs[slot].cur_roll_end <= self.now {
             return; // phase already over (stale check)
         }
@@ -757,6 +938,7 @@ impl<S: GroupScheduler> Simulator<S> {
         let (remaining, n_pins, tail_frac) = {
             let rt = &mut self.jobs[slot];
             rt.tail_penalty = penalty;
+            rt.consolidated = true;
             rt.migrations += 1;
             (rt.cur_roll_end - self.now, rt.roll_nodes.len(), rt.tail_frac)
         };
@@ -770,6 +952,14 @@ impl<S: GroupScheduler> Simulator<S> {
         self.res.roll_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
         self.res.roll_busy_gpu_s +=
             (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64;
+        // Mirror the reshaping into the iteration accrual so a later
+        // crash wastes exactly what the busy integrals carry (ISSUE 5).
+        {
+            let rt = &mut self.jobs[slot];
+            rt.iter_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
+            rt.iter_busy_gpu_s +=
+                (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64;
+        }
         // Mirror the aggregate adjustment into the streaming per-node
         // accumulators: freed nodes stop counting, kept nodes carry the
         // consolidated tail, and the sub-node fraction is attributed to
@@ -788,8 +978,287 @@ impl<S: GroupScheduler> Simulator<S> {
         self.drain_dispatch(gid);
     }
 
-    fn on_phase_done(&mut self, slot: usize, kind: PhaseKind, iter: usize) {
-        if self.jobs[slot].done {
+    /// Apply the pending fault event, then keep the stream armed while
+    /// any job is still outstanding (ISSUE 5).
+    fn on_fault(&mut self, handle: usize) {
+        let fe = self.faults_rt.as_ref().expect("fault event without a stream").event(handle);
+        match fe.kind {
+            FaultKind::NodeCrash { repair_s } => self.apply_crash(fe.victim, repair_s),
+            FaultKind::Straggler { factor } => self.apply_straggler(fe.victim, factor),
+        }
+        if self.res.outcomes.len() < self.trace.len() {
+            if let Some((h, t)) = self.faults_rt.as_mut().and_then(FaultStream::pull) {
+                self.push(t.max(self.now), Ev::Fault(h));
+            }
+        }
+    }
+
+    /// A rollout node dies (ISSUE 5, DESIGN.md §13). The scheduler heals
+    /// the group (`coordinator::repair`: repin survivors, spill the
+    /// rest); the engine translates each member fate into an interrupt +
+    /// checkpoint-aware recovery, holds the node down until its repair
+    /// completes, and keeps the busy/goodput accounting consistent.
+    fn apply_crash(&mut self, victim: u64, repair_s: f64) {
+        let Some((gid, node)) = repair::pick_victim(self.sched.groups(), victim) else {
+            return; // nothing provisioned right now
+        };
+        self.res.crashes += 1;
+        let outcome = self.sched.repair_node_crash(gid, node);
+        self.ensure_group_rt(gid);
+        if let Some(out) = outcome {
+            self.rate_changed();
+            for fate in &out.fates {
+                let jid = fate.job();
+                let Some(&slot) = self.job_slot.get(&jid) else { continue };
+                if self.jobs[slot].done {
+                    continue;
+                }
+                self.interrupt(slot);
+                let repinned = matches!(fate, MemberFate::Repinned { .. });
+                match fate {
+                    MemberFate::Repinned { roll_nodes, .. } => {
+                        self.jobs[slot].roll_nodes = roll_nodes.clone();
+                        self.group_rt[gid].set_roll_nodes(slot, roll_nodes.clone());
+                        self.res.evictions += 1;
+                    }
+                    MemberFate::Spilled { decision, .. } => {
+                        self.group_rt[gid].complete(slot);
+                        self.respill(slot, decision);
+                        self.res.spills += 1;
+                    }
+                }
+                let params_b = self.jobs[slot].spec.params_b;
+                let delay = repair::recovery_delay_s(
+                    &self.cfg.switch,
+                    &self.cfg.migration,
+                    params_b,
+                    repinned,
+                );
+                let ep = {
+                    let rt = &mut self.jobs[slot];
+                    rt.recoveries += 1;
+                    rt.recovery_s += delay;
+                    rt.epoch
+                };
+                self.res.recovery_time_s += delay;
+                self.push(self.now + delay, Ev::Recover(slot, ep));
+            }
+        }
+        // Hold the node down until the repair completes (schedulers
+        // without repair support still get this; their resident phases
+        // run out and new dispatches wait). Overlapping crashes extend
+        // the window: only the latest deadline's recover lifts it.
+        self.group_rt[gid].set_node_down(node);
+        let until = self.now + repair_s;
+        let dl = self.node_down_until.entry((gid, node)).or_insert(f64::NEG_INFINITY);
+        if until > *dl {
+            *dl = until;
+        }
+        self.push(until, Ev::FaultRecover(gid, node));
+        self.drain_dispatch(gid);
+    }
+
+    /// Move a spilled victim's runtime state into its new group: the
+    /// training pool (and hence DP rescale + sync time) follows the new
+    /// placement; the SLO reference (solo estimate) is fixed at original
+    /// admission.
+    fn respill(&mut self, slot: usize, d: &Decision) {
+        let train_gpus = self.sched.group(d.group_id).expect("spill target exists").train_gpus();
+        self.ensure_group_rt(d.group_id);
+        let (jid, nodes, slack) = {
+            let rt = &mut self.jobs[slot];
+            rt.group = d.group_id;
+            rt.roll_nodes = d.roll_nodes.clone();
+            rt.train_gpus = train_gpus;
+            rt.train_scale = if matches!(rt.spec.phases, PhaseSpec::Direct { .. }) {
+                1.0
+            } else {
+                rt.spec.n_train_gpus as f64 / train_gpus as f64
+            };
+            rt.t_sync = sync_time_s(
+                self.cfg.sync_scheme,
+                rt.spec.model_bytes(),
+                train_gpus,
+                rt.spec.n_roll_gpus,
+            );
+            (rt.spec.id, rt.roll_nodes.clone(), rt.spec.slo * rt.solo_est_iter_s)
+        };
+        self.group_rt[d.group_id].admit(slot, jid, nodes, slack);
+    }
+
+    /// Interrupt a crash victim: truncate the in-flight phase's busy
+    /// integrals (the un-run remainder never happens), charge EVERYTHING
+    /// the discarded iteration had accrued — completed phases included —
+    /// as wasted work, cancel its pending events via an epoch bump, and
+    /// release everything it holds or queues in its group.
+    fn interrupt(&mut self, slot: usize) {
+        let gid = self.jobs[slot].group;
+        let now = self.now;
+        let phase = self.jobs[slot].phase;
+        match phase {
+            Some(PhaseKind::Rollout) if self.jobs[slot].cur_roll_end > now => {
+                let remaining = self.jobs[slot].cur_roll_end - now;
+                let n_pins = self.jobs[slot].roll_nodes.len();
+                // A consolidated tail already reshaped the integrals
+                // (`on_tail_free` credited the freed nodes back), so the
+                // plain full-pin remainder subtraction would double-cut;
+                // the sub-node residual (≤ tail + pause) is left as-is.
+                if !self.jobs[slot].consolidated {
+                    let cut = remaining * n_pins as f64 * GPUS_PER_NODE as f64;
+                    self.res.roll_busy_gpu_s -= cut;
+                    self.jobs[slot].iter_busy_gpu_s -= cut;
+                    for i in 0..n_pins {
+                        let n = self.jobs[slot].roll_nodes[i];
+                        self.node_busy_add(gid, n, -remaining * GPUS_PER_NODE as f64);
+                    }
+                }
+            }
+            Some(PhaseKind::Train) if self.jobs[slot].cur_train_end > now => {
+                let remaining = self.jobs[slot].cur_train_end - now;
+                let tg = self.jobs[slot].train_gpus as f64;
+                self.res.train_busy_gpu_s -= remaining * tg;
+                self.jobs[slot].iter_busy_gpu_s -= remaining * tg;
+                self.train_busy_add(gid, -remaining * tg);
+            }
+            _ => {}
+        }
+        // The whole in-flight iteration rolls back to its checkpoint:
+        // what actually ran of it (the accrual minus the truncations
+        // above) is discarded work, whatever sub-phase the crash hit —
+        // minus overhead the straggler path already charged to wasted.
+        let rt = &mut self.jobs[slot];
+        self.res.wasted_gpu_s += (rt.iter_busy_gpu_s - rt.iter_wasted_gpu_s).max(0.0);
+        rt.iter_busy_gpu_s = 0.0;
+        rt.iter_wasted_gpu_s = 0.0;
+        rt.consolidated = false;
+        rt.epoch = rt.epoch.wrapping_add(1);
+        rt.phase = None;
+        rt.tail_penalty = 0.0;
+        rt.pending_tail = None;
+        self.group_rt[gid].cancel_queued(slot);
+        self.group_rt[gid].release_rollout(slot);
+        self.group_rt[gid].release_train(slot);
+    }
+
+    /// A straggling node slows every in-flight rollout pinned to it: the
+    /// data-parallel batch gates on the slow node, so the whole pin set
+    /// stays busy for the stretched remainder (overhead → wasted). The
+    /// pending completion is re-scheduled via an epoch bump, and an
+    /// armed tail consolidation is re-armed at its stretched trigger
+    /// (not cancelled). Already-consolidated tails (sub-node residuals)
+    /// are left alone. The scan is bounded to the damaged group's
+    /// members (admission order — deterministic), not the whole slab.
+    fn apply_straggler(&mut self, victim: u64, factor: f64) {
+        let Some((gid, node)) = repair::pick_victim(self.sched.groups(), victim) else {
+            return;
+        };
+        if factor <= 1.0 {
+            return;
+        }
+        let slots: Vec<usize> = match self.sched.group(gid) {
+            Some(g) => g
+                .jobs()
+                .iter()
+                .filter(|j| j.roll_nodes.contains(&node))
+                .filter_map(|j| self.job_slot.get(&j.spec.id).copied())
+                .collect(),
+            None => return,
+        };
+        let mut any = false;
+        for slot in slots {
+            {
+                let rt = &self.jobs[slot];
+                if rt.done
+                    || rt.phase != Some(PhaseKind::Rollout)
+                    || rt.cur_roll_end <= self.now
+                    // A consolidated tail occupies a sub-node residual
+                    // the straggler model (full-pin stretch) does not
+                    // describe; leave it to run out.
+                    || rt.consolidated
+                    || !rt.roll_nodes.contains(&node)
+                {
+                    continue;
+                }
+            }
+            let (extra, n_pins, iter) = {
+                let rt = &mut self.jobs[slot];
+                let remaining = rt.cur_roll_end - self.now;
+                let extra = remaining * (factor - 1.0);
+                rt.cur_roll_end += extra;
+                rt.epoch = rt.epoch.wrapping_add(1);
+                (extra, rt.roll_nodes.len(), rt.iter)
+            };
+            let gpu_extra = extra * n_pins as f64 * GPUS_PER_NODE as f64;
+            self.res.roll_busy_gpu_s += gpu_extra;
+            for i in 0..n_pins {
+                let n = self.jobs[slot].roll_nodes[i];
+                self.node_busy_add(gid, n, extra * GPUS_PER_NODE as f64);
+            }
+            // The stretch is wasted immediately; it also enters the
+            // iteration accrual (keeping it in lockstep with the busy
+            // integrals) with `iter_wasted_gpu_s` recording that this
+            // part is already charged — a later crash wastes only the
+            // difference, never double-counting the overhead.
+            self.res.wasted_gpu_s += gpu_extra;
+            {
+                let rt = &mut self.jobs[slot];
+                rt.iter_busy_gpu_s += gpu_extra;
+                rt.iter_wasted_gpu_s += gpu_extra;
+            }
+            let (end, ep) = (self.jobs[slot].cur_roll_end, self.jobs[slot].epoch);
+            self.push(end, Ev::PhaseDone(slot, PhaseKind::Rollout, iter, ep));
+            // Re-arm an unfired tail consolidation at its stretched
+            // trigger (the epoch bump made the original check stale).
+            if let Some((t_check, kept)) = self.jobs[slot].pending_tail {
+                let stretched = if t_check > self.now {
+                    self.now + (t_check - self.now) * factor
+                } else {
+                    t_check
+                };
+                self.jobs[slot].pending_tail = Some((stretched, kept));
+                self.push(stretched.max(self.now), Ev::TailFree(slot, kept, ep));
+            }
+            any = true;
+        }
+        if any {
+            self.res.stragglers += 1;
+        }
+    }
+
+    /// A crashed node's repair completed: it rejoins the pool — unless a
+    /// later crash extended the down window, in which case this recover
+    /// is superseded and the node stays down until the latest deadline.
+    fn on_fault_recover(&mut self, gid: usize, node: usize) {
+        if self.group_rt.len() <= gid {
+            return;
+        }
+        if let Some(&dl) = self.node_down_until.get(&(gid, node)) {
+            if self.now + 1e-9 < dl {
+                return; // superseded by a later crash's repair
+            }
+            self.node_down_until.remove(&(gid, node));
+        }
+        self.group_rt[gid].set_node_up(node);
+        self.drain_dispatch(gid);
+    }
+
+    /// A victim's recovery delay elapsed: replay the in-flight iteration
+    /// from its last checkpoint (same sampled durations — solo
+    /// accounting counts each sampled iteration once).
+    fn on_recover(&mut self, slot: usize, epoch: u32) {
+        if self.jobs[slot].done || self.jobs[slot].epoch != epoch {
+            return;
+        }
+        if !self.jobs[slot].iter_sampled {
+            // Crashed during the initial cold load: sample the first
+            // iteration now (the recovery delay covered the reload).
+            self.sample_iteration(slot);
+        }
+        self.enqueue(slot, PhaseKind::Rollout);
+    }
+
+    fn on_phase_done(&mut self, slot: usize, kind: PhaseKind, iter: usize, epoch: u32) {
+        if self.jobs[slot].done || self.jobs[slot].epoch != epoch {
             return;
         }
         let gid = self.jobs[slot].group;
@@ -806,9 +1275,12 @@ impl<S: GroupScheduler> Simulator<S> {
                     if rt.tail_penalty > 0.0 {
                         let p = std::mem::take(&mut rt.tail_penalty);
                         rt.cur_roll_end = self.now + p;
-                        self.push(self.now + p, Ev::PhaseDone(slot, PhaseKind::Rollout, iter));
+                        let ev = Ev::PhaseDone(slot, PhaseKind::Rollout, iter, epoch);
+                        self.push(self.now + p, ev);
                         return;
                     }
+                    rt.phase = None;
+                    rt.pending_tail = None;
                 }
                 // Release any nodes still held, then queue the train;
                 // `enqueue` leaves the group fully drained.
@@ -816,17 +1288,22 @@ impl<S: GroupScheduler> Simulator<S> {
                 self.enqueue(slot, PhaseKind::Train);
             }
             PhaseKind::Train => {
+                self.jobs[slot].phase = None;
                 self.group_rt[gid].release_train(slot);
                 // Sync occupies the network, not the pools.
                 let t_sync = self.jobs[slot].t_sync;
                 let end = self.now + t_sync;
                 self.record(slot, PhaseKind::Sync, iter, self.now, end, &[]);
-                self.push(end, Ev::PhaseDone(slot, PhaseKind::Sync, iter));
+                self.push(end, Ev::PhaseDone(slot, PhaseKind::Sync, iter, epoch));
                 self.drain_dispatch(gid);
             }
             PhaseKind::Sync => {
                 let rt = &mut self.jobs[slot];
                 rt.iter += 1;
+                // The sync published the update: the iteration is
+                // checkpointed, nothing accrued so far can be lost.
+                rt.iter_busy_gpu_s = 0.0;
+                rt.iter_wasted_gpu_s = 0.0;
                 if rt.iter >= rt.spec.n_iters {
                     self.finish_job(slot);
                 } else {
@@ -841,6 +1318,7 @@ impl<S: GroupScheduler> Simulator<S> {
         let (id, gid, outcome) = {
             let rt = &mut self.jobs[slot];
             rt.done = true;
+            rt.phase = None;
             (
                 rt.spec.id,
                 rt.group,
@@ -852,6 +1330,8 @@ impl<S: GroupScheduler> Simulator<S> {
                     slo: rt.spec.slo,
                     iters: rt.iter,
                     migrations: rt.migrations,
+                    recoveries: rt.recoveries,
+                    recovery_s: rt.recovery_s,
                 },
             )
         };
@@ -1280,6 +1760,70 @@ mod tests {
                 "accounting still uses the hard-coded 0.25 fraction"
             );
         }
+    }
+
+    /// ISSUE 5: a node crash interrupts the resident job, charges a
+    /// checkpoint-aware recovery, and the job still completes all its
+    /// iterations (goodput strictly below busy).
+    #[test]
+    fn node_crash_interrupts_and_recovers() {
+        let mk = || vec![direct_job(0, 100.0, 50.0, 20.0, 5, 0.0)];
+        let mut c = cfg();
+        c.faults = Some(FaultConfig {
+            seed: 1,
+            mtbf_s: 60.0,
+            mean_repair_s: 120.0,
+            straggler_frac: 0.0,
+            straggler_factor: 1.0,
+            max_events: 20,
+        });
+        let res = run_rollmux(c, mk());
+        let o = &res.outcomes[&0];
+        assert_eq!(o.iters, 5, "all iterations complete despite crashes");
+        assert!(res.crashes > 0, "the fault stream must have fired");
+        assert!(o.recoveries > 0, "the resident member is always the victim");
+        assert!(o.recovery_s > 0.0);
+        assert!(res.recovery_time_s > 0.0);
+        assert!(res.spills > 0, "a single-node group can only heal by spilling");
+        assert!(res.wasted_gpu_s > 0.0, "interrupted progress is discarded work");
+        assert!(res.goodput_gpu_s() < res.roll_busy_gpu_s + res.train_busy_gpu_s);
+        assert!(res.goodput_frac() < 1.0);
+        // Recovery costs wall-clock time vs the fault-free run.
+        let nofault = run_rollmux(cfg(), mk());
+        assert!(
+            res.makespan_s > nofault.makespan_s,
+            "chaos {} vs clean {}",
+            res.makespan_s,
+            nofault.makespan_s
+        );
+        assert_eq!(nofault.crashes, 0);
+        assert_eq!(nofault.wasted_gpu_s, 0.0);
+        assert!((nofault.goodput_frac() - 1.0).abs() < 1e-12);
+    }
+
+    /// ISSUE 5: a straggler stretches the in-flight rollout without
+    /// losing state — no recovery, but wasted (overhead) GPU-time.
+    #[test]
+    fn straggler_slows_rollout_without_state_loss() {
+        let mk = || vec![direct_job(0, 200.0, 50.0, 20.0, 4, 0.0)];
+        let mut c = cfg();
+        c.faults = Some(FaultConfig {
+            seed: 3,
+            mtbf_s: 80.0,
+            mean_repair_s: 1.0,
+            straggler_frac: 1.0, // stragglers only
+            straggler_factor: 1.5,
+            max_events: 10,
+        });
+        let res = run_rollmux(c, mk());
+        let o = &res.outcomes[&0];
+        assert_eq!(o.iters, 4);
+        assert_eq!(res.crashes, 0);
+        assert_eq!(o.recoveries, 0, "stragglers lose no state");
+        assert!(res.stragglers > 0, "some event must hit an in-flight rollout");
+        assert!(res.wasted_gpu_s > 0.0, "slowdown overhead is not goodput");
+        let nofault = run_rollmux(cfg(), mk());
+        assert!(res.makespan_s > nofault.makespan_s);
     }
 
     #[test]

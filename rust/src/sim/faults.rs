@@ -1,0 +1,260 @@
+//! Deterministic fault-trace generation — the chaos tier's event source
+//! (ISSUE 5, DESIGN.md §13).
+//!
+//! At 328+328-GPU production scale node failures and stragglers are
+//! routine, but until this PR the simulator was a closed world: no
+//! component could lose a node, evict a resident, or heal a group. This
+//! module supplies the *inputs* of that axis: a seeded, deterministic
+//! stream of fault events (node crashes with sampled repair times,
+//! straggler slowdowns) driven by configurable MTBF and repair-time
+//! distributions. Both simulation tiers consume the identical stream:
+//!
+//!  * the exact engine ([`super::engine::Simulator`]) files each fault on
+//!    its calendar queue and applies it event-exactly (interrupt, heal,
+//!    recover);
+//!  * the fluid tier ([`super::fluid::FluidSimulator`]) applies the same
+//!    events as piecewise rate changes at group-recheck boundaries.
+//!
+//! Victim selection is *state-resolved*: an event carries an opaque
+//! `victim` draw, and [`crate::coordinator::repair::pick_victim`] maps it
+//! onto the provisioned node set at the moment the event fires. The
+//! stream itself never references group ids (groups are provisioned on
+//! demand), so one fault trace is meaningful against any scheduler
+//! state — and with `SimConfig::faults = None` (or an empty stream) both
+//! tiers are **bitwise identical** to the fault-free engine
+//! (property-tested in `rust/tests/prop_faults.rs`).
+
+use crate::util::rng::Rng;
+
+/// What a fault event does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// A rollout node dies: its host-DRAM residency is lost (every pinned
+    /// member cold-restarts), the group heals around it
+    /// (`coordinator::repair`), and the node returns after `repair_s`.
+    NodeCrash { repair_s: f64 },
+    /// A node straggles: in-flight rollouts touching it run `factor`×
+    /// slower for the remainder of the phase (no state is lost).
+    Straggler { factor: f64 },
+}
+
+/// One fault, in simulated time. `victim` is resolved against the live
+/// cluster state when the event fires (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub victim: u64,
+    pub kind: FaultKind,
+}
+
+/// Fault-model knobs (`SimConfig::faults`). `mtbf_s` is the fleet-wide
+/// mean time between fault events (exponential inter-arrival): at
+/// production scale MTBF shrinks with node count, so sweeps vary this
+/// directly instead of a per-node rate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the fault stream (independent of the workload seed).
+    pub seed: u64,
+    /// Mean time between fault events, seconds. Non-finite or <= 0
+    /// disables the stream entirely (zero events).
+    pub mtbf_s: f64,
+    /// Mean node repair time, seconds (exponential).
+    pub mean_repair_s: f64,
+    /// Fraction of events that are straggler slowdowns instead of
+    /// crashes.
+    pub straggler_frac: f64,
+    /// Straggler slowdown multiplier (>1).
+    pub straggler_factor: f64,
+    /// Hard cap on generated events (safety valve for open-ended runs).
+    pub max_events: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0xFA17,
+            mtbf_s: 4.0 * 3600.0,
+            mean_repair_s: 600.0,
+            straggler_frac: 0.25,
+            straggler_factor: 1.5,
+            max_events: 1_000_000,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// A config whose stream is empty — the zero-fault anchor used by the
+    /// equivalence tests (`Some(empty)` must be bitwise `None`).
+    pub fn empty() -> Self {
+        FaultConfig { max_events: 0, ..Default::default() }
+    }
+
+    /// Convenience: the default fault mix at a given MTBF.
+    pub fn with_mtbf(seed: u64, mtbf_s: f64) -> Self {
+        FaultConfig { seed, mtbf_s, ..Default::default() }
+    }
+}
+
+/// The seeded fault stream: an iterator over [`FaultEvent`]s with
+/// strictly non-decreasing times. Both tiers pull it lazily (one event
+/// ahead), so the stream length adapts to the trace's makespan without a
+/// horizon guess.
+#[derive(Clone, Debug)]
+pub struct FaultTraceGen {
+    cfg: FaultConfig,
+    rng: Rng,
+    t: f64,
+    emitted: usize,
+}
+
+impl FaultTraceGen {
+    pub fn new(cfg: FaultConfig) -> Self {
+        let rng = Rng::new(cfg.seed ^ 0xC4A0_5EED_0000_0001);
+        FaultTraceGen { cfg, rng, t: 0.0, emitted: 0 }
+    }
+}
+
+impl Iterator for FaultTraceGen {
+    type Item = FaultEvent;
+
+    fn next(&mut self) -> Option<FaultEvent> {
+        if self.emitted >= self.cfg.max_events {
+            return None;
+        }
+        if !(self.cfg.mtbf_s.is_finite() && self.cfg.mtbf_s > 0.0) {
+            return None;
+        }
+        self.t += self.rng.exponential(self.cfg.mtbf_s);
+        let victim = self.rng.next_u64();
+        let kind = if self.rng.chance(self.cfg.straggler_frac) {
+            FaultKind::Straggler { factor: self.cfg.straggler_factor.max(1.0) }
+        } else {
+            FaultKind::NodeCrash {
+                repair_s: self.rng.exponential(self.cfg.mean_repair_s.max(1e-9)),
+            }
+        };
+        self.emitted += 1;
+        Some(FaultEvent { t: self.t, victim, kind })
+    }
+}
+
+/// Materialize the fault stream up to a horizon (offline analysis and
+/// the `workload::trace` surface; the simulators pull the generator
+/// lazily instead).
+pub fn fault_trace(cfg: &FaultConfig, horizon_s: f64) -> Vec<FaultEvent> {
+    FaultTraceGen::new(cfg.clone()).take_while(|e| e.t <= horizon_s).collect()
+}
+
+/// The simulators' lazily-pulled stream wrapper (shared by both tiers —
+/// the chaining rule lives here exactly once): at most ONE event is in
+/// flight at a time, identified by a monotone handle the calendar event
+/// carries. Memory is O(1) — fired events are not retained.
+#[derive(Clone, Debug)]
+pub struct FaultStream {
+    gen: FaultTraceGen,
+    handed_out: usize,
+    pending: Option<FaultEvent>,
+}
+
+impl FaultStream {
+    /// Arm a stream from `SimConfig::faults` (`None` stays `None`).
+    pub fn arm(cfg: Option<&FaultConfig>) -> Option<FaultStream> {
+        cfg.map(|fc| FaultStream {
+            gen: FaultTraceGen::new(fc.clone()),
+            handed_out: 0,
+            pending: None,
+        })
+    }
+
+    /// Pull the next event into the pending slot; returns the calendar
+    /// handle and fire time, or `None` when the stream is exhausted.
+    pub fn pull(&mut self) -> Option<(usize, f64)> {
+        let e = self.gen.next()?;
+        self.pending = Some(e);
+        let handle = self.handed_out;
+        self.handed_out += 1;
+        Some((handle, e.t))
+    }
+
+    /// Resolve a calendar handle back to its event (exactly one is ever
+    /// in flight, so the handle must be the most recent).
+    pub fn event(&self, handle: usize) -> FaultEvent {
+        debug_assert_eq!(handle + 1, self.handed_out, "one fault event in flight at a time");
+        self.pending.expect("pending fault event")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_is_deterministic_and_monotone() {
+        let cfg = FaultConfig::with_mtbf(9, 1800.0);
+        let a: Vec<FaultEvent> = FaultTraceGen::new(cfg.clone()).take(500).collect();
+        let b: Vec<FaultEvent> = FaultTraceGen::new(cfg).take(500).collect();
+        assert_eq!(a.len(), 500);
+        assert_eq!(a, b, "same seed must replay the same stream");
+        assert!(a.windows(2).all(|w| w[0].t <= w[1].t), "times non-decreasing");
+        assert!(a.iter().all(|e| e.t > 0.0));
+    }
+
+    #[test]
+    fn mtbf_controls_event_rate() {
+        let horizon = 1_000.0 * 3600.0;
+        let slow = fault_trace(&FaultConfig::with_mtbf(3, 10.0 * 3600.0), horizon);
+        let fast = fault_trace(&FaultConfig::with_mtbf(3, 3600.0), horizon);
+        // ~100 vs ~1000 events over 1000 h.
+        assert!((60..160).contains(&slow.len()), "slow stream {} events", slow.len());
+        assert!((800..1200).contains(&fast.len()), "fast stream {} events", fast.len());
+    }
+
+    #[test]
+    fn mix_has_both_kinds_and_sane_params() {
+        let evs = fault_trace(&FaultConfig::with_mtbf(5, 600.0), 2_000.0 * 600.0);
+        let crashes = evs
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::NodeCrash { .. }))
+            .count();
+        let stragglers = evs.len() - crashes;
+        assert!(crashes > 0 && stragglers > 0, "{crashes} crashes / {stragglers} stragglers");
+        // Default mix: ~25% stragglers.
+        let frac = stragglers as f64 / evs.len() as f64;
+        assert!((0.15..0.35).contains(&frac), "straggler frac {frac}");
+        for e in &evs {
+            match e.kind {
+                FaultKind::NodeCrash { repair_s } => assert!(repair_s >= 0.0),
+                FaultKind::Straggler { factor } => assert!(factor >= 1.0),
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_disabled_streams_yield_nothing() {
+        assert_eq!(FaultTraceGen::new(FaultConfig::empty()).next(), None);
+        let off = FaultConfig { mtbf_s: f64::INFINITY, ..Default::default() };
+        assert_eq!(FaultTraceGen::new(off).next(), None);
+        let neg = FaultConfig { mtbf_s: -1.0, ..Default::default() };
+        assert_eq!(FaultTraceGen::new(neg).next(), None);
+    }
+
+    #[test]
+    fn max_events_caps_the_stream() {
+        let cfg = FaultConfig { max_events: 7, ..FaultConfig::with_mtbf(1, 60.0) };
+        assert_eq!(FaultTraceGen::new(cfg).count(), 7);
+    }
+
+    #[test]
+    fn fault_stream_hands_out_one_pending_event() {
+        assert!(FaultStream::arm(None).is_none());
+        let cfg = FaultConfig::with_mtbf(2, 100.0);
+        let mut s = FaultStream::arm(Some(&cfg)).unwrap();
+        let direct: Vec<FaultEvent> = FaultTraceGen::new(cfg).take(3).collect();
+        for (i, want) in direct.iter().enumerate() {
+            let (h, t) = s.pull().unwrap();
+            assert_eq!(h, i, "handles are monotone");
+            assert_eq!(t.to_bits(), want.t.to_bits(), "same stream as the raw generator");
+            assert_eq!(s.event(h), *want);
+        }
+    }
+}

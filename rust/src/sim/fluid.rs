@@ -49,16 +49,35 @@
 //! with high `cv` and near-equal co-members bias a few percent fast),
 //! and gantt records (`record_gantt` yields no `PhaseRecord`s — there
 //! are no per-phase events to record).
+//!
+//! **Chaos tier (ISSUE 5, DESIGN.md §13).** The same fault stream the
+//! exact engine replays event-exactly is applied here as piecewise rate
+//! changes at group-recheck boundaries: a node crash advances the
+//! damaged group, rolls every victim back to its last iteration
+//! checkpoint (the discarded fraction is wasted work), heals the group
+//! through `coordinator::repair` (repin / spill), and suspends victims
+//! from their rotation for the recovery delay — the group's period is
+//! recomputed without them, rising again when they rejoin. Stragglers
+//! suspend the affected members for the slowdown overhead instead.
+//! Fluid fault semantics are approximate by design: the crashed node
+//! itself is treated as hot-spared (no down window — sound when
+//! `repair_s ≪ MTBF`), and per-phase interruption detail is folded into
+//! the one-iteration rollback. With `SimConfig::faults = None` (or an
+//! empty stream) this tier stays bitwise identical to its fault-free
+//! behavior (property-tested).
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::cluster::node::GPUS_PER_NODE;
+use crate::coordinator::inter::Decision;
+use crate::coordinator::repair::{self, MemberFate};
 use crate::sync::sync_time_s;
 use crate::util::rng::Rng;
 use crate::workload::job::{JobId, JobSpec, PhaseSpec};
 
 use super::engine::{GroupScheduler, JobOutcome, SimConfig, SimResult};
+use super::faults::{FaultKind, FaultStream};
 
 /// Snap-to-completion tolerance, in iterations: absorbs the fp rounding
 /// of `(remaining × P) / P`.
@@ -68,12 +87,16 @@ const EPS_ITERS: f64 = 1e-6;
 enum FEv {
     /// Index into the trace.
     Arrival(usize),
-    /// Cold init (+ modeled phase-in wait) done: the job enters its
-    /// group's rotation. Carries the job's slab slot.
-    Join(usize),
+    /// Cold init (+ modeled phase-in wait) done — or a fault suspension
+    /// elapsed: the job (re-)enters its group's rotation. Carries the
+    /// job's slab slot and restart epoch (a fault bumps the epoch, so a
+    /// superseded join is recognized as stale; always 0 without faults).
+    Join(usize, u32),
     /// Predicted next completion inside a group: (group id, version at
     /// scheduling time — stale checks discard outdated predictions).
     Recheck(usize, u64),
+    /// Apply generated fault `events[idx]` (ISSUE 5).
+    Fault(usize),
 }
 
 #[derive(Clone, Debug)]
@@ -110,12 +133,30 @@ struct FluidJob {
     /// Mean per-iteration actual durations from the exact RNG replay.
     occ_roll: f64,
     occ_train: f64,
+    /// Hierarchical sync time per iteration (depends on the group's
+    /// training pool; recomputed on spill).
+    t_sync: f64,
     /// Member path: `occ_roll + occ_train + t_sync`.
     path: f64,
     /// Effective iterations (the engine always runs at least one).
     n_eff: usize,
     done_iters: f64,
     finished: bool,
+    /// Restart epoch (ISSUE 5): bumped on fault suspension; stale Join
+    /// events are dropped. Always 0 without faults.
+    epoch: u32,
+    // Spill re-rating inputs (a new group's training pool changes the
+    // DP rescale and sync time; the canonical solo replay is untouched).
+    params_b: f64,
+    warm_train: f64,
+    mean_train_raw: f64,
+    direct: bool,
+    n_roll_gpus: usize,
+    spec_train_gpus: usize,
+    model_bytes: f64,
+    // Chaos accounting mirrored into the JobOutcome.
+    recoveries: usize,
+    recovery_s: f64,
     // Outcome bookkeeping.
     arrival_s: f64,
     slo: f64,
@@ -159,6 +200,10 @@ pub struct FluidSimulator<S: GroupScheduler> {
     seq: u64,
     now: f64,
     jobs: Vec<FluidJob>,
+    /// job id -> slab slot (the fault layer resolves repair outcomes).
+    job_slot: HashMap<JobId, usize>,
+    /// Armed fault stream (None without `cfg.faults`).
+    faults_rt: Option<FaultStream>,
     groups: Vec<FluidGroup>,
     res: SimResult,
     // Cost integration state (mirrors the exact engine).
@@ -181,6 +226,8 @@ impl<S: GroupScheduler> FluidSimulator<S> {
             seq: 0,
             now: 0.0,
             jobs: Vec::new(),
+            job_slot: HashMap::new(),
+            faults_rt: None,
             groups: Vec::new(),
             res: SimResult::default(),
             last_rate_change: 0.0,
@@ -200,6 +247,12 @@ impl<S: GroupScheduler> FluidSimulator<S> {
         for i in 0..self.trace.len() {
             let t = self.trace[i].as_ref().expect("fresh trace").arrival_s;
             self.push(t, FEv::Arrival(i));
+        }
+        self.job_slot.clear();
+        // Arm the chaos stream (one event in flight, lazily chained).
+        self.faults_rt = FaultStream::arm(self.cfg.faults.as_ref());
+        if let Some((h, t)) = self.faults_rt.as_mut().and_then(FaultStream::pull) {
+            self.push(t, FEv::Fault(h));
         }
     }
 
@@ -279,13 +332,29 @@ impl<S: GroupScheduler> FluidSimulator<S> {
 
     pub fn run_to_end(&mut self) -> SimResult {
         while let Some(e) = self.events.pop() {
+            // Fault events outliving the workload are inert; don't let
+            // them advance the clock past the last completion.
+            if matches!(e.ev, FEv::Fault(_)) && self.res.outcomes.len() == self.trace.len() {
+                continue;
+            }
+            // A superseded rejoin (its victim was re-suspended before it
+            // fired) can outlive the workload; it must not advance the
+            // clock. Fault-free Joins are never stale (epoch 0, the job
+            // cannot finish before joining), so fault-free runs stay
+            // bit-identical.
+            if let FEv::Join(slot, ep) = e.ev {
+                if self.jobs[slot].finished || self.jobs[slot].epoch != ep {
+                    continue;
+                }
+            }
             debug_assert!(e.t >= self.now - 1e-9, "time went backwards");
             self.now = e.t;
             self.res.events_processed += 1;
             match e.ev {
                 FEv::Arrival(i) => self.on_arrival(i),
-                FEv::Join(slot) => self.on_join(slot),
+                FEv::Join(slot, ep) => self.on_join(slot, ep),
                 FEv::Recheck(gid, ver) => self.on_recheck(gid, ver),
+                FEv::Fault(idx) => self.on_fault(idx),
             }
         }
         self.integrate_cost();
@@ -349,12 +418,14 @@ impl<S: GroupScheduler> FluidSimulator<S> {
         let mut rng = root.fork(1);
         let mut sum_roll = 0.0;
         let mut sum_train = 0.0;
+        let mut sum_train_raw = 0.0;
         let mut solo = 0.0;
         for it in 0..n_eff {
             let s = spec.sample_iter_with(&self.cfg.model, &mut rng, &mut self.scratch_lengths);
             let tt = s.t_train * train_scale;
             sum_roll += s.t_roll;
             sum_train += tt;
+            sum_train_raw += s.t_train;
             solo += s.t_roll + tt + t_sync;
             let _ = rng.fork(it as u64);
             let _ = rng.fork(it as u64 ^ 0xabc);
@@ -372,10 +443,21 @@ impl<S: GroupScheduler> FluidSimulator<S> {
             train_gpus,
             occ_roll,
             occ_train,
+            t_sync,
             path: occ_roll + occ_train + t_sync,
             n_eff,
             done_iters: 0.0,
             finished: false,
+            epoch: 0,
+            params_b: spec.params_b,
+            warm_train,
+            mean_train_raw: sum_train_raw / n_eff as f64,
+            direct: matches!(spec.phases, PhaseSpec::Direct { .. }),
+            n_roll_gpus: spec.n_roll_gpus,
+            spec_train_gpus: spec.n_train_gpus,
+            model_bytes: spec.model_bytes(),
+            recoveries: 0,
+            recovery_s: 0.0,
             arrival_s: spec.arrival_s,
             slo: spec.slo,
             n_iters_raw: spec.n_iters,
@@ -383,6 +465,7 @@ impl<S: GroupScheduler> FluidSimulator<S> {
             solo_est_iter_s,
             init_s: cold,
         });
+        self.job_slot.insert(id, slot);
 
         self.ensure_group(d.group_id);
         // Phase-in wait: half the rollout occupancy other unfinished
@@ -407,10 +490,13 @@ impl<S: GroupScheduler> FluidSimulator<S> {
         }
         let delay = 0.5 * shared;
         self.groups[d.group_id].admitted.push(slot);
-        self.push(self.now + cold + delay, FEv::Join(slot));
+        self.push(self.now + cold + delay, FEv::Join(slot, 0));
     }
 
-    fn on_join(&mut self, slot: usize) {
+    fn on_join(&mut self, slot: usize, epoch: u32) {
+        if self.jobs[slot].finished || self.jobs[slot].epoch != epoch {
+            return; // superseded by a fault suspension
+        }
         let gid = self.jobs[slot].gid;
         self.advance_group(gid);
         let g = &mut self.groups[gid];
@@ -461,6 +547,8 @@ impl<S: GroupScheduler> FluidSimulator<S> {
                     slo: j.slo,
                     iters: j.n_eff,
                     migrations: 0,
+                    recoveries: j.recoveries,
+                    recovery_s: j.recovery_s,
                 },
             )
         };
@@ -546,6 +634,178 @@ impl<S: GroupScheduler> FluidSimulator<S> {
         let t = g.last_t + rem_min * g.period;
         let version = g.version;
         self.push(t, FEv::Recheck(gid, version));
+    }
+
+    /// Apply the pending fault event, then keep the stream armed while
+    /// any job is outstanding (ISSUE 5). `repair_s` is not used here:
+    /// the fluid tier treats crashed nodes as hot-spared (see the
+    /// module docs' soundness note).
+    fn on_fault(&mut self, handle: usize) {
+        let fe = self.faults_rt.as_ref().expect("fault event without a stream").event(handle);
+        match fe.kind {
+            FaultKind::NodeCrash { .. } => self.apply_crash(fe.victim),
+            FaultKind::Straggler { factor } => self.apply_straggler(fe.victim, factor),
+        }
+        if self.res.outcomes.len() < self.trace.len() {
+            if let Some((h, t)) = self.faults_rt.as_mut().and_then(FaultStream::pull) {
+                self.push(t.max(self.now), FEv::Fault(h));
+            }
+        }
+    }
+
+    /// Node crash as a piecewise rate change: advance the damaged group
+    /// to `now`, roll every victim back to its iteration checkpoint,
+    /// heal the group (repin / spill via `coordinator::repair`), and
+    /// suspend victims for their recovery delay — the group's period
+    /// drops while they are out and rises when they rejoin.
+    fn apply_crash(&mut self, victim: u64) {
+        let Some((gid, node)) = repair::pick_victim(self.sched.groups(), victim) else {
+            return;
+        };
+        self.res.crashes += 1;
+        let Some(out) = self.sched.repair_node_crash(gid, node) else {
+            return; // scheduler without repair support: nothing to do here
+        };
+        self.ensure_group(gid);
+        self.advance_group(gid);
+        self.rate_changed();
+        for fate in &out.fates {
+            let jid = fate.job();
+            let Some(&slot) = self.job_slot.get(&jid) else { continue };
+            if self.jobs[slot].finished {
+                continue;
+            }
+            // Checkpoint rollback first, under the member's OLD rates.
+            self.rollback_partial_iter(slot);
+            let repinned = matches!(fate, MemberFate::Repinned { .. });
+            match fate {
+                MemberFate::Repinned { roll_nodes, .. } => {
+                    self.jobs[slot].roll_nodes = roll_nodes.clone();
+                    self.res.evictions += 1;
+                }
+                MemberFate::Spilled { decision, .. } => {
+                    self.remove_admitted(gid, slot);
+                    self.respill(slot, decision);
+                    self.res.spills += 1;
+                }
+            }
+            let delay = repair::recovery_delay_s(
+                &self.cfg.switch,
+                &self.cfg.migration,
+                self.jobs[slot].params_b,
+                repinned,
+            );
+            self.res.recovery_time_s += delay;
+            let ep = {
+                let j = &mut self.jobs[slot];
+                j.recoveries += 1;
+                j.recovery_s += delay;
+                j.epoch = j.epoch.wrapping_add(1);
+                j.epoch
+            };
+            self.groups[gid].members.retain(|&s| s != slot);
+            self.push(self.now + delay, FEv::Join(slot, ep));
+        }
+        let g = &mut self.groups[gid];
+        g.version += 1;
+        self.recompute_period(gid);
+        self.schedule_recheck(gid);
+    }
+
+    /// Discard a victim's partial iteration (checkpoints live at
+    /// iteration boundaries): the fractional progress becomes wasted
+    /// work at the member's current occupancies.
+    fn rollback_partial_iter(&mut self, slot: usize) {
+        let (frac, waste) = {
+            let j = &self.jobs[slot];
+            let frac = j.done_iters - j.done_iters.floor();
+            let waste = frac
+                * (j.occ_roll * (j.roll_nodes.len() * GPUS_PER_NODE) as f64
+                    + j.occ_train * j.train_gpus as f64);
+            (frac, waste)
+        };
+        if frac > 0.0 {
+            self.jobs[slot].done_iters = self.jobs[slot].done_iters.floor();
+            self.res.wasted_gpu_s += waste;
+        }
+    }
+
+    /// Drop a spilled member from a group's admitted set (it left for
+    /// another group; join-delay estimates must stop counting it).
+    fn remove_admitted(&mut self, gid: usize, slot: usize) {
+        self.groups[gid].admitted.retain(|&s| s != slot);
+    }
+
+    /// Move a spilled victim onto its new group's rates: the training
+    /// pool follows the placement (DP rescale + sync time re-derived);
+    /// the canonical solo replay and SLO reference stay fixed.
+    fn respill(&mut self, slot: usize, d: &Decision) {
+        let train_gpus = self.sched.group(d.group_id).expect("spill target exists").train_gpus();
+        self.ensure_group(d.group_id);
+        {
+            let j = &mut self.jobs[slot];
+            j.gid = d.group_id;
+            j.roll_nodes = d.roll_nodes.clone();
+            j.train_gpus = train_gpus;
+            let scale = if j.direct { 1.0 } else { j.spec_train_gpus as f64 / train_gpus as f64 };
+            j.occ_train = j.warm_train + j.mean_train_raw * scale;
+            j.t_sync = sync_time_s(
+                self.cfg.sync_scheme,
+                j.model_bytes,
+                train_gpus,
+                j.n_roll_gpus,
+            );
+            j.path = j.occ_roll + j.occ_train + j.t_sync;
+        }
+        self.groups[d.group_id].admitted.push(slot);
+    }
+
+    /// Straggler as a rate change: members pinned to the slow node are
+    /// suspended for the slowdown overhead of one rollout (the
+    /// data-parallel batch gates on the slow node), charged as busy +
+    /// wasted GPU-time; no state is lost.
+    fn apply_straggler(&mut self, victim: u64, factor: f64) {
+        let Some((gid, node)) = repair::pick_victim(self.sched.groups(), victim) else {
+            return;
+        };
+        if factor <= 1.0 {
+            return;
+        }
+        self.ensure_group(gid);
+        self.advance_group(gid);
+        let victims: Vec<usize> = self.groups[gid]
+            .members
+            .iter()
+            .copied()
+            .filter(|&s| self.jobs[s].roll_nodes.contains(&node))
+            .collect();
+        if victims.is_empty() {
+            return;
+        }
+        self.res.stragglers += 1;
+        for slot in victims {
+            let j = &self.jobs[slot];
+            let stall = (factor - 1.0) * j.occ_roll;
+            let n_pins = j.roll_nodes.len();
+            let gpu_s = stall * (n_pins * GPUS_PER_NODE) as f64;
+            self.res.roll_busy_gpu_s += gpu_s;
+            self.res.wasted_gpu_s += gpu_s;
+            for pi in 0..n_pins {
+                let n = self.jobs[slot].roll_nodes[pi];
+                self.node_busy_add(gid, n, stall * GPUS_PER_NODE as f64);
+            }
+            let ep = {
+                let j = &mut self.jobs[slot];
+                j.epoch = j.epoch.wrapping_add(1);
+                j.epoch
+            };
+            self.groups[gid].members.retain(|&s| s != slot);
+            self.push(self.now + stall, FEv::Join(slot, ep));
+        }
+        let g = &mut self.groups[gid];
+        g.version += 1;
+        self.recompute_period(gid);
+        self.schedule_recheck(gid);
     }
 }
 
@@ -722,6 +982,49 @@ mod tests {
             a.outcomes[&0].finish_s.to_bits(),
             b.outcomes[&0].finish_s.to_bits()
         );
+    }
+
+    /// ISSUE 5: the chaos tier on the fluid path — crashes roll victims
+    /// back to iteration checkpoints, suspend them for recovery, and the
+    /// accounting shows it (goodput < busy, recovery time > 0) while
+    /// every job still completes.
+    #[test]
+    fn fluid_chaos_recovers_and_accounts() {
+        use crate::sim::faults::FaultConfig;
+        let mk = || {
+            vec![
+                direct_job(0, 100.0, 80.0, 20.0, 30, 0.0),
+                direct_job(1, 80.0, 60.0, 20.0, 30, 0.0),
+            ]
+        };
+        let mut c = fluid_cfg();
+        c.faults = Some(FaultConfig {
+            seed: 2,
+            mtbf_s: 400.0,
+            mean_repair_s: 120.0,
+            straggler_frac: 0.2,
+            straggler_factor: 1.5,
+            max_events: 60,
+        });
+        let res = run_rollmux(c, mk());
+        assert_eq!(res.outcomes.len(), 2, "faults must not lose jobs");
+        for o in res.outcomes.values() {
+            assert_eq!(o.iters, 30, "all iterations complete despite chaos");
+        }
+        assert!(res.crashes > 0, "the stream must fire within the makespan");
+        assert!(res.recovery_time_s > 0.0);
+        assert!(res.wasted_gpu_s > 0.0, "checkpoint rollback discards work");
+        assert!(res.goodput_frac() < 1.0);
+        assert!(res.outcomes.values().any(|o| o.recoveries > 0));
+        let clean = run_rollmux(fluid_cfg(), mk());
+        assert!(
+            res.makespan_s > clean.makespan_s,
+            "chaos {} vs clean {}",
+            res.makespan_s,
+            clean.makespan_s
+        );
+        assert_eq!(clean.crashes, 0);
+        assert_eq!(clean.wasted_gpu_s, 0.0);
     }
 
     #[test]

@@ -13,9 +13,15 @@
 //! fluid fast path ([`fluid::FluidSimulator`], bounded-error closed-form
 //! rates for fleet-scale sweeps). [`engine::run_sim`] dispatches on
 //! [`engine::Fidelity`].
+//!
+//! The chaos tier (ISSUE 5, DESIGN.md §13) rides on both: a seeded fault
+//! stream ([`faults`]) injects node crashes and stragglers, healed by
+//! `coordinator::repair` with checkpoint-aware recovery; with the stream
+//! empty both tiers stay bitwise identical to the fault-free engine.
 
 pub mod calendar;
 pub mod engine;
+pub mod faults;
 pub mod fluid;
 pub mod gantt;
 
@@ -23,4 +29,5 @@ pub use engine::{
     run_sim, EventQueueKind, Fidelity, GroupScheduler, PhaseKind, PhaseRecord, SimConfig,
     SimResult, Simulator,
 };
+pub use faults::{FaultConfig, FaultEvent, FaultKind, FaultTraceGen};
 pub use fluid::FluidSimulator;

@@ -142,6 +142,20 @@ pub fn fleet_trace(seed: u64, n_jobs: usize, rate_scale: f64) -> Vec<JobSpec> {
         .collect()
 }
 
+/// Deterministic fault trace for chaos experiments (`rollmux exp
+/// chaos`, ISSUE 5): the default crash/straggler mix at a given MTBF,
+/// materialized to a horizon. The simulators normally pull the stream
+/// lazily via `SimConfig::faults`; this surface exists for offline
+/// analysis and tests that want the whole trace up front.
+pub fn fault_trace(
+    seed: u64,
+    mtbf_s: f64,
+    horizon_s: f64,
+) -> Vec<crate::sim::faults::FaultEvent> {
+    let cfg = crate::sim::faults::FaultConfig::with_mtbf(seed, mtbf_s);
+    crate::sim::faults::fault_trace(&cfg, horizon_s)
+}
+
 /// SLO assignment policies used in the §7.5 sensitivity study.
 #[derive(Clone, Copy, Debug)]
 pub enum SloPolicy {
@@ -249,6 +263,17 @@ mod tests {
         // Deterministic under the same seed.
         let again = fleet_trace(5, 2_000, 1.0);
         assert!(jobs.iter().zip(&again).all(|(a, b)| a.arrival_s == b.arrival_s));
+    }
+
+    #[test]
+    fn fault_trace_is_deterministic_and_bounded() {
+        let a = fault_trace(11, 3600.0, 200.0 * 3600.0);
+        let b = fault_trace(11, 3600.0, 200.0 * 3600.0);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x == y), "seeded determinism");
+        assert!((120..300).contains(&a.len()), "~200 events over 200 h: {}", a.len());
+        assert!(a.iter().all(|e| e.t <= 200.0 * 3600.0));
+        assert!(a.windows(2).all(|w| w[0].t <= w[1].t));
     }
 
     #[test]

@@ -170,6 +170,76 @@ fn prop_engine_bitwise_equal_across_queues_and_policies() {
     }
 }
 
+/// ISSUE 5 zero-fault anchor: with `faults: None` replaced by an armed-
+/// but-empty stream, the full queue × policy matrix above must stay
+/// bitwise identical — the chaos plumbing is invisible without events.
+#[test]
+fn prop_engine_bitwise_equal_with_empty_fault_stream() {
+    use rollmux::sim::faults::FaultConfig;
+    for seed in [7u64, 23] {
+        for intra in IntraPolicyKind::all() {
+            for queue in [EventQueueKind::Calendar, EventQueueKind::BinaryHeap] {
+                let mk_cfg = |faults| SimConfig {
+                    seed,
+                    intra,
+                    event_queue: queue,
+                    record_gantt: true,
+                    faults,
+                    ..Default::default()
+                };
+                let base = Simulator::new(
+                    mk_cfg(None),
+                    InterGroupScheduler::new(PhaseModel::default()),
+                    production_trace(seed, 40),
+                )
+                .run();
+                let armed = Simulator::new(
+                    mk_cfg(Some(FaultConfig::empty())),
+                    InterGroupScheduler::new(PhaseModel::default()),
+                    production_trace(seed, 40),
+                )
+                .run();
+                assert_bitwise_equal(&base, &armed, &format!("anchor {seed} {intra:?} {queue:?}"));
+            }
+        }
+    }
+}
+
+/// ISSUE 5: an ACTIVE fault stream must still be calendar/heap
+/// invariant — fault, recover and checkpoint-replay events pop in the
+/// same `(t, seq)` total order on both queue structures.
+#[test]
+fn prop_engine_bitwise_equal_across_queues_under_chaos() {
+    use rollmux::sim::faults::FaultConfig;
+    for seed in [7u64, 11] {
+        let mk_cfg = |queue| SimConfig {
+            seed,
+            event_queue: queue,
+            record_gantt: true,
+            faults: Some(FaultConfig::with_mtbf(seed ^ 0xC4A0, 1500.0)),
+            ..Default::default()
+        };
+        let trace = || philly_trace(seed, 25, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+        let cal = Simulator::new(
+            mk_cfg(EventQueueKind::Calendar),
+            InterGroupScheduler::new(PhaseModel::default()),
+            trace(),
+        )
+        .run();
+        let heap = Simulator::new(
+            mk_cfg(EventQueueKind::BinaryHeap),
+            InterGroupScheduler::new(PhaseModel::default()),
+            trace(),
+        )
+        .run();
+        assert!(cal.crashes > 0, "seed {seed}: the chaos stream must fire");
+        assert_eq!(cal.crashes, heap.crashes, "seed {seed}: crash counts");
+        assert_eq!(cal.recovery_time_s.to_bits(), heap.recovery_time_s.to_bits(), "seed {seed}");
+        assert_eq!(cal.wasted_gpu_s.to_bits(), heap.wasted_gpu_s.to_bits(), "seed {seed}");
+        assert_bitwise_equal(&cal, &heap, &format!("chaos queues seed {seed}"));
+    }
+}
+
 /// Migration-heavy contention (TailFree events interleave with phase
 /// completions at identical timestamps) stays bitwise equal too.
 #[test]

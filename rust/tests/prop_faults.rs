@@ -1,0 +1,242 @@
+//! ISSUE 5 gates for the chaos tier (DESIGN.md §13).
+//!
+//! Contracts:
+//!
+//! 1. **Zero-fault anchor.** `SimConfig::faults = None` and
+//!    `Some(empty stream)` produce **bitwise identical** `SimResult`s on
+//!    both tiers — arming the fault plumbing without events changes
+//!    nothing, so every pre-chaos equivalence gate keeps holding.
+//! 2. **Chaos determinism.** The same seed + fault config replays the
+//!    same chaos run bit-for-bit, on both tiers.
+//! 3. **Recovery accounting.** At nonzero MTBF on a fleet trace: crashes
+//!    fire, goodput drops strictly below busy, recovery time is
+//!    positive, no job is lost, and the residency-ledger invariant holds
+//!    after every crash/repair.
+//! 4. **Conservation.** Busy never exceeds provisioned GPU-seconds and
+//!    wasted never exceeds busy, faults or not.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::sim::engine::{run_sim, Fidelity, SimConfig, SimResult};
+use rollmux::sim::faults::{FaultConfig, FaultKind, FaultTraceGen};
+use rollmux::workload::trace::{fleet_trace, philly_trace, SloPolicy};
+use rollmux::workload::profiles::SimProfile;
+
+fn assert_bitwise_equal(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.events_processed, b.events_processed, "{ctx}: event counts");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits(), "{ctx}: cost");
+    assert_eq!(a.roll_busy_gpu_s.to_bits(), b.roll_busy_gpu_s.to_bits(), "{ctx}: roll busy");
+    assert_eq!(a.train_busy_gpu_s.to_bits(), b.train_busy_gpu_s.to_bits(), "{ctx}: train busy");
+    assert_eq!(a.roll_prov_gpu_s.to_bits(), b.roll_prov_gpu_s.to_bits(), "{ctx}: roll prov");
+    assert_eq!(a.train_prov_gpu_s.to_bits(), b.train_prov_gpu_s.to_bits(), "{ctx}: train prov");
+    assert_eq!(a.crashes, b.crashes, "{ctx}: crashes");
+    assert_eq!(a.stragglers, b.stragglers, "{ctx}: stragglers");
+    assert_eq!(a.evictions, b.evictions, "{ctx}: evictions");
+    assert_eq!(a.spills, b.spills, "{ctx}: spills");
+    assert_eq!(a.recovery_time_s.to_bits(), b.recovery_time_s.to_bits(), "{ctx}: recovery");
+    assert_eq!(a.wasted_gpu_s.to_bits(), b.wasted_gpu_s.to_bits(), "{ctx}: wasted");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}: outcome count");
+    for (id, oa) in &a.outcomes {
+        let ob = &b.outcomes[id];
+        assert_eq!(oa.finish_s.to_bits(), ob.finish_s.to_bits(), "{ctx} job {id}: finish");
+        assert_eq!(
+            oa.solo_actual_s.to_bits(),
+            ob.solo_actual_s.to_bits(),
+            "{ctx} job {id}: solo"
+        );
+        assert_eq!(oa.iters, ob.iters, "{ctx} job {id}: iters");
+        assert_eq!(oa.migrations, ob.migrations, "{ctx} job {id}: migrations");
+        assert_eq!(oa.recoveries, ob.recoveries, "{ctx} job {id}: recoveries");
+        assert_eq!(oa.recovery_s.to_bits(), ob.recovery_s.to_bits(), "{ctx} job {id}");
+    }
+    for (va, vb) in a.roll_node_busy_gpu_s.iter().zip(&b.roll_node_busy_gpu_s) {
+        for (x, y) in va.iter().zip(vb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: per-node busy");
+        }
+    }
+    for (x, y) in a.train_group_busy_gpu_s.iter().zip(&b.train_group_busy_gpu_s) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: per-group train busy");
+    }
+}
+
+fn run_with(
+    trace_seed: u64,
+    n_jobs: usize,
+    fidelity: Fidelity,
+    faults: Option<FaultConfig>,
+) -> SimResult {
+    let cfg = SimConfig { seed: trace_seed, fidelity, faults, ..Default::default() };
+    let trace = philly_trace(trace_seed, n_jobs, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+    run_sim(cfg, InterGroupScheduler::new(PhaseModel::default()), trace)
+}
+
+/// Contract 1: `faults: None` vs `faults: Some(empty)` — bitwise equal
+/// on both tiers. An armed-but-silent chaos layer is invisible.
+#[test]
+fn prop_zero_fault_anchor_bitwise_on_both_tiers() {
+    for seed in [7u64, 23] {
+        for fidelity in [Fidelity::Exact, Fidelity::Fluid] {
+            let none = run_with(seed, 40, fidelity, None);
+            let empty = run_with(seed, 40, fidelity, Some(FaultConfig::empty()));
+            assert_bitwise_equal(&none, &empty, &format!("seed {seed} {fidelity:?}"));
+            assert_eq!(none.crashes, 0);
+            assert_eq!(none.wasted_gpu_s, 0.0);
+            assert!((none.goodput_frac() - 1.0).abs() < 1e-12);
+        }
+    }
+    // A disabled stream (infinite MTBF) is the same anchor.
+    let none = run_with(11, 25, Fidelity::Exact, None);
+    let inf = run_with(
+        11,
+        25,
+        Fidelity::Exact,
+        Some(FaultConfig { mtbf_s: f64::INFINITY, ..Default::default() }),
+    );
+    assert_bitwise_equal(&none, &inf, "infinite MTBF");
+}
+
+/// Contract 2: chaos runs are seeded-deterministic on both tiers.
+#[test]
+fn prop_chaos_runs_are_deterministic() {
+    let faults = || Some(FaultConfig::with_mtbf(3, 1800.0));
+    for fidelity in [Fidelity::Exact, Fidelity::Fluid] {
+        let a = run_with(5, 30, fidelity, faults());
+        let b = run_with(5, 30, fidelity, faults());
+        assert_bitwise_equal(&a, &b, &format!("determinism {fidelity:?}"));
+    }
+}
+
+/// Contract 3 on the exact tier, small scale: chaos completes every job
+/// and the residency-ledger invariant (plus full release) holds.
+#[test]
+fn prop_exact_chaos_completes_jobs_and_ledger_stays_sound() {
+    let trace = philly_trace(13, 30, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+    let n = trace.len();
+    let cfg = SimConfig {
+        seed: 13,
+        faults: Some(FaultConfig {
+            seed: 99,
+            mtbf_s: 1200.0,
+            mean_repair_s: 300.0,
+            straggler_frac: 0.25,
+            straggler_factor: 1.5,
+            max_events: 100_000,
+        }),
+        ..Default::default()
+    };
+    let res = run_sim(cfg, InterGroupScheduler::new(PhaseModel::default()), trace);
+    assert_eq!(res.outcomes.len(), n, "chaos must not lose jobs");
+    assert!(res.crashes > 0, "stream must fire within the makespan");
+    assert!(res.recovery_time_s > 0.0);
+    assert!(res.outcomes.values().any(|o| o.recoveries > 0));
+    assert!(res.goodput_frac() < 1.0, "goodput strictly below busy under crashes");
+    // Busy stays within provisioned capacity even with interrupts.
+    assert!(res.roll_busy_gpu_s <= res.roll_prov_gpu_s + 1e-6);
+    assert!(res.train_busy_gpu_s <= res.train_prov_gpu_s + 1e-6);
+    assert!(res.wasted_gpu_s <= res.roll_busy_gpu_s + res.train_busy_gpu_s + 1e-6);
+}
+
+/// Contract 3 on the fluid tier at fleet scale (the acceptance
+/// criterion's shape, CI-sized here; `rollmux exp chaos` runs the full
+/// 100k): nonzero MTBF on a fleet trace → recovery accounting visible,
+/// nothing lost.
+#[test]
+fn prop_fluid_fleet_chaos_recovery_accounting() {
+    let n = 2_000;
+    let trace = fleet_trace(7, n, 1.0);
+    let cfg = SimConfig {
+        seed: 7,
+        fidelity: Fidelity::Fluid,
+        faults: Some(FaultConfig::with_mtbf(41, 1800.0)),
+        ..Default::default()
+    };
+    let sched = InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8);
+    let res = run_sim(cfg, sched, trace.clone());
+    assert_eq!(res.outcomes.len(), n, "chaos must not lose jobs");
+    assert!(res.crashes > 0);
+    assert!(res.evictions + res.spills > 0, "crashes must actually evict members");
+    assert!(res.recovery_time_s > 0.0, "recovery time > 0");
+    assert!(res.goodput_frac() < 1.0, "goodput < busy");
+    assert!(res.wasted_gpu_s > 0.0);
+    // Against the fault-free run: recovery shows up as lost goodput and
+    // a longer (or equal) makespan.
+    let clean_cfg = SimConfig { seed: 7, fidelity: Fidelity::Fluid, ..Default::default() };
+    let clean = run_sim(
+        clean_cfg,
+        InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8),
+        trace,
+    );
+    assert_eq!(clean.crashes, 0);
+    assert!((clean.goodput_frac() - 1.0).abs() < 1e-12);
+    // (No makespan ordering assertion: spills reshape later placements,
+    // so the fleet's critical path is not monotone under faults.)
+}
+
+/// The residency invariant holds after EVERY crash/repair, checked by
+/// driving the scheduler's repair path directly with a seeded fault
+/// stream over a live placement churn.
+#[test]
+fn prop_ledger_invariant_after_every_crash_repair() {
+    use rollmux::coordinator::repair::pick_victim;
+    let trace = philly_trace(19, 60, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+    let mut sched = InterGroupScheduler::new(PhaseModel::default());
+    let mut gen = FaultTraceGen::new(FaultConfig::with_mtbf(5, 1.0));
+    let mut crashes = 0usize;
+    for (i, spec) in trace.into_iter().enumerate() {
+        let id = spec.id;
+        sched.schedule(spec);
+        assert!(sched.residency_ledger().check_invariant(), "after schedule {i}");
+        // Interleave crashes with placement churn.
+        if i % 3 == 0 {
+            let ev = gen.next().expect("stream is effectively unbounded");
+            if let FaultKind::NodeCrash { .. } = ev.kind {
+                if let Some((gid, node)) = pick_victim(&sched.groups, ev.victim) {
+                    sched.repair_node_crash(gid, node);
+                    crashes += 1;
+                    assert!(
+                        sched.residency_ledger().check_invariant(),
+                        "invariant after crash/repair #{crashes}"
+                    );
+                }
+            }
+        }
+        if i % 4 == 3 {
+            sched.complete_job(id.saturating_sub(3));
+            assert!(sched.residency_ledger().check_invariant(), "after completion {i}");
+        }
+    }
+    assert!(crashes > 0, "the churn must exercise repair");
+    // Drain everything: the ledger must empty out completely.
+    for id in 0..60 {
+        sched.complete_job(id);
+    }
+    assert_eq!(sched.residency_ledger().tracked_nodes(), 0);
+}
+
+/// Stragglers alone: no state loss (no recoveries), but overhead shows
+/// up as wasted GPU-time on both tiers.
+#[test]
+fn prop_stragglers_only_waste_without_recovery() {
+    let faults = || {
+        Some(FaultConfig {
+            seed: 21,
+            mtbf_s: 600.0,
+            mean_repair_s: 1.0,
+            straggler_frac: 1.0,
+            straggler_factor: 1.6,
+            max_events: 100_000,
+        })
+    };
+    let exact = run_with(29, 25, Fidelity::Exact, faults());
+    assert_eq!(exact.crashes, 0);
+    assert_eq!(exact.recovery_time_s, 0.0);
+    assert!(exact.stragglers > 0, "some event must hit an in-flight rollout");
+    assert!(exact.wasted_gpu_s > 0.0);
+    assert!(exact.outcomes.values().all(|o| o.recoveries == 0));
+    let fluid = run_with(29, 25, Fidelity::Fluid, faults());
+    assert_eq!(fluid.crashes, 0);
+    assert!(fluid.stragglers > 0);
+    assert!(fluid.wasted_gpu_s > 0.0);
+    assert!(fluid.outcomes.values().all(|o| o.recoveries == 0));
+}

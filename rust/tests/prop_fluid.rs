@@ -185,6 +185,36 @@ fn assert_bitwise_equal_no_records(a: &SimResult, b: &SimResult, ctx: &str) {
     }
 }
 
+/// ISSUE 5 zero-fault anchor on the fluid tier: an armed-but-empty
+/// chaos stream must be bitwise invisible across the intra-policy
+/// matrix (and the fault counters stay zero).
+#[test]
+fn prop_fluid_zero_fault_anchor_bitwise() {
+    use rollmux::sim::faults::FaultConfig;
+    for seed in [3u64, 9] {
+        let mk = || philly_trace(seed, 40, SimProfile::Mixed, SloPolicy::Drawn(1.0, 2.0));
+        for intra in IntraPolicyKind::all() {
+            let ctx = format!("fluid anchor seed {seed} {intra:?}");
+            let base_cfg =
+                SimConfig { seed, intra, fidelity: Fidelity::Fluid, ..Default::default() };
+            let armed_cfg = SimConfig {
+                seed,
+                intra,
+                fidelity: Fidelity::Fluid,
+                faults: Some(FaultConfig::empty()),
+                ..Default::default()
+            };
+            let base = run_sim(base_cfg, InterGroupScheduler::new(PhaseModel::default()), mk());
+            let armed = run_sim(armed_cfg, InterGroupScheduler::new(PhaseModel::default()), mk());
+            assert_bitwise_equal_no_records(&base, &armed, &ctx);
+            assert_eq!(base.crashes, 0, "{ctx}");
+            assert_eq!(armed.crashes, 0, "{ctx}");
+            assert_eq!(armed.wasted_gpu_s, 0.0, "{ctx}");
+            assert!(armed.outcomes.values().all(|o| o.recoveries == 0), "{ctx}");
+        }
+    }
+}
+
 /// Contract 3: the exact tier is bitwise stable across gantt on/off for
 /// every intra policy, `reset_with_trace` equals fresh construction, and
 /// the `fidelity` field is inert on a directly-constructed `Simulator`.

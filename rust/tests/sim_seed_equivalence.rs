@@ -473,6 +473,10 @@ mod seed {
                         slo: rt.spec.slo,
                         iters: rt.iter,
                         migrations: rt.migrations,
+                        // The transcribed pre-refactor engine predates the
+                        // chaos tier: it never recovers.
+                        recoveries: 0,
+                        recovery_s: 0.0,
                     },
                 )
             };

@@ -4,10 +4,10 @@
 # across PRs; see EXPERIMENTS.md §Perf for methodology). ISSUE 1
 # produced BENCH_1.json, ISSUE 2 BENCH_2.json; the generation is now a
 # parameter so each PR appends its own file instead of editing this
-# script (ISSUE 4 default: BENCH_4.json).
+# script (ISSUE 5 default: BENCH_5.json).
 #
 # Usage: scripts/bench.sh [gen] [extra cargo args...]
-#   gen              bench generation number (default: 4 -> BENCH_4.json)
+#   gen              bench generation number (default: 5 -> BENCH_5.json)
 #   BENCH_OUT=path   override the output file entirely
 #
 # Each bench binary appends one JSON object per measurement to
@@ -16,7 +16,7 @@
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
-GEN="4"
+GEN="5"
 if [[ $# -ge 1 && "$1" =~ ^[0-9]+$ ]]; then
     GEN="$1"
     shift
@@ -32,8 +32,10 @@ cd "$ROOT"
 # acceptance pair) and simulator the events/s engine benches (calendar
 # queue vs binary heap). ISSUE 4 adds the gantt on/off events series and
 # the two-tier fleet series (fluid/fleet_100k, fluid-vs-exact at 10k —
-# the >= 10x acceptance pair; compare generations with
-# scripts/bench_compare.sh).
+# the >= 10x acceptance pair). ISSUE 5 adds the chaos series
+# (fluid/chaos_{10k,100k} + exact/chaos_2k: failure injection overhead
+# vs the fault-free runs on the same traces; compare generations with
+# scripts/bench_compare.sh, e.g. BENCH_4.json vs BENCH_5.json).
 cargo bench --bench scheduler_latency "$@"
 cargo bench --bench simulator "$@"
 # ISSUE 2: dispatch throughput of the extracted orchestration core, per
