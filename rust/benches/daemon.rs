@@ -1,0 +1,103 @@
+//! Bench: `rollmuxd` control-plane costs (ISSUE 6) — admission
+//! throughput through the bounded queue + trial-admission path, the
+//! write-ahead journal's append overhead, and cold-start journal
+//! replay (crash recovery). Set BENCH_JSON_OUT (scripts/bench.sh does)
+//! to collect machine-readable records for BENCH_6.json.
+
+use std::fs;
+use std::path::PathBuf;
+
+use rollmux::runtime::{Daemon, DaemonConfig};
+use rollmux::util::bench;
+
+const BIN: &str = "daemon";
+
+fn admit_line(id: usize) -> String {
+    let t_roll = 100.0 + (id % 7) as f64 * 10.0;
+    format!(
+        "{{\"cmd\":\"admit\",\"job\":{{\"id\":{id},\"n_iters\":6,\"slo\":3.0,\
+         \"n_roll_gpus\":8,\"n_train_gpus\":8,\"params_b\":7.0,\
+         \"t_roll\":{t_roll},\"t_train\":70}}}}"
+    )
+}
+
+/// One operator session: n admits interleaved with time advances.
+fn session(n: usize) -> Vec<String> {
+    let mut s = Vec::new();
+    for id in 0..n {
+        s.push(admit_line(id));
+        if id % 8 == 7 {
+            s.push("{\"cmd\":\"advance\",\"dt\":50}".into());
+        }
+    }
+    s
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("rollmux_bench_daemon_{}_{tag}.jsonl", std::process::id()));
+    p
+}
+
+fn main() {
+    println!("== daemon ==");
+
+    // Admission throughput on the virtual cluster, journal disabled:
+    // parse + validate + trial-admit (usage mark / submit / cap check)
+    // per command line.
+    for &n in &[64usize, 256] {
+        let lines = session(n);
+        let stats = bench(2, 10, || {
+            let mut d = Daemon::new_virtual(DaemonConfig::default());
+            let mut replies = 0usize;
+            for l in &lines {
+                replies += d.handle_line(l).len();
+            }
+            assert!(replies >= n);
+            replies
+        });
+        stats.report_json(BIN, &format!("admit_throughput @{n} jobs"), lines.len() as f64);
+    }
+
+    // Same session with the write-ahead journal armed: measures the
+    // append + fsync-batching overhead on the admission path.
+    {
+        let n = 256usize;
+        let lines = session(n);
+        let path = scratch("wal");
+        let stats = bench(2, 10, || {
+            let _ = fs::remove_file(&path);
+            let mut d = Daemon::new_virtual(DaemonConfig::default());
+            d.attach_journal(&path).expect("attach journal");
+            for l in &lines {
+                d.handle_line(l);
+            }
+            d.flush().expect("flush journal");
+        });
+        let _ = fs::remove_file(&path);
+        stats.report_json(BIN, &format!("admit_journaled @{n} jobs"), lines.len() as f64);
+    }
+
+    // Cold-start crash recovery: replay a journaled session into a
+    // fresh daemon (scan + CRC checks + command re-application).
+    for &n in &[256usize, 1024] {
+        let lines = session(n);
+        let path = scratch(&format!("replay_{n}"));
+        let _ = fs::remove_file(&path);
+        let mut d = Daemon::new_virtual(DaemonConfig::default());
+        d.attach_journal(&path).expect("attach journal");
+        for l in &lines {
+            d.handle_line(l);
+        }
+        d.flush().expect("flush journal");
+        drop(d);
+        let stats = bench(2, 10, || {
+            let mut d = Daemon::new_virtual(DaemonConfig::default());
+            let replayed = d.attach_journal(&path).expect("replay journal");
+            assert_eq!(replayed, lines.len());
+            replayed
+        });
+        let _ = fs::remove_file(&path);
+        stats.report_json(BIN, &format!("journal_replay @{n} cmds"), lines.len() as f64);
+    }
+}

@@ -542,6 +542,16 @@ impl InterGroupScheduler {
         self.groups.get(gi)
     }
 
+    /// Live group ids, ascending. The daemon's heartbeat sweep iterates
+    /// this (ISSUE 6): sorted order makes escalation order — and with it
+    /// the injected fault sequence — deterministic regardless of how
+    /// deprovisioning has permuted the backing `groups` vec.
+    pub fn group_ids(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.groups.iter().map(|g| g.id).collect();
+        ids.sort_unstable();
+        ids
+    }
+
     /// Group ids currently held by the unsaturated index, ascending —
     /// exposed for the equivalence property tests.
     #[doc(hidden)]

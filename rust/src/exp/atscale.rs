@@ -42,12 +42,20 @@ pub fn fig13(opts: &ExpOpts) {
             Fig13Run::Mux(Box::new(run_rollmux(cfg, trace.clone())))
         }
     });
-    let Fig13Run::Mux(fluid) = runs.pop().expect("four runs") else { unreachable!() };
-    let fluid = *fluid;
-    let Fig13Run::Base(verl) = runs.pop().expect("four runs") else { unreachable!() };
-    let Fig13Run::Base(solo) = runs.pop().expect("four runs") else { unreachable!() };
-    let Fig13Run::Mux(mux) = runs.pop().expect("four runs") else { unreachable!() };
-    let mux = *mux;
+    // Pops mirror the spawn order above; bail gracefully (satellite of
+    // ISSUE 6: no panicking entry points) if that ever goes out of sync.
+    let (fluid, verl, solo, mux) = match (runs.pop(), runs.pop(), runs.pop(), runs.pop()) {
+        (
+            Some(Fig13Run::Mux(fluid)),
+            Some(Fig13Run::Base(verl)),
+            Some(Fig13Run::Base(solo)),
+            Some(Fig13Run::Mux(mux)),
+        ) => (*fluid, verl, solo, *mux),
+        _ => {
+            eprintln!("fig13: internal error: concurrent runs came back in the wrong shape");
+            return;
+        }
+    };
 
     // Fig. 13a: provisioning cost.
     let mut t = Table::new(
@@ -146,8 +154,11 @@ fn mean_usage(curve: &[(f64, usize, usize)], makespan: f64) -> (f64, f64) {
         rs += dt * w[0].1 as f64;
         ts += dt * w[0].2 as f64;
     }
-    // Tail segment to makespan.
-    let last = curve.last().unwrap();
+    // Tail segment to makespan (the len >= 2 guard above means the
+    // curve is non-empty here).
+    let Some(last) = curve.last() else {
+        return (0.0, 0.0);
+    };
     rs += (makespan - last.0).max(0.0) * last.1 as f64;
     ts += (makespan - last.0).max(0.0) * last.2 as f64;
     (rs / makespan, ts / makespan)

@@ -8,6 +8,7 @@ pub mod chaos;
 pub mod fleet;
 pub mod micro;
 pub mod motivation;
+pub mod serve;
 pub mod simstudy;
 
 /// Common experiment options from the CLI.
@@ -50,6 +51,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("fig15", "Simulation end-to-end: cost + SLO attainment", simstudy::fig15),
         ("fleet", "100k-job fleet what-if sweep (fluid tier, ISSUE 4)", fleet::fleet),
         ("chaos", "Failure injection: MTBF x caps with elastic repair (ISSUE 5)", chaos::chaos),
+        ("serve", "Scripted rollmuxd session on the virtual cluster (ISSUE 6)", serve::serve),
     ]
 }
 

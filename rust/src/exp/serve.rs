@@ -1,0 +1,116 @@
+//! `rollmux exp serve` — a scripted `rollmuxd` session on the virtual
+//! cluster (DESIGN.md §14).
+//!
+//! Exercises the daemon end-to-end in-process: admission under a GPU
+//! cap and a bounded queue, malformed-input rejection (typed JSON
+//! errors), targeted fault injection on top of the seeded chaos
+//! stream, heartbeats, cancellation, and a graceful drain with final
+//! accounting. The transcript is a pure function of the seed — the
+//! session is replayed on a second daemon and the two transcripts are
+//! compared byte-for-byte, which is the same property the CI smoke job
+//! checks across `ROLLMUX_THREADS` settings.
+
+use crate::runtime::{Daemon, DaemonConfig};
+use crate::sim::{FaultConfig, SimConfig};
+
+use super::ExpOpts;
+
+fn admit_line(id: usize, t_roll: f64, t_train: f64, gpus: usize, iters: usize) -> String {
+    format!(
+        "{{\"cmd\":\"admit\",\"job\":{{\"id\":{id},\"n_iters\":{iters},\"slo\":3.0,\
+         \"n_roll_gpus\":{gpus},\"n_train_gpus\":{gpus},\"params_b\":7.0,\
+         \"t_roll\":{t_roll},\"t_train\":{t_train}}}}}"
+    )
+}
+
+/// The scripted operator session: n admits (two sizes), a garbage line,
+/// an invalid job, heartbeats, a targeted crash, a cancel, stats, drain.
+fn session(n: usize) -> Vec<String> {
+    let mut s = Vec::new();
+    for id in 0..n {
+        let (gpus, t_roll, t_train) = if id % 3 == 2 {
+            (16, 140.0 + 10.0 * id as f64, 90.0)
+        } else {
+            (8, 100.0 + 5.0 * id as f64, 70.0)
+        };
+        s.push(admit_line(id, t_roll, t_train, gpus, 6));
+    }
+    s.push("{\"cmd\":\"admit\",".into()); // torn line -> typed parse error
+    s.push("{\"cmd\":\"admit\",\"job\":{\"id\":-1}}".into()); // invalid job
+    s.push("{\"cmd\":\"beat\",\"group\":0}".into());
+    s.push("{\"cmd\":\"advance\",\"dt\":300}".into());
+    s.push("{\"cmd\":\"fault\",\"kind\":\"crash\",\"group\":0,\"node\":0}".into());
+    s.push("{\"cmd\":\"advance\",\"dt\":600}".into());
+    s.push(format!("{{\"cmd\":\"cancel\",\"job\":{}}}", n - 1));
+    s.push("{\"cmd\":\"stats\"}".into());
+    s.push("{\"cmd\":\"drain\"}".into());
+    s
+}
+
+fn cfg(opts: &ExpOpts) -> DaemonConfig {
+    DaemonConfig {
+        sim: SimConfig {
+            seed: opts.seed,
+            faults: Some(FaultConfig {
+                seed: opts.seed,
+                mtbf_s: 900.0,
+                mean_repair_s: 90.0,
+                straggler_frac: 0.3,
+                straggler_factor: 1.4,
+                max_events: 12,
+            }),
+            ..Default::default()
+        },
+        queue_cap: 4,
+        gpu_cap: 64,
+        ..Default::default()
+    }
+}
+
+fn transcript(opts: &ExpOpts, lines: &[String]) -> Vec<(String, Vec<String>)> {
+    let mut d = Daemon::new_virtual(cfg(opts));
+    lines.iter().map(|l| (l.clone(), d.handle_line(l))).collect()
+}
+
+pub fn serve(opts: &ExpOpts) {
+    let n = ((6.0 * opts.scale) as usize).clamp(4, 12);
+    let lines = session(n);
+    println!(
+        "scripted rollmuxd session: {n} admits under a 64-GPU cap, chaos stream on \
+         (seed {}):\n",
+        opts.seed
+    );
+    let first = transcript(opts, &lines);
+    for (cmd, replies) in &first {
+        println!(">> {cmd}");
+        for r in replies {
+            println!("   {r}");
+        }
+    }
+    let second = transcript(opts, &lines);
+    let identical = first == second;
+    let n_lines: usize = first.iter().map(|(_, r)| r.len()).sum();
+    let verdict = if identical {
+        "byte-identical"
+    } else {
+        "DIVERGED"
+    };
+    println!("\ndeterminism check: replayed session {verdict} ({n_lines} response lines)");
+    assert!(identical, "virtual-cluster sessions must be deterministic");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_session_is_deterministic_and_drains() {
+        let opts = ExpOpts { seed: 11, scale: 0.5, gantt: false };
+        let lines = session(4);
+        let a = transcript(&opts, &lines);
+        let b = transcript(&opts, &lines);
+        assert_eq!(a, b);
+        let last = a.last().and_then(|(_, r)| r.last()).expect("drain reply");
+        assert!(last.contains("\"drained\""), "{last}");
+    }
+}

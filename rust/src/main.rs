@@ -5,64 +5,98 @@
 //!   exp all  [...]                              run every experiment
 //!   list                                        list experiment ids
 //!   run [--seed N] [--scale F]                  admit a synthetic trace live
+//!   serve [--wall] [--journal PATH] [...]       rollmuxd: JSONL scheduler daemon
 //!   info                                        print cluster + artifact info
 //!
 //! (Arg parsing is hand-rolled: this offline build has no clap — see
-//! Cargo.toml.)
+//! Cargo.toml.) Entry points return nonzero exit codes instead of
+//! panicking: bad flag values exit 2, runtime I/O failures exit 1
+//! (ISSUE 6 satellite).
+
+use std::io::BufRead;
+use std::process::ExitCode;
+use std::str::FromStr;
 
 use rollmux::exp::{self, ExpOpts};
+use rollmux::runtime::{Daemon, DaemonConfig};
+use rollmux::sim::FaultConfig;
 
-fn main() {
+fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut it = args.iter();
     match it.next().map(String::as_str) {
         Some("exp") => {
-            let id = it.next().cloned().unwrap_or_else(|| {
+            let Some(id) = it.next().cloned() else {
                 eprintln!("usage: rollmux exp <id>|all [--seed N] [--scale F] [--gantt]");
-                std::process::exit(2);
-            });
-            let opts = parse_opts(&args[2..]);
+                return ExitCode::from(2);
+            };
+            let opts = match parse_opts(&args[2..]) {
+                Ok(opts) => opts,
+                Err(e) => {
+                    eprintln!("rollmux exp: {e}");
+                    return ExitCode::from(2);
+                }
+            };
             if id == "all" {
                 exp::run_all(&opts);
             } else if !exp::run(&id, &opts) {
                 eprintln!("unknown experiment '{id}'; try `rollmux list`");
-                std::process::exit(2);
+                return ExitCode::from(2);
             }
+            ExitCode::SUCCESS
         }
         Some("list") => {
             println!("experiments (rollmux exp <id>):");
             for (name, desc, _) in exp::registry() {
                 println!("  {name:<8} {desc}");
             }
+            ExitCode::SUCCESS
         }
-        Some("run") => {
-            let opts = parse_opts(&args[1..]);
-            serve_demo(&opts);
+        Some("run") => match parse_opts(&args[1..]) {
+            Ok(opts) => {
+                serve_demo(&opts);
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("rollmux run: {e}");
+                ExitCode::from(2)
+            }
+        },
+        Some("serve") => serve(&args[1..]),
+        Some("info") => {
+            info();
+            ExitCode::SUCCESS
         }
-        Some("info") => info(),
         _ => {
             eprintln!(
                 "rollmux — phase-level multiplexing for disaggregated RL post-training\n\
-                 usage: rollmux <exp|list|run|info> ...\n\
+                 usage: rollmux <exp|list|run|serve|info> ...\n\
                  try:   rollmux list"
             );
-            std::process::exit(2);
+            ExitCode::from(2)
         }
     }
 }
 
-fn parse_opts(rest: &[String]) -> ExpOpts {
+/// Parse one flag value strictly: a missing or unparseable value is an
+/// error, not a silent fallback to the default.
+fn flag_value<T: FromStr>(rest: &[String], i: usize, flag: &str) -> Result<T, String> {
+    let raw = rest.get(i).ok_or_else(|| format!("{flag} needs a value"))?;
+    raw.parse().map_err(|_| format!("{flag}: bad value {raw:?}"))
+}
+
+fn parse_opts(rest: &[String]) -> Result<ExpOpts, String> {
     let mut opts = ExpOpts::default();
     let mut i = 0;
     while i < rest.len() {
         match rest[i].as_str() {
             "--seed" => {
                 i += 1;
-                opts.seed = rest.get(i).and_then(|s| s.parse().ok()).unwrap_or(opts.seed);
+                opts.seed = flag_value(rest, i, "--seed")?;
             }
             "--scale" => {
                 i += 1;
-                opts.scale = rest.get(i).and_then(|s| s.parse().ok()).unwrap_or(opts.scale);
+                opts.scale = flag_value(rest, i, "--scale")?;
             }
             "--gantt" => opts.gantt = true,
             other => {
@@ -71,7 +105,139 @@ fn parse_opts(rest: &[String]) -> ExpOpts {
         }
         i += 1;
     }
-    opts
+    Ok(opts)
+}
+
+/// `rollmux serve` — run `rollmuxd` over stdin/stdout (DESIGN.md §14).
+///
+/// One JSONL command per input line, one JSON response object per output
+/// line; diagnostics go to stderr. With `--journal PATH` every mutating
+/// command is write-ahead journaled and an existing journal is replayed
+/// before the first command (crash recovery). `--wall` swaps the
+/// deterministic virtual cluster for the wall-clock driver.
+struct ServeOpts {
+    cfg: DaemonConfig,
+    wall: bool,
+    journal: Option<String>,
+}
+
+fn parse_serve(rest: &[String]) -> Result<ServeOpts, String> {
+    let mut cfg = DaemonConfig::default();
+    let mut wall = false;
+    let mut journal: Option<String> = None;
+    let mut mtbf: Option<f64> = None;
+    let mut seed = FaultConfig::default().seed;
+    let mut i = 0;
+    while i < rest.len() {
+        let flag = rest[i].as_str();
+        match flag {
+            "--virtual" => wall = false,
+            "--wall" => wall = true,
+            "--journal" => {
+                i += 1;
+                journal = Some(rest.get(i).ok_or("--journal needs a path")?.clone());
+            }
+            "--queue-cap" => {
+                i += 1;
+                cfg.queue_cap = flag_value(rest, i, flag)?;
+            }
+            "--gpu-cap" => {
+                i += 1;
+                cfg.gpu_cap = flag_value(rest, i, flag)?;
+            }
+            "--retry-base" => {
+                i += 1;
+                cfg.retry_base_s = flag_value(rest, i, flag)?;
+            }
+            "--retry-max" => {
+                i += 1;
+                cfg.retry_max = flag_value(rest, i, flag)?;
+            }
+            "--heartbeat" => {
+                i += 1;
+                cfg.heartbeat_timeout_s = flag_value(rest, i, flag)?;
+            }
+            "--repair-s" => {
+                i += 1;
+                cfg.repair_s = flag_value(rest, i, flag)?;
+            }
+            "--sync-every" => {
+                i += 1;
+                cfg.sync_every = flag_value(rest, i, flag)?;
+            }
+            "--time-scale" => {
+                i += 1;
+                cfg.time_scale = flag_value(rest, i, flag)?;
+            }
+            "--mtbf" => {
+                i += 1;
+                mtbf = Some(flag_value(rest, i, flag)?);
+            }
+            "--seed" => {
+                i += 1;
+                seed = flag_value(rest, i, flag)?;
+            }
+            other => return Err(format!("unknown flag {other}")),
+        }
+        i += 1;
+    }
+    if let Some(mtbf_s) = mtbf {
+        // Enable the chaos stream on the virtual cluster (ISSUE 5
+        // machinery attacking the live loop).
+        cfg.sim.faults = Some(FaultConfig { seed, mtbf_s, ..Default::default() });
+    }
+    Ok(ServeOpts { cfg, wall, journal })
+}
+
+fn serve(rest: &[String]) -> ExitCode {
+    let opts = match parse_serve(rest) {
+        Ok(opts) => opts,
+        Err(e) => {
+            eprintln!("rollmux serve: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let mut daemon = if opts.wall {
+        Daemon::new_wall(opts.cfg)
+    } else {
+        Daemon::new_virtual(opts.cfg)
+    };
+    if let Some(path) = &opts.journal {
+        match daemon.attach_journal(std::path::Path::new(path)) {
+            Ok(0) => {}
+            Ok(n) => eprintln!("rollmux serve: recovered — replayed {n} journaled commands"),
+            Err(e) => {
+                eprintln!("rollmux serve: journal {path}: {e}");
+                return ExitCode::from(1);
+            }
+        }
+    }
+    let stdin = std::io::stdin();
+    let mut lock = stdin.lock();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match lock.read_line(&mut line) {
+            Ok(0) => break, // EOF drains the pipe: flush and exit clean
+            Ok(_) => {}
+            Err(e) => {
+                eprintln!("rollmux serve: stdin: {e}");
+                let _ = daemon.flush();
+                return ExitCode::from(1);
+            }
+        }
+        for out in daemon.handle_line(&line) {
+            println!("{out}");
+        }
+        if daemon.is_shutdown() {
+            break;
+        }
+    }
+    if let Err(e) = daemon.flush() {
+        eprintln!("rollmux serve: journal flush: {e}");
+        return ExitCode::from(1);
+    }
+    ExitCode::SUCCESS
 }
 
 /// Live demo: admit a small synthetic trace through Algorithm 1 and print

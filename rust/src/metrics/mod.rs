@@ -46,6 +46,9 @@ pub fn sim_result_json(r: &SimResult) -> Json {
         ("train_bubble", num(tb)),
         ("makespan_s", num(r.makespan_s)),
         ("events_processed", num(r.events_processed as f64)),
+        // Open-world accounting (ISSUE 6): jobs cancelled mid-run or
+        // rolled back after a failed trial admission; zero on batch runs.
+        ("cancelled", num(r.cancelled as f64)),
         // Chaos-tier accounting (ISSUE 5; all zero on fault-free runs).
         ("crashes", num(r.crashes as f64)),
         ("stragglers", num(r.stragglers as f64)),
@@ -199,6 +202,8 @@ mod tests {
         assert_eq!(outs.len(), 1);
         assert_eq!(outs[0].get("iters").unwrap().as_usize(), Some(3));
         assert!(!parsed.get("timeline").unwrap().as_arr().unwrap().is_empty());
+        // ISSUE 6: open-world cancellation count (zero on batch runs).
+        assert_eq!(parsed.get("cancelled").unwrap().as_usize(), Some(0));
         // ISSUE 3: the streaming per-resource busy views are exported.
         assert!(parsed.get("events_processed").unwrap().as_f64().unwrap() > 0.0);
         let per_node = parsed.get("roll_node_busy_gpu_s").unwrap().as_arr().unwrap();

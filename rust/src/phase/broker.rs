@@ -2,6 +2,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 pub type ResourceId = usize;
 
@@ -59,6 +60,38 @@ impl PhaseBroker {
                 return PhaseGuard { broker: self.clone(), resource, ticket };
             }
             rs = self.inner.cv.wait(rs).unwrap();
+        }
+    }
+
+    /// Bounded-wait acquisition (ISSUE 6): like [`acquire`], but give up
+    /// after `timeout` and withdraw the queued ticket. A `None` return
+    /// leaves the broker exactly as if the call never happened — an
+    /// expired waiter cannot wedge the FIFO for the tickets behind it,
+    /// which is what lets the daemon's drain path escape a stuck phase.
+    ///
+    /// [`acquire`]: PhaseBroker::acquire
+    pub fn acquire_timeout(&self, resource: ResourceId, timeout: Duration) -> Option<PhaseGuard> {
+        let deadline = Instant::now() + timeout;
+        let ticket = self.ticket();
+        let mut rs = self.inner.resources.lock().unwrap();
+        rs[resource].queue.push_back(ticket);
+        loop {
+            let r = &mut rs[resource];
+            if r.holder.is_none() && r.queue.front() == Some(&ticket) {
+                r.queue.pop_front();
+                r.holder = Some(ticket);
+                return Some(PhaseGuard { broker: self.clone(), resource, ticket });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                r.queue.retain(|&t| t != ticket);
+                drop(rs);
+                // Withdrawing from the middle of the queue may have
+                // un-blocked the ticket that was waiting behind us.
+                self.inner.cv.notify_all();
+                return None;
+            }
+            rs = self.inner.cv.wait_timeout(rs, deadline - now).unwrap().0;
         }
     }
 
@@ -197,6 +230,52 @@ mod tests {
         assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
         // Queue drained: a non-blocking attempt succeeds again.
         assert!(broker.try_acquire(0).is_some());
+    }
+
+    #[test]
+    fn acquire_timeout_expires_and_withdraws_cleanly() {
+        let broker = PhaseBroker::new(1);
+        let g = broker.acquire(0);
+        // Expires while the permit is held; the dead waiter must leave
+        // no ticket behind.
+        assert!(broker.acquire_timeout(0, Duration::from_millis(10)).is_none());
+        assert_eq!(broker.waiters(0), 0);
+        drop(g);
+        // Broker is clean: bounded-wait acquisition now succeeds fast.
+        assert!(broker.acquire_timeout(0, Duration::from_secs(5)).is_some());
+    }
+
+    #[test]
+    fn expired_waiter_does_not_wedge_the_queue() {
+        let broker = PhaseBroker::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let g = broker.acquire(0);
+        // Waiter 0 will give up; waiter 1 blocks behind it.
+        let b0 = broker.clone();
+        let o0 = order.clone();
+        let h0 = std::thread::spawn(move || {
+            if b0.acquire_timeout(0, Duration::from_millis(30)).is_none() {
+                o0.lock().unwrap().push("timeout");
+            }
+        });
+        while broker.waiters(0) != 1 {
+            std::thread::yield_now();
+        }
+        let b1 = broker.clone();
+        let o1 = order.clone();
+        let h1 = std::thread::spawn(move || {
+            let _g = b1.acquire(0);
+            o1.lock().unwrap().push("acquired");
+        });
+        while broker.waiters(0) != 2 {
+            std::thread::yield_now();
+        }
+        // Let waiter 0 expire while the permit is still held, then
+        // release: waiter 1 must run despite the corpse ahead of it.
+        h0.join().unwrap();
+        drop(g);
+        h1.join().unwrap();
+        assert_eq!(*order.lock().unwrap(), vec!["timeout", "acquired"]);
     }
 
     #[test]

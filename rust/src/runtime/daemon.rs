@@ -1,0 +1,1186 @@
+//! `rollmuxd` — the long-running multi-tenant scheduler daemon
+//! (ISSUE 6, DESIGN.md §14).
+//!
+//! The paper evaluates the two-tier scheduler as a batch planner; its
+//! production claim presumes a control plane that survives its own
+//! failures. This module is that control plane: a JSONL command loop
+//! (`rollmux serve`) over the same `InterGroupScheduler` +
+//! orchestration core the simulator runs, backed either by
+//!
+//!  * the DES engine as a deterministic **virtual cluster**
+//!    ([`Simulator::open`]) — every robustness behavior below is
+//!    bit-for-bit replayable and therefore testable; or
+//!  * the **wall-clock** driver ([`drive_group`]): admission and
+//!    placement happen live, execution runs on real threads at drain.
+//!
+//! Robustness surface:
+//!
+//!  * **Write-ahead journal** — every mutating input command is
+//!    CRC-framed and appended *before* it is applied (fsync-batched).
+//!    Daemon state is a pure function of the accepted command sequence,
+//!    so recovery = truncate the torn tail + replay ([`Journal`]).
+//!    Decision records ride along as `note` frames (the seed of the
+//!    ROADMAP item 5 flight recorder) and are skipped on replay.
+//!  * **Bounded admission** — a FIFO queue of capacity `queue_cap`
+//!    with trial admission against `gpu_cap` (mark → submit → check →
+//!    rollback), exponential backoff between retries, and explicit
+//!    `backpressure` / `timeout` rejections instead of unbounded
+//!    queueing.
+//!  * **Heartbeat liveness** — groups that miss their beat window are
+//!    escalated through the same `repair_node_crash` surgery the chaos
+//!    tier uses ([`Simulator::inject_node_crash`]).
+//!  * **Graceful drain** — stop admitting, give queued jobs one last
+//!    chance as capacity frees, reject the provably-unplaceable as
+//!    `infeasible`, finish in-flight work, emit final
+//!    `SimResult`-equivalent accounting. Drain always terminates: each
+//!    round either shrinks the queue or consumes one of a finite set of
+//!    pending events (the fault stream is capped by `max_events`).
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fs::OpenOptions;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::coordinator::inter::InterGroupScheduler;
+use crate::metrics::sim_result_json;
+use crate::runtime::driver::{drive_group, plan_direct_job};
+use crate::sim::engine::{SimConfig, Simulator};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::workload::job::{JobSpec, PhaseSpec};
+
+/// Daemon tuning knobs. `sim` carries the virtual cluster's engine
+/// config (including the chaos stream); the rest governs the daemon's
+/// own robustness machinery.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    pub sim: SimConfig,
+    /// Bounded admission queue capacity; a full queue rejects with
+    /// `backpressure`.
+    pub queue_cap: usize,
+    /// Fleet saturation cap, total provisioned GPUs (0 = unbounded).
+    /// Trial admissions that would exceed it are rolled back and queued.
+    pub gpu_cap: usize,
+    /// Admission retry backoff base, virtual seconds (doubles per
+    /// attempt).
+    pub retry_base_s: f64,
+    /// Admission attempts before a queued job is rejected as `timeout`.
+    pub retry_max: u32,
+    /// Group liveness window, virtual seconds (0 disables heartbeats).
+    pub heartbeat_timeout_s: f64,
+    /// Node repair time charged by a heartbeat escalation.
+    pub repair_s: f64,
+    /// Journal appends between fsyncs (1 = sync every record).
+    pub sync_every: usize,
+    /// Wall backend only: virtual seconds -> wall seconds scale for the
+    /// drain-time drive.
+    pub time_scale: f64,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            sim: SimConfig::default(),
+            queue_cap: 16,
+            gpu_cap: 0,
+            retry_base_s: 60.0,
+            retry_max: 5,
+            heartbeat_timeout_s: 0.0,
+            repair_s: 300.0,
+            sync_every: 8,
+            time_scale: 1e-3,
+        }
+    }
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only write-ahead journal. One frame per line:
+///
+/// ```text
+/// {"crc":"<fnv1a64 of rec, 16 hex>","rec":{"kind":"cmd"|"note","seq":N,"v":{...}}}
+/// ```
+///
+/// `cmd` frames are the accepted mutating inputs (replayed on
+/// recovery); `note` frames record the decisions those inputs produced
+/// (flight-recorder only — skipped on replay). Frames are CRC- and
+/// seq-validated on open; the first invalid frame marks a torn tail,
+/// which is truncated before appending resumes.
+pub struct Journal {
+    file: Option<std::fs::File>,
+    seq: u64,
+    pending: usize,
+    sync_every: usize,
+}
+
+impl Journal {
+    /// A journal that records nothing (tests, `exp serve`).
+    pub fn disabled() -> Journal {
+        Journal { file: None, seq: 0, pending: 0, sync_every: usize::MAX }
+    }
+
+    /// Open (or create) a journal file. Returns the journal positioned
+    /// for appends plus the valid `cmd` payloads to replay; any torn
+    /// tail past the valid prefix has been truncated away.
+    pub fn open(path: &Path, sync_every: usize) -> std::io::Result<(Journal, Vec<Json>)> {
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(false).open(path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let (valid_bytes, seq, cmds) = Journal::scan(&bytes);
+        if valid_bytes < bytes.len() {
+            file.set_len(valid_bytes as u64)?;
+        }
+        file.seek(SeekFrom::Start(valid_bytes as u64))?;
+        let sync_every = sync_every.max(1);
+        Ok((Journal { file: Some(file), seq, pending: 0, sync_every }, cmds))
+    }
+
+    /// Validate the frame prefix: returns (valid byte length, next seq,
+    /// replayable cmd payloads).
+    fn scan(bytes: &[u8]) -> (usize, u64, Vec<Json>) {
+        let mut valid = 0usize;
+        let mut seq = 0u64;
+        let mut cmds = Vec::new();
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let Some(nl) = bytes[i..].iter().position(|&b| b == b'\n') else {
+                break; // final line has no newline: torn mid-write
+            };
+            let line = &bytes[i..i + nl];
+            let Some(payload) = Journal::check_frame(line, seq) else {
+                break;
+            };
+            if let Some(v) = payload {
+                cmds.push(v);
+            }
+            seq += 1;
+            i += nl + 1;
+            valid = i;
+        }
+        (valid, seq, cmds)
+    }
+
+    /// One frame: `Some(Some(v))` = valid cmd, `Some(None)` = valid
+    /// note, `None` = invalid (torn / corrupt / out of sequence).
+    fn check_frame(line: &[u8], want_seq: u64) -> Option<Option<Json>> {
+        let text = std::str::from_utf8(line).ok()?;
+        let j = Json::parse(text).ok()?;
+        let crc = j.get("crc")?.as_str()?;
+        let rec = j.get("rec")?;
+        if format!("{:016x}", fnv1a64(rec.to_string().as_bytes())) != crc {
+            return None;
+        }
+        if rec.get("seq")?.as_f64()? as u64 != want_seq {
+            return None;
+        }
+        let v = rec.get("v")?.clone();
+        match rec.get("kind")?.as_str()? {
+            "cmd" => Some(Some(v)),
+            "note" => Some(None),
+            _ => None,
+        }
+    }
+
+    fn append(&mut self, kind: &str, v: &Json) -> std::io::Result<()> {
+        let Some(file) = self.file.as_mut() else {
+            return Ok(());
+        };
+        let rec = obj(vec![("kind", s(kind)), ("seq", num(self.seq as f64)), ("v", v.clone())]);
+        let body = rec.to_string();
+        let crc = format!("{:016x}", fnv1a64(body.as_bytes()));
+        let line = format!("{{\"crc\":\"{crc}\",\"rec\":{body}}}\n");
+        file.write_all(line.as_bytes())?;
+        self.seq += 1;
+        self.pending += 1;
+        if self.pending >= self.sync_every {
+            file.sync_data()?;
+            self.pending = 0;
+        }
+        Ok(())
+    }
+
+    /// Force pending appends to disk (drain / shutdown / EOF).
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        if let Some(file) = self.file.as_mut() {
+            if self.pending > 0 {
+                file.sync_data()?;
+                self.pending = 0;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+}
+
+/// What executes admitted jobs.
+enum Backend {
+    /// Deterministic virtual cluster: the DES engine in open-world mode.
+    Virtual(Box<Simulator<InterGroupScheduler>>),
+    /// Live placement now, wall-clock execution at drain.
+    Wall { sched: InterGroupScheduler, admitted: Vec<WallJob> },
+}
+
+struct WallJob {
+    spec: JobSpec,
+    group: usize,
+    roll_nodes: Vec<usize>,
+}
+
+struct Pending {
+    spec: JobSpec,
+    attempts: u32,
+    next_try_s: f64,
+}
+
+/// Admission / rejection / repair counters — the daemon-level half of
+/// the final accounting (the engine's `SimResult` is the other half).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DaemonStats {
+    pub admitted: usize,
+    pub cancelled: usize,
+    pub rejected_backpressure: usize,
+    pub rejected_timeout: usize,
+    pub rejected_infeasible: usize,
+    pub rejected_invalid: usize,
+    pub escalations: usize,
+}
+
+pub struct Daemon {
+    cfg: DaemonConfig,
+    backend: Backend,
+    journal: Journal,
+    queue: VecDeque<Pending>,
+    /// Last heartbeat per live group, virtual seconds.
+    beats: BTreeMap<usize, f64>,
+    /// Every job id ever accepted into the queue (uniqueness).
+    seen_ids: BTreeSet<usize>,
+    stats: DaemonStats,
+    draining: bool,
+    drained: bool,
+    shutdown: bool,
+    /// Replay mode: suppress journaling (frames already on disk).
+    replaying: bool,
+}
+
+impl Daemon {
+    /// Daemon over the deterministic virtual cluster.
+    pub fn new_virtual(cfg: DaemonConfig) -> Daemon {
+        let sim = Simulator::open(cfg.sim.clone(), InterGroupScheduler::new(cfg.sim.model));
+        Daemon::build(cfg, Backend::Virtual(Box::new(sim)))
+    }
+
+    /// Daemon over the wall-clock driver (placement now, drive at
+    /// drain).
+    pub fn new_wall(cfg: DaemonConfig) -> Daemon {
+        let sched = InterGroupScheduler::new(cfg.sim.model);
+        Daemon::build(cfg, Backend::Wall { sched, admitted: Vec::new() })
+    }
+
+    fn build(cfg: DaemonConfig, backend: Backend) -> Daemon {
+        Daemon {
+            cfg,
+            backend,
+            journal: Journal::disabled(),
+            queue: VecDeque::new(),
+            beats: BTreeMap::new(),
+            seen_ids: BTreeSet::new(),
+            stats: DaemonStats::default(),
+            draining: false,
+            drained: false,
+            shutdown: false,
+            replaying: false,
+        }
+    }
+
+    /// Attach a write-ahead journal, replaying any valid prefix already
+    /// on disk (crash recovery). Returns the number of commands
+    /// replayed. Must be called before the first `handle_line`.
+    pub fn attach_journal(&mut self, path: &Path) -> std::io::Result<usize> {
+        let (journal, cmds) = Journal::open(path, self.cfg.sync_every)?;
+        self.journal = journal;
+        self.replaying = true;
+        let n = cmds.len();
+        for v in &cmds {
+            let _ = self.apply(v);
+        }
+        self.replaying = false;
+        Ok(n)
+    }
+
+    pub fn stats(&self) -> DaemonStats {
+        self.stats
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown
+    }
+
+    pub fn journal_seq(&self) -> u64 {
+        self.journal.seq()
+    }
+
+    /// Flush the journal (call on EOF / shutdown).
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.journal.flush()
+    }
+
+    /// Process one JSONL input line; returns the response lines to
+    /// emit. Malformed input is answered with a typed `err` line and
+    /// changes no state (and is never journaled).
+    pub fn handle_line(&mut self, line: &str) -> Vec<String> {
+        let text = line.trim();
+        if text.is_empty() {
+            return Vec::new();
+        }
+        let j = match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => return vec![err_line(&format!("parse: {e}"))],
+        };
+        let Some(cmd) = j.get("cmd").and_then(Json::as_str) else {
+            return vec![err_line("missing \"cmd\"")];
+        };
+        // Write-ahead: journal accepted mutating commands before
+        // applying them, so replay sees exactly the applied sequence.
+        if matches!(cmd, "admit" | "advance" | "fault" | "beat" | "cancel" | "drain") {
+            if let Err(e) = self.journal.append("cmd", &j) {
+                return vec![err_line(&format!("journal: {e}"))];
+            }
+        }
+        self.apply(&j)
+    }
+
+    /// Dispatch an already-journaled command (also the replay path).
+    fn apply(&mut self, j: &Json) -> Vec<String> {
+        let cmd = j.get("cmd").and_then(Json::as_str).unwrap_or("");
+        if self.drained && !matches!(cmd, "stats" | "shutdown") {
+            return vec![err_line("drained: only stats/shutdown accepted")];
+        }
+        match cmd {
+            "admit" => self.cmd_admit(j),
+            "advance" => self.cmd_advance(j),
+            "fault" => self.cmd_fault(j),
+            "beat" => self.cmd_beat(j),
+            "cancel" => self.cmd_cancel(j),
+            "stats" => vec![self.stats_line()],
+            "drain" => self.cmd_drain(),
+            "shutdown" => {
+                self.shutdown = true;
+                let _ = self.journal.flush();
+                vec![ok_line("shutdown", self.now())]
+            }
+            other => vec![err_line(&format!("unknown cmd {other:?}"))],
+        }
+    }
+
+    fn now(&self) -> f64 {
+        match &self.backend {
+            Backend::Virtual(sim) => sim.now(),
+            Backend::Wall { .. } => 0.0,
+        }
+    }
+
+    fn outstanding(&self) -> usize {
+        match &self.backend {
+            Backend::Virtual(sim) => sim.outstanding(),
+            Backend::Wall { admitted, .. } => admitted.len(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Commands
+    // ------------------------------------------------------------------
+
+    fn cmd_admit(&mut self, j: &Json) -> Vec<String> {
+        if self.draining {
+            self.stats.rejected_invalid += 1;
+            return vec![err_line("draining: admission closed")];
+        }
+        let spec = match job_from_json(j.get("job")) {
+            Ok(spec) => spec,
+            Err(e) => {
+                self.stats.rejected_invalid += 1;
+                return vec![err_line(&format!("admit: {e}"))];
+            }
+        };
+        if self.seen_ids.contains(&spec.id) {
+            self.stats.rejected_invalid += 1;
+            return vec![err_line(&format!("admit: duplicate job id {}", spec.id))];
+        }
+        if self.queue.len() >= self.cfg.queue_cap {
+            // Bounded queue: reject loudly instead of queueing
+            // unboundedly at saturation.
+            self.stats.rejected_backpressure += 1;
+            let line = reject_line("backpressure", spec.id, self.now());
+            let _ = self.journal.append_note_if_live(self.replaying, &line);
+            return vec![line.to_string()];
+        }
+        let id = spec.id;
+        self.seen_ids.insert(id);
+        self.queue.push_back(Pending { spec, attempts: 0, next_try_s: self.now() });
+        let mut out = Vec::new();
+        self.pump(false, &mut out);
+        // Acknowledge the enqueue unless the pump already answered for
+        // this job (admitted it, or timed it out).
+        if !out_mentions(&out, id) {
+            out.push(
+                obj(vec![
+                    ("ok", s("queued")),
+                    ("job", num(id as f64)),
+                    ("depth", num(self.queue.len() as f64)),
+                    ("t", num(self.now())),
+                ])
+                .to_string(),
+            );
+        }
+        out
+    }
+
+    fn cmd_advance(&mut self, j: &Json) -> Vec<String> {
+        let Backend::Virtual(_) = &self.backend else {
+            return vec![err_line("advance: virtual backend only")];
+        };
+        let Some(dt) = j.get("dt").and_then(Json::as_f64).filter(|d| d.is_finite() && *d >= 0.0)
+        else {
+            return vec![err_line("advance: need finite \"dt\" >= 0")];
+        };
+        let deadline = self.now() + dt;
+        if let Backend::Virtual(sim) = &mut self.backend {
+            sim.step_until(deadline);
+        }
+        let mut out = Vec::new();
+        self.check_liveness(&mut out);
+        self.pump(false, &mut out);
+        out.push(
+            obj(vec![
+                ("ok", s("advance")),
+                ("t", num(self.now())),
+                ("outstanding", num(self.outstanding() as f64)),
+            ])
+            .to_string(),
+        );
+        out
+    }
+
+    fn cmd_fault(&mut self, j: &Json) -> Vec<String> {
+        let Backend::Virtual(sim) = &mut self.backend else {
+            return vec![err_line("fault: virtual backend only")];
+        };
+        let kind = j.get("kind").and_then(Json::as_str).unwrap_or("");
+        let gid = j.get("group").and_then(Json::as_usize);
+        let node = j.get("node").and_then(Json::as_usize);
+        let (Some(gid), Some(node)) = (gid, node) else {
+            return vec![err_line("fault: need \"group\" and \"node\"")];
+        };
+        let ok = match kind {
+            "crash" => {
+                let repair = j.get("repair_s").and_then(Json::as_f64).unwrap_or(self.cfg.repair_s);
+                sim.inject_node_crash(gid, node, repair)
+            }
+            "straggler" => {
+                let factor = j.get("factor").and_then(Json::as_f64).unwrap_or(1.5);
+                sim.inject_straggler(gid, node, factor)
+            }
+            other => return vec![err_line(&format!("fault: unknown kind {other:?}"))],
+        };
+        if !ok {
+            return vec![err_line(&format!("fault: no such target group {gid} node {node}"))];
+        }
+        let line = obj(vec![
+            ("ok", s("fault")),
+            ("kind", s(kind)),
+            ("group", num(gid as f64)),
+            ("node", num(node as f64)),
+            ("t", num(self.now())),
+        ]);
+        let _ = self.journal.append_note_if_live(self.replaying, &line);
+        vec![line.to_string()]
+    }
+
+    fn cmd_beat(&mut self, j: &Json) -> Vec<String> {
+        let Some(gid) = j.get("group").and_then(Json::as_usize) else {
+            return vec![err_line("beat: need \"group\"")];
+        };
+        let t = self.now();
+        self.beats.insert(gid, t);
+        vec![obj(vec![("ok", s("beat")), ("group", num(gid as f64)), ("t", num(t))]).to_string()]
+    }
+
+    fn cmd_cancel(&mut self, j: &Json) -> Vec<String> {
+        let Some(id) = j.get("job").and_then(Json::as_usize) else {
+            return vec![err_line("cancel: need \"job\"")];
+        };
+        // Cancelling a queued job is a dequeue.
+        if let Some(pos) = self.queue.iter().position(|p| p.spec.id == id) {
+            self.queue.remove(pos);
+            self.stats.cancelled += 1;
+            return vec![ok_job_line("cancel", id, self.now())];
+        }
+        let ok = match &mut self.backend {
+            Backend::Virtual(sim) => sim.cancel_job(id),
+            Backend::Wall { sched, admitted } => {
+                match admitted.iter().position(|w| w.spec.id == id) {
+                    Some(pos) => {
+                        admitted.remove(pos);
+                        sched.complete_job(id);
+                        true
+                    }
+                    None => false,
+                }
+            }
+        };
+        if !ok {
+            return vec![err_line(&format!("cancel: no live job {id}"))];
+        }
+        self.stats.cancelled += 1;
+        let mut out = vec![ok_job_line("cancel", id, self.now())];
+        // Cancellation frees capacity: give the queue a chance now.
+        self.pump(false, &mut out);
+        out
+    }
+
+    fn cmd_drain(&mut self) -> Vec<String> {
+        self.draining = true;
+        let mut out = Vec::new();
+        // Let queued jobs in as in-flight work retires; reject the
+        // provably-unplaceable. Terminates: every round either shrinks
+        // the queue or consumes one pending event, and the event set is
+        // finite (job lifecycles are finite and the chaos stream is
+        // capped by `max_events`).
+        loop {
+            self.pump(true, &mut out);
+            if self.queue.is_empty() {
+                break;
+            }
+            let stepped = match &mut self.backend {
+                Backend::Virtual(sim) if sim.outstanding() > 0 => sim.step_one().is_some(),
+                _ => false,
+            };
+            if !stepped {
+                // Fleet idle (or wall backend) and the head still does
+                // not fit under the cap: nothing will ever free.
+                while let Some(p) = self.queue.pop_front() {
+                    self.stats.rejected_infeasible += 1;
+                    let line = reject_line("infeasible", p.spec.id, self.now());
+                    let _ = self.journal.append_note_if_live(self.replaying, &line);
+                    out.push(line.to_string());
+                }
+                break;
+            }
+        }
+        let accounting = match &mut self.backend {
+            Backend::Virtual(sim) => {
+                let res = sim.run_to_end();
+                sim_result_json(&res)
+            }
+            Backend::Wall { sched: _, admitted } => drive_wall(&self.cfg, admitted),
+        };
+        let line = obj(vec![(
+            "drained",
+            obj(vec![("daemon", self.stats_json()), ("result", accounting)]),
+        )]);
+        let _ = self.journal.append_note_if_live(self.replaying, &line);
+        let _ = self.journal.flush();
+        self.drained = true;
+        out.push(line.to_string());
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Admission queue
+    // ------------------------------------------------------------------
+
+    /// Try to admit from the queue head (FIFO: head-of-line blocking is
+    /// deliberate — admission order is part of the determinism
+    /// contract). `ignore_backoff` is the drain path.
+    fn pump(&mut self, ignore_backoff: bool, out: &mut Vec<String>) {
+        loop {
+            let now = self.now();
+            let Some(head) = self.queue.front() else {
+                return;
+            };
+            if !ignore_backoff && head.next_try_s > now {
+                return;
+            }
+            let spec = head.spec.clone();
+            match self.try_admit(&spec) {
+                Ok((gid, nodes)) => {
+                    self.queue.pop_front();
+                    self.stats.admitted += 1;
+                    let line = obj(vec![
+                        ("ok", s("admit")),
+                        ("job", num(spec.id as f64)),
+                        ("group", num(gid as f64)),
+                        ("roll_nodes", arr(nodes.iter().map(|&n| num(n as f64)).collect())),
+                        ("t", num(now)),
+                    ]);
+                    let _ = self.journal.append_note_if_live(self.replaying, &line);
+                    out.push(line.to_string());
+                }
+                Err(()) => {
+                    let head = self.queue.front_mut().expect("head still queued");
+                    head.attempts += 1;
+                    if head.attempts > self.cfg.retry_max && !ignore_backoff {
+                        // Per-request timeout: retries exhausted.
+                        let p = self.queue.pop_front().expect("head still queued");
+                        self.stats.rejected_timeout += 1;
+                        let line = reject_line("timeout", p.spec.id, now);
+                        let _ = self.journal.append_note_if_live(self.replaying, &line);
+                        out.push(line.to_string());
+                        continue;
+                    }
+                    // Exponential backoff before the next trial.
+                    let shift = (head.attempts - 1).min(16);
+                    head.next_try_s = now + self.cfg.retry_base_s * f64::from(1u32 << shift);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// One trial admission: place the job, check the saturation cap,
+    /// roll back if it does not fit. Rollback restores peak-GPU and
+    /// usage-curve accounting to the pre-trial snapshot (the failed
+    /// trial still counts one `cancelled` in the engine's ledger).
+    fn try_admit(&mut self, spec: &JobSpec) -> Result<(usize, Vec<usize>), ()> {
+        let cap = self.cfg.gpu_cap;
+        match &mut self.backend {
+            Backend::Virtual(sim) => {
+                let mark = sim.usage_mark();
+                let t = sim.submit(spec.clone());
+                sim.step_until(t);
+                let (r, tr) = sim.sched.gpus_in_use();
+                if cap > 0 && r + tr > cap {
+                    sim.rollback_admission(spec.id, mark);
+                    return Err(());
+                }
+                let (gid, nodes) = sim.job_placement(spec.id).ok_or(())?;
+                Ok((gid, nodes.to_vec()))
+            }
+            Backend::Wall { sched, admitted } => {
+                let d = sched.schedule(spec.clone());
+                let (r, tr) = sched.gpus_in_use();
+                if cap > 0 && r + tr > cap {
+                    sched.complete_job(spec.id);
+                    return Err(());
+                }
+                admitted.push(WallJob {
+                    spec: spec.clone(),
+                    group: d.group_id,
+                    roll_nodes: d.roll_nodes.clone(),
+                });
+                Ok((d.group_id, d.roll_nodes))
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Liveness
+    // ------------------------------------------------------------------
+
+    /// Heartbeat sweep: a live group whose last beat is older than the
+    /// window is treated as a silent node failure and escalated through
+    /// the same `repair_node_crash` surgery the chaos tier uses.
+    fn check_liveness(&mut self, out: &mut Vec<String>) {
+        if self.cfg.heartbeat_timeout_s <= 0.0 {
+            return;
+        }
+        let Backend::Virtual(sim) = &mut self.backend else {
+            return;
+        };
+        let now = sim.now();
+        let live = sim.sched.group_ids();
+        // Forget beats of retired groups.
+        self.beats.retain(|gid, _| live.binary_search(gid).is_ok());
+        for gid in live {
+            let last = *self.beats.entry(gid).or_insert(now);
+            if now - last <= self.cfg.heartbeat_timeout_s {
+                continue;
+            }
+            if sim.inject_node_crash(gid, 0, self.cfg.repair_s) {
+                self.stats.escalations += 1;
+                self.beats.insert(gid, now);
+                let line = obj(vec![
+                    ("repair", s("heartbeat-escalation")),
+                    ("group", num(gid as f64)),
+                    ("node", num(0.0)),
+                    ("t", num(now)),
+                ]);
+                let _ = self.journal.append_note_if_live(self.replaying, &line);
+                out.push(line.to_string());
+            } else {
+                // Group vanished between sweep and surgery: it is no
+                // longer our problem; the next sweep re-seeds its beat
+                // if it reappears.
+                self.beats.remove(&gid);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Reporting
+    // ------------------------------------------------------------------
+
+    fn stats_json(&self) -> Json {
+        obj(vec![
+            ("admitted", num(self.stats.admitted as f64)),
+            ("cancelled", num(self.stats.cancelled as f64)),
+            (
+                "rejected",
+                obj(vec![
+                    ("backpressure", num(self.stats.rejected_backpressure as f64)),
+                    ("timeout", num(self.stats.rejected_timeout as f64)),
+                    ("infeasible", num(self.stats.rejected_infeasible as f64)),
+                    ("invalid", num(self.stats.rejected_invalid as f64)),
+                ]),
+            ),
+            ("escalations", num(self.stats.escalations as f64)),
+        ])
+    }
+
+    fn stats_line(&self) -> String {
+        let (groups, r, tr, cost) = match &self.backend {
+            Backend::Virtual(sim) => {
+                let (r, tr) = sim.sched.gpus_in_use();
+                (sim.sched.groups.len(), r, tr, sim.sched.total_cost_per_hour())
+            }
+            Backend::Wall { sched, .. } => {
+                let (r, tr) = sched.gpus_in_use();
+                (sched.groups.len(), r, tr, sched.total_cost_per_hour())
+            }
+        };
+        obj(vec![(
+            "stats",
+            obj(vec![
+                ("t", num(self.now())),
+                ("groups", num(groups as f64)),
+                ("outstanding", num(self.outstanding() as f64)),
+                ("queued", num(self.queue.len() as f64)),
+                ("gpus", arr(vec![num(r as f64), num(tr as f64)])),
+                ("cost_per_hour", num(cost)),
+                ("daemon", self.stats_json()),
+            ]),
+        )])
+        .to_string()
+    }
+}
+
+impl Journal {
+    /// Notes are flight-recorder payloads: skip them while replaying
+    /// (their originals are already on disk ahead of the cursor).
+    fn append_note_if_live(&mut self, replaying: bool, v: &Json) -> std::io::Result<()> {
+        if replaying {
+            return Ok(());
+        }
+        self.append("note", v)
+    }
+}
+
+/// Wall-backend drain: plan every admitted job with the engine's exact
+/// duration formulas and drive each group on real threads. Reports
+/// aggregate counts only — they are invariant to thread interleaving,
+/// keeping drain output deterministic.
+fn drive_wall(cfg: &DaemonConfig, admitted: &[WallJob]) -> Json {
+    let mut gids: Vec<usize> = admitted.iter().map(|w| w.group).collect();
+    gids.sort_unstable();
+    gids.dedup();
+    let mut groups = Vec::new();
+    let mut total_dispatches = 0usize;
+    for gid in gids {
+        let plans: Vec<_> = admitted
+            .iter()
+            .filter(|w| w.group == gid)
+            .map(|w| {
+                plan_direct_job(
+                    &w.spec,
+                    w.roll_nodes.clone(),
+                    w.spec.n_train_gpus,
+                    &cfg.sim.switch,
+                    cfg.sim.sync_scheme,
+                )
+            })
+            .collect();
+        let r = drive_group(cfg.sim.intra, cfg.time_scale, &plans);
+        total_dispatches += r.order.len();
+        groups.push(obj(vec![
+            ("group", num(gid as f64)),
+            ("jobs", num(plans.len() as f64)),
+            ("dispatches", num(r.order.len() as f64)),
+            ("hook_events", num(r.events.len() as f64)),
+        ]));
+    }
+    obj(vec![
+        ("backend", s("wall")),
+        ("jobs", num(admitted.len() as f64)),
+        ("dispatches", num(total_dispatches as f64)),
+        ("groups", arr(groups)),
+    ])
+}
+
+// ----------------------------------------------------------------------
+// Input decoding + response shaping
+// ----------------------------------------------------------------------
+
+fn err_line(msg: &str) -> String {
+    obj(vec![("err", s(msg))]).to_string()
+}
+
+fn ok_line(what: &str, t: f64) -> String {
+    obj(vec![("ok", s(what)), ("t", num(t))]).to_string()
+}
+
+fn ok_job_line(what: &str, job: usize, t: f64) -> String {
+    obj(vec![("ok", s(what)), ("job", num(job as f64)), ("t", num(t))]).to_string()
+}
+
+fn reject_line(why: &str, job: usize, t: f64) -> Json {
+    obj(vec![("reject", s(why)), ("job", num(job as f64)), ("t", num(t))])
+}
+
+fn out_mentions(out: &[String], id: usize) -> bool {
+    let pat = format!("\"job\":{id},");
+    let tail = format!("\"job\":{id}}}");
+    out.iter().any(|l| l.contains(&pat) || l.ends_with(&tail))
+}
+
+/// Decode an admission request into a [`JobSpec`]. The daemon pins
+/// arrival to "now" (time moves via `advance`) and forces deterministic
+/// phase durations (`cv = 0`): the virtual cluster's determinism — and
+/// the wall driver's planner — both depend on it.
+fn job_from_json(j: Option<&Json>) -> Result<JobSpec, String> {
+    let j = j.ok_or("need \"job\" object")?;
+    let field = |k: &str| j.get(k).ok_or_else(|| format!("missing job.{k}"));
+    let posf = |k: &str| -> Result<f64, String> {
+        let v = field(k)?.as_f64().ok_or_else(|| format!("job.{k} must be a number"))?;
+        if !v.is_finite() || v <= 0.0 {
+            return Err(format!("job.{k} must be finite and > 0"));
+        }
+        Ok(v)
+    };
+    let posn = |k: &str| -> Result<usize, String> {
+        let v = posf(k)?;
+        if v.fract() != 0.0 {
+            return Err(format!("job.{k} must be an integer"));
+        }
+        Ok(v as usize)
+    };
+    let id = {
+        let v = field("id")?.as_f64().ok_or("job.id must be a number")?;
+        if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+            return Err("job.id must be a non-negative integer".into());
+        }
+        v as usize
+    };
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("job{id}"));
+    Ok(JobSpec {
+        id,
+        name,
+        arrival_s: 0.0, // pinned to "now" by Simulator::submit
+        n_iters: posn("n_iters")?,
+        slo: posf("slo")?,
+        n_roll_gpus: posn("n_roll_gpus")?,
+        n_train_gpus: posn("n_train_gpus")?,
+        params_b: posf("params_b")?,
+        phases: PhaseSpec::Direct { t_roll: posf("t_roll")?, t_train: posf("t_train")?, cv: 0.0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn admit_line(id: usize, t_roll: f64, t_train: f64, gpus: usize, iters: usize) -> String {
+        format!(
+            "{{\"cmd\":\"admit\",\"job\":{{\"id\":{id},\"n_iters\":{iters},\"slo\":3.0,\
+             \"n_roll_gpus\":{gpus},\"n_train_gpus\":{gpus},\"params_b\":7.0,\
+             \"t_roll\":{t_roll},\"t_train\":{t_train}}}}}"
+        )
+    }
+
+    fn run_session(d: &mut Daemon, lines: &[String]) -> Vec<String> {
+        let mut out = Vec::new();
+        for l in lines {
+            out.extend(d.handle_line(l));
+        }
+        out
+    }
+
+    fn basic_session() -> Vec<String> {
+        vec![
+            admit_line(0, 100.0, 80.0, 8, 4),
+            admit_line(1, 80.0, 60.0, 8, 4),
+            "{\"cmd\":\"advance\",\"dt\":500}".into(),
+            "{\"cmd\":\"stats\"}".into(),
+            "{\"cmd\":\"drain\"}".into(),
+        ]
+    }
+
+    #[test]
+    fn virtual_session_admits_and_drains() {
+        let mut d = Daemon::new_virtual(DaemonConfig::default());
+        let out = run_session(&mut d, &basic_session());
+        assert!(out.iter().any(|l| l.contains("\"ok\":\"admit\"") && l.contains("\"job\":0")));
+        assert!(out.iter().any(|l| l.contains("\"ok\":\"admit\"") && l.contains("\"job\":1")));
+        let drained = out.last().expect("drained line");
+        assert!(drained.contains("\"drained\""), "{drained}");
+        let j = Json::parse(drained).unwrap();
+        let res = j.get("drained").unwrap().get("result").unwrap();
+        assert_eq!(res.get("outcomes").unwrap().as_arr().unwrap().len(), 2);
+        let daemon = j.get("drained").unwrap().get("daemon").unwrap();
+        assert_eq!(daemon.get("admitted").unwrap().as_usize(), Some(2));
+        // Every response line is itself valid JSON.
+        for l in &out {
+            Json::parse(l).expect(l);
+        }
+    }
+
+    #[test]
+    fn sessions_are_deterministic() {
+        let mut a = Daemon::new_virtual(DaemonConfig::default());
+        let mut b = Daemon::new_virtual(DaemonConfig::default());
+        assert_eq!(run_session(&mut a, &basic_session()), run_session(&mut b, &basic_session()));
+    }
+
+    #[test]
+    fn saturation_backpressure_timeout_and_retry() {
+        // Cap the fleet at one group's worth of GPUs and the queue at
+        // one slot: job 1 queues, job 2 bounces with backpressure.
+        let cfg = DaemonConfig {
+            gpu_cap: 16,
+            queue_cap: 1,
+            retry_base_s: 100.0,
+            retry_max: 5,
+            ..Default::default()
+        };
+        let mut d = Daemon::new_virtual(cfg);
+        let out0 = d.handle_line(&admit_line(0, 100.0, 80.0, 8, 2));
+        assert!(out0[0].contains("\"ok\":\"admit\""), "{out0:?}");
+        let out1 = d.handle_line(&admit_line(1, 500.0, 400.0, 8, 2));
+        assert!(out1[0].contains("\"ok\":\"queued\""), "{out1:?}");
+        let out2 = d.handle_line(&admit_line(2, 10.0, 10.0, 8, 1));
+        assert!(out2[0].contains("\"reject\":\"backpressure\""), "{out2:?}");
+        assert_eq!(d.stats().rejected_backpressure, 1);
+        // Job 0 finishes within 2000 virtual seconds; the queued job's
+        // retry then fits under the cap.
+        let mut admitted_1 = false;
+        for _ in 0..20 {
+            let out = d.handle_line("{\"cmd\":\"advance\",\"dt\":200}");
+            if out.iter().any(|l| l.contains("\"ok\":\"admit\"") && l.contains("\"job\":1")) {
+                admitted_1 = true;
+                break;
+            }
+        }
+        assert!(admitted_1, "queued job never admitted after capacity freed");
+        let out = run_session(&mut d, &["{\"cmd\":\"drain\"}".to_string()]);
+        assert!(out.last().unwrap().contains("\"drained\""));
+    }
+
+    #[test]
+    fn queued_job_times_out_when_fleet_stays_saturated() {
+        let cfg = DaemonConfig {
+            gpu_cap: 16,
+            queue_cap: 4,
+            retry_base_s: 50.0,
+            retry_max: 2,
+            ..Default::default()
+        };
+        let mut d = Daemon::new_virtual(cfg);
+        // A long job pins the whole cap; the second job can never fit
+        // while it runs, so its retries exhaust.
+        d.handle_line(&admit_line(0, 4000.0, 3000.0, 8, 50));
+        let out = d.handle_line(&admit_line(1, 10.0, 10.0, 8, 1));
+        assert!(out[0].contains("\"ok\":\"queued\""), "{out:?}");
+        let mut rejected = false;
+        for _ in 0..10 {
+            let out = d.handle_line("{\"cmd\":\"advance\",\"dt\":100}");
+            if out.iter().any(|l| l.contains("\"reject\":\"timeout\"") && l.contains("\"job\":1"))
+            {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected, "saturated queue entry must time out");
+        assert_eq!(d.stats().rejected_timeout, 1);
+    }
+
+    #[test]
+    fn drain_terminates_and_rejects_infeasible() {
+        // gpu_cap smaller than one job's footprint: the queued job can
+        // NEVER fit, even on an idle fleet. Drain must reject it as
+        // infeasible and still terminate.
+        let cfg = DaemonConfig { gpu_cap: 8, queue_cap: 4, ..Default::default() };
+        let mut d = Daemon::new_virtual(cfg);
+        let out = d.handle_line(&admit_line(0, 50.0, 40.0, 8, 2));
+        assert!(out[0].contains("\"ok\":\"queued\""), "oversized job must queue: {out:?}");
+        let out = d.handle_line("{\"cmd\":\"drain\"}");
+        assert!(
+            out.iter().any(|l| l.contains("\"reject\":\"infeasible\"")),
+            "unplaceable job must be rejected at drain: {out:?}"
+        );
+        assert!(out.last().unwrap().contains("\"drained\""));
+        assert_eq!(d.stats().rejected_infeasible, 1);
+    }
+
+    #[test]
+    fn cancel_queued_and_live_jobs() {
+        let mut d = Daemon::new_virtual(DaemonConfig::default());
+        d.handle_line(&admit_line(0, 100.0, 80.0, 8, 10));
+        let out = d.handle_line("{\"cmd\":\"cancel\",\"job\":0}");
+        assert!(out[0].contains("\"ok\":\"cancel\""), "{out:?}");
+        let out = d.handle_line("{\"cmd\":\"cancel\",\"job\":0}");
+        assert!(out[0].contains("\"err\""), "double cancel must fail: {out:?}");
+        let out = d.handle_line("{\"cmd\":\"drain\"}");
+        let j = Json::parse(out.last().unwrap()).unwrap();
+        let res = j.get("drained").unwrap().get("result").unwrap();
+        assert_eq!(res.get("outcomes").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(res.get("cancelled").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn heartbeat_escalation_repairs_silent_group() {
+        let cfg = DaemonConfig {
+            heartbeat_timeout_s: 300.0,
+            repair_s: 60.0,
+            ..Default::default()
+        };
+        let mut d = Daemon::new_virtual(cfg);
+        d.handle_line(&admit_line(0, 100.0, 80.0, 8, 20));
+        // First sweep seeds the beat; the group then stays silent past
+        // the window and gets escalated.
+        d.handle_line("{\"cmd\":\"advance\",\"dt\":100}");
+        let out = d.handle_line("{\"cmd\":\"advance\",\"dt\":400}");
+        assert!(
+            out.iter().any(|l| l.contains("heartbeat-escalation")),
+            "silent group must be escalated: {out:?}"
+        );
+        assert_eq!(d.stats().escalations, 1);
+        // Beats keep a healthy group un-escalated.
+        let mut d2 = Daemon::new_virtual(DaemonConfig {
+            heartbeat_timeout_s: 300.0,
+            ..Default::default()
+        });
+        d2.handle_line(&admit_line(0, 100.0, 80.0, 8, 20));
+        d2.handle_line("{\"cmd\":\"advance\",\"dt\":100}");
+        for _ in 0..4 {
+            d2.handle_line("{\"cmd\":\"beat\",\"group\":0}");
+            d2.handle_line("{\"cmd\":\"advance\",\"dt\":100}");
+        }
+        assert_eq!(d2.stats().escalations, 0);
+    }
+
+    #[test]
+    fn malformed_input_gets_typed_errors_and_changes_nothing() {
+        let mut d = Daemon::new_virtual(DaemonConfig::default());
+        for bad in [
+            "not json",
+            "{\"nocmd\":1}",
+            "{\"cmd\":\"admit\"}",
+            "{\"cmd\":\"admit\",\"job\":{\"id\":-1}}",
+            "{\"cmd\":\"admit\",\"job\":{\"id\":0,\"n_iters\":0}}",
+            "{\"cmd\":\"advance\"}",
+            "{\"cmd\":\"advance\",\"dt\":-5}",
+            "{\"cmd\":\"fault\",\"kind\":\"crash\"}",
+            "{\"cmd\":\"nope\"}",
+        ] {
+            let out = d.handle_line(bad);
+            assert_eq!(out.len(), 1, "{bad}");
+            assert!(out[0].contains("\"err\""), "{bad} -> {out:?}");
+        }
+        assert_eq!(d.stats().admitted, 0);
+        assert_eq!(d.outstanding(), 0);
+    }
+
+    #[test]
+    fn wall_backend_places_and_drives_at_drain() {
+        let mut d = Daemon::new_wall(DaemonConfig {
+            time_scale: 2e-4,
+            ..Default::default()
+        });
+        let out = d.handle_line(&admit_line(0, 30.0, 20.0, 8, 2));
+        assert!(out[0].contains("\"ok\":\"admit\""), "{out:?}");
+        d.handle_line(&admit_line(1, 25.0, 15.0, 8, 2));
+        let out = d.handle_line("{\"cmd\":\"advance\",\"dt\":10}");
+        assert!(out[0].contains("\"err\""), "advance is virtual-only: {out:?}");
+        let out = d.handle_line("{\"cmd\":\"drain\"}");
+        let j = Json::parse(out.last().unwrap()).unwrap();
+        let res = j.get("drained").unwrap().get("result").unwrap();
+        assert_eq!(res.get("backend").unwrap().as_str(), Some("wall"));
+        assert_eq!(res.get("jobs").unwrap().as_usize(), Some(2));
+        // 2 jobs x 2 iters x (rollout + train) dispatches.
+        assert_eq!(res.get("dispatches").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn journal_replay_reproduces_state() {
+        let dir = std::env::temp_dir().join(format!("rollmuxd_j_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unit.journal");
+        let _ = std::fs::remove_file(&path);
+
+        let session = vec![
+            admit_line(0, 100.0, 80.0, 8, 4),
+            admit_line(1, 80.0, 60.0, 8, 4),
+            "{\"cmd\":\"advance\",\"dt\":300}".into(),
+            "{\"cmd\":\"fault\",\"kind\":\"crash\",\"group\":0,\"node\":0,\"repair_s\":60}".into(),
+            "{\"cmd\":\"advance\",\"dt\":300}".into(),
+        ];
+        let mut a = Daemon::new_virtual(DaemonConfig::default());
+        a.attach_journal(&path).unwrap();
+        run_session(&mut a, &session);
+        let live_stats = a.handle_line("{\"cmd\":\"stats\"}");
+        a.flush().unwrap();
+        drop(a);
+
+        // "Restart": a fresh daemon replays the journal to the same
+        // state — stats output is bitwise identical.
+        let mut b = Daemon::new_virtual(DaemonConfig::default());
+        let replayed = b.attach_journal(&path).unwrap();
+        assert_eq!(replayed, session.len());
+        assert_eq!(b.handle_line("{\"cmd\":\"stats\"}"), live_stats);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_truncates_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("rollmuxd_t_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.journal");
+        let _ = std::fs::remove_file(&path);
+
+        let mut a = Daemon::new_virtual(DaemonConfig::default());
+        a.attach_journal(&path).unwrap();
+        a.handle_line(&admit_line(0, 100.0, 80.0, 8, 4));
+        a.flush().unwrap();
+        drop(a);
+        // Tear the tail mid-frame (a kill -9 during a write).
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.len() > 10);
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+
+        let mut b = Daemon::new_virtual(DaemonConfig::default());
+        let replayed = b.attach_journal(&path).unwrap();
+        // The torn frame is gone; whatever valid prefix remained was
+        // replayed, and the file was truncated to it.
+        let after = std::fs::read(&path).unwrap();
+        assert!(after.len() < bytes.len());
+        assert!(after.is_empty() || after.ends_with(b"\n"));
+        assert!(replayed <= 1);
+        // The daemon keeps accepting work.
+        let out = b.handle_line(&admit_line(7, 50.0, 40.0, 8, 2));
+        assert!(out[0].contains("\"ok\""), "{out:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

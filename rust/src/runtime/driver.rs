@@ -302,6 +302,44 @@ mod tests {
         assert!(r.events.contains(&HookEvent::PhaseDone(1, "sync")));
     }
 
+    /// ISSUE 6 regression: the daemon's drain path fences each broker
+    /// resource with a bounded-wait acquisition. A phase that hangs
+    /// while holding its run permit must cost drain one timeout on that
+    /// resource — not wedge it — and the expired ticket must leave the
+    /// FIFO clean so a later retry succeeds instantly.
+    #[test]
+    fn stuck_phase_cannot_wedge_drain() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::time::Instant;
+        let broker = PhaseBroker::new(2);
+        let release = Arc::new(AtomicBool::new(false));
+        let b = broker.clone();
+        let r = release.clone();
+        let stuck = thread::spawn(move || {
+            let _g = b.acquire(0);
+            while !r.load(Ordering::SeqCst) {
+                thread::sleep(Duration::from_millis(1));
+            }
+        });
+        while !broker.is_busy(0) {
+            thread::yield_now();
+        }
+        // Drain sweeps every resource with a deadline: the hung node
+        // times out, the idle train pool fences immediately.
+        let t0 = Instant::now();
+        let fenced: Vec<bool> = (0..2)
+            .map(|rid| broker.acquire_timeout(rid, Duration::from_millis(50)).is_some())
+            .collect();
+        assert_eq!(fenced, vec![false, true]);
+        assert!(t0.elapsed() < Duration::from_secs(5), "drain path must not hang");
+        // After the stuck phase is cancelled, the node is immediately
+        // fencable — the expired waiter left no queue residue.
+        release.store(true, Ordering::SeqCst);
+        stuck.join().unwrap();
+        assert!(broker.acquire_timeout(0, Duration::from_secs(5)).is_some());
+        assert_eq!(broker.waiters(0), 0);
+    }
+
     #[test]
     fn slo_slack_reorders_contended_rollouts() {
         // Both jobs contend for node 0; the tighter-budget job (1) must

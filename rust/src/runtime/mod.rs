@@ -15,10 +15,18 @@
 //! `phase::PhaseBroker` permits — the runtime counterpart of the
 //! discrete-event simulator (DESIGN.md §10).
 
+//! [`daemon`] (ISSUE 6) stacks `rollmuxd` on top of both: the
+//! long-running JSONL control plane with a write-ahead journal, bounded
+//! admission, heartbeat liveness, and graceful drain — backed by the
+//! DES engine as a deterministic virtual cluster or by the wall-clock
+//! driver (DESIGN.md §14).
+
+pub mod daemon;
 pub mod driver;
 pub mod manifest;
 pub mod model;
 
+pub use daemon::{Daemon, DaemonConfig, DaemonStats, Journal};
 pub use driver::{drive_group, plan_direct_job, DriveResult, IterPlan, JobPlan};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 pub use model::{ModelRuntime, RolloutOut, TrainOut, TrainState};

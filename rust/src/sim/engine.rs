@@ -308,6 +308,11 @@ pub struct SimResult {
     /// interrupted phases replayed from the last iteration checkpoint,
     /// plus straggler slowdown overhead. `goodput = busy - wasted`.
     pub wasted_gpu_s: f64,
+    /// Jobs withdrawn before completion (ISSUE 6): explicit
+    /// [`Simulator::cancel_job`] calls plus admissions rolled back by
+    /// [`Simulator::rollback_admission`]. Always zero on batch runs —
+    /// only the open-world (daemon) API cancels.
+    pub cancelled: usize,
 }
 
 impl SimResult {
@@ -484,6 +489,18 @@ struct JobRt {
     recovery_s: f64,
 }
 
+/// Saved usage-accounting state for a trial admission (ISSUE 6):
+/// [`Simulator::usage_mark`] snapshots the peaks and the usage-curve
+/// length before a `submit`, and [`Simulator::rollback_admission`]
+/// restores them — so an admission the daemon rejects for capacity
+/// leaves no transient spike in the final accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionMark {
+    peak_roll: usize,
+    peak_train: usize,
+    curve_len: usize,
+}
+
 /// The engine's pending-event set: the calendar ring by default, the
 /// historical heap as the oracle. Both pop the exact same `(t, seq)`
 /// total order.
@@ -511,6 +528,32 @@ impl EventQueue {
         match self {
             EventQueue::Calendar(q) => q.pop().map(|(t, _, ev)| (t, ev)),
             EventQueue::Heap(h) => h.pop().map(|e| (e.t, e.ev)),
+        }
+    }
+
+    /// Pop the next event only if it is due at or before `deadline`
+    /// (the open-world `step_until` primitive, ISSUE 6). The calendar
+    /// ring has no peek, so a beyond-deadline head is popped and pushed
+    /// straight back with its original `(t, seq)` — pop order is a
+    /// total order on `(t, seq)`, so the re-push cannot reorder
+    /// anything.
+    fn pop_at_or_before(&mut self, deadline: f64) -> Option<(f64, Ev)> {
+        match self {
+            EventQueue::Calendar(q) => {
+                let (t, seq, ev) = q.pop()?;
+                if t > deadline {
+                    q.push(t, seq, ev);
+                    return None;
+                }
+                Some((t, ev))
+            }
+            EventQueue::Heap(h) => {
+                match h.peek() {
+                    Some(e) if e.t <= deadline => {}
+                    _ => return None,
+                }
+                h.pop().map(|e| (e.t, e.ev))
+            }
         }
     }
 }
@@ -541,6 +584,16 @@ pub struct Simulator<S: GroupScheduler> {
     /// `gid + 1` slots.
     group_rt: Vec<GroupOrchestrator>,
     res: SimResult,
+    /// Open-world mode (ISSUE 6): the simulator is a live "virtual
+    /// cluster" fed by [`Self::submit`]/[`Self::step_until`] instead of
+    /// a pre-loaded trace. The only behavioral difference is that the
+    /// chaos stream keeps firing on an idle cluster (a daemon's nodes
+    /// fail whether or not jobs are running); batch runs drop
+    /// fault-chain events once every job is accounted for, exactly as
+    /// before. [`Self::run_to_end`] always closes the world first, so
+    /// batch results are bit-identical with or without this flag ever
+    /// having been set.
+    open_world: bool,
     /// Cost integration state.
     last_rate_change: f64,
     cur_rate_per_h: f64,
@@ -567,6 +620,7 @@ impl<S: GroupScheduler> Simulator<S> {
             node_down_until: HashMap::new(),
             group_rt: Vec::new(),
             res: SimResult::default(),
+            open_world: false,
             last_rate_change: 0.0,
             cur_rate_per_h: 0.0,
             cur_roll_gpus: 0,
@@ -613,6 +667,7 @@ impl<S: GroupScheduler> Simulator<S> {
         self.jobs.clear();
         self.group_rt.clear();
         self.res = SimResult::default();
+        self.open_world = false;
         self.last_rate_change = 0.0;
         self.cur_rate_per_h = 0.0;
         self.cur_roll_gpus = 0;
@@ -677,40 +732,65 @@ impl<S: GroupScheduler> Simulator<S> {
 
     /// [`Self::run`] for a borrowed simulator: drains the loaded trace
     /// and takes the result out, leaving the slabs behind for the next
-    /// [`Self::reset_with_trace`].
+    /// [`Self::reset_with_trace`]. Also the open-world drain path: it
+    /// closes the world (so the fault chain goes inert once every
+    /// submitted job is settled — guaranteeing termination), processes
+    /// everything still pending, and returns the final accounting.
     pub fn run_to_end(&mut self) -> SimResult {
+        self.open_world = false;
         while let Some((t, ev)) = self.events.pop() {
-            // Fault/repair events outliving the workload are inert:
-            // don't let them advance the clock past the last completion
-            // (the chain stops re-arming once all jobs finish).
-            if matches!(ev, Ev::Fault(_) | Ev::FaultRecover(..))
-                && self.res.outcomes.len() == self.trace.len()
-            {
-                continue;
-            }
-            // A superseded recovery (its victim was re-crashed before it
-            // fired) is pure noise; unlike stale phase events — which
-            // always precede their job's eventual completion — it can
-            // outlive the whole workload, so it must not touch the
-            // clock/makespan. (Recover only exists under faults, keeping
-            // fault-free runs bit-identical.)
-            if let Ev::Recover(slot, ep) = ev {
-                if self.jobs[slot].done || self.jobs[slot].epoch != ep {
-                    continue;
-                }
-            }
-            debug_assert!(t >= self.now - 1e-9, "time went backwards");
-            self.now = t;
-            self.res.events_processed += 1;
-            match ev {
-                Ev::Arrival(i) => self.on_arrival(i),
-                Ev::PhaseDone(slot, kind, iter, ep) => self.on_phase_done(slot, kind, iter, ep),
-                Ev::TailFree(slot, kept, ep) => self.on_tail_free(slot, kept, ep),
-                Ev::Fault(idx) => self.on_fault(idx),
-                Ev::FaultRecover(gid, node) => self.on_fault_recover(gid, node),
-                Ev::Recover(slot, ep) => self.on_recover(slot, ep),
+            self.process_event(t, ev);
+        }
+        self.finalize()
+    }
+
+    /// Jobs that reached a terminal state (completed or cancelled).
+    fn settled(&self) -> usize {
+        self.res.outcomes.len() + self.res.cancelled
+    }
+
+    /// One event through the engine state machine — the loop body of
+    /// [`Self::run_to_end`], shared verbatim by the open-world stepping
+    /// API (ISSUE 6) so incremental driving is bit-identical to batch.
+    fn process_event(&mut self, t: f64, ev: Ev) {
+        // Fault/repair events outliving the workload are inert:
+        // don't let them advance the clock past the last completion
+        // (the chain stops re-arming once all jobs finish). An open
+        // world has no "after the workload" — a live cluster's nodes
+        // keep failing while it idles — so the guard is batch-only.
+        if matches!(ev, Ev::Fault(_) | Ev::FaultRecover(..))
+            && !self.open_world
+            && self.settled() == self.trace.len()
+        {
+            return;
+        }
+        // A superseded recovery (its victim was re-crashed before it
+        // fired) is pure noise; unlike stale phase events — which
+        // always precede their job's eventual completion — it can
+        // outlive the whole workload, so it must not touch the
+        // clock/makespan. (Recover only exists under faults, keeping
+        // fault-free runs bit-identical.)
+        if let Ev::Recover(slot, ep) = ev {
+            if self.jobs[slot].done || self.jobs[slot].epoch != ep {
+                return;
             }
         }
+        debug_assert!(t >= self.now - 1e-9, "time went backwards");
+        self.now = t;
+        self.res.events_processed += 1;
+        match ev {
+            Ev::Arrival(i) => self.on_arrival(i),
+            Ev::PhaseDone(slot, kind, iter, ep) => self.on_phase_done(slot, kind, iter, ep),
+            Ev::TailFree(slot, kept, ep) => self.on_tail_free(slot, kept, ep),
+            Ev::Fault(idx) => self.on_fault(idx),
+            Ev::FaultRecover(gid, node) => self.on_fault_recover(gid, node),
+            Ev::Recover(slot, ep) => self.on_recover(slot, ep),
+        }
+    }
+
+    /// Close the books: integrate the cost tail, stamp the makespan, and
+    /// take the result out of the slab.
+    fn finalize(&mut self) -> SimResult {
         self.integrate_cost();
         self.res.makespan_s = self.now;
         self.res.avg_cost_per_hour = if self.now > 0.0 {
@@ -986,7 +1066,7 @@ impl<S: GroupScheduler> Simulator<S> {
             FaultKind::NodeCrash { repair_s } => self.apply_crash(fe.victim, repair_s),
             FaultKind::Straggler { factor } => self.apply_straggler(fe.victim, factor),
         }
-        if self.res.outcomes.len() < self.trace.len() {
+        if self.open_world || self.settled() < self.trace.len() {
             if let Some((h, t)) = self.faults_rt.as_mut().and_then(FaultStream::pull) {
                 self.push(t.max(self.now), Ev::Fault(h));
             }
@@ -1002,6 +1082,14 @@ impl<S: GroupScheduler> Simulator<S> {
         let Some((gid, node)) = repair::pick_victim(self.sched.groups(), victim) else {
             return; // nothing provisioned right now
         };
+        self.crash_node(gid, node, repair_s);
+    }
+
+    /// Crash a *named* (group, group-local node) — the body of
+    /// [`Self::apply_crash`] once the opaque victim draw is resolved,
+    /// also the entry point for daemon-injected faults and heartbeat
+    /// escalation ([`Self::inject_node_crash`], ISSUE 6).
+    fn crash_node(&mut self, gid: usize, node: usize, repair_s: f64) {
         self.res.crashes += 1;
         let outcome = self.sched.repair_node_crash(gid, node);
         self.ensure_group_rt(gid);
@@ -1152,6 +1240,13 @@ impl<S: GroupScheduler> Simulator<S> {
         let Some((gid, node)) = repair::pick_victim(self.sched.groups(), victim) else {
             return;
         };
+        self.straggle_node(gid, node, factor);
+    }
+
+    /// Slow a *named* (group, group-local node) — the resolved body of
+    /// [`Self::apply_straggler`], shared with the daemon's injected
+    /// straggler path ([`Self::inject_straggler`], ISSUE 6).
+    fn straggle_node(&mut self, gid: usize, node: usize, factor: f64) {
         if factor <= 1.0 {
             return;
         }
@@ -1373,6 +1468,178 @@ impl<S: GroupScheduler> Simulator<S> {
                 roll_nodes: rt.roll_nodes.clone(),
             });
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Open-world / virtual-cluster API (ISSUE 6, DESIGN.md §14).
+    //
+    // `rollmuxd` drives the engine as a live deterministic cluster:
+    // jobs arrive one at a time (`submit`), virtual time advances in
+    // explicit increments (`step_until`), faults are injected by name
+    // (`inject_node_crash` / `inject_straggler`), and shutdown drains
+    // through the ordinary `run_to_end`. Every method below routes
+    // through the exact same `process_event` state machine as batch
+    // runs, so a command sequence replayed from the daemon's journal
+    // reproduces the pre-crash state bit for bit.
+    // ------------------------------------------------------------------
+
+    /// Open an empty virtual cluster: no pre-loaded trace; jobs arrive
+    /// via [`Self::submit`] and time advances via [`Self::step_until`].
+    /// The chaos stream (`cfg.faults`) is armed exactly as in batch
+    /// mode, and — unlike batch mode — keeps firing while the cluster
+    /// idles. Submitting a whole trace up-front and then calling
+    /// [`Self::run_to_end`] is bit-identical to
+    /// `Simulator::new(cfg, sched, trace).run()` (unit-tested below).
+    pub fn open(cfg: SimConfig, sched: S) -> Self {
+        let mut sim = Simulator::new(cfg, sched, Vec::new());
+        sim.open_world = true;
+        sim
+    }
+
+    /// Current virtual time, seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Jobs submitted but not yet settled (completed or cancelled) —
+    /// includes admitted jobs whose arrival event has not fired yet.
+    pub fn outstanding(&self) -> usize {
+        self.trace.len() - self.settled()
+    }
+
+    /// Submit one job into the open world. The arrival is clamped to
+    /// the current virtual time (events cannot fire in the past);
+    /// returns the effective arrival time. The caller usually follows
+    /// with `step_until(sim.now())` so the placement happens
+    /// synchronously and can be inspected via [`Self::job_placement`].
+    pub fn submit(&mut self, mut spec: JobSpec) -> f64 {
+        let t = spec.arrival_s.max(self.now);
+        spec.arrival_s = t;
+        let idx = self.trace.len();
+        self.trace.push(Some(spec));
+        self.push(t, Ev::Arrival(idx));
+        t
+    }
+
+    /// Process every pending event due at or before `deadline`, then
+    /// advance the clock to `deadline` (idle time passes too: cost
+    /// integration and heartbeat expiry both need the clock to move on
+    /// a quiet cluster). Events processed here are bit-identical to the
+    /// batch loop — only the stopping point differs.
+    pub fn step_until(&mut self, deadline: f64) {
+        while let Some((t, ev)) = self.events.pop_at_or_before(deadline) {
+            self.process_event(t, ev);
+        }
+        if deadline > self.now {
+            self.now = deadline;
+        }
+    }
+
+    /// Process the single next pending event (the daemon's drain loop
+    /// alternates this with admission-queue pumping). Returns the clock
+    /// after the event, or `None` when nothing is pending.
+    pub fn step_one(&mut self) -> Option<f64> {
+        let (t, ev) = self.events.pop()?;
+        self.process_event(t, ev);
+        Some(self.now)
+    }
+
+    /// Whether a submitted job reached completion (or cancellation).
+    pub fn job_done(&self, id: JobId) -> bool {
+        match self.job_slot.get(&id) {
+            Some(&slot) => self.jobs[slot].done,
+            None => false,
+        }
+    }
+
+    /// A live job's current placement: (group id, pinned rollout
+    /// nodes). `None` until its arrival event has fired.
+    pub fn job_placement(&self, id: JobId) -> Option<(usize, &[usize])> {
+        let &slot = self.job_slot.get(&id)?;
+        let rt = &self.jobs[slot];
+        Some((rt.group, &rt.roll_nodes[..]))
+    }
+
+    /// Withdraw a live job (ISSUE 6): interrupt whatever it is running
+    /// (truncating the busy integrals, charging the discarded iteration
+    /// as wasted work — same bookkeeping as a crash interrupt), release
+    /// everything it holds, and retract it from the scheduler so its
+    /// capacity frees immediately. Returns false for unknown/finished
+    /// jobs (idempotent).
+    pub fn cancel_job(&mut self, id: JobId) -> bool {
+        let Some(&slot) = self.job_slot.get(&id) else {
+            return false;
+        };
+        if self.jobs[slot].done {
+            return false;
+        }
+        self.interrupt(slot);
+        let gid = self.jobs[slot].group;
+        self.jobs[slot].done = true;
+        self.group_rt[gid].complete(slot);
+        self.sched.complete(id);
+        self.res.cancelled += 1;
+        self.rate_changed();
+        self.drain_dispatch(gid);
+        true
+    }
+
+    /// Snapshot the usage accounting before a trial admission.
+    pub fn usage_mark(&self) -> AdmissionMark {
+        AdmissionMark {
+            peak_roll: self.res.peak_roll_gpus,
+            peak_train: self.res.peak_train_gpus,
+            curve_len: self.res.usage_curve.len(),
+        }
+    }
+
+    /// Undo a trial admission: cancel the job and restore the
+    /// peak/usage-curve accounting captured by [`Self::usage_mark`], so
+    /// a capacity-rejected admission leaves no transient spike in the
+    /// final accounting (it still counts under `SimResult::cancelled`).
+    /// No virtual time may pass between the mark and the rollback.
+    pub fn rollback_admission(&mut self, id: JobId, mark: AdmissionMark) -> bool {
+        if !self.cancel_job(id) {
+            return false;
+        }
+        self.res.peak_roll_gpus = mark.peak_roll;
+        self.res.peak_train_gpus = mark.peak_train;
+        self.res.usage_curve.truncate(mark.curve_len);
+        true
+    }
+
+    /// Crash a named (group, group-local rollout node) at the current
+    /// virtual time — the daemon's fault-injection and heartbeat-
+    /// escalation entry point. Routes through the same repair surgery
+    /// as stream faults ([`GroupScheduler::repair_node_crash`] → member
+    /// interrupts → checkpoint-aware recovery). Returns false when the
+    /// target does not exist right now (a transient repair failure the
+    /// daemon retries with backoff).
+    pub fn inject_node_crash(&mut self, gid: usize, node: usize, repair_s: f64) -> bool {
+        let ok = match self.sched.group(gid) {
+            Some(g) => node < g.n_roll_nodes,
+            None => false,
+        };
+        if !ok || !repair_s.is_finite() || repair_s < 0.0 {
+            return false;
+        }
+        self.crash_node(gid, node, repair_s);
+        true
+    }
+
+    /// Slow a named (group, group-local rollout node) by `factor` at
+    /// the current virtual time. Returns false when the target does not
+    /// exist or the factor is not a finite slowdown (> 1).
+    pub fn inject_straggler(&mut self, gid: usize, node: usize, factor: f64) -> bool {
+        let ok = match self.sched.group(gid) {
+            Some(g) => node < g.n_roll_nodes,
+            None => false,
+        };
+        if !ok || factor <= 1.0 || !factor.is_finite() {
+            return false;
+        }
+        self.straggle_node(gid, node, factor);
+        true
     }
 }
 
@@ -1878,6 +2145,155 @@ mod tests {
             assert_eq!(a.iters, b.iters);
             assert_eq!(a.migrations, b.migrations);
         }
+    }
+
+    fn assert_outcomes_bitwise(a: &SimResult, b: &SimResult) {
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (id, x) in &a.outcomes {
+            let y = &b.outcomes[id];
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits(), "job {id}");
+            assert_eq!(x.solo_actual_s.to_bits(), y.solo_actual_s.to_bits());
+            assert_eq!(x.iters, y.iters);
+            assert_eq!(x.migrations, y.migrations);
+            assert_eq!(x.recoveries, y.recoveries);
+            assert_eq!(x.recovery_s.to_bits(), y.recovery_s.to_bits());
+        }
+    }
+
+    /// ISSUE 6: the open-world API is the batch engine driven
+    /// incrementally — submitting a whole trace up-front and draining
+    /// must be bit-identical to `Simulator::new(..).run()`, with and
+    /// without the chaos stream.
+    #[test]
+    fn open_world_submit_matches_batch_run() {
+        let mk = || {
+            vec![
+                direct_job(0, 100.0, 80.0, 2.0, 6, 0.0),
+                direct_job(1, 80.0, 60.0, 2.0, 6, 50.0),
+                direct_job(2, 60.0, 40.0, 3.0, 6, 100.0),
+            ]
+        };
+        for faults in [
+            None,
+            Some(FaultConfig {
+                seed: 11,
+                mtbf_s: 300.0,
+                mean_repair_s: 90.0,
+                straggler_frac: 0.3,
+                straggler_factor: 1.4,
+                max_events: 15,
+            }),
+        ] {
+            let mut c = cfg();
+            c.faults = faults;
+            let batch = run_rollmux(c.clone(), mk());
+            let mut sim = Simulator::open(c.clone(), InterGroupScheduler::new(c.model));
+            for j in mk() {
+                sim.submit(j);
+            }
+            let live = sim.run_to_end();
+            assert_eq!(batch.makespan_s.to_bits(), live.makespan_s.to_bits());
+            assert_eq!(batch.cost_usd.to_bits(), live.cost_usd.to_bits());
+            assert_eq!(batch.events_processed, live.events_processed);
+            assert_eq!(batch.crashes, live.crashes);
+            assert_eq!(batch.stragglers, live.stragglers);
+            assert_eq!(batch.wasted_gpu_s.to_bits(), live.wasted_gpu_s.to_bits());
+            assert_eq!(live.cancelled, 0);
+            assert_outcomes_bitwise(&batch, &live);
+        }
+    }
+
+    /// ISSUE 6: stepping time in fixed increments changes only where
+    /// the clock stops (makespan = last deadline) — every job outcome,
+    /// busy integral and dollar is bit-identical to the batch run.
+    #[test]
+    fn step_until_increments_preserve_outcomes() {
+        let mk = || {
+            vec![
+                direct_job(0, 100.0, 80.0, 2.0, 6, 0.0),
+                direct_job(1, 80.0, 60.0, 2.0, 6, 50.0),
+            ]
+        };
+        let batch = run_rollmux(cfg(), mk());
+        let c = cfg();
+        let mut sim = Simulator::open(c.clone(), InterGroupScheduler::new(c.model));
+        for j in mk() {
+            sim.submit(j);
+        }
+        let mut t = 0.0;
+        while sim.outstanding() > 0 {
+            t += 500.0;
+            sim.step_until(t);
+        }
+        let live = sim.run_to_end();
+        assert_outcomes_bitwise(&batch, &live);
+        assert_eq!(batch.cost_usd.to_bits(), live.cost_usd.to_bits());
+        assert_eq!(batch.roll_busy_gpu_s.to_bits(), live.roll_busy_gpu_s.to_bits());
+        assert_eq!(batch.train_busy_gpu_s.to_bits(), live.train_busy_gpu_s.to_bits());
+        assert_eq!(batch.events_processed, live.events_processed);
+        // The stepped clock stops at the last idle deadline, at or
+        // after the batch makespan.
+        assert!(live.makespan_s >= batch.makespan_s);
+    }
+
+    /// ISSUE 6: cancelling a live job frees its capacity immediately,
+    /// counts as cancelled (not an outcome), and a trial-admission
+    /// rollback restores the peak accounting to the pre-trial snapshot.
+    #[test]
+    fn cancel_and_rollback_admission() {
+        let c = SimConfig::default();
+        let mut sim = Simulator::open(c.clone(), InterGroupScheduler::new(c.model));
+        sim.submit(direct_job(0, 100.0, 50.0, 2.0, 50, 0.0));
+        sim.step_until(0.0);
+        assert!(sim.job_placement(0).is_some());
+        let (r0, t0) = sim.sched.gpus_in_use();
+        assert!(r0 + t0 > 0);
+
+        // Trial-admit a second job that lands on fresh capacity, then
+        // roll it back: provisioned GPUs and peaks return to baseline.
+        let mark = sim.usage_mark();
+        sim.submit(direct_job(1, 500.0, 400.0, 1.05, 50, 0.0));
+        sim.step_until(sim.now());
+        let (r1, t1) = sim.sched.gpus_in_use();
+        assert!(r1 + t1 > r0 + t0, "trial must provision more capacity");
+        assert!(sim.rollback_admission(1, mark));
+        let (r2, t2) = sim.sched.gpus_in_use();
+        assert_eq!((r2, t2), (r0, t0));
+        assert!(!sim.rollback_admission(1, mark), "rollback is idempotent");
+
+        // Cancel the remaining job mid-run and drain: no outcomes, two
+        // cancelled, peaks equal the single-job baseline.
+        sim.step_until(400.0);
+        assert!(sim.cancel_job(0));
+        assert!(!sim.cancel_job(0), "cancel is idempotent");
+        assert_eq!(sim.outstanding(), 0);
+        let res = sim.run_to_end();
+        assert_eq!(res.outcomes.len(), 0);
+        assert_eq!(res.cancelled, 2);
+        assert_eq!((res.peak_roll_gpus, res.peak_train_gpus), (r0, t0));
+        assert!(res.cost_usd > 0.0, "the cancelled job's runtime still cost money");
+    }
+
+    /// ISSUE 6: named fault injection validates its target and routes
+    /// through the same repair surgery as stream faults.
+    #[test]
+    fn inject_named_faults_validates_targets() {
+        let c = SimConfig::default();
+        let mut sim = Simulator::open(c.clone(), InterGroupScheduler::new(c.model));
+        sim.submit(direct_job(0, 100.0, 50.0, 20.0, 4, 0.0));
+        sim.step_until(0.0);
+        let (gid, _) = sim.job_placement(0).expect("placed");
+        assert!(!sim.inject_node_crash(gid + 7, 0, 60.0), "unknown group");
+        assert!(!sim.inject_node_crash(gid, 99, 60.0), "node out of range");
+        assert!(!sim.inject_straggler(gid, 0, 0.5), "not a slowdown");
+        // A real crash mid-rollout: the member recovers and completes.
+        sim.step_until(50.0);
+        assert!(sim.inject_node_crash(gid, 0, 60.0));
+        let res = sim.run_to_end();
+        assert_eq!(res.crashes, 1);
+        assert_eq!(res.outcomes[&0].iters, 4);
+        assert!(res.outcomes[&0].recoveries > 0);
+        assert!(res.wasted_gpu_s > 0.0);
     }
 
     #[test]

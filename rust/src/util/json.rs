@@ -6,7 +6,50 @@
 //! manifests only contain small integers and strings).
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::fmt::Write as _;
+
+/// Typed parse error: what went wrong and the byte offset it went wrong
+/// at. The daemon (ISSUE 6) feeds adversarial stdin straight into this
+/// parser, so every malformed or truncated input must surface here —
+/// never as a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JsonError {
+    /// Byte offset into the source where the error was detected.
+    pub at: usize,
+    pub kind: JsonErrorKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JsonErrorKind {
+    /// Input ended mid-value (truncated line, torn journal tail).
+    UnexpectedEof,
+    /// A complete value was followed by more non-whitespace bytes.
+    TrailingData,
+    /// Malformed number literal.
+    BadNumber,
+    /// Malformed `\` escape (including truncated `\uXXXX`).
+    BadEscape,
+    /// Invalid UTF-8 inside a string body.
+    BadUtf8,
+    /// Expected the named token/character at this position.
+    Expected(&'static str),
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            JsonErrorKind::UnexpectedEof => write!(f, "unexpected eof at byte {}", self.at),
+            JsonErrorKind::TrailingData => write!(f, "trailing data at byte {}", self.at),
+            JsonErrorKind::BadNumber => write!(f, "bad number at byte {}", self.at),
+            JsonErrorKind::BadEscape => write!(f, "bad string escape at byte {}", self.at),
+            JsonErrorKind::BadUtf8 => write!(f, "invalid utf-8 at byte {}", self.at),
+            JsonErrorKind::Expected(what) => write!(f, "expected {what} at byte {}", self.at),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -19,13 +62,13 @@ pub enum Json {
 }
 
 impl Json {
-    pub fn parse(src: &str) -> Result<Json, String> {
+    pub fn parse(src: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: src.as_bytes(), i: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
         if p.i != p.b.len() {
-            return Err(format!("trailing data at byte {}", p.i));
+            return Err(p.err(JsonErrorKind::TrailingData));
         }
         Ok(v)
     }
@@ -54,6 +97,13 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
@@ -153,13 +203,17 @@ struct Parser<'a> {
 }
 
 impl<'a> Parser<'a> {
+    fn err(&self, kind: JsonErrorKind) -> JsonError {
+        JsonError { at: self.i, kind }
+    }
+
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek()? {
             b'{' => self.object(),
             b'[' => self.array(),
@@ -171,20 +225,23 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn peek(&self) -> Result<u8, String> {
-        self.b.get(self.i).copied().ok_or_else(|| "unexpected eof".into())
+    fn peek(&self) -> Result<u8, JsonError> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or(JsonError { at: self.i, kind: JsonErrorKind::UnexpectedEof })
     }
 
-    fn lit(&mut self, pat: &str, v: Json) -> Result<Json, String> {
+    fn lit(&mut self, pat: &'static str, v: Json) -> Result<Json, JsonError> {
         if self.b[self.i..].starts_with(pat.as_bytes()) {
             self.i += pat.len();
             Ok(v)
         } else {
-            Err(format!("expected {pat} at {}", self.i))
+            Err(self.err(JsonErrorKind::Expected(pat)))
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.i;
         while self.i < self.b.len()
             && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
@@ -195,12 +252,12 @@ impl<'a> Parser<'a> {
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
             .map(Json::Num)
-            .ok_or_else(|| format!("bad number at {start}"))
+            .ok_or(JsonError { at: start, kind: JsonErrorKind::BadNumber })
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<String, JsonError> {
         if self.peek()? != b'"' {
-            return Err(format!("expected string at {}", self.i));
+            return Err(self.err(JsonErrorKind::Expected("string")));
         }
         self.i += 1;
         let mut s = String::new();
@@ -222,14 +279,19 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| "bad \\u".to_string())?;
+                            // `.get` rather than a range index: a line
+                            // truncated mid-escape must error, not panic.
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or_else(|| self.err(JsonErrorKind::BadEscape))?;
                             let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| "bad \\u".to_string())?;
+                                .map_err(|_| self.err(JsonErrorKind::BadEscape))?;
                             self.i += 4;
                             s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         }
-                        _ => return Err(format!("bad escape at {}", self.i)),
+                        _ => return Err(self.err(JsonErrorKind::BadEscape)),
                     }
                 }
                 c => {
@@ -243,18 +305,22 @@ impl<'a> Parser<'a> {
                             0xE0..=0xEF => 3,
                             _ => 4,
                         };
+                        // A multi-byte sequence cut off by eof is a
+                        // truncation error, not an index panic.
+                        let chunk = self
+                            .b
+                            .get(start..start + width)
+                            .and_then(|c| std::str::from_utf8(c).ok())
+                            .ok_or(JsonError { at: start, kind: JsonErrorKind::BadUtf8 })?;
                         self.i = start + width;
-                        s.push_str(
-                            std::str::from_utf8(&self.b[start..self.i])
-                                .map_err(|_| "bad utf8".to_string())?,
-                        );
+                        s.push_str(chunk);
                     }
                 }
             }
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<Json, JsonError> {
         self.i += 1; // [
         let mut v = Vec::new();
         self.ws();
@@ -272,12 +338,12 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(v));
                 }
-                c => return Err(format!("expected , or ] got {} at {}", c as char, self.i)),
+                _ => return Err(self.err(JsonErrorKind::Expected(", or ]"))),
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<Json, JsonError> {
         self.i += 1; // {
         let mut m = BTreeMap::new();
         self.ws();
@@ -290,7 +356,7 @@ impl<'a> Parser<'a> {
             let k = self.string()?;
             self.ws();
             if self.peek()? != b':' {
-                return Err(format!("expected : at {}", self.i));
+                return Err(self.err(JsonErrorKind::Expected(":")));
             }
             self.i += 1;
             self.ws();
@@ -303,7 +369,7 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(m));
                 }
-                c => return Err(format!("expected , or }} got {} at {}", c as char, self.i)),
+                _ => return Err(self.err(JsonErrorKind::Expected(", or }"))),
             }
         }
     }
@@ -344,5 +410,46 @@ mod tests {
         assert!(Json::parse("[1 2]").is_err());
         assert!(Json::parse("").is_err());
         assert!(Json::parse("{\"a\":1}x").is_err());
+    }
+
+    /// ISSUE 6: the daemon parses untrusted JSONL from stdin and torn
+    /// journal tails after a crash — every line in this corpus must
+    /// return a typed error (no panics, no unwinds) with a sensible
+    /// offset.
+    #[test]
+    fn broken_jsonl_corpus_returns_typed_errors() {
+        use JsonErrorKind as K;
+        let corpus: &[(&str, K)] = &[
+            // Truncated mid-structure (torn journal tail).
+            ("{\"cmd\":\"admit\",\"job\":{\"id\":3", K::UnexpectedEof),
+            ("[1,2,", K::UnexpectedEof),
+            ("{\"a\"", K::UnexpectedEof),
+            ("\"unterminated", K::UnexpectedEof),
+            // Truncated mid-escape — previously a byte-slice panic.
+            ("\"x\\u00", K::BadEscape),
+            ("\"x\\u", K::BadEscape),
+            ("\"x\\", K::UnexpectedEof),
+            ("\"x\\q\"", K::BadEscape),
+            ("\"x\\uZZZZ\"", K::BadEscape),
+            // Malformed tokens.
+            ("{\"a\":tru}", K::Expected("true")),
+            ("nul", K::Expected("null")),
+            ("+", K::BadNumber),
+            ("1.2.3", K::BadNumber),
+            ("--5", K::BadNumber),
+            ("{\"a\" 1}", K::Expected(":")),
+            ("[1;2]", K::Expected(", or ]")),
+            ("{\"a\":1 \"b\":2}", K::Expected(", or }")),
+            // Complete value followed by junk (two records on one line).
+            ("{\"a\":1}{\"b\":2}", K::TrailingData),
+            ("42 43", K::TrailingData),
+        ];
+        for (src, want) in corpus {
+            let err = Json::parse(src).expect_err(src);
+            assert_eq!(err.kind, *want, "{src:?} -> {err}");
+            assert!(err.at <= src.len(), "{src:?}: offset {} past end", err.at);
+            // Display stays stable enough to log.
+            assert!(err.to_string().contains("byte"), "{err}");
+        }
     }
 }

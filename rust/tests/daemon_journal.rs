@@ -1,0 +1,195 @@
+//! ISSUE 6 gate: journaled crash recovery for `rollmuxd`
+//! (DESIGN.md §14).
+//!
+//! Contract: daemon state is a pure function of the accepted command
+//! sequence, and the write-ahead journal records exactly that sequence.
+//! Therefore killing the daemon at ANY point of a session — including
+//! mid-frame, leaving a torn tail on disk — then restarting, replaying
+//! the journal, and feeding the not-yet-accepted remainder of the
+//! session must end in **bitwise identical** final accounting to the
+//! uninterrupted run. Checked across crash points × torn-tail byte
+//! trims × chaos stream on/off.
+//!
+//! (The journal sequence number itself is excluded from accounting:
+//! flight-recorder notes consume seqs and a torn note is legitimately
+//! lost, so seq drifts between recovered and uninterrupted runs.)
+
+use std::fs;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+use rollmux::runtime::{Daemon, DaemonConfig};
+use rollmux::sim::{FaultConfig, SimConfig};
+
+fn admit_line(id: usize, t_roll: f64, t_train: f64, gpus: usize, iters: usize) -> String {
+    format!(
+        "{{\"cmd\":\"admit\",\"job\":{{\"id\":{id},\"n_iters\":{iters},\"slo\":3.0,\
+         \"n_roll_gpus\":{gpus},\"n_train_gpus\":{gpus},\"params_b\":7.0,\
+         \"t_roll\":{t_roll},\"t_train\":{t_train}}}}}"
+    )
+}
+
+/// A session of mutating commands only (each line lands one journal
+/// frame), ending in a drain. Mixes admits of two sizes, a heartbeat, a
+/// targeted crash, time advances, and a cancel.
+fn session() -> Vec<String> {
+    vec![
+        admit_line(0, 120.0, 80.0, 8, 5),
+        admit_line(1, 90.0, 70.0, 8, 5),
+        "{\"cmd\":\"advance\",\"dt\":250}".into(),
+        "{\"cmd\":\"beat\",\"group\":0}".into(),
+        admit_line(2, 150.0, 95.0, 16, 4),
+        "{\"cmd\":\"fault\",\"kind\":\"crash\",\"group\":0,\"node\":0}".into(),
+        "{\"cmd\":\"advance\",\"dt\":400}".into(),
+        admit_line(3, 100.0, 60.0, 8, 4),
+        "{\"cmd\":\"cancel\",\"job\":1}".into(),
+        "{\"cmd\":\"advance\",\"dt\":300}".into(),
+        "{\"cmd\":\"drain\"}".into(),
+    ]
+}
+
+fn cfg(chaos: bool) -> DaemonConfig {
+    DaemonConfig {
+        sim: SimConfig {
+            seed: 23,
+            faults: chaos.then(|| FaultConfig {
+                seed: 23,
+                mtbf_s: 700.0,
+                mean_repair_s: 90.0,
+                straggler_frac: 0.3,
+                straggler_factor: 1.4,
+                max_events: 10,
+            }),
+            ..Default::default()
+        },
+        gpu_cap: 96,
+        queue_cap: 8,
+        sync_every: 2,
+        ..Default::default()
+    }
+}
+
+/// Final accounting = the `{"drained":...}` response of the session's
+/// drain command (daemon stats + SimResult JSON).
+fn drained_line(out: &[String]) -> String {
+    out.iter()
+        .rev()
+        .find(|l| l.contains("\"drained\""))
+        .cloned()
+        .expect("session must end with a drained line")
+}
+
+fn run_uninterrupted(chaos: bool) -> String {
+    let mut d = Daemon::new_virtual(cfg(chaos));
+    let mut out = Vec::new();
+    for l in session() {
+        out.extend(d.handle_line(&l));
+    }
+    drained_line(&out)
+}
+
+fn journal_path(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("rollmux_daemon_journal_{}_{tag}.jsonl", std::process::id()));
+    p
+}
+
+/// Feed the first `crash_after` lines into a journaled daemon, drop it
+/// cold (kill -9 at a frame boundary), shave `torn` bytes off the
+/// journal tail (kill -9 mid-write), then recover into a fresh daemon
+/// and feed the rest of the session from the replayed command count.
+fn run_interrupted(chaos: bool, crash_after: usize, torn: u64, tag: &str) -> String {
+    let lines = session();
+    let path = journal_path(tag);
+    let _ = fs::remove_file(&path);
+
+    let mut d = Daemon::new_virtual(cfg(chaos));
+    d.attach_journal(&path).expect("attach fresh journal");
+    for l in &lines[..crash_after] {
+        d.handle_line(l);
+    }
+    drop(d); // no flush: the crash takes the process, not a clean exit
+
+    if torn > 0 {
+        let f = fs::OpenOptions::new().write(true).open(&path).expect("reopen journal");
+        let len = f.metadata().expect("stat journal").len();
+        f.set_len(len.saturating_sub(torn)).expect("tear journal tail");
+        f.sync_all().expect("sync torn journal");
+    }
+
+    let mut d = Daemon::new_virtual(cfg(chaos));
+    let replayed = d.attach_journal(&path).expect("recover journal");
+    assert!(
+        replayed <= crash_after,
+        "replayed {replayed} commands but only {crash_after} were accepted pre-crash"
+    );
+    // Tearing bytes can lose at most the frames those bytes touched;
+    // every fully-written earlier frame must survive.
+    if torn == 0 {
+        assert_eq!(replayed, crash_after, "clean journal must replay every accepted command");
+    }
+    let mut out = Vec::new();
+    for l in &lines[replayed..] {
+        out.extend(d.handle_line(l));
+    }
+    let _ = fs::remove_file(&path);
+    drained_line(&out)
+}
+
+#[test]
+fn recovery_matches_uninterrupted_run_across_crash_points_and_torn_tails() {
+    for chaos in [false, true] {
+        let want = run_uninterrupted(chaos);
+        // Crash early (mid-admission), mid-session (after the targeted
+        // fault), and late (everything but the drain accepted).
+        let n = session().len();
+        for crash_after in [2, 7, n - 1] {
+            for torn in [0u64, 1, 17] {
+                let tag = format!("{}_{crash_after}_{torn}", u8::from(chaos));
+                let got = run_interrupted(chaos, crash_after, torn, &tag);
+                assert_eq!(
+                    got, want,
+                    "drained accounting diverged (chaos={chaos}, \
+                     crash_after={crash_after}, torn={torn})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn garbage_journal_tail_is_truncated_and_ignored() {
+    let lines = session();
+    let path = journal_path("garbage");
+    let _ = fs::remove_file(&path);
+
+    let mut d = Daemon::new_virtual(cfg(false));
+    d.attach_journal(&path).expect("attach");
+    for l in &lines[..4] {
+        d.handle_line(l);
+    }
+    drop(d);
+
+    // Append a torn half-frame the way a crash mid-write would.
+    let mut f = fs::OpenOptions::new().append(true).open(&path).expect("reopen");
+    f.seek(SeekFrom::End(0)).expect("seek");
+    f.write_all(b"{\"crc\":\"dead").expect("append torn frame");
+    drop(f);
+
+    let mut d = Daemon::new_virtual(cfg(false));
+    let replayed = d.attach_journal(&path).expect("recover past garbage");
+    assert_eq!(replayed, 4, "garbage tail must not cost any complete frame");
+    // The torn tail was truncated away, so new appends produce a journal
+    // a second recovery accepts in full.
+    for l in &lines[replayed..] {
+        d.handle_line(l);
+    }
+    let stats = d.stats();
+    drop(d);
+    let mut d = Daemon::new_virtual(cfg(false));
+    let replayed = d.attach_journal(&path).expect("second recovery");
+    assert_eq!(replayed, lines.len(), "post-truncation appends must all replay");
+    assert_eq!(d.stats().admitted, stats.admitted);
+    assert_eq!(d.stats().cancelled, stats.cancelled);
+    let _ = fs::remove_file(&path);
+}

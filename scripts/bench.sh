@@ -4,10 +4,10 @@
 # across PRs; see EXPERIMENTS.md §Perf for methodology). ISSUE 1
 # produced BENCH_1.json, ISSUE 2 BENCH_2.json; the generation is now a
 # parameter so each PR appends its own file instead of editing this
-# script (ISSUE 5 default: BENCH_5.json).
+# script (ISSUE 6 default: BENCH_6.json).
 #
 # Usage: scripts/bench.sh [gen] [extra cargo args...]
-#   gen              bench generation number (default: 5 -> BENCH_5.json)
+#   gen              bench generation number (default: 6 -> BENCH_6.json)
 #   BENCH_OUT=path   override the output file entirely
 #
 # Each bench binary appends one JSON object per measurement to
@@ -16,7 +16,7 @@
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
-GEN="5"
+GEN="6"
 if [[ $# -ge 1 && "$1" =~ ^[0-9]+$ ]]; then
     GEN="$1"
     shift
@@ -43,6 +43,9 @@ cargo bench --bench simulator "$@"
 cargo bench --bench orchestrator "$@"
 # sync_and_memory measures per-decision micro-costs; cheap, keep it in.
 cargo bench --bench sync_and_memory "$@" || true
+# ISSUE 6: rollmuxd control-plane series — admission throughput (bare
+# and journaled) and cold-start journal replay (crash recovery).
+cargo bench --bench daemon "$@"
 
 if [[ ! -s "$BENCH_JSON_OUT" ]]; then
     echo "error: benches produced no records at $BENCH_JSON_OUT" >&2
