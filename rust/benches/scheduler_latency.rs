@@ -144,6 +144,42 @@ fn main() {
         ],
     );
 
+    // ISSUE 7 gen-7: the sharded placement scan vs the single-shard
+    // indexed path on the same 20k-job fleet build-up. Decisions are
+    // property-tested bit-identical to `schedule_reference`
+    // (rust/tests/prop_shard_equivalence.rs); only wall time may differ.
+    let place_sharded = |shards: usize| {
+        timed(|| {
+            let mut s = InterGroupScheduler::with_shards(model, shards);
+            for id in 0..FLEET {
+                s.schedule(mk_job(id));
+            }
+            s.groups.len()
+        })
+    };
+    let (groups_s1, secs_s1) = place_sharded(1);
+    let (groups_s8, secs_s8) = place_sharded(8);
+    assert_eq!(groups_s1, groups_s8, "sharded and single-shard scans must agree");
+    println!(
+        "scale/placement_sharded_20k: 1 shard {:.3}s vs 8 shards {:.3}s \
+         ({:.2}x, {:.0} placements/s sharded)",
+        secs_s1,
+        secs_s8,
+        secs_s1 / secs_s8.max(1e-12),
+        FLEET as f64 / secs_s8
+    );
+    emit_bench_json(
+        BIN,
+        "scale/placement_sharded_20k",
+        &[
+            ("wall_s_1shard", secs_s1),
+            ("wall_s_8shards", secs_s8),
+            ("placements_per_s", FLEET as f64 / secs_s8),
+            ("speedup_8_over_1", secs_s1 / secs_s8.max(1e-12)),
+            ("groups", groups_s8 as f64),
+        ],
+    );
+
     // Brute force for reference (paper: 113 ms @5, >1 min @9, >5 h @13).
     for &n in &[5usize, 7, 9] {
         let mut rng = Rng::new(7);

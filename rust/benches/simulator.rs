@@ -233,6 +233,52 @@ fn main() {
             ("crashes", exact_chaos.crashes as f64),
         ],
     );
+    // ISSUE 7 gen-7 acceptance pair: the group-parallel exact engine vs
+    // the serial loop on the SAME fleet trace (results are bit-identical
+    // — `prop_shard_equivalence` gates that; this measures only wall
+    // time). The acceptance bar is >= 3x at 8 workers on the 100k-job
+    // trace (EXPERIMENTS.md §scale). ROLLMUX_BENCH_PAR_JOBS shrinks the
+    // trace for quick local runs without renaming the series.
+    {
+        let par_jobs = std::env::var("ROLLMUX_BENCH_PAR_JOBS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(100_000);
+        let workers = 8usize;
+        let trace_par = fleet_trace(7, par_jobs, 1.0);
+        let (serial, serial_s) =
+            timed(|| run_sim(mk_cfg(Fidelity::Exact), mk_sched(), trace_par.clone()));
+        let (parallel, parallel_s) = timed(|| {
+            let mut sim = Simulator::new(mk_cfg(Fidelity::Exact), mk_sched(), trace_par.clone());
+            sim.run_parallel(workers)
+        });
+        assert_eq!(
+            serial.makespan_s.to_bits(),
+            parallel.makespan_s.to_bits(),
+            "parallel engine diverged from serial"
+        );
+        assert_eq!(serial.events_processed, parallel.events_processed);
+        let speedup = serial_s / parallel_s.max(1e-12);
+        println!(
+            "scale/engine_parallel_100k: serial {serial_s:.2}s vs parallel {parallel_s:.2}s \
+             ({speedup:.2}x at {workers} workers, {par_jobs} jobs, {} events)",
+            serial.events_processed
+        );
+        emit_bench_json(
+            BIN,
+            "scale/engine_parallel_100k",
+            &[
+                ("serial_wall_s", serial_s),
+                ("parallel_wall_s", parallel_s),
+                ("speedup", speedup),
+                ("workers", workers as f64),
+                ("jobs", par_jobs as f64),
+                ("events", serial.events_processed as f64),
+            ],
+        );
+    }
+
     if std::env::var("ROLLMUX_BENCH_EXACT_100K").is_ok_and(|v| v == "1") {
         let (exact100, exact100_s) =
             timed(|| run_sim(mk_cfg(Fidelity::Exact), mk_sched(), trace100k));

@@ -422,6 +422,17 @@ impl Group {
         !self.mem_over && self.train_mem <= HOST_MEM_GB
     }
 
+    /// Fig. 6 admission precheck, standalone: the serial training queue
+    /// plus the probe's occupancy must fit the (possibly stretched) cycle.
+    /// This is the exact inequality the placement scan applies before node
+    /// ranking; the sharded scan (DESIGN.md §15) and the serial scan call
+    /// the same expression so their candidate sets are identical.
+    #[inline]
+    pub fn precheck_admit(&self, probe: &GroupJob) -> bool {
+        let new_cycle = self.t_cycle.max(probe.t_solo());
+        self.train_load + probe.train_occupancy() <= new_cycle + 1e-9
+    }
+
     /// Clone-free feasibility + marginal-cost check of admitting `probe`
     /// pinned to `roll_nodes`, with the rollout pool grown by
     /// `added_nodes` fresh nodes (Algorithm 1 lines 6-14, previously a

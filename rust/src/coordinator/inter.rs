@@ -28,12 +28,20 @@
 //! exhaustive scan alive as the equivalence oracle (property-tested
 //! bitwise in `rust/tests/prop_placement_index.rs`) and as the bench
 //! baseline for the ≥5x fleet-scale acceptance bar.
+//!
+//! **Sharded scan (ISSUE 7, DESIGN.md §15).** With
+//! [`InterGroupScheduler::with_shards`] the candidate scan partitions by
+//! training-pool size across N shards; shard scans are read-only and fan
+//! out via `util/par` on large candidate sets, and the per-shard minima
+//! merge by `(Δ, group id)` ascending — reproducing the serial winner
+//! bit-for-bit (property-tested in `tests/prop_shard_equivalence.rs`).
 
 use std::collections::{BTreeMap, HashMap};
 
-use crate::cluster::node::{NodeId, HOST_MEM_GB};
+use crate::cluster::node::{NodeId, GPUS_PER_NODE, HOST_MEM_GB};
 use crate::cluster::PhaseModel;
 use crate::memory::residency::ResidencyLedger;
+use crate::util::par;
 use crate::workload::job::{JobId, JobSpec};
 
 use super::group::{Group, GroupJob};
@@ -185,6 +193,13 @@ pub struct InterGroupScheduler {
     scratch_gids: Vec<u32>,
     /// Scratch for the reference path's node ranking sort.
     scratch_by_load: Vec<(f64, usize)>,
+    /// Placement shard count (ISSUE 7): 1 = the classic serial scan;
+    /// N > 1 partitions candidates by training-pool size across N shards
+    /// whose scans fan out via `util/par` and merge deterministically.
+    shards: usize,
+    /// Per-shard candidate-list scratch (reused across decisions so the
+    /// sharded hot path stays allocation-free after warmup).
+    scratch_shard_parts: Vec<Vec<u32>>,
     /// Live mirror of every (group, rollout node) pin in host-DRAM GB —
     /// the paper's §4.1 residency ledger, keyed by
     /// [`Self::ledger_node`]. The chaos repair layer invalidates a
@@ -207,8 +222,32 @@ impl InterGroupScheduler {
             gid_to_idx: Vec::new(),
             scratch_gids: Vec::new(),
             scratch_by_load: Vec::new(),
+            shards: 1,
+            scratch_shard_parts: Vec::new(),
             ledger: ResidencyLedger::new(HOST_MEM_GB),
         }
+    }
+
+    /// Builder: run placement scans across `shards` deterministic shards
+    /// (clamped to ≥ 1). Decisions are bit-identical to the serial scan
+    /// for every shard count — property-tested against
+    /// [`Self::schedule_reference`] in `tests/prop_shard_equivalence.rs`.
+    pub fn with_shards(model: PhaseModel, shards: usize) -> Self {
+        let mut s = Self::new(model);
+        s.set_shards(shards);
+        s
+    }
+
+    /// Re-shard the placement scan (clamped to ≥ 1; 1 restores the
+    /// classic serial scan). Safe at any point: sharding only changes how
+    /// the candidate scan is partitioned, never which winner it picks.
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards.max(1);
+    }
+
+    /// Current placement shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     /// The ledger's global node id for a group-local rollout node.
@@ -312,45 +351,21 @@ impl InterGroupScheduler {
             }
         }
 
-        let mut best: Option<(f64, usize, Candidate)> = None; // (Δ, group idx, cand)
-        'scan: for &gid in cands.iter() {
-            if exclude == Some(gid as usize) {
-                continue;
-            }
-            let gi = self.gid_to_idx[gid as usize];
-            let g = &self.groups[gi];
-            // Line 4's cap companion: skip full groups.
-            if self.max_group_size.is_some_and(|cap| g.jobs().len() >= cap) {
-                continue;
-            }
-            let probe = &probes[&g.train_gpus()];
-            // Fig. 6 precheck: the training queue alone must fit the new
-            // cycle — rejects most groups before node ranking (exact; the
-            // index prune above is a superset of the groups reaching
-            // here).
-            let new_cycle = g.t_cycle().max(probe.t_solo());
-            if g.train_queue_load() + probe.train_occupancy() > new_cycle + 1e-9 {
-                continue;
-            }
-            // Lines 6-14: enumerate placements, evaluate each clone-free.
-            for cand in generate_placements(g, &spec, indexed, &mut self.scratch_by_load) {
-                let added = match &cand.kind {
-                    PlacementKind::RolloutScale { added_nodes } => *added_nodes,
-                    _ => 0,
-                };
-                if let Some(delta) = g.evaluate_admit(probe, &cand.roll_nodes, added) {
-                    if best.as_ref().is_none_or(|(d, _, _)| delta < *d) {
-                        let free = delta == 0.0;
-                        best = Some((delta, gi, cand));
-                        if free {
-                            // Δ can never be negative: nothing beats
-                            // packing into existing bubbles for free.
-                            break 'scan;
-                        }
-                    }
-                }
-            }
-        }
+        let best: Option<(f64, usize, Candidate)> = if indexed && self.shards > 1 {
+            self.scan_sharded(&cands, &probes, &spec, exclude)
+        } else {
+            scan_candidates(
+                &self.groups,
+                &self.gid_to_idx,
+                self.max_group_size,
+                &probes,
+                &spec,
+                exclude,
+                indexed,
+                &cands,
+                &mut self.scratch_by_load,
+            )
+        };
         self.scratch_gids = cands;
 
         // Lines 15-17: isolated-group fallback (costed without building it).
@@ -401,6 +416,98 @@ impl InterGroupScheduler {
                 }
             }
         }
+    }
+
+    /// The shard a group belongs to, keyed by its training-pool size
+    /// (ISSUE 7): groups sharing a pool size — the paper's locality
+    /// domain, and the unit the probe map and the unsaturated index are
+    /// already keyed by — land on the same shard, so each shard owns a
+    /// contiguous slice of the index bucket space and reuses one probe
+    /// per size it owns.
+    fn shard_of(&self, gid: u32) -> usize {
+        let g = &self.groups[self.gid_to_idx[gid as usize]];
+        (g.train_gpus() / GPUS_PER_NODE) % self.shards
+    }
+
+    /// Sharded candidate scan (DESIGN.md §15): partition `cands` by
+    /// training-pool size into `self.shards` shards (ascending-gid order
+    /// preserved within each shard), scan every shard with the identical
+    /// strict-`<` / Δ=0-early-exit loop the serial path runs, then merge
+    /// the per-shard minima by `(Δ, group id)` ascending. The merge key
+    /// reproduces the serial winner exactly: the serial scan keeps the
+    /// *first* (lowest-gid) candidate achieving the global minimum Δ, and
+    /// Δ values are computed by the same code on both paths so equal
+    /// means bitwise-equal. Shard scans are read-only (`evaluate_admit`
+    /// never mutates), so they fan out via `util/par` when the candidate
+    /// set is large enough to amortize the spawn; below the threshold the
+    /// shards run serially in shard order — same merge, same winner.
+    fn scan_sharded(
+        &mut self,
+        cands: &[u32],
+        probes: &HashMap<usize, GroupJob>,
+        spec: &JobSpec,
+        exclude: Option<usize>,
+    ) -> Option<(f64, usize, Candidate)> {
+        /// Fan out across threads only when each shard has enough
+        /// candidates to amortize the scoped-thread setup.
+        const FANOUT_MIN_CANDS: usize = 192;
+
+        let nshards = self.shards;
+        let mut parts = std::mem::take(&mut self.scratch_shard_parts);
+        parts.resize_with(nshards, Vec::new);
+        for p in &mut parts {
+            p.clear();
+        }
+        for &gid in cands {
+            let s = self.shard_of(gid);
+            parts[s].push(gid);
+        }
+
+        let groups = &self.groups;
+        let gid_to_idx = &self.gid_to_idx;
+        let cap = self.max_group_size;
+        let scan = |scratch: &mut Vec<(f64, usize)>, part: &[u32]| {
+            scan_candidates(
+                groups, gid_to_idx, cap, probes, spec, exclude, true, part, scratch,
+            )
+        };
+
+        let fanout = cands.len() >= FANOUT_MIN_CANDS && par::max_threads() > 1;
+        let (results, parts_back): (Vec<Option<(f64, usize, Candidate)>>, Vec<Vec<u32>>) =
+            if fanout {
+                let merged = par::parallel_map_pooled(
+                    nshards,
+                    parts,
+                    Vec::new,
+                    |scratch, _i, part| {
+                        let r = scan(scratch, &part);
+                        (r, part)
+                    },
+                );
+                merged.into_iter().unzip()
+            } else {
+                let mut scratch = std::mem::take(&mut self.scratch_by_load);
+                let results = parts.iter().map(|part| scan(&mut scratch, part)).collect();
+                self.scratch_by_load = scratch;
+                (results, parts)
+            };
+        self.scratch_shard_parts = parts_back;
+
+        // Deterministic cross-shard arbitration: minimum (Δ, group id).
+        // `gi` (position in `groups`) is ascending in group id — ids are
+        // monotone and removals preserve order — so comparing positions
+        // is comparing ids.
+        let mut best: Option<(f64, usize, Candidate)> = None;
+        for r in results.into_iter().flatten() {
+            let better = match &best {
+                None => true,
+                Some((bd, bgi, _)) => r.0 < *bd || (r.0 == *bd && r.1 < *bgi),
+            };
+            if better {
+                best = Some(r);
+            }
+        }
+        best
     }
 
     /// Job completion: release its state; deprovision empty groups and
@@ -572,6 +679,65 @@ impl InterGroupScheduler {
 struct Candidate {
     kind: PlacementKind,
     roll_nodes: Vec<usize>,
+}
+
+/// Algorithm 1 lines 4–14 over one candidate-id list: the exact scan the
+/// serial path has always run, extracted so the sharded path can run it
+/// per shard. Visits `cands` in order (ascending gid), keeps the first
+/// candidate strictly improving on the running best, and early-exits on
+/// Δ = 0 (nothing beats packing into existing bubbles for free). Returns
+/// `(Δ, position in groups, candidate)` of the scan's winner. Read-only
+/// with respect to the scheduler — `scratch` is the only mutation, and it
+/// is caller-local.
+#[allow(clippy::too_many_arguments)]
+fn scan_candidates(
+    groups: &[Group],
+    gid_to_idx: &[usize],
+    max_group_size: Option<usize>,
+    probes: &HashMap<usize, GroupJob>,
+    spec: &JobSpec,
+    exclude: Option<usize>,
+    use_node_order: bool,
+    cands: &[u32],
+    scratch: &mut Vec<(f64, usize)>,
+) -> Option<(f64, usize, Candidate)> {
+    let mut best: Option<(f64, usize, Candidate)> = None;
+    'scan: for &gid in cands {
+        if exclude == Some(gid as usize) {
+            continue;
+        }
+        let gi = gid_to_idx[gid as usize];
+        let g = &groups[gi];
+        // Line 4's cap companion: skip full groups.
+        if max_group_size.is_some_and(|cap| g.jobs().len() >= cap) {
+            continue;
+        }
+        let probe = &probes[&g.train_gpus()];
+        // Fig. 6 precheck: the training queue alone must fit the new
+        // cycle — rejects most groups before node ranking (exact; the
+        // index prune is a superset of the groups reaching here).
+        if !g.precheck_admit(probe) {
+            continue;
+        }
+        // Lines 6-14: enumerate placements, evaluate each clone-free.
+        for cand in generate_placements(g, spec, use_node_order, scratch) {
+            let added = match &cand.kind {
+                PlacementKind::RolloutScale { added_nodes } => *added_nodes,
+                _ => 0,
+            };
+            if let Some(delta) = g.evaluate_admit(probe, &cand.roll_nodes, added) {
+                if best.as_ref().is_none_or(|(d, _, _)| delta < *d) {
+                    let free = delta == 0.0;
+                    best = Some((delta, gi, cand));
+                    if free {
+                        // Δ can never be negative.
+                        break 'scan;
+                    }
+                }
+            }
+        }
+    }
+    best
 }
 
 /// GENERATEPLACEMENTS (Algorithm 1 line 6): direct packing onto the
@@ -773,6 +939,33 @@ mod tests {
             }
         }
         assert_eq!(a.groups.len(), b.groups.len());
+    }
+
+    /// ISSUE 7: the sharded scan must pick the bitwise-identical winner
+    /// for every shard count, through completions (index churn) and group
+    /// deprovisioning. The heavyweight randomized version lives in
+    /// `tests/prop_shard_equivalence.rs`; this pins the unit-scale core.
+    #[test]
+    fn sharded_scan_matches_reference_across_shard_counts() {
+        for shards in [1usize, 2, 3, 8] {
+            let mut a = InterGroupScheduler::with_shards(PhaseModel::default(), shards);
+            let mut b = InterGroupScheduler::new(PhaseModel::default());
+            assert_eq!(a.shards(), shards.max(1));
+            for id in 0..80 {
+                let t_roll = 50.0 + (id % 7) as f64 * 30.0;
+                let t_train = 40.0 + (id % 5) as f64 * 25.0;
+                let slo = 1.2 + (id % 4) as f64 * 0.4;
+                let da = a.schedule(direct_job(id, t_roll, t_train, slo));
+                let db = b.schedule_reference(direct_job(id, t_roll, t_train, slo));
+                assert_eq!(da, db, "shards={shards} job {id}");
+                assert_eq!(da.marginal_cost.to_bits(), db.marginal_cost.to_bits());
+                if id >= 8 && id % 3 == 0 {
+                    a.complete_job(id - 8);
+                    b.complete_job(id - 8);
+                }
+            }
+            assert_eq!(a.groups.len(), b.groups.len());
+        }
     }
 
     /// ISSUE 5: the residency-ledger mirror must agree with the Group

@@ -8,6 +8,7 @@ pub mod chaos;
 pub mod fleet;
 pub mod micro;
 pub mod motivation;
+pub mod scale;
 pub mod serve;
 pub mod simstudy;
 
@@ -52,6 +53,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("fleet", "100k-job fleet what-if sweep (fluid tier, ISSUE 4)", fleet::fleet),
         ("chaos", "Failure injection: MTBF x caps with elastic repair (ISSUE 5)", chaos::chaos),
         ("serve", "Scripted rollmuxd session on the virtual cluster (ISSUE 6)", serve::serve),
+        ("scale", "Million-job scale-out: sharded + streamed + parallel DES (ISSUE 7)", scale::scale),
     ]
 }
 

@@ -1,0 +1,256 @@
+//! Arena / SoA layouts for the fleet hot path (ISSUE 7, DESIGN.md §15).
+//!
+//! Three pieces, all allocation-stingy and deterministic:
+//!
+//! * [`GroupAcct`] — one co-execution group's busy/event accumulators,
+//!   pulled out of the global [`crate::sim::SimResult`] so that the
+//!   group-parallel engine drain can hand each worker its own slice.
+//!   The serial engine writes the SAME per-group entries and
+//!   `finalize` folds them in ascending group id, a fixed deterministic
+//!   order — which is exactly what makes the serial and parallel loops
+//!   produce bit-identical `SimResult`s (the fold replaces the old
+//!   chronological global accumulation; every global `f64` is now a
+//!   per-group chronological sum combined in gid order).
+//! * [`AcctArena`] — the dense gid-indexed slab of `GroupAcct`s with
+//!   take/put so a window of parallel draining can move a group's
+//!   accumulators into a worker and back without cloning.
+//! * [`ArrivalStore`] — an arrival-order job store for streaming traces:
+//!   dense indices exactly like the batch `Vec<Option<JobSpec>>`, but
+//!   settled front entries are compacted away, so a million-job stream
+//!   holds only the in-flight window instead of the whole trace.
+
+use std::collections::VecDeque;
+
+/// Per-group busy/event accumulators (the group's slice of the old
+/// global `SimResult` streaming integrals). All writes a group-local
+/// event handler performs land here; `Simulator::finalize` folds the
+/// arena ascending-gid into the flat result fields.
+#[derive(Clone, Debug, Default)]
+pub struct GroupAcct {
+    /// Rollout-pool busy GPU-seconds contributed by this group.
+    pub roll_busy_gpu_s: f64,
+    /// Training-pool busy GPU-seconds contributed by this group.
+    pub train_busy_gpu_s: f64,
+    /// Whether the training accumulator was ever written — preserves the
+    /// old `resize`-on-write dimensional semantics of
+    /// `SimResult::train_group_busy_gpu_s` (a group whose adds cancel to
+    /// exactly 0.0 still occupies a slot).
+    pub train_touched: bool,
+    /// Busy GPU-seconds per group-local rollout node (`resize`-on-write,
+    /// mirroring the old `SimResult::roll_node_busy_gpu_s[gid]`).
+    pub node_busy_gpu_s: Vec<f64>,
+    /// Group-local events processed (folded into
+    /// `SimResult::events_processed`; counts are order-independent).
+    pub events: usize,
+}
+
+impl GroupAcct {
+    /// Streaming per-node rollout busy accumulation (GPU-s).
+    #[inline]
+    pub fn node_busy_add(&mut self, node: usize, gpu_s: f64) {
+        if self.node_busy_gpu_s.len() <= node {
+            self.node_busy_gpu_s.resize(node + 1, 0.0);
+        }
+        self.node_busy_gpu_s[node] += gpu_s;
+    }
+
+    /// Streaming training-pool busy accumulation (GPU-s).
+    #[inline]
+    pub fn train_busy_add(&mut self, gpu_s: f64) {
+        self.train_touched = true;
+        self.train_busy_gpu_s += gpu_s;
+    }
+}
+
+/// Dense gid-indexed arena of [`GroupAcct`]s. `get_mut` grows on demand
+/// (group ids are handed out dense and monotone — same contract the
+/// engine's `group_rt` slab relies on).
+#[derive(Clone, Debug, Default)]
+pub struct AcctArena {
+    accts: Vec<GroupAcct>,
+}
+
+impl AcctArena {
+    pub fn new() -> Self {
+        AcctArena { accts: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.accts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accts.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.accts.clear();
+    }
+
+    fn ensure(&mut self, gid: usize) {
+        if self.accts.len() <= gid {
+            self.accts.resize_with(gid + 1, GroupAcct::default);
+        }
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, gid: usize) -> &mut GroupAcct {
+        self.ensure(gid);
+        &mut self.accts[gid]
+    }
+
+    #[inline]
+    pub fn get(&self, gid: usize) -> Option<&GroupAcct> {
+        self.accts.get(gid)
+    }
+
+    /// Move a group's accumulators out (for a parallel-drain worker);
+    /// the slot is left defaulted and restored via [`Self::put`].
+    pub fn take(&mut self, gid: usize) -> GroupAcct {
+        self.ensure(gid);
+        std::mem::take(&mut self.accts[gid])
+    }
+
+    pub fn put(&mut self, gid: usize, acct: GroupAcct) {
+        self.ensure(gid);
+        self.accts[gid] = acct;
+    }
+}
+
+/// Arrival-order store for streaming traces (satellite of ISSUE 7).
+///
+/// The batch tiers take job specs out of a `Vec<Option<JobSpec>>` by
+/// arrival index; a 1M-job stream cannot afford the whole vector, so
+/// this keeps the same dense indexing while popping settled (taken)
+/// entries off the front. Indices are global (never re-based), so
+/// events that carry arrival indices stay valid across compaction.
+#[derive(Clone, Debug, Default)]
+pub struct ArrivalStore<T> {
+    /// Global index of `slots[0]`.
+    base: usize,
+    slots: VecDeque<Option<T>>,
+    total: usize,
+    taken: usize,
+}
+
+impl<T> ArrivalStore<T> {
+    pub fn new() -> Self {
+        ArrivalStore { base: 0, slots: VecDeque::new(), total: 0, taken: 0 }
+    }
+
+    /// Total entries ever pushed (the streaming analogue of
+    /// `trace.len()` — used by the batch tiers' settled-world guards).
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Entries pushed but not yet taken.
+    pub fn outstanding(&self) -> usize {
+        self.total - self.taken
+    }
+
+    /// In-memory window size (diagnostics; stays O(in-flight jobs)).
+    pub fn window_len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.base = 0;
+        self.slots.clear();
+        self.total = 0;
+        self.taken = 0;
+    }
+
+    /// Append the next arrival; returns its dense global index.
+    pub fn push(&mut self, item: T) -> usize {
+        let idx = self.total;
+        self.slots.push_back(Some(item));
+        self.total += 1;
+        idx
+    }
+
+    /// Take the entry at global index `idx` (once), then compact settled
+    /// front entries. Returns `None` if already taken or out of range.
+    pub fn take(&mut self, idx: usize) -> Option<T> {
+        let off = idx.checked_sub(self.base)?;
+        let item = self.slots.get_mut(off)?.take();
+        if item.is_some() {
+            self.taken += 1;
+            while matches!(self.slots.front(), Some(None)) {
+                self.slots.pop_front();
+                self.base += 1;
+            }
+        }
+        item
+    }
+
+    /// Peek the entry at global index `idx` (not yet taken).
+    pub fn get(&self, idx: usize) -> Option<&T> {
+        let off = idx.checked_sub(self.base)?;
+        self.slots.get(off)?.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acct_arena_take_put_roundtrip() {
+        let mut a = AcctArena::new();
+        a.get_mut(2).roll_busy_gpu_s = 7.0;
+        a.get_mut(2).node_busy_add(1, 3.0);
+        a.get_mut(0).train_busy_add(5.0);
+        let taken = a.take(2);
+        assert_eq!(taken.roll_busy_gpu_s, 7.0);
+        assert_eq!(taken.node_busy_gpu_s, vec![0.0, 3.0]);
+        // The slot is defaulted while taken.
+        assert_eq!(a.get(2).unwrap().roll_busy_gpu_s, 0.0);
+        a.put(2, taken);
+        assert_eq!(a.get(2).unwrap().node_busy_gpu_s.len(), 2);
+        assert!(a.get(0).unwrap().train_touched);
+        assert!(!a.get(1).unwrap().train_touched);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn acct_preserves_resize_on_write_semantics() {
+        let mut a = AcctArena::new();
+        // A zero-valued write still marks the slot (old engine resized
+        // the flat vectors on every add, value notwithstanding).
+        a.get_mut(1).train_busy_add(0.0);
+        assert!(a.get(1).unwrap().train_touched);
+        a.get_mut(1).node_busy_add(3, 0.0);
+        assert_eq!(a.get(1).unwrap().node_busy_gpu_s.len(), 4);
+    }
+
+    #[test]
+    fn arrival_store_dense_indices_and_compaction() {
+        let mut s = ArrivalStore::new();
+        for i in 0..10 {
+            assert_eq!(s.push(i * 100), i);
+        }
+        assert_eq!(s.total(), 10);
+        assert_eq!(s.outstanding(), 10);
+        // Take out of order: middle first, then the front run compacts.
+        assert_eq!(s.take(3), Some(300));
+        assert_eq!(s.window_len(), 10, "front not settled yet");
+        assert_eq!(s.take(0), Some(0));
+        assert_eq!(s.take(1), Some(100));
+        assert_eq!(s.take(2), Some(200));
+        // 0..=3 settled: the window slides past them.
+        assert_eq!(s.window_len(), 6);
+        assert_eq!(s.take(3), None, "double take");
+        assert_eq!(s.take(0), None, "compacted away");
+        assert_eq!(s.get(4), Some(&400));
+        assert_eq!(s.get(2), None);
+        for i in 4..10 {
+            assert_eq!(s.take(i), Some(i * 100));
+        }
+        assert_eq!(s.outstanding(), 0);
+        assert_eq!(s.window_len(), 0);
+        // Indices keep growing densely after compaction.
+        assert_eq!(s.push(999), 10);
+        assert_eq!(s.get(10), Some(&999));
+    }
+}

@@ -61,6 +61,53 @@ impl<T> Ord for FarEv<T> {
     }
 }
 
+/// A group-local pending-event lane (ISSUE 7, DESIGN.md §15): the
+/// per-co-execution-group partition of the engine's calendar, drained by
+/// a parallel worker between scheduler decision points. Pops the exact
+/// same `(t, seq)` total order as [`CalendarQueue`] and the heap engine
+/// (it reuses [`FarEv`]'s comparator), so a lane drained in isolation
+/// replays its group's serial sub-sequence bit for bit.
+///
+/// Lanes are small (one group's in-flight phase events), so a plain
+/// binary heap beats bucketing here; the global calendar keeps the
+/// cross-group ordering.
+#[derive(Clone, Debug)]
+pub struct LaneQueue<T> {
+    heap: BinaryHeap<FarEv<T>>,
+}
+
+impl<T> LaneQueue<T> {
+    pub fn new() -> Self {
+        LaneQueue { heap: BinaryHeap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Insert with an explicit `(t, seq)` key — inherited events keep
+    /// their global key so the lane's order matches the serial pop
+    /// order; lane-generated events use the lane's local counter.
+    pub fn push(&mut self, t: f64, seq: u64, item: T) {
+        debug_assert!(t.is_finite(), "event time must be finite");
+        self.heap.push(FarEv(t, seq, item));
+    }
+
+    /// The earliest `(t, seq, item)` without removing it (the parallel
+    /// drain peeks to stop at window horizons and completion barriers).
+    pub fn peek(&self) -> Option<(f64, u64, &T)> {
+        self.heap.peek().map(|e| (e.0, e.1, &e.2))
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, u64, T)> {
+        self.heap.pop().map(|FarEv(t, seq, item)| (t, seq, item))
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct CalendarQueue<T> {
     /// Ring of buckets; window `w` lives at slot `w % NBUCKETS`.

@@ -29,11 +29,26 @@
 //! (group, rollout node) and per group training pool, as phases start —
 //! so utilization/bubble accounting no longer needs the `record_gantt`
 //! timeline, and `record_gantt: false` sweeps allocate nothing per phase.
+//!
+//! ISSUE 7 (DESIGN.md §15): the engine loop is two-level. Group-local
+//! events (non-final phase completions, tail checks, recoveries) touch
+//! only their co-execution group's slice of state — [`LaneCtx`] makes
+//! that isolation structural, and both the classic serial loop and the
+//! group-parallel [`Simulator::run_parallel`] drain route every such
+//! event through the SAME handler code. Global events (arrivals, faults,
+//! repairs, final syncs) are window barriers: between consecutive
+//! barriers, independent groups advance in parallel worker threads, and
+//! the per-group busy accumulators ([`super::arena::GroupAcct`]) fold in
+//! ascending group id at `finalize` — a fixed order shared by both
+//! loops, which is what keeps `run_parallel` **bit-identical** to
+//! `run_to_end` (property-tested in
+//! `rust/tests/prop_shard_equivalence.rs`).
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
 
-use super::calendar::CalendarQueue;
+use super::arena::{AcctArena, GroupAcct};
+use super::calendar::{CalendarQueue, LaneQueue};
 use super::faults::{FaultConfig, FaultKind, FaultStream};
 
 use crate::cluster::node::GPUS_PER_NODE;
@@ -489,6 +504,55 @@ struct JobRt {
     recovery_s: f64,
 }
 
+impl JobRt {
+    /// Placeholder left in a slab slot while the job is moved into a
+    /// [`GroupLane`] for a parallel window. Never dispatched against
+    /// (`done: true` would guard it anyway); replaced on lane merge.
+    fn tombstone() -> JobRt {
+        JobRt {
+            spec: JobSpec {
+                id: 0,
+                name: String::new(),
+                arrival_s: 0.0,
+                n_iters: 0,
+                slo: 0.0,
+                n_roll_gpus: 0,
+                n_train_gpus: 0,
+                params_b: 0.0,
+                phases: PhaseSpec::Direct { t_roll: 0.0, t_train: 0.0, cv: 0.0 },
+            },
+            group: usize::MAX,
+            roll_nodes: Vec::new(),
+            train_gpus: 0,
+            train_scale: 0.0,
+            t_sync: 0.0,
+            iter: 0,
+            solo_s: 0.0,
+            solo_est_iter_s: 0.0,
+            init_s: 0.0,
+            migrations: 0,
+            rng: Rng::new(0),
+            cur_troll: 0.0,
+            cur_ttrain: 0.0,
+            cur_roll_end: 0.0,
+            tail_penalty: 0.0,
+            tail_frac: 0.0,
+            done: true,
+            epoch: 0,
+            phase: None,
+            phase_start_s: 0.0,
+            cur_train_end: 0.0,
+            iter_sampled: false,
+            iter_busy_gpu_s: 0.0,
+            iter_wasted_gpu_s: 0.0,
+            consolidated: false,
+            pending_tail: None,
+            recoveries: 0,
+            recovery_s: 0.0,
+        }
+    }
+}
+
 /// Saved usage-accounting state for a trial admission (ISSUE 6):
 /// [`Simulator::usage_mark`] snapshots the peaks and the usage-curve
 /// length before a `submit`, and [`Simulator::rollback_admission`]
@@ -525,9 +589,23 @@ impl EventQueue {
     }
 
     fn pop(&mut self) -> Option<(f64, Ev)> {
+        self.pop_with_seq().map(|(t, _, ev)| (t, ev))
+    }
+
+    /// Pop with the event's sequence number — the parallel window loop
+    /// needs the full `(t, seq)` key to use a barrier as a lane horizon
+    /// (and to re-push a deferred barrier under its ORIGINAL key).
+    fn pop_with_seq(&mut self) -> Option<(f64, u64, Ev)> {
         match self {
-            EventQueue::Calendar(q) => q.pop().map(|(t, _, ev)| (t, ev)),
-            EventQueue::Heap(h) => h.pop().map(|e| (e.t, e.ev)),
+            EventQueue::Calendar(q) => q.pop(),
+            EventQueue::Heap(h) => h.pop().map(|e| (e.t, e.seq, e.ev)),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        match self {
+            EventQueue::Calendar(q) => q.is_empty(),
+            EventQueue::Heap(h) => h.is_empty(),
         }
     }
 
@@ -558,6 +636,480 @@ impl EventQueue {
     }
 }
 
+/// Minimum stashed events before a window fans out to the worker pool
+/// (ISSUE 7): tiny windows drain inline on the coordinator — through
+/// the exact same [`drain_lane`] code, so the threshold cannot change
+/// results, only where the work runs.
+const PAR_WINDOW_MIN_EVENTS: usize = 96;
+
+/// Where a [`LaneCtx`] finds its job slots: the simulator's dense slab
+/// (classic serial loop) or a lane's moved-out `(slot, JobRt)` list
+/// (parallel window drain). Owned lookup is a linear scan over the
+/// group's members — bounded by the scheduler's max group size.
+enum Slots<'a> {
+    Slab(&'a mut Vec<JobRt>),
+    Owned(&'a mut Vec<(usize, JobRt)>),
+}
+
+impl Slots<'_> {
+    fn job(&mut self, slot: usize) -> &mut JobRt {
+        match self {
+            Slots::Slab(v) => &mut v[slot],
+            Slots::Owned(v) => {
+                let i = v.iter().position(|(s, _)| *s == slot).expect("slot owned by this lane");
+                &mut v[i].1
+            }
+        }
+    }
+
+    fn job_ref(&self, slot: usize) -> &JobRt {
+        match self {
+            Slots::Slab(v) => &v[slot],
+            Slots::Owned(v) => {
+                let i = v.iter().position(|(s, _)| *s == slot).expect("slot owned by this lane");
+                &v[i].1
+            }
+        }
+    }
+}
+
+/// Where a [`LaneCtx`] pushes generated events: the global queue
+/// (classic loop) or the lane's local queue (parallel drain). Both bump
+/// their seq counter per push, preserving the equal-time FIFO order.
+enum Sink<'a> {
+    Global { events: &'a mut EventQueue, seq: &'a mut u64 },
+    Lane { queue: &'a mut LaneQueue<Ev>, seq: &'a mut u64 },
+}
+
+impl Sink<'_> {
+    fn push(&mut self, t: f64, ev: Ev) {
+        match self {
+            Sink::Global { events, seq } => {
+                **seq += 1;
+                events.push(t, **seq, ev);
+            }
+            Sink::Lane { queue, seq } => {
+                **seq += 1;
+                queue.push(t, **seq, ev);
+            }
+        }
+    }
+}
+
+/// One co-execution group's view of the engine (ISSUE 7, DESIGN.md §15):
+/// exactly the state a group-local event handler may touch — its jobs,
+/// its orchestration core, its arena accumulators, an event sink and the
+/// sampling scratch. The handler bodies moved here VERBATIM from the
+/// monolithic `Simulator` impl; the serial loop and the parallel window
+/// drain both build a `LaneCtx` and dispatch through it, so there is one
+/// copy of the state machine and the parallel path cannot drift.
+struct LaneCtx<'a> {
+    cfg: &'a SimConfig,
+    jobs: Slots<'a>,
+    orch: &'a mut GroupOrchestrator,
+    acct: &'a mut GroupAcct,
+    sink: Sink<'a>,
+    now: f64,
+    scratch: &'a mut Vec<f64>,
+    records: &'a mut Vec<PhaseRecord>,
+}
+
+impl LaneCtx<'_> {
+    /// Route one group-local event through the state machine. Returns
+    /// `Some(slot)` when the job's final sync completed — completion
+    /// touches the scheduler and the cost integrator (global state), so
+    /// the CALLER owns it: the serial loop runs `finish_job`; the
+    /// parallel drain stops before final syncs (they are window
+    /// barriers) and must never see one here.
+    fn dispatch(&mut self, ev: Ev) -> Option<usize> {
+        match ev {
+            Ev::PhaseDone(slot, kind, iter, ep) => {
+                if self.on_phase_done(slot, kind, iter, ep) {
+                    return Some(slot);
+                }
+            }
+            Ev::TailFree(slot, kept, ep) => self.on_tail_free(slot, kept, ep),
+            Ev::Recover(slot, ep) => self.on_recover(slot, ep),
+            Ev::Arrival(_) | Ev::Fault(_) | Ev::FaultRecover(..) => {
+                unreachable!("global events never dispatch through a lane view")
+            }
+        }
+        None
+    }
+
+    fn sample_iteration(&mut self, slot: usize) {
+        let model = &self.cfg.model;
+        let rt = self.jobs.job(slot);
+        let s = rt.spec.sample_iter_with(model, &mut rt.rng, self.scratch);
+        rt.cur_troll = s.t_roll;
+        rt.cur_ttrain = s.t_train * rt.train_scale;
+        rt.solo_s += s.t_roll + rt.cur_ttrain + rt.t_sync;
+        rt.iter_sampled = true;
+    }
+
+    fn switch_cost(&self, slot: usize, pool: crate::cluster::node::PoolKind) -> f64 {
+        let p = self.jobs.job_ref(slot).spec.params_b;
+        if self.cfg.warm_starts {
+            self.cfg.switch.warm_s(p, pool)
+        } else {
+            self.cfg.switch.cold_s(p, pool)
+        }
+    }
+
+    fn enqueue(&mut self, slot: usize, kind: PhaseKind) {
+        let core = match kind {
+            PhaseKind::Rollout => CorePhase::Rollout,
+            PhaseKind::Train => CorePhase::Train,
+            _ => unreachable!("only rollout/train queue"),
+        };
+        self.orch.enqueue(slot, core);
+        self.drain_dispatch();
+    }
+
+    /// Drain the group's orchestration core: start every phase the
+    /// dispatch policy grants (the core marks resources occupied as it
+    /// grants them).
+    fn drain_dispatch(&mut self) {
+        while let Some(start) = self.orch.next_dispatch() {
+            let kind = match start.kind {
+                CorePhase::Rollout => PhaseKind::Rollout,
+                CorePhase::Train => PhaseKind::Train,
+            };
+            self.start_phase(start.slot, kind);
+        }
+    }
+
+    fn start_phase(&mut self, slot: usize, kind: PhaseKind) {
+        let iter = self.jobs.job_ref(slot).iter;
+        let ep = self.jobs.job_ref(slot).epoch;
+        let now = self.now;
+        match kind {
+            PhaseKind::Rollout => {
+                let warm = self.switch_cost(slot, crate::cluster::node::PoolKind::Rollout);
+                let t_roll = self.jobs.job_ref(slot).cur_troll;
+                let n_pins = self.jobs.job_ref(slot).roll_nodes.len();
+                // (node occupancy was marked by the orchestrator when it
+                // granted this dispatch)
+                // Long-tail migration (paper §4.3): the plan is prepared
+                // here, but whether to consolidate is decided when the
+                // threshold is reached — only if another rollout is then
+                // actually waiting for these nodes (opportunistic).
+                let end = now + warm + t_roll;
+                let sample = {
+                    let rt = self.jobs.job(slot);
+                    let sample = crate::workload::job::IterSample {
+                        t_roll,
+                        t_train: rt.cur_ttrain,
+                        tail_start_frac: {
+                            // re-derive the tail from the job's stream so the
+                            // plan matches this iteration deterministically
+                            rt.rng.fork(iter as u64).uniform(0.55, 0.85)
+                        },
+                        tail_gpu_frac: rt.rng.fork(iter as u64 ^ 0xabc).uniform(0.1, 0.35),
+                    };
+                    rt.cur_roll_end = end;
+                    rt.phase = Some(PhaseKind::Rollout);
+                    rt.phase_start_s = now;
+                    rt.consolidated = false;
+                    rt.iter_busy_gpu_s += (warm + t_roll) * n_pins as f64 * GPUS_PER_NODE as f64;
+                    sample
+                };
+                if let Some(plan) = self.cfg.migration.plan(&sample, n_pins) {
+                    let t_check = now + warm + plan.trigger_at_s;
+                    {
+                        let rt = self.jobs.job(slot);
+                        rt.tail_frac = plan.tail_gpu_frac;
+                        rt.pending_tail = Some((t_check, plan.nodes_kept));
+                    }
+                    self.sink.push(t_check, Ev::TailFree(slot, plan.nodes_kept, ep));
+                }
+                // Busy accounting assumes no migration; adjusted in
+                // on_tail_free when a consolidation actually happens.
+                self.acct.roll_busy_gpu_s += (warm + t_roll) * n_pins as f64 * GPUS_PER_NODE as f64;
+                for i in 0..n_pins {
+                    let n = self.jobs.job_ref(slot).roll_nodes[i];
+                    self.acct.node_busy_add(n, (warm + t_roll) * GPUS_PER_NODE as f64);
+                }
+                self.record_rollout(slot, iter, now, end);
+                self.sink.push(end, Ev::PhaseDone(slot, PhaseKind::Rollout, iter, ep));
+            }
+            PhaseKind::Train => {
+                let warm = self.switch_cost(slot, crate::cluster::node::PoolKind::Train);
+                let t_train = self.jobs.job_ref(slot).cur_ttrain;
+                // (the training pool was marked busy by the orchestrator)
+                let end = now + warm + t_train;
+                let train_gpus = self.jobs.job_ref(slot).train_gpus;
+                self.acct.train_busy_add((warm + t_train) * train_gpus as f64);
+                {
+                    let rt = self.jobs.job(slot);
+                    rt.phase = Some(PhaseKind::Train);
+                    rt.phase_start_s = now;
+                    rt.cur_train_end = end;
+                    rt.iter_busy_gpu_s += (warm + t_train) * train_gpus as f64;
+                }
+                self.record(slot, PhaseKind::Train, iter, now, end, &[]);
+                self.sink.push(end, Ev::PhaseDone(slot, PhaseKind::Train, iter, ep));
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn on_tail_free(&mut self, slot: usize, kept: usize, epoch: u32) {
+        // The rollout hit its completion threshold. Consolidate the tail
+        // (paper Fig. 7-bottom) only if another rollout is actually
+        // waiting for one of this job's nodes; otherwise let it run out.
+        let now = self.now;
+        {
+            let rt = self.jobs.job_ref(slot);
+            if rt.done || rt.epoch != epoch {
+                return;
+            }
+        }
+        self.jobs.job(slot).pending_tail = None; // this armed check is consumed
+        if self.jobs.job_ref(slot).cur_roll_end <= now {
+            return; // phase already over (stale check)
+        }
+        if !self.orch.has_rollout_waiter_sharing(slot) {
+            return;
+        }
+        let penalty = self.cfg.migration.migrate_cost_s;
+        let (remaining, n_pins, tail_frac) = {
+            let rt = self.jobs.job(slot);
+            rt.tail_penalty = penalty;
+            rt.consolidated = true;
+            rt.migrations += 1;
+            (rt.cur_roll_end - now, rt.roll_nodes.len(), rt.tail_frac)
+        };
+        // Busy adjustment: freed nodes stop counting; the consolidated
+        // tail occupies `kept` nodes plus the plan's sub-node GPU
+        // fraction for the remaining time (+ pause). (The seed engine
+        // hard-coded 0.25 here instead of the `MigrationPlan`'s computed
+        // `tail_gpu_frac` — fixed in ISSUE 2, regression-tested by
+        // `tail_busy_accounting_uses_plan_fraction`.)
+        let freed = n_pins - kept;
+        self.acct.roll_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
+        self.acct.roll_busy_gpu_s +=
+            (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64;
+        // Mirror the reshaping into the iteration accrual so a later
+        // crash wastes exactly what the busy integrals carry (ISSUE 5).
+        {
+            let rt = self.jobs.job(slot);
+            rt.iter_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
+            rt.iter_busy_gpu_s +=
+                (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64;
+        }
+        // Mirror the aggregate adjustment into the streaming per-node
+        // accumulators: freed nodes stop counting, kept nodes carry the
+        // consolidated tail, and the sub-node fraction is attributed to
+        // the job's first pinned node.
+        for i in 0..n_pins {
+            let n = self.jobs.job_ref(slot).roll_nodes[i];
+            if i >= kept {
+                self.acct.node_busy_add(n, -remaining * GPUS_PER_NODE as f64);
+            } else {
+                self.acct.node_busy_add(n, (remaining + penalty) * GPUS_PER_NODE as f64);
+            }
+        }
+        let first = self.jobs.job_ref(slot).roll_nodes[0];
+        self.acct.node_busy_add(first, (remaining + penalty) * tail_frac * GPUS_PER_NODE as f64);
+        self.orch.release_trailing_nodes(slot, kept);
+        self.drain_dispatch();
+    }
+
+    /// A victim's recovery delay elapsed: replay the in-flight iteration
+    /// from its last checkpoint (same sampled durations — solo
+    /// accounting counts each sampled iteration once).
+    fn on_recover(&mut self, slot: usize, epoch: u32) {
+        {
+            let rt = self.jobs.job_ref(slot);
+            if rt.done || rt.epoch != epoch {
+                return;
+            }
+        }
+        if !self.jobs.job_ref(slot).iter_sampled {
+            // Crashed during the initial cold load: sample the first
+            // iteration now (the recovery delay covered the reload).
+            self.sample_iteration(slot);
+        }
+        self.enqueue(slot, PhaseKind::Rollout);
+    }
+
+    /// Returns true when the job's FINAL sync completed (the caller owns
+    /// the global completion bookkeeping).
+    fn on_phase_done(&mut self, slot: usize, kind: PhaseKind, iter: usize, epoch: u32) -> bool {
+        let now = self.now;
+        {
+            let rt = self.jobs.job_ref(slot);
+            if rt.done || rt.epoch != epoch {
+                return false;
+            }
+        }
+        match kind {
+            PhaseKind::Init => {
+                self.sample_iteration(slot);
+                self.enqueue(slot, PhaseKind::Rollout);
+            }
+            PhaseKind::Rollout => {
+                // If the tail was consolidated, its completion is delayed
+                // by the migration pause (applied exactly once).
+                {
+                    let rt = self.jobs.job(slot);
+                    if rt.tail_penalty > 0.0 {
+                        let p = std::mem::take(&mut rt.tail_penalty);
+                        rt.cur_roll_end = now + p;
+                        let ev = Ev::PhaseDone(slot, PhaseKind::Rollout, iter, epoch);
+                        self.sink.push(now + p, ev);
+                        return false;
+                    }
+                    rt.phase = None;
+                    rt.pending_tail = None;
+                }
+                // Release any nodes still held, then queue the train;
+                // `enqueue` leaves the group fully drained.
+                self.orch.release_rollout(slot);
+                self.enqueue(slot, PhaseKind::Train);
+            }
+            PhaseKind::Train => {
+                self.jobs.job(slot).phase = None;
+                self.orch.release_train(slot);
+                // Sync occupies the network, not the pools.
+                let t_sync = self.jobs.job_ref(slot).t_sync;
+                let end = now + t_sync;
+                self.record(slot, PhaseKind::Sync, iter, now, end, &[]);
+                self.sink.push(end, Ev::PhaseDone(slot, PhaseKind::Sync, iter, epoch));
+                self.drain_dispatch();
+            }
+            PhaseKind::Sync => {
+                let rt = self.jobs.job(slot);
+                rt.iter += 1;
+                // The sync published the update: the iteration is
+                // checkpointed, nothing accrued so far can be lost.
+                rt.iter_busy_gpu_s = 0.0;
+                rt.iter_wasted_gpu_s = 0.0;
+                if rt.iter >= rt.spec.n_iters {
+                    return true;
+                }
+                self.sample_iteration(slot);
+                self.enqueue(slot, PhaseKind::Rollout);
+            }
+        }
+        false
+    }
+
+    fn record(&mut self, slot: usize, kind: PhaseKind, iter: usize, start: f64, end: f64, roll_nodes: &[usize]) {
+        if self.cfg.record_gantt {
+            let rt = self.jobs.job_ref(slot);
+            self.records.push(PhaseRecord {
+                job: rt.spec.id,
+                group: rt.group,
+                kind,
+                iter,
+                start,
+                end,
+                roll_nodes: roll_nodes.to_vec(),
+            });
+        }
+    }
+
+    /// Rollout record: the node list is only cloned when gantt recording
+    /// is on (the per-phase allocation the seed engine paid regardless).
+    fn record_rollout(&mut self, slot: usize, iter: usize, start: f64, end: f64) {
+        if self.cfg.record_gantt {
+            let rt = self.jobs.job_ref(slot);
+            self.records.push(PhaseRecord {
+                job: rt.spec.id,
+                group: rt.group,
+                kind: PhaseKind::Rollout,
+                iter,
+                start,
+                end,
+                roll_nodes: rt.roll_nodes.clone(),
+            });
+        }
+    }
+}
+
+/// A group's moved-out state for one parallel window (ISSUE 7): the
+/// worker drains `queue` against `jobs`/`orch`/`acct` up to (never
+/// including) the window's barrier key.
+struct GroupLane {
+    gid: usize,
+    /// `(slab slot, runtime)` for every live member, admission order.
+    jobs: Vec<(usize, JobRt)>,
+    orch: GroupOrchestrator,
+    acct: GroupAcct,
+    queue: LaneQueue<Ev>,
+    /// Local seq counter for lane-generated events: starts at the global
+    /// counter snapshot, which is larger than every inherited seq and
+    /// the barrier's — so generated events order after both at equal
+    /// times, exactly as the serial loop's fresh seqs would.
+    seq: u64,
+    /// The window's wall: the global barrier key. Events at or past it
+    /// stay queued (leftovers). `None` = drain fully.
+    horizon: Option<(f64, u64)>,
+    /// Clock high-water of processed events (`NEG_INFINITY` if none).
+    now: f64,
+    records: Vec<PhaseRecord>,
+    /// Stopped before a would-complete final sync (a global barrier
+    /// discovered mid-drain): everything still queued is deferred and
+    /// the window's popped barrier must be re-queued behind it.
+    hit_completion: bool,
+}
+
+impl GroupLane {
+    fn job_ref(&self, slot: usize) -> &JobRt {
+        let i = self.jobs.iter().position(|(s, _)| *s == slot).expect("slot owned by this lane");
+        &self.jobs[i].1
+    }
+}
+
+/// Drain one lane up to its horizon — the parallel counterpart of the
+/// serial loop body, running the SAME `LaneCtx` handlers. Stops early
+/// (without popping) at a job's final sync: completions are global.
+fn drain_lane(cfg: &SimConfig, lane: &mut GroupLane, scratch: &mut Vec<f64>) {
+    loop {
+        let Some((t, seq, ev)) = lane.queue.peek() else { break };
+        if let Some((bt, bs)) = lane.horizon {
+            if t.total_cmp(&bt).then(seq.cmp(&bs)).is_ge() {
+                break;
+            }
+        }
+        let ev = *ev;
+        if let Ev::PhaseDone(slot, PhaseKind::Sync, iter, ep) = ev {
+            let rt = lane.job_ref(slot);
+            if !rt.done && rt.epoch == ep && iter + 1 >= rt.spec.n_iters {
+                lane.hit_completion = true;
+                break;
+            }
+        }
+        lane.queue.pop();
+        if let Ev::Recover(slot, ep) = ev {
+            // A superseded recovery is pure noise: it must not touch the
+            // clock or the event count (mirrors `process_event`'s
+            // pre-guard).
+            let rt = lane.job_ref(slot);
+            if rt.done || rt.epoch != ep {
+                continue;
+            }
+        }
+        debug_assert!(t >= lane.now - 1e-9, "lane time went backwards");
+        lane.now = t;
+        lane.acct.events += 1;
+        let mut ctx = LaneCtx {
+            cfg,
+            jobs: Slots::Owned(&mut lane.jobs),
+            orch: &mut lane.orch,
+            acct: &mut lane.acct,
+            sink: Sink::Lane { queue: &mut lane.queue, seq: &mut lane.seq },
+            now: t,
+            scratch,
+            records: &mut lane.records,
+        };
+        let finished = ctx.dispatch(ev);
+        debug_assert!(finished.is_none(), "final syncs stop the lane before dispatch");
+    }
+}
+
 pub struct Simulator<S: GroupScheduler> {
     pub cfg: SimConfig,
     pub sched: S,
@@ -583,6 +1135,21 @@ pub struct Simulator<S: GroupScheduler> {
     /// sparse or sentinel ids would make `ensure_group_rt` allocate
     /// `gid + 1` slots.
     group_rt: Vec<GroupOrchestrator>,
+    /// Per-group busy/event accumulators (ISSUE 7): every group-local
+    /// handler writes its own group's slice; `finalize` folds them into
+    /// the flat `SimResult` fields in ascending gid — the same fixed
+    /// order whether the run was serial or group-parallel.
+    accts: AcctArena,
+    /// Live slab slots per group id (admission order) — the move-out
+    /// list for parallel windows. Maintained at arrival / spill /
+    /// completion / cancellation, all of which are window barriers, so
+    /// membership is stable within a window.
+    members: Vec<Vec<usize>>,
+    /// Max event time processed outside `process_event` (lane drains and
+    /// inline stale events in `run_parallel`); `NEG_INFINITY` on serial
+    /// runs. `finalize` lifts `now` to it so the makespan and the cost
+    /// tail match the serial clock bitwise.
+    high_water: f64,
     res: SimResult,
     /// Open-world mode (ISSUE 6): the simulator is a live "virtual
     /// cluster" fed by [`Self::submit`]/[`Self::step_until`] instead of
@@ -619,6 +1186,9 @@ impl<S: GroupScheduler> Simulator<S> {
             faults_rt: None,
             node_down_until: HashMap::new(),
             group_rt: Vec::new(),
+            accts: AcctArena::new(),
+            members: Vec::new(),
+            high_water: f64::NEG_INFINITY,
             res: SimResult::default(),
             open_world: false,
             last_rate_change: 0.0,
@@ -666,6 +1236,9 @@ impl<S: GroupScheduler> Simulator<S> {
         self.now = 0.0;
         self.jobs.clear();
         self.group_rt.clear();
+        self.accts.clear();
+        self.members.clear();
+        self.high_water = f64::NEG_INFINITY;
         self.res = SimResult::default();
         self.open_world = false;
         self.last_rate_change = 0.0;
@@ -680,28 +1253,32 @@ impl<S: GroupScheduler> Simulator<S> {
         self.events.push(t, self.seq, ev);
     }
 
-    /// Streaming per-(group, node) rollout busy accumulation (GPU-s).
-    /// (Mirrored in `sim::fluid` — keep the accounting helpers in sync;
-    /// the cross-tier property tests compare these integrals.)
+    /// Streaming per-(group, node) rollout busy accumulation (GPU-s),
+    /// routed to the group's arena slice (ISSUE 7). (Mirrored in
+    /// `sim::fluid` — keep the accounting helpers in sync; the
+    /// cross-tier property tests compare these integrals.)
     fn node_busy_add(&mut self, gid: usize, node: usize, gpu_s: f64) {
-        let v = &mut self.res.roll_node_busy_gpu_s;
-        if v.len() <= gid {
-            v.resize_with(gid + 1, Vec::new);
-        }
-        let nv = &mut v[gid];
-        if nv.len() <= node {
-            nv.resize(node + 1, 0.0);
-        }
-        nv[node] += gpu_s;
+        self.accts.get_mut(gid).node_busy_add(node, gpu_s);
     }
 
     /// Streaming per-group training-pool busy accumulation (GPU-s).
     fn train_busy_add(&mut self, gid: usize, gpu_s: f64) {
-        let v = &mut self.res.train_group_busy_gpu_s;
-        if v.len() <= gid {
-            v.resize(gid + 1, 0.0);
+        self.accts.get_mut(gid).train_busy_add(gpu_s);
+    }
+
+    fn members_add(&mut self, gid: usize, slot: usize) {
+        if self.members.len() <= gid {
+            self.members.resize_with(gid + 1, Vec::new);
         }
-        v[gid] += gpu_s;
+        self.members[gid].push(slot);
+    }
+
+    fn members_remove(&mut self, gid: usize, slot: usize) {
+        if let Some(m) = self.members.get_mut(gid) {
+            if let Some(i) = m.iter().position(|&s| s == slot) {
+                m.remove(i);
+            }
+        }
     }
 
     fn integrate_cost(&mut self) {
@@ -744,6 +1321,218 @@ impl<S: GroupScheduler> Simulator<S> {
         self.finalize()
     }
 
+    /// Whether an event must run on the coordinator between windows
+    /// (ISSUE 7): arrivals and faults/repairs touch the scheduler and
+    /// can cross group boundaries; a job's FINAL sync completes it
+    /// (scheduler retraction + cost re-integration + re-dispatch). A
+    /// stale final sync (epoch-bumped) still reads as a barrier — the
+    /// coordinator processes it exactly as the serial loop would, it
+    /// just closes the window early.
+    fn is_window_barrier(&self, ev: &Ev) -> bool {
+        match *ev {
+            Ev::Arrival(_) | Ev::Fault(_) | Ev::FaultRecover(..) => true,
+            Ev::PhaseDone(slot, PhaseKind::Sync, iter, _) => {
+                let rt = &self.jobs[slot];
+                !rt.done && iter + 1 >= rt.spec.n_iters
+            }
+            _ => false,
+        }
+    }
+
+    /// Move a group's state out into a lane for one parallel window.
+    /// The lane's seq counter starts at the global snapshot: larger than
+    /// every inherited seq and the barrier's, so lane-generated events
+    /// sort after both at equal times — exactly where the serial loop's
+    /// fresh seqs would put them.
+    fn take_lane(&mut self, gid: usize, horizon: Option<(f64, u64)>) -> GroupLane {
+        self.ensure_group_rt(gid);
+        let member_slots: Vec<usize> = self.members.get(gid).cloned().unwrap_or_default();
+        let mut jobs = Vec::with_capacity(member_slots.len());
+        for s in member_slots {
+            jobs.push((s, std::mem::replace(&mut self.jobs[s], JobRt::tombstone())));
+        }
+        let intra = self.cfg.intra;
+        GroupLane {
+            gid,
+            jobs,
+            orch: std::mem::replace(&mut self.group_rt[gid], GroupOrchestrator::new(intra)),
+            acct: self.accts.take(gid),
+            queue: LaneQueue::new(),
+            seq: self.seq,
+            horizon,
+            now: f64::NEG_INFINITY,
+            records: Vec::new(),
+            hit_completion: false,
+        }
+    }
+
+    /// Merge a drained lane back into the slabs. Called in ascending-gid
+    /// order: jobs, orchestrator, accumulators, gantt records, clock
+    /// high-water, then leftover events — re-pushed with fresh global
+    /// seqs in lane pop order, the order the serial loop would have
+    /// popped them (and, because re-push precedes the barrier's
+    /// processing, ordered before any event the barrier generates at an
+    /// equal time, again as in the serial loop).
+    fn merge_lane(&mut self, lane: &mut GroupLane) {
+        if lane.now > self.high_water {
+            self.high_water = lane.now;
+        }
+        for (slot, rt) in lane.jobs.drain(..) {
+            self.jobs[slot] = rt;
+        }
+        let intra = self.cfg.intra;
+        self.group_rt[lane.gid] = std::mem::replace(&mut lane.orch, GroupOrchestrator::new(intra));
+        self.accts.put(lane.gid, std::mem::take(&mut lane.acct));
+        self.res.records.append(&mut lane.records);
+        while let Some((t, _, ev)) = lane.queue.pop() {
+            self.push(t, ev);
+        }
+    }
+
+    /// Group-parallel run (ISSUE 7, DESIGN.md §15): bit-identical
+    /// results to [`Self::run_to_end`], computed in windows. Between
+    /// consecutive GLOBAL events — arrivals, faults, repairs, final
+    /// syncs: the only events that touch the scheduler or cross group
+    /// boundaries — every queued event is group-local, so each
+    /// co-execution group's events drain independently: the window's
+    /// events are stashed per group, the groups' lanes drain on a
+    /// persistent worker pool (or inline for small windows — the SAME
+    /// [`drain_lane`] either way), and the lanes merge back in ascending
+    /// gid before the barrier itself runs on the coordinator.
+    ///
+    /// Determinism: lane seq counters start at the global counter
+    /// snapshot (ordering lane-generated events after inherited ones at
+    /// equal times, as serial fresh seqs would); leftovers re-enter the
+    /// global queue in lane pop order with fresh seqs; and all f64
+    /// accumulators are per-group chronological sums folded in gid order
+    /// at [`Self::finalize`] — the same association the serial loop now
+    /// uses. A final sync discovered mid-drain stops its lane
+    /// (`hit_completion`, strictly before the window's barrier — see the
+    /// seq argument above) and defers the barrier behind it: completions
+    /// are global and must run on the coordinator in time order.
+    ///
+    /// `workers <= 1` falls through to the serial loop. With
+    /// `cfg.record_gantt` on, the per-lane record batches concatenate in
+    /// gid order rather than global time order within a window (the only
+    /// observable difference; sweeps leave gantt recording off).
+    pub fn run_parallel(&mut self, workers: usize) -> SimResult {
+        if workers <= 1 {
+            return self.run_to_end();
+        }
+        self.open_world = false;
+        let cfg = self.cfg.clone();
+        std::thread::scope(|scope| {
+            let (res_tx, res_rx) = std::sync::mpsc::channel::<GroupLane>();
+            let mut lane_txs = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let (tx, rx) = std::sync::mpsc::channel::<GroupLane>();
+                let out = res_tx.clone();
+                let wcfg = cfg.clone();
+                scope.spawn(move || {
+                    let mut scratch: Vec<f64> = Vec::new();
+                    for mut lane in rx {
+                        drain_lane(&wcfg, &mut lane, &mut scratch);
+                        if out.send(lane).is_err() {
+                            break;
+                        }
+                    }
+                });
+                lane_txs.push(tx);
+            }
+            drop(res_tx);
+            loop {
+                // Stash group-local events up to (excluding) the next
+                // global barrier.
+                let mut barrier: Option<(f64, u64, Ev)> = None;
+                let mut order: Vec<(usize, f64, u64, Ev)> = Vec::new();
+                while let Some((t, seq, ev)) = self.events.pop_with_seq() {
+                    if self.is_window_barrier(&ev) {
+                        barrier = Some((t, seq, ev));
+                        break;
+                    }
+                    let slot = match ev {
+                        Ev::PhaseDone(slot, ..) | Ev::TailFree(slot, ..) | Ev::Recover(slot, _) => slot,
+                        Ev::Arrival(_) | Ev::Fault(_) | Ev::FaultRecover(..) => {
+                            unreachable!("global events are window barriers")
+                        }
+                    };
+                    if self.jobs[slot].done {
+                        // Stale events of settled jobs, inline — exactly
+                        // the serial loop's effect: they only advance the
+                        // clock and the event count (a superseded Recover
+                        // touches neither, per the pre-guard).
+                        if !matches!(ev, Ev::Recover(..)) {
+                            self.high_water = self.high_water.max(t);
+                            self.res.events_processed += 1;
+                        }
+                        continue;
+                    }
+                    order.push((self.jobs[slot].group, t, seq, ev));
+                }
+                // One lane per group touched this window, in
+                // first-encounter (time) order; stashed events keep
+                // their original (t, seq) keys.
+                let hkey = barrier.as_ref().map(|&(t, s, _)| (t, s));
+                let mut pending: Vec<GroupLane> = Vec::new();
+                {
+                    let mut lane_of: HashMap<usize, usize> = HashMap::new();
+                    for (gid, t, seq, ev) in order {
+                        let idx = match lane_of.get(&gid) {
+                            Some(&i) => i,
+                            None => {
+                                pending.push(self.take_lane(gid, hkey));
+                                lane_of.insert(gid, pending.len() - 1);
+                                pending.len() - 1
+                            }
+                        };
+                        pending[idx].queue.push(t, seq, ev);
+                    }
+                }
+                let stashed: usize = pending.iter().map(|l| l.queue.len()).sum();
+                if pending.len() > 1 && stashed >= PAR_WINDOW_MIN_EVENTS {
+                    let n = pending.len();
+                    for (i, lane) in pending.drain(..).enumerate() {
+                        lane_txs[i % workers].send(lane).expect("worker alive");
+                    }
+                    for _ in 0..n {
+                        pending.push(res_rx.recv().expect("worker returns lane"));
+                    }
+                } else {
+                    for lane in &mut pending {
+                        drain_lane(&cfg, lane, &mut self.scratch_lengths);
+                    }
+                }
+                // Merge in ascending gid (collection order off the
+                // results channel is racy; gids are unique per window).
+                pending.sort_by_key(|l| l.gid);
+                let deferred = pending.iter().any(|l| l.hit_completion);
+                for mut lane in pending {
+                    self.merge_lane(&mut lane);
+                }
+                match barrier {
+                    Some((t, seq, ev)) => {
+                        if deferred {
+                            // A lane stopped at a final sync strictly
+                            // before the barrier: re-queue the barrier
+                            // under its ORIGINAL key; the next window
+                            // pops the completion first.
+                            self.events.push(t, seq, ev);
+                        } else {
+                            self.process_event(t, ev);
+                        }
+                    }
+                    None => {
+                        if self.events.is_empty() {
+                            break;
+                        }
+                    }
+                }
+            }
+            drop(lane_txs);
+        });
+        self.finalize()
+    }
+
     /// Jobs that reached a terminal state (completed or cancelled).
     fn settled(&self) -> usize {
         self.res.outcomes.len() + self.res.cancelled
@@ -780,17 +1569,32 @@ impl<S: GroupScheduler> Simulator<S> {
         self.res.events_processed += 1;
         match ev {
             Ev::Arrival(i) => self.on_arrival(i),
-            Ev::PhaseDone(slot, kind, iter, ep) => self.on_phase_done(slot, kind, iter, ep),
-            Ev::TailFree(slot, kept, ep) => self.on_tail_free(slot, kept, ep),
+            Ev::PhaseDone(slot, ..) => {
+                let gid = self.jobs[slot].group;
+                if let Some(slot) = self.dispatch_local(gid, ev) {
+                    self.finish_job(slot);
+                }
+            }
+            Ev::TailFree(slot, ..) | Ev::Recover(slot, _) => {
+                let gid = self.jobs[slot].group;
+                self.dispatch_local(gid, ev);
+            }
             Ev::Fault(idx) => self.on_fault(idx),
             Ev::FaultRecover(gid, node) => self.on_fault_recover(gid, node),
-            Ev::Recover(slot, ep) => self.on_recover(slot, ep),
         }
     }
 
-    /// Close the books: integrate the cost tail, stamp the makespan, and
-    /// take the result out of the slab.
+    /// Close the books: integrate the cost tail, stamp the makespan,
+    /// fold the per-group arena accumulators (ascending gid — the fixed
+    /// deterministic order shared by the serial and parallel loops,
+    /// DESIGN.md §15), and take the result out of the slab.
     fn finalize(&mut self) -> SimResult {
+        // The group-parallel drain advances lanes past the last global
+        // barrier; the serial loop never sets the high-water above now.
+        if self.high_water > self.now {
+            self.now = self.high_water;
+        }
+        self.high_water = f64::NEG_INFINITY;
         self.integrate_cost();
         self.res.makespan_s = self.now;
         self.res.avg_cost_per_hour = if self.now > 0.0 {
@@ -798,6 +1602,33 @@ impl<S: GroupScheduler> Simulator<S> {
         } else {
             0.0
         };
+        let n = self.accts.len();
+        for gid in 0..n {
+            let a = self.accts.get_mut(gid);
+            self.res.roll_busy_gpu_s += a.roll_busy_gpu_s;
+            self.res.train_busy_gpu_s += a.train_busy_gpu_s;
+            self.res.events_processed += a.events;
+        }
+        // Dimensional reconstruction preserves the old resize-on-write
+        // semantics: the flat vectors extend exactly to the last group
+        // that ever wrote them (zero-valued writes included).
+        if let Some(last) =
+            (0..n).rev().find(|&g| self.accts.get(g).map_or(false, |a| !a.node_busy_gpu_s.is_empty()))
+        {
+            self.res.roll_node_busy_gpu_s.resize_with(last + 1, Vec::new);
+            for gid in 0..=last {
+                self.res.roll_node_busy_gpu_s[gid] =
+                    std::mem::take(&mut self.accts.get_mut(gid).node_busy_gpu_s);
+            }
+        }
+        if let Some(last) = (0..n).rev().find(|&g| self.accts.get(g).map_or(false, |a| a.train_touched)) {
+            self.res.train_group_busy_gpu_s.resize(last + 1, 0.0);
+            for gid in 0..=last {
+                self.res.train_group_busy_gpu_s[gid] =
+                    self.accts.get(gid).map_or(0.0, |a| a.train_busy_gpu_s);
+            }
+        }
+        self.accts.clear();
         std::mem::take(&mut self.res)
     }
 
@@ -875,6 +1706,7 @@ impl<S: GroupScheduler> Simulator<S> {
             let nodes = rt.roll_nodes.clone();
             self.group_rt[d.group_id].admit(slot, id, nodes, slack);
         }
+        self.members_add(d.group_id, slot);
 
         // One-time Init (cold start of the job's state into the caches).
         let t_done = self.now + cold;
@@ -882,180 +1714,37 @@ impl<S: GroupScheduler> Simulator<S> {
         self.push(t_done, Ev::PhaseDone(slot, PhaseKind::Init, 0, 0));
     }
 
-    fn sample_iteration(&mut self, slot: usize) {
-        let rt = &mut self.jobs[slot];
-        let s = rt.spec.sample_iter_with(&self.cfg.model, &mut rt.rng, &mut self.scratch_lengths);
-        rt.cur_troll = s.t_roll;
-        rt.cur_ttrain = s.t_train * rt.train_scale;
-        rt.solo_s += s.t_roll + rt.cur_ttrain + rt.t_sync;
-        rt.iter_sampled = true;
-    }
-
-    fn switch_cost(&self, slot: usize, pool: crate::cluster::node::PoolKind) -> f64 {
-        let p = self.jobs[slot].spec.params_b;
-        if self.cfg.warm_starts {
-            self.cfg.switch.warm_s(p, pool)
-        } else {
-            self.cfg.switch.cold_s(p, pool)
+    /// Build the group-local execution view over the simulator's own
+    /// slabs — the serial loop's [`LaneCtx`]. The borrows are
+    /// field-disjoint: `jobs` / `group_rt[gid]` / `accts` /
+    /// `events`+`seq` / `scratch_lengths` / `res.records` never alias.
+    fn lane_ctx(&mut self, gid: usize) -> LaneCtx<'_> {
+        self.ensure_group_rt(gid);
+        LaneCtx {
+            cfg: &self.cfg,
+            jobs: Slots::Slab(&mut self.jobs),
+            orch: &mut self.group_rt[gid],
+            acct: self.accts.get_mut(gid),
+            sink: Sink::Global { events: &mut self.events, seq: &mut self.seq },
+            now: self.now,
+            scratch: &mut self.scratch_lengths,
+            records: &mut self.res.records,
         }
     }
 
-    fn enqueue(&mut self, slot: usize, kind: PhaseKind) {
-        let gid = self.jobs[slot].group;
-        let core = match kind {
-            PhaseKind::Rollout => CorePhase::Rollout,
-            PhaseKind::Train => CorePhase::Train,
-            _ => unreachable!("only rollout/train queue"),
-        };
-        self.group_rt[gid].enqueue(slot, core);
-        self.drain_dispatch(gid);
+    /// Route one group-local event through the shared [`LaneCtx`] state
+    /// machine. `Some(slot)` means the job's final sync completed and
+    /// the caller owns the global completion ([`Self::finish_job`]).
+    fn dispatch_local(&mut self, gid: usize, ev: Ev) -> Option<usize> {
+        self.lane_ctx(gid).dispatch(ev)
     }
 
-    /// Drain the group's orchestration core: start every phase the
-    /// dispatch policy grants (the core marks resources occupied as it
-    /// grants them).
+    /// Drain the group's orchestration core
+    /// ([`LaneCtx::drain_dispatch`]) — the coordinator-side wrapper used
+    /// after global mutations: crashes, repairs, completions,
+    /// cancellations.
     fn drain_dispatch(&mut self, gid: usize) {
-        while let Some(start) = self.group_rt[gid].next_dispatch() {
-            let kind = match start.kind {
-                CorePhase::Rollout => PhaseKind::Rollout,
-                CorePhase::Train => PhaseKind::Train,
-            };
-            self.start_phase(start.slot, kind);
-        }
-    }
-
-    fn start_phase(&mut self, slot: usize, kind: PhaseKind) {
-        let iter = self.jobs[slot].iter;
-        let ep = self.jobs[slot].epoch;
-        match kind {
-            PhaseKind::Rollout => {
-                let warm = self.switch_cost(slot, crate::cluster::node::PoolKind::Rollout);
-                let t_roll = self.jobs[slot].cur_troll;
-                let n_pins = self.jobs[slot].roll_nodes.len();
-                // (node occupancy was marked by the orchestrator when it
-                // granted this dispatch)
-                // Long-tail migration (paper §4.3): the plan is prepared
-                // here, but whether to consolidate is decided when the
-                // threshold is reached — only if another rollout is then
-                // actually waiting for these nodes (opportunistic).
-                let end = self.now + warm + t_roll;
-                let sample = {
-                    let rt = &mut self.jobs[slot];
-                    let sample = crate::workload::job::IterSample {
-                        t_roll,
-                        t_train: rt.cur_ttrain,
-                        tail_start_frac: {
-                            // re-derive the tail from the job's stream so the
-                            // plan matches this iteration deterministically
-                            rt.rng.fork(iter as u64).uniform(0.55, 0.85)
-                        },
-                        tail_gpu_frac: rt.rng.fork(iter as u64 ^ 0xabc).uniform(0.1, 0.35),
-                    };
-                    rt.cur_roll_end = end;
-                    rt.phase = Some(PhaseKind::Rollout);
-                    rt.phase_start_s = self.now;
-                    rt.consolidated = false;
-                    rt.iter_busy_gpu_s += (warm + t_roll) * n_pins as f64 * GPUS_PER_NODE as f64;
-                    sample
-                };
-                if let Some(plan) = self.cfg.migration.plan(&sample, n_pins) {
-                    let t_check = self.now + warm + plan.trigger_at_s;
-                    self.jobs[slot].tail_frac = plan.tail_gpu_frac;
-                    self.jobs[slot].pending_tail = Some((t_check, plan.nodes_kept));
-                    self.push(t_check, Ev::TailFree(slot, plan.nodes_kept, ep));
-                }
-                // Busy accounting assumes no migration; adjusted in
-                // on_tail_free when a consolidation actually happens.
-                self.res.roll_busy_gpu_s +=
-                    (warm + t_roll) * n_pins as f64 * GPUS_PER_NODE as f64;
-                let gid = self.jobs[slot].group;
-                for i in 0..n_pins {
-                    let n = self.jobs[slot].roll_nodes[i];
-                    self.node_busy_add(gid, n, (warm + t_roll) * GPUS_PER_NODE as f64);
-                }
-                self.record_rollout(slot, iter, self.now, end);
-                self.push(end, Ev::PhaseDone(slot, PhaseKind::Rollout, iter, ep));
-            }
-            PhaseKind::Train => {
-                let warm = self.switch_cost(slot, crate::cluster::node::PoolKind::Train);
-                let t_train = self.jobs[slot].cur_ttrain;
-                // (the training pool was marked busy by the orchestrator)
-                let end = self.now + warm + t_train;
-                let train_gpus = self.jobs[slot].train_gpus;
-                self.res.train_busy_gpu_s += (warm + t_train) * train_gpus as f64;
-                let gid = self.jobs[slot].group;
-                self.train_busy_add(gid, (warm + t_train) * train_gpus as f64);
-                {
-                    let rt = &mut self.jobs[slot];
-                    rt.phase = Some(PhaseKind::Train);
-                    rt.phase_start_s = self.now;
-                    rt.cur_train_end = end;
-                    rt.iter_busy_gpu_s += (warm + t_train) * train_gpus as f64;
-                }
-                self.record(slot, PhaseKind::Train, iter, self.now, end, &[]);
-                self.push(end, Ev::PhaseDone(slot, PhaseKind::Train, iter, ep));
-            }
-            _ => unreachable!(),
-        }
-    }
-
-    fn on_tail_free(&mut self, slot: usize, kept: usize, epoch: u32) {
-        // The rollout hit its completion threshold. Consolidate the tail
-        // (paper Fig. 7-bottom) only if another rollout is actually
-        // waiting for one of this job's nodes; otherwise let it run out.
-        if self.jobs[slot].done || self.jobs[slot].epoch != epoch {
-            return;
-        }
-        self.jobs[slot].pending_tail = None; // this armed check is consumed
-        if self.jobs[slot].cur_roll_end <= self.now {
-            return; // phase already over (stale check)
-        }
-        let gid = self.jobs[slot].group;
-        if !self.group_rt[gid].has_rollout_waiter_sharing(slot) {
-            return;
-        }
-        let penalty = self.cfg.migration.migrate_cost_s;
-        let (remaining, n_pins, tail_frac) = {
-            let rt = &mut self.jobs[slot];
-            rt.tail_penalty = penalty;
-            rt.consolidated = true;
-            rt.migrations += 1;
-            (rt.cur_roll_end - self.now, rt.roll_nodes.len(), rt.tail_frac)
-        };
-        // Busy adjustment: freed nodes stop counting; the consolidated
-        // tail occupies `kept` nodes plus the plan's sub-node GPU
-        // fraction for the remaining time (+ pause). (The seed engine
-        // hard-coded 0.25 here instead of the `MigrationPlan`'s computed
-        // `tail_gpu_frac` — fixed in ISSUE 2, regression-tested by
-        // `tail_busy_accounting_uses_plan_fraction`.)
-        let freed = n_pins - kept;
-        self.res.roll_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
-        self.res.roll_busy_gpu_s +=
-            (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64;
-        // Mirror the reshaping into the iteration accrual so a later
-        // crash wastes exactly what the busy integrals carry (ISSUE 5).
-        {
-            let rt = &mut self.jobs[slot];
-            rt.iter_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
-            rt.iter_busy_gpu_s +=
-                (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64;
-        }
-        // Mirror the aggregate adjustment into the streaming per-node
-        // accumulators: freed nodes stop counting, kept nodes carry the
-        // consolidated tail, and the sub-node fraction is attributed to
-        // the job's first pinned node.
-        for i in 0..n_pins {
-            let n = self.jobs[slot].roll_nodes[i];
-            if i >= kept {
-                self.node_busy_add(gid, n, -remaining * GPUS_PER_NODE as f64);
-            } else {
-                self.node_busy_add(gid, n, (remaining + penalty) * GPUS_PER_NODE as f64);
-            }
-        }
-        let first = self.jobs[slot].roll_nodes[0];
-        self.node_busy_add(gid, first, (remaining + penalty) * tail_frac * GPUS_PER_NODE as f64);
-        self.group_rt[gid].release_trailing_nodes(slot, kept);
-        self.drain_dispatch(gid);
+        self.lane_ctx(gid).drain_dispatch();
     }
 
     /// Apply the pending fault event, then keep the stream armed while
@@ -1151,6 +1840,8 @@ impl<S: GroupScheduler> Simulator<S> {
     /// placement; the SLO reference (solo estimate) is fixed at original
     /// admission.
     fn respill(&mut self, slot: usize, d: &Decision) {
+        let old_gid = self.jobs[slot].group;
+        self.members_remove(old_gid, slot);
         let train_gpus = self.sched.group(d.group_id).expect("spill target exists").train_gpus();
         self.ensure_group_rt(d.group_id);
         let (jid, nodes, slack) = {
@@ -1172,6 +1863,7 @@ impl<S: GroupScheduler> Simulator<S> {
             (rt.spec.id, rt.roll_nodes.clone(), rt.spec.slo * rt.solo_est_iter_s)
         };
         self.group_rt[d.group_id].admit(slot, jid, nodes, slack);
+        self.members_add(d.group_id, slot);
     }
 
     /// Interrupt a crash victim: truncate the in-flight phase's busy
@@ -1193,7 +1885,7 @@ impl<S: GroupScheduler> Simulator<S> {
                 // the sub-node residual (≤ tail + pause) is left as-is.
                 if !self.jobs[slot].consolidated {
                     let cut = remaining * n_pins as f64 * GPUS_PER_NODE as f64;
-                    self.res.roll_busy_gpu_s -= cut;
+                    self.accts.get_mut(gid).roll_busy_gpu_s -= cut;
                     self.jobs[slot].iter_busy_gpu_s -= cut;
                     for i in 0..n_pins {
                         let n = self.jobs[slot].roll_nodes[i];
@@ -1204,7 +1896,6 @@ impl<S: GroupScheduler> Simulator<S> {
             Some(PhaseKind::Train) if self.jobs[slot].cur_train_end > now => {
                 let remaining = self.jobs[slot].cur_train_end - now;
                 let tg = self.jobs[slot].train_gpus as f64;
-                self.res.train_busy_gpu_s -= remaining * tg;
                 self.jobs[slot].iter_busy_gpu_s -= remaining * tg;
                 self.train_busy_add(gid, -remaining * tg);
             }
@@ -1284,7 +1975,7 @@ impl<S: GroupScheduler> Simulator<S> {
                 (extra, rt.roll_nodes.len(), rt.iter)
             };
             let gpu_extra = extra * n_pins as f64 * GPUS_PER_NODE as f64;
-            self.res.roll_busy_gpu_s += gpu_extra;
+            self.accts.get_mut(gid).roll_busy_gpu_s += gpu_extra;
             for i in 0..n_pins {
                 let n = self.jobs[slot].roll_nodes[i];
                 self.node_busy_add(gid, n, extra * GPUS_PER_NODE as f64);
@@ -1337,78 +2028,6 @@ impl<S: GroupScheduler> Simulator<S> {
         self.drain_dispatch(gid);
     }
 
-    /// A victim's recovery delay elapsed: replay the in-flight iteration
-    /// from its last checkpoint (same sampled durations — solo
-    /// accounting counts each sampled iteration once).
-    fn on_recover(&mut self, slot: usize, epoch: u32) {
-        if self.jobs[slot].done || self.jobs[slot].epoch != epoch {
-            return;
-        }
-        if !self.jobs[slot].iter_sampled {
-            // Crashed during the initial cold load: sample the first
-            // iteration now (the recovery delay covered the reload).
-            self.sample_iteration(slot);
-        }
-        self.enqueue(slot, PhaseKind::Rollout);
-    }
-
-    fn on_phase_done(&mut self, slot: usize, kind: PhaseKind, iter: usize, epoch: u32) {
-        if self.jobs[slot].done || self.jobs[slot].epoch != epoch {
-            return;
-        }
-        let gid = self.jobs[slot].group;
-        match kind {
-            PhaseKind::Init => {
-                self.sample_iteration(slot);
-                self.enqueue(slot, PhaseKind::Rollout);
-            }
-            PhaseKind::Rollout => {
-                // If the tail was consolidated, its completion is delayed
-                // by the migration pause (applied exactly once).
-                {
-                    let rt = &mut self.jobs[slot];
-                    if rt.tail_penalty > 0.0 {
-                        let p = std::mem::take(&mut rt.tail_penalty);
-                        rt.cur_roll_end = self.now + p;
-                        let ev = Ev::PhaseDone(slot, PhaseKind::Rollout, iter, epoch);
-                        self.push(self.now + p, ev);
-                        return;
-                    }
-                    rt.phase = None;
-                    rt.pending_tail = None;
-                }
-                // Release any nodes still held, then queue the train;
-                // `enqueue` leaves the group fully drained.
-                self.group_rt[gid].release_rollout(slot);
-                self.enqueue(slot, PhaseKind::Train);
-            }
-            PhaseKind::Train => {
-                self.jobs[slot].phase = None;
-                self.group_rt[gid].release_train(slot);
-                // Sync occupies the network, not the pools.
-                let t_sync = self.jobs[slot].t_sync;
-                let end = self.now + t_sync;
-                self.record(slot, PhaseKind::Sync, iter, self.now, end, &[]);
-                self.push(end, Ev::PhaseDone(slot, PhaseKind::Sync, iter, epoch));
-                self.drain_dispatch(gid);
-            }
-            PhaseKind::Sync => {
-                let rt = &mut self.jobs[slot];
-                rt.iter += 1;
-                // The sync published the update: the iteration is
-                // checkpointed, nothing accrued so far can be lost.
-                rt.iter_busy_gpu_s = 0.0;
-                rt.iter_wasted_gpu_s = 0.0;
-                if rt.iter >= rt.spec.n_iters {
-                    self.finish_job(slot);
-                } else {
-                    self.sample_iteration(slot);
-                    self.enqueue(slot, PhaseKind::Rollout);
-                }
-            }
-        }
-    }
-
     fn finish_job(&mut self, slot: usize) {
         let (id, gid, outcome) = {
             let rt = &mut self.jobs[slot];
@@ -1432,6 +2051,7 @@ impl<S: GroupScheduler> Simulator<S> {
         };
         self.res.outcomes.insert(id, outcome);
         self.group_rt[gid].complete(slot);
+        self.members_remove(gid, slot);
         self.sched.complete(id);
         self.rate_changed();
         // Re-dispatch in case the group shrank / freed capacity.
@@ -1449,23 +2069,6 @@ impl<S: GroupScheduler> Simulator<S> {
                 start,
                 end,
                 roll_nodes: roll_nodes.to_vec(),
-            });
-        }
-    }
-
-    /// Rollout record: the node list is only cloned when gantt recording
-    /// is on (the per-phase allocation the seed engine paid regardless).
-    fn record_rollout(&mut self, slot: usize, iter: usize, start: f64, end: f64) {
-        if self.cfg.record_gantt {
-            let rt = &self.jobs[slot];
-            self.res.records.push(PhaseRecord {
-                job: rt.spec.id,
-                group: rt.group,
-                kind: PhaseKind::Rollout,
-                iter,
-                start,
-                end,
-                roll_nodes: rt.roll_nodes.clone(),
             });
         }
     }
@@ -1577,6 +2180,7 @@ impl<S: GroupScheduler> Simulator<S> {
         let gid = self.jobs[slot].group;
         self.jobs[slot].done = true;
         self.group_rt[gid].complete(slot);
+        self.members_remove(gid, slot);
         self.sched.complete(id);
         self.res.cancelled += 1;
         self.rate_changed();
@@ -2309,5 +2913,101 @@ mod tests {
         let b = run_rollmux(c, mk());
         assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
         assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits());
+    }
+
+    fn assert_results_bitwise(a: &SimResult, b: &SimResult, tag: &str) {
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{tag}: makespan");
+        assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits(), "{tag}: cost");
+        assert_eq!(a.roll_busy_gpu_s.to_bits(), b.roll_busy_gpu_s.to_bits(), "{tag}: roll busy");
+        assert_eq!(a.train_busy_gpu_s.to_bits(), b.train_busy_gpu_s.to_bits(), "{tag}: train busy");
+        assert_eq!(a.roll_prov_gpu_s.to_bits(), b.roll_prov_gpu_s.to_bits(), "{tag}: roll prov");
+        assert_eq!(a.train_prov_gpu_s.to_bits(), b.train_prov_gpu_s.to_bits(), "{tag}: train prov");
+        assert_eq!(a.wasted_gpu_s.to_bits(), b.wasted_gpu_s.to_bits(), "{tag}: wasted");
+        assert_eq!(a.recovery_time_s.to_bits(), b.recovery_time_s.to_bits(), "{tag}: recovery");
+        assert_eq!(a.events_processed, b.events_processed, "{tag}: event count");
+        assert_eq!(a.crashes, b.crashes, "{tag}: crashes");
+        assert_eq!(a.stragglers, b.stragglers, "{tag}: stragglers");
+        assert_eq!(a.evictions, b.evictions, "{tag}: evictions");
+        assert_eq!(a.spills, b.spills, "{tag}: spills");
+        assert_eq!(a.cancelled, b.cancelled, "{tag}: cancelled");
+        assert_eq!(
+            (a.peak_roll_gpus, a.peak_train_gpus),
+            (b.peak_roll_gpus, b.peak_train_gpus),
+            "{tag}: peaks"
+        );
+        assert_eq!(a.roll_node_busy_gpu_s.len(), b.roll_node_busy_gpu_s.len(), "{tag}: node dims");
+        for (g, (x, y)) in a.roll_node_busy_gpu_s.iter().zip(&b.roll_node_busy_gpu_s).enumerate() {
+            assert_eq!(x.len(), y.len(), "{tag}: group {g} node dims");
+            for (n, (p, q)) in x.iter().zip(y).enumerate() {
+                assert_eq!(p.to_bits(), q.to_bits(), "{tag}: group {g} node {n} busy");
+            }
+        }
+        assert_eq!(a.train_group_busy_gpu_s.len(), b.train_group_busy_gpu_s.len(), "{tag}: train dims");
+        for (g, (p, q)) in a.train_group_busy_gpu_s.iter().zip(&b.train_group_busy_gpu_s).enumerate() {
+            assert_eq!(p.to_bits(), q.to_bits(), "{tag}: group {g} train busy");
+        }
+        assert_outcomes_bitwise(a, b);
+    }
+
+    /// ISSUE 7: the group-parallel window drain is bit-identical to the
+    /// serial loop — outcomes, busy integrals (aggregate, per node, per
+    /// group pool), dollars, event counts and chaos accounting — across
+    /// worker counts, all intra policies, with and without the fault
+    /// stream. `workers = 1` is the serial loop itself; `workers = 4`
+    /// exercises lane take/merge, window barriers, and completion
+    /// deferral on a heterogeneous fleet trace.
+    #[test]
+    fn run_parallel_matches_serial_bitwise() {
+        let mk = || crate::workload::trace::fleet_trace(17, 120, 1.0);
+        for faults in [
+            None,
+            Some(FaultConfig {
+                seed: 5,
+                mtbf_s: 4.0 * 3600.0,
+                mean_repair_s: 600.0,
+                straggler_frac: 0.3,
+                straggler_factor: 1.4,
+                max_events: 40,
+            }),
+        ] {
+            for kind in IntraPolicyKind::all() {
+                let mut c = SimConfig::default();
+                c.intra = kind;
+                c.faults = faults.clone();
+                let serial = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk())
+                    .run_to_end();
+                if faults.is_some() {
+                    assert!(serial.crashes + serial.stragglers > 0, "chaos must fire");
+                }
+                for workers in [1usize, 4] {
+                    let tag = format!(
+                        "{kind:?} workers={workers} faults={}",
+                        faults.is_some()
+                    );
+                    let mut sim =
+                        Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk());
+                    let par = sim.run_parallel(workers);
+                    assert_results_bitwise(&serial, &par, &tag);
+                }
+            }
+        }
+    }
+
+    /// ISSUE 7: tiny windows below `PAR_WINDOW_MIN_EVENTS` drain inline
+    /// on the coordinator through the same lane code — a two-job trace
+    /// (every window tiny) still matches exactly with workers > 1.
+    #[test]
+    fn run_parallel_inline_small_windows() {
+        let mk = || {
+            vec![
+                direct_job(0, 100.0, 80.0, 2.0, 6, 0.0),
+                direct_job(1, 80.0, 60.0, 2.0, 6, 50.0),
+            ]
+        };
+        let c = SimConfig::default();
+        let serial = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk()).run_to_end();
+        let mut sim = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk());
+        let par = sim.run_parallel(8);
+        assert_results_bitwise(&serial, &par, "small-window inline");
     }
 }

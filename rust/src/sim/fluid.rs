@@ -65,6 +65,15 @@
 //! the one-iteration rollback. With `SimConfig::faults = None` (or an
 //! empty stream) this tier stays bitwise identical to its fault-free
 //! behavior (property-tested).
+//!
+//! **Streaming trace consumption (ISSUE 7, DESIGN.md §15).** A million-
+//! job sweep cannot afford the whole `Vec<JobSpec>`: the trace now lives
+//! in an [`ArrivalStore`] that compacts settled arrivals away, and a
+//! driver can interleave [`FluidSimulator::feed`] /
+//! [`FluidSimulator::advance_to`] to hold only the in-flight window
+//! (O(concurrent jobs), not O(trace)). The split sequence scheme
+//! ([`DYN_SEQ_BASE`]) makes the streamed run bitwise identical to the
+//! batch constructor for the same job sequence — chaos included.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
@@ -76,12 +85,25 @@ use crate::sync::sync_time_s;
 use crate::util::rng::Rng;
 use crate::workload::job::{JobId, JobSpec, PhaseSpec};
 
+use super::arena::ArrivalStore;
 use super::engine::{GroupScheduler, JobOutcome, SimConfig, SimResult};
 use super::faults::{FaultKind, FaultStream};
 
 /// Snap-to-completion tolerance, in iterations: absorbs the fp rounding
 /// of `(remaining × P) / P`.
 const EPS_ITERS: f64 = 1e-6;
+
+/// Dynamic-event sequence base (ISSUE 7 streaming). Arrival events take
+/// `arrival_index + 1` as their tie-break sequence; every event the run
+/// generates (joins, rechecks, faults) draws from a counter starting
+/// here. The split keeps the heap's (t, seq) total order independent of
+/// WHEN arrivals are fed: a batch load (all arrivals up front) and a
+/// chunked stream interleaving `feed` with `advance_to` assign identical
+/// keys to every event, so the two are bitwise identical (pinned by
+/// `streaming_feed_matches_batch_bitwise`). 2^48 arrivals is the
+/// resulting trace-length ceiling — five orders of magnitude above the
+/// 1M-job sweeps.
+const DYN_SEQ_BASE: u64 = 1 << 48;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum FEv {
@@ -195,7 +217,12 @@ struct FluidGroup {
 pub struct FluidSimulator<S: GroupScheduler> {
     pub cfg: SimConfig,
     pub sched: S,
-    trace: Vec<Option<JobSpec>>,
+    /// Pending arrivals, dense-indexed; settled prefix compacts away so
+    /// a streamed run holds only the in-flight window (ISSUE 7).
+    trace: ArrivalStore<JobSpec>,
+    /// `true` once the trace is complete: no further `feed` calls. Batch
+    /// construction seals immediately; streams seal via [`Self::seal`].
+    sealed: bool,
     events: BinaryHeap<FEvent>,
     seq: u64,
     now: f64,
@@ -218,12 +245,26 @@ pub struct FluidSimulator<S: GroupScheduler> {
 
 impl<S: GroupScheduler> FluidSimulator<S> {
     pub fn new(cfg: SimConfig, sched: S, trace: Vec<JobSpec>) -> Self {
+        let mut sim = Self::open_stream(cfg, sched);
+        for spec in trace {
+            sim.feed(spec);
+        }
+        sim.seal();
+        sim
+    }
+
+    /// Open a streaming run (ISSUE 7): no trace yet — the driver
+    /// interleaves [`Self::feed`] and [`Self::advance_to`], then calls
+    /// [`Self::seal`] and [`Self::run_to_end`]. Bitwise identical to the
+    /// batch constructor for the same job sequence.
+    pub fn open_stream(cfg: SimConfig, sched: S) -> Self {
         let mut sim = FluidSimulator {
             cfg,
             sched,
-            trace: Vec::new(),
+            trace: ArrivalStore::new(),
+            sealed: false,
             events: BinaryHeap::new(),
-            seq: 0,
+            seq: DYN_SEQ_BASE,
             now: 0.0,
             jobs: Vec::new(),
             job_slot: HashMap::new(),
@@ -237,18 +278,11 @@ impl<S: GroupScheduler> FluidSimulator<S> {
             scratch_lengths: Vec::new(),
             scratch_node_load: Vec::new(),
         };
-        sim.load_trace(trace);
+        sim.arm_faults();
         sim
     }
 
-    fn load_trace(&mut self, trace: Vec<JobSpec>) {
-        self.trace.clear();
-        self.trace.extend(trace.into_iter().map(Some));
-        for i in 0..self.trace.len() {
-            let t = self.trace[i].as_ref().expect("fresh trace").arrival_s;
-            self.push(t, FEv::Arrival(i));
-        }
-        self.job_slot.clear();
+    fn arm_faults(&mut self) {
         // Arm the chaos stream (one event in flight, lazily chained).
         self.faults_rt = FaultStream::arm(self.cfg.faults.as_ref());
         if let Some((h, t)) = self.faults_rt.as_mut().and_then(FaultStream::pull) {
@@ -256,22 +290,73 @@ impl<S: GroupScheduler> FluidSimulator<S> {
         }
     }
 
+    /// Append the next arrival to the stream. Arrivals must be fed in
+    /// trace order; feeding after [`Self::seal`] is a bug.
+    pub fn feed(&mut self, spec: JobSpec) {
+        assert!(!self.sealed, "feed after seal");
+        let t = spec.arrival_s;
+        let idx = self.trace.push(spec);
+        debug_assert!((idx as u64) < DYN_SEQ_BASE - 1, "trace exceeds the arrival seq space");
+        // Arrival tie-break seqs are the dense index: identical whether
+        // the trace was loaded up front or streamed in chunks.
+        self.events.push(FEvent { t, seq: idx as u64 + 1, ev: FEv::Arrival(idx) });
+    }
+
+    /// Declare the stream complete: every job has been fed. Settled-world
+    /// guards (fault events outliving the workload) activate only now.
+    pub fn seal(&mut self) {
+        self.sealed = true;
+    }
+
+    /// In-flight arrivals still held by the store (diagnostics: a
+    /// streamed run's memory window, O(concurrent jobs) not O(trace)).
+    pub fn stream_window(&self) -> usize {
+        self.trace.window_len()
+    }
+
+    /// Process every event strictly before `horizon`. The caller must
+    /// have fed all arrivals with `arrival_s < horizon`; events at
+    /// exactly `horizon` stay queued so a not-yet-fed arrival at that
+    /// instant keeps its place in the total order.
+    pub fn advance_to(&mut self, horizon: f64) {
+        while let Some(e) = self.events.peek() {
+            if e.t >= horizon {
+                break;
+            }
+            let e = self.events.pop().expect("peeked event");
+            self.step(e);
+        }
+    }
+
     /// Rearm for another run, reusing the slabs (sweep drivers; the
     /// exact-tier counterpart is `Simulator::reset_with_trace`).
     pub fn reset_with_trace(&mut self, cfg: SimConfig, sched: S, trace: Vec<JobSpec>) {
+        self.reset_stream(cfg, sched);
+        for spec in trace {
+            self.feed(spec);
+        }
+        self.seal();
+    }
+
+    /// Streaming counterpart of [`Self::reset_with_trace`]: rearm with
+    /// an empty, unsealed stream.
+    pub fn reset_stream(&mut self, cfg: SimConfig, sched: S) {
         self.cfg = cfg;
         self.sched = sched;
+        self.trace.clear();
+        self.sealed = false;
         self.events.clear();
-        self.seq = 0;
+        self.seq = DYN_SEQ_BASE;
         self.now = 0.0;
         self.jobs.clear();
+        self.job_slot.clear();
         self.groups.clear();
         self.res = SimResult::default();
         self.last_rate_change = 0.0;
         self.cur_rate_per_h = 0.0;
         self.cur_roll_gpus = 0;
         self.cur_train_gpus = 0;
-        self.load_trace(trace);
+        self.arm_faults();
     }
 
     fn push(&mut self, t: f64, ev: FEv) {
@@ -331,31 +416,9 @@ impl<S: GroupScheduler> FluidSimulator<S> {
     }
 
     pub fn run_to_end(&mut self) -> SimResult {
+        self.seal();
         while let Some(e) = self.events.pop() {
-            // Fault events outliving the workload are inert; don't let
-            // them advance the clock past the last completion.
-            if matches!(e.ev, FEv::Fault(_)) && self.res.outcomes.len() == self.trace.len() {
-                continue;
-            }
-            // A superseded rejoin (its victim was re-suspended before it
-            // fired) can outlive the workload; it must not advance the
-            // clock. Fault-free Joins are never stale (epoch 0, the job
-            // cannot finish before joining), so fault-free runs stay
-            // bit-identical.
-            if let FEv::Join(slot, ep) = e.ev {
-                if self.jobs[slot].finished || self.jobs[slot].epoch != ep {
-                    continue;
-                }
-            }
-            debug_assert!(e.t >= self.now - 1e-9, "time went backwards");
-            self.now = e.t;
-            self.res.events_processed += 1;
-            match e.ev {
-                FEv::Arrival(i) => self.on_arrival(i),
-                FEv::Join(slot, ep) => self.on_join(slot, ep),
-                FEv::Recheck(gid, ver) => self.on_recheck(gid, ver),
-                FEv::Fault(idx) => self.on_fault(idx),
-            }
+            self.step(e);
         }
         self.integrate_cost();
         self.res.makespan_s = self.now;
@@ -367,6 +430,42 @@ impl<S: GroupScheduler> FluidSimulator<S> {
         std::mem::take(&mut self.res)
     }
 
+    /// One event through the guards and the dispatch — shared by the
+    /// batch drain ([`Self::run_to_end`]) and the incremental
+    /// [`Self::advance_to`].
+    fn step(&mut self, e: FEvent) {
+        // Fault events outliving the workload are inert; don't let them
+        // advance the clock past the last completion. An unsealed stream
+        // may still feed more jobs, so the guard only arms once sealed —
+        // exactly matching the batch run, where the full trace length is
+        // known from the start.
+        if matches!(e.ev, FEv::Fault(_))
+            && self.sealed
+            && self.res.outcomes.len() == self.trace.total()
+        {
+            return;
+        }
+        // A superseded rejoin (its victim was re-suspended before it
+        // fired) can outlive the workload; it must not advance the
+        // clock. Fault-free Joins are never stale (epoch 0, the job
+        // cannot finish before joining), so fault-free runs stay
+        // bit-identical.
+        if let FEv::Join(slot, ep) = e.ev {
+            if self.jobs[slot].finished || self.jobs[slot].epoch != ep {
+                return;
+            }
+        }
+        debug_assert!(e.t >= self.now - 1e-9, "time went backwards");
+        self.now = e.t;
+        self.res.events_processed += 1;
+        match e.ev {
+            FEv::Arrival(i) => self.on_arrival(i),
+            FEv::Join(slot, ep) => self.on_join(slot, ep),
+            FEv::Recheck(gid, ver) => self.on_recheck(gid, ver),
+            FEv::Fault(idx) => self.on_fault(idx),
+        }
+    }
+
     fn ensure_group(&mut self, gid: usize) {
         if self.groups.len() <= gid {
             self.groups.resize_with(gid + 1, FluidGroup::default);
@@ -374,7 +473,7 @@ impl<S: GroupScheduler> FluidSimulator<S> {
     }
 
     fn on_arrival(&mut self, idx: usize) {
-        let spec = self.trace[idx].take().expect("arrival fires once per job");
+        let spec = self.trace.take(idx).expect("arrival fires once per job");
         let id = spec.id;
         let d = self.sched.place(spec.clone());
         self.rate_changed();
@@ -646,7 +745,7 @@ impl<S: GroupScheduler> FluidSimulator<S> {
             FaultKind::NodeCrash { .. } => self.apply_crash(fe.victim),
             FaultKind::Straggler { factor } => self.apply_straggler(fe.victim, factor),
         }
-        if self.res.outcomes.len() < self.trace.len() {
+        if !self.sealed || self.res.outcomes.len() < self.trace.total() {
             if let Some((h, t)) = self.faults_rt.as_mut().and_then(FaultStream::pull) {
                 self.push(t.max(self.now), FEv::Fault(h));
             }
@@ -1025,6 +1124,86 @@ mod tests {
         );
         assert_eq!(clean.crashes, 0);
         assert_eq!(clean.wasted_gpu_s, 0.0);
+    }
+
+    /// ISSUE 7: a chunk-streamed run — `feed` interleaved with
+    /// `advance_to` — is bitwise identical to loading the whole trace up
+    /// front, with and without chaos, and the arrival store holds only
+    /// the in-flight window while streaming.
+    #[test]
+    fn streaming_feed_matches_batch_bitwise() {
+        use crate::sim::faults::FaultConfig;
+        use crate::workload::trace::FleetTraceGen;
+        let fault_cases = [
+            None,
+            Some(FaultConfig {
+                seed: 3,
+                mtbf_s: 6.0 * 3600.0,
+                mean_repair_s: 600.0,
+                straggler_frac: 0.3,
+                straggler_factor: 1.4,
+                max_events: 30,
+            }),
+        ];
+        for faults in fault_cases {
+            let cfg = || SimConfig {
+                fidelity: Fidelity::Fluid,
+                seed: 9,
+                faults: faults.clone(),
+                ..Default::default()
+            };
+            let batch = FluidSimulator::new(
+                cfg(),
+                InterGroupScheduler::new(PhaseModel::default()),
+                FleetTraceGen::new(21, 400, 1.0).collect(),
+            )
+            .run();
+
+            let mut sim =
+                FluidSimulator::open_stream(cfg(), InterGroupScheduler::new(PhaseModel::default()));
+            let mut gen = FleetTraceGen::new(21, 400, 1.0).peekable();
+            let mut fed = 0usize;
+            let mut max_window = 0usize;
+            while let Some(spec) = gen.next() {
+                sim.feed(spec);
+                fed += 1;
+                if fed % 64 == 0 {
+                    if let Some(next) = gen.peek() {
+                        sim.advance_to(next.arrival_s);
+                        max_window = max_window.max(sim.stream_window());
+                    }
+                }
+            }
+            sim.seal();
+            let streamed = sim.run_to_end();
+
+            assert!(
+                max_window <= 64,
+                "store kept {max_window} specs live — streaming is not incremental"
+            );
+            let tag = if faults.is_some() { "chaos" } else { "clean" };
+            assert_eq!(batch.makespan_s.to_bits(), streamed.makespan_s.to_bits(), "{tag}");
+            assert_eq!(batch.cost_usd.to_bits(), streamed.cost_usd.to_bits(), "{tag}");
+            assert_eq!(batch.roll_busy_gpu_s.to_bits(), streamed.roll_busy_gpu_s.to_bits(), "{tag}");
+            assert_eq!(
+                batch.train_busy_gpu_s.to_bits(),
+                streamed.train_busy_gpu_s.to_bits(),
+                "{tag}"
+            );
+            assert_eq!(batch.wasted_gpu_s.to_bits(), streamed.wasted_gpu_s.to_bits(), "{tag}");
+            assert_eq!(batch.events_processed, streamed.events_processed, "{tag}");
+            assert_eq!(batch.crashes, streamed.crashes, "{tag}");
+            assert_eq!(batch.stragglers, streamed.stragglers, "{tag}");
+            assert_eq!(batch.outcomes.len(), streamed.outcomes.len(), "{tag}");
+            for (id, a) in &batch.outcomes {
+                let b = &streamed.outcomes[id];
+                assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits(), "{tag} job {id}");
+                assert_eq!(a.recoveries, b.recoveries, "{tag} job {id}");
+            }
+            if faults.is_some() {
+                assert!(batch.crashes + batch.stragglers > 0, "chaos case must exercise faults");
+            }
+        }
     }
 
     #[test]

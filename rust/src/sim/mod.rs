@@ -19,6 +19,7 @@
 //! `coordinator::repair` with checkpoint-aware recovery; with the stream
 //! empty both tiers stay bitwise identical to the fault-free engine.
 
+pub mod arena;
 pub mod calendar;
 pub mod engine;
 pub mod faults;

@@ -12,6 +12,12 @@
 //!
 //! `ROLLMUX_THREADS` caps the worker count (`1` forces the serial path;
 //! unset/`0` uses all available cores).
+//!
+//! Spawn discipline (ISSUE 7): `workers` is the TOTAL concurrency — the
+//! caller thread participates as a worker, so the pool spawns only
+//! `workers - 1` threads; `workers <= 1` and batches of `<= 1` item run
+//! entirely on the caller with no pool, no `Mutex` slots and no atomics
+//! (pinned by `caller_participates_and_small_batches_spawn_nothing`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -74,21 +80,26 @@ where
     let slots: Vec<Mutex<Option<I>>> = items.into_iter().map(|i| Mutex::new(Some(i))).collect();
     let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| {
-                let mut w = init();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let item = slots[i].lock().unwrap().take().expect("slot claimed once");
-                    let r = f(&mut w, i, item);
-                    *out[i].lock().unwrap() = Some(r);
-                }
-            });
+    // One claim loop shared by the spawned threads AND the caller: the
+    // caller is worker 0, so only `workers - 1` threads spawn (results
+    // land by input slot, so who runs what never shows in the output).
+    let work = || {
+        let mut w = init();
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let item = slots[i].lock().unwrap().take().expect("slot claimed once");
+            let r = f(&mut w, i, item);
+            *out[i].lock().unwrap() = Some(r);
         }
+    };
+    std::thread::scope(|s| {
+        for _ in 1..workers {
+            s.spawn(&work);
+        }
+        work();
     });
     out.into_iter()
         .map(|m| m.into_inner().unwrap().expect("worker filled its slot"))
@@ -186,5 +197,42 @@ mod tests {
         assert!(out.is_empty());
         let out = parallel_map_with(8, vec![5], |i, x| x + i as i32);
         assert_eq!(out, vec![5]);
+    }
+
+    /// ISSUE 7 spawn discipline: serial mode and `<= 1`-item batches run
+    /// entirely on the caller thread (no pool), and in pooled mode the
+    /// caller participates as worker 0 — at most `workers` distinct
+    /// threads ever touch the batch, caller included.
+    #[test]
+    fn caller_participates_and_small_batches_spawn_nothing() {
+        use std::collections::HashSet;
+        use std::thread::ThreadId;
+        let main_id = std::thread::current().id();
+        for (workers, items) in [(1, vec![1, 2, 3]), (8, vec![9]), (8, Vec::new())] {
+            let ids: Mutex<HashSet<ThreadId>> = Mutex::new(HashSet::new());
+            let n = items.len();
+            let out = parallel_map_with(workers, items, |_, x: i32| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+                x
+            });
+            assert_eq!(out.len(), n);
+            let ids = ids.into_inner().unwrap();
+            assert!(ids.len() <= 1, "spawned a pool for a trivial batch");
+            if n > 0 {
+                assert!(ids.contains(&main_id), "ran off the caller thread");
+            }
+        }
+        // Pooled path: enough slow items that every worker — the caller
+        // included — must claim a share.
+        let ids: Mutex<HashSet<ThreadId>> = Mutex::new(HashSet::new());
+        let out = parallel_map_with(4, (0..256usize).collect::<Vec<_>>(), |_, x| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            x
+        });
+        assert_eq!(out.len(), 256);
+        let ids = ids.into_inner().unwrap();
+        assert!(ids.contains(&main_id), "caller must participate as a worker");
+        assert!(ids.len() <= 4, "more threads than workers: {}", ids.len());
     }
 }

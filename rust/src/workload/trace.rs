@@ -113,33 +113,80 @@ pub fn philly_trace(seed: u64, n_jobs: usize, profile: SimProfile, slo: SloPolic
         .collect()
 }
 
+/// Streaming generator behind [`fleet_trace`] (ISSUE 7): yields the
+/// EXACT same job sequence — one shared `Rng` stream, identical draw
+/// order per job — without materializing the whole trace, so a
+/// million-job sweep (`rollmux exp scale`) holds O(1) generator state
+/// and feeds jobs to the simulator in chunks. `fleet_trace` is now a
+/// `collect` of this iterator (pinned bitwise by
+/// `streaming_fleet_trace_matches_batch`).
+pub struct FleetTraceGen {
+    rng: Rng,
+    mean_gap_s: f64,
+    t: f64,
+    next_id: usize,
+    n_jobs: usize,
+}
+
+impl FleetTraceGen {
+    pub fn new(seed: u64, n_jobs: usize, rate_scale: f64) -> Self {
+        let base_rate_per_h = 140.0 * rate_scale.max(1e-3);
+        FleetTraceGen {
+            rng: Rng::new(seed ^ 0xF1EE_7000),
+            mean_gap_s: HOUR / base_rate_per_h,
+            t: 0.0,
+            next_id: 0,
+            n_jobs,
+        }
+    }
+
+    /// Jobs not yet yielded.
+    pub fn remaining(&self) -> usize {
+        self.n_jobs - self.next_id
+    }
+}
+
+impl Iterator for FleetTraceGen {
+    type Item = JobSpec;
+
+    fn next(&mut self) -> Option<JobSpec> {
+        if self.next_id >= self.n_jobs {
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.t += self.rng.exponential(self.mean_gap_s);
+        let slo = self.rng.uniform(1.0, 2.0);
+        let mut job = profiles::table6_job(id, SimProfile::Mixed, &mut self.rng, slo, self.t, 1);
+        let sigma: f64 = 0.9;
+        let mu = 6.0f64.ln() - 0.5 * sigma * sigma;
+        let dur_h = self.rng.lognormal(mu, sigma).clamp(0.25, 48.0);
+        let iter_s = match job.phases {
+            PhaseSpec::Direct { t_roll, t_train, .. } => t_roll + t_train,
+            _ => unreachable!("table6 bodies are Direct"),
+        };
+        job.n_iters = ((dur_h * HOUR) / iter_s).round().max(2.0) as usize;
+        Some(job)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let r = self.remaining();
+        (r, Some(r))
+    }
+}
+
+impl ExactSizeIterator for FleetTraceGen {}
+
 /// Synthetic fleet trace for the 100k-job what-if sweeps (`rollmux exp
 /// fleet`, ISSUE 4): Table-6 mixed job bodies, Poisson arrivals at
 /// `rate_scale x` a ~140 jobs/hour base rate, heavy-tailed durations
 /// (lognormal hours, mean ~6 h, clamped to 48 h). At `rate_scale = 1`
 /// and 100k jobs the fleet holds on the order of a thousand concurrent
 /// jobs — the regime the fluid tier exists for. Seeded + deterministic.
+/// For traces too large to materialize, drive [`FleetTraceGen`]
+/// directly.
 pub fn fleet_trace(seed: u64, n_jobs: usize, rate_scale: f64) -> Vec<JobSpec> {
-    let mut rng = Rng::new(seed ^ 0xF1EE_7000);
-    let base_rate_per_h = 140.0 * rate_scale.max(1e-3);
-    let mean_gap_s = HOUR / base_rate_per_h;
-    let mut t = 0.0;
-    (0..n_jobs)
-        .map(|id| {
-            t += rng.exponential(mean_gap_s);
-            let slo = rng.uniform(1.0, 2.0);
-            let mut job = profiles::table6_job(id, SimProfile::Mixed, &mut rng, slo, t, 1);
-            let sigma: f64 = 0.9;
-            let mu = 6.0f64.ln() - 0.5 * sigma * sigma;
-            let dur_h = rng.lognormal(mu, sigma).clamp(0.25, 48.0);
-            let iter_s = match job.phases {
-                PhaseSpec::Direct { t_roll, t_train, .. } => t_roll + t_train,
-                _ => unreachable!("table6 bodies are Direct"),
-            };
-            job.n_iters = ((dur_h * HOUR) / iter_s).round().max(2.0) as usize;
-            job
-        })
-        .collect()
+    FleetTraceGen::new(seed, n_jobs, rate_scale).collect()
 }
 
 /// Deterministic fault trace for chaos experiments (`rollmux exp
@@ -263,6 +310,38 @@ mod tests {
         // Deterministic under the same seed.
         let again = fleet_trace(5, 2_000, 1.0);
         assert!(jobs.iter().zip(&again).all(|(a, b)| a.arrival_s == b.arrival_s));
+    }
+
+    /// ISSUE 7: the streaming generator yields the batch trace bit for
+    /// bit — same ids, arrivals, SLOs, bodies and iteration counts —
+    /// and reports its remaining count exactly.
+    #[test]
+    fn streaming_fleet_trace_matches_batch() {
+        let batch = fleet_trace(9, 500, 1.3);
+        let mut gen = FleetTraceGen::new(9, 500, 1.3);
+        assert_eq!(gen.len(), 500);
+        for (i, a) in batch.iter().enumerate() {
+            assert_eq!(gen.remaining(), 500 - i);
+            let b = gen.next().expect("generator ran dry early");
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!(a.slo.to_bits(), b.slo.to_bits());
+            assert_eq!(a.n_iters, b.n_iters);
+            assert_eq!(a.params_b.to_bits(), b.params_b.to_bits());
+            match (&a.phases, &b.phases) {
+                (
+                    PhaseSpec::Direct { t_roll: r1, t_train: t1, cv: c1 },
+                    PhaseSpec::Direct { t_roll: r2, t_train: t2, cv: c2 },
+                ) => {
+                    assert_eq!(r1.to_bits(), r2.to_bits());
+                    assert_eq!(t1.to_bits(), t2.to_bits());
+                    assert_eq!(c1.to_bits(), c2.to_bits());
+                }
+                _ => unreachable!("table6 bodies are Direct"),
+            }
+        }
+        assert!(gen.next().is_none());
+        assert_eq!(gen.remaining(), 0);
     }
 
     #[test]

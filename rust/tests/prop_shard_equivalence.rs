@@ -1,0 +1,237 @@
+//! ISSUE 7 bitwise gates (DESIGN.md §15): the two scale-out perf paths
+//! this PR grew must be **invisible in the results**.
+//!
+//! * The **sharded placement scan** (`InterGroupScheduler::set_shards`)
+//!   must emit the exact `Decision` stream of the retained exhaustive
+//!   reference (`schedule_reference`) — same winners, same Δ bits, same
+//!   final cluster state — for every shard count, on fleet-scale traces
+//!   with interleaved completions.
+//! * The **group-parallel exact engine** (`Simulator::run_parallel`)
+//!   must produce a `SimResult` bit-identical to the serial event loop —
+//!   across worker counts, every intra-group dispatch policy, and with
+//!   the chaos stream injecting faults mid-window.
+//!
+//! No proptest crate offline: seeded random cases, failure seeds in the
+//! assertion messages for replay.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::{Decision, InterGroupScheduler};
+use rollmux::coordinator::orchestrator::IntraPolicyKind;
+use rollmux::sim::engine::{SimConfig, SimResult, Simulator};
+use rollmux::sim::faults::FaultConfig;
+use rollmux::util::rng::Rng;
+use rollmux::workload::profiles::{table6_job, SimProfile};
+use rollmux::workload::trace::fleet_trace;
+
+/// Replay one identical (schedule, complete) call stream through a
+/// scheduler, returning the decision stream. `reference` selects the
+/// retained exhaustive oracle scan.
+fn drive(
+    sched: &mut InterGroupScheduler,
+    reference: bool,
+    seed: u64,
+    n_jobs: usize,
+    complete_p: f64,
+) -> Vec<Decision> {
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<usize> = Vec::new();
+    let mut out = Vec::with_capacity(n_jobs);
+    for id in 0..n_jobs {
+        let slo = rng.uniform(1.0, 2.0);
+        let job = table6_job(id, SimProfile::Mixed, &mut rng, slo, 0.0, 5);
+        out.push(if reference { sched.schedule_reference(job) } else { sched.schedule(job) });
+        live.push(id);
+        if rng.chance(complete_p) && live.len() > 4 {
+            let vi = rng.range(0, live.len());
+            sched.complete_job(live.swap_remove(vi));
+        }
+    }
+    out
+}
+
+fn assert_decisions_eq(a: &[Decision], b: &[Decision], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: stream lengths");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x, y, "{tag}: decision {i} diverged");
+        assert_eq!(
+            x.marginal_cost.to_bits(),
+            y.marginal_cost.to_bits(),
+            "{tag}: decision {i} Δ bits diverged"
+        );
+    }
+}
+
+fn assert_state_eq(a: &InterGroupScheduler, b: &InterGroupScheduler, tag: &str) {
+    assert_eq!(a.groups.len(), b.groups.len(), "{tag}: group counts");
+    assert_eq!(
+        a.total_cost_per_hour().to_bits(),
+        b.total_cost_per_hour().to_bits(),
+        "{tag}: cluster cost"
+    );
+    for (ga, gb) in a.groups.iter().zip(&b.groups) {
+        assert_eq!(ga.id, gb.id, "{tag}");
+        assert_eq!(ga.n_roll_nodes, gb.n_roll_nodes, "{tag}: group {}", ga.id);
+        assert_eq!(ga.n_train_nodes, gb.n_train_nodes, "{tag}: group {}", ga.id);
+        let ids_a: Vec<usize> = ga.jobs().iter().map(|j| j.spec.id).collect();
+        let ids_b: Vec<usize> = gb.jobs().iter().map(|j| j.spec.id).collect();
+        assert_eq!(ids_a, ids_b, "{tag}: membership in group {}", ga.id);
+        for (ja, jb) in ga.jobs().iter().zip(gb.jobs()) {
+            assert_eq!(ja.roll_nodes, jb.roll_nodes, "{tag}: pins of job {}", ja.spec.id);
+        }
+    }
+}
+
+/// The headline sharding gate: a 20k-job fleet-scale build-up with
+/// interleaved completions; one reference replay, compared bitwise
+/// against every shard count in {1, 2, 8}.
+#[test]
+fn prop_sharded_matches_reference_20k_jobs() {
+    let (seed, n_jobs, complete_p) = (0x5AAD_7u64, 20_000usize, 0.3);
+    let model = PhaseModel::default();
+    let mut oracle = InterGroupScheduler::new(model);
+    let expect = drive(&mut oracle, true, seed, n_jobs, complete_p);
+    for shards in [1usize, 2, 8] {
+        let mut s = InterGroupScheduler::with_shards(model, shards);
+        let got = drive(&mut s, false, seed, n_jobs, complete_p);
+        let tag = format!("seed {seed} shards {shards}");
+        assert_decisions_eq(&expect, &got, &tag);
+        assert_state_eq(&oracle, &s, &tag);
+    }
+}
+
+/// Many small seeds x shard counts, with and without the group-size cap
+/// — shakes out shard-boundary arbitration (winners on different
+/// shards, empty shards, capped groups leaving the index).
+#[test]
+fn prop_sharded_matches_reference_many_seeds() {
+    let model = PhaseModel::default();
+    for seed in 0..12u64 {
+        for cap in [None, Some(3usize)] {
+            let mk = |shards: usize| {
+                let mut s = match cap {
+                    Some(c) => InterGroupScheduler::with_max_group_size(model, c),
+                    None => InterGroupScheduler::new(model),
+                };
+                s.set_shards(shards);
+                s
+            };
+            let mut oracle = mk(1);
+            let expect = drive(&mut oracle, true, seed, 80, 0.4);
+            for shards in [2usize, 3, 8, 64] {
+                let mut s = mk(shards);
+                let got = drive(&mut s, false, seed, 80, 0.4);
+                let tag = format!("seed {seed} cap {cap:?} shards {shards}");
+                assert_decisions_eq(&expect, &got, &tag);
+                assert_state_eq(&oracle, &s, &tag);
+            }
+        }
+    }
+}
+
+/// Every observable field of two `SimResult`s, compared bitwise.
+fn assert_results_bitwise(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{tag}: makespan");
+    assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits(), "{tag}: cost");
+    assert_eq!(a.avg_cost_per_hour.to_bits(), b.avg_cost_per_hour.to_bits(), "{tag}: avg cost");
+    assert_eq!(a.roll_busy_gpu_s.to_bits(), b.roll_busy_gpu_s.to_bits(), "{tag}: roll busy");
+    assert_eq!(a.train_busy_gpu_s.to_bits(), b.train_busy_gpu_s.to_bits(), "{tag}: train busy");
+    assert_eq!(a.roll_prov_gpu_s.to_bits(), b.roll_prov_gpu_s.to_bits(), "{tag}: roll prov");
+    assert_eq!(a.train_prov_gpu_s.to_bits(), b.train_prov_gpu_s.to_bits(), "{tag}: train prov");
+    assert_eq!(a.wasted_gpu_s.to_bits(), b.wasted_gpu_s.to_bits(), "{tag}: wasted");
+    assert_eq!(a.recovery_time_s.to_bits(), b.recovery_time_s.to_bits(), "{tag}: recovery");
+    assert_eq!(a.events_processed, b.events_processed, "{tag}: events");
+    assert_eq!(a.crashes, b.crashes, "{tag}: crashes");
+    assert_eq!(a.stragglers, b.stragglers, "{tag}: stragglers");
+    assert_eq!(a.evictions, b.evictions, "{tag}: evictions");
+    assert_eq!(a.spills, b.spills, "{tag}: spills");
+    assert_eq!(a.peak_roll_gpus, b.peak_roll_gpus, "{tag}: peak roll");
+    assert_eq!(a.peak_train_gpus, b.peak_train_gpus, "{tag}: peak train");
+    assert_eq!(a.roll_node_busy_gpu_s.len(), b.roll_node_busy_gpu_s.len(), "{tag}: node dims");
+    for (gid, (va, vb)) in a.roll_node_busy_gpu_s.iter().zip(&b.roll_node_busy_gpu_s).enumerate() {
+        assert_eq!(va.len(), vb.len(), "{tag}: node dims of group {gid}");
+        for (n, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: node busy g{gid} n{n}");
+        }
+    }
+    assert_eq!(
+        a.train_group_busy_gpu_s.len(),
+        b.train_group_busy_gpu_s.len(),
+        "{tag}: train dims"
+    );
+    for (gid, (x, y)) in a.train_group_busy_gpu_s.iter().zip(&b.train_group_busy_gpu_s).enumerate()
+    {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: train busy g{gid}");
+    }
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{tag}: outcome count");
+    for (id, oa) in &a.outcomes {
+        let ob = b.outcomes.get(id).unwrap_or_else(|| panic!("{tag}: job {id} missing"));
+        assert_eq!(oa.finish_s.to_bits(), ob.finish_s.to_bits(), "{tag}: job {id} finish");
+        assert_eq!(
+            oa.solo_actual_s.to_bits(),
+            ob.solo_actual_s.to_bits(),
+            "{tag}: job {id} solo"
+        );
+        assert_eq!(oa.iters, ob.iters, "{tag}: job {id} iters");
+        assert_eq!(oa.migrations, ob.migrations, "{tag}: job {id} migrations");
+        assert_eq!(oa.recoveries, ob.recoveries, "{tag}: job {id} recoveries");
+        assert_eq!(oa.recovery_s.to_bits(), ob.recovery_s.to_bits(), "{tag}: job {id} rec s");
+    }
+}
+
+/// The group-parallel engine gate: every intra policy x chaos on/off x
+/// worker counts {1, 4}, on a fleet trace big enough to form many
+/// concurrent groups (and, with chaos, to fire crashes mid-window).
+#[test]
+fn prop_engine_parallel_matches_serial() {
+    let trace = || fleet_trace(29, 160, 1.0);
+    let fault_cases = [
+        None,
+        Some(FaultConfig {
+            seed: 11,
+            mtbf_s: 3.0 * 3600.0,
+            mean_repair_s: 600.0,
+            straggler_frac: 0.3,
+            straggler_factor: 1.4,
+            max_events: 50,
+        }),
+    ];
+    for faults in &fault_cases {
+        for intra in IntraPolicyKind::all() {
+            let cfg = || SimConfig {
+                seed: 29,
+                intra,
+                faults: faults.clone(),
+                ..Default::default()
+            };
+            let sched = || InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8);
+            let serial = Simulator::new(cfg(), sched(), trace()).run();
+            for workers in [1usize, 4] {
+                let mut sim = Simulator::new(cfg(), sched(), trace());
+                let parallel = sim.run_parallel(workers);
+                let tag = format!(
+                    "intra {:?} chaos {} workers {workers}",
+                    intra,
+                    faults.is_some()
+                );
+                assert_results_bitwise(&serial, &parallel, &tag);
+            }
+        }
+        if faults.is_some() {
+            let cfg = SimConfig {
+                seed: 29,
+                faults: faults.clone(),
+                ..Default::default()
+            };
+            let res = Simulator::new(
+                cfg,
+                InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8),
+                trace(),
+            )
+            .run();
+            assert!(
+                res.crashes + res.stragglers > 0,
+                "chaos case fired no faults — the gate is not exercising fault windows"
+            );
+        }
+    }
+}

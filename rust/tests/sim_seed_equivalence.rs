@@ -12,6 +12,16 @@
 //! engines so this test isolates the orchestration refactor;
 //! `sim::engine::tests::tail_busy_accounting_uses_plan_fraction` pins
 //! the fix itself.
+//!
+//! ISSUE 7 follows the same discipline: the engine now accumulates busy
+//! GPU-seconds PER GROUP and folds them in ascending group id at
+//! finalize (the fixed association order shared by the serial and
+//! group-parallel loops, DESIGN.md §15). That changes the f64 summation
+//! order vs the seed's chronological global sums, so the identical
+//! per-group fold is applied to the transcription below — the bitwise
+//! gate keeps isolating the refactors, not the fold;
+//! `sim::engine::tests::run_parallel_matches_serial_bitwise` pins the
+//! parallel loop against the serial one.
 
 use rollmux::cluster::PhaseModel;
 use rollmux::coordinator::inter::InterGroupScheduler;
@@ -132,6 +142,11 @@ mod seed {
         cur_rate_per_h: f64,
         cur_roll_gpus: usize,
         cur_train_gpus: usize,
+        /// ISSUE 7 fold, applied to both engines (see the module doc):
+        /// busy time accumulates per group, folded ascending-gid in
+        /// `run` before the derived fields.
+        group_roll_busy: Vec<f64>,
+        group_train_busy: Vec<f64>,
     }
 
     impl<S: GroupScheduler> SeedSimulator<S> {
@@ -150,6 +165,8 @@ mod seed {
                 cur_rate_per_h: 0.0,
                 cur_roll_gpus: 0,
                 cur_train_gpus: 0,
+                group_roll_busy: Vec::new(),
+                group_train_busy: Vec::new(),
             };
             for i in 0..sim.trace.len() {
                 let t = sim.trace[i].as_ref().expect("fresh trace").arrival_s;
@@ -161,6 +178,20 @@ mod seed {
         fn push(&mut self, t: f64, ev: Ev) {
             self.seq += 1;
             self.events.push(Event { t, seq: self.seq, ev });
+        }
+
+        fn roll_busy_add(&mut self, gid: usize, gpu_s: f64) {
+            if self.group_roll_busy.len() <= gid {
+                self.group_roll_busy.resize(gid + 1, 0.0);
+            }
+            self.group_roll_busy[gid] += gpu_s;
+        }
+
+        fn train_busy_add(&mut self, gid: usize, gpu_s: f64) {
+            if self.group_train_busy.len() <= gid {
+                self.group_train_busy.resize(gid + 1, 0.0);
+            }
+            self.group_train_busy[gid] += gpu_s;
         }
 
         fn integrate_cost(&mut self) {
@@ -193,6 +224,15 @@ mod seed {
                 }
             }
             self.integrate_cost();
+            // ISSUE 7 fold: per-group chronological sums combined in
+            // ascending gid — the same association the real engine's
+            // finalize uses (groups missing from one vector contribute
+            // +0.0, which is bitwise-neutral on these sums).
+            let n = self.group_roll_busy.len().max(self.group_train_busy.len());
+            for gid in 0..n {
+                self.res.roll_busy_gpu_s += self.group_roll_busy.get(gid).copied().unwrap_or(0.0);
+                self.res.train_busy_gpu_s += self.group_train_busy.get(gid).copied().unwrap_or(0.0);
+            }
             self.res.makespan_s = self.now;
             self.res.avg_cost_per_hour = if self.now > 0.0 {
                 self.res.cost_usd / (self.now / 3600.0)
@@ -347,8 +387,7 @@ mod seed {
                         self.jobs[slot].tail_frac = plan.tail_gpu_frac;
                         self.push(t_check, Ev::TailFree(slot, plan.nodes_kept));
                     }
-                    self.res.roll_busy_gpu_s +=
-                        (warm + t_roll) * n_pins as f64 * GPUS_PER_NODE as f64;
+                    self.roll_busy_add(gid, (warm + t_roll) * n_pins as f64 * GPUS_PER_NODE as f64);
                     self.record_rollout(slot, iter, self.now, end);
                     self.push(end, Ev::PhaseDone(slot, PhaseKind::Rollout, iter));
                 }
@@ -358,7 +397,7 @@ mod seed {
                     self.group_rt[gid].train_busy = Some(slot);
                     let end = self.now + warm + t_train;
                     let train_gpus = self.jobs[slot].train_gpus;
-                    self.res.train_busy_gpu_s += (warm + t_train) * train_gpus as f64;
+                    self.train_busy_add(gid, (warm + t_train) * train_gpus as f64);
                     self.record(slot, PhaseKind::Train, iter, self.now, end, &[]);
                     self.push(end, Ev::PhaseDone(slot, PhaseKind::Train, iter));
                 }
@@ -396,9 +435,13 @@ mod seed {
                 (rt.cur_roll_end - self.now, rt.roll_nodes.len(), rt.tail_frac)
             };
             let freed = n_pins - kept;
-            self.res.roll_busy_gpu_s -= remaining * freed as f64 * GPUS_PER_NODE as f64;
-            self.res.roll_busy_gpu_s +=
-                (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64;
+            // `x += -(y)` is `x -= y` bitwise; routed through the
+            // per-group accumulator like the real engine's lane handler.
+            self.roll_busy_add(gid, -(remaining * freed as f64 * GPUS_PER_NODE as f64));
+            self.roll_busy_add(
+                gid,
+                (remaining + penalty) * (kept as f64 + tail_frac) * GPUS_PER_NODE as f64,
+            );
             for i in kept..n_pins {
                 let n = self.jobs[slot].roll_nodes[i];
                 self.group_rt[gid].release_if_held(n, slot);

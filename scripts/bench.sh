@@ -2,62 +2,152 @@
 # Run the performance bench binaries and assemble the machine-readable
 # BENCH_N.json at the repository root (the perf trajectory is tracked
 # across PRs; see EXPERIMENTS.md §Perf for methodology). ISSUE 1
-# produced BENCH_1.json, ISSUE 2 BENCH_2.json; the generation is now a
+# produced BENCH_1.json, ISSUE 2 BENCH_2.json; the generation is a
 # parameter so each PR appends its own file instead of editing this
-# script (ISSUE 6 default: BENCH_6.json).
+# script (ISSUE 7 default: BENCH_7.json).
+#
+# Multi-round protocol (ISSUE 7): the whole bench suite runs
+# BENCH_ROUNDS times (default 5) plus ONE warmup round that is
+# discarded (page cache, CPU governor, JIT-less but still branch
+# predictors). Each (bench, name) entry in the output carries the
+# per-metric MEDIAN across the kept rounds plus a `cv` field — the
+# coefficient of variation of the entry's decisive metric — so a
+# reader can judge how trustworthy each number is. Entries gated by
+# scripts/bench_compare.sh (rate metrics / mean_s) must satisfy
+# cv <= MAX_CV (default 0.15) or this script FAILS: a machine too noisy
+# to measure on must not mint a trajectory point. Single-sample wall_s
+# entries are reported with their cv but never gated (matching
+# bench_compare.sh's policy).
 #
 # Usage: scripts/bench.sh [gen] [extra cargo args...]
-#   gen              bench generation number (default: 6 -> BENCH_6.json)
-#   BENCH_OUT=path   override the output file entirely
-#
-# Each bench binary appends one JSON object per measurement to
-# $BENCH_JSON_OUT (see util::emit_bench_json); this script wraps the
-# collected lines into a single JSON document.
+#   gen                 bench generation number (default: 7 -> BENCH_7.json)
+#   BENCH_OUT=path      override the output file entirely
+#   BENCH_ROUNDS=n      kept measurement rounds (default 5; warmup extra)
+#   MAX_CV=x            acceptance ceiling on gated entries' cv (default 0.15)
+#   ROLLMUX_BENCH_PAR_JOBS=n   shrink the scale/engine_parallel_100k trace
+#                              for quick local runs (CI uses the default)
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
-GEN="6"
+GEN="7"
 if [[ $# -ge 1 && "$1" =~ ^[0-9]+$ ]]; then
     GEN="$1"
     shift
 fi
 OUT="${BENCH_OUT:-$ROOT/BENCH_${GEN}.json}"
+ROUNDS="${BENCH_ROUNDS:-5}"
+MAX_CV="${MAX_CV:-0.15}"
 TMP="$(mktemp -d)"
 trap 'rm -rf "$TMP"' EXIT
-export BENCH_JSON_OUT="$TMP/bench.jsonl"
 
 cd "$ROOT"
-# ISSUE 3: scheduler_latency now includes the 20k-job fleet-scale
-# placement benches (indexed vs exhaustive reference — the >= 5x
-# acceptance pair) and simulator the events/s engine benches (calendar
-# queue vs binary heap). ISSUE 4 adds the gantt on/off events series and
-# the two-tier fleet series (fluid/fleet_100k, fluid-vs-exact at 10k —
-# the >= 10x acceptance pair). ISSUE 5 adds the chaos series
-# (fluid/chaos_{10k,100k} + exact/chaos_2k: failure injection overhead
-# vs the fault-free runs on the same traces; compare generations with
-# scripts/bench_compare.sh, e.g. BENCH_4.json vs BENCH_5.json).
-cargo bench --bench scheduler_latency "$@"
-cargo bench --bench simulator "$@"
-# ISSUE 2: dispatch throughput of the extracted orchestration core, per
-# policy — keeps the refactor's hot path on the perf trajectory.
-cargo bench --bench orchestrator "$@"
-# sync_and_memory measures per-decision micro-costs; cheap, keep it in.
-cargo bench --bench sync_and_memory "$@" || true
-# ISSUE 6: rollmuxd control-plane series — admission throughput (bare
-# and journaled) and cold-start journal replay (crash recovery).
-cargo bench --bench daemon "$@"
+# Build once so the rounds time execution, not compilation.
+cargo bench --no-run "$@"
 
-if [[ ! -s "$BENCH_JSON_OUT" ]]; then
-    echo "error: benches produced no records at $BENCH_JSON_OUT" >&2
-    exit 1
-fi
+run_suite() {
+    # ISSUE 3: scheduler_latency includes the 20k-job fleet-scale
+    # placement benches (indexed vs exhaustive reference — the >= 5x
+    # acceptance pair); ISSUE 7 adds scale/placement_sharded_20k (the
+    # sharded scan vs one shard). simulator carries the events/s engine
+    # benches, the ISSUE 4 two-tier fleet series, the ISSUE 5 chaos
+    # series, and the ISSUE 7 scale/engine_parallel_100k serial-vs-
+    # parallel acceptance pair (>= 3x at 8 workers).
+    cargo bench --bench scheduler_latency "$@"
+    cargo bench --bench simulator "$@"
+    # ISSUE 2: dispatch throughput of the extracted orchestration core.
+    cargo bench --bench orchestrator "$@"
+    # sync_and_memory measures per-decision micro-costs; cheap, keep it.
+    cargo bench --bench sync_and_memory "$@" || true
+    # ISSUE 6: rollmuxd control-plane series.
+    cargo bench --bench daemon "$@"
+}
+
+echo "== bench round 0/${ROUNDS} (warmup, discarded) =="
+BENCH_JSON_OUT="$TMP/warmup.jsonl" run_suite "$@"
+
+for r in $(seq 1 "$ROUNDS"); do
+    echo "== bench round ${r}/${ROUNDS} =="
+    BENCH_JSON_OUT="$TMP/round_${r}.jsonl" run_suite "$@"
+    if [[ ! -s "$TMP/round_${r}.jsonl" ]]; then
+        echo "error: round ${r} produced no records" >&2
+        exit 1
+    fi
+done
 
 GIT_REV="$(git -C "$ROOT" rev-parse --short HEAD 2>/dev/null || echo unknown)"
-{
-    printf '{"schema":"rollmux-bench-v1","git_rev":"%s","entries":[\n' "$GIT_REV"
-    # Join the JSON lines with commas (each line is a complete object).
-    awk 'NR>1{printf(",\n")} {printf("%s", $0)} END{printf("\n")}' "$BENCH_JSON_OUT"
-    printf ']}\n'
-} > "$OUT"
+python3 - "$TMP" "$ROUNDS" "$OUT" "$GIT_REV" "$MAX_CV" <<'PY'
+import json
+import statistics
+import sys
 
-echo "wrote $OUT ($(grep -c '"name"' "$BENCH_JSON_OUT") entries)"
+tmp, rounds, out_path, git_rev, max_cv = (
+    sys.argv[1], int(sys.argv[2]), sys.argv[3], sys.argv[4], float(sys.argv[5]))
+
+# Metrics bench_compare.sh gates on (first present decides) — these must
+# meet the cv ceiling. wall_s is trajectory data: reported, never gated.
+GATED = ("ops_per_s", "events_per_s", "phases_per_s", "placements_per_s", "mean_s")
+
+# rounds[i] maps (bench, name) -> entry; entry order follows round 1.
+order = []
+samples = {}
+for r in range(1, rounds + 1):
+    with open(f"{tmp}/round_{r}.jsonl") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            e = json.loads(line)
+            key = (e.get("bench", ""), e.get("name", ""))
+            if key not in samples:
+                samples[key] = []
+                order.append(key)
+            samples[key].append(e)
+
+noisy = []
+entries = []
+for key in order:
+    runs = samples[key]
+    merged = {"bench": key[0], "name": key[1]}
+    numeric = {}
+    for e in runs:
+        for k, v in e.items():
+            if k in ("bench", "name"):
+                continue
+            if isinstance(v, (int, float)):
+                numeric.setdefault(k, []).append(float(v))
+            else:
+                merged.setdefault(k, v)
+    for k, vals in numeric.items():
+        merged[k] = statistics.median(vals)
+    merged["rounds"] = len(runs)
+    decisive = next((m for m in GATED if m in numeric), None)
+    gated = decisive is not None
+    if decisive is None:
+        decisive = next((m for m in numeric if m.endswith("wall_s") or m == "wall_s"),
+                        next(iter(numeric), None))
+    if decisive is not None and len(numeric[decisive]) > 1:
+        vals = numeric[decisive]
+        mean = statistics.fmean(vals)
+        cv = (statistics.stdev(vals) / mean) if mean else 0.0
+        merged["cv"] = round(cv, 6)
+        merged["cv_metric"] = decisive
+        if gated and cv > max_cv:
+            noisy.append((key, decisive, cv))
+    entries.append(merged)
+
+doc = {"schema": "rollmux-bench-v1", "git_rev": git_rev,
+       "rounds": rounds, "max_cv": max_cv, "entries": entries}
+with open(out_path, "w") as fh:
+    json.dump(doc, fh, indent=1)
+    fh.write("\n")
+print(f"wrote {out_path} ({len(entries)} entries, median of {rounds} rounds)")
+
+if noisy:
+    for key, metric, cv in noisy:
+        print(f"NOISY: {key[0]}/{key[1]}: {metric} cv {cv:.3f} > {max_cv}",
+              file=sys.stderr)
+    print(f"bench.sh: {len(noisy)} gated entries exceed MAX_CV={max_cv}; "
+          "this machine is too noisy to mint a trajectory point",
+          file=sys.stderr)
+    sys.exit(1)
+PY
