@@ -1,8 +1,10 @@
-//! Bench: `rollmuxd` control-plane costs (ISSUE 6) — admission
+//! Bench: `rollmuxd` control-plane costs (ISSUES 6, 8) — admission
 //! throughput through the bounded queue + trial-admission path, the
-//! write-ahead journal's append overhead, and cold-start journal
-//! replay (crash recovery). Set BENCH_JSON_OUT (scripts/bench.sh does)
-//! to collect machine-readable records for BENCH_6.json.
+//! write-ahead journal's append overhead, cold-start journal replay
+//! (crash recovery), live reconfiguration, and multi-tenant admission
+//! through the socket-arbiter entry point. Set BENCH_JSON_OUT
+//! (scripts/bench.sh does) to collect machine-readable records for
+//! BENCH_<gen>.json.
 
 use std::fs;
 use std::path::PathBuf;
@@ -99,5 +101,62 @@ fn main() {
         });
         let _ = fs::remove_file(&path);
         stats.report_json(BIN, &format!("journal_replay @{n} cmds"), lines.len() as f64);
+    }
+
+    // Live reconfiguration (ISSUE 8): a loaded daemon absorbing
+    // alternating gpu_cap / intra-policy / queue_cap reconfigs. Counts
+    // the validate + apply + re-pump + event-staging path per command.
+    {
+        let n_jobs = 64usize;
+        let n_reconfigs = 32usize;
+        let setup = session(n_jobs);
+        let reconfigs: Vec<String> = (0..n_reconfigs)
+            .map(|i| match i % 3 {
+                0 => format!("{{\"cmd\":\"reconfig\",\"gpu_cap\":{}}}", 512 + 64 * (i % 4)),
+                1 => {
+                    let p = if i % 2 == 1 { "round-robin" } else { "fifo" };
+                    format!("{{\"cmd\":\"reconfig\",\"intra\":\"{p}\"}}")
+                }
+                _ => format!("{{\"cmd\":\"reconfig\",\"queue_cap\":{}}}", 16 + (i % 5)),
+            })
+            .collect();
+        let stats = bench(2, 10, || {
+            let mut d = Daemon::new_virtual(DaemonConfig::default());
+            for l in &setup {
+                d.handle_line(l);
+            }
+            for l in &reconfigs {
+                let out = d.handle_line(l);
+                assert!(out.iter().any(|r| r.contains("\"ok\":\"reconfig\"")));
+            }
+            d.stats().reconfigs
+        });
+        stats.report_json(
+            BIN,
+            &format!("reconfig_apply @{n_reconfigs} on {n_jobs} jobs"),
+            reconfigs.len() as f64,
+        );
+    }
+
+    // Multi-tenant admission through the arbiter entry point
+    // (handle_from): same workload as admit_throughput but fanned over
+    // 8 tenants with an event subscriber attached — measures the
+    // routing + tenant-fairness + fanout overhead on the hot path.
+    {
+        let n = 256usize;
+        let lines = session(n);
+        let stats = bench(2, 10, || {
+            let mut d = Daemon::new_virtual(DaemonConfig { tenant_cap: 64, ..Default::default() });
+            let sub = d.handle_from(9, "{\"cmd\":\"subscribe\"}");
+            assert_eq!(sub.len(), 1);
+            let mut routed = 0usize;
+            for (i, l) in lines.iter().enumerate() {
+                let tenant = 1 + (i % 8) as u32;
+                routed += d.handle_from(tenant, l).len();
+            }
+            assert!(routed >= n);
+            routed
+        });
+        stats.report_json(BIN, &format!("socket_admit_throughput @{n} jobs x8 tenants"), lines.len() as f64);
     }
 }

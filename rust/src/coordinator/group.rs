@@ -165,6 +165,12 @@ impl Group {
         &self.jobs
     }
 
+    /// The most recently admitted member's job id — the LIFO eviction
+    /// victim when a live cap-shrink trims the group (ISSUE 8).
+    pub fn newest_job(&self) -> Option<JobId> {
+        self.jobs.last().map(|j| j.spec.id)
+    }
+
     /// Admit a member: O(pinned nodes) cache update, no recomputation.
     /// Grows the rollout pool if the job is pinned past it (the scheduler's
     /// rollout-scaling placement pins to fresh trailing nodes).

@@ -45,7 +45,7 @@ use crate::util::par;
 use crate::workload::job::{JobId, JobSpec};
 
 use super::group::{Group, GroupJob};
-use super::repair::{self, MemberFate, RepairOutcome};
+use super::repair::{self, MemberFate, RepairOutcome, ShrinkOutcome};
 
 /// How a job was placed (paper Fig. 5).
 #[derive(Clone, Debug, PartialEq)]
@@ -623,6 +623,69 @@ impl InterGroupScheduler {
         Some(RepairOutcome { gid, node, fates, freed_gb, group_deprovisioned })
     }
 
+    /// The current group residency cap (`None` = uncapped).
+    pub fn max_group_size(&self) -> Option<usize> {
+        self.max_group_size
+    }
+
+    /// Live reconfiguration of the group residency cap (ISSUE 8,
+    /// DESIGN.md §16). The new cap takes effect for all *future*
+    /// placements immediately; groups already over a shrunken cap are
+    /// trimmed by spilling their newest members (LIFO — seniors keep
+    /// their warm residency) back through Algorithm 1 with the shrinking
+    /// group excluded. The cap is installed *before* any spill, so a
+    /// displaced member can never re-land somewhere that would itself go
+    /// over cap. Growing (or removing) the cap displaces nobody but
+    /// re-indexes previously at-cap groups so they accept members again.
+    /// Returns one [`ShrinkOutcome`] per trimmed group, ascending gid.
+    pub fn set_group_cap(&mut self, cap: Option<usize>) -> Vec<ShrinkOutcome> {
+        self.max_group_size = cap;
+        let mut outcomes = Vec::new();
+        if let Some(cap) = cap {
+            for gid in self.group_ids() {
+                let gi = self.gid_to_idx[gid];
+                if gi == usize::MAX || self.groups[gi].jobs().len() <= cap {
+                    continue;
+                }
+                // Keep the shrinking group out of the index during
+                // surgery (mirrors repair_node_crash).
+                self.index.remove(gid);
+                let mut fates = Vec::new();
+                while self.groups[self.gid_to_idx[gid]].jobs().len() > cap {
+                    let gi = self.gid_to_idx[gid];
+                    let jid = self.groups[gi].newest_job().expect("over-cap group non-empty");
+                    let Some(job) = self.groups[gi].retract(jid) else {
+                        debug_assert!(false, "newest member vanished mid-shrink");
+                        break;
+                    };
+                    self.ledger_unpin(gid, jid, &job.roll_nodes);
+                    self.job_group.remove(&jid);
+                    let decision = self.place(job.spec.clone(), true, Some(gid));
+                    fates.push(MemberFate::Spilled { job: jid, decision });
+                }
+                let group_deprovisioned = self.groups[self.gid_to_idx[gid]].is_empty();
+                if group_deprovisioned {
+                    self.deprovision(gid);
+                } else {
+                    self.index_refresh(gid);
+                }
+                outcomes.push(ShrinkOutcome { gid, fates, group_deprovisioned });
+            }
+        }
+        // The index's at-cap predicate flips on both shrink and grow:
+        // re-sync every live group's membership under the new cap.
+        for gid in self.group_ids() {
+            if self.gid_to_idx[gid] != usize::MAX {
+                self.index_refresh(gid);
+            }
+        }
+        debug_assert!(
+            self.ledger.check_invariant(),
+            "residency invariant violated after group-cap reconfig"
+        );
+        outcomes
+    }
+
     /// Aggregate burn rate of all provisioned groups, $/h.
     pub fn total_cost_per_hour(&self) -> f64 {
         self.groups.iter().map(|g| g.cost_per_hour()).sum()
@@ -874,6 +937,55 @@ mod tests {
         assert_eq!(s.total_cost_per_hour(), 0.0);
         assert!(s.job_group.is_empty());
         assert!(s.indexed_group_ids().is_empty());
+    }
+
+    #[test]
+    fn set_group_cap_trims_newest_members_and_reindexes() {
+        let mut s = InterGroupScheduler::new(PhaseModel::default());
+        // Three complementary jobs pack into one group (loose SLOs).
+        s.schedule(direct_job(0, 100.0, 80.0, 6.0));
+        s.schedule(direct_job(1, 80.0, 60.0, 6.0));
+        s.schedule(direct_job(2, 40.0, 30.0, 6.0));
+        assert_eq!(s.groups.len(), 1);
+        let outcomes = s.set_group_cap(Some(2));
+        assert_eq!(s.max_group_size(), Some(2));
+        assert_eq!(outcomes.len(), 1);
+        let o = &outcomes[0];
+        assert_eq!(o.gid, 0);
+        assert!(!o.group_deprovisioned);
+        // LIFO: the newest member (job 2) spills, seniors stay warm.
+        assert_eq!(o.fates.len(), 1);
+        match &o.fates[0] {
+            MemberFate::Spilled { job, decision } => {
+                assert_eq!(*job, 2);
+                assert_ne!(decision.group_id, 0, "spill excludes the shrinking group");
+            }
+            f => panic!("cap shrink must spill, got {f:?}"),
+        }
+        // State is consistent: every job maps to a group that holds it.
+        for id in 0..3 {
+            let g = s.find_group(id).expect("job still placed");
+            assert!(g.jobs().iter().any(|j| j.spec.id == id));
+        }
+        assert!(s.groups.iter().all(|g| g.jobs().len() <= 2));
+        // Growing the cap back displaces nobody and re-opens the index.
+        let outcomes = s.set_group_cap(None);
+        assert!(outcomes.is_empty());
+        assert_eq!(s.max_group_size(), None);
+        // A new complementary job may pack again into group 0.
+        let d = s.schedule(direct_job(3, 40.0, 30.0, 12.0));
+        assert_eq!(d.marginal_cost, 0.0, "uncapped group accepts members again: {d:?}");
+    }
+
+    #[test]
+    fn set_group_cap_noop_when_within_cap() {
+        let mut s = InterGroupScheduler::new(PhaseModel::default());
+        s.schedule(direct_job(0, 100.0, 80.0, 2.0));
+        s.schedule(direct_job(1, 80.0, 60.0, 2.0));
+        let before: Vec<usize> = s.group_ids();
+        let outcomes = s.set_group_cap(Some(8));
+        assert!(outcomes.is_empty(), "no group is over an 8-cap");
+        assert_eq!(s.group_ids(), before);
     }
 
     #[test]

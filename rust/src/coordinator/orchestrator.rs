@@ -270,6 +270,23 @@ impl GroupOrchestrator {
         self.policy.name()
     }
 
+    /// Live policy swap (ISSUE 8): rebuild the policy and replay
+    /// `on_admit` for every live member so stateful policies (round-robin
+    /// rotation) see a deterministic admission order. Members are
+    /// replayed in ascending slot order — slots are slab indices handed
+    /// out in admission order, so the rebuilt rotation matches what a
+    /// fresh orchestrator admitting the survivors would hold. In-flight
+    /// grants and queued requests are untouched: the current cycle drains
+    /// under the old grants, the next pick uses the new policy.
+    pub fn set_policy(&mut self, kind: IntraPolicyKind) {
+        self.policy = kind.build();
+        let mut slots: Vec<usize> = self.members.keys().copied().collect();
+        slots.sort_unstable();
+        for s in slots {
+            self.policy.on_admit(self.members[&s].job);
+        }
+    }
+
     /// Register a member. `slot` is the driver's handle (slab index /
     /// thread index) and must be unique among live members; `roll_nodes`
     /// are the group-local nodes its rollouts pin to.
@@ -636,6 +653,36 @@ mod tests {
         orc.release_rollout(1);
         orc.complete(1);
         assert_eq!(orc.member_count(), 1);
+    }
+
+    #[test]
+    fn set_policy_swaps_live_and_rebuilds_rotation() {
+        let mut orc = GroupOrchestrator::new(IntraPolicyKind::WorkConservingFifo);
+        for slot in 0..3 {
+            orc.admit(slot, 30 + slot, vec![slot], (3 - slot) as f64 * 100.0);
+        }
+        assert_eq!(orc.policy_name(), "fifo");
+        // Swap to round-robin: the rebuilt rotation must follow ascending
+        // slot (= admission) order, 30 -> 31 -> 32, regardless of the
+        // HashMap's internal member order.
+        orc.set_policy(IntraPolicyKind::StrictRoundRobin);
+        assert_eq!(orc.policy_name(), "round-robin");
+        orc.enqueue(2, CorePhase::Rollout);
+        orc.enqueue(1, CorePhase::Rollout);
+        orc.enqueue(0, CorePhase::Rollout);
+        let jobs: Vec<JobId> = drain(&mut orc).iter().map(|s| s.job).collect();
+        assert_eq!(jobs, vec![30, 31, 32]);
+        // Swap again mid-stream to slo-slack: tightest budget (slot 2)
+        // wins the next free node contention.
+        for slot in 0..3 {
+            orc.release_rollout(slot);
+        }
+        orc.set_policy(IntraPolicyKind::SloSlackPriority);
+        orc.enqueue(0, CorePhase::Train);
+        orc.enqueue(2, CorePhase::Train);
+        let starts = drain(&mut orc);
+        assert_eq!(starts.len(), 1);
+        assert_eq!(starts[0].job, 32);
     }
 
     #[test]

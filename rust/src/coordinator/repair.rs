@@ -74,6 +74,26 @@ pub struct RepairOutcome {
     pub group_deprovisioned: bool,
 }
 
+/// The outcome of shrinking one group to a new residency cap (ISSUE 8
+/// live reconfiguration), returned by
+/// `InterGroupScheduler::set_group_cap`. Displaced members are always
+/// spilled through Algorithm 1 (the shrinking group is excluded by
+/// construction — it is over cap), so every fate here is
+/// [`MemberFate::Spilled`]; the shared `MemberFate` type keeps the
+/// engine-side translation identical to the crash-repair path.
+#[derive(Clone, Debug)]
+pub struct ShrinkOutcome {
+    /// The group that was over the new cap.
+    pub gid: usize,
+    /// Per-victim fates, newest member first (LIFO eviction: the most
+    /// recently admitted members leave, preserving the seniors' warm
+    /// residency — deterministic).
+    pub fates: Vec<MemberFate>,
+    /// True when the shrinking group emptied out and was deprovisioned
+    /// (only possible when the cap displaces every member elsewhere).
+    pub group_deprovisioned: bool,
+}
+
 /// Resolve an opaque victim draw onto the currently provisioned rollout
 /// node set: groups in ascending-id order (the scheduler's `groups()`
 /// slice order), nodes in group-local order. Deterministic given the

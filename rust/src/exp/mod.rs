@@ -52,7 +52,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("fig15", "Simulation end-to-end: cost + SLO attainment", simstudy::fig15),
         ("fleet", "100k-job fleet what-if sweep (fluid tier, ISSUE 4)", fleet::fleet),
         ("chaos", "Failure injection: MTBF x caps with elastic repair (ISSUE 5)", chaos::chaos),
-        ("serve", "Scripted rollmuxd session on the virtual cluster (ISSUE 6)", serve::serve),
+        (
+            "serve",
+            "Scripted rollmuxd sessions: ops + two-tenant reconfig/event push (ISSUES 6, 8)",
+            serve::serve,
+        ),
         ("scale", "Million-job scale-out: sharded + streamed + parallel DES (ISSUE 7)", scale::scale),
     ]
 }

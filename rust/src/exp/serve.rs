@@ -9,8 +9,13 @@
 //! session is replayed on a second daemon and the two transcripts are
 //! compared byte-for-byte, which is the same property the CI smoke job
 //! checks across `ROLLMUX_THREADS` settings.
+//!
+//! A second act (ISSUE 8) runs a two-tenant multiplexed session through
+//! `Daemon::handle_from`: live reconfiguration (queue/GPU caps, intra
+//! policy swap), an event-push subscription, and per-tenant response
+//! routing — also asserted byte-identical on replay.
 
-use crate::runtime::{Daemon, DaemonConfig};
+use crate::runtime::{Daemon, DaemonConfig, Routed};
 use crate::sim::{FaultConfig, SimConfig};
 
 use super::ExpOpts;
@@ -72,6 +77,38 @@ fn transcript(opts: &ExpOpts, lines: &[String]) -> Vec<(String, Vec<String>)> {
     lines.iter().map(|l| (l.clone(), d.handle_line(l))).collect()
 }
 
+/// The two-tenant act: tenant 1 subscribes to the event push and runs
+/// jobs; tenant 2 reconfigures the daemon live (queue/GPU caps, intra
+/// policy) mid-flight. Every reply routes to its issuing tenant —
+/// pumped admissions to the queue entry's owner, pushed events to the
+/// subscriber.
+fn mux_session(n: usize) -> Vec<(u32, String)> {
+    let mut s: Vec<(u32, String)> = Vec::new();
+    s.push((1, "{\"cmd\":\"subscribe\"}".into()));
+    for id in 0..n {
+        let tenant = 1 + (id % 2) as u32;
+        s.push((tenant, admit_line(100 + id, 90.0 + 5.0 * id as f64, 60.0, 8, 4)));
+    }
+    // Tenant 2 tightens the queue, then raises the GPU cap — both live.
+    s.push((2, "{\"cmd\":\"reconfig\",\"queue_cap\":2,\"gpu_cap\":96}".into()));
+    s.push((1, "{\"cmd\":\"advance\",\"dt\":400}".into()));
+    // Swap the intra-group policy mid-cycle: current dispatches finish,
+    // queued work re-dispatches under round-robin.
+    s.push((2, "{\"cmd\":\"reconfig\",\"intra\":\"round-robin\"}".into()));
+    s.push((1, "{\"cmd\":\"advance\",\"dt\":400}".into()));
+    s.push((1, "{\"cmd\":\"unsub\"}".into()));
+    s.push((2, "{\"cmd\":\"stats\"}".into()));
+    s.push((1, "{\"cmd\":\"drain\"}".into()));
+    s
+}
+
+type MuxTranscript = Vec<((u32, String), Vec<Routed>)>;
+
+fn mux_transcript(opts: &ExpOpts, lines: &[(u32, String)]) -> MuxTranscript {
+    let mut d = Daemon::new_virtual(cfg(opts));
+    lines.iter().map(|(t, l)| ((*t, l.clone()), d.handle_from(*t, l))).collect()
+}
+
 pub fn serve(opts: &ExpOpts) {
     let n = ((6.0 * opts.scale) as usize).clamp(4, 12);
     let lines = session(n);
@@ -97,6 +134,30 @@ pub fn serve(opts: &ExpOpts) {
     };
     println!("\ndeterminism check: replayed session {verdict} ({n_lines} response lines)");
     assert!(identical, "virtual-cluster sessions must be deterministic");
+
+    // ---- act 2: two tenants, live reconfiguration, event push ----
+    let mux = mux_session(n.min(6));
+    println!(
+        "\ntwo-tenant multiplexed session: live reconfig + event push \
+         (tenant 1 subscribes, tenant 2 reconfigures):\n"
+    );
+    let first = mux_transcript(opts, &mux);
+    for ((tenant, cmd), replies) in &first {
+        println!(">> [t{tenant}] {cmd}");
+        for (dst, r) in replies {
+            println!("   ->t{dst} {r}");
+        }
+    }
+    let second = mux_transcript(opts, &mux);
+    let identical = first == second;
+    let n_lines: usize = first.iter().map(|(_, r)| r.len()).sum();
+    let verdict = if identical {
+        "byte-identical"
+    } else {
+        "DIVERGED"
+    };
+    println!("\ndeterminism check: replayed mux session {verdict} ({n_lines} routed lines)");
+    assert!(identical, "multi-tenant sessions must be deterministic");
 }
 
 #[cfg(test)]
@@ -112,5 +173,24 @@ mod tests {
         assert_eq!(a, b);
         let last = a.last().and_then(|(_, r)| r.last()).expect("drain reply");
         assert!(last.contains("\"drained\""), "{last}");
+    }
+
+    #[test]
+    fn mux_session_is_deterministic_and_routes_per_tenant() {
+        let opts = ExpOpts { seed: 11, scale: 0.5, gantt: false };
+        let lines = mux_session(4);
+        let a = mux_transcript(&opts, &lines);
+        let b = mux_transcript(&opts, &lines);
+        assert_eq!(a, b);
+        // The reconfig acks route to tenant 2; the subscribe ack to 1.
+        let flat: Vec<&Routed> = a.iter().flat_map(|(_, r)| r).collect();
+        assert!(flat
+            .iter()
+            .any(|(t, l)| *t == 2 && l.contains("\"ok\":\"reconfig\"")));
+        assert!(flat
+            .iter()
+            .any(|(t, l)| *t == 1 && l.contains("\"ok\":\"subscribe\"")));
+        // The drained line exists and went to the draining tenant.
+        assert!(flat.iter().any(|(t, l)| *t == 1 && l.contains("\"drained\"")));
     }
 }

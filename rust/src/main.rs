@@ -119,12 +119,16 @@ struct ServeOpts {
     cfg: DaemonConfig,
     wall: bool,
     journal: Option<String>,
+    /// `--listen PATH`: serve concurrent JSONL tenants on a Unix
+    /// socket instead of stdin (ISSUE 8, DESIGN.md §16).
+    listen: Option<String>,
 }
 
 fn parse_serve(rest: &[String]) -> Result<ServeOpts, String> {
     let mut cfg = DaemonConfig::default();
     let mut wall = false;
     let mut journal: Option<String> = None;
+    let mut listen: Option<String> = None;
     let mut mtbf: Option<f64> = None;
     let mut seed = FaultConfig::default().seed;
     let mut i = 0;
@@ -136,6 +140,18 @@ fn parse_serve(rest: &[String]) -> Result<ServeOpts, String> {
             "--journal" => {
                 i += 1;
                 journal = Some(rest.get(i).ok_or("--journal needs a path")?.clone());
+            }
+            "--listen" => {
+                i += 1;
+                listen = Some(rest.get(i).ok_or("--listen needs a socket path")?.clone());
+            }
+            "--event-buf" => {
+                i += 1;
+                cfg.event_buf = flag_value(rest, i, flag)?;
+            }
+            "--tenant-cap" => {
+                i += 1;
+                cfg.tenant_cap = flag_value(rest, i, flag)?;
             }
             "--queue-cap" => {
                 i += 1;
@@ -186,7 +202,7 @@ fn parse_serve(rest: &[String]) -> Result<ServeOpts, String> {
         // machinery attacking the live loop).
         cfg.sim.faults = Some(FaultConfig { seed, mtbf_s, ..Default::default() });
     }
-    Ok(ServeOpts { cfg, wall, journal })
+    Ok(ServeOpts { cfg, wall, journal, listen })
 }
 
 fn serve(rest: &[String]) -> ExitCode {
@@ -196,6 +212,17 @@ fn serve(rest: &[String]) -> ExitCode {
             eprintln!("rollmux serve: {e}");
             return ExitCode::from(2);
         }
+    };
+    // Bind before building the daemon: fail fast on a bad socket path.
+    let server = match &opts.listen {
+        None => None,
+        Some(path) => match rollmux::runtime::SocketServer::bind(std::path::Path::new(path)) {
+            Ok(srv) => Some(srv),
+            Err(e) => {
+                eprintln!("rollmux serve: listen {path}: {e}");
+                return ExitCode::from(1);
+            }
+        },
     };
     let mut daemon = if opts.wall {
         Daemon::new_wall(opts.cfg)
@@ -211,6 +238,29 @@ fn serve(rest: &[String]) -> ExitCode {
                 return ExitCode::from(1);
             }
         }
+    }
+    if let Some(server) = server {
+        // Socket mode: the arbiter loop owns the daemon until some
+        // tenant issues `shutdown`.
+        return match server.run(&mut daemon) {
+            Ok(ts) => {
+                eprintln!(
+                    "rollmux serve: {} connections, {} lines in, {} routed, \
+                     {} dropped (slow), {} dropped (gone)",
+                    ts.connections,
+                    ts.lines_in,
+                    ts.lines_routed,
+                    ts.lines_dropped_slow,
+                    ts.lines_dropped_gone
+                );
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("rollmux serve: socket: {e}");
+                let _ = daemon.flush();
+                ExitCode::from(1)
+            }
+        };
     }
     let stdin = std::io::stdin();
     let mut lock = stdin.lock();

@@ -42,9 +42,11 @@ use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use crate::coordinator::inter::InterGroupScheduler;
+use crate::coordinator::orchestrator::IntraPolicyKind;
+use crate::coordinator::repair::MemberFate;
 use crate::metrics::sim_result_json;
 use crate::runtime::driver::{drive_group, plan_direct_job};
-use crate::sim::engine::{SimConfig, Simulator};
+use crate::sim::engine::{SimConfig, Simulator, WorldEvent};
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::workload::job::{JobSpec, PhaseSpec};
 
@@ -74,6 +76,15 @@ pub struct DaemonConfig {
     /// Wall backend only: virtual seconds -> wall seconds scale for the
     /// drain-time drive.
     pub time_scale: f64,
+    /// Event-push bound (ISSUE 8): max events delivered to one
+    /// subscriber per command; the excess is counted in
+    /// `DaemonStats::events_dropped`, never blocking the engine.
+    pub event_buf: usize,
+    /// Per-tenant admission fairness (ISSUE 8): max queued jobs any one
+    /// tenant may hold (0 = no per-tenant cap). A tenant at its cap is
+    /// rejected with `backpressure` even while the global queue has
+    /// room, so one chatty tenant cannot starve the rest.
+    pub tenant_cap: usize,
 }
 
 impl Default for DaemonConfig {
@@ -88,6 +99,8 @@ impl Default for DaemonConfig {
             repair_s: 300.0,
             sync_every: 8,
             time_scale: 1e-3,
+            event_buf: 32,
+            tenant_cap: 0,
         }
     }
 }
@@ -220,6 +233,13 @@ impl Journal {
     pub fn seq(&self) -> u64 {
         self.seq
     }
+
+    /// Frames appended but not yet fsynced. Zero after every flush
+    /// point (drain, shutdown, EOF) regardless of `sync_every` — the
+    /// regression surface for kill-after-ack durability.
+    pub fn pending_frames(&self) -> usize {
+        self.pending
+    }
 }
 
 /// What executes admitted jobs.
@@ -240,6 +260,8 @@ struct Pending {
     spec: JobSpec,
     attempts: u32,
     next_try_s: f64,
+    /// Issuing tenant — pumped responses route back to the owner.
+    tenant: u32,
 }
 
 /// Admission / rejection / repair counters — the daemon-level half of
@@ -253,7 +275,28 @@ pub struct DaemonStats {
     pub rejected_infeasible: usize,
     pub rejected_invalid: usize,
     pub escalations: usize,
+    /// Accepted live reconfigurations (ISSUE 8).
+    pub reconfigs: usize,
+    /// Live jobs displaced (spilled) by group-cap shrinks.
+    pub displaced: usize,
+    /// Events delivered to subscribers via the push channel.
+    pub events_pushed: usize,
+    /// Events dropped by per-subscriber buffer overflow (never blocks
+    /// the engine; the counter is the overflow accounting).
+    pub events_dropped: usize,
 }
+
+/// A routed response line: (destination tenant, JSONL payload).
+/// Tenant 0 is the stdin session; socket tenants get ids from
+/// [`Daemon::next_tenant_base`].
+pub type Routed = (u32, String);
+
+// Event-class bits for `subscribe` masks.
+const EV_DONE: u32 = 1;
+const EV_FAULT: u32 = 2;
+const EV_REPAIR: u32 = 4;
+const EV_RECONFIG: u32 = 8;
+const EV_ALL: u32 = EV_DONE | EV_FAULT | EV_REPAIR | EV_RECONFIG;
 
 pub struct Daemon {
     cfg: DaemonConfig,
@@ -270,12 +313,24 @@ pub struct Daemon {
     shutdown: bool,
     /// Replay mode: suppress journaling (frames already on disk).
     replaying: bool,
+    /// Event-push subscribers: tenant -> event-class mask.
+    subs: BTreeMap<u32, u32>,
+    /// Daemon-level events (reconfig, wall completions) staged for the
+    /// end-of-command fanout, as (event-class bit, line) pairs.
+    turn_events: Vec<(u32, String)>,
+    /// Highest tenant id seen (stamped commands, live or replayed); the
+    /// transport allocates fresh ids above it after a restart.
+    max_tenant: u32,
 }
 
 impl Daemon {
     /// Daemon over the deterministic virtual cluster.
     pub fn new_virtual(cfg: DaemonConfig) -> Daemon {
-        let sim = Simulator::open(cfg.sim.clone(), InterGroupScheduler::new(cfg.sim.model));
+        let mut sim = Simulator::open(cfg.sim.clone(), InterGroupScheduler::new(cfg.sim.model));
+        // Record world events for the push channel. Recording is part of
+        // the deterministic state machine: replay re-records, so the
+        // push/drop counters replay bitwise.
+        sim.arm_events(true);
         Daemon::build(cfg, Backend::Virtual(Box::new(sim)))
     }
 
@@ -299,6 +354,9 @@ impl Daemon {
             drained: false,
             shutdown: false,
             replaying: false,
+            subs: BTreeMap::new(),
+            turn_events: Vec::new(),
+            max_tenant: 0,
         }
     }
 
@@ -325,8 +383,31 @@ impl Daemon {
         self.shutdown
     }
 
+    pub fn is_drained(&self) -> bool {
+        self.drained
+    }
+
     pub fn journal_seq(&self) -> u64 {
         self.journal.seq()
+    }
+
+    /// Journal frames not yet forced to disk (see
+    /// [`Journal::pending_frames`]).
+    pub fn journal_pending(&self) -> usize {
+        self.journal.pending_frames()
+    }
+
+    /// Whether a tenant currently holds a `subscribe` registration
+    /// (the transport synthesizes a journaled `unsub` on disconnect).
+    pub fn is_subscribed(&self, tenant: u32) -> bool {
+        self.subs.contains_key(&tenant)
+    }
+
+    /// First tenant id a transport may hand out: one past the highest
+    /// id ever journaled, so replayed sessions and fresh connections
+    /// never collide.
+    pub fn next_tenant_base(&self) -> u32 {
+        self.max_tenant + 1
     }
 
     /// Flush the journal (call on EOF / shutdown).
@@ -334,52 +415,93 @@ impl Daemon {
         self.journal.flush()
     }
 
-    /// Process one JSONL input line; returns the response lines to
-    /// emit. Malformed input is answered with a typed `err` line and
-    /// changes no state (and is never journaled).
+    /// Process one JSONL input line from the stdin session (tenant 0);
+    /// returns the response lines to emit, in order. Byte-compatible
+    /// with the pre-multiplexing daemon: tenant 0 commands are
+    /// journaled without a tenant stamp.
     pub fn handle_line(&mut self, line: &str) -> Vec<String> {
+        self.handle_from(0, line).into_iter().map(|(_, l)| l).collect()
+    }
+
+    /// Process one JSONL input line issued by `tenant`; returns routed
+    /// `(tenant, line)` responses — replies and rejections go to their
+    /// issuing tenant, pumped admissions to the queue entry's owner,
+    /// pushed events to each subscriber. Malformed input is answered
+    /// with a typed `err` line and changes no state (and is never
+    /// journaled).
+    ///
+    /// The caller (the socket arbiter) serializes concurrent tenants
+    /// into ONE total order before calling this; the journaled order IS
+    /// the semantics — replay reproduces it bitwise.
+    pub fn handle_from(&mut self, tenant: u32, line: &str) -> Vec<Routed> {
         let text = line.trim();
         if text.is_empty() {
             return Vec::new();
         }
-        let j = match Json::parse(text) {
+        let mut j = match Json::parse(text) {
             Ok(j) => j,
-            Err(e) => return vec![err_line(&format!("parse: {e}"))],
+            Err(e) => return vec![(tenant, err_line(&format!("parse: {e}")))],
         };
         let Some(cmd) = j.get("cmd").and_then(Json::as_str) else {
-            return vec![err_line("missing \"cmd\"")];
+            return vec![(tenant, err_line("missing \"cmd\""))];
         };
+        let cmd = cmd.to_string();
+        // Stamp the issuer so replay re-routes identically. Tenant 0
+        // (stdin) is left unstamped: legacy journals stay byte-exact.
+        if tenant != 0 {
+            j.set("tenant", num(f64::from(tenant)));
+        }
         // Write-ahead: journal accepted mutating commands before
         // applying them, so replay sees exactly the applied sequence.
-        if matches!(cmd, "admit" | "advance" | "fault" | "beat" | "cancel" | "drain") {
+        if matches!(
+            cmd.as_str(),
+            "admit" | "advance" | "fault" | "beat" | "cancel" | "drain" | "reconfig" | "subscribe"
+                | "unsub"
+        ) {
             if let Err(e) = self.journal.append("cmd", &j) {
-                return vec![err_line(&format!("journal: {e}"))];
+                return vec![(tenant, err_line(&format!("journal: {e}")))];
             }
         }
         self.apply(&j)
     }
 
     /// Dispatch an already-journaled command (also the replay path).
-    fn apply(&mut self, j: &Json) -> Vec<String> {
+    fn apply(&mut self, j: &Json) -> Vec<Routed> {
         let cmd = j.get("cmd").and_then(Json::as_str).unwrap_or("");
+        let tenant = j.get("tenant").and_then(Json::as_usize).unwrap_or(0) as u32;
+        self.max_tenant = self.max_tenant.max(tenant);
         if self.drained && !matches!(cmd, "stats" | "shutdown") {
-            return vec![err_line("drained: only stats/shutdown accepted")];
+            return vec![(tenant, err_line("drained: only stats/shutdown accepted"))];
         }
-        match cmd {
-            "admit" => self.cmd_admit(j),
-            "advance" => self.cmd_advance(j),
-            "fault" => self.cmd_fault(j),
-            "beat" => self.cmd_beat(j),
-            "cancel" => self.cmd_cancel(j),
-            "stats" => vec![self.stats_line()],
-            "drain" => self.cmd_drain(),
+        let mut out = match cmd {
+            "admit" => self.cmd_admit(j, tenant),
+            "advance" => self.cmd_advance(j, tenant),
+            "fault" => self.cmd_fault(j, tenant),
+            "beat" => self.cmd_beat(j, tenant),
+            "cancel" => self.cmd_cancel(j, tenant),
+            "reconfig" => self.cmd_reconfig(j, tenant),
+            "subscribe" => self.cmd_subscribe(j, tenant),
+            "unsub" => self.cmd_unsub(tenant),
+            "stats" => vec![(tenant, self.stats_line())],
+            "drain" => self.cmd_drain(tenant),
             "shutdown" => {
                 self.shutdown = true;
-                let _ = self.journal.flush();
-                vec![ok_line("shutdown", self.now())]
+                match self.journal.flush() {
+                    Ok(()) => vec![(tenant, ok_line("shutdown", self.now()))],
+                    // Surface the sync failure instead of acking a
+                    // shutdown whose journal tail may be lost.
+                    Err(e) => vec![(tenant, err_line(&format!("shutdown: journal flush: {e}")))],
+                }
             }
-            other => vec![err_line(&format!("unknown cmd {other:?}"))],
-        }
+            other => vec![(tenant, err_line(&format!("unknown cmd {other:?}")))],
+        };
+        // Push-channel fanout: every command boundary drains the
+        // engine's world events plus any daemon-level events staged
+        // this turn to each subscriber, bounded by `event_buf` per
+        // subscriber per command. Runs on replay too (routed lines are
+        // discarded there) so the push/drop counters replay bitwise.
+        self.fanout(&mut out);
+        out
     }
 
     fn now(&self) -> f64 {
@@ -400,21 +522,31 @@ impl Daemon {
     // Commands
     // ------------------------------------------------------------------
 
-    fn cmd_admit(&mut self, j: &Json) -> Vec<String> {
+    fn cmd_admit(&mut self, j: &Json, tenant: u32) -> Vec<Routed> {
         if self.draining {
             self.stats.rejected_invalid += 1;
-            return vec![err_line("draining: admission closed")];
+            return vec![(tenant, err_line("draining: admission closed"))];
         }
         let spec = match job_from_json(j.get("job")) {
             Ok(spec) => spec,
             Err(e) => {
                 self.stats.rejected_invalid += 1;
-                return vec![err_line(&format!("admit: {e}"))];
+                return vec![(tenant, err_line(&format!("admit: {e}")))];
             }
         };
         if self.seen_ids.contains(&spec.id) {
             self.stats.rejected_invalid += 1;
-            return vec![err_line(&format!("admit: duplicate job id {}", spec.id))];
+            return vec![(tenant, err_line(&format!("admit: duplicate job id {}", spec.id)))];
+        }
+        // Per-tenant fairness before the global cap: a tenant at its
+        // share is rejected even while the queue has room, so one
+        // chatty tenant cannot monopolize the bounded queue.
+        let tenant_held = self.queue.iter().filter(|p| p.tenant == tenant).count();
+        if self.cfg.tenant_cap > 0 && tenant_held >= self.cfg.tenant_cap {
+            self.stats.rejected_backpressure += 1;
+            let line = reject_line("backpressure", spec.id, self.now());
+            let _ = self.journal.append_note_if_live(self.replaying, &line);
+            return vec![(tenant, line.to_string())];
         }
         if self.queue.len() >= self.cfg.queue_cap {
             // Bounded queue: reject loudly instead of queueing
@@ -422,17 +554,18 @@ impl Daemon {
             self.stats.rejected_backpressure += 1;
             let line = reject_line("backpressure", spec.id, self.now());
             let _ = self.journal.append_note_if_live(self.replaying, &line);
-            return vec![line.to_string()];
+            return vec![(tenant, line.to_string())];
         }
         let id = spec.id;
         self.seen_ids.insert(id);
-        self.queue.push_back(Pending { spec, attempts: 0, next_try_s: self.now() });
+        self.queue.push_back(Pending { spec, attempts: 0, next_try_s: self.now(), tenant });
         let mut out = Vec::new();
         self.pump(false, &mut out);
         // Acknowledge the enqueue unless the pump already answered for
         // this job (admitted it, or timed it out).
         if !out_mentions(&out, id) {
-            out.push(
+            out.push((
+                tenant,
                 obj(vec![
                     ("ok", s("queued")),
                     ("job", num(id as f64)),
@@ -440,46 +573,47 @@ impl Daemon {
                     ("t", num(self.now())),
                 ])
                 .to_string(),
-            );
+            ));
         }
         out
     }
 
-    fn cmd_advance(&mut self, j: &Json) -> Vec<String> {
+    fn cmd_advance(&mut self, j: &Json, tenant: u32) -> Vec<Routed> {
         let Backend::Virtual(_) = &self.backend else {
-            return vec![err_line("advance: virtual backend only")];
+            return vec![(tenant, err_line("advance: virtual backend only"))];
         };
         let Some(dt) = j.get("dt").and_then(Json::as_f64).filter(|d| d.is_finite() && *d >= 0.0)
         else {
-            return vec![err_line("advance: need finite \"dt\" >= 0")];
+            return vec![(tenant, err_line("advance: need finite \"dt\" >= 0"))];
         };
         let deadline = self.now() + dt;
         if let Backend::Virtual(sim) = &mut self.backend {
             sim.step_until(deadline);
         }
         let mut out = Vec::new();
-        self.check_liveness(&mut out);
+        self.check_liveness(tenant, &mut out);
         self.pump(false, &mut out);
-        out.push(
+        out.push((
+            tenant,
             obj(vec![
                 ("ok", s("advance")),
                 ("t", num(self.now())),
                 ("outstanding", num(self.outstanding() as f64)),
             ])
             .to_string(),
-        );
+        ));
         out
     }
 
-    fn cmd_fault(&mut self, j: &Json) -> Vec<String> {
+    fn cmd_fault(&mut self, j: &Json, tenant: u32) -> Vec<Routed> {
         let Backend::Virtual(sim) = &mut self.backend else {
-            return vec![err_line("fault: virtual backend only")];
+            return vec![(tenant, err_line("fault: virtual backend only"))];
         };
         let kind = j.get("kind").and_then(Json::as_str).unwrap_or("");
         let gid = j.get("group").and_then(Json::as_usize);
         let node = j.get("node").and_then(Json::as_usize);
         let (Some(gid), Some(node)) = (gid, node) else {
-            return vec![err_line("fault: need \"group\" and \"node\"")];
+            return vec![(tenant, err_line("fault: need \"group\" and \"node\""))];
         };
         let ok = match kind {
             "crash" => {
@@ -490,10 +624,13 @@ impl Daemon {
                 let factor = j.get("factor").and_then(Json::as_f64).unwrap_or(1.5);
                 sim.inject_straggler(gid, node, factor)
             }
-            other => return vec![err_line(&format!("fault: unknown kind {other:?}"))],
+            other => return vec![(tenant, err_line(&format!("fault: unknown kind {other:?}")))],
         };
         if !ok {
-            return vec![err_line(&format!("fault: no such target group {gid} node {node}"))];
+            return vec![(
+                tenant,
+                err_line(&format!("fault: no such target group {gid} node {node}")),
+            )];
         }
         let line = obj(vec![
             ("ok", s("fault")),
@@ -503,27 +640,30 @@ impl Daemon {
             ("t", num(self.now())),
         ]);
         let _ = self.journal.append_note_if_live(self.replaying, &line);
-        vec![line.to_string()]
+        vec![(tenant, line.to_string())]
     }
 
-    fn cmd_beat(&mut self, j: &Json) -> Vec<String> {
+    fn cmd_beat(&mut self, j: &Json, tenant: u32) -> Vec<Routed> {
         let Some(gid) = j.get("group").and_then(Json::as_usize) else {
-            return vec![err_line("beat: need \"group\"")];
+            return vec![(tenant, err_line("beat: need \"group\""))];
         };
         let t = self.now();
         self.beats.insert(gid, t);
-        vec![obj(vec![("ok", s("beat")), ("group", num(gid as f64)), ("t", num(t))]).to_string()]
+        vec![(
+            tenant,
+            obj(vec![("ok", s("beat")), ("group", num(gid as f64)), ("t", num(t))]).to_string(),
+        )]
     }
 
-    fn cmd_cancel(&mut self, j: &Json) -> Vec<String> {
+    fn cmd_cancel(&mut self, j: &Json, tenant: u32) -> Vec<Routed> {
         let Some(id) = j.get("job").and_then(Json::as_usize) else {
-            return vec![err_line("cancel: need \"job\"")];
+            return vec![(tenant, err_line("cancel: need \"job\""))];
         };
         // Cancelling a queued job is a dequeue.
         if let Some(pos) = self.queue.iter().position(|p| p.spec.id == id) {
             self.queue.remove(pos);
             self.stats.cancelled += 1;
-            return vec![ok_job_line("cancel", id, self.now())];
+            return vec![(tenant, ok_job_line("cancel", id, self.now()))];
         }
         let ok = match &mut self.backend {
             Backend::Virtual(sim) => sim.cancel_job(id),
@@ -539,16 +679,16 @@ impl Daemon {
             }
         };
         if !ok {
-            return vec![err_line(&format!("cancel: no live job {id}"))];
+            return vec![(tenant, err_line(&format!("cancel: no live job {id}")))];
         }
         self.stats.cancelled += 1;
-        let mut out = vec![ok_job_line("cancel", id, self.now())];
+        let mut out = vec![(tenant, ok_job_line("cancel", id, self.now()))];
         // Cancellation frees capacity: give the queue a chance now.
         self.pump(false, &mut out);
         out
     }
 
-    fn cmd_drain(&mut self) -> Vec<String> {
+    fn cmd_drain(&mut self, tenant: u32) -> Vec<Routed> {
         self.draining = true;
         let mut out = Vec::new();
         // Let queued jobs in as in-flight work retires; reject the
@@ -572,7 +712,7 @@ impl Daemon {
                     self.stats.rejected_infeasible += 1;
                     let line = reject_line("infeasible", p.spec.id, self.now());
                     let _ = self.journal.append_note_if_live(self.replaying, &line);
-                    out.push(line.to_string());
+                    out.push((p.tenant, line.to_string()));
                 }
                 break;
             }
@@ -582,17 +722,337 @@ impl Daemon {
                 let res = sim.run_to_end();
                 sim_result_json(&res)
             }
-            Backend::Wall { sched: _, admitted } => drive_wall(&self.cfg, admitted),
+            Backend::Wall { sched: _, admitted } => {
+                let acct = drive_wall(&self.cfg, admitted);
+                // The wall backend has no engine clock: completions are
+                // only known at drain. Stage one `done` event per job,
+                // in id order, for the push channel.
+                let mut ids: Vec<usize> = admitted.iter().map(|w| w.spec.id).collect();
+                ids.sort_unstable();
+                for id in ids {
+                    self.turn_events.push((
+                        EV_DONE,
+                        obj(vec![
+                            ("event", s("done")),
+                            ("job", num(id as f64)),
+                            ("t", num(0.0)),
+                        ])
+                        .to_string(),
+                    ));
+                }
+                acct
+            }
         };
         let line = obj(vec![(
             "drained",
             obj(vec![("daemon", self.stats_json()), ("result", accounting)]),
         )]);
         let _ = self.journal.append_note_if_live(self.replaying, &line);
-        let _ = self.journal.flush();
         self.drained = true;
-        out.push(line.to_string());
+        out.push((tenant, line.to_string()));
+        // Force the final accounting's journal frames to disk even when
+        // the batch window (`sync_every`) has not filled — a kill right
+        // after the drained ack must not lose the tail. Surface the
+        // failure; do not swallow it.
+        if let Err(e) = self.journal.flush() {
+            out.push((tenant, err_line(&format!("drain: journal flush: {e}"))));
+        }
         out
+    }
+
+    // ------------------------------------------------------------------
+    // Live reconfiguration (ISSUE 8)
+    // ------------------------------------------------------------------
+
+    /// `{"cmd":"reconfig", ...}` — apply any subset of
+    /// `group_cap` / `gpu_cap` / `queue_cap` (0 = uncapped),
+    /// `intra` (policy name), `heartbeat` (seconds, 0 disables),
+    /// without a restart. Validation is atomic: every present knob is
+    /// checked before ANY is applied, so a rejected reconfig changes
+    /// nothing (and replays as the same rejection).
+    fn cmd_reconfig(&mut self, j: &Json, tenant: u32) -> Vec<Routed> {
+        if self.draining {
+            return vec![(tenant, err_line("reconfig: daemon is draining"))];
+        }
+        // ---- validate everything first ----
+        let cap_knob = |k: &str| -> Result<Option<Option<usize>>, String> {
+            match j.get(k) {
+                None => Ok(None),
+                Some(v) => {
+                    let n = v
+                        .as_f64()
+                        .filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0)
+                        .ok_or_else(|| format!("reconfig: {k} must be a non-negative integer"))?
+                        as usize;
+                    Ok(Some(if n == 0 { None } else { Some(n) }))
+                }
+            }
+        };
+        let group_cap = match cap_knob("group_cap") {
+            Ok(v) => v,
+            Err(e) => return vec![(tenant, err_line(&e))],
+        };
+        let gpu_cap = match cap_knob("gpu_cap") {
+            Ok(v) => v,
+            Err(e) => return vec![(tenant, err_line(&e))],
+        };
+        let queue_cap = match cap_knob("queue_cap") {
+            Ok(v) => v,
+            Err(e) => return vec![(tenant, err_line(&e))],
+        };
+        let heartbeat = match j.get("heartbeat") {
+            None => None,
+            Some(v) => match v.as_f64().filter(|x| x.is_finite() && *x >= 0.0) {
+                Some(x) => Some(x),
+                None => {
+                    return vec![(tenant, err_line("reconfig: heartbeat must be finite and >= 0"))]
+                }
+            },
+        };
+        let intra = match j.get("intra") {
+            None => None,
+            Some(v) => {
+                let Some(name) = v.as_str() else {
+                    return vec![(tenant, err_line("reconfig: intra must be a policy name"))];
+                };
+                match IntraPolicyKind::all().iter().find(|k| k.name() == name) {
+                    Some(k) => Some(*k),
+                    None => {
+                        return vec![(
+                            tenant,
+                            err_line(&format!("reconfig: unknown intra policy {name:?}")),
+                        )]
+                    }
+                }
+            }
+        };
+        if group_cap.is_none()
+            && gpu_cap.is_none()
+            && queue_cap.is_none()
+            && heartbeat.is_none()
+            && intra.is_none()
+        {
+            return vec![(
+                tenant,
+                err_line(
+                    "reconfig: need at least one of \
+                     group_cap/gpu_cap/queue_cap/intra/heartbeat",
+                ),
+            )];
+        }
+
+        // ---- apply (fixed order: the order is part of the replayed
+        // semantics) ----
+        let mut out: Vec<Routed> = Vec::new();
+        let mut applied: Vec<Json> = Vec::new();
+        let mut displaced = 0usize;
+
+        if let Some(cap) = queue_cap {
+            // 0 = unbounded. Shrinking evicts from the back (newest
+            // entries lose their seat; FIFO order of survivors is
+            // preserved) with explicit backpressure rejections.
+            let cap_n = cap.unwrap_or(usize::MAX);
+            self.cfg.queue_cap = cap_n;
+            while self.queue.len() > cap_n {
+                let p = self.queue.pop_back().expect("queue over cap is non-empty");
+                self.stats.rejected_backpressure += 1;
+                let line = reject_line("backpressure", p.spec.id, self.now());
+                let _ = self.journal.append_note_if_live(self.replaying, &line);
+                out.push((p.tenant, line.to_string()));
+            }
+            applied.push(s("queue_cap"));
+        }
+        if let Some(cap) = gpu_cap {
+            self.cfg.gpu_cap = cap.unwrap_or(0);
+            applied.push(s("gpu_cap"));
+        }
+        if let Some(win) = heartbeat {
+            self.cfg.heartbeat_timeout_s = win;
+            applied.push(s("heartbeat"));
+        }
+        if let Some(kind) = intra {
+            // The wall backend reads `cfg.sim.intra` at drain; the
+            // virtual engine holds its own config copy and live
+            // orchestrators, swapped mid-cycle (current dispatches
+            // finish; queued work re-dispatches under the new policy).
+            self.cfg.sim.intra = kind;
+            if let Backend::Virtual(sim) = &mut self.backend {
+                sim.set_intra_policy(kind);
+            }
+            applied.push(s("intra"));
+        }
+        if let Some(cap) = group_cap {
+            let outcomes = match &mut self.backend {
+                Backend::Virtual(sim) => sim.reconfig_group_cap(cap).unwrap_or_default(),
+                Backend::Wall { sched, admitted } => {
+                    let outcomes = sched.set_group_cap(cap);
+                    // Re-pin the displaced members' recorded placements
+                    // so the drain-time drive runs them where they now
+                    // live.
+                    for o in &outcomes {
+                        for fate in &o.fates {
+                            if let MemberFate::Spilled { job, decision } = fate {
+                                if let Some(w) =
+                                    admitted.iter_mut().find(|w| w.spec.id == *job)
+                                {
+                                    w.group = decision.group_id;
+                                    w.roll_nodes = decision.roll_nodes.clone();
+                                }
+                            }
+                        }
+                    }
+                    outcomes
+                }
+            };
+            for o in &outcomes {
+                displaced += o.fates.len();
+            }
+            applied.push(s("group_cap"));
+        }
+
+        self.stats.reconfigs += 1;
+        self.stats.displaced += displaced;
+        // Grace window (satellite: reconfig must not race the liveness
+        // sweep into a spurious escalation): re-seed every live group's
+        // beat to "now", exactly as group creation does.
+        let now = self.now();
+        if let Backend::Virtual(sim) = &self.backend {
+            for gid in sim.sched.group_ids() {
+                self.beats.insert(gid, now);
+            }
+        }
+        let ack = obj(vec![
+            ("ok", s("reconfig")),
+            ("applied", arr(applied.clone())),
+            ("displaced", num(displaced as f64)),
+            ("t", num(now)),
+        ]);
+        let _ = self.journal.append_note_if_live(self.replaying, &ack);
+        out.push((tenant, ack.to_string()));
+        // Stage the push-channel event before pumping so subscribers
+        // see the reconfig ahead of any admissions it unlocked.
+        self.turn_events.push((
+            EV_RECONFIG,
+            obj(vec![
+                ("event", s("reconfig")),
+                ("applied", arr(applied)),
+                ("displaced", num(displaced as f64)),
+                ("t", num(now)),
+            ])
+            .to_string(),
+        ));
+        // Raised caps may unlock queued work right now: the backoff
+        // schedule was computed against the OLD capacity, so every
+        // queued entry gets an immediate retrial.
+        for p in &mut self.queue {
+            p.next_try_s = now;
+        }
+        self.pump(false, &mut out);
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Event push (ISSUE 8)
+    // ------------------------------------------------------------------
+
+    /// `{"cmd":"subscribe","events":["done","fault","repair","reconfig"]}`
+    /// — register the issuing tenant for event push; no/empty `events`
+    /// means all classes. Idempotent: re-subscribing replaces the mask.
+    fn cmd_subscribe(&mut self, j: &Json, tenant: u32) -> Vec<Routed> {
+        let mut mask = 0u32;
+        let mut names: Vec<&str> = Vec::new();
+        match j.get("events").and_then(Json::as_arr) {
+            None => mask = EV_ALL,
+            Some(evs) if evs.is_empty() => mask = EV_ALL,
+            Some(evs) => {
+                for e in evs {
+                    let bit = match e.as_str() {
+                        Some("done") => EV_DONE,
+                        Some("fault") => EV_FAULT,
+                        Some("repair") => EV_REPAIR,
+                        Some("reconfig") => EV_RECONFIG,
+                        _ => {
+                            return vec![(
+                                tenant,
+                                err_line(&format!(
+                                    "subscribe: unknown event class {}",
+                                    e.to_string()
+                                )),
+                            )]
+                        }
+                    };
+                    mask |= bit;
+                }
+            }
+        }
+        for (bit, name) in
+            [(EV_DONE, "done"), (EV_FAULT, "fault"), (EV_REPAIR, "repair"), (EV_RECONFIG, "reconfig")]
+        {
+            if mask & bit != 0 {
+                names.push(name);
+            }
+        }
+        self.subs.insert(tenant, mask);
+        vec![(
+            tenant,
+            obj(vec![
+                ("ok", s("subscribe")),
+                ("events", arr(names.into_iter().map(s).collect())),
+                ("t", num(self.now())),
+            ])
+            .to_string(),
+        )]
+    }
+
+    /// `{"cmd":"unsub"}` — drop the issuing tenant's subscription (the
+    /// transport synthesizes this on disconnect so replay stops pushing
+    /// to a connection that no longer exists). Idempotent.
+    fn cmd_unsub(&mut self, tenant: u32) -> Vec<Routed> {
+        let was = self.subs.remove(&tenant).is_some();
+        vec![(
+            tenant,
+            obj(vec![
+                ("ok", s("unsub")),
+                ("was_subscribed", Json::Bool(was)),
+                ("t", num(self.now())),
+            ])
+            .to_string(),
+        )]
+    }
+
+    /// End-of-command fanout: drain the engine's recorded world events
+    /// plus staged daemon events, deliver to each subscriber up to
+    /// `event_buf` lines, count the overflow. Pure function of the
+    /// command sequence — replay reproduces `events_pushed` /
+    /// `events_dropped` bitwise.
+    fn fanout(&mut self, out: &mut Vec<Routed>) {
+        let mut evs: Vec<(u32, String)> = Vec::new();
+        if let Backend::Virtual(sim) = &mut self.backend {
+            for we in sim.take_world_events() {
+                evs.push(world_event_line(&we));
+            }
+        }
+        evs.append(&mut self.turn_events);
+        if evs.is_empty() || self.subs.is_empty() {
+            return;
+        }
+        for (&tenant, &mask) in &self.subs {
+            let mut sent = 0usize;
+            for (bit, line) in &evs {
+                if mask & bit == 0 {
+                    continue;
+                }
+                if sent < self.cfg.event_buf {
+                    sent += 1;
+                    self.stats.events_pushed += 1;
+                    out.push((tenant, line.clone()));
+                } else {
+                    // Bounded buffer: the engine never blocks on a slow
+                    // subscriber; the drop is accounted instead.
+                    self.stats.events_dropped += 1;
+                }
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -602,7 +1062,7 @@ impl Daemon {
     /// Try to admit from the queue head (FIFO: head-of-line blocking is
     /// deliberate — admission order is part of the determinism
     /// contract). `ignore_backoff` is the drain path.
-    fn pump(&mut self, ignore_backoff: bool, out: &mut Vec<String>) {
+    fn pump(&mut self, ignore_backoff: bool, out: &mut Vec<Routed>) {
         loop {
             let now = self.now();
             let Some(head) = self.queue.front() else {
@@ -612,6 +1072,7 @@ impl Daemon {
                 return;
             }
             let spec = head.spec.clone();
+            let owner = head.tenant;
             match self.try_admit(&spec) {
                 Ok((gid, nodes)) => {
                     self.queue.pop_front();
@@ -624,7 +1085,7 @@ impl Daemon {
                         ("t", num(now)),
                     ]);
                     let _ = self.journal.append_note_if_live(self.replaying, &line);
-                    out.push(line.to_string());
+                    out.push((owner, line.to_string()));
                 }
                 Err(()) => {
                     let head = self.queue.front_mut().expect("head still queued");
@@ -635,7 +1096,7 @@ impl Daemon {
                         self.stats.rejected_timeout += 1;
                         let line = reject_line("timeout", p.spec.id, now);
                         let _ = self.journal.append_note_if_live(self.replaying, &line);
-                        out.push(line.to_string());
+                        out.push((p.tenant, line.to_string()));
                         continue;
                     }
                     // Exponential backoff before the next trial.
@@ -690,7 +1151,7 @@ impl Daemon {
     /// Heartbeat sweep: a live group whose last beat is older than the
     /// window is treated as a silent node failure and escalated through
     /// the same `repair_node_crash` surgery the chaos tier uses.
-    fn check_liveness(&mut self, out: &mut Vec<String>) {
+    fn check_liveness(&mut self, tenant: u32, out: &mut Vec<Routed>) {
         if self.cfg.heartbeat_timeout_s <= 0.0 {
             return;
         }
@@ -716,7 +1177,7 @@ impl Daemon {
                     ("t", num(now)),
                 ]);
                 let _ = self.journal.append_note_if_live(self.replaying, &line);
-                out.push(line.to_string());
+                out.push((tenant, line.to_string()));
             } else {
                 // Group vanished between sweep and surgery: it is no
                 // longer our problem; the next sweep re-seeds its beat
@@ -744,6 +1205,15 @@ impl Daemon {
                 ]),
             ),
             ("escalations", num(self.stats.escalations as f64)),
+            ("reconfigs", num(self.stats.reconfigs as f64)),
+            ("displaced", num(self.stats.displaced as f64)),
+            (
+                "events",
+                obj(vec![
+                    ("pushed", num(self.stats.events_pushed as f64)),
+                    ("dropped", num(self.stats.events_dropped as f64)),
+                ]),
+            ),
         ])
     }
 
@@ -846,10 +1316,64 @@ fn reject_line(why: &str, job: usize, t: f64) -> Json {
     obj(vec![("reject", s(why)), ("job", num(job as f64)), ("t", num(t))])
 }
 
-fn out_mentions(out: &[String], id: usize) -> bool {
+fn out_mentions(out: &[Routed], id: usize) -> bool {
     let pat = format!("\"job\":{id},");
     let tail = format!("\"job\":{id}}}");
-    out.iter().any(|l| l.contains(&pat) || l.ends_with(&tail))
+    out.iter().any(|(_, l)| l.contains(&pat) || l.ends_with(&tail))
+}
+
+/// Render an engine world event as a push-channel line, tagged with its
+/// event-class bit for subscription filtering.
+fn world_event_line(we: &WorldEvent) -> (u32, String) {
+    match we {
+        WorldEvent::Done { t, job } => (
+            EV_DONE,
+            obj(vec![("event", s("done")), ("job", num(*job as f64)), ("t", num(*t))]).to_string(),
+        ),
+        WorldEvent::Crash { t, gid, node } => (
+            EV_FAULT,
+            obj(vec![
+                ("event", s("crash")),
+                ("group", num(*gid as f64)),
+                ("node", num(*node as f64)),
+                ("t", num(*t)),
+            ])
+            .to_string(),
+        ),
+        WorldEvent::Straggle { t, gid, node, factor } => (
+            EV_FAULT,
+            obj(vec![
+                ("event", s("straggle")),
+                ("group", num(*gid as f64)),
+                ("node", num(*node as f64)),
+                ("factor", num(*factor)),
+                ("t", num(*t)),
+            ])
+            .to_string(),
+        ),
+        WorldEvent::Repair { t, job, gid, to_gid, repinned } => (
+            EV_REPAIR,
+            obj(vec![
+                ("event", s("repair")),
+                ("job", num(*job as f64)),
+                ("from", num(*gid as f64)),
+                ("to", num(*to_gid as f64)),
+                ("repinned", Json::Bool(*repinned)),
+                ("t", num(*t)),
+            ])
+            .to_string(),
+        ),
+        WorldEvent::NodeUp { t, gid, node } => (
+            EV_REPAIR,
+            obj(vec![
+                ("event", s("nodeup")),
+                ("group", num(*gid as f64)),
+                ("node", num(*node as f64)),
+                ("t", num(*t)),
+            ])
+            .to_string(),
+        ),
+    }
 }
 
 /// Decode an admission request into a [`JobSpec`]. The daemon pins
@@ -1181,6 +1705,297 @@ mod tests {
         // The daemon keeps accepting work.
         let out = b.handle_line(&admit_line(7, 50.0, 40.0, 8, 2));
         assert!(out[0].contains("\"ok\""), "{out:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // ------------------------------------------------------------------
+    // ISSUE 8: live reconfiguration, multi-tenant routing, event push
+    // ------------------------------------------------------------------
+
+    /// An admit line with a caller-chosen SLO (loose SLOs pack into a
+    /// shared group, which group-cap tests rely on).
+    fn admit_line_slo(id: usize, t_roll: f64, t_train: f64, slo: f64, iters: usize) -> String {
+        format!(
+            "{{\"cmd\":\"admit\",\"job\":{{\"id\":{id},\"n_iters\":{iters},\"slo\":{slo},\
+             \"n_roll_gpus\":8,\"n_train_gpus\":8,\"params_b\":7.0,\
+             \"t_roll\":{t_roll},\"t_train\":{t_train}}}}}"
+        )
+    }
+
+    #[test]
+    fn reconfig_raises_gpu_cap_and_admits_queued_work() {
+        let cfg = DaemonConfig { gpu_cap: 16, retry_base_s: 1e9, ..Default::default() };
+        let mut d = Daemon::new_virtual(cfg);
+        let out = d.handle_line(&admit_line(0, 100.0, 80.0, 8, 4));
+        assert!(out[0].contains("\"ok\":\"admit\""), "{out:?}");
+        let out = d.handle_line(&admit_line(1, 100.0, 80.0, 8, 4));
+        assert!(out[0].contains("\"ok\":\"queued\""), "{out:?}");
+        // Raising the cap live must pump the queued job in immediately
+        // (backoff notwithstanding: the pump retries on state change).
+        let out = d.handle_line("{\"cmd\":\"reconfig\",\"gpu_cap\":64}");
+        assert!(
+            out.iter().any(|l| l.contains("\"ok\":\"reconfig\"")),
+            "reconfig must ack: {out:?}"
+        );
+        assert!(
+            out.iter().any(|l| l.contains("\"ok\":\"admit\"") && l.contains("\"job\":1")),
+            "raised cap must admit the queued job: {out:?}"
+        );
+        assert_eq!(d.stats().reconfigs, 1);
+    }
+
+    #[test]
+    fn reconfig_queue_cap_shrink_evicts_newest_with_backpressure() {
+        let cfg = DaemonConfig { gpu_cap: 16, queue_cap: 8, retry_base_s: 1e9, ..Default::default() };
+        let mut d = Daemon::new_virtual(cfg);
+        d.handle_line(&admit_line(0, 100.0, 80.0, 8, 4)); // admitted
+        for id in 1..=3 {
+            let out = d.handle_line(&admit_line(id, 100.0, 80.0, 8, 4));
+            assert!(out[0].contains("\"ok\":\"queued\""), "{out:?}");
+        }
+        let out = d.handle_line("{\"cmd\":\"reconfig\",\"queue_cap\":1}");
+        // Newest entries (3, then 2) lose their seat; 1 survives.
+        let rejects: Vec<&String> =
+            out.iter().filter(|l| l.contains("\"reject\":\"backpressure\"")).collect();
+        assert_eq!(rejects.len(), 2, "{out:?}");
+        assert!(rejects[0].contains("\"job\":3"), "LIFO eviction: {out:?}");
+        assert!(rejects[1].contains("\"job\":2"), "LIFO eviction: {out:?}");
+        assert_eq!(d.stats().rejected_backpressure, 2);
+        // The shrunk cap bites new admissions too.
+        let out = d.handle_line(&admit_line(9, 100.0, 80.0, 8, 4));
+        assert!(out[0].contains("\"reject\":\"backpressure\""), "{out:?}");
+    }
+
+    #[test]
+    fn reconfig_rejects_invalid_without_partial_application() {
+        let mut d = Daemon::new_virtual(DaemonConfig::default());
+        // One bad knob poisons the whole command: gpu_cap must NOT be
+        // applied even though it parses.
+        let out =
+            d.handle_line("{\"cmd\":\"reconfig\",\"gpu_cap\":8,\"intra\":\"no-such-policy\"}");
+        assert!(out[0].contains("\"err\""), "{out:?}");
+        assert_eq!(d.stats().reconfigs, 0);
+        let out = d.handle_line("{\"cmd\":\"reconfig\"}");
+        assert!(out[0].contains("\"err\""), "empty reconfig must err: {out:?}");
+        // gpu_cap unchanged (0 = unbounded): a 4-group burst fits.
+        for id in 0..4 {
+            let out = d.handle_line(&admit_line(id, 100.0, 80.0, 8, 2));
+            assert!(out[0].contains("\"ok\":\"admit\""), "{out:?}");
+        }
+    }
+
+    #[test]
+    fn reconfig_intra_swap_applies_live() {
+        let mut d = Daemon::new_virtual(DaemonConfig::default());
+        // Loose SLOs so both jobs share one group and the policy swap
+        // has a live rotation to rebuild.
+        d.handle_line(&admit_line_slo(0, 100.0, 80.0, 6.0, 6));
+        d.handle_line(&admit_line_slo(1, 100.0, 80.0, 6.0, 6));
+        d.handle_line("{\"cmd\":\"advance\",\"dt\":150}");
+        let out = d.handle_line("{\"cmd\":\"reconfig\",\"intra\":\"round-robin\"}");
+        assert!(
+            out.iter().any(|l| l.contains("\"ok\":\"reconfig\"") && l.contains("intra")),
+            "{out:?}"
+        );
+        let out = d.handle_line("{\"cmd\":\"drain\"}");
+        let j = Json::parse(out.last().unwrap()).unwrap();
+        let res = j.get("drained").unwrap().get("result").unwrap();
+        assert_eq!(res.get("outcomes").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn reconfig_group_cap_shrink_displaces_newest_member() {
+        let mut d = Daemon::new_virtual(DaemonConfig::default());
+        d.handle_line(&admit_line_slo(0, 100.0, 80.0, 6.0, 8));
+        let out = d.handle_line(&admit_line_slo(1, 100.0, 80.0, 6.0, 8));
+        assert!(out[0].contains("\"ok\":\"admit\""), "{out:?}");
+        let j0 = Json::parse(&d.handle_line("{\"cmd\":\"stats\"}")[0]).unwrap();
+        let groups_before =
+            j0.get("stats").unwrap().get("groups").unwrap().as_usize().unwrap();
+        assert_eq!(groups_before, 1, "loose-SLO jobs must pack into one group");
+        let out = d.handle_line("{\"cmd\":\"reconfig\",\"group_cap\":1}");
+        let ack = out.iter().find(|l| l.contains("\"ok\":\"reconfig\"")).expect("ack");
+        assert!(ack.contains("\"displaced\":1"), "{ack}");
+        assert_eq!(d.stats().displaced, 1);
+        // The displaced member got a new placement; both jobs still
+        // finish at drain.
+        let out = d.handle_line("{\"cmd\":\"drain\"}");
+        let j = Json::parse(out.last().unwrap()).unwrap();
+        let res = j.get("drained").unwrap().get("result").unwrap();
+        assert_eq!(res.get("outcomes").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn subscribe_pushes_done_events_with_bounded_overflow() {
+        let cfg = DaemonConfig { event_buf: 2, ..Default::default() };
+        let mut d = Daemon::new_virtual(cfg);
+        let out = d.handle_line("{\"cmd\":\"subscribe\",\"events\":[\"done\"]}");
+        assert!(out[0].contains("\"ok\":\"subscribe\""), "{out:?}");
+        for id in 0..4 {
+            d.handle_line(&admit_line(id, 10.0, 10.0, 8, 1));
+        }
+        // All four jobs retire inside ONE advance: 2 fit the buffer,
+        // 2 overflow — counted, never blocking.
+        let out = d.handle_line("{\"cmd\":\"advance\",\"dt\":100000}");
+        let pushed: Vec<&String> =
+            out.iter().filter(|l| l.contains("\"event\":\"done\"")).collect();
+        assert_eq!(pushed.len(), 2, "{out:?}");
+        assert_eq!(d.stats().events_pushed, 2);
+        assert_eq!(d.stats().events_dropped, 2);
+        // Unsubscribe stops the stream.
+        let out = d.handle_line("{\"cmd\":\"unsub\"}");
+        assert!(out[0].contains("\"was_subscribed\":true"), "{out:?}");
+    }
+
+    #[test]
+    fn subscribe_mask_filters_event_classes() {
+        let mut d = Daemon::new_virtual(DaemonConfig::default());
+        let out = d.handle_line("{\"cmd\":\"subscribe\",\"events\":[\"reconfig\"]}");
+        assert!(out[0].contains("\"ok\":\"subscribe\""), "{out:?}");
+        d.handle_line(&admit_line(0, 10.0, 10.0, 8, 1));
+        let out = d.handle_line("{\"cmd\":\"advance\",\"dt\":100000}");
+        assert!(
+            !out.iter().any(|l| l.contains("\"event\":\"done\"")),
+            "done events are filtered out: {out:?}"
+        );
+        let out = d.handle_line("{\"cmd\":\"reconfig\",\"gpu_cap\":32}");
+        assert!(
+            out.iter().any(|l| l.contains("\"event\":\"reconfig\"")),
+            "reconfig events pass the mask: {out:?}"
+        );
+    }
+
+    #[test]
+    fn heartbeat_grace_after_reconfig_prevents_spurious_escalation() {
+        let mk = || DaemonConfig {
+            heartbeat_timeout_s: 300.0,
+            repair_s: 60.0,
+            ..Default::default()
+        };
+        // Control: the group goes silent past the window -> escalated.
+        let mut a = Daemon::new_virtual(mk());
+        a.handle_line(&admit_line(0, 100.0, 80.0, 8, 20));
+        a.handle_line("{\"cmd\":\"advance\",\"dt\":100}"); // seeds beat
+        a.handle_line("{\"cmd\":\"advance\",\"dt\":250}");
+        a.handle_line("{\"cmd\":\"advance\",\"dt\":250}");
+        assert_eq!(a.stats().escalations, 1);
+        // Same timeline, but a reconfig lands mid-way: it re-seeds the
+        // beat (grace window), so the sweep must NOT escalate.
+        let mut b = Daemon::new_virtual(mk());
+        b.handle_line(&admit_line(0, 100.0, 80.0, 8, 20));
+        b.handle_line("{\"cmd\":\"advance\",\"dt\":100}");
+        b.handle_line("{\"cmd\":\"advance\",\"dt\":250}");
+        b.handle_line("{\"cmd\":\"reconfig\",\"gpu_cap\":128}");
+        b.handle_line("{\"cmd\":\"advance\",\"dt\":250}");
+        assert_eq!(b.stats().escalations, 0, "reconfig must grant a liveness grace window");
+    }
+
+    #[test]
+    fn shutdown_and_drain_force_pending_frames_to_disk() {
+        let dir = std::env::temp_dir().join(format!("rollmuxd_f_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flush.journal");
+        let _ = std::fs::remove_file(&path);
+        // sync_every far above the session length: without the
+        // drain/shutdown flush every frame would still be pending when
+        // a kill -9 lands right after the ack.
+        let cfg = DaemonConfig { sync_every: 10_000, ..Default::default() };
+        let mut d = Daemon::new_virtual(cfg.clone());
+        d.attach_journal(&path).unwrap();
+        d.handle_line(&admit_line(0, 100.0, 80.0, 8, 2));
+        assert!(d.journal_pending() > 0, "batched frames should be pending");
+        d.handle_line("{\"cmd\":\"drain\"}");
+        assert_eq!(d.journal_pending(), 0, "drain must fsync below sync_every");
+        d.handle_line("{\"cmd\":\"shutdown\"}");
+        assert_eq!(d.journal_pending(), 0, "shutdown must fsync below sync_every");
+        drop(d); // no explicit flush: the acks already guaranteed durability
+        let mut b = Daemon::new_virtual(cfg);
+        let replayed = b.attach_journal(&path).unwrap();
+        assert_eq!(replayed, 2, "admit + drain survive the kill");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tenant_cap_enforces_admission_fairness() {
+        let cfg = DaemonConfig {
+            gpu_cap: 16,
+            queue_cap: 8,
+            tenant_cap: 1,
+            retry_base_s: 1e9,
+            ..Default::default()
+        };
+        let mut d = Daemon::new_virtual(cfg);
+        let out = d.handle_from(1, &admit_line(0, 100.0, 80.0, 8, 4));
+        assert!(out[0].1.contains("\"ok\":\"admit\""), "{out:?}");
+        let out = d.handle_from(1, &admit_line(1, 100.0, 80.0, 8, 4));
+        assert!(out[0].1.contains("\"ok\":\"queued\""), "{out:?}");
+        // Tenant 1 already holds its queue share: bounced even though
+        // the global queue has 7 free seats.
+        let out = d.handle_from(1, &admit_line(2, 100.0, 80.0, 8, 4));
+        assert!(out[0].1.contains("\"reject\":\"backpressure\""), "{out:?}");
+        // Tenant 2 is unaffected.
+        let out = d.handle_from(2, &admit_line(3, 100.0, 80.0, 8, 4));
+        assert!(out[0].1.contains("\"ok\":\"queued\""), "{out:?}");
+        assert_eq!(d.next_tenant_base(), 3);
+    }
+
+    #[test]
+    fn routed_responses_reach_the_owning_tenant() {
+        let cfg = DaemonConfig { gpu_cap: 16, retry_base_s: 100.0, ..Default::default() };
+        let mut d = Daemon::new_virtual(cfg);
+        let out = d.handle_from(1, &admit_line(0, 100.0, 80.0, 8, 2));
+        assert_eq!(out[0].0, 1, "{out:?}");
+        let out = d.handle_from(2, &admit_line(1, 100.0, 80.0, 8, 2));
+        assert_eq!(out[0].0, 2);
+        assert!(out[0].1.contains("\"ok\":\"queued\""), "{out:?}");
+        // Tenant 1 drives time forward; when capacity frees, tenant 2's
+        // queued job is admitted — and the admit line routes to 2, not
+        // to the advancing tenant.
+        let mut admit_dst = None;
+        for _ in 0..40 {
+            let out = d.handle_from(1, "{\"cmd\":\"advance\",\"dt\":200}");
+            for (dst, l) in &out {
+                if l.contains("\"ok\":\"admit\"") && l.contains("\"job\":1") {
+                    admit_dst = Some(*dst);
+                }
+                if l.contains("\"ok\":\"advance\"") {
+                    assert_eq!(*dst, 1);
+                }
+            }
+            if admit_dst.is_some() {
+                break;
+            }
+        }
+        assert_eq!(admit_dst, Some(2), "pumped admit must route to the queue entry's owner");
+    }
+
+    #[test]
+    fn multi_tenant_session_replays_bitwise() {
+        let dir = std::env::temp_dir().join(format!("rollmuxd_mt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mt.journal");
+        let _ = std::fs::remove_file(&path);
+
+        let mut a = Daemon::new_virtual(DaemonConfig::default());
+        a.attach_journal(&path).unwrap();
+        let mut live: Vec<Routed> = Vec::new();
+        live.extend(a.handle_from(1, "{\"cmd\":\"subscribe\"}"));
+        live.extend(a.handle_from(1, &admit_line(0, 100.0, 80.0, 8, 4)));
+        live.extend(a.handle_from(2, &admit_line(1, 80.0, 60.0, 8, 4)));
+        live.extend(a.handle_from(2, "{\"cmd\":\"reconfig\",\"gpu_cap\":64}"));
+        live.extend(a.handle_from(1, "{\"cmd\":\"advance\",\"dt\":500}"));
+        live.extend(a.handle_from(2, "{\"cmd\":\"unsub\"}"));
+        let live_stats = a.handle_from(1, "{\"cmd\":\"stats\"}");
+        a.flush().unwrap();
+        drop(a);
+
+        let mut b = Daemon::new_virtual(DaemonConfig::default());
+        let replayed = b.attach_journal(&path).unwrap();
+        assert_eq!(replayed, 6);
+        assert_eq!(b.handle_from(1, "{\"cmd\":\"stats\"}"), live_stats);
+        assert!(b.is_subscribed(1), "tenant 1's subscription survives the restart");
+        assert!(!b.is_subscribed(2));
+        assert_eq!(b.next_tenant_base(), 3);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

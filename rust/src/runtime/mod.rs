@@ -21,12 +21,19 @@
 //! DES engine as a deterministic virtual cluster or by the wall-clock
 //! driver (DESIGN.md §14).
 
+//! [`transport`] (ISSUE 8) adds the multi-tenant socket front-end:
+//! concurrent JSONL clients merged into one journaled total order by a
+//! single arbiter thread, with per-tenant response routing and bounded
+//! event push (DESIGN.md §16).
+
 pub mod daemon;
 pub mod driver;
 pub mod manifest;
 pub mod model;
+pub mod transport;
 
-pub use daemon::{Daemon, DaemonConfig, DaemonStats, Journal};
+pub use daemon::{Daemon, DaemonConfig, DaemonStats, Journal, Routed};
+pub use transport::{SocketServer, TransportStats};
 pub use driver::{drive_group, plan_direct_job, DriveResult, IterPlan, JobPlan};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 pub use model::{ModelRuntime, RolloutOut, TrainOut, TrainState};

@@ -1,0 +1,238 @@
+//! Multi-tenant Unix-socket transport for `rollmuxd` (ISSUE 8,
+//! DESIGN.md §16).
+//!
+//! `rollmux serve --listen <path>` accepts any number of concurrent
+//! JSONL clients. Each connection gets a **tenant id** and a pair of
+//! threads (blocking reader, bounded writer); a single **arbiter**
+//! thread — the caller of [`SocketServer::run`] — merges all inbound
+//! lines into ONE total order and feeds them to
+//! [`Daemon::handle_from`]. The daemon journals that merged order, so
+//! *the journaled order IS the semantics*: replay after a crash
+//! reproduces exactly the interleaving the arbiter chose, bitwise,
+//! regardless of how the tenants' writes raced on the wire.
+//!
+//! Backpressure, both directions:
+//!
+//!  * **Inbound** — readers feed a bounded channel; a tenant that
+//!    floods commands blocks on its own socket while the arbiter
+//!    catches up (the kernel socket buffer plus `INBOUND_DEPTH` lines
+//!    is the hard cap on unprocessed input).
+//!  * **Outbound** — each connection's writer drains a bounded queue;
+//!    a slow reader overflows it and loses response lines (counted in
+//!    [`TransportStats::lines_dropped_slow`], never blocking the
+//!    arbiter). The journal keeps the authoritative record; a client
+//!    that cares can replay it.
+//!
+//! Disconnects synthesize a journaled `unsub` for subscribed tenants,
+//! so a post-crash replay stops pushing events to a connection that no
+//! longer exists — and the synthesized command replays like any other.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::thread;
+use std::time::Duration;
+
+use crate::runtime::daemon::Daemon;
+
+/// Unprocessed inbound lines buffered between the readers and the
+/// arbiter (shared across all connections).
+const INBOUND_DEPTH: usize = 256;
+/// Response lines buffered per connection before a slow reader starts
+/// losing them.
+const OUTBOUND_DEPTH: usize = 1024;
+/// Arbiter poll cadence while idle (accept + inbound are both polled).
+const POLL: Duration = Duration::from_millis(25);
+
+/// Transport-level accounting (socket plumbing only — the daemon's own
+/// `DaemonStats` carries the journaled, replay-identical counters).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransportStats {
+    /// Connections accepted over the server's lifetime.
+    pub connections: usize,
+    /// Inbound command lines fed to the daemon.
+    pub lines_in: usize,
+    /// Response lines enqueued to some connection's writer.
+    pub lines_routed: usize,
+    /// Response lines lost to a slow reader's full outbound queue.
+    pub lines_dropped_slow: usize,
+    /// Response lines whose destination tenant had already hung up.
+    pub lines_dropped_gone: usize,
+}
+
+enum Inbound {
+    Line(u32, String),
+    Gone(u32),
+}
+
+struct Conn {
+    tenant: u32,
+    tx: SyncSender<String>,
+    stream: UnixStream,
+    writer: thread::JoinHandle<()>,
+    reader: thread::JoinHandle<()>,
+}
+
+/// A listening Unix socket, split from the serve loop so callers can
+/// bind (and fail fast on a bad path) before constructing the daemon.
+pub struct SocketServer {
+    listener: UnixListener,
+    path: PathBuf,
+}
+
+impl SocketServer {
+    /// Bind the listening socket, replacing any stale socket file from
+    /// a previous (crashed) daemon.
+    pub fn bind(path: &std::path::Path) -> std::io::Result<SocketServer> {
+        if path.exists() {
+            std::fs::remove_file(path)?;
+        }
+        let listener = UnixListener::bind(path)?;
+        listener.set_nonblocking(true)?;
+        Ok(SocketServer { listener, path: path.to_path_buf() })
+    }
+
+    /// Serve until some tenant issues `shutdown`. Single-threaded where
+    /// it matters: only this thread touches the daemon, so the merged
+    /// command order it journals is the one true order.
+    pub fn run(&self, daemon: &mut Daemon) -> std::io::Result<TransportStats> {
+        let mut stats = TransportStats::default();
+        let (in_tx, in_rx): (SyncSender<Inbound>, Receiver<Inbound>) =
+            sync_channel(INBOUND_DEPTH);
+        let mut conns: Vec<Conn> = Vec::new();
+        // Fresh ids start past everything the journal has seen, so a
+        // replayed tenant and a new connection never alias.
+        let mut next_tenant = daemon.next_tenant_base();
+
+        loop {
+            // Accept every connection currently pending.
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        let tenant = next_tenant;
+                        next_tenant += 1;
+                        stats.connections += 1;
+                        conns.push(spawn_conn(tenant, stream, in_tx.clone()));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) => return Err(e),
+                }
+            }
+
+            // Drain inbound traffic; fall back to a timed wait so the
+            // accept poll above keeps its cadence.
+            match in_rx.recv_timeout(POLL) {
+                Ok(Inbound::Line(tenant, line)) => {
+                    stats.lines_in += 1;
+                    let replies = daemon.handle_from(tenant, &line);
+                    route(&mut conns, replies, &mut stats);
+                }
+                Ok(Inbound::Gone(tenant)) => {
+                    // A vanished subscriber must stop receiving pushes
+                    // on replay too: journal the unsub on its behalf.
+                    if daemon.is_subscribed(tenant) && !daemon.is_drained() {
+                        let replies = daemon.handle_from(tenant, "{\"cmd\":\"unsub\"}");
+                        // The issuer is gone; anything routed elsewhere
+                        // (nothing, today) still flows.
+                        route(&mut conns, replies, &mut stats);
+                    }
+                    if let Some(pos) = conns.iter().position(|c| c.tenant == tenant) {
+                        let c = conns.remove(pos);
+                        finish_conn(c);
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+
+            if daemon.is_shutdown() {
+                break;
+            }
+        }
+
+        // Teardown: make the shutdown ack (and any other queued
+        // responses) reach their sockets before anything is torn down,
+        // then unblock the readers and reap them. Dropping the
+        // receiver FIRST is load-bearing: a reader blocked on a full
+        // inbound channel errors out instead of deadlocking its join.
+        daemon.flush()?;
+        drop(in_tx);
+        drop(in_rx);
+        for c in conns {
+            finish_conn(c);
+        }
+        Ok(stats)
+    }
+}
+
+impl Drop for SocketServer {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Close one connection: let the writer drain its queue, then unblock
+/// and reap the reader.
+fn finish_conn(c: Conn) {
+    drop(c.tx); // writer drains remaining lines, then exits
+    let _ = c.writer.join();
+    let _ = c.stream.shutdown(std::net::Shutdown::Both);
+    let _ = c.reader.join();
+}
+
+fn spawn_conn(tenant: u32, stream: UnixStream, in_tx: SyncSender<Inbound>) -> Conn {
+    let (out_tx, out_rx): (SyncSender<String>, Receiver<String>) = sync_channel(OUTBOUND_DEPTH);
+    let read_half = stream.try_clone().expect("clone unix stream (read half)");
+    let mut write_half = stream.try_clone().expect("clone unix stream (write half)");
+
+    let reader = thread::spawn(move || {
+        let mut r = BufReader::new(read_half);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match r.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    if in_tx.send(Inbound::Line(tenant, line.trim().to_string())).is_err() {
+                        return; // arbiter gone: nothing left to do
+                    }
+                }
+            }
+        }
+        let _ = in_tx.send(Inbound::Gone(tenant));
+    });
+
+    let writer = thread::spawn(move || {
+        while let Ok(l) = out_rx.recv() {
+            if write_half.write_all(l.as_bytes()).is_err()
+                || write_half.write_all(b"\n").is_err()
+            {
+                break;
+            }
+        }
+        let _ = write_half.flush();
+    });
+
+    Conn { tenant, tx: out_tx, stream, writer, reader }
+}
+
+/// Deliver routed daemon responses to their tenants' outbound queues.
+fn route(conns: &mut [Conn], replies: Vec<(u32, String)>, stats: &mut TransportStats) {
+    for (tenant, line) in replies {
+        let Some(c) = conns.iter().find(|c| c.tenant == tenant) else {
+            stats.lines_dropped_gone += 1;
+            continue;
+        };
+        match c.tx.try_send(line) {
+            Ok(()) => stats.lines_routed += 1,
+            // Slow reader: the bounded queue is full. Drop the line
+            // rather than stall every other tenant behind this one.
+            Err(TrySendError::Full(_)) => stats.lines_dropped_slow += 1,
+            Err(TrySendError::Disconnected(_)) => stats.lines_dropped_gone += 1,
+        }
+    }
+}

@@ -57,7 +57,7 @@ use crate::coordinator::group::Group;
 use crate::coordinator::inter::{Decision, InterGroupScheduler};
 use crate::coordinator::migration::MigrationPolicy;
 use crate::coordinator::orchestrator::{CorePhase, GroupOrchestrator, IntraPolicyKind};
-use crate::coordinator::repair::{self, MemberFate, RepairOutcome};
+use crate::coordinator::repair::{self, MemberFate, RepairOutcome, ShrinkOutcome};
 use crate::memory::switching::SwitchModel;
 use crate::sync::{sync_time_s, SyncScheme};
 use crate::util::rng::Rng;
@@ -88,6 +88,13 @@ pub trait GroupScheduler {
     fn repair_node_crash(&mut self, _gid: usize, _node: usize) -> Option<RepairOutcome> {
         None
     }
+    /// Live group-cap reconfiguration (ISSUE 8). The default reports "no
+    /// cap support" (`None`): baselines without a residency cap ignore
+    /// the reconfig. `InterGroupScheduler` overrides with the trim/spill
+    /// surgery (`set_group_cap`).
+    fn set_group_cap(&mut self, _cap: Option<usize>) -> Option<Vec<ShrinkOutcome>> {
+        None
+    }
 }
 
 impl GroupScheduler for InterGroupScheduler {
@@ -111,6 +118,9 @@ impl GroupScheduler for InterGroupScheduler {
     }
     fn repair_node_crash(&mut self, gid: usize, node: usize) -> Option<RepairOutcome> {
         InterGroupScheduler::repair_node_crash(self, gid, node)
+    }
+    fn set_group_cap(&mut self, cap: Option<usize>) -> Option<Vec<ShrinkOutcome>> {
+        Some(InterGroupScheduler::set_group_cap(self, cap))
     }
 }
 
@@ -138,6 +148,9 @@ impl<S: GroupScheduler + ?Sized> GroupScheduler for Box<S> {
     }
     fn repair_node_crash(&mut self, gid: usize, node: usize) -> Option<RepairOutcome> {
         (**self).repair_node_crash(gid, node)
+    }
+    fn set_group_cap(&mut self, cap: Option<usize>) -> Option<Vec<ShrinkOutcome>> {
+        (**self).set_group_cap(cap)
     }
 }
 
@@ -401,6 +414,28 @@ enum Ev {
     /// A crash victim's recovery delay elapsed: replay the in-flight
     /// iteration from its last checkpoint. (slot, epoch).
     Recover(usize, u32),
+}
+
+/// An externally observable engine occurrence (ISSUE 8 event push).
+/// Recorded only when armed via [`Simulator::arm_events`] — the daemon's
+/// virtual backend arms at construction and drains via
+/// [`Simulator::take_world_events`] after every command; batch runs never
+/// arm, so batch/parallel results and allocations stay identical to the
+/// pre-push engine.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorldEvent {
+    /// A job reached its final sync and left the cluster.
+    Done { t: f64, job: JobId },
+    /// A fault-layer node crash landed on a live group.
+    Crash { t: f64, gid: usize, node: usize },
+    /// A straggler slowdown landed on a node.
+    Straggle { t: f64, gid: usize, node: usize, factor: f64 },
+    /// Repair/displacement translated one member fate: healed in place
+    /// (`repinned`, `to_gid == gid`) or spilled to `to_gid`. Emitted by
+    /// both the crash-repair path and live group-cap shrink.
+    Repair { t: f64, job: JobId, gid: usize, to_gid: usize, repinned: bool },
+    /// A crashed node's repair window elapsed; the node rejoined its pool.
+    NodeUp { t: f64, gid: usize, node: usize },
 }
 
 #[derive(Clone, Debug)]
@@ -1169,6 +1204,11 @@ pub struct Simulator<S: GroupScheduler> {
     /// Reusable Roofline length-batch buffer: the per-iteration
     /// `Vec<f64>` allocation `sample_iter` used to pay is gone (ISSUE 4).
     scratch_lengths: Vec<f64>,
+    /// Record [`WorldEvent`]s for the push channel (ISSUE 8). Off by
+    /// default; only the daemon's virtual backend arms it.
+    emit_events: bool,
+    /// Recorded events since the last [`Self::take_world_events`] drain.
+    world_events: Vec<WorldEvent>,
 }
 
 impl<S: GroupScheduler> Simulator<S> {
@@ -1196,6 +1236,8 @@ impl<S: GroupScheduler> Simulator<S> {
             cur_roll_gpus: 0,
             cur_train_gpus: 0,
             scratch_lengths: Vec::new(),
+            emit_events: false,
+            world_events: Vec::new(),
         };
         sim.load_trace(trace);
         sim
@@ -1245,7 +1287,16 @@ impl<S: GroupScheduler> Simulator<S> {
         self.cur_rate_per_h = 0.0;
         self.cur_roll_gpus = 0;
         self.cur_train_gpus = 0;
+        self.emit_events = false;
+        self.world_events.clear();
         self.load_trace(trace);
+    }
+
+    /// Emit a push-channel event when armed (free when not: one branch).
+    fn world_event(&mut self, ev: WorldEvent) {
+        if self.emit_events {
+            self.world_events.push(ev);
+        }
     }
 
     fn push(&mut self, t: f64, ev: Ev) {
@@ -1780,6 +1831,7 @@ impl<S: GroupScheduler> Simulator<S> {
     /// escalation ([`Self::inject_node_crash`], ISSUE 6).
     fn crash_node(&mut self, gid: usize, node: usize, repair_s: f64) {
         self.res.crashes += 1;
+        self.world_event(WorldEvent::Crash { t: self.now, gid, node });
         let outcome = self.sched.repair_node_crash(gid, node);
         self.ensure_group_rt(gid);
         if let Some(out) = outcome {
@@ -1804,6 +1856,11 @@ impl<S: GroupScheduler> Simulator<S> {
                         self.res.spills += 1;
                     }
                 }
+                let to_gid = match fate {
+                    MemberFate::Repinned { .. } => gid,
+                    MemberFate::Spilled { decision, .. } => decision.group_id,
+                };
+                self.world_event(WorldEvent::Repair { t: self.now, job: jid, gid, to_gid, repinned });
                 let params_b = self.jobs[slot].spec.params_b;
                 let delay = repair::recovery_delay_s(
                     &self.cfg.switch,
@@ -2008,6 +2065,7 @@ impl<S: GroupScheduler> Simulator<S> {
         }
         if any {
             self.res.stragglers += 1;
+            self.world_event(WorldEvent::Straggle { t: self.now, gid, node, factor });
         }
     }
 
@@ -2025,6 +2083,7 @@ impl<S: GroupScheduler> Simulator<S> {
             self.node_down_until.remove(&(gid, node));
         }
         self.group_rt[gid].set_node_up(node);
+        self.world_event(WorldEvent::NodeUp { t: self.now, gid, node });
         self.drain_dispatch(gid);
     }
 
@@ -2050,6 +2109,7 @@ impl<S: GroupScheduler> Simulator<S> {
             )
         };
         self.res.outcomes.insert(id, outcome);
+        self.world_event(WorldEvent::Done { t: self.now, job: id });
         self.group_rt[gid].complete(slot);
         self.members_remove(gid, slot);
         self.sched.complete(id);
@@ -2244,6 +2304,116 @@ impl<S: GroupScheduler> Simulator<S> {
         }
         self.straggle_node(gid, node, factor);
         true
+    }
+
+    /// Arm (or disarm) [`WorldEvent`] recording for the push channel
+    /// (ISSUE 8). Disarming drops anything recorded but not yet drained.
+    pub fn arm_events(&mut self, on: bool) {
+        self.emit_events = on;
+        if !on {
+            self.world_events.clear();
+        }
+    }
+
+    /// Drain every [`WorldEvent`] recorded since the last drain, in
+    /// emission order (the engine is serial, so this order is the
+    /// deterministic causal order).
+    pub fn take_world_events(&mut self) -> Vec<WorldEvent> {
+        std::mem::take(&mut self.world_events)
+    }
+
+    /// Live intra-group policy swap (ISSUE 8): future groups build with
+    /// the new policy (`ensure_group_rt` reads `cfg.intra`), and every
+    /// existing orchestrator rebuilds its policy with the survivors
+    /// re-admitted in admission order. In-flight grants are untouched —
+    /// the current cycle drains under the grants it holds; the next pick
+    /// follows the new policy. A work-conserving invariant makes this
+    /// safe without a forced re-dispatch (no policy leaves a feasible
+    /// request unpicked), but we drain any non-empty queues anyway so a
+    /// swap is always immediately visible.
+    pub fn set_intra_policy(&mut self, kind: IntraPolicyKind) {
+        self.cfg.intra = kind;
+        for orc in &mut self.group_rt {
+            orc.set_policy(kind);
+        }
+        for gid in 0..self.group_rt.len() {
+            if self.group_rt[gid].queue_len() > 0 {
+                self.drain_dispatch(gid);
+            }
+        }
+    }
+
+    /// Live group-cap reconfiguration (ISSUE 8): forward the new cap to
+    /// the scheduler ([`GroupScheduler::set_group_cap`]) and translate
+    /// each displaced member exactly like a crash-repair spill —
+    /// interrupt the in-flight iteration (busy-integral truncation,
+    /// wasted-work charge), move its runtime state to the new placement,
+    /// and charge the checkpoint-aware cold-restart delay before the
+    /// replay (`Ev::Recover`). No node goes down: displacement costs the
+    /// victims, never the survivors. Returns `None` when the scheduler
+    /// has no cap support (baselines), `Some(outcomes)` otherwise.
+    pub fn reconfig_group_cap(&mut self, cap: Option<usize>) -> Option<Vec<ShrinkOutcome>> {
+        let outcomes = self.sched.set_group_cap(cap)?;
+        if outcomes.is_empty() {
+            return Some(outcomes);
+        }
+        self.rate_changed();
+        for out in &outcomes {
+            let gid = out.gid;
+            self.ensure_group_rt(gid);
+            for fate in &out.fates {
+                let jid = fate.job();
+                let Some(&slot) = self.job_slot.get(&jid) else { continue };
+                if self.jobs[slot].done {
+                    continue;
+                }
+                self.interrupt(slot);
+                let repinned = matches!(fate, MemberFate::Repinned { .. });
+                match fate {
+                    MemberFate::Repinned { roll_nodes, .. } => {
+                        self.jobs[slot].roll_nodes = roll_nodes.clone();
+                        self.group_rt[gid].set_roll_nodes(slot, roll_nodes.clone());
+                        self.res.evictions += 1;
+                    }
+                    MemberFate::Spilled { decision, .. } => {
+                        self.group_rt[gid].complete(slot);
+                        self.respill(slot, decision);
+                        self.res.spills += 1;
+                    }
+                }
+                let to_gid = match fate {
+                    MemberFate::Repinned { .. } => gid,
+                    MemberFate::Spilled { decision, .. } => decision.group_id,
+                };
+                self.world_event(WorldEvent::Repair {
+                    t: self.now,
+                    job: jid,
+                    gid,
+                    to_gid,
+                    repinned,
+                });
+                let params_b = self.jobs[slot].spec.params_b;
+                let delay = repair::recovery_delay_s(
+                    &self.cfg.switch,
+                    &self.cfg.migration,
+                    params_b,
+                    repinned,
+                );
+                let ep = {
+                    let rt = &mut self.jobs[slot];
+                    rt.recoveries += 1;
+                    rt.recovery_s += delay;
+                    rt.epoch
+                };
+                self.res.recovery_time_s += delay;
+                self.push(self.now + delay, Ev::Recover(slot, ep));
+            }
+            if self.group_rt.get(gid).is_some() {
+                self.drain_dispatch(gid);
+            }
+        }
+        self.rate_changed();
+        Some(outcomes)
     }
 }
 

@@ -28,7 +28,7 @@ pub mod gantt;
 
 pub use engine::{
     run_sim, EventQueueKind, Fidelity, GroupScheduler, PhaseKind, PhaseRecord, SimConfig,
-    SimResult, Simulator,
+    SimResult, Simulator, WorldEvent,
 };
 pub use faults::{FaultConfig, FaultEvent, FaultKind, FaultTraceGen};
 pub use fluid::FluidSimulator;

@@ -80,6 +80,15 @@ impl Json {
         }
     }
 
+    /// Insert or replace a key in an object (no-op on non-objects).
+    /// Used by the daemon transport to stamp the issuing tenant into a
+    /// command before journaling it.
+    pub fn set(&mut self, key: &str, v: Json) {
+        if let Json::Obj(m) = self {
+            m.insert(key.to_string(), v);
+        }
+    }
+
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),

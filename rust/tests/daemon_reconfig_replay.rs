@@ -1,0 +1,184 @@
+//! ISSUE 8 gate: journaled crash recovery across live reconfiguration
+//! and multi-tenant multiplexing (DESIGN.md §16).
+//!
+//! The socket arbiter merges concurrent tenants into ONE total command
+//! order and journals it — the journaled order IS the semantics. This
+//! test drives an interleaved two-tenant session (admits, cancels,
+//! reconfigs, subscriptions, faults) and kills the daemon at EVERY
+//! journal record boundary (plus torn-tail trims), then recovers and
+//! feeds the remainder. The drained accounting — daemon stats including
+//! event push/drop counters, plus the engine `SimResult` — must be
+//! **bitwise identical** to the uninterrupted run, chaos stream on or
+//! off.
+
+use std::fs;
+use std::path::PathBuf;
+
+use rollmux::runtime::{Daemon, DaemonConfig, Routed};
+use rollmux::sim::{FaultConfig, SimConfig};
+
+fn admit_line(id: usize, t_roll: f64, t_train: f64, slo: f64, gpus: usize, iters: usize) -> String {
+    format!(
+        "{{\"cmd\":\"admit\",\"job\":{{\"id\":{id},\"n_iters\":{iters},\"slo\":{slo},\
+         \"n_roll_gpus\":{gpus},\"n_train_gpus\":{gpus},\"params_b\":7.0,\
+         \"t_roll\":{t_roll},\"t_train\":{t_train}}}}}"
+    )
+}
+
+/// Interleaved two-tenant session of journaled commands only (each
+/// line lands exactly one `cmd` frame, so the replayed-command count
+/// maps 1:1 onto session positions). Jobs 0/1 use a loose SLO so they
+/// pack into one group — the mid-session `group_cap:1` reconfig then
+/// displaces a live member through the repair/spill path.
+fn session() -> Vec<(u32, String)> {
+    vec![
+        (1, "{\"cmd\":\"subscribe\"}".into()),
+        (1, admit_line(0, 120.0, 80.0, 6.0, 8, 5)),
+        (2, admit_line(1, 90.0, 70.0, 6.0, 8, 5)),
+        (2, "{\"cmd\":\"subscribe\",\"events\":[\"done\",\"reconfig\"]}".into()),
+        (1, "{\"cmd\":\"advance\",\"dt\":200}".into()),
+        (2, "{\"cmd\":\"reconfig\",\"queue_cap\":2,\"gpu_cap\":96}".into()),
+        (1, admit_line(2, 150.0, 95.0, 3.0, 16, 4)),
+        (2, "{\"cmd\":\"fault\",\"kind\":\"crash\",\"group\":0,\"node\":0}".into()),
+        (1, "{\"cmd\":\"reconfig\",\"intra\":\"slo-slack\"}".into()),
+        (2, "{\"cmd\":\"advance\",\"dt\":400}".into()),
+        (1, "{\"cmd\":\"cancel\",\"job\":2}".into()),
+        (2, "{\"cmd\":\"reconfig\",\"group_cap\":1}".into()),
+        (1, "{\"cmd\":\"advance\",\"dt\":300}".into()),
+        (2, "{\"cmd\":\"unsub\"}".into()),
+        (1, "{\"cmd\":\"drain\"}".into()),
+    ]
+}
+
+fn cfg(chaos: bool) -> DaemonConfig {
+    DaemonConfig {
+        sim: SimConfig {
+            seed: 31,
+            faults: chaos.then(|| FaultConfig {
+                seed: 31,
+                mtbf_s: 700.0,
+                mean_repair_s: 90.0,
+                straggler_frac: 0.3,
+                straggler_factor: 1.4,
+                max_events: 10,
+            }),
+            ..Default::default()
+        },
+        gpu_cap: 128,
+        queue_cap: 8,
+        sync_every: 2,
+        event_buf: 8,
+        ..Default::default()
+    }
+}
+
+/// Final accounting = the `{"drained":...}` routed response of the
+/// session's drain command.
+fn drained_line(out: &[Routed]) -> String {
+    out.iter()
+        .rev()
+        .find(|(_, l)| l.contains("\"drained\""))
+        .map(|(_, l)| l.clone())
+        .expect("session must end with a drained line")
+}
+
+fn run_uninterrupted(chaos: bool) -> String {
+    let mut d = Daemon::new_virtual(cfg(chaos));
+    let mut out = Vec::new();
+    for (t, l) in session() {
+        out.extend(d.handle_from(t, &l));
+    }
+    drained_line(&out)
+}
+
+fn journal_path(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("rollmux_reconfig_journal_{}_{tag}.jsonl", std::process::id()));
+    p
+}
+
+/// Accept the first `crash_after` session lines under a journal, drop
+/// the daemon cold (kill -9 at a record boundary), optionally shave
+/// `torn` bytes off the tail (kill -9 mid-write), recover, and feed the
+/// remainder from the replayed position.
+fn run_interrupted(chaos: bool, crash_after: usize, torn: u64, tag: &str) -> String {
+    let lines = session();
+    let path = journal_path(tag);
+    let _ = fs::remove_file(&path);
+
+    let mut d = Daemon::new_virtual(cfg(chaos));
+    d.attach_journal(&path).expect("attach fresh journal");
+    for (t, l) in &lines[..crash_after] {
+        d.handle_from(*t, l);
+    }
+    drop(d); // no flush: the crash takes the process, not a clean exit
+
+    if torn > 0 {
+        let f = fs::OpenOptions::new().write(true).open(&path).expect("reopen journal");
+        let len = f.metadata().expect("stat journal").len();
+        f.set_len(len.saturating_sub(torn)).expect("tear journal tail");
+        f.sync_all().expect("sync torn journal");
+    }
+
+    let mut d = Daemon::new_virtual(cfg(chaos));
+    let replayed = d.attach_journal(&path).expect("recover journal");
+    assert!(
+        replayed <= crash_after,
+        "replayed {replayed} commands but only {crash_after} were accepted pre-crash"
+    );
+    if torn == 0 {
+        assert_eq!(replayed, crash_after, "clean journal must replay every accepted command");
+    }
+    let mut out = Vec::new();
+    for (t, l) in &lines[replayed..] {
+        out.extend(d.handle_from(*t, l));
+    }
+    let _ = fs::remove_file(&path);
+    drained_line(&out)
+}
+
+#[test]
+fn recovery_is_bitwise_identical_at_every_record_boundary() {
+    for chaos in [false, true] {
+        let want = run_uninterrupted(chaos);
+        // Sanity on the accounting we are gating: the push counters
+        // and the reconfig/displacement counters are all in play.
+        assert!(want.contains("\"reconfigs\":3"), "{want}");
+        assert!(want.contains("\"pushed\""), "{want}");
+        let n = session().len();
+        for crash_after in 0..=n - 1 {
+            for torn in [0u64, 9] {
+                let tag = format!("{}_{crash_after}_{torn}", u8::from(chaos));
+                let got = run_interrupted(chaos, crash_after, torn, &tag);
+                assert_eq!(
+                    got, want,
+                    "drained accounting diverged (chaos={chaos}, \
+                     crash_after={crash_after}, torn={torn})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn recovered_daemon_restores_subscriptions_and_tenant_base() {
+    let lines = session();
+    let path = journal_path("subs");
+    let _ = fs::remove_file(&path);
+
+    let mut d = Daemon::new_virtual(cfg(false));
+    d.attach_journal(&path).expect("attach");
+    // Stop after tenant 2's unsub but before the drain.
+    for (t, l) in &lines[..lines.len() - 1] {
+        d.handle_from(*t, l);
+    }
+    drop(d);
+
+    let mut d = Daemon::new_virtual(cfg(false));
+    let replayed = d.attach_journal(&path).expect("recover");
+    assert_eq!(replayed, lines.len() - 1);
+    assert!(d.is_subscribed(1), "tenant 1's subscription must survive recovery");
+    assert!(!d.is_subscribed(2), "tenant 2 unsubscribed before the crash");
+    assert_eq!(d.next_tenant_base(), 3, "fresh connections must not alias replayed tenants");
+    let _ = fs::remove_file(&path);
+}

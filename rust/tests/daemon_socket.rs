@@ -1,0 +1,183 @@
+//! ISSUE 8 gate: the multi-tenant Unix-socket transport end to end.
+//!
+//! Two real clients connect to an in-process `SocketServer`, drive an
+//! interleaved session (subscribe, admits, live reconfig, drain), and
+//! the arbiter journals the merged order. After shutdown the journal is
+//! replayed into a fresh daemon and must reproduce the same state —
+//! subscriptions, tenant base, and stats included.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::thread;
+use std::time::Duration;
+
+use rollmux::runtime::{Daemon, DaemonConfig, SocketServer};
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("rollmux_sock_{}_{name}", std::process::id()));
+    p
+}
+
+fn admit_line(id: usize) -> String {
+    format!(
+        "{{\"cmd\":\"admit\",\"job\":{{\"id\":{id},\"n_iters\":2,\"slo\":3.0,\
+         \"n_roll_gpus\":8,\"n_train_gpus\":8,\"params_b\":7.0,\
+         \"t_roll\":60.0,\"t_train\":40.0}}}}"
+    )
+}
+
+struct Client {
+    stream: UnixStream,
+    reader: BufReader<UnixStream>,
+}
+
+impl Client {
+    fn connect(path: &PathBuf) -> Client {
+        // The server binds before we spawn it, so connect retries are
+        // only needed for scheduler jitter.
+        let mut last = None;
+        for _ in 0..100 {
+            match UnixStream::connect(path) {
+                Ok(stream) => {
+                    let reader = BufReader::new(stream.try_clone().expect("clone"));
+                    return Client { stream, reader };
+                }
+                Err(e) => {
+                    last = Some(e);
+                    thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+        panic!("connect {}: {:?}", path.display(), last);
+    }
+
+    /// Send one command and read exactly one reply line.
+    fn roundtrip(&mut self, cmd: &str) -> String {
+        self.send(cmd);
+        self.recv()
+    }
+
+    fn send(&mut self, cmd: &str) {
+        self.stream.write_all(cmd.as_bytes()).expect("write");
+        self.stream.write_all(b"\n").expect("write nl");
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read");
+        assert!(n > 0, "server hung up early");
+        line.trim().to_string()
+    }
+}
+
+#[test]
+fn two_tenants_share_one_journaled_order() {
+    let sock = tmp("s1.sock");
+    let journal = tmp("s1.journal");
+    let _ = std::fs::remove_file(&journal);
+
+    let server = SocketServer::bind(&sock).expect("bind");
+    let mut daemon = Daemon::new_virtual(DaemonConfig::default());
+    daemon.attach_journal(&journal).expect("attach");
+    let handle = thread::spawn(move || {
+        let mut d = daemon;
+        let stats = server.run(&mut d).expect("serve");
+        (d, stats)
+    });
+
+    // Sequenced roundtrips pin the arbiter's merged order: tenant ids
+    // are assigned in accept order, and each reply is awaited before
+    // the next command is sent.
+    let mut a = Client::connect(&sock);
+    let sub = a.roundtrip("{\"cmd\":\"subscribe\"}");
+    assert!(sub.contains("\"ok\":\"subscribe\""), "{sub}");
+
+    let mut b = Client::connect(&sock);
+    let r = b.roundtrip(&admit_line(0));
+    assert!(r.contains("\"ok\":\"admit\"") && r.contains("\"job\":0"), "{r}");
+    let r = a.roundtrip(&admit_line(1));
+    assert!(r.contains("\"ok\":\"admit\"") && r.contains("\"job\":1"), "{r}");
+
+    // B reconfigures live; A (subscribed) receives the pushed event.
+    let r = b.roundtrip("{\"cmd\":\"reconfig\",\"gpu_cap\":64}");
+    assert!(r.contains("\"ok\":\"reconfig\""), "{r}");
+    let ev = a.recv();
+    assert!(ev.contains("\"event\":\"reconfig\""), "{ev}");
+
+    // A drains: drained accounting, then its `done` events.
+    a.send("{\"cmd\":\"drain\"}");
+    let drained = a.recv();
+    assert!(drained.contains("\"drained\""), "{drained}");
+    let mut done = 0;
+    for _ in 0..2 {
+        let ev = a.recv();
+        assert!(ev.contains("\"event\":\"done\""), "{ev}");
+        done += 1;
+    }
+    assert_eq!(done, 2);
+
+    let r = b.roundtrip("{\"cmd\":\"shutdown\"}");
+    assert!(r.contains("\"ok\":\"shutdown\""), "{r}");
+
+    let (daemon, tstats) = handle.join().expect("server thread");
+    assert_eq!(tstats.connections, 2);
+    assert_eq!(tstats.lines_dropped_slow, 0);
+    assert_eq!(daemon.stats().admitted, 2);
+    assert_eq!(daemon.stats().reconfigs, 1);
+
+    // The journaled merged order replays to the same state.
+    let mut replayed = Daemon::new_virtual(DaemonConfig::default());
+    let n = replayed.attach_journal(&journal).expect("replay");
+    assert!(n >= 5, "subscribe + 2 admits + reconfig + drain journaled, got {n}");
+    assert_eq!(replayed.stats().admitted, daemon.stats().admitted);
+    assert_eq!(replayed.stats().reconfigs, daemon.stats().reconfigs);
+    assert_eq!(replayed.stats().events_pushed, daemon.stats().events_pushed);
+    assert!(replayed.is_subscribed(1), "A's subscription is journaled state");
+    assert_eq!(replayed.next_tenant_base(), 3);
+
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn disconnect_synthesizes_journaled_unsub() {
+    let sock = tmp("s2.sock");
+    let journal = tmp("s2.journal");
+    let _ = std::fs::remove_file(&journal);
+
+    let server = SocketServer::bind(&sock).expect("bind");
+    let mut daemon = Daemon::new_virtual(DaemonConfig::default());
+    daemon.attach_journal(&journal).expect("attach");
+    let handle = thread::spawn(move || {
+        let mut d = daemon;
+        server.run(&mut d).expect("serve");
+        d
+    });
+
+    let mut a = Client::connect(&sock);
+    let sub = a.roundtrip("{\"cmd\":\"subscribe\"}");
+    assert!(sub.contains("\"ok\":\"subscribe\""), "{sub}");
+    // Hang up without unsubscribing: the arbiter must journal an unsub
+    // on tenant 1's behalf so replay stops pushing to a dead socket.
+    drop(a);
+
+    // Give the reader's EOF a beat to reach the arbiter, then shut the
+    // server down from a second tenant.
+    thread::sleep(Duration::from_millis(150));
+    let mut b = Client::connect(&sock);
+    let r = b.roundtrip("{\"cmd\":\"stats\"}");
+    assert!(r.contains("\"stats\""), "{r}");
+    let r = b.roundtrip("{\"cmd\":\"shutdown\"}");
+    assert!(r.contains("\"ok\":\"shutdown\""), "{r}");
+    let daemon = handle.join().expect("server thread");
+    assert!(!daemon.is_subscribed(1), "disconnect must clear the subscription");
+
+    let mut replayed = Daemon::new_virtual(DaemonConfig::default());
+    replayed.attach_journal(&journal).expect("replay");
+    assert!(
+        !replayed.is_subscribed(1),
+        "the synthesized unsub must be journaled, not just in-memory"
+    );
+    let _ = std::fs::remove_file(&journal);
+}

@@ -1,0 +1,170 @@
+#!/usr/bin/env bash
+# Socket transport smoke (ISSUE 8, DESIGN.md §16): drive `rollmux serve
+# --listen <unix-path>` with two concurrent JSONL clients from one
+# python3 driver.
+#
+# Leg 1 — determinism: the full two-tenant session (subscribe, admits,
+# live reconfig with an event push, drain with `done` pushes, shutdown)
+# runs under ROLLMUX_THREADS=1 and ROLLMUX_THREADS=4; the client-side
+# transcripts must be byte-identical. Thread count may only change wall
+# time, never a response byte.
+#
+# Leg 2 — crash recovery: the session's journaled prefix (subscribe +
+# both admits, --sync-every 1 so every accepted frame is durable) ends
+# with the CLIENT delivering kill -9 to the daemon while tenant 1's
+# subscription is still live on the wire. A restarted daemon replays
+# the journal (subscription and tenant base included — fresh
+# connections get ids past everything replayed) and absorbs the
+# remainder of the session; its drained accounting line must be
+# byte-identical to the uninterrupted run's. The journaled merged order
+# IS the semantics.
+#
+# Usage: scripts/socket_smoke.sh
+#   ROLLMUX_BIN=path   override the rollmux binary under test
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+BIN="${ROLLMUX_BIN:-$ROOT/target/release/rollmux}"
+WORK="$(mktemp -d)"
+SRV_PID=""
+cleanup() {
+    [[ -n "$SRV_PID" ]] && kill -9 "$SRV_PID" 2>/dev/null || true
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+CLIENT="$WORK/client.py"
+cat > "$CLIENT" <<'PY'
+"""Two-tenant JSONL client for the rollmuxd socket smoke.
+
+Modes:
+  full    whole session; prints each received line tagged A/B
+  prefix  subscribe + admits, then kill -9 the server (pid in argv[3])
+          with the subscription still live on the wire
+  tail    reconnect after restart and feed the session's remainder
+"""
+import os
+import socket
+import sys
+import time
+
+sock_path, mode = sys.argv[1], sys.argv[2]
+srv_pid = int(sys.argv[3]) if len(sys.argv) > 3 else 0
+
+
+def connect():
+    deadline = time.time() + 10.0
+    while True:
+        s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        try:
+            s.connect(sock_path)
+            return s, s.makefile("r", encoding="utf-8")
+        except OSError:
+            s.close()
+            if time.time() > deadline:
+                raise SystemExit(f"connect {sock_path}: timed out")
+            time.sleep(0.02)
+
+
+def say(tag, line):
+    sys.stdout.write(f"{tag} {line}\n")
+
+
+def roundtrip(tag, s, r, cmd, expect):
+    s.sendall(cmd.encode() + b"\n")
+    line = r.readline().strip()
+    assert expect in line, f"{tag}: sent {cmd!r}, got {line!r}"
+    say(tag, line)
+    return line
+
+
+def admit(i):
+    return (
+        '{"cmd":"admit","job":{"id":%d,"n_iters":2,"slo":3.0,'
+        '"n_roll_gpus":8,"n_train_gpus":8,"params_b":7.0,'
+        '"t_roll":60.0,"t_train":40.0}}' % i
+    )
+
+
+if mode in ("full", "prefix"):
+    # A's awaited subscribe ack pins it as the first accepted tenant
+    # before B ever connects.
+    a, ar = connect()
+    roundtrip("A", a, ar, '{"cmd":"subscribe"}', '"ok":"subscribe"')
+    b, br = connect()
+    roundtrip("B", b, br, admit(0), '"ok":"admit"')
+    roundtrip("A", a, ar, admit(1), '"ok":"admit"')
+
+if mode == "prefix":
+    # Every acked command is already durable (--sync-every 1); take the
+    # daemon down hard, no unsub, no drain.
+    os.kill(srv_pid, 9)
+    sys.exit(0)
+
+if mode == "tail":
+    # Fresh connections after the restart: the replayed daemon hands
+    # out tenant ids past the journaled ones, and tenant 1's replayed
+    # subscription points at no live socket — pushes to it are counted
+    # in the journaled stats but dropped by the transport.
+    a, ar = connect()
+    b, br = connect()
+
+roundtrip("B", b, br, '{"cmd":"reconfig","gpu_cap":64}', '"ok":"reconfig"')
+if mode == "full":
+    ev = ar.readline().strip()
+    assert '"event":"reconfig"' in ev, ev
+    say("A", ev)
+
+a.sendall(b'{"cmd":"drain"}\n')
+drained = ar.readline().strip()
+assert '"drained"' in drained, drained
+say("A", drained)
+if mode == "full":
+    for _ in range(2):
+        ev = ar.readline().strip()
+        assert '"event":"done"' in ev, ev
+        say("A", ev)
+
+roundtrip("B", b, br, '{"cmd":"shutdown"}', '"ok":"shutdown"')
+PY
+
+start_server() { # $1 threads, $2 journal, $3 socket, $4 stderr log
+    ROLLMUX_THREADS="$1" "$BIN" serve --virtual --listen "$3" \
+        --journal "$2" --sync-every 1 2>"$4" &
+    SRV_PID=$!
+}
+
+stop_server() { # $1 stderr log shown on a dirty exit
+    local rc=0
+    wait "$SRV_PID" || rc=$?
+    SRV_PID=""
+    if [[ "$rc" -ne 0 ]]; then
+        echo "socket_smoke: server exited rc=$rc" >&2
+        cat "$1" >&2
+        exit 1
+    fi
+}
+
+echo "== leg 1: two-tenant session is thread-count invariant =="
+for t in 1 4; do
+    start_server "$t" "$WORK/full_t${t}.wal" "$WORK/t${t}.sock" "$WORK/full_t${t}.err"
+    python3 "$CLIENT" "$WORK/t${t}.sock" full > "$WORK/full_t${t}.out"
+    stop_server "$WORK/full_t${t}.err"
+done
+diff "$WORK/full_t1.out" "$WORK/full_t4.out"
+echo "ok: transcripts byte-identical under ROLLMUX_THREADS={1,4}"
+
+echo "== leg 2: kill -9 mid-session, journaled restart =="
+start_server 4 "$WORK/crash.wal" "$WORK/crash.sock" "$WORK/prefix.err"
+python3 "$CLIENT" "$WORK/crash.sock" prefix "$SRV_PID" > "$WORK/prefix.out"
+wait "$SRV_PID" 2>/dev/null || true # killed: nonzero by design
+SRV_PID=""
+
+start_server 4 "$WORK/crash.wal" "$WORK/crash.sock" "$WORK/tail.err"
+python3 "$CLIENT" "$WORK/crash.sock" tail > "$WORK/tail.out"
+stop_server "$WORK/tail.err"
+
+grep -F '"drained"' "$WORK/full_t1.out" > "$WORK/drained_want.txt"
+grep -F '"drained"' "$WORK/tail.out" > "$WORK/drained_got.txt"
+diff "$WORK/drained_want.txt" "$WORK/drained_got.txt"
+echo "ok: drained accounting survives kill -9 + replay byte-for-byte"
