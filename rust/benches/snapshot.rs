@@ -1,0 +1,98 @@
+//! Bench: checkpoint capture, restore, and the branch-from-t fork sweep
+//! (ISSUE 9, DESIGN.md §17) on the 2k-job exact-engine fleet trace.
+//! `fork_sweep_vs_rerun` is the acceptance series: 8 what-if branches
+//! off one shared checkpoint must beat 8 independent re-runs by >= 3x
+//! (the same inner loop `rollmux exp replay` verifies bitwise).
+//! Set BENCH_JSON_OUT (scripts/bench.sh does) for BENCH_9.json records.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::coordinator::orchestrator::IntraPolicyKind;
+use rollmux::sim::engine::{SimConfig, SimSnapshot, Simulator};
+use rollmux::util::{bench, emit_bench_json, timed};
+use rollmux::workload::trace::fleet_trace;
+
+const BIN: &str = "snapshot";
+const N_JOBS: usize = 2_000;
+const BRANCHES: usize = 8;
+
+fn main() {
+    println!("== snapshot ==");
+    let cfg = SimConfig { seed: 7, record_flight: true, ..Default::default() };
+    let mk_sched = || InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8);
+    let trace = fleet_trace(7, N_JOBS, 1.0);
+    let mk_sim = || Simulator::new(cfg.clone(), mk_sched(), trace.clone());
+
+    // Baseline: one full run fixes the fork points and the re-run cost.
+    let (base, base_s) = timed(|| mk_sim().run_to_end());
+    println!("baseline/fleet_2k: {base_s:.2}s wall, {} events", base.events_processed);
+    emit_bench_json(
+        BIN,
+        "baseline/fleet_2k",
+        &[("wall_s", base_s), ("events", base.events_processed as f64)],
+    );
+
+    // snapshot_2k: capture cost mid-run (clock at 50% of makespan).
+    let mut prefix = mk_sim();
+    let snap = prefix.fork_at(base.makespan_s * 0.5);
+    let stats = bench(1, 10, || prefix.snapshot());
+    stats.report_json(BIN, "snapshot_2k", snap.live_jobs() as f64);
+
+    // Byte codec on the same checkpoint: encode + decode wall time and
+    // the on-disk footprint.
+    let bytes = snap.to_bytes();
+    let enc = bench(1, 10, || snap.to_bytes());
+    enc.report_json(BIN, "encode_2k", bytes.len() as f64);
+    let dec = bench(1, 10, || SimSnapshot::from_bytes(&bytes).expect("decode"));
+    dec.report_json(BIN, "decode_2k", bytes.len() as f64);
+    println!("checkpoint footprint: {} KiB", bytes.len() / 1024);
+
+    // restore_2k: rebuild a live simulator from the checkpoint.
+    let res = bench(1, 10, || Simulator::restore(cfg.clone(), &trace, &snap));
+    res.report_json(BIN, "restore_2k", snap.live_jobs() as f64);
+
+    // fork_sweep_vs_rerun: 8 branches off ONE late checkpoint (90% of
+    // makespan, where forking pays) vs 8 independent from-scratch runs
+    // applying the same divergence. Acceptance: >= 3x.
+    let t_fork = base.makespan_s * 0.9;
+    let policies = IntraPolicyKind::all();
+    let diverge = |sim: &mut Simulator<InterGroupScheduler>, branch: usize| {
+        if branch > 0 {
+            sim.set_intra_policy(policies[branch % policies.len()]);
+        }
+    };
+    let (late_snap, prefix_s) = timed(|| mk_sim().fork_at(t_fork));
+    let mut fork_total = prefix_s;
+    let mut rerun_total = 0.0;
+    for branch in 0..BRANCHES {
+        let (_, fork_s) = timed(|| {
+            let mut sim = Simulator::restore(cfg.clone(), &trace, &late_snap);
+            diverge(&mut sim, branch);
+            sim.run_to_end()
+        });
+        let (_, rerun_s) = timed(|| {
+            let mut sim = mk_sim();
+            sim.run_until(t_fork);
+            diverge(&mut sim, branch);
+            sim.run_to_end()
+        });
+        fork_total += fork_s;
+        rerun_total += rerun_s;
+    }
+    let speedup = rerun_total / fork_total.max(1e-12);
+    println!(
+        "fork_sweep_vs_rerun: fork {fork_total:.2}s vs rerun {rerun_total:.2}s \
+         ({speedup:.2}x, {BRANCHES} branches at 90% fork point)"
+    );
+    emit_bench_json(
+        BIN,
+        "fork_sweep_vs_rerun",
+        &[
+            ("fork_wall_s", fork_total),
+            ("rerun_wall_s", rerun_total),
+            ("speedup", speedup),
+            ("branches", BRANCHES as f64),
+            ("jobs", N_JOBS as f64),
+        ],
+    );
+}

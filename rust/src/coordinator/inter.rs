@@ -738,6 +738,92 @@ impl InterGroupScheduler {
     }
 }
 
+/// Full mutable state of the inter-group scheduler, captured for the
+/// snapshot layer (DESIGN.md §17). Groups are listed in live `groups`
+/// order (ascending id), each with its members in **admission order** —
+/// the order that rebuilds every cached aggregate bit-identically (the
+/// caches are defined as in-order floating-point folds, see
+/// `coordinator::group`). Job specs are NOT captured: they are immutable
+/// inputs the restore path re-supplies (like `SimConfig`), so a member is
+/// just `(job id, pinned nodes)`. The residency ledger IS captured, as
+/// exact bits — its cached per-node totals carry `+=`/`-=` history whose
+/// low bits a pin-replay could not reproduce, and `evict_node` feeds them
+/// into repair accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedSnapshot {
+    /// `(group id, n_roll_nodes, n_train_nodes, members)` ascending by
+    /// id; members are `(job, roll_nodes)` in admission order.
+    pub groups: Vec<(usize, usize, usize, Vec<(JobId, Vec<usize>)>)>,
+    pub next_group_id: usize,
+    pub max_group_size: Option<usize>,
+    pub shards: usize,
+    /// `ResidencyLedger::export_parts` output (exact bits).
+    pub ledger: Vec<(NodeId, u64, Vec<(JobId, u64)>)>,
+    pub ledger_capacity_bits: u64,
+}
+
+impl InterGroupScheduler {
+    /// Capture the scheduler's full mutable state (DESIGN.md §17). The
+    /// placement index and positional/job maps are derived state and are
+    /// rebuilt on restore; the `PhaseModel` is a caller-owned input.
+    pub fn snapshot_state(&self) -> SchedSnapshot {
+        SchedSnapshot {
+            groups: self
+                .groups
+                .iter()
+                .map(|g| {
+                    let members =
+                        g.jobs().iter().map(|j| (j.spec.id, j.roll_nodes.clone())).collect();
+                    (g.id, g.n_roll_nodes, g.n_train_nodes, members)
+                })
+                .collect(),
+            next_group_id: self.next_group_id,
+            max_group_size: self.max_group_size,
+            shards: self.shards,
+            ledger: self.ledger.export_parts(),
+            ledger_capacity_bits: self.ledger.capacity_gb().to_bits(),
+        }
+    }
+
+    /// Rebuild a scheduler bit-exactly from [`Self::snapshot_state`]
+    /// output. `spec_of` resolves a member's immutable `JobSpec` (the
+    /// caller owns the trace). Each group is rebuilt by admitting its
+    /// members in admission order — `GroupJob::new` deterministically
+    /// recomputes estimates against the group's training pool, and the
+    /// in-order cache folds are bit-identical to the live group's
+    /// (property-tested in `tests/prop_snapshot.rs`); the ledger is
+    /// installed from exact bits, never replayed.
+    pub fn from_snapshot_state(
+        model: PhaseModel,
+        snap: &SchedSnapshot,
+        spec_of: impl Fn(JobId) -> JobSpec,
+    ) -> Self {
+        let mut s = Self::new(model);
+        s.max_group_size = snap.max_group_size;
+        s.next_group_id = snap.next_group_id;
+        s.shards = snap.shards.max(1);
+        for (id, n_roll_nodes, n_train_nodes, members) in &snap.groups {
+            let mut g = Group::empty(*id, *n_roll_nodes, *n_train_nodes);
+            for (jid, roll_nodes) in members {
+                let gj = GroupJob::new(spec_of(*jid), &s.model, roll_nodes.clone(), g.train_gpus());
+                g.admit(gj);
+                s.job_group.insert(*jid, *id);
+            }
+            let gi = s.groups.len();
+            if s.gid_to_idx.len() <= *id {
+                s.gid_to_idx.resize(*id + 1, usize::MAX);
+            }
+            s.gid_to_idx[*id] = gi;
+            s.groups.push(g);
+            s.index_refresh(*id);
+        }
+        s.ledger =
+            ResidencyLedger::from_parts(f64::from_bits(snap.ledger_capacity_bits), &snap.ledger);
+        debug_assert!(s.ledger.check_invariant(), "restored residency ledger inconsistent");
+        s
+    }
+}
+
 #[derive(Clone, Debug)]
 struct Candidate {
     kind: PlacementKind,
@@ -1204,6 +1290,63 @@ mod tests {
         assert!(s.residency_ledger().check_invariant());
         // Dead group ids are never resurrected.
         assert!(s.repair_node_crash(gid, 0).is_none());
+    }
+
+    /// DESIGN.md §17: a scheduler restored mid-trace must make bitwise-
+    /// identical decisions to the live one it was captured from, through
+    /// further placements, completions, crashes and cap reconfigs.
+    #[test]
+    fn snapshot_restore_continues_bitwise() {
+        let spec_at = |id: JobId| {
+            let t_roll = 50.0 + (id % 7) as f64 * 30.0;
+            let t_train = 40.0 + (id % 5) as f64 * 25.0;
+            direct_job(id, t_roll, t_train, 1.2 + (id % 4) as f64 * 0.4)
+        };
+        let mut live = InterGroupScheduler::with_shards(PhaseModel::default(), 3);
+        for id in 0..50 {
+            live.schedule(spec_at(id));
+            if id >= 8 && id % 3 == 0 {
+                live.complete_job(id - 8);
+            }
+        }
+        live.repair_node_crash(live.group_ids()[0], 0);
+
+        let snap = live.snapshot_state();
+        let mut restored =
+            InterGroupScheduler::from_snapshot_state(PhaseModel::default(), &snap, spec_at);
+        assert_eq!(restored.snapshot_state(), snap, "re-snapshot is stable");
+        assert_eq!(restored.group_ids(), live.group_ids());
+        assert_eq!(restored.indexed_group_ids(), live.indexed_group_ids());
+        assert_eq!(restored.shards(), live.shards());
+        for (a, b) in restored.groups.iter().zip(&live.groups) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.t_cycle().to_bits(), b.t_cycle().to_bits(), "group {}", a.id);
+            assert_eq!(a.t_load().to_bits(), b.t_load().to_bits(), "group {}", a.id);
+            assert_eq!(a.nodes_by_load(), b.nodes_by_load(), "group {}", a.id);
+            for n in 0..a.n_roll_nodes {
+                assert_eq!(
+                    a.roll_node_load(n).to_bits(),
+                    b.roll_node_load(n).to_bits(),
+                    "group {} node {n}",
+                    a.id
+                );
+            }
+        }
+        // Continue both worlds identically: decisions must stay bitwise.
+        for id in 50..90 {
+            let da = live.schedule(spec_at(id));
+            let db = restored.schedule(spec_at(id));
+            assert_eq!(da, db, "job {id}");
+            assert_eq!(da.marginal_cost.to_bits(), db.marginal_cost.to_bits());
+            if id % 4 == 0 {
+                live.complete_job(id - 10);
+                restored.complete_job(id - 10);
+            }
+        }
+        let oa = live.set_group_cap(Some(2));
+        let ob = restored.set_group_cap(Some(2));
+        assert_eq!(oa.len(), ob.len(), "cap-shrink outcomes diverged");
+        assert_eq!(live.group_ids(), restored.group_ids());
     }
 
     #[test]

@@ -59,6 +59,20 @@ impl RoundRobin {
         &self.order
     }
 
+    /// The cursor position — together with [`Self::order`] this is the
+    /// policy's entire mutable state, captured by the snapshot layer
+    /// (DESIGN.md §17): the cursor is a function of dispatch *history*,
+    /// not of the member set, so restore cannot rebuild it from members.
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Rebuild a round-robin mid-cycle from captured `(order, cursor)`.
+    pub fn from_parts(order: Vec<JobId>, cursor: usize) -> Self {
+        let cursor = if order.is_empty() { 0 } else { cursor % order.len() };
+        RoundRobin { order, cursor }
+    }
+
     /// Cyclic distance from the cursor to `job` (0 = the cursor points at
     /// `job`); `None` when the job is not a member. Used by the
     /// orchestration core's `StrictRoundRobin` policy to rank feasible

@@ -122,6 +122,17 @@ pub trait IntraPolicy: Send {
     fn pick(&mut self, queued: &[QueuedPhase]) -> Option<usize>;
     fn on_admit(&mut self, _job: JobId) {}
     fn on_complete(&mut self, _job: JobId) {}
+    /// Snapshot hook (DESIGN.md §17): the policy's dispatch-history state
+    /// as a round-robin `(order, cursor)` pair, `None` for stateless
+    /// policies. The cursor is a function of history, not of the member
+    /// set, so the snapshot layer must carry it explicitly.
+    fn rotation_state(&self) -> Option<(Vec<JobId>, usize)> {
+        None
+    }
+    /// Restore hook: install captured rotation state (no-op for stateless
+    /// policies). Called after `on_admit` replay, overriding the
+    /// replay-built rotation with the captured one.
+    fn restore_rotation(&mut self, _order: Vec<JobId>, _cursor: usize) {}
 }
 
 /// Today's engine behavior: first feasible request in FIFO order.
@@ -176,6 +187,14 @@ impl IntraPolicy for StrictRoundRobin {
 
     fn on_complete(&mut self, job: JobId) {
         self.rr.remove(job);
+    }
+
+    fn rotation_state(&self) -> Option<(Vec<JobId>, usize)> {
+        Some((self.rr.order().to_vec(), self.rr.cursor()))
+    }
+
+    fn restore_rotation(&mut self, order: Vec<JobId>, cursor: usize) {
+        self.rr = RoundRobin::from_parts(order, cursor);
     }
 }
 
@@ -235,6 +254,22 @@ pub struct PhaseStart {
 /// a crashed node until its repair completes. Real driver slots are slab
 /// indices and can never reach this value.
 const DOWN_SLOT: usize = usize::MAX;
+
+/// Full mutable state of one [`GroupOrchestrator`], captured for the
+/// snapshot layer (DESIGN.md §17). Members are listed in ascending slot
+/// order (deterministic serialization of the member HashMap); the queue
+/// is in queue order; `roll_busy` carries `DOWN_SLOT` sentinels verbatim.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OrchSnapshot {
+    /// `(slot, job, roll_nodes, slo_slack_s)`, ascending by slot.
+    pub members: Vec<(usize, JobId, Vec<usize>, f64)>,
+    pub roll_busy: Vec<Option<usize>>,
+    pub train_busy: Option<usize>,
+    /// `(slot, kind)` in queue order.
+    pub queue: Vec<(usize, CorePhase)>,
+    /// Round-robin `(order, cursor)` for history-stateful policies.
+    pub rotation: Option<(Vec<JobId>, usize)>,
+}
 
 /// Group-local phase orchestration: queue + occupancy + policy.
 pub struct GroupOrchestrator {
@@ -466,6 +501,46 @@ impl GroupOrchestrator {
         self.members.len()
     }
 
+    /// Capture the orchestrator's full mutable state (DESIGN.md §17):
+    /// members sorted by slot, occupancy maps verbatim (including
+    /// `DOWN_SLOT` holds), the queue in order, and the policy's rotation
+    /// state. Scratch buffers are not state.
+    pub fn snapshot_state(&self) -> OrchSnapshot {
+        let mut members: Vec<(usize, JobId, Vec<usize>, f64)> = self
+            .members
+            .iter()
+            .map(|(&slot, m)| (slot, m.job, m.roll_nodes.clone(), m.slo_slack_s))
+            .collect();
+        members.sort_unstable_by_key(|&(slot, ..)| slot);
+        OrchSnapshot {
+            members,
+            roll_busy: self.roll_busy.clone(),
+            train_busy: self.train_busy,
+            queue: self.queue.iter().map(|r| (r.slot, r.kind)).collect(),
+            rotation: self.policy.rotation_state(),
+        }
+    }
+
+    /// Rebuild an orchestrator mid-flight from [`Self::snapshot_state`]
+    /// output: members re-admit in ascending slot order (the same replay
+    /// `set_policy` performs), then the captured rotation overrides the
+    /// replay-built one, then occupancy and the queue are installed
+    /// verbatim. The restored orchestrator dispatches bit-identically to
+    /// the captured one.
+    pub fn from_snapshot_state(kind: IntraPolicyKind, snap: &OrchSnapshot) -> Self {
+        let mut orc = GroupOrchestrator::new(kind);
+        for (slot, job, roll_nodes, slo_slack_s) in &snap.members {
+            orc.admit(*slot, *job, roll_nodes.clone(), *slo_slack_s);
+        }
+        if let Some((order, cursor)) = &snap.rotation {
+            orc.policy.restore_rotation(order.clone(), *cursor);
+        }
+        orc.roll_busy = snap.roll_busy.clone();
+        orc.train_busy = snap.train_busy;
+        orc.queue = snap.queue.iter().map(|&(slot, kind)| Request { slot, kind }).collect();
+        orc
+    }
+
     fn node_free(&self, n: usize) -> bool {
         !matches!(self.roll_busy.get(n), Some(Some(_)))
     }
@@ -683,6 +758,51 @@ mod tests {
         let starts = drain(&mut orc);
         assert_eq!(starts.len(), 1);
         assert_eq!(starts[0].job, 32);
+    }
+
+    /// DESIGN.md §17: snapshot/restore must preserve dispatch behavior
+    /// exactly — including the round-robin cursor mid-cycle, occupancy
+    /// holds, DOWN sentinels and the queued request order.
+    #[test]
+    fn snapshot_restores_dispatch_behavior_midcycle() {
+        for kind in IntraPolicyKind::all() {
+            let mut orc = GroupOrchestrator::new(kind);
+            for slot in 0..3 {
+                orc.admit(slot, 40 + slot, vec![slot], (slot + 1) as f64 * 50.0);
+            }
+            orc.enqueue(2, CorePhase::Rollout);
+            orc.enqueue(1, CorePhase::Rollout);
+            orc.enqueue(0, CorePhase::Train);
+            // Dispatch once so the cursor / occupancy are mid-flight.
+            let first = orc.next_dispatch();
+            assert!(first.is_some());
+            orc.set_node_down(4);
+            orc.enqueue(0, CorePhase::Rollout);
+
+            let snap = orc.snapshot_state();
+            let mut restored = GroupOrchestrator::from_snapshot_state(kind, &snap);
+            assert_eq!(restored.policy_name(), orc.policy_name());
+            assert_eq!(restored.member_count(), orc.member_count());
+            assert_eq!(restored.queue_len(), orc.queue_len());
+            assert_eq!(restored.snapshot_state(), snap, "re-snapshot is stable");
+            // Both must now produce the identical dispatch sequence.
+            loop {
+                let a = orc.next_dispatch();
+                let b = restored.next_dispatch();
+                assert_eq!(a, b, "policy {}", kind.name());
+                match a {
+                    Some(s) => {
+                        for o in [&mut orc, &mut restored] {
+                            match s.kind {
+                                CorePhase::Rollout => o.release_rollout(s.slot),
+                                CorePhase::Train => o.release_train(s.slot),
+                            }
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod chaos;
 pub mod fleet;
 pub mod micro;
 pub mod motivation;
+pub mod replay;
 pub mod scale;
 pub mod serve;
 pub mod simstudy;
@@ -58,6 +59,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
             serve::serve,
         ),
         ("scale", "Million-job scale-out: sharded + streamed + parallel DES (ISSUE 7)", scale::scale),
+        (
+            "replay",
+            "Branch-from-t what-if ablation from a shared checkpoint (ISSUE 9)",
+            replay::replay,
+        ),
     ]
 }
 

@@ -1,0 +1,270 @@
+//! `rollmux exp replay` — branch-from-t what-if ablation from a shared
+//! checkpoint (ISSUE 9, DESIGN.md §17).
+//!
+//! One simulation runs the fleet prefix up to the fork point and
+//! captures a [`SimSnapshot`]; eight what-if branches then restore that
+//! checkpoint, diverge (intra-policy swaps, group-cap reconfigs, a late
+//! submission burst), and drain. Every branch is checked bitwise against
+//! a from-scratch oracle that replays the same prefix and applies the
+//! same divergence — the table's last column is the verdict the CI
+//! determinism gate greps for.
+//!
+//! The checkpoint also makes a disk roundtrip through the byte codec
+//! (`to_bytes` → file → `from_bytes`) and branch 0 restores from the
+//! decoded image — the snapshot → kill → restore path, exercised
+//! end to end.
+//!
+//! Output discipline (as `exp fleet`/`exp scale`): deterministic tables
+//! and verdicts on stdout (the CI diffs this across `ROLLMUX_THREADS`),
+//! wall-clock timings — including the fork-sweep vs N-reruns speedup the
+//! CI asserts ≥ 3x — on stderr.
+
+use crate::coordinator::inter::InterGroupScheduler;
+use crate::coordinator::orchestrator::IntraPolicyKind;
+use crate::sim::engine::{SimConfig, SimResult, SimSnapshot, Simulator};
+use crate::util::table::{f, pct, Table};
+use crate::util::timed;
+use crate::workload::job::{JobSpec, PhaseSpec};
+use crate::workload::trace::fleet_trace;
+
+use super::ExpOpts;
+
+/// What-if branches restored from the one shared checkpoint.
+const BRANCHES: usize = 8;
+
+/// Fork point as a fraction of the baseline makespan. Late on purpose:
+/// the shared prefix is the bulk of the work, which is exactly when
+/// forking pays (speedup ≈ N / (frac + N·(1-frac))).
+const T_FRAC: f64 = 0.9;
+
+fn branch_label(branch: usize) -> &'static str {
+    match branch {
+        0 => "baseline (disk-roundtripped)",
+        1 => "intra fifo",
+        2 => "intra round-robin",
+        3 => "intra slo-slack",
+        4 => "group cap 2",
+        5 => "group cap 4",
+        6 => "late burst +4 jobs",
+        _ => "cap 2 + round-robin",
+    }
+}
+
+/// Apply one branch's divergence at the fork point. Branch 0 is the
+/// control: restore and drain with no divergence at all.
+fn apply_branch(sim: &mut Simulator<InterGroupScheduler>, branch: usize, t_fork: f64) {
+    match branch {
+        0 => {}
+        1 => sim.set_intra_policy(IntraPolicyKind::WorkConservingFifo),
+        2 => sim.set_intra_policy(IntraPolicyKind::StrictRoundRobin),
+        3 => sim.set_intra_policy(IntraPolicyKind::SloSlackPriority),
+        4 => {
+            sim.reconfig_group_cap(Some(2));
+        }
+        5 => {
+            sim.reconfig_group_cap(Some(4));
+        }
+        6 => {
+            for k in 0..4 {
+                sim.submit(burst_job(900_000 + k, t_fork));
+            }
+        }
+        _ => {
+            sim.reconfig_group_cap(Some(2));
+            sim.set_intra_policy(IntraPolicyKind::StrictRoundRobin);
+        }
+    }
+}
+
+fn burst_job(id: usize, arrival: f64) -> JobSpec {
+    JobSpec {
+        id,
+        name: format!("burst{id}"),
+        arrival_s: arrival,
+        n_iters: 5,
+        slo: 3.0,
+        n_roll_gpus: 8,
+        n_train_gpus: 8,
+        params_b: 7.0,
+        phases: PhaseSpec::Direct { t_roll: 80.0, t_train: 60.0, cv: 0.0 },
+    }
+}
+
+/// The full bitwise digest: scalars by exact bits, the recorded streams
+/// by equality (both are canonically sorted at finalize).
+fn bitwise(a: &SimResult, b: &SimResult) -> bool {
+    a.makespan_s.to_bits() == b.makespan_s.to_bits()
+        && a.cost_usd.to_bits() == b.cost_usd.to_bits()
+        && a.roll_busy_gpu_s.to_bits() == b.roll_busy_gpu_s.to_bits()
+        && a.train_busy_gpu_s.to_bits() == b.train_busy_gpu_s.to_bits()
+        && a.wasted_gpu_s.to_bits() == b.wasted_gpu_s.to_bits()
+        && a.events_processed == b.events_processed
+        && a.outcomes.len() == b.outcomes.len()
+        && a.records == b.records
+        && a.flight == b.flight
+}
+
+pub fn replay(opts: &ExpOpts) {
+    let n_jobs = ((2_000.0 * opts.scale) as usize).clamp(300, 2_000);
+    let cfg = SimConfig { seed: opts.seed, record_flight: true, ..Default::default() };
+    let mk_trace = || fleet_trace(opts.seed, n_jobs, 1.0);
+    let mk_sim = || Simulator::new(cfg.clone(), InterGroupScheduler::new(cfg.model), mk_trace());
+
+    println!(
+        "replaying {n_jobs} fleet jobs; one shared prefix to {:.0}% of the baseline makespan, \
+         then {BRANCHES} what-if branches vs from-scratch oracles\n",
+        T_FRAC * 100.0
+    );
+
+    // Baseline full run: sets the fork point (and the re-run cost scale).
+    let (base, base_s) = timed(|| mk_sim().run_to_end());
+    let t_fork = base.makespan_s * T_FRAC;
+
+    // Cross-process smoke (the CI's snapshot -> kill -> restore gate):
+    // ROLLMUX_REPLAY_SAVE writes the prefix checkpoint to a file and
+    // exits; ROLLMUX_REPLAY_LOAD restores from a file written by an
+    // earlier, now-dead process. Load-mode stdout is byte-identical to a
+    // normal run at the same seed/scale — the CI diffs the two.
+    if let Ok(path) = std::env::var("ROLLMUX_REPLAY_SAVE") {
+        let mut prefix = mk_sim();
+        let snap = prefix.fork_at(t_fork);
+        let bytes = snap.to_bytes();
+        std::fs::write(&path, &bytes).expect("write checkpoint file");
+        println!(
+            "checkpoint at t={:.0}s: {} live jobs, {} pending events, {} KiB; saved",
+            snap.t(),
+            snap.live_jobs(),
+            snap.pending_events(),
+            bytes.len() / 1024,
+        );
+        return;
+    }
+
+    let (snap, prefix_s, decoded) = if let Ok(path) = std::env::var("ROLLMUX_REPLAY_LOAD") {
+        let bytes = std::fs::read(&path).expect("read checkpoint file");
+        let decoded = SimSnapshot::from_bytes(&bytes).expect("decode checkpoint file");
+        println!(
+            "checkpoint at t={:.0}s: {} live jobs, {} pending events, {} KiB; disk roundtrip {}",
+            decoded.t(),
+            decoded.live_jobs(),
+            decoded.pending_events(),
+            bytes.len() / 1024,
+            if decoded.to_bytes() == bytes { "bitwise identical" } else { "DIVERGED" }
+        );
+        (decoded.clone(), 0.0, decoded)
+    } else {
+        // The one shared prefix simulation + checkpoint, roundtripped
+        // through the byte codec via a temp file. Branch 0 below
+        // restores from the decoded image.
+        let mut prefix = mk_sim();
+        let (snap, prefix_s) = timed(|| prefix.fork_at(t_fork));
+        let bytes = snap.to_bytes();
+        let path = std::env::temp_dir().join(format!("rollmux_replay_{}.snap", std::process::id()));
+        std::fs::write(&path, &bytes).expect("write checkpoint");
+        let readback = std::fs::read(&path).expect("read checkpoint back");
+        let _ = std::fs::remove_file(&path);
+        let decoded = SimSnapshot::from_bytes(&readback).expect("decode checkpoint");
+        println!(
+            "checkpoint at t={:.0}s: {} live jobs, {} pending events, {} KiB; disk roundtrip {}",
+            snap.t(),
+            snap.live_jobs(),
+            snap.pending_events(),
+            bytes.len() / 1024,
+            if decoded.to_bytes() == bytes { "bitwise identical" } else { "DIVERGED" }
+        );
+        (snap, prefix_s, decoded)
+    };
+
+    struct Row {
+        label: &'static str,
+        res: SimResult,
+        ok: bool,
+    }
+    let trace = mk_trace();
+    let mut rows: Vec<Row> = Vec::new();
+    let mut fork_total = prefix_s;
+    let mut rerun_total = 0.0;
+    for branch in 0..BRANCHES {
+        let src = if branch == 0 { &decoded } else { &snap };
+        let (forked, fork_s) = timed(|| {
+            let mut sim = Simulator::restore(cfg.clone(), &trace, src);
+            apply_branch(&mut sim, branch, t_fork);
+            sim.run_to_end()
+        });
+        let (oracle, oracle_s) = timed(|| {
+            let mut sim = mk_sim();
+            sim.run_until(t_fork);
+            apply_branch(&mut sim, branch, t_fork);
+            sim.run_to_end()
+        });
+        fork_total += fork_s;
+        rerun_total += oracle_s;
+        let ok = bitwise(&oracle, &forked);
+        rows.push(Row { label: branch_label(branch), res: forked, ok });
+    }
+
+    let mut t = Table::new(
+        &format!("What-if ablation — {BRANCHES} branches from one checkpoint"),
+        &["branch", "makespan (h)", "cost ($)", "SLO attain", "events", "forked==scratch"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.label.to_string(),
+            f(r.res.makespan_s / 3600.0, 3),
+            f(r.res.cost_usd, 0),
+            pct(r.res.slo_attainment()),
+            format!("{}", r.res.events_processed),
+            (if r.ok { "yes" } else { "NO" }).to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "fork-vs-rerun: {}",
+        if rows.iter().all(|r| r.ok) {
+            "all branches bitwise identical"
+        } else {
+            "DIVERGED (snapshot bug)"
+        }
+    );
+    println!(
+        "\n(recorder + snapshot invariants: DESIGN.md §17; bitwise gates: \
+         rust/tests/prop_snapshot.rs; wall-clock series: BENCH_9.json)"
+    );
+
+    eprintln!("  [timing] baseline full run {base_s:.2}s; shared prefix {prefix_s:.2}s");
+    eprintln!(
+        "  [timing] fork sweep {fork_total:.2}s vs {BRANCHES} independent re-runs \
+         {rerun_total:.2}s; speedup {:.2}x",
+        rerun_total / fork_total.max(1e-9)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every `exp replay` branch forks bitwise-identical to its
+    /// from-scratch oracle at test scale (the exp itself re-checks at
+    /// full scale on every CI run).
+    #[test]
+    fn every_branch_forks_bitwise() {
+        let cfg = SimConfig { seed: 11, record_flight: true, ..Default::default() };
+        let trace = fleet_trace(11, 120, 1.0);
+        let mk = || Simulator::new(cfg.clone(), InterGroupScheduler::new(cfg.model), trace.clone());
+        let base = mk().run_to_end();
+        let t_fork = base.makespan_s * T_FRAC;
+        let mut prefix = mk();
+        let snap = prefix.fork_at(t_fork);
+        for branch in 0..BRANCHES {
+            let mut fork = Simulator::restore(cfg.clone(), &trace, &snap);
+            apply_branch(&mut fork, branch, t_fork);
+            let forked = fork.run_to_end();
+            let mut scratch = mk();
+            scratch.run_until(t_fork);
+            apply_branch(&mut scratch, branch, t_fork);
+            let oracle = scratch.run_to_end();
+            let label = branch_label(branch);
+            assert!(bitwise(&oracle, &forked), "branch {branch} ({label}) diverged");
+        }
+    }
+}

@@ -150,6 +150,38 @@ impl ResidencyLedger {
                 && (p.used_gb - p.jobs.values().sum::<f64>()).abs() < 1e-6
         })
     }
+
+    /// Exact-bits export for the snapshot layer (DESIGN.md §17): every
+    /// node's cached total and per-job pins as raw f64 bit patterns, in
+    /// sorted `(node, job)` order (the BTreeMaps iterate sorted). The
+    /// cached `used_gb` is exported *verbatim* rather than re-derived on
+    /// import: it is maintained by an incremental `+=`/`-=` history whose
+    /// low bits differ from a fresh fold over the surviving pins, and
+    /// [`Self::evict_node`] feeds that cached value into repair
+    /// accounting — replaying pins instead of copying bits would let a
+    /// restored run drift from the run it forked from.
+    pub fn export_parts(&self) -> Vec<(NodeId, u64, Vec<(JobId, u64)>)> {
+        self.pinned
+            .iter()
+            .map(|(&node, p)| {
+                let jobs = p.jobs.iter().map(|(&j, &gb)| (j, gb.to_bits())).collect();
+                (node, p.used_gb.to_bits(), jobs)
+            })
+            .collect()
+    }
+
+    /// Rebuild a ledger bit-exactly from [`Self::export_parts`] output.
+    pub fn from_parts(capacity_gb: f64, parts: &[(NodeId, u64, Vec<(JobId, u64)>)]) -> Self {
+        let mut pinned = BTreeMap::new();
+        for (node, used_bits, jobs) in parts {
+            let mut p = NodePins { used_gb: f64::from_bits(*used_bits), jobs: BTreeMap::new() };
+            for (job, gb_bits) in jobs {
+                p.jobs.insert(*job, f64::from_bits(*gb_bits));
+            }
+            pinned.insert(*node, p);
+        }
+        ResidencyLedger { capacity_gb, pinned }
+    }
 }
 
 #[cfg(test)]
@@ -243,6 +275,39 @@ mod tests {
         assert!(!l.is_resident(4, 1) && !l.is_resident(4, 2));
         assert!(l.is_resident(5, 1));
         assert_eq!(l.evict_node(99), 0.0);
+    }
+
+    /// DESIGN.md §17: export/import must round-trip the ledger bit-exactly
+    /// — including the incrementally-maintained `used_gb` caches, whose
+    /// low bits a pin-replay could not reproduce.
+    #[test]
+    fn export_import_roundtrips_bitwise() {
+        let mut l = ResidencyLedger::new(10_000.0);
+        let mut rng = Rng::new(31);
+        for _ in 0..500 {
+            let node = rng.range(0, 8);
+            let job = rng.range(0, 20);
+            match rng.range(0, 8) {
+                0..=4 => {
+                    l.pin(node, job, rng.uniform(1.0, 900.0));
+                }
+                5..=6 => {
+                    l.unpin(node, job);
+                }
+                _ => {
+                    l.evict_node(node);
+                }
+            }
+        }
+        let parts = l.export_parts();
+        let r = ResidencyLedger::from_parts(l.capacity_gb(), &parts);
+        assert_eq!(r.capacity_gb().to_bits(), l.capacity_gb().to_bits());
+        assert_eq!(r.tracked_nodes(), l.tracked_nodes());
+        for n in 0..8 {
+            assert_eq!(r.used_gb(n).to_bits(), l.used_gb(n).to_bits(), "node {n} cache bits");
+            assert_eq!(r.residents(n), l.residents(n));
+        }
+        assert_eq!(r.export_parts(), parts, "re-export is stable");
     }
 
     /// ISSUE 5 satellite: the cached per-node `used_gb` must track the

@@ -47,6 +47,7 @@ use crate::coordinator::repair::MemberFate;
 use crate::metrics::sim_result_json;
 use crate::runtime::driver::{drive_group, plan_direct_job};
 use crate::sim::engine::{SimConfig, Simulator, WorldEvent};
+use crate::sim::recorder::Frame;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::workload::job::{JobSpec, PhaseSpec};
 
@@ -296,6 +297,11 @@ const EV_DONE: u32 = 1;
 const EV_FAULT: u32 = 2;
 const EV_REPAIR: u32 = 4;
 const EV_RECONFIG: u32 = 8;
+/// Flight-recorder metric frames (ISSUE 9): per-group utilization
+/// samples and per-job SLO-slack series. Opt-in only — deliberately NOT
+/// part of `EV_ALL`, so pre-existing subscriptions (and their journaled
+/// replays) deliver exactly the lines they always did.
+const EV_METRICS: u32 = 16;
 const EV_ALL: u32 = EV_DONE | EV_FAULT | EV_REPAIR | EV_RECONFIG;
 
 pub struct Daemon {
@@ -326,6 +332,12 @@ pub struct Daemon {
 impl Daemon {
     /// Daemon over the deterministic virtual cluster.
     pub fn new_virtual(cfg: DaemonConfig) -> Daemon {
+        // Arm the flight recorder (ISSUE 9): it feeds the metrics push
+        // class. Arming is part of the deterministic state machine, like
+        // `arm_events` below: replay re-arms, so push/drop accounting
+        // replays bitwise.
+        let mut cfg = cfg;
+        cfg.sim.record_flight = true;
         let mut sim = Simulator::open(cfg.sim.clone(), InterGroupScheduler::new(cfg.sim.model));
         // Record world events for the push channel. Recording is part of
         // the deterministic state machine: replay re-records, so the
@@ -955,9 +967,11 @@ impl Daemon {
     // Event push (ISSUE 8)
     // ------------------------------------------------------------------
 
-    /// `{"cmd":"subscribe","events":["done","fault","repair","reconfig"]}`
-    /// — register the issuing tenant for event push; no/empty `events`
-    /// means all classes. Idempotent: re-subscribing replaces the mask.
+    /// `{"cmd":"subscribe","events":["done","fault","repair","reconfig",
+    /// "metrics"]}` — register the issuing tenant for event push;
+    /// no/empty `events` means all classes except `metrics` (the metric
+    /// series is opt-in by name). Idempotent: re-subscribing replaces
+    /// the mask.
     fn cmd_subscribe(&mut self, j: &Json, tenant: u32) -> Vec<Routed> {
         let mut mask = 0u32;
         let mut names: Vec<&str> = Vec::new();
@@ -971,6 +985,7 @@ impl Daemon {
                         Some("fault") => EV_FAULT,
                         Some("repair") => EV_REPAIR,
                         Some("reconfig") => EV_RECONFIG,
+                        Some("metrics") => EV_METRICS,
                         _ => {
                             return vec![(
                                 tenant,
@@ -985,9 +1000,13 @@ impl Daemon {
                 }
             }
         }
-        for (bit, name) in
-            [(EV_DONE, "done"), (EV_FAULT, "fault"), (EV_REPAIR, "repair"), (EV_RECONFIG, "reconfig")]
-        {
+        for (bit, name) in [
+            (EV_DONE, "done"),
+            (EV_FAULT, "fault"),
+            (EV_REPAIR, "repair"),
+            (EV_RECONFIG, "reconfig"),
+            (EV_METRICS, "metrics"),
+        ] {
             if mask & bit != 0 {
                 names.push(name);
             }
@@ -1030,6 +1049,17 @@ impl Daemon {
         if let Backend::Virtual(sim) = &mut self.backend {
             for we in sim.take_world_events() {
                 evs.push(world_event_line(&we));
+            }
+            // Flight-recorder frames (ISSUE 9): ALWAYS drained — whether
+            // anyone subscribed to metrics or not — so the recorder stays
+            // bounded over a long daemon session and the drain sequence
+            // is a pure function of the command sequence. Only the metric
+            // series becomes push lines; phase/world frames are covered
+            // by the classes above.
+            for f in sim.take_frames() {
+                if let Some(line) = metric_line(&f) {
+                    evs.push(line);
+                }
             }
         }
         evs.append(&mut self.turn_events);
@@ -1373,6 +1403,39 @@ fn world_event_line(we: &WorldEvent) -> (u32, String) {
             ])
             .to_string(),
         ),
+    }
+}
+
+/// Render a flight-recorder frame (ISSUE 9) as a metrics push line —
+/// `util` carries a group's cumulative busy GPU-seconds per pool,
+/// `slo_slack` a job's remaining SLO headroom after an iteration.
+/// Phase/world frames return `None`: phases are too chatty for the push
+/// channel and world events already have their own classes.
+fn metric_line(f: &Frame) -> Option<(u32, String)> {
+    match f {
+        Frame::Util { t, gid, roll_busy_gpu_s, train_busy_gpu_s } => Some((
+            EV_METRICS,
+            obj(vec![
+                ("event", s("util")),
+                ("group", num(*gid as f64)),
+                ("roll_busy_gpu_s", num(*roll_busy_gpu_s)),
+                ("train_busy_gpu_s", num(*train_busy_gpu_s)),
+                ("t", num(*t)),
+            ])
+            .to_string(),
+        )),
+        Frame::SloSlack { t, job, iter, slack_s } => Some((
+            EV_METRICS,
+            obj(vec![
+                ("event", s("slo_slack")),
+                ("job", num(*job as f64)),
+                ("iter", num(*iter as f64)),
+                ("slack_s", num(*slack_s)),
+                ("t", num(*t)),
+            ])
+            .to_string(),
+        )),
+        Frame::Phase(_) | Frame::World(_) => None,
     }
 }
 
@@ -1863,6 +1926,36 @@ mod tests {
             out.iter().any(|l| l.contains("\"event\":\"reconfig\"")),
             "reconfig events pass the mask: {out:?}"
         );
+    }
+
+    /// ISSUE 9: the `metrics` class streams the flight recorder's util +
+    /// SLO-slack series. It is opt-in by name — a default subscription
+    /// (EV_ALL) must keep delivering exactly the pre-existing classes.
+    #[test]
+    fn metrics_class_is_opt_in_and_streams_series() {
+        // Default subscription: no metric lines ride along.
+        let mut d = Daemon::new_virtual(DaemonConfig::default());
+        d.handle_line("{\"cmd\":\"subscribe\"}");
+        d.handle_line(&admit_line(0, 10.0, 10.0, 8, 3));
+        let out = d.handle_line("{\"cmd\":\"advance\",\"dt\":100000}");
+        assert!(
+            !out.iter().any(|l| l.contains("\"event\":\"util\"")
+                || l.contains("\"event\":\"slo_slack\"")),
+            "metrics must be opt-in: {out:?}"
+        );
+        // Explicit opt-in: both series stream, other classes filtered.
+        let mut d = Daemon::new_virtual(DaemonConfig::default());
+        let out = d.handle_line("{\"cmd\":\"subscribe\",\"events\":[\"metrics\"]}");
+        assert!(out[0].contains("\"ok\":\"subscribe\"") && out[0].contains("metrics"), "{out:?}");
+        d.handle_line(&admit_line(0, 10.0, 10.0, 8, 3));
+        let out = d.handle_line("{\"cmd\":\"advance\",\"dt\":100000}");
+        assert!(out.iter().any(|l| l.contains("\"event\":\"util\"")), "{out:?}");
+        assert!(out.iter().any(|l| l.contains("\"event\":\"slo_slack\"")), "{out:?}");
+        assert!(
+            !out.iter().any(|l| l.contains("\"event\":\"done\"")),
+            "a metrics-only mask filters other classes: {out:?}"
+        );
+        assert!(d.stats().events_pushed >= 6, "3 iters -> 3 util + 3 slo_slack samples");
     }
 
     #[test]

@@ -49,14 +49,15 @@ use std::collections::{BinaryHeap, HashMap};
 
 use super::arena::{AcctArena, GroupAcct};
 use super::calendar::{CalendarQueue, LaneQueue};
-use super::faults::{FaultConfig, FaultKind, FaultStream};
+use super::faults::{FaultConfig, FaultEvent, FaultKind, FaultStream};
+use super::recorder::{canonical_sort_records, FlightRecorder, Frame};
 
 use crate::cluster::node::GPUS_PER_NODE;
 use crate::cluster::{GpuKind, PhaseModel};
 use crate::coordinator::group::Group;
-use crate::coordinator::inter::{Decision, InterGroupScheduler};
+use crate::coordinator::inter::{Decision, InterGroupScheduler, SchedSnapshot};
 use crate::coordinator::migration::MigrationPolicy;
-use crate::coordinator::orchestrator::{CorePhase, GroupOrchestrator, IntraPolicyKind};
+use crate::coordinator::orchestrator::{CorePhase, GroupOrchestrator, IntraPolicyKind, OrchSnapshot};
 use crate::coordinator::repair::{self, MemberFate, RepairOutcome, ShrinkOutcome};
 use crate::memory::switching::SwitchModel;
 use crate::sync::{sync_time_s, SyncScheme};
@@ -163,7 +164,7 @@ pub enum PhaseKind {
 }
 
 /// One executed phase, for gantt/metrics export.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PhaseRecord {
     pub job: JobId,
     pub group: usize,
@@ -219,6 +220,15 @@ pub struct SimConfig {
     pub intra: IntraPolicyKind,
     /// Record per-phase gantt entries (disable for big sweeps).
     pub record_gantt: bool,
+    /// Arm the flight recorder (ISSUE 9, DESIGN.md §17): a compact
+    /// append-only stream of phase records, world events, per-group
+    /// utilization samples and per-job SLO-slack samples into
+    /// [`SimResult::flight`]. Subsumes gantt recording (a `Frame::Phase`
+    /// wraps the same [`PhaseRecord`]) and is cheap enough to leave on:
+    /// recording never changes engine decisions, so every other result
+    /// field is bitwise identical with it on or off (property-tested in
+    /// `rust/tests/prop_snapshot.rs`).
+    pub record_flight: bool,
     /// Pending-event structure (bit-identical results either way).
     pub event_queue: EventQueueKind,
     /// Simulation tier: event-exact DES or the fluid fast path. Honored
@@ -244,6 +254,7 @@ impl Default for SimConfig {
             sync_scheme: SyncScheme::Hierarchical,
             intra: IntraPolicyKind::default(),
             record_gantt: false,
+            record_flight: false,
             event_queue: EventQueueKind::default(),
             fidelity: Fidelity::default(),
             faults: None,
@@ -341,6 +352,11 @@ pub struct SimResult {
     /// [`Simulator::rollback_admission`]. Always zero on batch runs —
     /// only the open-world (daemon) API cancels.
     pub cancelled: usize,
+    /// The flight-recorder stream (ISSUE 9, DESIGN.md §17): empty unless
+    /// `SimConfig::record_flight` armed it. Canonically sorted at
+    /// `finalize` — the same total order whether the run was serial or
+    /// group-parallel.
+    pub flight: FlightRecorder,
 }
 
 impl SimResult {
@@ -602,7 +618,10 @@ pub struct AdmissionMark {
 
 /// The engine's pending-event set: the calendar ring by default, the
 /// historical heap as the oracle. Both pop the exact same `(t, seq)`
-/// total order.
+/// total order. `Clone` exists for the snapshot layer (DESIGN.md §17):
+/// a snapshot drains a clone via `pop_with_seq`, so capture is
+/// non-destructive and the serialized order is the pop order.
+#[derive(Clone)]
 enum EventQueue {
     Calendar(CalendarQueue<Ev>),
     Heap(BinaryHeap<Event>),
@@ -747,6 +766,28 @@ struct LaneCtx<'a> {
     now: f64,
     scratch: &'a mut Vec<f64>,
     records: &'a mut Vec<PhaseRecord>,
+    flight: &'a mut FlightRecorder,
+}
+
+/// Route one phase record to the streams its config gates arm: the gantt
+/// vector (`record_gantt`), the flight recorder (`record_flight`), or
+/// both. One shared emitter so the serial loop, the lane drain and the
+/// coordinator-side recorder cannot drift.
+fn emit_phase(
+    gantt: bool,
+    flight_on: bool,
+    records: &mut Vec<PhaseRecord>,
+    flight: &mut FlightRecorder,
+    rec: PhaseRecord,
+) {
+    if gantt && flight_on {
+        records.push(rec.clone());
+        flight.push(Frame::Phase(rec));
+    } else if gantt {
+        records.push(rec);
+    } else if flight_on {
+        flight.push(Frame::Phase(rec));
+    }
 }
 
 impl LaneCtx<'_> {
@@ -1007,6 +1048,19 @@ impl LaneCtx<'_> {
             PhaseKind::Train => {
                 self.jobs.job(slot).phase = None;
                 self.orch.release_train(slot);
+                if self.cfg.record_flight {
+                    // Utilization sample at every train completion: the
+                    // group's CUMULATIVE busy integrals so far. Lane-local
+                    // state, so serial and parallel runs sample identical
+                    // values at identical times.
+                    let gid = self.jobs.job_ref(slot).group;
+                    self.flight.push(Frame::Util {
+                        t: now,
+                        gid,
+                        roll_busy_gpu_s: self.acct.roll_busy_gpu_s,
+                        train_busy_gpu_s: self.acct.train_busy_gpu_s,
+                    });
+                }
                 // Sync occupies the network, not the pools.
                 let t_sync = self.jobs.job_ref(slot).t_sync;
                 let end = now + t_sync;
@@ -1015,13 +1069,30 @@ impl LaneCtx<'_> {
                 self.drain_dispatch();
             }
             PhaseKind::Sync => {
-                let rt = self.jobs.job(slot);
-                rt.iter += 1;
-                // The sync published the update: the iteration is
-                // checkpointed, nothing accrued so far can be lost.
-                rt.iter_busy_gpu_s = 0.0;
-                rt.iter_wasted_gpu_s = 0.0;
-                if rt.iter >= rt.spec.n_iters {
+                let (job, iters_done, finished, slack_s) = {
+                    let rt = self.jobs.job(slot);
+                    rt.iter += 1;
+                    // The sync published the update: the iteration is
+                    // checkpointed, nothing accrued so far can be lost.
+                    rt.iter_busy_gpu_s = 0.0;
+                    rt.iter_wasted_gpu_s = 0.0;
+                    // SLO slack after this iteration: the elapsed budget a
+                    // pro-rated SLO deadline still allows (negative = the
+                    // job is currently violating its SLO).
+                    let allowed =
+                        rt.spec.slo * (rt.init_s + rt.solo_est_iter_s * rt.iter as f64);
+                    let slack = allowed - (now - rt.spec.arrival_s);
+                    (rt.spec.id, rt.iter, rt.iter >= rt.spec.n_iters, slack)
+                };
+                if self.cfg.record_flight {
+                    self.flight.push(Frame::SloSlack {
+                        t: now,
+                        job,
+                        iter: iters_done,
+                        slack_s,
+                    });
+                }
+                if finished {
                     return true;
                 }
                 self.sample_iteration(slot);
@@ -1032,9 +1103,9 @@ impl LaneCtx<'_> {
     }
 
     fn record(&mut self, slot: usize, kind: PhaseKind, iter: usize, start: f64, end: f64, roll_nodes: &[usize]) {
-        if self.cfg.record_gantt {
+        if self.cfg.record_gantt || self.cfg.record_flight {
             let rt = self.jobs.job_ref(slot);
-            self.records.push(PhaseRecord {
+            let rec = PhaseRecord {
                 job: rt.spec.id,
                 group: rt.group,
                 kind,
@@ -1042,16 +1113,18 @@ impl LaneCtx<'_> {
                 start,
                 end,
                 roll_nodes: roll_nodes.to_vec(),
-            });
+            };
+            emit_phase(self.cfg.record_gantt, self.cfg.record_flight, self.records, self.flight, rec);
         }
     }
 
-    /// Rollout record: the node list is only cloned when gantt recording
-    /// is on (the per-phase allocation the seed engine paid regardless).
+    /// Rollout record: the node list is only cloned when a recording
+    /// stream is on (the per-phase allocation the seed engine paid
+    /// regardless).
     fn record_rollout(&mut self, slot: usize, iter: usize, start: f64, end: f64) {
-        if self.cfg.record_gantt {
+        if self.cfg.record_gantt || self.cfg.record_flight {
             let rt = self.jobs.job_ref(slot);
-            self.records.push(PhaseRecord {
+            let rec = PhaseRecord {
                 job: rt.spec.id,
                 group: rt.group,
                 kind: PhaseKind::Rollout,
@@ -1059,7 +1132,8 @@ impl LaneCtx<'_> {
                 start,
                 end,
                 roll_nodes: rt.roll_nodes.clone(),
-            });
+            };
+            emit_phase(self.cfg.record_gantt, self.cfg.record_flight, self.records, self.flight, rec);
         }
     }
 }
@@ -1085,6 +1159,9 @@ struct GroupLane {
     /// Clock high-water of processed events (`NEG_INFINITY` if none).
     now: f64,
     records: Vec<PhaseRecord>,
+    /// Lane-local flight-recorder batch, merged (then canonically
+    /// sorted at finalize) exactly like `records`.
+    flight: FlightRecorder,
     /// Stopped before a would-complete final sync (a global barrier
     /// discovered mid-drain): everything still queued is deferred and
     /// the window's popped barrier must be re-queued behind it.
@@ -1139,6 +1216,7 @@ fn drain_lane(cfg: &SimConfig, lane: &mut GroupLane, scratch: &mut Vec<f64>) {
             now: t,
             scratch,
             records: &mut lane.records,
+            flight: &mut lane.flight,
         };
         let finished = ctx.dispatch(ev);
         debug_assert!(finished.is_none(), "final syncs stop the lane before dispatch");
@@ -1293,7 +1371,14 @@ impl<S: GroupScheduler> Simulator<S> {
     }
 
     /// Emit a push-channel event when armed (free when not: one branch).
+    /// With the flight recorder on, the event also enters the frame
+    /// stream — world events are coordinator-side only (never emitted
+    /// inside a lane), so their recording order is deterministic on both
+    /// the serial and the parallel path.
     fn world_event(&mut self, ev: WorldEvent) {
+        if self.cfg.record_flight {
+            self.res.flight.push(Frame::World(ev.clone()));
+        }
         if self.emit_events {
             self.world_events.push(ev);
         }
@@ -1413,6 +1498,7 @@ impl<S: GroupScheduler> Simulator<S> {
             horizon,
             now: f64::NEG_INFINITY,
             records: Vec::new(),
+            flight: FlightRecorder::default(),
             hit_completion: false,
         }
     }
@@ -1435,6 +1521,7 @@ impl<S: GroupScheduler> Simulator<S> {
         self.group_rt[lane.gid] = std::mem::replace(&mut lane.orch, GroupOrchestrator::new(intra));
         self.accts.put(lane.gid, std::mem::take(&mut lane.acct));
         self.res.records.append(&mut lane.records);
+        self.res.flight.append(&mut lane.flight);
         while let Some((t, _, ev)) = lane.queue.pop() {
             self.push(t, ev);
         }
@@ -1462,10 +1549,12 @@ impl<S: GroupScheduler> Simulator<S> {
     /// seq argument above) and defers the barrier behind it: completions
     /// are global and must run on the coordinator in time order.
     ///
-    /// `workers <= 1` falls through to the serial loop. With
-    /// `cfg.record_gantt` on, the per-lane record batches concatenate in
-    /// gid order rather than global time order within a window (the only
-    /// observable difference; sweeps leave gantt recording off).
+    /// `workers <= 1` falls through to the serial loop. Per-lane record
+    /// and flight-recorder batches concatenate in gid order within a
+    /// window rather than global time order — `finalize` canonically
+    /// sorts both streams on BOTH paths (ISSUE 9), so recorded output is
+    /// bit-identical to the serial loop's too (property-tested in
+    /// `rust/tests/prop_snapshot.rs`).
     pub fn run_parallel(&mut self, workers: usize) -> SimResult {
         if workers <= 1 {
             return self.run_to_end();
@@ -1680,6 +1769,13 @@ impl<S: GroupScheduler> Simulator<S> {
             }
         }
         self.accts.clear();
+        // Canonical total order for both recorded streams (ISSUE 9): the
+        // serial loop appends in global time order, the parallel drain in
+        // gid-batched window order — the sort key is a total order whose
+        // ties only occur between bit-identical entries, so both paths
+        // finish with the exact same sequence.
+        canonical_sort_records(&mut self.res.records);
+        self.res.flight.canonical_sort();
         std::mem::take(&mut self.res)
     }
 
@@ -1780,6 +1876,7 @@ impl<S: GroupScheduler> Simulator<S> {
             now: self.now,
             scratch: &mut self.scratch_lengths,
             records: &mut self.res.records,
+            flight: &mut self.res.flight,
         }
     }
 
@@ -2119,9 +2216,9 @@ impl<S: GroupScheduler> Simulator<S> {
     }
 
     fn record(&mut self, slot: usize, kind: PhaseKind, iter: usize, start: f64, end: f64, roll_nodes: &[usize]) {
-        if self.cfg.record_gantt {
+        if self.cfg.record_gantt || self.cfg.record_flight {
             let rt = &self.jobs[slot];
-            self.res.records.push(PhaseRecord {
+            let rec = PhaseRecord {
                 job: rt.spec.id,
                 group: rt.group,
                 kind,
@@ -2129,7 +2226,14 @@ impl<S: GroupScheduler> Simulator<S> {
                 start,
                 end,
                 roll_nodes: roll_nodes.to_vec(),
-            });
+            };
+            emit_phase(
+                self.cfg.record_gantt,
+                self.cfg.record_flight,
+                &mut self.res.records,
+                &mut self.res.flight,
+                rec,
+            );
         }
     }
 
@@ -2322,6 +2426,30 @@ impl<S: GroupScheduler> Simulator<S> {
         std::mem::take(&mut self.world_events)
     }
 
+    /// Drain every flight-recorder [`Frame`] buffered since the last
+    /// drain, in emission order — the daemon's incremental metrics bus
+    /// (ISSUE 9). Empty unless `cfg.record_flight` is armed. Recording
+    /// is part of the deterministic state machine, so a journal replay
+    /// re-records (and re-drains) the identical frame sequence. Batch
+    /// runs should NOT drain mid-run: frames left in place are
+    /// canonically sorted into [`SimResult::flight`] at finalize.
+    pub fn take_frames(&mut self) -> Vec<Frame> {
+        self.res.flight.drain()
+    }
+
+    /// Process every pending event due at or before `deadline`, WITHOUT
+    /// advancing the clock past the last processed event — unlike
+    /// [`Self::step_until`], which models idle wall-time passing. This
+    /// is the fork primitive (ISSUE 9): a snapshot taken after
+    /// `run_until(t)` captures exactly the prefix of the run up to `t`,
+    /// with the makespan clock still owned by real events, so a forked
+    /// continuation is bit-identical to an uninterrupted run.
+    pub fn run_until(&mut self, deadline: f64) {
+        while let Some((t, ev)) = self.events.pop_at_or_before(deadline) {
+            self.process_event(t, ev);
+        }
+    }
+
     /// Live intra-group policy swap (ISSUE 8): future groups build with
     /// the new policy (`ensure_group_rt` reads `cfg.intra`), and every
     /// existing orchestrator rebuilds its policy with the survivors
@@ -2414,6 +2542,1279 @@ impl<S: GroupScheduler> Simulator<S> {
         }
         self.rate_changed();
         Some(outcomes)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Snapshot / fork (ISSUE 9, DESIGN.md §17).
+//
+// A snapshot captures the simulator's FULL mutable state — job slab,
+// event queue (with original seqs), orchestrator cores, scheduler
+// groups + residency ledger, fault stream, RNG states, cost integrator,
+// partial results — but NOT the immutable inputs (SimConfig, the trace's
+// JobSpecs, PhaseModel): the caller re-supplies those on restore, and
+// the snapshot only carries the two spec fields the engine mutates
+// live (`cfg.intra` via set_intra_policy; `arrival_s` via submit's
+// clamp). Restoring and draining is bit-identical to never having
+// snapshotted (property-tested in rust/tests/prop_snapshot.rs).
+// ----------------------------------------------------------------------
+
+/// Captured mutable state of one job-slab slot. The spec itself is NOT
+/// stored — restore resolves it by job id from the caller-supplied
+/// trace (slab slot != trace index once jobs spill or arrive out of
+/// order) and overrides `arrival_s` with the captured value.
+#[derive(Clone, Debug)]
+struct JobSnap {
+    id: JobId,
+    arrival_s: f64,
+    group: usize,
+    roll_nodes: Vec<usize>,
+    train_gpus: usize,
+    train_scale: f64,
+    t_sync: f64,
+    iter: usize,
+    solo_s: f64,
+    solo_est_iter_s: f64,
+    init_s: f64,
+    migrations: usize,
+    rng: (u64, u64),
+    cur_troll: f64,
+    cur_ttrain: f64,
+    cur_roll_end: f64,
+    tail_penalty: f64,
+    tail_frac: f64,
+    done: bool,
+    epoch: u32,
+    phase: Option<PhaseKind>,
+    phase_start_s: f64,
+    cur_train_end: f64,
+    iter_sampled: bool,
+    iter_busy_gpu_s: f64,
+    iter_wasted_gpu_s: f64,
+    consolidated: bool,
+    pending_tail: Option<(f64, usize)>,
+    recoveries: usize,
+    recovery_s: f64,
+}
+
+impl JobSnap {
+    fn capture(rt: &JobRt) -> JobSnap {
+        JobSnap {
+            id: rt.spec.id,
+            arrival_s: rt.spec.arrival_s,
+            group: rt.group,
+            roll_nodes: rt.roll_nodes.clone(),
+            train_gpus: rt.train_gpus,
+            train_scale: rt.train_scale,
+            t_sync: rt.t_sync,
+            iter: rt.iter,
+            solo_s: rt.solo_s,
+            solo_est_iter_s: rt.solo_est_iter_s,
+            init_s: rt.init_s,
+            migrations: rt.migrations,
+            rng: rt.rng.to_parts(),
+            cur_troll: rt.cur_troll,
+            cur_ttrain: rt.cur_ttrain,
+            cur_roll_end: rt.cur_roll_end,
+            tail_penalty: rt.tail_penalty,
+            tail_frac: rt.tail_frac,
+            done: rt.done,
+            epoch: rt.epoch,
+            phase: rt.phase,
+            phase_start_s: rt.phase_start_s,
+            cur_train_end: rt.cur_train_end,
+            iter_sampled: rt.iter_sampled,
+            iter_busy_gpu_s: rt.iter_busy_gpu_s,
+            iter_wasted_gpu_s: rt.iter_wasted_gpu_s,
+            consolidated: rt.consolidated,
+            pending_tail: rt.pending_tail,
+            recoveries: rt.recoveries,
+            recovery_s: rt.recovery_s,
+        }
+    }
+
+    /// Rebuild the slab entry around the caller-resolved spec (its
+    /// `arrival_s` already overridden with the captured value).
+    fn revive(&self, spec: JobSpec) -> JobRt {
+        JobRt {
+            spec,
+            group: self.group,
+            roll_nodes: self.roll_nodes.clone(),
+            train_gpus: self.train_gpus,
+            train_scale: self.train_scale,
+            t_sync: self.t_sync,
+            iter: self.iter,
+            solo_s: self.solo_s,
+            solo_est_iter_s: self.solo_est_iter_s,
+            init_s: self.init_s,
+            migrations: self.migrations,
+            rng: Rng::from_parts(self.rng.0, self.rng.1),
+            cur_troll: self.cur_troll,
+            cur_ttrain: self.cur_ttrain,
+            cur_roll_end: self.cur_roll_end,
+            tail_penalty: self.tail_penalty,
+            tail_frac: self.tail_frac,
+            done: self.done,
+            epoch: self.epoch,
+            phase: self.phase,
+            phase_start_s: self.phase_start_s,
+            cur_train_end: self.cur_train_end,
+            iter_sampled: self.iter_sampled,
+            iter_busy_gpu_s: self.iter_busy_gpu_s,
+            iter_wasted_gpu_s: self.iter_wasted_gpu_s,
+            consolidated: self.consolidated,
+            pending_tail: self.pending_tail,
+            recoveries: self.recoveries,
+            recovery_s: self.recovery_s,
+        }
+    }
+}
+
+/// A full-state checkpoint of a [`Simulator<InterGroupScheduler>`]
+/// (ISSUE 9, DESIGN.md §17). Opaque by design: its fields are private
+/// (several wrap private engine types), it is produced by
+/// [`Simulator::snapshot`] / [`Simulator::fork_at`], consumed by
+/// [`Simulator::restore`], and serialized deterministically via
+/// [`Self::to_bytes`] / [`Self::from_bytes`] (all map-shaped state is
+/// captured in sorted order, f64s as exact bits — same bytes for the
+/// same state, byte-for-byte).
+#[derive(Clone, Debug)]
+pub struct SimSnapshot {
+    now: f64,
+    seq: u64,
+    /// `cfg.intra` is live-mutated (`set_intra_policy`), so the snapshot
+    /// carries it and restore overrides the caller cfg's value.
+    intra: IntraPolicyKind,
+    /// Per trace index: `Some((id, arrival_s))` while the arrival has
+    /// not fired (submit may have clamped `arrival_s`; the id gates the
+    /// caller-supplied spec at restore).
+    trace_pending: Vec<Option<(JobId, f64)>>,
+    /// The pending-event set in pop order, with ORIGINAL seqs — restore
+    /// re-pushes them verbatim, and pop order is a total order on
+    /// `(t, seq)`, so the restored queue pops identically (even across
+    /// `EventQueueKind`s).
+    events: Vec<(f64, u64, Ev)>,
+    jobs: Vec<JobSnap>,
+    /// Sorted by job id (HashMap mirror, deterministic serialization).
+    job_slot: Vec<(JobId, usize)>,
+    faults: Option<(((u64, u64), f64, usize), usize, Option<FaultEvent>)>,
+    /// Sorted by (gid, node) (HashMap mirror).
+    node_down_until: Vec<(usize, usize, f64)>,
+    orchs: Vec<OrchSnapshot>,
+    accts: Vec<GroupAcct>,
+    members: Vec<Vec<usize>>,
+    high_water: f64,
+    /// The partial result as of the snapshot (pre-finalize: busy
+    /// integrals still live in `accts`).
+    res: SimResult,
+    open_world: bool,
+    last_rate_change: f64,
+    cur_rate_per_h: f64,
+    cur_roll_gpus: usize,
+    cur_train_gpus: usize,
+    emit_events: bool,
+    world_events: Vec<WorldEvent>,
+    sched: SchedSnapshot,
+}
+
+impl SimSnapshot {
+    /// Virtual time the snapshot was taken at.
+    pub fn t(&self) -> f64 {
+        self.now
+    }
+
+    /// Live (admitted, not yet settled) jobs in the captured slab.
+    pub fn live_jobs(&self) -> usize {
+        self.jobs.iter().filter(|j| !j.done).count()
+    }
+
+    /// Pending events in the captured queue.
+    pub fn pending_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Serialize to a deterministic byte image (DESIGN.md §17). Fixed
+    /// 8-byte little-endian words: f64s as exact IEEE bits, usizes as
+    /// u64, enums as explicit tags, map-shaped state already sorted at
+    /// capture — the same state always yields the same bytes, so two
+    /// snapshots are bit-identical iff their byte images are.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        e.buf.extend_from_slice(SNAP_MAGIC);
+        e.f64(self.now);
+        e.u64(self.seq);
+        e.u64(intra_tag(self.intra));
+        e.usize(self.trace_pending.len());
+        for p in &self.trace_pending {
+            match p {
+                None => e.bool(false),
+                Some((id, arr)) => {
+                    e.bool(true);
+                    e.usize(*id);
+                    e.f64(*arr);
+                }
+            }
+        }
+        e.usize(self.events.len());
+        for &(t, seq, ev) in &self.events {
+            e.f64(t);
+            e.u64(seq);
+            enc_ev(&mut e, ev);
+        }
+        e.usize(self.jobs.len());
+        for j in &self.jobs {
+            enc_job(&mut e, j);
+        }
+        e.usize(self.job_slot.len());
+        for &(id, slot) in &self.job_slot {
+            e.usize(id);
+            e.usize(slot);
+        }
+        match &self.faults {
+            None => e.bool(false),
+            Some(((rng, t, emitted), handed, pending)) => {
+                e.bool(true);
+                e.u64(rng.0);
+                e.u64(rng.1);
+                e.f64(*t);
+                e.usize(*emitted);
+                e.usize(*handed);
+                match pending {
+                    None => e.bool(false),
+                    Some(f) => {
+                        e.bool(true);
+                        enc_fault(&mut e, f);
+                    }
+                }
+            }
+        }
+        e.usize(self.node_down_until.len());
+        for &(g, n, t) in &self.node_down_until {
+            e.usize(g);
+            e.usize(n);
+            e.f64(t);
+        }
+        e.usize(self.orchs.len());
+        for o in &self.orchs {
+            enc_orch(&mut e, o);
+        }
+        e.usize(self.accts.len());
+        for a in &self.accts {
+            enc_acct(&mut e, a);
+        }
+        e.usize(self.members.len());
+        for m in &self.members {
+            e.usizes(m);
+        }
+        e.f64(self.high_water);
+        enc_result(&mut e, &self.res);
+        e.bool(self.open_world);
+        e.f64(self.last_rate_change);
+        e.f64(self.cur_rate_per_h);
+        e.usize(self.cur_roll_gpus);
+        e.usize(self.cur_train_gpus);
+        e.bool(self.emit_events);
+        e.usize(self.world_events.len());
+        for w in &self.world_events {
+            enc_world(&mut e, w);
+        }
+        enc_sched(&mut e, &self.sched);
+        e.buf
+    }
+
+    /// Decode a [`Self::to_bytes`] image. Errors (never panics) on a bad
+    /// magic, truncation, unknown enum tags, or trailing bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SimSnapshot, String> {
+        if bytes.len() < SNAP_MAGIC.len() || &bytes[..SNAP_MAGIC.len()] != SNAP_MAGIC {
+            return Err("snapshot corrupt: bad magic (not an RMSNAP01 image)".to_string());
+        }
+        let mut d = Dec { buf: bytes, pos: SNAP_MAGIC.len() };
+        let now = d.f64()?;
+        let seq = d.u64()?;
+        let intra = intra_from(d.u64()?)?;
+        let n = d.len()?;
+        let mut trace_pending = Vec::with_capacity(n);
+        for _ in 0..n {
+            trace_pending.push(if d.bool()? {
+                Some((d.usize()?, d.f64()?))
+            } else {
+                None
+            });
+        }
+        let n = d.len()?;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            events.push((d.f64()?, d.u64()?, dec_ev(&mut d)?));
+        }
+        let n = d.len()?;
+        let mut jobs = Vec::with_capacity(n);
+        for _ in 0..n {
+            jobs.push(dec_job(&mut d)?);
+        }
+        let n = d.len()?;
+        let mut job_slot = Vec::with_capacity(n);
+        for _ in 0..n {
+            job_slot.push((d.usize()?, d.usize()?));
+        }
+        let faults = if d.bool()? {
+            let rng = (d.u64()?, d.u64()?);
+            let t = d.f64()?;
+            let emitted = d.usize()?;
+            let handed = d.usize()?;
+            let pending = if d.bool()? { Some(dec_fault(&mut d)?) } else { None };
+            Some(((rng, t, emitted), handed, pending))
+        } else {
+            None
+        };
+        let n = d.len()?;
+        let mut node_down_until = Vec::with_capacity(n);
+        for _ in 0..n {
+            node_down_until.push((d.usize()?, d.usize()?, d.f64()?));
+        }
+        let n = d.len()?;
+        let mut orchs = Vec::with_capacity(n);
+        for _ in 0..n {
+            orchs.push(dec_orch(&mut d)?);
+        }
+        let n = d.len()?;
+        let mut accts = Vec::with_capacity(n);
+        for _ in 0..n {
+            accts.push(dec_acct(&mut d)?);
+        }
+        let n = d.len()?;
+        let mut members = Vec::with_capacity(n);
+        for _ in 0..n {
+            members.push(d.usizes()?);
+        }
+        let high_water = d.f64()?;
+        let res = dec_result(&mut d)?;
+        let open_world = d.bool()?;
+        let last_rate_change = d.f64()?;
+        let cur_rate_per_h = d.f64()?;
+        let cur_roll_gpus = d.usize()?;
+        let cur_train_gpus = d.usize()?;
+        let emit_events = d.bool()?;
+        let n = d.len()?;
+        let mut world_events = Vec::with_capacity(n);
+        for _ in 0..n {
+            world_events.push(dec_world(&mut d)?);
+        }
+        let sched = dec_sched(&mut d)?;
+        if d.pos != bytes.len() {
+            return Err(format!(
+                "snapshot corrupt: {} trailing bytes",
+                bytes.len() - d.pos
+            ));
+        }
+        Ok(SimSnapshot {
+            now,
+            seq,
+            intra,
+            trace_pending,
+            events,
+            jobs,
+            job_slot,
+            faults,
+            node_down_until,
+            orchs,
+            accts,
+            members,
+            high_water,
+            res,
+            open_world,
+            last_rate_change,
+            cur_rate_per_h,
+            cur_roll_gpus,
+            cur_train_gpus,
+            emit_events,
+            world_events,
+            sched,
+        })
+    }
+}
+
+const SNAP_MAGIC: &[u8; 8] = b"RMSNAP01";
+
+/// Word-oriented encoder for [`SimSnapshot::to_bytes`]: every primitive
+/// is one little-endian u64 (f64s as exact bits), so the layout has no
+/// alignment or platform-width dependence.
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.u64(v as u64);
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn bool(&mut self, v: bool) {
+        self.u64(v as u64);
+    }
+    fn opt_usize(&mut self, v: Option<usize>) {
+        match v {
+            None => self.bool(false),
+            Some(x) => {
+                self.bool(true);
+                self.usize(x);
+            }
+        }
+    }
+    fn usizes(&mut self, v: &[usize]) {
+        self.usize(v.len());
+        for &x in v {
+            self.usize(x);
+        }
+    }
+    fn f64s(&mut self, v: &[f64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+}
+
+/// Cursor-based decoder mirroring [`Enc`]; every read is bounds-checked
+/// and length prefixes are capped against the remaining payload so a
+/// corrupt image errors instead of allocating wildly.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Dec<'_> {
+    fn u64(&mut self) -> Result<u64, String> {
+        let end = self.pos + 8;
+        let b = self
+            .buf
+            .get(self.pos..end)
+            .ok_or_else(|| "snapshot corrupt: truncated".to_string())?;
+        self.pos = end;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(self.u64()? as u32)
+    }
+    fn usize(&mut self) -> Result<usize, String> {
+        Ok(self.u64()? as usize)
+    }
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn bool(&mut self) -> Result<bool, String> {
+        Ok(self.u64()? != 0)
+    }
+    /// Length prefix: each counted element occupies at least one word, so
+    /// a count exceeding the remaining words is definitely corrupt.
+    fn len(&mut self) -> Result<usize, String> {
+        let n = self.usize()?;
+        if n > (self.buf.len() - self.pos) / 8 {
+            return Err(format!("snapshot corrupt: length {n} exceeds remaining payload"));
+        }
+        Ok(n)
+    }
+    fn opt_usize(&mut self) -> Result<Option<usize>, String> {
+        Ok(if self.bool()? { Some(self.usize()?) } else { None })
+    }
+    fn usizes(&mut self) -> Result<Vec<usize>, String> {
+        let n = self.len()?;
+        (0..n).map(|_| self.usize()).collect()
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.len()?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+}
+
+fn intra_tag(k: IntraPolicyKind) -> u64 {
+    match k {
+        IntraPolicyKind::WorkConservingFifo => 0,
+        IntraPolicyKind::StrictRoundRobin => 1,
+        IntraPolicyKind::SloSlackPriority => 2,
+    }
+}
+
+fn intra_from(tag: u64) -> Result<IntraPolicyKind, String> {
+    Ok(match tag {
+        0 => IntraPolicyKind::WorkConservingFifo,
+        1 => IntraPolicyKind::StrictRoundRobin,
+        2 => IntraPolicyKind::SloSlackPriority,
+        t => return Err(format!("snapshot corrupt: unknown intra-policy tag {t}")),
+    })
+}
+
+fn phase_kind_tag(k: PhaseKind) -> u64 {
+    match k {
+        PhaseKind::Init => 0,
+        PhaseKind::Rollout => 1,
+        PhaseKind::Train => 2,
+        PhaseKind::Sync => 3,
+    }
+}
+
+fn phase_kind_from(tag: u64) -> Result<PhaseKind, String> {
+    Ok(match tag {
+        0 => PhaseKind::Init,
+        1 => PhaseKind::Rollout,
+        2 => PhaseKind::Train,
+        3 => PhaseKind::Sync,
+        t => return Err(format!("snapshot corrupt: unknown phase-kind tag {t}")),
+    })
+}
+
+fn core_tag(c: CorePhase) -> u64 {
+    match c {
+        CorePhase::Rollout => 0,
+        CorePhase::Train => 1,
+    }
+}
+
+fn core_from(tag: u64) -> Result<CorePhase, String> {
+    Ok(match tag {
+        0 => CorePhase::Rollout,
+        1 => CorePhase::Train,
+        t => return Err(format!("snapshot corrupt: unknown core-phase tag {t}")),
+    })
+}
+
+fn enc_ev(e: &mut Enc, ev: Ev) {
+    match ev {
+        Ev::Arrival(i) => {
+            e.u64(0);
+            e.usize(i);
+        }
+        Ev::TailFree(slot, kept, epoch) => {
+            e.u64(1);
+            e.usize(slot);
+            e.usize(kept);
+            e.u32(epoch);
+        }
+        Ev::PhaseDone(slot, kind, iter, epoch) => {
+            e.u64(2);
+            e.usize(slot);
+            e.u64(phase_kind_tag(kind));
+            e.usize(iter);
+            e.u32(epoch);
+        }
+        Ev::Fault(i) => {
+            e.u64(3);
+            e.usize(i);
+        }
+        Ev::FaultRecover(g, n) => {
+            e.u64(4);
+            e.usize(g);
+            e.usize(n);
+        }
+        Ev::Recover(slot, epoch) => {
+            e.u64(5);
+            e.usize(slot);
+            e.u32(epoch);
+        }
+    }
+}
+
+fn dec_ev(d: &mut Dec) -> Result<Ev, String> {
+    Ok(match d.u64()? {
+        0 => Ev::Arrival(d.usize()?),
+        1 => Ev::TailFree(d.usize()?, d.usize()?, d.u32()?),
+        2 => Ev::PhaseDone(d.usize()?, phase_kind_from(d.u64()?)?, d.usize()?, d.u32()?),
+        3 => Ev::Fault(d.usize()?),
+        4 => Ev::FaultRecover(d.usize()?, d.usize()?),
+        5 => Ev::Recover(d.usize()?, d.u32()?),
+        t => return Err(format!("snapshot corrupt: unknown event tag {t}")),
+    })
+}
+
+fn enc_world(e: &mut Enc, w: &WorldEvent) {
+    match *w {
+        WorldEvent::Done { t, job } => {
+            e.u64(0);
+            e.f64(t);
+            e.usize(job);
+        }
+        WorldEvent::Crash { t, gid, node } => {
+            e.u64(1);
+            e.f64(t);
+            e.usize(gid);
+            e.usize(node);
+        }
+        WorldEvent::Straggle { t, gid, node, factor } => {
+            e.u64(2);
+            e.f64(t);
+            e.usize(gid);
+            e.usize(node);
+            e.f64(factor);
+        }
+        WorldEvent::Repair { t, job, gid, to_gid, repinned } => {
+            e.u64(3);
+            e.f64(t);
+            e.usize(job);
+            e.usize(gid);
+            e.usize(to_gid);
+            e.bool(repinned);
+        }
+        WorldEvent::NodeUp { t, gid, node } => {
+            e.u64(4);
+            e.f64(t);
+            e.usize(gid);
+            e.usize(node);
+        }
+    }
+}
+
+fn dec_world(d: &mut Dec) -> Result<WorldEvent, String> {
+    Ok(match d.u64()? {
+        0 => WorldEvent::Done { t: d.f64()?, job: d.usize()? },
+        1 => WorldEvent::Crash { t: d.f64()?, gid: d.usize()?, node: d.usize()? },
+        2 => WorldEvent::Straggle {
+            t: d.f64()?,
+            gid: d.usize()?,
+            node: d.usize()?,
+            factor: d.f64()?,
+        },
+        3 => WorldEvent::Repair {
+            t: d.f64()?,
+            job: d.usize()?,
+            gid: d.usize()?,
+            to_gid: d.usize()?,
+            repinned: d.bool()?,
+        },
+        4 => WorldEvent::NodeUp { t: d.f64()?, gid: d.usize()?, node: d.usize()? },
+        t => return Err(format!("snapshot corrupt: unknown world-event tag {t}")),
+    })
+}
+
+fn enc_fault(e: &mut Enc, f: &FaultEvent) {
+    e.f64(f.t);
+    e.u64(f.victim);
+    match f.kind {
+        FaultKind::NodeCrash { repair_s } => {
+            e.u64(0);
+            e.f64(repair_s);
+        }
+        FaultKind::Straggler { factor } => {
+            e.u64(1);
+            e.f64(factor);
+        }
+    }
+}
+
+fn dec_fault(d: &mut Dec) -> Result<FaultEvent, String> {
+    let t = d.f64()?;
+    let victim = d.u64()?;
+    let kind = match d.u64()? {
+        0 => FaultKind::NodeCrash { repair_s: d.f64()? },
+        1 => FaultKind::Straggler { factor: d.f64()? },
+        t => return Err(format!("snapshot corrupt: unknown fault-kind tag {t}")),
+    };
+    Ok(FaultEvent { t, victim, kind })
+}
+
+fn enc_rec(e: &mut Enc, r: &PhaseRecord) {
+    e.usize(r.job);
+    e.usize(r.group);
+    e.u64(phase_kind_tag(r.kind));
+    e.usize(r.iter);
+    e.f64(r.start);
+    e.f64(r.end);
+    e.usizes(&r.roll_nodes);
+}
+
+fn dec_rec(d: &mut Dec) -> Result<PhaseRecord, String> {
+    Ok(PhaseRecord {
+        job: d.usize()?,
+        group: d.usize()?,
+        kind: phase_kind_from(d.u64()?)?,
+        iter: d.usize()?,
+        start: d.f64()?,
+        end: d.f64()?,
+        roll_nodes: d.usizes()?,
+    })
+}
+
+fn enc_frame(e: &mut Enc, f: &Frame) {
+    match f {
+        Frame::Phase(r) => {
+            e.u64(0);
+            enc_rec(e, r);
+        }
+        Frame::World(w) => {
+            e.u64(1);
+            enc_world(e, w);
+        }
+        Frame::Util { t, gid, roll_busy_gpu_s, train_busy_gpu_s } => {
+            e.u64(2);
+            e.f64(*t);
+            e.usize(*gid);
+            e.f64(*roll_busy_gpu_s);
+            e.f64(*train_busy_gpu_s);
+        }
+        Frame::SloSlack { t, job, iter, slack_s } => {
+            e.u64(3);
+            e.f64(*t);
+            e.usize(*job);
+            e.usize(*iter);
+            e.f64(*slack_s);
+        }
+    }
+}
+
+fn dec_frame(d: &mut Dec) -> Result<Frame, String> {
+    Ok(match d.u64()? {
+        0 => Frame::Phase(dec_rec(d)?),
+        1 => Frame::World(dec_world(d)?),
+        2 => Frame::Util {
+            t: d.f64()?,
+            gid: d.usize()?,
+            roll_busy_gpu_s: d.f64()?,
+            train_busy_gpu_s: d.f64()?,
+        },
+        3 => Frame::SloSlack {
+            t: d.f64()?,
+            job: d.usize()?,
+            iter: d.usize()?,
+            slack_s: d.f64()?,
+        },
+        t => return Err(format!("snapshot corrupt: unknown frame tag {t}")),
+    })
+}
+
+fn enc_job(e: &mut Enc, j: &JobSnap) {
+    e.usize(j.id);
+    e.f64(j.arrival_s);
+    e.usize(j.group);
+    e.usizes(&j.roll_nodes);
+    e.usize(j.train_gpus);
+    e.f64(j.train_scale);
+    e.f64(j.t_sync);
+    e.usize(j.iter);
+    e.f64(j.solo_s);
+    e.f64(j.solo_est_iter_s);
+    e.f64(j.init_s);
+    e.usize(j.migrations);
+    e.u64(j.rng.0);
+    e.u64(j.rng.1);
+    e.f64(j.cur_troll);
+    e.f64(j.cur_ttrain);
+    e.f64(j.cur_roll_end);
+    e.f64(j.tail_penalty);
+    e.f64(j.tail_frac);
+    e.bool(j.done);
+    e.u32(j.epoch);
+    match j.phase {
+        None => e.bool(false),
+        Some(k) => {
+            e.bool(true);
+            e.u64(phase_kind_tag(k));
+        }
+    }
+    e.f64(j.phase_start_s);
+    e.f64(j.cur_train_end);
+    e.bool(j.iter_sampled);
+    e.f64(j.iter_busy_gpu_s);
+    e.f64(j.iter_wasted_gpu_s);
+    e.bool(j.consolidated);
+    match j.pending_tail {
+        None => e.bool(false),
+        Some((t, kept)) => {
+            e.bool(true);
+            e.f64(t);
+            e.usize(kept);
+        }
+    }
+    e.usize(j.recoveries);
+    e.f64(j.recovery_s);
+}
+
+fn dec_job(d: &mut Dec) -> Result<JobSnap, String> {
+    Ok(JobSnap {
+        id: d.usize()?,
+        arrival_s: d.f64()?,
+        group: d.usize()?,
+        roll_nodes: d.usizes()?,
+        train_gpus: d.usize()?,
+        train_scale: d.f64()?,
+        t_sync: d.f64()?,
+        iter: d.usize()?,
+        solo_s: d.f64()?,
+        solo_est_iter_s: d.f64()?,
+        init_s: d.f64()?,
+        migrations: d.usize()?,
+        rng: (d.u64()?, d.u64()?),
+        cur_troll: d.f64()?,
+        cur_ttrain: d.f64()?,
+        cur_roll_end: d.f64()?,
+        tail_penalty: d.f64()?,
+        tail_frac: d.f64()?,
+        done: d.bool()?,
+        epoch: d.u32()?,
+        phase: if d.bool()? { Some(phase_kind_from(d.u64()?)?) } else { None },
+        phase_start_s: d.f64()?,
+        cur_train_end: d.f64()?,
+        iter_sampled: d.bool()?,
+        iter_busy_gpu_s: d.f64()?,
+        iter_wasted_gpu_s: d.f64()?,
+        consolidated: d.bool()?,
+        pending_tail: if d.bool()? { Some((d.f64()?, d.usize()?)) } else { None },
+        recoveries: d.usize()?,
+        recovery_s: d.f64()?,
+    })
+}
+
+fn enc_orch(e: &mut Enc, o: &OrchSnapshot) {
+    e.usize(o.members.len());
+    for (slot, job, nodes, slack) in &o.members {
+        e.usize(*slot);
+        e.usize(*job);
+        e.usizes(nodes);
+        e.f64(*slack);
+    }
+    e.usize(o.roll_busy.len());
+    for &s in &o.roll_busy {
+        e.opt_usize(s);
+    }
+    e.opt_usize(o.train_busy);
+    e.usize(o.queue.len());
+    for &(slot, cp) in &o.queue {
+        e.usize(slot);
+        e.u64(core_tag(cp));
+    }
+    match &o.rotation {
+        None => e.bool(false),
+        Some((order, cursor)) => {
+            e.bool(true);
+            e.usizes(order);
+            e.usize(*cursor);
+        }
+    }
+}
+
+fn dec_orch(d: &mut Dec) -> Result<OrchSnapshot, String> {
+    let n = d.len()?;
+    let mut members = Vec::with_capacity(n);
+    for _ in 0..n {
+        members.push((d.usize()?, d.usize()?, d.usizes()?, d.f64()?));
+    }
+    let n = d.len()?;
+    let mut roll_busy = Vec::with_capacity(n);
+    for _ in 0..n {
+        roll_busy.push(d.opt_usize()?);
+    }
+    let train_busy = d.opt_usize()?;
+    let n = d.len()?;
+    let mut queue = Vec::with_capacity(n);
+    for _ in 0..n {
+        queue.push((d.usize()?, core_from(d.u64()?)?));
+    }
+    let rotation = if d.bool()? { Some((d.usizes()?, d.usize()?)) } else { None };
+    Ok(OrchSnapshot { members, roll_busy, train_busy, queue, rotation })
+}
+
+fn enc_acct(e: &mut Enc, a: &GroupAcct) {
+    e.f64(a.roll_busy_gpu_s);
+    e.f64(a.train_busy_gpu_s);
+    e.bool(a.train_touched);
+    e.f64s(&a.node_busy_gpu_s);
+    e.usize(a.events);
+}
+
+fn dec_acct(d: &mut Dec) -> Result<GroupAcct, String> {
+    Ok(GroupAcct {
+        roll_busy_gpu_s: d.f64()?,
+        train_busy_gpu_s: d.f64()?,
+        train_touched: d.bool()?,
+        node_busy_gpu_s: d.f64s()?,
+        events: d.usize()?,
+    })
+}
+
+fn enc_result(e: &mut Enc, r: &SimResult) {
+    e.usize(r.records.len());
+    for rec in &r.records {
+        enc_rec(e, rec);
+    }
+    let mut ids: Vec<JobId> = r.outcomes.keys().copied().collect();
+    ids.sort_unstable();
+    e.usize(ids.len());
+    for id in ids {
+        let o = &r.outcomes[&id];
+        e.usize(id);
+        e.f64(o.arrival_s);
+        e.f64(o.finish_s);
+        e.f64(o.solo_actual_s);
+        e.f64(o.solo_est_s);
+        e.f64(o.slo);
+        e.usize(o.iters);
+        e.usize(o.migrations);
+        e.usize(o.recoveries);
+        e.f64(o.recovery_s);
+    }
+    e.f64(r.cost_usd);
+    e.f64(r.avg_cost_per_hour);
+    e.usize(r.peak_roll_gpus);
+    e.usize(r.peak_train_gpus);
+    e.f64(r.roll_busy_gpu_s);
+    e.f64(r.train_busy_gpu_s);
+    e.f64(r.roll_prov_gpu_s);
+    e.f64(r.train_prov_gpu_s);
+    e.f64(r.makespan_s);
+    e.usize(r.usage_curve.len());
+    for &(t, rg, tg) in &r.usage_curve {
+        e.f64(t);
+        e.usize(rg);
+        e.usize(tg);
+    }
+    e.usize(r.roll_node_busy_gpu_s.len());
+    for v in &r.roll_node_busy_gpu_s {
+        e.f64s(v);
+    }
+    e.f64s(&r.train_group_busy_gpu_s);
+    e.usize(r.events_processed);
+    e.usize(r.crashes);
+    e.usize(r.stragglers);
+    e.usize(r.evictions);
+    e.usize(r.spills);
+    e.f64(r.recovery_time_s);
+    e.f64(r.wasted_gpu_s);
+    e.usize(r.cancelled);
+    e.usize(r.flight.len());
+    for f in r.flight.frames() {
+        enc_frame(e, f);
+    }
+}
+
+fn dec_result(d: &mut Dec) -> Result<SimResult, String> {
+    let n = d.len()?;
+    let mut records = Vec::with_capacity(n);
+    for _ in 0..n {
+        records.push(dec_rec(d)?);
+    }
+    let n = d.len()?;
+    let mut outcomes = HashMap::with_capacity(n);
+    for _ in 0..n {
+        let id = d.usize()?;
+        outcomes.insert(
+            id,
+            JobOutcome {
+                arrival_s: d.f64()?,
+                finish_s: d.f64()?,
+                solo_actual_s: d.f64()?,
+                solo_est_s: d.f64()?,
+                slo: d.f64()?,
+                iters: d.usize()?,
+                migrations: d.usize()?,
+                recoveries: d.usize()?,
+                recovery_s: d.f64()?,
+            },
+        );
+    }
+    let cost_usd = d.f64()?;
+    let avg_cost_per_hour = d.f64()?;
+    let peak_roll_gpus = d.usize()?;
+    let peak_train_gpus = d.usize()?;
+    let roll_busy_gpu_s = d.f64()?;
+    let train_busy_gpu_s = d.f64()?;
+    let roll_prov_gpu_s = d.f64()?;
+    let train_prov_gpu_s = d.f64()?;
+    let makespan_s = d.f64()?;
+    let n = d.len()?;
+    let mut usage_curve = Vec::with_capacity(n);
+    for _ in 0..n {
+        usage_curve.push((d.f64()?, d.usize()?, d.usize()?));
+    }
+    let n = d.len()?;
+    let mut roll_node_busy_gpu_s = Vec::with_capacity(n);
+    for _ in 0..n {
+        roll_node_busy_gpu_s.push(d.f64s()?);
+    }
+    let train_group_busy_gpu_s = d.f64s()?;
+    let events_processed = d.usize()?;
+    let crashes = d.usize()?;
+    let stragglers = d.usize()?;
+    let evictions = d.usize()?;
+    let spills = d.usize()?;
+    let recovery_time_s = d.f64()?;
+    let wasted_gpu_s = d.f64()?;
+    let cancelled = d.usize()?;
+    let n = d.len()?;
+    let mut flight = FlightRecorder::default();
+    for _ in 0..n {
+        flight.push(dec_frame(d)?);
+    }
+    Ok(SimResult {
+        records,
+        outcomes,
+        cost_usd,
+        avg_cost_per_hour,
+        peak_roll_gpus,
+        peak_train_gpus,
+        roll_busy_gpu_s,
+        train_busy_gpu_s,
+        roll_prov_gpu_s,
+        train_prov_gpu_s,
+        makespan_s,
+        usage_curve,
+        roll_node_busy_gpu_s,
+        train_group_busy_gpu_s,
+        events_processed,
+        crashes,
+        stragglers,
+        evictions,
+        spills,
+        recovery_time_s,
+        wasted_gpu_s,
+        cancelled,
+        flight,
+    })
+}
+
+fn enc_sched(e: &mut Enc, s: &SchedSnapshot) {
+    e.usize(s.groups.len());
+    for (id, nr, nt, members) in &s.groups {
+        e.usize(*id);
+        e.usize(*nr);
+        e.usize(*nt);
+        e.usize(members.len());
+        for (job, nodes) in members {
+            e.usize(*job);
+            e.usizes(nodes);
+        }
+    }
+    e.usize(s.next_group_id);
+    e.opt_usize(s.max_group_size);
+    e.usize(s.shards);
+    e.usize(s.ledger.len());
+    for (node, bits, pins) in &s.ledger {
+        e.usize(*node);
+        e.u64(*bits);
+        e.usize(pins.len());
+        for &(job, b) in pins {
+            e.usize(job);
+            e.u64(b);
+        }
+    }
+    e.u64(s.ledger_capacity_bits);
+}
+
+fn dec_sched(d: &mut Dec) -> Result<SchedSnapshot, String> {
+    let n = d.len()?;
+    let mut groups = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = d.usize()?;
+        let nr = d.usize()?;
+        let nt = d.usize()?;
+        let m = d.len()?;
+        let mut members = Vec::with_capacity(m);
+        for _ in 0..m {
+            members.push((d.usize()?, d.usizes()?));
+        }
+        groups.push((id, nr, nt, members));
+    }
+    let next_group_id = d.usize()?;
+    let max_group_size = d.opt_usize()?;
+    let shards = d.usize()?;
+    let n = d.len()?;
+    let mut ledger = Vec::with_capacity(n);
+    for _ in 0..n {
+        let node = d.usize()?;
+        let bits = d.u64()?;
+        let m = d.len()?;
+        let mut pins = Vec::with_capacity(m);
+        for _ in 0..m {
+            pins.push((d.usize()?, d.u64()?));
+        }
+        ledger.push((node, bits, pins));
+    }
+    let ledger_capacity_bits = d.u64()?;
+    Ok(SchedSnapshot {
+        groups,
+        next_group_id,
+        max_group_size,
+        shards,
+        ledger,
+        ledger_capacity_bits,
+    })
+}
+
+impl Simulator<InterGroupScheduler> {
+    /// Capture the full mutable state (ISSUE 9). Non-destructive: the
+    /// event queue is drained from a clone. Must be taken BEFORE
+    /// `finalize` (i.e. before `run_to_end` returns) — a finalized
+    /// simulator has folded and cleared its accumulators.
+    pub fn snapshot(&self) -> SimSnapshot {
+        let mut events = Vec::new();
+        let mut q = self.events.clone();
+        while let Some((t, seq, ev)) = q.pop_with_seq() {
+            events.push((t, seq, ev));
+        }
+        let mut job_slot: Vec<(JobId, usize)> =
+            self.job_slot.iter().map(|(&id, &slot)| (id, slot)).collect();
+        job_slot.sort_unstable();
+        let mut node_down_until: Vec<(usize, usize, f64)> =
+            self.node_down_until.iter().map(|(&(g, n), &t)| (g, n, t)).collect();
+        node_down_until.sort_unstable_by_key(|&(g, n, _)| (g, n));
+        SimSnapshot {
+            now: self.now,
+            seq: self.seq,
+            intra: self.cfg.intra,
+            trace_pending: self
+                .trace
+                .iter()
+                .map(|s| s.as_ref().map(|s| (s.id, s.arrival_s)))
+                .collect(),
+            events,
+            jobs: self.jobs.iter().map(JobSnap::capture).collect(),
+            job_slot,
+            faults: self.faults_rt.as_ref().map(FaultStream::snapshot_parts),
+            node_down_until,
+            orchs: self.group_rt.iter().map(GroupOrchestrator::snapshot_state).collect(),
+            accts: (0..self.accts.len())
+                .map(|g| self.accts.get(g).cloned().unwrap_or_default())
+                .collect(),
+            members: self.members.clone(),
+            high_water: self.high_water,
+            res: self.res.clone(),
+            open_world: self.open_world,
+            last_rate_change: self.last_rate_change,
+            cur_rate_per_h: self.cur_rate_per_h,
+            cur_roll_gpus: self.cur_roll_gpus,
+            cur_train_gpus: self.cur_train_gpus,
+            emit_events: self.emit_events,
+            world_events: self.world_events.clone(),
+            sched: self.sched.snapshot_state(),
+        }
+    }
+
+    /// Rebuild a simulator from a snapshot plus the run's immutable
+    /// inputs: the `cfg` and `trace` the ORIGINAL run was built with
+    /// (`cfg.intra` is overridden by the snapshot's live value; a
+    /// pending job's `arrival_s` by its captured clamp). Draining the
+    /// restored simulator is bit-identical to draining the original —
+    /// what-if branches diverge AFTER restore via `set_intra_policy`,
+    /// `reconfig_group_cap`, `inject_node_crash`, `submit`, ….
+    ///
+    /// Panics on mismatched inputs (wrong trace length/ids, missing
+    /// specs, `cfg.faults` armed-ness differing from the snapshot's).
+    pub fn restore(cfg: SimConfig, trace: &[JobSpec], snap: &SimSnapshot) -> Self {
+        let mut cfg = cfg;
+        cfg.intra = snap.intra;
+        assert_eq!(
+            trace.len(),
+            snap.trace_pending.len(),
+            "restore: trace length differs from the snapshot's"
+        );
+        let spec_by_id: HashMap<JobId, &JobSpec> = trace.iter().map(|s| (s.id, s)).collect();
+        let arrival_of: HashMap<JobId, f64> =
+            snap.jobs.iter().map(|j| (j.id, j.arrival_s)).collect();
+        let resolve = |jid: JobId| -> JobSpec {
+            let mut s = (*spec_by_id
+                .get(&jid)
+                .unwrap_or_else(|| panic!("restore: job {jid} missing from the supplied trace")))
+            .clone();
+            if let Some(&arr) = arrival_of.get(&jid) {
+                s.arrival_s = arr;
+            }
+            s
+        };
+        let sched = InterGroupScheduler::from_snapshot_state(cfg.model, &snap.sched, resolve);
+        let mut events = EventQueue::new(cfg.event_queue);
+        for &(t, seq, ev) in &snap.events {
+            events.push(t, seq, ev);
+        }
+        let trace_slots: Vec<Option<JobSpec>> = snap
+            .trace_pending
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                p.map(|(id, arr)| {
+                    assert_eq!(trace[i].id, id, "restore: trace[{i}] id mismatch");
+                    let mut s = trace[i].clone();
+                    s.arrival_s = arr;
+                    s
+                })
+            })
+            .collect();
+        let jobs: Vec<JobRt> = snap
+            .jobs
+            .iter()
+            .map(|j| {
+                let mut spec = (*spec_by_id
+                    .get(&j.id)
+                    .unwrap_or_else(|| panic!("restore: job {} missing from the supplied trace", j.id)))
+                .clone();
+                spec.arrival_s = j.arrival_s;
+                j.revive(spec)
+            })
+            .collect();
+        let faults_rt = match (&cfg.faults, &snap.faults) {
+            (Some(fc), Some((gen, handed, pending))) => {
+                Some(FaultStream::from_parts(fc.clone(), *gen, *handed, *pending))
+            }
+            (None, None) => None,
+            (Some(_), None) => panic!(
+                "restore: cfg.faults is armed but the snapshot has no fault stream"
+            ),
+            (None, Some(_)) => panic!(
+                "restore: the snapshot has an armed fault stream but cfg.faults is None"
+            ),
+        };
+        let mut accts = AcctArena::new();
+        for (gid, acct) in snap.accts.iter().enumerate() {
+            accts.put(gid, acct.clone());
+        }
+        Simulator {
+            cfg,
+            sched,
+            trace: trace_slots,
+            events,
+            seq: snap.seq,
+            now: snap.now,
+            jobs,
+            job_slot: snap.job_slot.iter().copied().collect(),
+            faults_rt,
+            node_down_until: snap
+                .node_down_until
+                .iter()
+                .map(|&(g, n, t)| ((g, n), t))
+                .collect(),
+            group_rt: snap
+                .orchs
+                .iter()
+                .map(|o| GroupOrchestrator::from_snapshot_state(snap.intra, o))
+                .collect(),
+            accts,
+            members: snap.members.clone(),
+            high_water: snap.high_water,
+            res: snap.res.clone(),
+            open_world: snap.open_world,
+            last_rate_change: snap.last_rate_change,
+            cur_rate_per_h: snap.cur_rate_per_h,
+            cur_roll_gpus: snap.cur_roll_gpus,
+            cur_train_gpus: snap.cur_train_gpus,
+            scratch_lengths: Vec::new(),
+            emit_events: snap.emit_events,
+            world_events: snap.world_events.clone(),
+        }
+    }
+
+    /// Branch-from-t (ISSUE 9): run the prefix up to `t` (without
+    /// advancing the clock past the last real event — [`Self::run_until`])
+    /// and capture a checkpoint. N what-if branches then [`Self::restore`]
+    /// the same snapshot, diverge (policy swap, reconfig, fault burst, new
+    /// submissions), and drain — each bit-identical to a from-scratch run
+    /// that applied the same divergence at `t`, at the cost of ONE shared
+    /// prefix simulation instead of N.
+    pub fn fork_at(&mut self, t: f64) -> SimSnapshot {
+        self.run_until(t);
+        self.snapshot()
     }
 }
 
@@ -3116,6 +4517,17 @@ mod tests {
         for (g, (p, q)) in a.train_group_busy_gpu_s.iter().zip(&b.train_group_busy_gpu_s).enumerate() {
             assert_eq!(p.to_bits(), q.to_bits(), "{tag}: group {g} train busy");
         }
+        // ISSUE 9: the recorded streams themselves are part of the
+        // bitwise contract — canonical sorting at finalize makes them
+        // identical across serial/parallel/forked execution.
+        assert_eq!(a.records.len(), b.records.len(), "{tag}: record count");
+        for (i, (x, y)) in a.records.iter().zip(&b.records).enumerate() {
+            assert_eq!(x.start.to_bits(), y.start.to_bits(), "{tag}: record {i} start");
+            assert_eq!(x.end.to_bits(), y.end.to_bits(), "{tag}: record {i} end");
+            assert_eq!(x, y, "{tag}: record {i}");
+        }
+        assert_eq!(a.flight.len(), b.flight.len(), "{tag}: flight frame count");
+        assert_eq!(a.flight, b.flight, "{tag}: flight stream");
         assert_outcomes_bitwise(a, b);
     }
 
@@ -3144,6 +4556,10 @@ mod tests {
                 let mut c = SimConfig::default();
                 c.intra = kind;
                 c.faults = faults.clone();
+                // Both recorded streams on: the canonical sort at finalize
+                // must make them bit-identical across paths too (ISSUE 9).
+                c.record_gantt = true;
+                c.record_flight = true;
                 let serial = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk())
                     .run_to_end();
                 if faults.is_some() {
@@ -3179,5 +4595,151 @@ mod tests {
         let mut sim = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk());
         let par = sim.run_parallel(8);
         assert_results_bitwise(&serial, &par, "small-window inline");
+    }
+
+    /// ISSUE 9: `run_until` pops without advancing the clock past the
+    /// last real event, so draining everything through it and then
+    /// finalizing yields the exact uninterrupted makespan.
+    #[test]
+    fn run_until_pops_without_advancing_clock() {
+        let trace = vec![direct_job(0, 100.0, 50.0, 2.0, 5, 0.0)];
+        let c = cfg();
+        let mut sim = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), trace.clone());
+        sim.run_until(1e12);
+        let res = sim.run_to_end();
+        let oracle = run_rollmux(c, trace);
+        assert_eq!(res.makespan_s.to_bits(), oracle.makespan_s.to_bits());
+        assert_eq!(res.events_processed, oracle.events_processed);
+    }
+
+    /// ISSUE 9: arming the flight recorder changes nothing but the
+    /// stream itself, and the stream's phase view IS the gantt stream.
+    #[test]
+    fn recorder_arming_does_not_change_results() {
+        let mk = || crate::workload::trace::fleet_trace(23, 60, 1.0);
+        let mut c = SimConfig::default();
+        c.record_gantt = true;
+        let off = run_rollmux(c.clone(), mk());
+        c.record_flight = true;
+        let mut on = run_rollmux(c, mk());
+        assert!(off.flight.is_empty(), "disarmed recorder must stay empty");
+        assert!(!on.flight.is_empty(), "armed recorder must capture frames");
+        let from_flight: Vec<PhaseRecord> = on.flight.phase_records().cloned().collect();
+        assert_eq!(from_flight, on.records, "flight phase view == gantt stream");
+        on.flight = FlightRecorder::default();
+        assert_results_bitwise(&off, &on, "recorder off vs on");
+    }
+
+    /// ISSUE 9: a snapshot taken mid-run is non-destructive AND restores
+    /// into a simulator whose drained result is bit-identical to the
+    /// uninterrupted run — chaos on/off, both recorders armed, all intra
+    /// policies.
+    #[test]
+    fn snapshot_restore_mid_run_bitwise() {
+        let mk = || crate::workload::trace::fleet_trace(17, 80, 1.0);
+        for faults in [
+            None,
+            Some(FaultConfig {
+                seed: 5,
+                mtbf_s: 2.0 * 3600.0,
+                mean_repair_s: 600.0,
+                straggler_frac: 0.3,
+                straggler_factor: 1.4,
+                max_events: 30,
+            }),
+        ] {
+            for kind in IntraPolicyKind::all() {
+                let mut c = SimConfig::default();
+                c.record_gantt = true;
+                c.record_flight = true;
+                c.intra = kind;
+                c.faults = faults.clone();
+                let oracle =
+                    Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk()).run_to_end();
+                let t = oracle.makespan_s * 0.4;
+                let tag = format!("{kind:?} faults={}", faults.is_some());
+                let mut pre = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk());
+                let snap = pre.fork_at(t);
+                assert!(snap.t() <= t, "{tag}: clock must not pass the fork point");
+                assert_results_bitwise(&oracle, &pre.run_to_end(), &format!("{tag} prefix"));
+                let trace = mk();
+                let restored = Simulator::restore(c.clone(), &trace, &snap).run_to_end();
+                assert_results_bitwise(&oracle, &restored, &format!("{tag} restored"));
+            }
+        }
+    }
+
+    /// ISSUE 9: fork-at-t branches are bit-identical to from-scratch runs
+    /// applying the same divergence at the same time — a policy swap, a
+    /// group-cap reconfig, and a late submission burst.
+    #[test]
+    fn fork_branches_match_from_scratch() {
+        let mk = || crate::workload::trace::fleet_trace(29, 80, 1.0);
+        let mut c = SimConfig::default();
+        c.record_gantt = true;
+        c.record_flight = true;
+        let base = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk()).run_to_end();
+        let t = base.makespan_s * 0.3;
+        let mut pre = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk());
+        let snap = pre.fork_at(t);
+        let trace = mk();
+        let diverge = |sim: &mut Simulator<InterGroupScheduler>, branch: usize| match branch {
+            0 => sim.set_intra_policy(IntraPolicyKind::StrictRoundRobin),
+            1 => sim.set_intra_policy(IntraPolicyKind::SloSlackPriority),
+            2 => {
+                sim.reconfig_group_cap(Some(2));
+            }
+            _ => {
+                sim.submit(direct_job(900, 90.0, 70.0, 3.0, 4, t));
+                sim.submit(direct_job(901, 60.0, 40.0, 3.0, 4, t));
+            }
+        };
+        for branch in 0..4 {
+            let mut fork = Simulator::restore(c.clone(), &trace, &snap);
+            diverge(&mut fork, branch);
+            let forked = fork.run_to_end();
+            let mut scratch = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk());
+            scratch.run_until(t);
+            diverge(&mut scratch, branch);
+            let oracle = scratch.run_to_end();
+            assert_results_bitwise(&oracle, &forked, &format!("fork branch {branch}"));
+        }
+    }
+
+    /// ISSUE 9: the byte codec roundtrips exactly (same state → same
+    /// bytes → same state), a decoded image restores bit-identically,
+    /// and corrupt images error instead of panicking.
+    #[test]
+    fn snapshot_codec_roundtrip_and_errors() {
+        let mk = || crate::workload::trace::fleet_trace(31, 40, 1.0);
+        let mut c = SimConfig::default();
+        c.record_flight = true;
+        c.faults = Some(FaultConfig {
+            seed: 7,
+            mtbf_s: 3600.0,
+            mean_repair_s: 300.0,
+            straggler_frac: 0.5,
+            straggler_factor: 1.5,
+            max_events: 20,
+        });
+        let oracle =
+            Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk()).run_to_end();
+        let mut pre = Simulator::new(c.clone(), InterGroupScheduler::new(c.model), mk());
+        let snap = pre.fork_at(oracle.makespan_s * 0.5);
+        let bytes = snap.to_bytes();
+        let decoded = SimSnapshot::from_bytes(&bytes).expect("roundtrip decodes");
+        assert_eq!(bytes, decoded.to_bytes(), "byte image is a fixed point");
+        assert_eq!(snap.live_jobs(), decoded.live_jobs());
+        assert_eq!(snap.pending_events(), decoded.pending_events());
+        let trace = mk();
+        let a = Simulator::restore(c.clone(), &trace, &snap).run_to_end();
+        let b = Simulator::restore(c.clone(), &trace, &decoded).run_to_end();
+        assert_results_bitwise(&a, &b, "decoded snapshot");
+        assert_results_bitwise(&oracle, &a, "restored vs oracle");
+        assert!(SimSnapshot::from_bytes(&bytes[..bytes.len() - 3]).is_err(), "truncation");
+        assert!(SimSnapshot::from_bytes(b"NOTSNAP0 junk").is_err(), "bad magic");
+        let mut trailing = bytes.clone();
+        trailing.extend_from_slice(&[0u8; 8]);
+        assert!(SimSnapshot::from_bytes(&trailing).is_err(), "trailing bytes");
     }
 }

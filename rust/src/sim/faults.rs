@@ -112,6 +112,20 @@ impl FaultTraceGen {
         let rng = Rng::new(cfg.seed ^ 0xC4A0_5EED_0000_0001);
         FaultTraceGen { cfg, rng, t: 0.0, emitted: 0 }
     }
+
+    /// Capture the generator's mutable state for a checkpoint (DESIGN.md
+    /// §17): the RNG parts, the running clock and the emitted count. The
+    /// `FaultConfig` is *not* part of the capture — restore re-supplies it
+    /// (configs are caller-owned inputs, like `SimConfig`).
+    pub fn snapshot_parts(&self) -> ((u64, u64), f64, usize) {
+        (self.rng.to_parts(), self.t, self.emitted)
+    }
+
+    /// Rebuild a generator mid-stream from [`Self::snapshot_parts`]; the
+    /// restored stream continues bit-exactly.
+    pub fn from_parts(cfg: FaultConfig, rng: (u64, u64), t: f64, emitted: usize) -> Self {
+        FaultTraceGen { cfg, rng: Rng::from_parts(rng.0, rng.1), t, emitted }
+    }
 }
 
 impl Iterator for FaultTraceGen {
@@ -182,6 +196,26 @@ impl FaultStream {
         debug_assert_eq!(handle + 1, self.handed_out, "one fault event in flight at a time");
         self.pending.expect("pending fault event")
     }
+
+    /// Capture the stream's mutable state for a checkpoint: the wrapped
+    /// generator's parts, the handle counter, and the pending event.
+    pub fn snapshot_parts(&self) -> (((u64, u64), f64, usize), usize, Option<FaultEvent>) {
+        (self.gen.snapshot_parts(), self.handed_out, self.pending)
+    }
+
+    /// Rebuild a stream mid-flight from [`Self::snapshot_parts`].
+    pub fn from_parts(
+        cfg: FaultConfig,
+        gen: ((u64, u64), f64, usize),
+        handed_out: usize,
+        pending: Option<FaultEvent>,
+    ) -> Self {
+        FaultStream {
+            gen: FaultTraceGen::from_parts(cfg, gen.0, gen.1, gen.2),
+            handed_out,
+            pending,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -242,6 +276,30 @@ mod tests {
     fn max_events_caps_the_stream() {
         let cfg = FaultConfig { max_events: 7, ..FaultConfig::with_mtbf(1, 60.0) };
         assert_eq!(FaultTraceGen::new(cfg).count(), 7);
+    }
+
+    #[test]
+    fn stream_snapshot_resumes_bitwise() {
+        let cfg = FaultConfig::with_mtbf(21, 300.0);
+        let mut live = FaultStream::arm(Some(&cfg)).unwrap();
+        for _ in 0..5 {
+            live.pull().unwrap();
+        }
+        let (gen, handed_out, pending) = live.snapshot_parts();
+        let mut restored = FaultStream::from_parts(cfg, gen, handed_out, pending);
+        assert_eq!(restored.event(handed_out - 1), live.event(handed_out - 1));
+        for _ in 0..50 {
+            let a = live.pull();
+            let b = restored.pull();
+            match (a, b) {
+                (Some((ha, ta)), Some((hb, tb))) => {
+                    assert_eq!(ha, hb);
+                    assert_eq!(ta.to_bits(), tb.to_bits());
+                    assert_eq!(live.event(ha), restored.event(hb));
+                }
+                (a, b) => assert_eq!(a.is_none(), b.is_none()),
+            }
+        }
     }
 
     #[test]

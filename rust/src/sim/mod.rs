@@ -19,16 +19,24 @@
 //! `coordinator::repair` with checkpoint-aware recovery; with the stream
 //! empty both tiers stay bitwise identical to the fault-free engine.
 
+//! The snapshot/fork tier (ISSUE 9, DESIGN.md §17) adds a flight
+//! recorder ([`recorder`]) cheap enough to leave on, full-state
+//! checkpoints ([`engine::SimSnapshot`]) with a deterministic byte
+//! codec, and branch-from-t what-if forks ([`engine::Simulator::fork_at`])
+//! that are bitwise identical to from-scratch runs.
+
 pub mod arena;
 pub mod calendar;
 pub mod engine;
 pub mod faults;
 pub mod fluid;
 pub mod gantt;
+pub mod recorder;
 
 pub use engine::{
     run_sim, EventQueueKind, Fidelity, GroupScheduler, PhaseKind, PhaseRecord, SimConfig,
-    SimResult, Simulator, WorldEvent,
+    SimResult, SimSnapshot, Simulator, WorldEvent,
 };
 pub use faults::{FaultConfig, FaultEvent, FaultKind, FaultTraceGen};
 pub use fluid::FluidSimulator;
+pub use recorder::{Frame, FlightRecorder};

@@ -1,0 +1,222 @@
+//! Flight recorder — a compact, append-only stream of engine decisions
+//! and observations (DESIGN.md §17).
+//!
+//! The recorder subsumes gantt recording (`Frame::Phase` wraps the same
+//! [`PhaseRecord`] the gantt path emits) and adds the metric series the
+//! daemon's event push exposes: per-group utilization samples at every
+//! train completion and per-job SLO-slack samples at every sync. Frames
+//! are plain pushes into a `Vec` — cheap enough to leave on — and the
+//! stream is part of the deterministic state machine: a restored or
+//! replayed run re-records the identical frame sequence (property-tested
+//! in `tests/prop_snapshot.rs`).
+//!
+//! ## Canonical order
+//!
+//! The group-parallel drain (`Simulator::run_parallel`) collects frames
+//! per lane and concatenates batches in gid order within a window, so the
+//! raw append order differs from the serial loop's. Both paths therefore
+//! finish with [`FlightRecorder::canonical_sort`] — a total order on
+//! `(time, frame kind, identifying fields, payload bits)` under which any
+//! two frames that compare equal are bit-identical, making the sorted
+//! stream (and the sorted `SimResult::records`) identical across serial
+//! and parallel execution.
+
+use crate::workload::job::JobId;
+
+use super::engine::{PhaseKind, PhaseRecord, WorldEvent};
+
+/// One recorded frame. `Phase` and `World` wrap the engine's existing
+/// record types; `Util` and `SloSlack` are the metric series new to the
+/// recorder.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// An executed phase (the gantt stream, recorded independently of
+    /// `record_gantt`).
+    Phase(PhaseRecord),
+    /// An externally observable occurrence (done/crash/straggle/repair).
+    World(WorldEvent),
+    /// Cumulative busy GPU-seconds of one group's pools, sampled when a
+    /// member's train phase completes. Lane-local, so serial and
+    /// parallel runs sample identical values.
+    Util { t: f64, gid: usize, roll_busy_gpu_s: f64, train_busy_gpu_s: f64 },
+    /// A job's SLO slack after finishing iteration `iter` (1-based
+    /// count of completed iterations): the seconds of headroom left
+    /// before the SLO deadline implied by the estimated solo rate.
+    /// Negative = the job is currently violating its SLO.
+    SloSlack { t: f64, job: JobId, iter: usize, slack_s: f64 },
+}
+
+impl Frame {
+    /// Simulated time of the frame (a phase frame sorts at its start).
+    pub fn t(&self) -> f64 {
+        match self {
+            Frame::Phase(r) => r.start,
+            Frame::World(w) => match *w {
+                WorldEvent::Done { t, .. }
+                | WorldEvent::Crash { t, .. }
+                | WorldEvent::Straggle { t, .. }
+                | WorldEvent::Repair { t, .. }
+                | WorldEvent::NodeUp { t, .. } => t,
+            },
+            Frame::Util { t, .. } | Frame::SloSlack { t, .. } => *t,
+        }
+    }
+
+    fn kind_rank(&self) -> u8 {
+        match self {
+            Frame::Phase(_) => 0,
+            Frame::World(_) => 1,
+            Frame::Util { .. } => 2,
+            Frame::SloSlack { .. } => 3,
+        }
+    }
+
+    /// Total-order key after `(t, kind_rank)`: identifying fields first,
+    /// then payload bits, so frames comparing equal are bit-identical.
+    fn tie_key(&self) -> (usize, usize, usize, u8, u64, u64) {
+        match self {
+            Frame::Phase(r) => phase_tie_key(r),
+            Frame::World(w) => match *w {
+                WorldEvent::Done { job, .. } => (0, job, 0, 0, 0, 0),
+                WorldEvent::Crash { gid, node, .. } => (gid, 0, node, 1, 0, 0),
+                WorldEvent::Straggle { gid, node, factor, .. } => {
+                    (gid, 0, node, 2, factor.to_bits(), 0)
+                }
+                WorldEvent::Repair { job, gid, to_gid, repinned, .. } => {
+                    (gid, job, to_gid, 3, repinned as u64, 0)
+                }
+                WorldEvent::NodeUp { gid, node, .. } => (gid, 0, node, 4, 0, 0),
+            },
+            Frame::Util { gid, roll_busy_gpu_s, train_busy_gpu_s, .. } => {
+                (*gid, 0, 0, 0, roll_busy_gpu_s.to_bits(), train_busy_gpu_s.to_bits())
+            }
+            Frame::SloSlack { job, iter, slack_s, .. } => {
+                (0, *job, *iter, 0, slack_s.to_bits(), 0)
+            }
+        }
+    }
+}
+
+fn phase_tie_key(r: &PhaseRecord) -> (usize, usize, usize, u8, u64, u64) {
+    let kind = match r.kind {
+        PhaseKind::Init => 0u8,
+        PhaseKind::Rollout => 1,
+        PhaseKind::Train => 2,
+        PhaseKind::Sync => 3,
+    };
+    // Two phase records agreeing on (start, group, job, iter, kind, end)
+    // are the same dispatch decision; roll_nodes is determined by it.
+    (r.group, r.job, r.iter, kind, r.end.to_bits(), 0)
+}
+
+/// Sort a batch of phase records into the recorder's canonical total
+/// order. Applied to `SimResult::records` at finalize on both the serial
+/// and the group-parallel path, so the gantt stream no longer depends on
+/// how windows were drained.
+pub fn canonical_sort_records(records: &mut [PhaseRecord]) {
+    records.sort_by(|a, b| {
+        a.start
+            .total_cmp(&b.start)
+            .then_with(|| phase_tie_key(a).cmp(&phase_tie_key(b)))
+    });
+}
+
+/// The append-only frame stream. `Default` is an empty, disarmed-looking
+/// recorder; the engine pushes only when `SimConfig::record_flight` (or
+/// the specific emitters' own gates) say so.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FlightRecorder {
+    frames: Vec<Frame>,
+}
+
+impl FlightRecorder {
+    #[inline]
+    pub fn push(&mut self, f: Frame) {
+        self.frames.push(f);
+    }
+
+    pub fn frames(&self) -> &[Frame] {
+        &self.frames
+    }
+
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Take the buffered frames, leaving the recorder empty (the
+    /// daemon's incremental metrics drain).
+    pub fn drain(&mut self) -> Vec<Frame> {
+        std::mem::take(&mut self.frames)
+    }
+
+    /// Append another recorder's frames (lane merge).
+    pub fn append(&mut self, other: &mut FlightRecorder) {
+        self.frames.append(&mut other.frames);
+    }
+
+    /// Sort into the canonical total order (see module docs). Ties are
+    /// only between bit-identical frames, so the result is independent
+    /// of the pre-sort (serial vs gid-concatenated parallel) order.
+    pub fn canonical_sort(&mut self) {
+        self.frames.sort_by(|a, b| {
+            a.t()
+                .total_cmp(&b.t())
+                .then_with(|| a.kind_rank().cmp(&b.kind_rank()))
+                .then_with(|| a.tie_key().cmp(&b.tie_key()))
+        });
+    }
+
+    /// The phase records in the stream (the gantt view of the recorder).
+    pub fn phase_records(&self) -> impl Iterator<Item = &PhaseRecord> {
+        self.frames.iter().filter_map(|f| match f {
+            Frame::Phase(r) => Some(r),
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(start: f64, group: usize, job: JobId, kind: PhaseKind) -> PhaseRecord {
+        PhaseRecord { job, group, kind, iter: 0, start, end: start + 1.0, roll_nodes: vec![] }
+    }
+
+    #[test]
+    fn canonical_sort_is_order_insensitive() {
+        let frames = vec![
+            Frame::Phase(rec(2.0, 1, 7, PhaseKind::Rollout)),
+            Frame::Util { t: 2.0, gid: 0, roll_busy_gpu_s: 8.0, train_busy_gpu_s: 4.0 },
+            Frame::Phase(rec(1.0, 0, 3, PhaseKind::Train)),
+            Frame::SloSlack { t: 2.0, job: 7, iter: 1, slack_s: 5.5 },
+            Frame::World(WorldEvent::Done { t: 1.0, job: 3 }),
+        ];
+        let mut a = FlightRecorder { frames: frames.clone() };
+        let mut b = FlightRecorder { frames: frames.into_iter().rev().collect() };
+        a.canonical_sort();
+        b.canonical_sort();
+        assert_eq!(a, b);
+        // Time is the primary key; kind rank breaks same-t ties.
+        assert_eq!(a.frames[0].t(), 1.0);
+        assert!(matches!(a.frames[0], Frame::Phase(_)));
+        assert!(matches!(a.frames[1], Frame::World(_)));
+        assert!(matches!(a.frames[4], Frame::SloSlack { .. }));
+    }
+
+    #[test]
+    fn drain_empties_and_phase_view_filters() {
+        let mut fr = FlightRecorder::default();
+        fr.push(Frame::Phase(rec(0.0, 0, 1, PhaseKind::Rollout)));
+        fr.push(Frame::Util { t: 1.0, gid: 0, roll_busy_gpu_s: 1.0, train_busy_gpu_s: 0.0 });
+        assert_eq!(fr.len(), 2);
+        assert_eq!(fr.phase_records().count(), 1);
+        let taken = fr.drain();
+        assert_eq!(taken.len(), 2);
+        assert!(fr.is_empty());
+    }
+}

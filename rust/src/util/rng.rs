@@ -37,6 +37,19 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// The raw generator state `(state, inc)` — the snapshot layer
+    /// (DESIGN.md §17) captures RNG streams as these plain pairs.
+    pub fn to_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Self::to_parts`] output. Unlike
+    /// [`Self::new`] this performs **no** seeding or warmup: the restored
+    /// stream continues bit-exactly where the captured one stopped.
+    pub fn from_parts(state: u64, inc: u64) -> Self {
+        Rng { state, inc }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         // Two PCG-XSH-RR 32-bit outputs glued together.
         let lo = self.next_u32() as u64;
@@ -132,6 +145,19 @@ mod tests {
     fn deterministic() {
         let mut a = Rng::new(42);
         let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn parts_roundtrip_resumes_bitwise() {
+        let mut a = Rng::new(77);
+        for _ in 0..13 {
+            a.next_u64();
+        }
+        let (state, inc) = a.to_parts();
+        let mut b = Rng::from_parts(state, inc);
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

@@ -1,0 +1,213 @@
+//! ISSUE 9 bitwise gates (DESIGN.md §17): checkpointed state and the
+//! flight recorder must be **invisible in the results**.
+//!
+//! * **Snapshot/restore**: a simulation forked at any barrier `t` and
+//!   drained must produce a `SimResult` bit-identical to the
+//!   uninterrupted run — across chaos on/off, every intra-group dispatch
+//!   policy, and a dense sweep of fork points (repeated snapshots of one
+//!   prefix simulation included).
+//! * **Byte codec**: `to_bytes` → `from_bytes` is a fixed point, and the
+//!   decoded image restores to the same bitwise result as the in-memory
+//!   snapshot — up to the full 2k-job fleet trace.
+//! * **Flight recorder**: arming `record_flight` must not change a
+//!   single bit of any other result field, and the recorder's phase view
+//!   must agree with the gantt record stream.
+//!
+//! No proptest crate offline: seeded random traces, failure tags in the
+//! assertion messages for replay.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::coordinator::orchestrator::IntraPolicyKind;
+use rollmux::sim::engine::{SimConfig, SimResult, SimSnapshot, Simulator};
+use rollmux::sim::faults::FaultConfig;
+use rollmux::sim::recorder::FlightRecorder;
+use rollmux::workload::trace::fleet_trace;
+
+fn chaos() -> FaultConfig {
+    FaultConfig {
+        seed: 13,
+        mtbf_s: 2.0 * 3600.0,
+        mean_repair_s: 600.0,
+        straggler_frac: 0.3,
+        straggler_factor: 1.4,
+        max_events: 40,
+    }
+}
+
+/// Scalar + stream digest of a `SimResult`, compared bitwise.
+fn assert_scalars_bitwise(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{tag}: makespan");
+    assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits(), "{tag}: cost");
+    assert_eq!(a.avg_cost_per_hour.to_bits(), b.avg_cost_per_hour.to_bits(), "{tag}: avg cost");
+    assert_eq!(a.roll_busy_gpu_s.to_bits(), b.roll_busy_gpu_s.to_bits(), "{tag}: roll busy");
+    assert_eq!(a.train_busy_gpu_s.to_bits(), b.train_busy_gpu_s.to_bits(), "{tag}: train busy");
+    assert_eq!(a.roll_prov_gpu_s.to_bits(), b.roll_prov_gpu_s.to_bits(), "{tag}: roll prov");
+    assert_eq!(a.train_prov_gpu_s.to_bits(), b.train_prov_gpu_s.to_bits(), "{tag}: train prov");
+    assert_eq!(a.wasted_gpu_s.to_bits(), b.wasted_gpu_s.to_bits(), "{tag}: wasted");
+    assert_eq!(a.recovery_time_s.to_bits(), b.recovery_time_s.to_bits(), "{tag}: recovery");
+    assert_eq!(a.events_processed, b.events_processed, "{tag}: events");
+    assert_eq!(a.crashes, b.crashes, "{tag}: crashes");
+    assert_eq!(a.stragglers, b.stragglers, "{tag}: stragglers");
+    assert_eq!(a.evictions, b.evictions, "{tag}: evictions");
+    assert_eq!(a.spills, b.spills, "{tag}: spills");
+    assert_eq!(a.peak_roll_gpus, b.peak_roll_gpus, "{tag}: peak roll");
+    assert_eq!(a.peak_train_gpus, b.peak_train_gpus, "{tag}: peak train");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{tag}: outcome count");
+    for (id, oa) in &a.outcomes {
+        let ob = b.outcomes.get(id).unwrap_or_else(|| panic!("{tag}: job {id} missing"));
+        assert_eq!(oa.finish_s.to_bits(), ob.finish_s.to_bits(), "{tag}: job {id} finish");
+        assert_eq!(oa.iters, ob.iters, "{tag}: job {id} iters");
+        assert_eq!(oa.migrations, ob.migrations, "{tag}: job {id} migrations");
+        assert_eq!(oa.recoveries, ob.recoveries, "{tag}: job {id} recoveries");
+        assert_eq!(oa.recovery_s.to_bits(), ob.recovery_s.to_bits(), "{tag}: job {id} rec s");
+    }
+}
+
+/// Full digest: scalars plus both recorded streams.
+fn assert_results_bitwise(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_scalars_bitwise(a, b, tag);
+    assert_eq!(a.records.len(), b.records.len(), "{tag}: record count");
+    for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        assert_eq!(ra, rb, "{tag}: gantt record {i}");
+        assert_eq!(ra.start_s.to_bits(), rb.start_s.to_bits(), "{tag}: record {i} start bits");
+        assert_eq!(ra.end_s.to_bits(), rb.end_s.to_bits(), "{tag}: record {i} end bits");
+    }
+    assert_eq!(a.flight.len(), b.flight.len(), "{tag}: flight frame count");
+    assert_eq!(a.flight, b.flight, "{tag}: flight stream");
+}
+
+fn cfg_for(seed: u64, intra: IntraPolicyKind, faults: Option<FaultConfig>) -> SimConfig {
+    SimConfig {
+        seed,
+        intra,
+        faults,
+        record_gantt: true,
+        record_flight: true,
+        ..Default::default()
+    }
+}
+
+fn mk_sim(cfg: &SimConfig, seed: u64, n_jobs: usize) -> Simulator<InterGroupScheduler> {
+    Simulator::new(
+        cfg.clone(),
+        InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8),
+        fleet_trace(seed, n_jobs, 1.0),
+    )
+}
+
+/// The headline gate: chaos on/off x every intra policy x four fork
+/// fractions, each restored checkpoint draining bitwise-equal to the
+/// uninterrupted oracle.
+#[test]
+fn prop_restore_at_barriers_matches_uninterrupted() {
+    let (seed, n_jobs) = (41u64, 200usize);
+    for faults in [None, Some(chaos())] {
+        for intra in IntraPolicyKind::all() {
+            let cfg = cfg_for(seed, intra, faults.clone());
+            let oracle = mk_sim(&cfg, seed, n_jobs).run_to_end();
+            for frac in [0.1, 0.35, 0.6, 0.9] {
+                let t = oracle.makespan_s * frac;
+                let mut prefix = mk_sim(&cfg, seed, n_jobs);
+                let snap = prefix.fork_at(t);
+                assert!(snap.t() <= t, "clock ran past the barrier");
+                let trace = fleet_trace(seed, n_jobs, 1.0);
+                let got = Simulator::restore(cfg.clone(), &trace, &snap).run_to_end();
+                let tag = format!("intra {intra:?} chaos {} frac {frac}", faults.is_some());
+                assert_results_bitwise(&oracle, &got, &tag);
+            }
+        }
+    }
+}
+
+/// Repeated snapshots of ONE prefix simulation at a dense sweep of
+/// barriers: snapshotting is non-destructive, and every checkpoint
+/// drains to the oracle. Also drains the prefix itself at the end.
+#[test]
+fn prop_dense_barrier_sweep_single_prefix() {
+    let (seed, n_jobs) = (43u64, 80usize);
+    let cfg = cfg_for(seed, IntraPolicyKind::SloSlackPriority, Some(chaos()));
+    let oracle = mk_sim(&cfg, seed, n_jobs).run_to_end();
+    let trace = fleet_trace(seed, n_jobs, 1.0);
+    let mut prefix = mk_sim(&cfg, seed, n_jobs);
+    for k in 1..16usize {
+        let t = oracle.makespan_s * (k as f64) / 16.0;
+        let snap = prefix.fork_at(t);
+        let got = Simulator::restore(cfg.clone(), &trace, &snap).run_to_end();
+        assert_results_bitwise(&oracle, &got, &format!("barrier {k}/16"));
+    }
+    let tail = prefix.run_to_end();
+    assert_results_bitwise(&oracle, &tail, "prefix drained after 15 snapshots");
+}
+
+/// The 2k-job fleet trace through the byte codec: encode is a fixed
+/// point, and the decoded image restores bitwise. This is the
+/// ISSUE-9 scale gate.
+#[test]
+fn prop_codec_roundtrip_2k_jobs() {
+    let (seed, n_jobs) = (47u64, 2_000usize);
+    let cfg = cfg_for(seed, IntraPolicyKind::WorkConservingFifo, None);
+    let oracle = mk_sim(&cfg, seed, n_jobs).run_to_end();
+    let mut prefix = mk_sim(&cfg, seed, n_jobs);
+    let snap = prefix.fork_at(oracle.makespan_s * 0.5);
+    let bytes = snap.to_bytes();
+    let decoded = SimSnapshot::from_bytes(&bytes).expect("decode");
+    assert_eq!(decoded.to_bytes(), bytes, "codec fixed point");
+    assert_eq!(decoded.t().to_bits(), snap.t().to_bits(), "decoded clock");
+    assert_eq!(decoded.live_jobs(), snap.live_jobs(), "decoded live jobs");
+    assert_eq!(decoded.pending_events(), snap.pending_events(), "decoded events");
+    let trace = fleet_trace(seed, n_jobs, 1.0);
+    let got = Simulator::restore(cfg.clone(), &trace, &decoded).run_to_end();
+    assert_results_bitwise(&oracle, &got, "2k-job decoded restore");
+}
+
+/// Arming the flight recorder changes nothing but the flight stream
+/// itself — and its phase view agrees with the gantt records.
+#[test]
+fn prop_recorder_is_invisible() {
+    let (seed, n_jobs) = (53u64, 150usize);
+    for faults in [None, Some(chaos())] {
+        let base = SimConfig {
+            seed,
+            faults: faults.clone(),
+            record_gantt: true,
+            ..Default::default()
+        };
+        let off = mk_sim(&base, seed, n_jobs).run_to_end();
+        let armed = SimConfig { record_flight: true, ..base.clone() };
+        let mut on = mk_sim(&armed, seed, n_jobs).run_to_end();
+        let tag = format!("chaos {}", faults.is_some());
+        assert!(off.flight.is_empty(), "{tag}: recorder-off run captured frames");
+        assert!(!on.flight.is_empty(), "{tag}: recorder-on run captured nothing");
+        let phases: Vec<_> = on.flight.phase_records().cloned().collect();
+        assert_eq!(phases.len(), on.records.len(), "{tag}: phase view vs gantt count");
+        for (i, (pf, pg)) in phases.iter().zip(&on.records).enumerate() {
+            assert_eq!(pf, pg, "{tag}: phase frame {i} vs gantt record");
+        }
+        on.flight = FlightRecorder::default();
+        assert_results_bitwise(&off, &on, &tag);
+    }
+}
+
+/// Fork + diverge (policy swap mid-flight) stays bitwise equal to a
+/// from-scratch run that applies the same divergence at the same `t`.
+#[test]
+fn prop_forked_divergence_matches_scratch() {
+    let (seed, n_jobs) = (59u64, 150usize);
+    let cfg = cfg_for(seed, IntraPolicyKind::WorkConservingFifo, Some(chaos()));
+    let base = mk_sim(&cfg, seed, n_jobs).run_to_end();
+    let t = base.makespan_s * 0.45;
+    let mut prefix = mk_sim(&cfg, seed, n_jobs);
+    let snap = prefix.fork_at(t);
+    let trace = fleet_trace(seed, n_jobs, 1.0);
+    for target in [IntraPolicyKind::StrictRoundRobin, IntraPolicyKind::SloSlackPriority] {
+        let mut forked = Simulator::restore(cfg.clone(), &trace, &snap);
+        forked.set_intra_policy(target);
+        let got = forked.run_to_end();
+        let mut scratch = mk_sim(&cfg, seed, n_jobs);
+        scratch.run_until(t);
+        scratch.set_intra_policy(target);
+        let expect = scratch.run_to_end();
+        assert_results_bitwise(&expect, &got, &format!("diverge to {target:?}"));
+    }
+}

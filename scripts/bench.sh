@@ -4,7 +4,7 @@
 # across PRs; see EXPERIMENTS.md §Perf for methodology). ISSUE 1
 # produced BENCH_1.json, ISSUE 2 BENCH_2.json; the generation is a
 # parameter so each PR appends its own file instead of editing this
-# script (ISSUE 8 default: BENCH_8.json).
+# script (ISSUE 9 default: BENCH_9.json).
 #
 # Multi-round protocol (ISSUE 7): the whole bench suite runs
 # BENCH_ROUNDS times (default 5) plus ONE warmup round that is
@@ -20,7 +20,7 @@
 # bench_compare.sh's policy).
 #
 # Usage: scripts/bench.sh [gen] [extra cargo args...]
-#   gen                 bench generation number (default: 8 -> BENCH_8.json)
+#   gen                 bench generation number (default: 9 -> BENCH_9.json)
 #   BENCH_OUT=path      override the output file entirely
 #   BENCH_ROUNDS=n      kept measurement rounds (default 5; warmup extra)
 #   MAX_CV=x            acceptance ceiling on gated entries' cv (default 0.15)
@@ -29,7 +29,7 @@
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
-GEN="8"
+GEN="9"
 if [[ $# -ge 1 && "$1" =~ ^[0-9]+$ ]]; then
     GEN="$1"
     shift
@@ -61,6 +61,10 @@ run_suite() {
     # ISSUES 6, 8: rollmuxd control-plane series (admission, journal,
     # replay, live reconfig, multi-tenant arbiter path).
     cargo bench --bench daemon "$@"
+    # ISSUE 9: checkpoint capture/codec/restore costs plus the
+    # fork_sweep_vs_rerun acceptance pair (>= 3x for 8 branches off one
+    # late checkpoint vs 8 independent re-runs).
+    cargo bench --bench snapshot "$@"
 }
 
 echo "== bench round 0/${ROUNDS} (warmup, discarded) =="
