@@ -1,59 +1,87 @@
-//! Trace replay: the §7.4 at-scale scenario as a runnable example.
+//! Trace replay + forensic archive: the ISSUE 10 pipeline end to end.
 //!
-//! Replays a synthetic two-week production trace (200 heterogeneous jobs,
-//! Qwen-family 3B-32B, SLO ~ Unif(1,2)) through the discrete-event
-//! simulator under RollMux and compares provisioning cost / GPU usage /
-//! SLO attainment against Solo-D and veRL.
+//! Replays a chaos-armed fleet trace through the discrete-event engine
+//! with decision provenance recording on, persists the flight stream as
+//! an `RMTRC01` archive, reads the archive back, and runs the
+//! `slo-breach` and `bubbles` queries over it — printing their
+//! deterministic tables on stdout. Stdout is invariant under
+//! `ROLLMUX_THREADS` (the CI matrix diffs it): the producer honors the
+//! env var via [`max_threads`], and the recorder's canonical finalize
+//! sort makes serial and group-parallel runs frame-identical. Timings
+//! go to stderr.
 //!
 //! Run: `cargo run --release --example trace_replay [n_jobs] [seed]`
 
-use rollmux::baselines::{evaluate, BaselineKind};
 use rollmux::cluster::PhaseModel;
-use rollmux::sim::engine::{run_rollmux, SimConfig};
-use rollmux::workload::trace::production_trace;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::obs::query as q;
+use rollmux::obs::FlightArchive;
+use rollmux::sim::engine::{SimConfig, Simulator};
+use rollmux::sim::faults::FaultConfig;
+use rollmux::sim::recorder::canonical_sort_frames;
+use rollmux::util::par::max_threads;
+use rollmux::workload::trace::fleet_trace;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_jobs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(120);
     let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(7);
 
-    println!("generating {n_jobs}-job production trace (seed {seed})...");
-    let trace = production_trace(seed, n_jobs);
-    let model = PhaseModel::default();
+    // ROLLMUX_TRACE_OUT keeps the archive at the given path (the CI
+    // smoke cmp's the archives from 1- and 4-thread producers); by
+    // default it lands in a temp dir and is removed on exit.
+    let keep = std::env::var("ROLLMUX_TRACE_OUT").ok();
+    let dir = std::env::temp_dir().join(format!("rollmux_trace_replay_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = match &keep {
+        Some(p) => std::path::PathBuf::from(p),
+        None => dir.join("flight.rmtrc"),
+    };
 
+    let cfg = SimConfig {
+        seed,
+        record_flight: true,
+        record_decisions: true,
+        trace_path: Some(path.clone()),
+        faults: Some(FaultConfig {
+            seed,
+            mtbf_s: 2.0 * 3600.0,
+            mean_repair_s: 600.0,
+            straggler_frac: 0.3,
+            straggler_factor: 1.4,
+            max_events: 40,
+        }),
+        ..Default::default()
+    };
+    let trace = fleet_trace(seed, n_jobs, 1.0);
+    let sched = InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8);
+    let workers = max_threads();
     let t0 = std::time::Instant::now();
-    let cfg = SimConfig { seed, ..Default::default() };
-    let mux = run_rollmux(cfg, trace.clone());
-    println!("simulated {:.1} days of cluster time in {:.2}s wall",
-        mux.makespan_s / 86_400.0, t0.elapsed().as_secs_f64());
-
-    let solo = evaluate(BaselineKind::SoloDisaggregation, &trace, &model, seed);
-    let verl = evaluate(BaselineKind::VerlColocated, &trace, &model, seed);
-
-    println!("\n{:<22}{:>12}{:>14}{:>12}{:>14}", "system", "avg $/h", "total $k", "SLO", "peak GPUs");
-    for (name, cost, total, slo, gpus) in [
-        ("RollMux", mux.avg_cost_per_hour, mux.cost_usd, mux.slo_attainment(),
-         mux.peak_roll_gpus + mux.peak_train_gpus),
-        ("Solo-D", solo.avg_cost_per_hour, solo.cost_usd, solo.slo_attainment,
-         solo.peak_roll_gpus + solo.peak_train_gpus),
-        ("veRL co-located", verl.avg_cost_per_hour, verl.cost_usd, verl.slo_attainment,
-         verl.peak_roll_gpus + verl.peak_train_gpus),
-    ] {
-        println!("{name:<22}{cost:>12.0}{:>14.1}{:>11.1}%{gpus:>14}", total / 1000.0, slo * 100.0);
-    }
-    // Structured dump for offline plotting.
-    let out = std::path::Path::new("results_trace_replay.json");
-    if rollmux::metrics::write_json(out, &rollmux::metrics::sim_result_json(&mux)).is_ok() {
-        println!("\nwrote {}", out.display());
-    }
-    let (rb, tb) = mux.bubble_fracs();
-    println!(
-        "\nRollMux bubbles: rollout {:.1}% / train {:.1}%  (Solo-D: {:.1}% / {:.1}%)",
-        rb * 100.0, tb * 100.0, solo.roll_bubble * 100.0, solo.train_bubble * 100.0
+    let res = Simulator::new(cfg, sched, trace).run_parallel(workers);
+    eprintln!(
+        "simulated {:.1} days of cluster time on {workers} worker(s) in {:.2}s wall",
+        res.makespan_s / 86_400.0,
+        t0.elapsed().as_secs_f64()
     );
+
+    // Read the persisted archive back: the query engine runs over the
+    // file, not the in-memory recorder — that is the forensic contract.
+    let mut frames = FlightArchive::read(&path).expect("read archive").expect("clean archive");
+    canonical_sort_frames(&mut frames);
+    assert_eq!(frames, res.flight.frames(), "archive round-trips the flight stream");
+
     println!(
-        "cost savings: {:.2}x vs Solo-D, {:.2}x vs veRL (paper: 1.84x / 1.38x)",
-        solo.cost_usd / mux.cost_usd,
-        verl.cost_usd / mux.cost_usd
+        "trace: {n_jobs} jobs seed {seed} — {} frames, {} crashes",
+        frames.len(),
+        res.crashes
     );
+    println!();
+    print!("{}", q::slo_breach_table(&q::slo_breach(&frames, 600.0), 600.0));
+    println!();
+    print!("{}", q::bubbles_table(&q::bubbles(&frames)));
+
+    if keep.is_none() {
+        std::fs::remove_file(&path).ok();
+    }
+    std::fs::remove_dir(&dir).ok();
 }

@@ -1,0 +1,87 @@
+//! Bench: forensic observability (ISSUE 10, DESIGN.md §18).
+//! `decisions_overhead` is the acceptance series: arming
+//! `record_decisions` on a flight-recorded chaos fleet run must cost
+//! <= 5% wall time over recording-off. Also: RMTRC01 archive
+//! encode/decode throughput and `slo-breach` query throughput on a
+//! ~100k-frame chaos archive.
+//! Set BENCH_JSON_OUT (scripts/bench.sh does) for BENCH_10.json records.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::obs::query as q;
+use rollmux::obs::FlightArchive;
+use rollmux::sim::engine::{SimConfig, Simulator};
+use rollmux::sim::faults::FaultConfig;
+use rollmux::util::{bench, emit_bench_json, timed};
+use rollmux::workload::trace::fleet_trace;
+
+const BIN: &str = "obs";
+const N_JOBS: usize = 1_000;
+
+fn chaos() -> FaultConfig {
+    FaultConfig {
+        seed: 13,
+        mtbf_s: 2.0 * 3600.0,
+        mean_repair_s: 600.0,
+        straggler_frac: 0.3,
+        straggler_factor: 1.4,
+        max_events: 40,
+    }
+}
+
+fn main() {
+    println!("== obs ==");
+    let base = SimConfig {
+        seed: 7,
+        record_flight: true,
+        faults: Some(chaos()),
+        ..Default::default()
+    };
+    let armed = SimConfig { record_decisions: true, ..base.clone() };
+    let mk_sched = || InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8);
+    let trace = fleet_trace(7, N_JOBS, 1.0);
+
+    // decisions_overhead: the acceptance series — provenance capture on
+    // a run that already pays for the flight recorder.
+    let (off, off_s) = timed(|| {
+        Simulator::new(base.clone(), mk_sched(), trace.clone()).run_to_end()
+    });
+    let (on, on_s) = timed(|| {
+        Simulator::new(armed.clone(), mk_sched(), trace.clone()).run_to_end()
+    });
+    let overhead = on_s / off_s.max(1e-12) - 1.0;
+    println!(
+        "decisions_overhead: off {off_s:.2}s vs on {on_s:.2}s ({:+.1}%, {} -> {} frames)",
+        overhead * 100.0,
+        off.flight.len(),
+        on.flight.len()
+    );
+    emit_bench_json(
+        BIN,
+        "decisions_overhead",
+        &[
+            ("off_wall_s", off_s),
+            ("on_wall_s", on_s),
+            ("overhead_frac", overhead),
+            ("frames", on.flight.len() as f64),
+        ],
+    );
+
+    // Archive codec throughput on the armed run's frame stream.
+    let frames = on.flight.frames();
+    let bytes = FlightArchive::encode(frames);
+    println!("archive footprint: {} frames, {} KiB", frames.len(), bytes.len() / 1024);
+    let enc = bench(1, 10, || FlightArchive::encode(frames));
+    enc.report_json(BIN, "encode_archive", bytes.len() as f64);
+    let dec = bench(1, 10, || FlightArchive::decode(&bytes).expect("decode"));
+    dec.report_json(BIN, "decode_archive", bytes.len() as f64);
+
+    // Query throughput over the decoded archive (the CLI's hot path).
+    let decoded = FlightArchive::decode(&bytes).expect("decode");
+    let slo = bench(1, 10, || q::slo_breach(&decoded, 600.0));
+    slo.report_json(BIN, "slo_breach_query", decoded.len() as f64);
+    let bub = bench(1, 10, || q::bubbles(&decoded));
+    bub.report_json(BIN, "bubbles_query", decoded.len() as f64);
+    let hist = bench(1, 10, || q::histograms(&decoded));
+    hist.report_json(BIN, "histograms_query", decoded.len() as f64);
+}

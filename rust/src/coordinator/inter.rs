@@ -70,6 +70,27 @@ pub struct Decision {
     pub roll_nodes: Vec<usize>,
 }
 
+/// One candidate group's score in a recorded placement scan (ISSUE 10):
+/// the best marginal-cost delta any generated placement achieved on that
+/// group, or `f64::INFINITY` when every placement was infeasible.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CandidateScore {
+    pub gid: usize,
+    pub delta_cost: f64,
+}
+
+/// Decision provenance for one placement scan (ISSUE 10, armed by
+/// [`InterGroupScheduler::set_record_provenance`]): every candidate group
+/// the scan visited, ascending gid, with its per-group best Δ. Captured
+/// by a separate full pass over the candidate list — no early exit, no
+/// shard dependence — so the record is identical however the real scan
+/// was partitioned, and the real scan's hot path is untouched when
+/// recording is off.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlacementProvenance {
+    pub considered: Vec<CandidateScore>,
+}
+
 /// One unsaturated group's index keys (stored so removal can binary-search
 /// the exact entries back out of the bucket lists).
 #[derive(Clone, Copy, Debug)]
@@ -208,6 +229,15 @@ pub struct InterGroupScheduler {
     /// decisions), the ledger is the queryable source of truth for
     /// *which jobs* are resident where.
     ledger: ResidencyLedger,
+    /// Record decision provenance for every placement scan (ISSUE 10).
+    /// Off by default: the capture pass never runs and placement is
+    /// bit-identical to the pre-observability scheduler.
+    record_provenance: bool,
+    /// The last scan's captured provenance, consumed by
+    /// [`Self::take_placement_provenance`] in the same engine turn that
+    /// triggered the scan — deliberately transient (never snapshotted):
+    /// it cannot be live across a window barrier or checkpoint.
+    last_provenance: Option<PlacementProvenance>,
 }
 
 impl InterGroupScheduler {
@@ -225,7 +255,26 @@ impl InterGroupScheduler {
             shards: 1,
             scratch_shard_parts: Vec::new(),
             ledger: ResidencyLedger::new(HOST_MEM_GB),
+            record_provenance: false,
+            last_provenance: None,
         }
+    }
+
+    /// Arm (or disarm) placement-provenance capture (ISSUE 10). When
+    /// armed, every scan leaves a [`PlacementProvenance`] retrievable via
+    /// [`Self::take_placement_provenance`]; when off, placement runs the
+    /// exact pre-observability code path.
+    pub fn set_record_provenance(&mut self, on: bool) {
+        self.record_provenance = on;
+        if !on {
+            self.last_provenance = None;
+        }
+    }
+
+    /// Take the provenance captured by the most recent placement scan
+    /// (None when capture is off or the scan has already been consumed).
+    pub fn take_placement_provenance(&mut self) -> Option<PlacementProvenance> {
+        self.last_provenance.take()
     }
 
     /// Builder: run placement scans across `shards` deterministic shards
@@ -351,6 +400,10 @@ impl InterGroupScheduler {
             }
         }
 
+        if self.record_provenance {
+            self.capture_provenance(&cands, &probes, &spec, exclude);
+        }
+
         let best: Option<(f64, usize, Candidate)> = if indexed && self.shards > 1 {
             self.scan_sharded(&cands, &probes, &spec, exclude)
         } else {
@@ -416,6 +469,43 @@ impl InterGroupScheduler {
                 }
             }
         }
+    }
+
+    /// The armed provenance pass (ISSUE 10): score every candidate group
+    /// independently — one single-gid [`scan_candidates`] call per
+    /// candidate, ascending gid, no cross-group early exit — so the
+    /// captured record is a pure function of the candidate list and the
+    /// group states, identical whether the real scan then runs serial,
+    /// sharded, or fanned out across threads. Read-only with respect to
+    /// placement state; runs only when `record_provenance` is armed.
+    fn capture_provenance(
+        &mut self,
+        cands: &[u32],
+        probes: &HashMap<usize, GroupJob>,
+        spec: &JobSpec,
+        exclude: Option<usize>,
+    ) {
+        let mut considered = Vec::with_capacity(cands.len());
+        let mut scratch = Vec::new();
+        for &gid in cands {
+            if exclude == Some(gid as usize) {
+                continue;
+            }
+            let delta = scan_candidates(
+                &self.groups,
+                &self.gid_to_idx,
+                self.max_group_size,
+                probes,
+                spec,
+                exclude,
+                true,
+                std::slice::from_ref(&gid),
+                &mut scratch,
+            )
+            .map_or(f64::INFINITY, |(d, _, _)| d);
+            considered.push(CandidateScore { gid: gid as usize, delta_cost: delta });
+        }
+        self.last_provenance = Some(PlacementProvenance { considered });
     }
 
     /// The shard a group belongs to, keyed by its training-pool size

@@ -21,6 +21,9 @@
 //! * [`runtime`] — PJRT execution of the AOT HLO artifacts.
 //! * [`rl`] — the real on-policy RL loop over the runtime.
 //! * [`metrics`] — cost/utilization/SLO accounting, gantt export.
+//! * [`obs`] — forensic observability: persisted `RMTRC01` trace
+//!   archives over the flight recorder and the `rollmux trace` query
+//!   engine (DESIGN.md §18).
 //! * [`exp`] — the experiment harness (one runner per paper table/figure).
 pub mod baselines;
 pub mod cluster;
@@ -28,6 +31,7 @@ pub mod coordinator;
 pub mod exp;
 pub mod memory;
 pub mod metrics;
+pub mod obs;
 pub mod phase;
 pub mod rl;
 pub mod runtime;

@@ -6,6 +6,7 @@
 //!   list                                        list experiment ids
 //!   run [--seed N] [--scale F]                  admit a synthetic trace live
 //!   serve [--wall] [--journal PATH] [...]       rollmuxd: JSONL scheduler daemon
+//!   trace <archive> <query> [...]               query a persisted RMTRC01 archive
 //!   info                                        print cluster + artifact info
 //!
 //! (Arg parsing is hand-rolled: this offline build has no clap — see
@@ -63,6 +64,7 @@ fn main() -> ExitCode {
             }
         },
         Some("serve") => serve(&args[1..]),
+        Some("trace") => trace_cmd(&args[1..]),
         Some("info") => {
             info();
             ExitCode::SUCCESS
@@ -70,7 +72,7 @@ fn main() -> ExitCode {
         _ => {
             eprintln!(
                 "rollmux — phase-level multiplexing for disaggregated RL post-training\n\
-                 usage: rollmux <exp|list|run|serve|info> ...\n\
+                 usage: rollmux <exp|list|run|serve|trace|info> ...\n\
                  try:   rollmux list"
             );
             ExitCode::from(2)
@@ -122,6 +124,10 @@ struct ServeOpts {
     /// `--listen PATH`: serve concurrent JSONL tenants on a Unix
     /// socket instead of stdin (ISSUE 8, DESIGN.md §16).
     listen: Option<String>,
+    /// `--trace PATH`: append every recorder frame (decision provenance
+    /// included) to an RMTRC01 archive for offline `rollmux trace`
+    /// queries (ISSUE 10, DESIGN.md §18).
+    trace: Option<String>,
 }
 
 fn parse_serve(rest: &[String]) -> Result<ServeOpts, String> {
@@ -129,6 +135,7 @@ fn parse_serve(rest: &[String]) -> Result<ServeOpts, String> {
     let mut wall = false;
     let mut journal: Option<String> = None;
     let mut listen: Option<String> = None;
+    let mut trace: Option<String> = None;
     let mut mtbf: Option<f64> = None;
     let mut seed = FaultConfig::default().seed;
     let mut i = 0;
@@ -144,6 +151,10 @@ fn parse_serve(rest: &[String]) -> Result<ServeOpts, String> {
             "--listen" => {
                 i += 1;
                 listen = Some(rest.get(i).ok_or("--listen needs a socket path")?.clone());
+            }
+            "--trace" => {
+                i += 1;
+                trace = Some(rest.get(i).ok_or("--trace needs a path")?.clone());
             }
             "--event-buf" => {
                 i += 1;
@@ -202,7 +213,12 @@ fn parse_serve(rest: &[String]) -> Result<ServeOpts, String> {
         // machinery attacking the live loop).
         cfg.sim.faults = Some(FaultConfig { seed, mtbf_s, ..Default::default() });
     }
-    Ok(ServeOpts { cfg, wall, journal, listen })
+    if trace.is_some() {
+        // An archive without provenance frames answers no `explain`
+        // query — arm decision recording whenever we persist a trace.
+        cfg.sim.record_decisions = true;
+    }
+    Ok(ServeOpts { cfg, wall, journal, listen, trace })
 }
 
 fn serve(rest: &[String]) -> ExitCode {
@@ -237,6 +253,15 @@ fn serve(rest: &[String]) -> ExitCode {
                 eprintln!("rollmux serve: journal {path}: {e}");
                 return ExitCode::from(1);
             }
+        }
+    }
+    // Attach the trace archive after journal replay: replayed frames
+    // were already archived by the predecessor process, and the daemon
+    // skips appends while replaying anyway.
+    if let Some(path) = &opts.trace {
+        if let Err(e) = daemon.attach_trace(std::path::Path::new(path)) {
+            eprintln!("rollmux serve: trace {path}: {e}");
+            return ExitCode::from(1);
         }
     }
     if let Some(server) = server {
@@ -286,6 +311,139 @@ fn serve(rest: &[String]) -> ExitCode {
     if let Err(e) = daemon.flush() {
         eprintln!("rollmux serve: journal flush: {e}");
         return ExitCode::from(1);
+    }
+    ExitCode::SUCCESS
+}
+
+/// `rollmux trace <archive> <query>` — the forensic query engine over a
+/// persisted RMTRC01 archive (ISSUE 10, DESIGN.md §18).
+///
+/// Queries: `slo-breach [--window S]`, `bubbles`, `explain --job N`,
+/// `util --gid G`, `hist`. `--json` swaps the fixed-width table for
+/// JSONL; `--salvage` tolerates a torn trailing block (a crashed
+/// daemon's archive) with a counted warning on stderr. Frames are
+/// re-sorted into canonical recorder order before querying, so output
+/// is byte-identical no matter how the archive was produced.
+fn trace_cmd(rest: &[String]) -> ExitCode {
+    use rollmux::obs::query as q;
+    use rollmux::obs::FlightArchive;
+    use rollmux::sim::recorder::canonical_sort_frames;
+
+    let usage = "usage: rollmux trace <archive> <slo-breach|bubbles|explain|util|hist> \
+                 [--window S] [--job N] [--gid G] [--json] [--salvage]";
+    let (Some(path), Some(query)) = (rest.first(), rest.get(1).map(String::as_str)) else {
+        eprintln!("{usage}");
+        return ExitCode::from(2);
+    };
+    let mut window_s = 600.0;
+    let mut job: Option<usize> = None;
+    let mut gid: Option<usize> = None;
+    let mut json = false;
+    let mut salvage = false;
+    let flags = &rest[2..];
+    let mut i = 0;
+    while i < flags.len() {
+        let flag = flags[i].as_str();
+        let parsed = match flag {
+            "--window" => {
+                i += 1;
+                flag_value(flags, i, flag).map(|v| window_s = v)
+            }
+            "--job" => {
+                i += 1;
+                flag_value(flags, i, flag).map(|v| job = Some(v))
+            }
+            "--gid" => {
+                i += 1;
+                flag_value(flags, i, flag).map(|v| gid = Some(v))
+            }
+            "--json" => Ok(json = true),
+            "--salvage" => Ok(salvage = true),
+            other => Err(format!("unknown flag {other}")),
+        };
+        if let Err(e) = parsed {
+            eprintln!("rollmux trace: {e}");
+            return ExitCode::from(2);
+        }
+        i += 1;
+    }
+    let loaded = if salvage {
+        FlightArchive::read_salvage(std::path::Path::new(path)).map(|r| {
+            r.map(|(frames, dropped)| {
+                if dropped > 0 {
+                    eprintln!("rollmux trace: salvage — dropped {dropped} torn trailing bytes");
+                }
+                frames
+            })
+        })
+    } else {
+        FlightArchive::read(std::path::Path::new(path))
+    };
+    let mut frames = match loaded {
+        Err(e) => {
+            eprintln!("rollmux trace: {path}: {e}");
+            return ExitCode::from(1);
+        }
+        Ok(Err(e)) => {
+            eprintln!("rollmux trace: {path}: {e} (try --salvage for a torn tail)");
+            return ExitCode::from(1);
+        }
+        Ok(Ok(frames)) => frames,
+    };
+    canonical_sort_frames(&mut frames);
+    match query {
+        "slo-breach" => {
+            let rows = q::slo_breach(&frames, window_s);
+            if json {
+                print!("{}", q::slo_breach_jsonl(&rows));
+            } else {
+                print!("{}", q::slo_breach_table(&rows, window_s));
+            }
+        }
+        "bubbles" => {
+            let rows = q::bubbles(&frames);
+            if json {
+                print!("{}", q::bubbles_jsonl(&rows));
+            } else {
+                print!("{}", q::bubbles_table(&rows));
+            }
+        }
+        "explain" => {
+            let Some(job) = job else {
+                eprintln!("rollmux trace explain: --job N is required");
+                return ExitCode::from(2);
+            };
+            let picked = q::explain(&frames, job);
+            if json {
+                print!("{}", q::explain_jsonl(&picked));
+            } else {
+                print!("{}", q::explain_table(job, &picked));
+            }
+        }
+        "util" => {
+            let Some(gid) = gid else {
+                eprintln!("rollmux trace util: --gid G is required");
+                return ExitCode::from(2);
+            };
+            let rows = q::util_series(&frames, gid);
+            if json {
+                print!("{}", q::util_jsonl(gid, &rows));
+            } else {
+                print!("{}", q::util_table(gid, &rows));
+            }
+        }
+        "hist" => {
+            let hists = q::histograms(&frames);
+            if json {
+                print!("{}", q::histograms_jsonl(&hists));
+            } else {
+                print!("{}", q::histograms_table(&hists));
+            }
+        }
+        other => {
+            eprintln!("rollmux trace: unknown query '{other}'\n{usage}");
+            return ExitCode::from(2);
+        }
     }
     ExitCode::SUCCESS
 }

@@ -1,0 +1,200 @@
+//! Deterministic fixed-boundary histograms over virtual-time quantities
+//! (ISSUE 10, DESIGN.md §18).
+//!
+//! Bucket boundaries are fixed constants — never derived from the data —
+//! so two runs that record the same frames produce byte-identical
+//! histogram reports regardless of value range. Values land in the first
+//! bucket whose upper bound is `>= v` (Prometheus `le` semantics), with
+//! an implicit `+Inf` bucket at the end. The accumulated `sum` is added
+//! in caller order, which for trace queries is the recorder's canonical
+//! frame order — deterministic across serial and parallel producers.
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Fixed upper bounds (seconds) for non-negative durations — queue waits
+/// and phase durations: the 1-2-5 series across five decades, 1 s to
+/// 50 000 s (~14 h), with `+Inf` implicit beyond.
+pub fn duration_bounds() -> Vec<f64> {
+    let decades = [1.0, 10.0, 100.0, 1000.0, 10000.0];
+    decades.iter().flat_map(|&d| [d, 2.0 * d, 5.0 * d]).collect()
+}
+
+/// Fixed upper bounds (seconds) for SLO slack, which is signed: the
+/// negated coarse duration series (how deep a breach ran), a 0 boundary
+/// splitting breach from headroom, then the positive series.
+pub fn slack_bounds() -> Vec<f64> {
+    let mut pos = duration_bounds();
+    pos.retain(|&b| b >= 50.0);
+    let mut b: Vec<f64> = pos.iter().rev().map(|&x| -x).collect();
+    b.push(0.0);
+    b.extend(&pos);
+    b
+}
+
+/// A fixed-boundary histogram with Prometheus-compatible buckets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    /// Metric-style name, e.g. `queue_wait_s`.
+    pub name: String,
+    /// Per-bucket (non-cumulative) counts; `counts[bounds.len()]` is the
+    /// `+Inf` overflow bucket.
+    pub counts: Vec<u64>,
+    /// Ascending upper bounds; the `+Inf` bucket is implicit.
+    pub bounds: Vec<f64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observed values (caller-order addition).
+    pub sum: f64,
+}
+
+impl Histogram {
+    pub fn new(name: &str, bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            name: name.to_string(),
+            counts: vec![0; bounds.len() + 1],
+            bounds: bounds.to_vec(),
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// A duration histogram (non-negative seconds).
+    pub fn durations(name: &str) -> Histogram {
+        Histogram::new(name, &duration_bounds())
+    }
+
+    /// A signed slack histogram.
+    pub fn slack(name: &str) -> Histogram {
+        Histogram::new(name, &slack_bounds())
+    }
+
+    /// Record one observation into the first bucket with bound `>= v`.
+    pub fn add(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Structured export: bounds, per-bucket counts, count, sum.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("bounds", arr(self.bounds.iter().map(|&b| num(b)).collect())),
+            ("counts", arr(self.counts.iter().map(|&c| num(c as f64)).collect())),
+            ("count", num(self.count as f64)),
+            ("sum", num(self.sum)),
+        ])
+    }
+
+    /// Prometheus text exposition (`_bucket`/`_sum`/`_count` with
+    /// cumulative `le` labels), prefixed `prefix_<name>`. `labels` is
+    /// either empty or a rendered `key="value"` list without braces.
+    pub fn prom_text(&self, prefix: &str, labels: &str) -> String {
+        let metric = format!("{prefix}_{}", self.name);
+        let mut out = format!("# TYPE {metric} histogram\n");
+        let sep = if labels.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            cum += self.counts[i];
+            out.push_str(&format!("{metric}_bucket{{{labels}{sep}le=\"{b}\"}} {cum}\n"));
+        }
+        cum += self.counts[self.bounds.len()];
+        out.push_str(&format!("{metric}_bucket{{{labels}{sep}le=\"+Inf\"}} {cum}\n"));
+        out.push_str(&format!("{metric}_sum{{{labels}}} {}\n", self.sum));
+        out.push_str(&format!("{metric}_count{{{labels}}} {}\n", self.count));
+        out
+    }
+
+    /// Fixed-width table rendering for the CLI: one row per non-empty
+    /// bucket plus the totals line.
+    pub fn table(&self) -> String {
+        let mut out = format!("{}  (count {}, sum {:.3})\n", self.name, self.count, self.sum);
+        let mut lo = f64::NEG_INFINITY;
+        for (i, &hi) in self.bounds.iter().chain(std::iter::once(&f64::INFINITY)).enumerate() {
+            if self.counts[i] > 0 {
+                out.push_str(&format!(
+                    "  ({:>10}, {:>10}] {:>8}\n",
+                    fmt_bound(lo),
+                    fmt_bound(hi),
+                    self.counts[i]
+                ));
+            }
+            lo = hi;
+        }
+        out
+    }
+}
+
+fn fmt_bound(b: f64) -> String {
+    if b == f64::INFINITY {
+        "+inf".to_string()
+    } else if b == f64::NEG_INFINITY {
+        "-inf".to_string()
+    } else {
+        format!("{b}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_use_le_semantics() {
+        let mut h = Histogram::new("x_s", &[1.0, 10.0]);
+        h.add(0.5); // (-inf, 1]
+        h.add(1.0); // (-inf, 1] — le boundary is inclusive
+        h.add(3.0); // (1, 10]
+        h.add(11.0); // +Inf bucket
+        assert_eq!(h.counts, vec![2, 1, 1]);
+        assert_eq!(h.count, 4);
+        assert_eq!(h.sum, 15.5);
+    }
+
+    #[test]
+    fn slack_buckets_cover_negatives() {
+        let mut h = Histogram::slack("slo_slack_s");
+        h.add(-250.0);
+        h.add(75.0);
+        let neg_idx = h.bounds.iter().position(|&b| b == -200.0).unwrap();
+        let pos_idx = h.bounds.iter().position(|&b| b == 100.0).unwrap();
+        assert_eq!(h.counts[neg_idx], 1);
+        assert_eq!(h.counts[pos_idx], 1);
+        assert!(h.bounds.windows(2).all(|w| w[0] < w[1]), "bounds ascend");
+        assert!(h.bounds.contains(&0.0), "0 splits breach from headroom");
+    }
+
+    #[test]
+    fn prom_text_is_cumulative() {
+        let mut h = Histogram::new("wait_s", &[1.0, 10.0]);
+        h.add(0.5);
+        h.add(5.0);
+        h.add(100.0);
+        let text = h.prom_text("rollmux", "");
+        assert!(text.contains("# TYPE rollmux_wait_s histogram"));
+        assert!(text.contains("rollmux_wait_s_bucket{le=\"1\"} 1"));
+        assert!(text.contains("rollmux_wait_s_bucket{le=\"10\"} 2"));
+        assert!(text.contains("rollmux_wait_s_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("rollmux_wait_s_count{} 3"));
+        let labeled = h.prom_text("rollmux", "gid=\"2\"");
+        assert!(labeled.contains("rollmux_wait_s_bucket{gid=\"2\",le=\"1\"} 1"));
+        assert!(labeled.contains("rollmux_wait_s_sum{gid=\"2\"} 105.5"));
+    }
+
+    #[test]
+    fn table_skips_empty_buckets_and_json_exports() {
+        let mut h = Histogram::durations("queue_wait_s");
+        h.add(3.0);
+        let t = h.table();
+        assert!(t.contains("queue_wait_s  (count 1, sum 3.000)"));
+        assert!(t.contains("(         2,          5]        1"));
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            j.get("bounds").unwrap().as_arr().unwrap().len() + 1,
+            j.get("counts").unwrap().as_arr().unwrap().len()
+        );
+    }
+}

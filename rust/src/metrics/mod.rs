@@ -1,5 +1,9 @@
 //! Metrics export: structured (JSON) dumps of simulation and baseline
-//! results for offline plotting, plus compact human summaries.
+//! results for offline plotting, compact human summaries, and the
+//! fixed-boundary [`histogram`]s the trace query layer and the daemon's
+//! `stats_prom` exposition build on (ISSUE 10).
+
+pub mod histogram;
 
 use std::path::Path;
 

@@ -1,0 +1,264 @@
+//! The `RMTRC01` trace-archive codec (ISSUE 10, DESIGN.md §18).
+//!
+//! Layout: an 8-byte magic (`RMTRC01\0`), then zero or more frame
+//! blocks, each a little-endian `u64` payload length followed by exactly
+//! that many bytes of snapshot-codec frame encoding (the same
+//! `enc_frame`/`dec_frame` pair `RMSNAP01` images embed, so one frame
+//! schema serves both). Per-frame framing is what makes the format
+//! daemon-friendly: [`ArchiveWriter`] appends blocks as the fanout
+//! drains the recorder, and a `kill -9` mid-write leaves at worst one
+//! torn trailing block, which [`FlightArchive::read_salvage`] drops with
+//! a counted warning while every complete prefix frame survives.
+//!
+//! Determinism: `encode` is a pure function of the frame sequence (all
+//! words little-endian, f64s as exact bits), so encode→decode→encode is
+//! a byte fixed point — property-tested in `rust/tests/prop_trace.rs`
+//! alongside the corrupt-tail and trailing-byte rejection cases.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use crate::sim::engine::{dec_frame, enc_frame, Dec, Enc};
+use crate::sim::recorder::Frame;
+
+/// The 8-byte archive magic: format name + version, NUL-padded.
+pub const TRACE_MAGIC: &[u8; 8] = b"RMTRC01\0";
+
+/// Reader/writer for whole-file trace archives.
+pub struct FlightArchive;
+
+impl FlightArchive {
+    /// Encode a frame sequence into archive bytes (magic included).
+    pub fn encode(frames: &[Frame]) -> Vec<u8> {
+        let mut out = TRACE_MAGIC.to_vec();
+        let mut e = Enc::default();
+        for f in frames {
+            e.buf.clear();
+            enc_frame(&mut e, f);
+            out.extend_from_slice(&(e.buf.len() as u64).to_le_bytes());
+            out.extend_from_slice(&e.buf);
+        }
+        out
+    }
+
+    /// Strict decode: every block must parse completely (a frame that
+    /// leaves unconsumed payload bytes is corrupt, exactly like the
+    /// snapshot codec's trailing-byte rejection) and the file must end
+    /// on a block boundary.
+    pub fn decode(bytes: &[u8]) -> Result<Vec<Frame>, String> {
+        let (frames, rest) = decode_prefix(bytes)?;
+        if rest != 0 {
+            return Err(format!("trace corrupt: {rest} trailing bytes after the last frame"));
+        }
+        Ok(frames)
+    }
+
+    /// Salvage decode for torn daemon tails: parse every complete frame
+    /// block and report how many trailing bytes were dropped instead of
+    /// failing. Magic and mid-stream corruption still error — only a
+    /// clean prefix is salvageable.
+    pub fn decode_salvage(bytes: &[u8]) -> Result<(Vec<Frame>, usize), String> {
+        decode_prefix(bytes)
+    }
+
+    /// Write `frames` as a fresh archive at `path` (atomic enough for
+    /// batch use: a full rewrite, not an append).
+    pub fn write(path: &Path, frames: &[Frame]) -> io::Result<()> {
+        let mut f = File::create(path)?;
+        f.write_all(&Self::encode(frames))?;
+        f.flush()
+    }
+
+    /// Strict whole-file read (the CLI's default).
+    pub fn read(path: &Path) -> io::Result<Result<Vec<Frame>, String>> {
+        let mut bytes = Vec::new();
+        File::open(path)?.read_to_end(&mut bytes)?;
+        Ok(Self::decode(&bytes))
+    }
+
+    /// Salvaging whole-file read: complete frames plus dropped tail
+    /// bytes (0 for a clean archive).
+    pub fn read_salvage(path: &Path) -> io::Result<Result<(Vec<Frame>, usize), String>> {
+        let mut bytes = Vec::new();
+        File::open(path)?.read_to_end(&mut bytes)?;
+        Ok(Self::decode_salvage(&bytes))
+    }
+}
+
+/// Decode every complete frame block; return the frames plus the count
+/// of unparseable trailing bytes (a torn final block). Errors on a bad
+/// magic or a block whose payload parses wrong despite being complete —
+/// that is corruption, not tearing.
+fn decode_prefix(bytes: &[u8]) -> Result<(Vec<Frame>, usize), String> {
+    let Some(body) = bytes.strip_prefix(TRACE_MAGIC.as_slice()) else {
+        return Err("trace corrupt: bad magic (not an RMTRC01 archive)".to_string());
+    };
+    let mut frames = Vec::new();
+    let mut pos = 0usize;
+    while pos < body.len() {
+        let Some(hdr) = body.get(pos..pos + 8) else {
+            return Ok((frames, body.len() - pos)); // torn length word
+        };
+        let len = u64::from_le_bytes(hdr.try_into().unwrap()) as usize;
+        let Some(end) = (pos + 8).checked_add(len) else {
+            return Ok((frames, body.len() - pos)); // absurd length word = torn tail
+        };
+        let Some(payload) = body.get(pos + 8..end) else {
+            return Ok((frames, body.len() - pos)); // torn payload
+        };
+        let mut d = Dec { buf: payload, pos: 0 };
+        let f = dec_frame(&mut d)
+            .map_err(|e| format!("trace corrupt: frame {} at byte {pos}: {e}", frames.len()))?;
+        if d.pos != payload.len() {
+            return Err(format!(
+                "trace corrupt: frame {} leaves {} unconsumed payload bytes",
+                frames.len(),
+                payload.len() - d.pos
+            ));
+        }
+        frames.push(f);
+        pos += 8 + len;
+    }
+    Ok((frames, 0))
+}
+
+/// Incremental archive appender for rollmuxd's `--trace` flag: blocks go
+/// out as the fanout drains the recorder, so a crashed daemon leaves an
+/// archive that reads back up to its last flushed frame.
+pub struct ArchiveWriter {
+    file: File,
+}
+
+impl ArchiveWriter {
+    /// Create (or truncate) an archive at `path` and stamp the magic.
+    pub fn create(path: &Path) -> io::Result<ArchiveWriter> {
+        let mut file = File::create(path)?;
+        file.write_all(TRACE_MAGIC)?;
+        file.flush()?;
+        Ok(ArchiveWriter { file })
+    }
+
+    /// Open an existing archive for appending, validating the magic (a
+    /// restarted daemon continues the file its predecessor left).
+    /// Creates a fresh archive when the file does not exist.
+    pub fn open_append(path: &Path) -> io::Result<ArchiveWriter> {
+        match File::open(path) {
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Self::create(path),
+            Err(e) => Err(e),
+            Ok(mut f) => {
+                let mut magic = [0u8; 8];
+                f.read_exact(&mut magic)
+                    .map_err(|_| io::Error::other("trace archive shorter than its magic"))?;
+                if &magic != TRACE_MAGIC {
+                    return Err(io::Error::other("not an RMTRC01 trace archive"));
+                }
+                drop(f);
+                let file = OpenOptions::new().append(true).open(path)?;
+                Ok(ArchiveWriter { file })
+            }
+        }
+    }
+
+    /// Append one batch of frames and flush, so every fanout's frames
+    /// survive a subsequent crash.
+    pub fn append(&mut self, frames: &[Frame]) -> io::Result<()> {
+        if frames.is_empty() {
+            return Ok(());
+        }
+        let mut block = Vec::new();
+        let mut e = Enc::default();
+        for f in frames {
+            e.buf.clear();
+            enc_frame(&mut e, f);
+            block.extend_from_slice(&(e.buf.len() as u64).to_le_bytes());
+            block.extend_from_slice(&e.buf);
+        }
+        self.file.write_all(&block)?;
+        self.file.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::WorldEvent;
+
+    fn frames() -> Vec<Frame> {
+        vec![
+            Frame::World(WorldEvent::Crash { t: 10.0, gid: 1, node: 0 }),
+            Frame::SloSlack { t: 11.0, job: 3, iter: 2, slack_s: -4.5 },
+            Frame::Placement {
+                t: 12.0,
+                job: 4,
+                gid: 1,
+                kind_tag: 0,
+                marginal_cost: 0.0,
+                considered: vec![(0, f64::INFINITY), (1, 0.0)],
+            },
+            Frame::Dispatch { t: 13.0, gid: 1, job: 4, kind: 0, policy: 2, queue_depth: 2 },
+            Frame::Repair {
+                t: 14.0,
+                gid: 1,
+                node: 0,
+                job: 3,
+                to_gid: 2,
+                repinned: false,
+                delay_s: 120.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn encode_decode_is_fixed_point() {
+        let fs = frames();
+        let bytes = FlightArchive::encode(&fs);
+        let back = FlightArchive::decode(&bytes).expect("decode");
+        assert_eq!(back, fs);
+        assert_eq!(FlightArchive::encode(&back), bytes, "fixed point");
+    }
+
+    #[test]
+    fn trailing_and_torn_bytes() {
+        let fs = frames();
+        let mut bytes = FlightArchive::encode(&fs);
+        bytes.push(0x5a);
+        assert!(FlightArchive::decode(&bytes).is_err(), "strict rejects trailing byte");
+        let (got, dropped) = FlightArchive::decode_salvage(&bytes).expect("salvage");
+        assert_eq!(got, fs);
+        assert_eq!(dropped, 1);
+        // Tear mid-payload: strict rejects, salvage drops the last frame.
+        let clean = FlightArchive::encode(&fs);
+        let torn = &clean[..clean.len() - 3];
+        assert!(FlightArchive::decode(torn).is_err());
+        let (got, dropped) = FlightArchive::decode_salvage(torn).expect("salvage");
+        assert_eq!(got, fs[..fs.len() - 1]);
+        assert!(dropped > 0);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(FlightArchive::decode(b"NOTMAGIC").is_err());
+        assert!(FlightArchive::decode_salvage(b"NOTMAGIC").is_err());
+    }
+
+    #[test]
+    fn writer_appends_restart_safe() {
+        let dir = std::env::temp_dir().join(format!("rollmux_trc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.rmtrc");
+        let fs = frames();
+        {
+            let mut w = ArchiveWriter::create(&path).unwrap();
+            w.append(&fs[..2]).unwrap();
+        }
+        {
+            let mut w = ArchiveWriter::open_append(&path).unwrap();
+            w.append(&fs[2..]).unwrap();
+        }
+        let got = FlightArchive::read(&path).unwrap().expect("clean archive");
+        assert_eq!(got, fs);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir(&dir).ok();
+    }
+}

@@ -1,0 +1,19 @@
+//! Forensic observability (ISSUE 10, DESIGN.md §18): persisted trace
+//! archives over the flight recorder and the query engine behind
+//! `rollmux trace`.
+//!
+//! The flight recorder (`sim/recorder.rs`, DESIGN.md §17) captures what
+//! happened; this module makes the stream **outlive the process** and
+//! answer **why** questions. [`FlightArchive`] is the `RMTRC01` byte
+//! codec — the same fixed-point, length/tag-validated discipline as the
+//! `RMSNAP01` snapshot codec, framed per-frame so a daemon can append
+//! incrementally and a crash leaves a salvageable file. [`query`] holds
+//! the forensic queries (`slo-breach`, `bubbles`, `explain`, `util`,
+//! `hist`), each a pure function of the canonically sorted frame slice,
+//! so a serial producer, a parallel producer and a daemon-appended
+//! archive all answer byte-identically.
+
+pub mod archive;
+pub mod query;
+
+pub use archive::{ArchiveWriter, FlightArchive};

@@ -1,0 +1,796 @@
+//! Forensic queries over a canonically sorted frame slice (ISSUE 10,
+//! DESIGN.md §18) — the engine behind `rollmux trace <archive> <query>`.
+//!
+//! Every query is a pure function of `&[Frame]` in the recorder's
+//! canonical order (callers sort with
+//! [`crate::sim::recorder::canonical_sort_frames`] after loading an
+//! archive), and every renderer walks its rows in that deterministic
+//! order, so a serial producer, a `run_parallel` producer and a
+//! daemon-appended archive all answer byte-identically.
+//!
+//! * [`slo_breach`] — ROADMAP item 4 verbatim: every group whose SLO
+//!   slack went negative within a window before a crash.
+//! * [`bubbles`] — per-group dependency-bubble attribution: of each
+//!   job's train+sync seconds (its rollout pool idle), how much was
+//!   reclaimed by another member's rollout vs left unreclaimed.
+//! * [`explain`] — the full provenance chain for one job.
+//! * [`util_series`] — one group's cumulative busy samples with deltas.
+//! * [`histograms`] — fixed-boundary distributions of queue wait, phase
+//!   durations and SLO slack.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::histogram::Histogram;
+use crate::sim::engine::{PhaseKind, WorldEvent};
+use crate::sim::recorder::Frame;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::workload::job::JobId;
+
+/// `Json::Num` that stays parseable: non-finite values (an infeasible
+/// candidate's Δ-cost) serialize as `null`, as in `metrics::chaos_point_json`.
+fn jnum(v: f64) -> Json {
+    if v.is_finite() {
+        num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn fmt_cost(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "inf".to_string()
+    }
+}
+
+/// `usize::MAX` sentinels (unknown group, cap-shrink pseudo-node) render
+/// as `-` in tables.
+fn fmt_id(v: usize) -> String {
+    if v == usize::MAX {
+        "-".to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+// ---------------------------------------------------------------- slo-breach
+
+/// One breach sample attributed to one crash: job `job` (running in
+/// group `gid` at the sample time) had negative slack `slack_s` at
+/// `slack_t`, within the window before the crash at `crash_t`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloBreachRow {
+    pub crash_t: f64,
+    pub crash_gid: usize,
+    pub crash_node: usize,
+    pub job: JobId,
+    pub gid: usize,
+    pub iter: usize,
+    pub slack_t: f64,
+    pub slack_s: f64,
+}
+
+/// ROADMAP item 4's query: for every crash, every SLO-slack sample that
+/// went negative within `window_s` seconds at or before it, with the
+/// breaching job mapped to the group it was running in at sample time
+/// (its latest phase record at or before `slack_t`; `usize::MAX` if the
+/// job had no phase yet). Rows are ordered by crash, then sample.
+pub fn slo_breach(frames: &[Frame], window_s: f64) -> Vec<SloBreachRow> {
+    // Job → (phase start, group) in ascending start order, for the
+    // job-to-group mapping at an arbitrary time.
+    let mut job_groups: BTreeMap<JobId, Vec<(f64, usize)>> = BTreeMap::new();
+    for f in frames {
+        if let Frame::Phase(r) = f {
+            job_groups.entry(r.job).or_default().push((r.start, r.group));
+        }
+    }
+    let breaches: Vec<(f64, JobId, usize, f64)> = frames
+        .iter()
+        .filter_map(|f| match f {
+            Frame::SloSlack { t, job, iter, slack_s } if *slack_s < 0.0 => {
+                Some((*t, *job, *iter, *slack_s))
+            }
+            _ => None,
+        })
+        .collect();
+    let mut rows = Vec::new();
+    for f in frames {
+        if let Frame::World(WorldEvent::Crash { t, gid, node }) = *f {
+            for &(slack_t, job, iter, slack_s) in &breaches {
+                if slack_t < t - window_s || slack_t > t {
+                    continue;
+                }
+                let group = job_groups
+                    .get(&job)
+                    .map(|v| {
+                        let i = v.partition_point(|&(start, _)| start <= slack_t);
+                        if i == 0 { usize::MAX } else { v[i - 1].1 }
+                    })
+                    .unwrap_or(usize::MAX);
+                rows.push(SloBreachRow {
+                    crash_t: t,
+                    crash_gid: gid,
+                    crash_node: node,
+                    job,
+                    gid: group,
+                    iter,
+                    slack_t,
+                    slack_s,
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn slo_breach_table(rows: &[SloBreachRow], window_s: f64) -> String {
+    let mut out = format!("slo-breach: window {window_s:.0}s, {} row(s)\n", rows.len());
+    out.push_str(&format!(
+        "{:>12} {:>6} {:>6} {:>6} {:>6} {:>6} {:>12} {:>12}\n",
+        "crash_t", "c_gid", "node", "job", "gid", "iter", "slack_t", "slack_s"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:>12.3} {:>6} {:>6} {:>6} {:>6} {:>6} {:>12.3} {:>12.3}\n",
+            r.crash_t,
+            r.crash_gid,
+            fmt_id(r.crash_node),
+            r.job,
+            fmt_id(r.gid),
+            r.iter,
+            r.slack_t,
+            r.slack_s
+        ));
+    }
+    out
+}
+
+pub fn slo_breach_jsonl(rows: &[SloBreachRow]) -> String {
+    rows.iter()
+        .map(|r| {
+            obj(vec![
+                ("crash_t", num(r.crash_t)),
+                ("crash_gid", num(r.crash_gid as f64)),
+                ("crash_node", jnum_id(r.crash_node)),
+                ("job", num(r.job as f64)),
+                ("gid", jnum_id(r.gid)),
+                ("iter", num(r.iter as f64)),
+                ("slack_t", num(r.slack_t)),
+                ("slack_s", num(r.slack_s)),
+            ])
+            .to_string()
+                + "\n"
+        })
+        .collect()
+}
+
+fn jnum_id(v: usize) -> Json {
+    if v == usize::MAX {
+        Json::Null
+    } else {
+        num(v as f64)
+    }
+}
+
+// ------------------------------------------------------------------- bubbles
+
+/// Per-group dependency-bubble attribution (the paper's structural-
+/// idleness argument read off a recorded run): `bubble_s` is the total
+/// train+sync seconds of the group's members (seconds their rollout
+/// allocation sat in a dependency bubble), split into seconds overlapped
+/// by at least one *other* member's rollout (`reclaimed_s`) and the
+/// remainder (`unreclaimed_s`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BubbleRow {
+    pub gid: usize,
+    pub bubble_s: f64,
+    pub reclaimed_s: f64,
+    pub unreclaimed_s: f64,
+}
+
+pub fn bubbles(frames: &[Frame]) -> Vec<BubbleRow> {
+    type ByJob = BTreeMap<JobId, Vec<(f64, f64)>>;
+    let mut rolls: BTreeMap<usize, ByJob> = BTreeMap::new();
+    let mut bubs: BTreeMap<usize, ByJob> = BTreeMap::new();
+    for f in frames {
+        if let Frame::Phase(r) = f {
+            let slot = match r.kind {
+                PhaseKind::Rollout => &mut rolls,
+                PhaseKind::Train | PhaseKind::Sync => &mut bubs,
+                PhaseKind::Init => continue,
+            };
+            slot.entry(r.group).or_default().entry(r.job).or_default().push((r.start, r.end));
+        }
+    }
+    let mut rows = Vec::new();
+    for (&gid, jobs) in &bubs {
+        let mut bubble_s = 0.0;
+        let mut reclaimed_s = 0.0;
+        for (&job, iv) in jobs {
+            bubble_s += iv.iter().map(|&(a, b)| b - a).sum::<f64>();
+            let others: Vec<(f64, f64)> = rolls
+                .get(&gid)
+                .map(|m| {
+                    m.iter()
+                        .filter(|&(&j, _)| j != job)
+                        .flat_map(|(_, v)| v.iter().copied())
+                        .collect()
+                })
+                .unwrap_or_default();
+            reclaimed_s += overlap_len(iv, &interval_union(others));
+        }
+        rows.push(BubbleRow { gid, bubble_s, reclaimed_s, unreclaimed_s: bubble_s - reclaimed_s });
+    }
+    rows
+}
+
+/// Merge intervals into a disjoint ascending union.
+fn interval_union(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    for (a, b) in iv {
+        if let Some(last) = out.last_mut() {
+            if a <= last.1 {
+                if b > last.1 {
+                    last.1 = b;
+                }
+                continue;
+            }
+        }
+        out.push((a, b));
+    }
+    out
+}
+
+/// Total length of `a ∩ b` where `b` is a disjoint ascending union.
+fn overlap_len(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let mut total = 0.0;
+    for &(s0, e0) in a {
+        for &(s1, e1) in b {
+            if e1 <= s0 {
+                continue;
+            }
+            if s1 >= e0 {
+                break;
+            }
+            total += (e0.min(e1) - s0.max(s1)).max(0.0);
+        }
+    }
+    total
+}
+
+pub fn bubbles_table(rows: &[BubbleRow]) -> String {
+    let mut out = format!("bubbles: {} group(s)\n", rows.len());
+    out.push_str(&format!(
+        "{:>6} {:>14} {:>14} {:>14} {:>10}\n",
+        "gid", "bubble_s", "reclaimed_s", "unreclaimed_s", "reclaimed"
+    ));
+    for r in rows {
+        let frac = if r.bubble_s > 0.0 { r.reclaimed_s / r.bubble_s } else { 0.0 };
+        out.push_str(&format!(
+            "{:>6} {:>14.3} {:>14.3} {:>14.3} {:>9.1}%\n",
+            r.gid,
+            r.bubble_s,
+            r.reclaimed_s,
+            r.unreclaimed_s,
+            100.0 * frac
+        ));
+    }
+    out
+}
+
+pub fn bubbles_jsonl(rows: &[BubbleRow]) -> String {
+    rows.iter()
+        .map(|r| {
+            obj(vec![
+                ("gid", num(r.gid as f64)),
+                ("bubble_s", num(r.bubble_s)),
+                ("reclaimed_s", num(r.reclaimed_s)),
+                ("unreclaimed_s", num(r.unreclaimed_s)),
+            ])
+            .to_string()
+                + "\n"
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------------- explain
+
+/// Every frame in one job's provenance chain, in canonical order: its
+/// placement verdict, dispatches, phases, repair fates, SLO-slack
+/// samples, and done/repair world events.
+pub fn explain<'a>(frames: &'a [Frame], job: JobId) -> Vec<&'a Frame> {
+    frames
+        .iter()
+        .filter(|f| match f {
+            Frame::Phase(r) => r.job == job,
+            Frame::World(w) => match *w {
+                WorldEvent::Done { job: j, .. } | WorldEvent::Repair { job: j, .. } => j == job,
+                _ => false,
+            },
+            Frame::Placement { job: j, .. }
+            | Frame::Repair { job: j, .. }
+            | Frame::Dispatch { job: j, .. }
+            | Frame::SloSlack { job: j, .. } => *j == job,
+            Frame::Util { .. } => false,
+        })
+        .collect()
+}
+
+fn phase_kind_name(k: PhaseKind) -> &'static str {
+    match k {
+        PhaseKind::Init => "init",
+        PhaseKind::Rollout => "rollout",
+        PhaseKind::Train => "train",
+        PhaseKind::Sync => "sync",
+    }
+}
+
+fn placement_kind_name(tag: u8) -> &'static str {
+    match tag {
+        0 => "direct-pack",
+        1 => "rollout-scale",
+        _ => "isolated",
+    }
+}
+
+/// One-line human rendering of any frame (the `explain` table body).
+pub fn frame_line(f: &Frame) -> String {
+    match f {
+        Frame::Phase(r) => format!(
+            "{:>12.3}  phase {:<7} gid {} iter {} dur {:.3}s",
+            r.start,
+            phase_kind_name(r.kind),
+            r.group,
+            r.iter,
+            r.end - r.start
+        ),
+        Frame::World(w) => match *w {
+            WorldEvent::Done { t, job } => format!("{t:>12.3}  done job {job}"),
+            WorldEvent::Crash { t, gid, node } => {
+                format!("{t:>12.3}  crash gid {gid} node {node}")
+            }
+            WorldEvent::Straggle { t, gid, node, factor } => {
+                format!("{t:>12.3}  straggle gid {gid} node {node} x{factor:.2}")
+            }
+            WorldEvent::Repair { t, job, gid, to_gid, repinned } => format!(
+                "{t:>12.3}  repair job {job} gid {gid} -> {to_gid}{}",
+                if repinned { " (repinned)" } else { "" }
+            ),
+            WorldEvent::NodeUp { t, gid, node } => {
+                format!("{t:>12.3}  node-up gid {gid} node {node}")
+            }
+        },
+        Frame::Util { t, gid, roll_busy_gpu_s, train_busy_gpu_s } => format!(
+            "{t:>12.3}  util gid {gid} roll {roll_busy_gpu_s:.3} train {train_busy_gpu_s:.3}"
+        ),
+        Frame::SloSlack { t, job, iter, slack_s } => {
+            format!("{t:>12.3}  slo-slack job {job} iter {iter} slack {slack_s:+.3}s")
+        }
+        Frame::Placement { t, job, gid, kind_tag, marginal_cost, considered } => {
+            let cands: Vec<String> =
+                considered.iter().map(|&(g, d)| format!("{g}:{}", fmt_cost(d))).collect();
+            format!(
+                "{t:>12.3}  placement job {job} -> gid {gid} ({}) cost {} considered [{}]",
+                placement_kind_name(*kind_tag),
+                fmt_cost(*marginal_cost),
+                cands.join(" ")
+            )
+        }
+        Frame::Repair { t, gid, node, job, to_gid, repinned, delay_s } => format!(
+            "{t:>12.3}  repair-fate job {job} gid {gid} node {} -> gid {to_gid} {} \
+             delay {delay_s:.3}s",
+            fmt_id(*node),
+            if *repinned { "repinned" } else { "spilled" }
+        ),
+        Frame::Dispatch { t, gid, job, kind, policy, queue_depth } => format!(
+            "{t:>12.3}  dispatch job {job} gid {gid} {} policy {} depth {queue_depth}",
+            if *kind == 0 { "rollout" } else { "train" },
+            match policy {
+                0 => "fifo",
+                1 => "rr",
+                _ => "slo",
+            }
+        ),
+    }
+}
+
+/// Structured rendering of any frame (the `explain` JSONL body). Every
+/// object carries a `type` discriminant.
+pub fn frame_json(f: &Frame) -> Json {
+    match f {
+        Frame::Phase(r) => obj(vec![
+            ("type", s("phase")),
+            ("t", num(r.start)),
+            ("job", num(r.job as f64)),
+            ("gid", num(r.group as f64)),
+            ("kind", s(phase_kind_name(r.kind))),
+            ("iter", num(r.iter as f64)),
+            ("end", num(r.end)),
+        ]),
+        Frame::World(w) => match *w {
+            WorldEvent::Done { t, job } => {
+                obj(vec![("type", s("done")), ("t", num(t)), ("job", num(job as f64))])
+            }
+            WorldEvent::Crash { t, gid, node } => obj(vec![
+                ("type", s("crash")),
+                ("t", num(t)),
+                ("gid", num(gid as f64)),
+                ("node", num(node as f64)),
+            ]),
+            WorldEvent::Straggle { t, gid, node, factor } => obj(vec![
+                ("type", s("straggle")),
+                ("t", num(t)),
+                ("gid", num(gid as f64)),
+                ("node", num(node as f64)),
+                ("factor", num(factor)),
+            ]),
+            WorldEvent::Repair { t, job, gid, to_gid, repinned } => obj(vec![
+                ("type", s("repair")),
+                ("t", num(t)),
+                ("job", num(job as f64)),
+                ("gid", num(gid as f64)),
+                ("to_gid", num(to_gid as f64)),
+                ("repinned", Json::Bool(repinned)),
+            ]),
+            WorldEvent::NodeUp { t, gid, node } => obj(vec![
+                ("type", s("node_up")),
+                ("t", num(t)),
+                ("gid", num(gid as f64)),
+                ("node", num(node as f64)),
+            ]),
+        },
+        Frame::Util { t, gid, roll_busy_gpu_s, train_busy_gpu_s } => obj(vec![
+            ("type", s("util")),
+            ("t", num(*t)),
+            ("gid", num(*gid as f64)),
+            ("roll_busy_gpu_s", num(*roll_busy_gpu_s)),
+            ("train_busy_gpu_s", num(*train_busy_gpu_s)),
+        ]),
+        Frame::SloSlack { t, job, iter, slack_s } => obj(vec![
+            ("type", s("slo_slack")),
+            ("t", num(*t)),
+            ("job", num(*job as f64)),
+            ("iter", num(*iter as f64)),
+            ("slack_s", num(*slack_s)),
+        ]),
+        Frame::Placement { t, job, gid, kind_tag, marginal_cost, considered } => obj(vec![
+            ("type", s("placement")),
+            ("t", num(*t)),
+            ("job", num(*job as f64)),
+            ("gid", num(*gid as f64)),
+            ("kind", s(placement_kind_name(*kind_tag))),
+            ("marginal_cost", jnum(*marginal_cost)),
+            (
+                "considered",
+                arr(considered
+                    .iter()
+                    .map(|&(g, d)| arr(vec![num(g as f64), jnum(d)]))
+                    .collect()),
+            ),
+        ]),
+        Frame::Repair { t, gid, node, job, to_gid, repinned, delay_s } => obj(vec![
+            ("type", s("repair_fate")),
+            ("t", num(*t)),
+            ("job", num(*job as f64)),
+            ("gid", num(*gid as f64)),
+            ("node", jnum_id(*node)),
+            ("to_gid", num(*to_gid as f64)),
+            ("repinned", Json::Bool(*repinned)),
+            ("delay_s", num(*delay_s)),
+        ]),
+        Frame::Dispatch { t, gid, job, kind, policy, queue_depth } => obj(vec![
+            ("type", s("dispatch")),
+            ("t", num(*t)),
+            ("job", num(*job as f64)),
+            ("gid", num(*gid as f64)),
+            ("kind", s(if *kind == 0 { "rollout" } else { "train" })),
+            ("policy", num(*policy as f64)),
+            ("queue_depth", num(*queue_depth as f64)),
+        ]),
+    }
+}
+
+pub fn explain_table(job: JobId, frames: &[&Frame]) -> String {
+    let mut out = format!("explain job {job}: {} frame(s)\n", frames.len());
+    for f in frames {
+        out.push_str(&frame_line(f));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn explain_jsonl(frames: &[&Frame]) -> String {
+    frames.iter().map(|f| frame_json(f).to_string() + "\n").collect()
+}
+
+// ---------------------------------------------------------------------- util
+
+/// One utilization sample of a group with deltas to the previous sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UtilRow {
+    pub t: f64,
+    pub roll_busy_gpu_s: f64,
+    pub train_busy_gpu_s: f64,
+    pub d_roll: f64,
+    pub d_train: f64,
+}
+
+/// The cumulative busy-GPU-seconds series of one group, with per-sample
+/// deltas (first sample's delta is its absolute value).
+pub fn util_series(frames: &[Frame], gid: usize) -> Vec<UtilRow> {
+    let mut rows: Vec<UtilRow> = Vec::new();
+    for f in frames {
+        if let Frame::Util { t, gid: g, roll_busy_gpu_s, train_busy_gpu_s } = *f {
+            if g != gid {
+                continue;
+            }
+            let (pr, pt) =
+                rows.last().map_or((0.0, 0.0), |r| (r.roll_busy_gpu_s, r.train_busy_gpu_s));
+            rows.push(UtilRow {
+                t,
+                roll_busy_gpu_s,
+                train_busy_gpu_s,
+                d_roll: roll_busy_gpu_s - pr,
+                d_train: train_busy_gpu_s - pt,
+            });
+        }
+    }
+    rows
+}
+
+pub fn util_table(gid: usize, rows: &[UtilRow]) -> String {
+    let mut out = format!("util gid {gid}: {} sample(s)\n", rows.len());
+    out.push_str(&format!(
+        "{:>12} {:>16} {:>16} {:>12} {:>12}\n",
+        "t", "roll_busy_gpu_s", "train_busy_gpu_s", "d_roll", "d_train"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:>12.3} {:>16.3} {:>16.3} {:>12.3} {:>12.3}\n",
+            r.t, r.roll_busy_gpu_s, r.train_busy_gpu_s, r.d_roll, r.d_train
+        ));
+    }
+    out
+}
+
+pub fn util_jsonl(gid: usize, rows: &[UtilRow]) -> String {
+    rows.iter()
+        .map(|r| {
+            obj(vec![
+                ("gid", num(gid as f64)),
+                ("t", num(r.t)),
+                ("roll_busy_gpu_s", num(r.roll_busy_gpu_s)),
+                ("train_busy_gpu_s", num(r.train_busy_gpu_s)),
+                ("d_roll", num(r.d_roll)),
+                ("d_train", num(r.d_train)),
+            ])
+            .to_string()
+                + "\n"
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- histograms
+
+/// Incremental histogram builder over a frame stream: per-job queue
+/// wait (the gap between a job's consecutive phases), per-kind phase
+/// durations, and SLO slack. Batch queries feed it a whole canonically
+/// sorted slice via [`histograms`]; the daemon embeds one and feeds it
+/// each fanout drain, so `stats_prom` exposes live distributions whose
+/// state is a pure function of the command sequence.
+#[derive(Clone, Debug)]
+pub struct HistAccum {
+    queue: Histogram,
+    roll: Histogram,
+    train: Histogram,
+    sync: Histogram,
+    slack: Histogram,
+    last_end: BTreeMap<JobId, f64>,
+}
+
+impl Default for HistAccum {
+    fn default() -> HistAccum {
+        HistAccum {
+            queue: Histogram::durations("queue_wait_s"),
+            roll: Histogram::durations("phase_rollout_s"),
+            train: Histogram::durations("phase_train_s"),
+            sync: Histogram::durations("phase_sync_s"),
+            slack: Histogram::slack("slo_slack_s"),
+            last_end: BTreeMap::new(),
+        }
+    }
+}
+
+impl HistAccum {
+    pub fn add(&mut self, f: &Frame) {
+        match f {
+            Frame::Phase(r) => {
+                match r.kind {
+                    PhaseKind::Rollout => self.roll.add(r.end - r.start),
+                    PhaseKind::Train => self.train.add(r.end - r.start),
+                    PhaseKind::Sync => self.sync.add(r.end - r.start),
+                    PhaseKind::Init => {}
+                }
+                if let Some(&e) = self.last_end.get(&r.job) {
+                    self.queue.add((r.start - e).max(0.0));
+                }
+                let e = self.last_end.entry(r.job).or_insert(f64::NEG_INFINITY);
+                *e = e.max(r.end);
+            }
+            Frame::SloSlack { slack_s, .. } => self.slack.add(*slack_s),
+            _ => {}
+        }
+    }
+
+    /// Borrow the five histograms (queue wait, rollout, train, sync,
+    /// slack) for rendering without consuming the accumulator.
+    pub fn hists(&self) -> [&Histogram; 5] {
+        [&self.queue, &self.roll, &self.train, &self.sync, &self.slack]
+    }
+
+    pub fn into_vec(self) -> Vec<Histogram> {
+        vec![self.queue, self.roll, self.train, self.sync, self.slack]
+    }
+}
+
+/// Fixed-boundary distributions over the stream. One pass in canonical
+/// order, so the f64 sums are deterministic.
+pub fn histograms(frames: &[Frame]) -> Vec<Histogram> {
+    let mut acc = HistAccum::default();
+    for f in frames {
+        acc.add(f);
+    }
+    acc.into_vec()
+}
+
+pub fn histograms_table(hists: &[Histogram]) -> String {
+    hists.iter().map(|h| h.table()).collect()
+}
+
+pub fn histograms_jsonl(hists: &[Histogram]) -> String {
+    hists.iter().map(|h| h.to_json().to_string() + "\n").collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::PhaseRecord;
+    use crate::sim::recorder::canonical_sort_frames;
+
+    fn phase(job: JobId, gid: usize, kind: PhaseKind, start: f64, end: f64) -> Frame {
+        Frame::Phase(PhaseRecord { job, group: gid, kind, iter: 0, start, end, roll_nodes: vec![] })
+    }
+
+    fn sample_frames() -> Vec<Frame> {
+        let mut frames = vec![
+            phase(1, 0, PhaseKind::Rollout, 0.0, 100.0),
+            phase(1, 0, PhaseKind::Train, 100.0, 160.0),
+            phase(2, 0, PhaseKind::Rollout, 120.0, 200.0),
+            phase(2, 0, PhaseKind::Train, 210.0, 240.0),
+            phase(3, 1, PhaseKind::Train, 50.0, 90.0),
+            Frame::SloSlack { t: 150.0, job: 1, iter: 1, slack_s: -12.0 },
+            Frame::SloSlack { t: 190.0, job: 2, iter: 1, slack_s: 40.0 },
+            Frame::SloSlack { t: 10.0, job: 1, iter: 1, slack_s: -1.0 },
+            Frame::World(WorldEvent::Crash { t: 200.0, gid: 0, node: 1 }),
+            Frame::Util { t: 160.0, gid: 0, roll_busy_gpu_s: 800.0, train_busy_gpu_s: 480.0 },
+            Frame::Util { t: 240.0, gid: 0, roll_busy_gpu_s: 1440.0, train_busy_gpu_s: 720.0 },
+        ];
+        canonical_sort_frames(&mut frames);
+        frames
+    }
+
+    #[test]
+    fn slo_breach_windows_and_maps_groups() {
+        let frames = sample_frames();
+        let rows = slo_breach(&frames, 100.0);
+        // Only the t=150 breach is within [100, 200]; t=10 is outside.
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].job, 1);
+        assert_eq!(rows[0].gid, 0, "job 1 ran in group 0 at t=150");
+        assert_eq!(rows[0].crash_t, 200.0);
+        assert_eq!(rows[0].slack_s, -12.0);
+        // A wide window picks up both breach samples, chronological.
+        let wide = slo_breach(&frames, 1000.0);
+        assert_eq!(wide.len(), 2);
+        assert_eq!(wide[0].slack_t, 10.0);
+        let table = slo_breach_table(&rows, 100.0);
+        assert!(table.starts_with("slo-breach: window 100s, 1 row(s)\n"));
+        let jsonl = slo_breach_jsonl(&rows);
+        let parsed = Json::parse(jsonl.trim_end()).unwrap();
+        assert_eq!(parsed.get("job").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("slack_s").unwrap().as_f64(), Some(-12.0));
+    }
+
+    #[test]
+    fn bubbles_attributes_reclaimed_overlap() {
+        let frames = sample_frames();
+        let rows = bubbles(&frames);
+        assert_eq!(rows.len(), 2);
+        // Group 0: job 1 trains 100-160, job 2's rollout covers 120-200 →
+        // 40 s of job 1's 60 s bubble reclaimed. Job 2 trains 210-240
+        // with no other rollout live → unreclaimed.
+        let g0 = &rows[0];
+        assert_eq!(g0.gid, 0);
+        assert_eq!(g0.bubble_s, 90.0);
+        assert_eq!(g0.reclaimed_s, 40.0);
+        assert_eq!(g0.unreclaimed_s, 50.0);
+        // Group 1: a lone trainer, nothing to reclaim with.
+        assert_eq!(rows[1].gid, 1);
+        assert_eq!(rows[1].reclaimed_s, 0.0);
+        assert!(bubbles_table(&rows).contains("bubbles: 2 group(s)"));
+        let jsonl = bubbles_jsonl(&rows);
+        assert_eq!(jsonl.lines().count(), 2);
+    }
+
+    #[test]
+    fn explain_filters_one_job_chronologically() {
+        let frames = sample_frames();
+        let chain = explain(&frames, 1);
+        // 2 phases + 2 slack samples; job 2's and group frames excluded.
+        assert_eq!(chain.len(), 4);
+        assert!(chain.windows(2).all(|w| w[0].t() <= w[1].t()));
+        let table = explain_table(1, &chain);
+        assert!(table.contains("phase rollout"));
+        assert!(table.contains("slo-slack job 1"));
+        let jsonl = explain_jsonl(&chain);
+        assert_eq!(jsonl.lines().count(), 4);
+        let first = Json::parse(jsonl.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("type").unwrap().as_str(), Some("phase"));
+    }
+
+    #[test]
+    fn util_series_deltas() {
+        let frames = sample_frames();
+        let rows = util_series(&frames, 0);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].d_roll, 800.0);
+        assert_eq!(rows[1].d_roll, 640.0);
+        assert_eq!(rows[1].d_train, 240.0);
+        assert!(util_series(&frames, 7).is_empty());
+        assert!(util_table(0, &rows).contains("util gid 0: 2 sample(s)"));
+        let jsonl = util_jsonl(0, &rows);
+        let last = Json::parse(jsonl.lines().last().unwrap()).unwrap();
+        assert_eq!(last.get("d_train").unwrap().as_f64(), Some(240.0));
+    }
+
+    #[test]
+    fn histograms_cover_waits_durations_slack() {
+        let frames = sample_frames();
+        let hists = histograms(&frames);
+        assert_eq!(hists.len(), 5);
+        let queue = &hists[0];
+        assert_eq!(queue.name, "queue_wait_s");
+        // Job 1: 100→100 gap 0; job 2: 200→210 gap 10.
+        assert_eq!(queue.count, 2);
+        assert_eq!(queue.sum, 10.0);
+        let train = &hists[2];
+        assert_eq!(train.count, 3);
+        let slack = &hists[4];
+        assert_eq!(slack.count, 3);
+        assert!(histograms_table(&hists).contains("slo_slack_s"));
+        assert_eq!(histograms_jsonl(&hists).lines().count(), 5);
+    }
+
+    #[test]
+    fn provenance_frames_render() {
+        let f = Frame::Placement {
+            t: 5.0,
+            job: 9,
+            gid: 2,
+            kind_tag: 1,
+            marginal_cost: 1.25,
+            considered: vec![(0, f64::INFINITY), (2, 1.25)],
+        };
+        let line = frame_line(&f);
+        assert!(line.contains("placement job 9 -> gid 2 (rollout-scale)"));
+        assert!(line.contains("[0:inf 2:1.250]"));
+        let j = frame_json(&f);
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("rollout-scale"));
+        // Infeasible Δ-cost must serialize as null, not bare `inf`.
+        let cands = j.get("considered").unwrap().as_arr().unwrap();
+        assert_eq!(cands[0].idx(1), Some(&Json::Null));
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

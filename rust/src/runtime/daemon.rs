@@ -45,6 +45,8 @@ use crate::coordinator::inter::InterGroupScheduler;
 use crate::coordinator::orchestrator::IntraPolicyKind;
 use crate::coordinator::repair::MemberFate;
 use crate::metrics::sim_result_json;
+use crate::obs::archive::ArchiveWriter;
+use crate::obs::query::HistAccum;
 use crate::runtime::driver::{drive_group, plan_direct_job};
 use crate::sim::engine::{SimConfig, Simulator, WorldEvent};
 use crate::sim::recorder::Frame;
@@ -285,6 +287,11 @@ pub struct DaemonStats {
     /// Events dropped by per-subscriber buffer overflow (never blocks
     /// the engine; the counter is the overflow accounting).
     pub events_dropped: usize,
+    /// Per-class breakdown of `events_dropped` (ISSUE 10), indexed per
+    /// [`EV_CLASSES`]: done / fault / repair / reconfig / metrics.
+    /// Journaled state like the aggregate — replay reproduces it
+    /// bitwise.
+    pub events_dropped_by_class: [usize; 5],
 }
 
 /// A routed response line: (destination tenant, JSONL payload).
@@ -303,6 +310,20 @@ const EV_RECONFIG: u32 = 8;
 /// replays) deliver exactly the lines they always did.
 const EV_METRICS: u32 = 16;
 const EV_ALL: u32 = EV_DONE | EV_FAULT | EV_REPAIR | EV_RECONFIG;
+
+/// `(bit, name)` for every event class, in the index order of
+/// `DaemonStats::events_dropped_by_class`.
+const EV_CLASSES: [(u32, &str); 5] = [
+    (EV_DONE, "done"),
+    (EV_FAULT, "fault"),
+    (EV_REPAIR, "repair"),
+    (EV_RECONFIG, "reconfig"),
+    (EV_METRICS, "metrics"),
+];
+
+fn class_index(bit: u32) -> usize {
+    EV_CLASSES.iter().position(|&(b, _)| b == bit).unwrap_or(EV_CLASSES.len() - 1)
+}
 
 pub struct Daemon {
     cfg: DaemonConfig,
@@ -327,6 +348,15 @@ pub struct Daemon {
     /// Highest tenant id seen (stamped commands, live or replayed); the
     /// transport allocates fresh ids above it after a restart.
     max_tenant: u32,
+    /// Incremental trace archive (`--trace`, ISSUE 10): every fanout's
+    /// drained frames are appended (and flushed) so a crashed daemon
+    /// leaves an inspectable `RMTRC01` file. Not written during replay —
+    /// the replayed frames' originals are already in the archive.
+    trace: Option<ArchiveWriter>,
+    /// Live fixed-boundary distributions over the drained frame stream,
+    /// exposed by `stats_prom`. Fed on replay too, so the histograms are
+    /// a pure function of the command sequence.
+    hists: HistAccum,
 }
 
 impl Daemon {
@@ -369,6 +399,8 @@ impl Daemon {
             subs: BTreeMap::new(),
             turn_events: Vec::new(),
             max_tenant: 0,
+            trace: None,
+            hists: HistAccum::default(),
         }
     }
 
@@ -385,6 +417,17 @@ impl Daemon {
         }
         self.replaying = false;
         Ok(n)
+    }
+
+    /// Attach an incremental `RMTRC01` trace archive (ISSUE 10). An
+    /// existing archive is continued (magic-validated append), so a
+    /// restarted daemon extends the file its predecessor left. Attach
+    /// after [`Daemon::attach_journal`]: replayed frames are never
+    /// re-appended either way, but attaching first would interleave the
+    /// open with the replay's drains for no benefit.
+    pub fn attach_trace(&mut self, path: &Path) -> std::io::Result<()> {
+        self.trace = Some(ArchiveWriter::open_append(path)?);
+        Ok(())
     }
 
     pub fn stats(&self) -> DaemonStats {
@@ -482,7 +525,7 @@ impl Daemon {
         let cmd = j.get("cmd").and_then(Json::as_str).unwrap_or("");
         let tenant = j.get("tenant").and_then(Json::as_usize).unwrap_or(0) as u32;
         self.max_tenant = self.max_tenant.max(tenant);
-        if self.drained && !matches!(cmd, "stats" | "shutdown") {
+        if self.drained && !matches!(cmd, "stats" | "stats_prom" | "shutdown") {
             return vec![(tenant, err_line("drained: only stats/shutdown accepted"))];
         }
         let mut out = match cmd {
@@ -495,6 +538,9 @@ impl Daemon {
             "subscribe" => self.cmd_subscribe(j, tenant),
             "unsub" => self.cmd_unsub(tenant),
             "stats" => vec![(tenant, self.stats_line())],
+            // Prometheus text exposition (ISSUE 10). Non-mutating and
+            // not journaled, like `stats`.
+            "stats_prom" => vec![(tenant, self.stats_prom_text())],
             "drain" => self.cmd_drain(tenant),
             "shutdown" => {
                 self.shutdown = true;
@@ -1000,13 +1046,7 @@ impl Daemon {
                 }
             }
         }
-        for (bit, name) in [
-            (EV_DONE, "done"),
-            (EV_FAULT, "fault"),
-            (EV_REPAIR, "repair"),
-            (EV_RECONFIG, "reconfig"),
-            (EV_METRICS, "metrics"),
-        ] {
+        for (bit, name) in EV_CLASSES {
             if mask & bit != 0 {
                 names.push(name);
             }
@@ -1055,8 +1095,22 @@ impl Daemon {
             // bounded over a long daemon session and the drain sequence
             // is a pure function of the command sequence. Only the metric
             // series becomes push lines; phase/world frames are covered
-            // by the classes above.
-            for f in sim.take_frames() {
+            // by the classes above and decision-provenance frames go to
+            // the trace archive only.
+            let frames = sim.take_frames();
+            // Persist the batch before filtering (ISSUE 10): the archive
+            // carries the full stream. Skipped on replay — those frames'
+            // originals were appended by the previous process.
+            if !self.replaying {
+                if let Some(w) = &mut self.trace {
+                    if let Err(e) = w.append(&frames) {
+                        eprintln!("rollmuxd: trace append failed: {e}");
+                        self.trace = None;
+                    }
+                }
+            }
+            for f in frames {
+                self.hists.add(&f);
                 if let Some(line) = metric_line(&f) {
                     evs.push(line);
                 }
@@ -1078,8 +1132,10 @@ impl Daemon {
                     out.push((tenant, line.clone()));
                 } else {
                     // Bounded buffer: the engine never blocks on a slow
-                    // subscriber; the drop is accounted instead.
+                    // subscriber; the drop is accounted instead, per
+                    // class (ISSUE 10) and in aggregate.
                     self.stats.events_dropped += 1;
+                    self.stats.events_dropped_by_class[class_index(*bit)] += 1;
                 }
             }
         }
@@ -1242,9 +1298,64 @@ impl Daemon {
                 obj(vec![
                     ("pushed", num(self.stats.events_pushed as f64)),
                     ("dropped", num(self.stats.events_dropped as f64)),
+                    (
+                        // Per-class drop breakdown (ISSUE 10). Keys are
+                        // the subscribe-class names; the aggregate above
+                        // stays for compatibility.
+                        "dropped_by_class",
+                        obj(EV_CLASSES
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &(_, name))| {
+                                (name, num(self.stats.events_dropped_by_class[i] as f64))
+                            })
+                            .collect()),
+                    ),
                 ]),
             ),
         ])
+    }
+
+    /// `stats_prom` (ISSUE 10): the daemon counters plus the live frame
+    /// histograms in Prometheus text exposition. One multi-line text
+    /// block routed to the issuing tenant; deterministic — every value
+    /// is journaled/replayable state.
+    fn stats_prom_text(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in [
+            ("admitted", self.stats.admitted),
+            ("cancelled", self.stats.cancelled),
+            ("escalations", self.stats.escalations),
+            ("reconfigs", self.stats.reconfigs),
+            ("displaced", self.stats.displaced),
+            ("events_pushed", self.stats.events_pushed),
+        ] {
+            out.push_str(&format!("# TYPE rollmux_{name} counter\n"));
+            out.push_str(&format!("rollmux_{name} {v}\n"));
+        }
+        out.push_str("# TYPE rollmux_rejected counter\n");
+        for (why, v) in [
+            ("backpressure", self.stats.rejected_backpressure),
+            ("timeout", self.stats.rejected_timeout),
+            ("infeasible", self.stats.rejected_infeasible),
+            ("invalid", self.stats.rejected_invalid),
+        ] {
+            out.push_str(&format!("rollmux_rejected{{reason=\"{why}\"}} {v}\n"));
+        }
+        out.push_str("# TYPE rollmux_events_dropped counter\n");
+        for (i, &(_, name)) in EV_CLASSES.iter().enumerate() {
+            out.push_str(&format!(
+                "rollmux_events_dropped{{class=\"{name}\"}} {}\n",
+                self.stats.events_dropped_by_class[i]
+            ));
+        }
+        out.push_str(&format!("rollmux_now_s {}\n", self.now()));
+        out.push_str(&format!("rollmux_queued {}\n", self.queue.len()));
+        out.push_str(&format!("rollmux_outstanding {}\n", self.outstanding()));
+        for h in self.hists.hists() {
+            out.push_str(&h.prom_text("rollmux", ""));
+        }
+        out
     }
 
     fn stats_line(&self) -> String {
@@ -1435,7 +1546,14 @@ fn metric_line(f: &Frame) -> Option<(u32, String)> {
             ])
             .to_string(),
         )),
-        Frame::Phase(_) | Frame::World(_) => None,
+        // Phases are too chatty for the push channel, world events have
+        // their own classes, and decision-provenance frames (ISSUE 10)
+        // are archive-only forensic detail.
+        Frame::Phase(_)
+        | Frame::World(_)
+        | Frame::Placement { .. }
+        | Frame::Repair { .. }
+        | Frame::Dispatch { .. } => None,
     }
 }
 

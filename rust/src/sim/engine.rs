@@ -55,7 +55,9 @@ use super::recorder::{canonical_sort_records, FlightRecorder, Frame};
 use crate::cluster::node::GPUS_PER_NODE;
 use crate::cluster::{GpuKind, PhaseModel};
 use crate::coordinator::group::Group;
-use crate::coordinator::inter::{Decision, InterGroupScheduler, SchedSnapshot};
+use crate::coordinator::inter::{
+    Decision, InterGroupScheduler, PlacementKind, PlacementProvenance, SchedSnapshot,
+};
 use crate::coordinator::migration::MigrationPolicy;
 use crate::coordinator::orchestrator::{CorePhase, GroupOrchestrator, IntraPolicyKind, OrchSnapshot};
 use crate::coordinator::repair::{self, MemberFate, RepairOutcome, ShrinkOutcome};
@@ -96,6 +98,15 @@ pub trait GroupScheduler {
     fn set_group_cap(&mut self, _cap: Option<usize>) -> Option<Vec<ShrinkOutcome>> {
         None
     }
+    /// Arm placement-provenance capture (ISSUE 10). The default ignores
+    /// the request — baselines record no provenance and
+    /// [`GroupScheduler::take_placement_provenance`] stays `None`.
+    fn set_record_provenance(&mut self, _on: bool) {}
+    /// Take the provenance captured by the most recent placement scan
+    /// (None when unarmed, unsupported, or already consumed).
+    fn take_placement_provenance(&mut self) -> Option<PlacementProvenance> {
+        None
+    }
 }
 
 impl GroupScheduler for InterGroupScheduler {
@@ -122,6 +133,12 @@ impl GroupScheduler for InterGroupScheduler {
     }
     fn set_group_cap(&mut self, cap: Option<usize>) -> Option<Vec<ShrinkOutcome>> {
         Some(InterGroupScheduler::set_group_cap(self, cap))
+    }
+    fn set_record_provenance(&mut self, on: bool) {
+        InterGroupScheduler::set_record_provenance(self, on)
+    }
+    fn take_placement_provenance(&mut self) -> Option<PlacementProvenance> {
+        InterGroupScheduler::take_placement_provenance(self)
     }
 }
 
@@ -152,6 +169,12 @@ impl<S: GroupScheduler + ?Sized> GroupScheduler for Box<S> {
     }
     fn set_group_cap(&mut self, cap: Option<usize>) -> Option<Vec<ShrinkOutcome>> {
         (**self).set_group_cap(cap)
+    }
+    fn set_record_provenance(&mut self, on: bool) {
+        (**self).set_record_provenance(on)
+    }
+    fn take_placement_provenance(&mut self) -> Option<PlacementProvenance> {
+        (**self).take_placement_provenance()
     }
 }
 
@@ -229,6 +252,20 @@ pub struct SimConfig {
     /// field is bitwise identical with it on or off (property-tested in
     /// `rust/tests/prop_snapshot.rs`).
     pub record_flight: bool,
+    /// Record decision provenance into the flight stream (ISSUE 10,
+    /// DESIGN.md §18): `Frame::Placement` for every arrival's candidate
+    /// scan, `Frame::Repair` for every crash/shrink victim fate, and
+    /// `Frame::Dispatch` for every intra-group pick. Requires
+    /// `record_flight` to be observable (frames land in the same
+    /// stream); off = the capture passes never run and every result
+    /// field is bitwise identical (property-tested in
+    /// `rust/tests/prop_trace.rs`).
+    pub record_decisions: bool,
+    /// Write the finalized flight stream to this path as an `RMTRC01`
+    /// trace archive (ISSUE 10, [`crate::obs::FlightArchive`]) when the
+    /// run completes. `None` (the default) writes nothing; I/O errors
+    /// warn on stderr rather than poisoning the simulation result.
+    pub trace_path: Option<std::path::PathBuf>,
     /// Pending-event structure (bit-identical results either way).
     pub event_queue: EventQueueKind,
     /// Simulation tier: event-exact DES or the fluid fast path. Honored
@@ -255,6 +292,8 @@ impl Default for SimConfig {
             intra: IntraPolicyKind::default(),
             record_gantt: false,
             record_flight: false,
+            record_decisions: false,
+            trace_path: None,
             event_queue: EventQueueKind::default(),
             fidelity: Fidelity::default(),
             faults: None,
@@ -851,6 +890,23 @@ impl LaneCtx<'_> {
                 CorePhase::Rollout => PhaseKind::Rollout,
                 CorePhase::Train => PhaseKind::Train,
             };
+            // Decision provenance (ISSUE 10): one frame per granted
+            // dispatch, lane-local — the canonical finalize sort puts
+            // serial and parallel streams in the same order.
+            if self.cfg.record_flight && self.cfg.record_decisions {
+                let rt = self.jobs.job_ref(start.slot);
+                self.flight.push(Frame::Dispatch {
+                    t: self.now,
+                    gid: rt.group,
+                    job: rt.spec.id,
+                    kind: match kind {
+                        PhaseKind::Rollout => 0,
+                        _ => 1,
+                    },
+                    policy: intra_tag(self.cfg.intra) as u8,
+                    queue_depth: self.orch.queue_len(),
+                });
+            }
             self.start_phase(start.slot, kind);
         }
     }
@@ -1318,6 +1374,11 @@ impl<S: GroupScheduler> Simulator<S> {
             world_events: Vec::new(),
         };
         sim.load_trace(trace);
+        // Provenance capture (ISSUE 10) follows the config: armed here
+        // and at every rearm/restore so the scheduler's recording state
+        // is a pure function of `cfg.record_decisions`.
+        let arm = sim.cfg.record_flight && sim.cfg.record_decisions;
+        sim.sched.set_record_provenance(arm);
         sim
     }
 
@@ -1368,6 +1429,8 @@ impl<S: GroupScheduler> Simulator<S> {
         self.emit_events = false;
         self.world_events.clear();
         self.load_trace(trace);
+        let arm = self.cfg.record_flight && self.cfg.record_decisions;
+        self.sched.set_record_provenance(arm);
     }
 
     /// Emit a push-channel event when armed (free when not: one branch).
@@ -1776,6 +1839,15 @@ impl<S: GroupScheduler> Simulator<S> {
         // finish with the exact same sequence.
         canonical_sort_records(&mut self.res.records);
         self.res.flight.canonical_sort();
+        // Persist the finalized stream as an RMTRC01 archive (ISSUE 10).
+        // After the canonical sort, so a batch archive is byte-identical
+        // between serial and parallel producers. I/O failure warns: a
+        // full simulation result must not be lost to a bad path.
+        if let Some(path) = &self.cfg.trace_path {
+            if let Err(e) = crate::obs::FlightArchive::write(path, self.res.flight.frames()) {
+                eprintln!("rollmux: trace archive write to {} failed: {e}", path.display());
+            }
+        }
         std::mem::take(&mut self.res)
     }
 
@@ -1790,6 +1862,25 @@ impl<S: GroupScheduler> Simulator<S> {
         let spec = self.trace[idx].take().expect("arrival fires once per job");
         let id = spec.id;
         let d = self.sched.place(spec.clone());
+        // Decision provenance (ISSUE 10): the placement verdict plus the
+        // per-candidate Δ scores the armed scheduler captured. Arrivals
+        // are window barriers (coordinator-side), so the emission order
+        // is deterministic on both engine paths.
+        if self.cfg.record_flight && self.cfg.record_decisions {
+            let considered = self
+                .sched
+                .take_placement_provenance()
+                .map(|p| p.considered.into_iter().map(|c| (c.gid, c.delta_cost)).collect())
+                .unwrap_or_default();
+            self.res.flight.push(Frame::Placement {
+                t: self.now,
+                job: id,
+                gid: d.group_id,
+                kind_tag: placement_kind_tag(&d.kind),
+                marginal_cost: d.marginal_cost,
+                considered,
+            });
+        }
         self.rate_changed();
 
         let group = self.sched.group(d.group_id).expect("placed group exists");
@@ -1965,6 +2056,20 @@ impl<S: GroupScheduler> Simulator<S> {
                     params_b,
                     repinned,
                 );
+                // Decision provenance (ISSUE 10): this victim's fate and
+                // the recovery delay it was charged. Crashes are window
+                // barriers, so the emission order is deterministic.
+                if self.cfg.record_flight && self.cfg.record_decisions {
+                    self.res.flight.push(Frame::Repair {
+                        t: self.now,
+                        gid,
+                        node,
+                        job: jid,
+                        to_gid,
+                        repinned,
+                        delay_s: delay,
+                    });
+                }
                 let ep = {
                     let rt = &mut self.jobs[slot];
                     rt.recoveries += 1;
@@ -2527,6 +2632,19 @@ impl<S: GroupScheduler> Simulator<S> {
                     params_b,
                     repinned,
                 );
+                // Provenance (ISSUE 10): cap-shrink displacement is a
+                // repair fate with no dead node — `usize::MAX` sentinel.
+                if self.cfg.record_flight && self.cfg.record_decisions {
+                    self.res.flight.push(Frame::Repair {
+                        t: self.now,
+                        gid,
+                        node: usize::MAX,
+                        job: jid,
+                        to_gid,
+                        repinned,
+                        delay_s: delay,
+                    });
+                }
                 let ep = {
                     let rt = &mut self.jobs[slot];
                     rt.recoveries += 1;
@@ -2939,21 +3057,21 @@ const SNAP_MAGIC: &[u8; 8] = b"RMSNAP01";
 /// is one little-endian u64 (f64s as exact bits), so the layout has no
 /// alignment or platform-width dependence.
 #[derive(Default)]
-struct Enc {
-    buf: Vec<u8>,
+pub(crate) struct Enc {
+    pub(crate) buf: Vec<u8>,
 }
 
 impl Enc {
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
     fn u32(&mut self, v: u32) {
         self.u64(v as u64);
     }
-    fn usize(&mut self, v: usize) {
+    pub(crate) fn usize(&mut self, v: usize) {
         self.u64(v as u64);
     }
-    fn f64(&mut self, v: f64) {
+    pub(crate) fn f64(&mut self, v: f64) {
         self.u64(v.to_bits());
     }
     fn bool(&mut self, v: bool) {
@@ -2985,13 +3103,13 @@ impl Enc {
 /// Cursor-based decoder mirroring [`Enc`]; every read is bounds-checked
 /// and length prefixes are capped against the remaining payload so a
 /// corrupt image errors instead of allocating wildly.
-struct Dec<'a> {
-    buf: &'a [u8],
-    pos: usize,
+pub(crate) struct Dec<'a> {
+    pub(crate) buf: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl Dec<'_> {
-    fn u64(&mut self) -> Result<u64, String> {
+    pub(crate) fn u64(&mut self) -> Result<u64, String> {
         let end = self.pos + 8;
         let b = self
             .buf
@@ -3068,6 +3186,18 @@ fn phase_kind_from(tag: u64) -> Result<PhaseKind, String> {
         3 => PhaseKind::Sync,
         t => return Err(format!("snapshot corrupt: unknown phase-kind tag {t}")),
     })
+}
+
+/// Placement-kind tag shared by the `Frame::Placement` provenance frame
+/// and the trace codec (0 = direct pack, 1 = rollout scale, 2 =
+/// isolated). `RolloutScale`'s node count is carried by the decision's
+/// node list, not the tag.
+pub(crate) fn placement_kind_tag(k: &PlacementKind) -> u8 {
+    match k {
+        PlacementKind::DirectPack => 0,
+        PlacementKind::RolloutScale { .. } => 1,
+        PlacementKind::Isolated => 2,
+    }
 }
 
 fn core_tag(c: CorePhase) -> u64 {
@@ -3240,7 +3370,7 @@ fn dec_rec(d: &mut Dec) -> Result<PhaseRecord, String> {
     })
 }
 
-fn enc_frame(e: &mut Enc, f: &Frame) {
+pub(crate) fn enc_frame(e: &mut Enc, f: &Frame) {
     match f {
         Frame::Phase(r) => {
             e.u64(0);
@@ -3264,10 +3394,42 @@ fn enc_frame(e: &mut Enc, f: &Frame) {
             e.usize(*iter);
             e.f64(*slack_s);
         }
+        Frame::Placement { t, job, gid, kind_tag, marginal_cost, considered } => {
+            e.u64(4);
+            e.f64(*t);
+            e.usize(*job);
+            e.usize(*gid);
+            e.u64(*kind_tag as u64);
+            e.f64(*marginal_cost);
+            e.usize(considered.len());
+            for &(g, delta) in considered {
+                e.usize(g);
+                e.f64(delta);
+            }
+        }
+        Frame::Repair { t, gid, node, job, to_gid, repinned, delay_s } => {
+            e.u64(5);
+            e.f64(*t);
+            e.usize(*gid);
+            e.usize(*node);
+            e.usize(*job);
+            e.usize(*to_gid);
+            e.bool(*repinned);
+            e.f64(*delay_s);
+        }
+        Frame::Dispatch { t, gid, job, kind, policy, queue_depth } => {
+            e.u64(6);
+            e.f64(*t);
+            e.usize(*gid);
+            e.usize(*job);
+            e.u64(*kind as u64);
+            e.u64(*policy as u64);
+            e.usize(*queue_depth);
+        }
     }
 }
 
-fn dec_frame(d: &mut Dec) -> Result<Frame, String> {
+pub(crate) fn dec_frame(d: &mut Dec) -> Result<Frame, String> {
     Ok(match d.u64()? {
         0 => Frame::Phase(dec_rec(d)?),
         1 => Frame::World(dec_world(d)?),
@@ -3283,6 +3445,44 @@ fn dec_frame(d: &mut Dec) -> Result<Frame, String> {
             iter: d.usize()?,
             slack_s: d.f64()?,
         },
+        4 => {
+            let t = d.f64()?;
+            let job = d.usize()?;
+            let gid = d.usize()?;
+            let kind_tag = match d.u64()? {
+                k @ 0..=2 => k as u8,
+                k => return Err(format!("snapshot corrupt: unknown placement-kind tag {k}")),
+            };
+            let marginal_cost = d.f64()?;
+            let n = d.len()?;
+            let considered = (0..n)
+                .map(|_| Ok((d.usize()?, d.f64()?)))
+                .collect::<Result<Vec<_>, String>>()?;
+            Frame::Placement { t, job, gid, kind_tag, marginal_cost, considered }
+        }
+        5 => Frame::Repair {
+            t: d.f64()?,
+            gid: d.usize()?,
+            node: d.usize()?,
+            job: d.usize()?,
+            to_gid: d.usize()?,
+            repinned: d.bool()?,
+            delay_s: d.f64()?,
+        },
+        6 => {
+            let t = d.f64()?;
+            let gid = d.usize()?;
+            let job = d.usize()?;
+            let kind = match d.u64()? {
+                k @ 0..=1 => k as u8,
+                k => return Err(format!("snapshot corrupt: unknown dispatch-kind tag {k}")),
+            };
+            let policy = match d.u64()? {
+                p @ 0..=2 => p as u8,
+                p => return Err(format!("snapshot corrupt: unknown dispatch-policy tag {p}")),
+            };
+            Frame::Dispatch { t, gid, job, kind, policy, queue_depth: d.usize()? }
+        }
         t => return Err(format!("snapshot corrupt: unknown frame tag {t}")),
     })
 }
@@ -3724,7 +3924,8 @@ impl Simulator<InterGroupScheduler> {
             }
             s
         };
-        let sched = InterGroupScheduler::from_snapshot_state(cfg.model, &snap.sched, resolve);
+        let mut sched = InterGroupScheduler::from_snapshot_state(cfg.model, &snap.sched, resolve);
+        sched.set_record_provenance(cfg.record_flight && cfg.record_decisions);
         let mut events = EventQueue::new(cfg.event_queue);
         for &(t, seq, ev) in &snap.events {
             events.push(t, seq, ev);

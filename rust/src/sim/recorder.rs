@@ -44,6 +44,40 @@ pub enum Frame {
     /// before the SLO deadline implied by the estimated solo rate.
     /// Negative = the job is currently violating its SLO.
     SloSlack { t: f64, job: JobId, iter: usize, slack_s: f64 },
+    /// Decision provenance (ISSUE 10, armed by
+    /// `SimConfig::record_decisions`): the inter-group placement verdict
+    /// for one arriving job. `considered` lists every candidate group
+    /// the scan visited with its marginal-cost delta (ascending gid;
+    /// `f64::INFINITY` = infeasible), `gid` is the chosen group and
+    /// `kind_tag` the placement kind (0 = direct pack, 1 = rollout
+    /// scale, 2 = isolated provision).
+    Placement {
+        t: f64,
+        job: JobId,
+        gid: usize,
+        kind_tag: u8,
+        marginal_cost: f64,
+        considered: Vec<(usize, f64)>,
+    },
+    /// Decision provenance: one victim's fate after a node crash or a
+    /// live group-cap shrink — healed in place (`repinned`,
+    /// `to_gid == gid`) or spilled to `to_gid`, with the charged
+    /// recovery delay. `node` is the crashed group-local node, or
+    /// `usize::MAX` for cap-shrink displacement (no node died).
+    Repair {
+        t: f64,
+        gid: usize,
+        node: usize,
+        job: JobId,
+        to_gid: usize,
+        repinned: bool,
+        delay_s: f64,
+    },
+    /// Decision provenance: one intra-group dispatch pick. `kind` is the
+    /// started phase (0 = rollout, 1 = train), `policy` the intra-policy
+    /// tag (0 = FIFO, 1 = round-robin, 2 = SLO-slack priority) and
+    /// `queue_depth` the group's dispatch-queue length after the pick.
+    Dispatch { t: f64, gid: usize, job: JobId, kind: u8, policy: u8, queue_depth: usize },
 }
 
 impl Frame {
@@ -58,7 +92,11 @@ impl Frame {
                 | WorldEvent::Repair { t, .. }
                 | WorldEvent::NodeUp { t, .. } => t,
             },
-            Frame::Util { t, .. } | Frame::SloSlack { t, .. } => *t,
+            Frame::Util { t, .. }
+            | Frame::SloSlack { t, .. }
+            | Frame::Placement { t, .. }
+            | Frame::Repair { t, .. }
+            | Frame::Dispatch { t, .. } => *t,
         }
     }
 
@@ -68,6 +106,9 @@ impl Frame {
             Frame::World(_) => 1,
             Frame::Util { .. } => 2,
             Frame::SloSlack { .. } => 3,
+            Frame::Placement { .. } => 4,
+            Frame::Repair { .. } => 5,
+            Frame::Dispatch { .. } => 6,
         }
     }
 
@@ -92,6 +133,17 @@ impl Frame {
             }
             Frame::SloSlack { job, iter, slack_s, .. } => {
                 (0, *job, *iter, 0, slack_s.to_bits(), 0)
+            }
+            // At most one placement per (t, job), so the key identifies
+            // the frame; the payload bits keep equal keys bit-identical.
+            Frame::Placement { job, gid, kind_tag, marginal_cost, considered, .. } => {
+                (*gid, *job, considered.len(), *kind_tag, marginal_cost.to_bits(), 0)
+            }
+            Frame::Repair { gid, node, job, to_gid, repinned, delay_s, .. } => {
+                (*gid, *job, *to_gid, *repinned as u8, delay_s.to_bits(), *node as u64)
+            }
+            Frame::Dispatch { gid, job, kind, policy, queue_depth, .. } => {
+                (*gid, *job, *queue_depth, (*kind << 4) | *policy, 0, 0)
             }
         }
     }
@@ -118,6 +170,21 @@ pub fn canonical_sort_records(records: &mut [PhaseRecord]) {
         a.start
             .total_cmp(&b.start)
             .then_with(|| phase_tie_key(a).cmp(&phase_tie_key(b)))
+    });
+}
+
+/// Sort a bare frame slice into the recorder's canonical total order —
+/// the same order [`FlightRecorder::canonical_sort`] produces. The trace
+/// query layer (`obs/`) applies this to frames loaded from an archive,
+/// so a daemon archive (append order = fanout drain order) and a batch
+/// archive (already canonically sorted at finalize) answer every query
+/// identically.
+pub fn canonical_sort_frames(frames: &mut [Frame]) {
+    frames.sort_by(|a, b| {
+        a.t()
+            .total_cmp(&b.t())
+            .then_with(|| a.kind_rank().cmp(&b.kind_rank()))
+            .then_with(|| a.tie_key().cmp(&b.tie_key()))
     });
 }
 
@@ -162,12 +229,7 @@ impl FlightRecorder {
     /// only between bit-identical frames, so the result is independent
     /// of the pre-sort (serial vs gid-concatenated parallel) order.
     pub fn canonical_sort(&mut self) {
-        self.frames.sort_by(|a, b| {
-            a.t()
-                .total_cmp(&b.t())
-                .then_with(|| a.kind_rank().cmp(&b.kind_rank()))
-                .then_with(|| a.tie_key().cmp(&b.tie_key()))
-        });
+        canonical_sort_frames(&mut self.frames);
     }
 
     /// The phase records in the stream (the gantt view of the recorder).
@@ -206,6 +268,40 @@ mod tests {
         assert!(matches!(a.frames[0], Frame::Phase(_)));
         assert!(matches!(a.frames[1], Frame::World(_)));
         assert!(matches!(a.frames[4], Frame::SloSlack { .. }));
+    }
+
+    #[test]
+    fn provenance_frames_sort_after_metric_frames_at_equal_t() {
+        let frames = vec![
+            Frame::Dispatch { t: 1.0, gid: 0, job: 2, kind: 0, policy: 0, queue_depth: 1 },
+            Frame::Repair {
+                t: 1.0,
+                gid: 0,
+                node: 1,
+                job: 2,
+                to_gid: 0,
+                repinned: true,
+                delay_s: 30.0,
+            },
+            Frame::Placement {
+                t: 1.0,
+                job: 2,
+                gid: 0,
+                kind_tag: 0,
+                marginal_cost: 0.5,
+                considered: vec![(0, 0.5), (1, f64::INFINITY)],
+            },
+            Frame::SloSlack { t: 1.0, job: 2, iter: 1, slack_s: 3.0 },
+        ];
+        let mut a = FlightRecorder { frames: frames.clone() };
+        let mut b = FlightRecorder { frames: frames.into_iter().rev().collect() };
+        a.canonical_sort();
+        b.canonical_sort();
+        assert_eq!(a, b);
+        assert!(matches!(a.frames()[0], Frame::SloSlack { .. }));
+        assert!(matches!(a.frames()[1], Frame::Placement { .. }));
+        assert!(matches!(a.frames()[2], Frame::Repair { .. }));
+        assert!(matches!(a.frames()[3], Frame::Dispatch { .. }));
     }
 
     #[test]

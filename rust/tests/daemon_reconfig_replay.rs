@@ -14,8 +14,11 @@
 use std::fs;
 use std::path::PathBuf;
 
+use rollmux::obs::FlightArchive;
 use rollmux::runtime::{Daemon, DaemonConfig, Routed};
+use rollmux::sim::recorder::Frame;
 use rollmux::sim::{FaultConfig, SimConfig};
+use rollmux::util::json::Json;
 
 fn admit_line(id: usize, t_roll: f64, t_train: f64, slo: f64, gpus: usize, iters: usize) -> String {
     format!(
@@ -158,6 +161,128 @@ fn recovery_is_bitwise_identical_at_every_record_boundary() {
             }
         }
     }
+}
+
+/// Three one-iter jobs finishing inside ONE advance overflow a 2-slot
+/// event ring deterministically, so the `done` class drops (ISSUE 10).
+fn overflow_session() -> Vec<(u32, String)> {
+    vec![
+        (1, "{\"cmd\":\"subscribe\"}".into()),
+        (1, admit_line(10, 10.0, 10.0, 50.0, 8, 1)),
+        (1, admit_line(11, 10.0, 10.0, 50.0, 8, 1)),
+        (1, admit_line(12, 10.0, 10.0, 50.0, 8, 1)),
+        (1, "{\"cmd\":\"advance\",\"dt\":5000}".into()),
+        (1, "{\"cmd\":\"drain\"}".into()),
+    ]
+}
+
+/// ISSUE 10 satellite: the per-class drop breakdown is journaled
+/// accounting like everything else — classes sum to the aggregate,
+/// drops actually land in the class that overflowed, the breakdown
+/// replays bitwise across a crash, and so does the `stats_prom` text
+/// exposition derived from the same state (histograms included).
+#[test]
+fn per_class_drop_breakdown_replays_bitwise() {
+    let mut c = cfg(false);
+    c.event_buf = 2;
+    let lines = overflow_session();
+    let drive = |d: &mut Daemon, from: usize| {
+        let mut out = Vec::new();
+        for (t, l) in &lines[from..] {
+            out.extend(d.handle_from(*t, l));
+        }
+        drained_line(&out)
+    };
+
+    let mut d = Daemon::new_virtual(c.clone());
+    let want = drive(&mut d, 0);
+    let want_prom = d.handle_from(1, "{\"cmd\":\"stats_prom\"}").remove(0).1;
+    let j = Json::parse(&want).expect("drained json");
+    let ev = j
+        .get("drained")
+        .and_then(|d| d.get("daemon"))
+        .and_then(|d| d.get("events"))
+        .expect("events object");
+    let agg = ev.get("dropped").and_then(Json::as_usize).expect("aggregate");
+    let by = ev.get("dropped_by_class").expect("per-class breakdown");
+    let class = |k: &str| by.get(k).and_then(Json::as_usize).expect("class count");
+    let sum: usize =
+        ["done", "fault", "repair", "reconfig", "metrics"].iter().map(|k| class(k)).sum();
+    assert_eq!(sum, agg, "classes must sum to the aggregate: {want}");
+    assert!(class("done") >= 1, "the overflow is in the done class: {want}");
+    assert!(want_prom.contains("rollmux_events_dropped{class=\"done\"}"), "{want_prom}");
+    assert!(want_prom.contains("# TYPE rollmux_phase_train_s histogram"), "{want_prom}");
+
+    // Crash at every boundary: the breakdown and the prom text recover.
+    let path = journal_path("by_class");
+    for crash_after in 0..lines.len() {
+        let _ = fs::remove_file(&path);
+        let mut d = Daemon::new_virtual(c.clone());
+        d.attach_journal(&path).expect("attach");
+        for (t, l) in &lines[..crash_after] {
+            d.handle_from(*t, l);
+        }
+        drop(d);
+        let mut d = Daemon::new_virtual(c.clone());
+        let replayed = d.attach_journal(&path).expect("recover");
+        assert_eq!(replayed, crash_after);
+        let got = drive(&mut d, replayed);
+        assert_eq!(got, want, "per-class breakdown diverged (crash_after={crash_after})");
+        let got_prom = d.handle_from(1, "{\"cmd\":\"stats_prom\"}").remove(0).1;
+        assert_eq!(got_prom, want_prom, "stats_prom diverged (crash_after={crash_after})");
+    }
+    let _ = fs::remove_file(&path);
+}
+
+/// ISSUE 10 tentpole: `--trace` appends the flight stream (decision
+/// provenance included) across a journaled crash/restart, and the
+/// resulting archive reads back clean — every frame exactly once.
+#[test]
+fn daemon_trace_archive_survives_restart() {
+    let jpath = journal_path("trace");
+    let mut tpath = std::env::temp_dir();
+    tpath.push(format!("rollmux_daemon_trace_{}.rmtrc", std::process::id()));
+    let _ = fs::remove_file(&jpath);
+    let _ = fs::remove_file(&tpath);
+
+    let mut c = cfg(true);
+    c.sim.record_decisions = true;
+    let lines = session();
+    let cut = 10;
+
+    let mut d = Daemon::new_virtual(c.clone());
+    d.attach_journal(&jpath).expect("attach journal");
+    d.attach_trace(&tpath).expect("attach trace");
+    for (t, l) in &lines[..cut] {
+        d.handle_from(*t, l);
+    }
+    drop(d); // kill -9: per-batch flush keeps the archive clean
+
+    let mut d = Daemon::new_virtual(c.clone());
+    let replayed = d.attach_journal(&jpath).expect("recover journal");
+    assert_eq!(replayed, cut);
+    d.attach_trace(&tpath).expect("reattach trace");
+    for (t, l) in &lines[replayed..] {
+        d.handle_from(*t, l);
+    }
+
+    // Replay must NOT have re-appended the predecessor's frames: the
+    // archive decodes strictly and carries provenance frames.
+    let frames = FlightArchive::read(&tpath).expect("read").expect("clean archive");
+    assert!(!frames.is_empty(), "daemon session archived no frames");
+    assert!(
+        frames.iter().any(|f| matches!(f, Frame::Dispatch { .. } | Frame::Placement { .. })),
+        "archive carries decision provenance"
+    );
+    let phase_count = frames.iter().filter(|f| matches!(f, Frame::Phase(_))).count();
+    let mut once = frames.clone();
+    rollmux::sim::recorder::canonical_sort_frames(&mut once);
+    once.dedup();
+    let deduped = once.iter().filter(|f| matches!(f, Frame::Phase(_))).count();
+    assert_eq!(phase_count, deduped, "replay duplicated archived phase frames");
+
+    let _ = fs::remove_file(&jpath);
+    let _ = fs::remove_file(&tpath);
 }
 
 #[test]

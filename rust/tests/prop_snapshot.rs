@@ -70,8 +70,8 @@ fn assert_results_bitwise(a: &SimResult, b: &SimResult, tag: &str) {
     assert_eq!(a.records.len(), b.records.len(), "{tag}: record count");
     for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
         assert_eq!(ra, rb, "{tag}: gantt record {i}");
-        assert_eq!(ra.start_s.to_bits(), rb.start_s.to_bits(), "{tag}: record {i} start bits");
-        assert_eq!(ra.end_s.to_bits(), rb.end_s.to_bits(), "{tag}: record {i} end bits");
+        assert_eq!(ra.start.to_bits(), rb.start.to_bits(), "{tag}: record {i} start bits");
+        assert_eq!(ra.end.to_bits(), rb.end.to_bits(), "{tag}: record {i} end bits");
     }
     assert_eq!(a.flight.len(), b.flight.len(), "{tag}: flight frame count");
     assert_eq!(a.flight, b.flight, "{tag}: flight stream");

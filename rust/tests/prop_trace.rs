@@ -1,0 +1,196 @@
+//! ISSUE 10 bitwise gates (DESIGN.md §18): decision provenance and the
+//! persisted trace archive must be **invisible in the results**.
+//!
+//! * **Decision recording off = pre-PR**: arming `record_decisions`
+//!   (and/or `trace_path`) must not change a single bit of any other
+//!   result field — across chaos on/off, every intra-group dispatch
+//!   policy, and both the serial and group-parallel drivers.
+//! * **Serial ≡ parallel**: with provenance armed, the full flight
+//!   stream (decision frames included) is bit-identical between
+//!   `run_to_end` and `run_parallel`, and so is every `rollmux trace`
+//!   query rendering computed from it.
+//! * **Archive codec**: a real run's persisted archive decodes to
+//!   exactly the in-memory flight stream, encode→decode→encode is a
+//!   byte fixed point, and strict decode rejects trailing bytes and
+//!   torn tails that salvage decode recovers from.
+//!
+//! No proptest crate offline: seeded random traces, failure tags in the
+//! assertion messages for replay.
+
+use rollmux::cluster::PhaseModel;
+use rollmux::coordinator::inter::InterGroupScheduler;
+use rollmux::coordinator::orchestrator::IntraPolicyKind;
+use rollmux::obs::query as q;
+use rollmux::obs::FlightArchive;
+use rollmux::sim::engine::{SimConfig, SimResult, Simulator};
+use rollmux::sim::faults::FaultConfig;
+use rollmux::sim::recorder::Frame;
+use rollmux::workload::trace::fleet_trace;
+
+fn chaos() -> FaultConfig {
+    FaultConfig {
+        seed: 13,
+        mtbf_s: 2.0 * 3600.0,
+        mean_repair_s: 600.0,
+        straggler_frac: 0.3,
+        straggler_factor: 1.4,
+        max_events: 40,
+    }
+}
+
+/// Scalar digest of a `SimResult`, compared bitwise.
+fn assert_scalars_bitwise(a: &SimResult, b: &SimResult, tag: &str) {
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{tag}: makespan");
+    assert_eq!(a.cost_usd.to_bits(), b.cost_usd.to_bits(), "{tag}: cost");
+    assert_eq!(a.avg_cost_per_hour.to_bits(), b.avg_cost_per_hour.to_bits(), "{tag}: avg cost");
+    assert_eq!(a.roll_busy_gpu_s.to_bits(), b.roll_busy_gpu_s.to_bits(), "{tag}: roll busy");
+    assert_eq!(a.train_busy_gpu_s.to_bits(), b.train_busy_gpu_s.to_bits(), "{tag}: train busy");
+    assert_eq!(a.wasted_gpu_s.to_bits(), b.wasted_gpu_s.to_bits(), "{tag}: wasted");
+    assert_eq!(a.recovery_time_s.to_bits(), b.recovery_time_s.to_bits(), "{tag}: recovery");
+    assert_eq!(a.events_processed, b.events_processed, "{tag}: events");
+    assert_eq!(a.crashes, b.crashes, "{tag}: crashes");
+    assert_eq!(a.stragglers, b.stragglers, "{tag}: stragglers");
+    assert_eq!(a.evictions, b.evictions, "{tag}: evictions");
+    assert_eq!(a.spills, b.spills, "{tag}: spills");
+    assert_eq!(a.peak_roll_gpus, b.peak_roll_gpus, "{tag}: peak roll");
+    assert_eq!(a.peak_train_gpus, b.peak_train_gpus, "{tag}: peak train");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{tag}: outcome count");
+    for (id, oa) in &a.outcomes {
+        let ob = b.outcomes.get(id).unwrap_or_else(|| panic!("{tag}: job {id} missing"));
+        assert_eq!(oa.finish_s.to_bits(), ob.finish_s.to_bits(), "{tag}: job {id} finish");
+        assert_eq!(oa.iters, ob.iters, "{tag}: job {id} iters");
+        assert_eq!(oa.migrations, ob.migrations, "{tag}: job {id} migrations");
+    }
+    assert_eq!(a.records, b.records, "{tag}: gantt records");
+}
+
+fn cfg_for(seed: u64, intra: IntraPolicyKind, faults: Option<FaultConfig>) -> SimConfig {
+    SimConfig {
+        seed,
+        intra,
+        faults,
+        record_gantt: true,
+        record_flight: true,
+        ..Default::default()
+    }
+}
+
+fn mk_sim(cfg: &SimConfig, seed: u64, n_jobs: usize) -> Simulator<InterGroupScheduler> {
+    Simulator::new(
+        cfg.clone(),
+        InterGroupScheduler::with_max_group_size(PhaseModel::default(), 8),
+        fleet_trace(seed, n_jobs, 1.0),
+    )
+}
+
+fn is_decision(f: &Frame) -> bool {
+    matches!(f, Frame::Placement { .. } | Frame::Repair { .. } | Frame::Dispatch { .. })
+}
+
+fn non_decision(frames: &[Frame]) -> Vec<Frame> {
+    frames.iter().filter(|f| !is_decision(f)).cloned().collect()
+}
+
+/// Arming `record_decisions` adds provenance frames to the flight
+/// stream and changes NOTHING else — across chaos x policy x driver.
+#[test]
+fn prop_decision_recording_is_invisible() {
+    let (seed, n_jobs) = (61u64, 120usize);
+    for faults in [None, Some(chaos())] {
+        for intra in IntraPolicyKind::all() {
+            let base = cfg_for(seed, intra, faults.clone());
+            let armed = SimConfig { record_decisions: true, ..base.clone() };
+            for workers in [1usize, 4] {
+                let off = mk_sim(&base, seed, n_jobs).run_parallel(workers);
+                let on = mk_sim(&armed, seed, n_jobs).run_parallel(workers);
+                let tag =
+                    format!("intra {intra:?} chaos {} workers {workers}", faults.is_some());
+                assert_scalars_bitwise(&off, &on, &tag);
+                assert!(
+                    on.flight.frames().iter().any(is_decision),
+                    "{tag}: armed run captured no decision frames"
+                );
+                assert!(
+                    !off.flight.frames().iter().any(is_decision),
+                    "{tag}: unarmed run captured decision frames"
+                );
+                assert_eq!(
+                    non_decision(on.flight.frames()),
+                    off.flight.frames(),
+                    "{tag}: non-decision frame subsequence"
+                );
+            }
+        }
+    }
+}
+
+/// With provenance armed, serial and group-parallel drains are
+/// bit-identical — flight stream included — and every trace query
+/// renders byte-identically from either stream.
+#[test]
+fn prop_queries_serial_parallel_identical() {
+    let (seed, n_jobs) = (67u64, 150usize);
+    for intra in IntraPolicyKind::all() {
+        let cfg = SimConfig { record_decisions: true, ..cfg_for(seed, intra, Some(chaos())) };
+        let serial = mk_sim(&cfg, seed, n_jobs).run_to_end();
+        let par = mk_sim(&cfg, seed, n_jobs).run_parallel(4);
+        let tag = format!("intra {intra:?}");
+        assert_scalars_bitwise(&serial, &par, &tag);
+        assert_eq!(serial.flight, par.flight, "{tag}: flight stream");
+        let (fs, fp) = (serial.flight.frames(), par.flight.frames());
+        let (rs, rp) = (q::slo_breach(fs, 600.0), q::slo_breach(fp, 600.0));
+        assert_eq!(q::slo_breach_table(&rs, 600.0), q::slo_breach_table(&rp, 600.0), "{tag}");
+        assert_eq!(q::slo_breach_jsonl(&rs), q::slo_breach_jsonl(&rp), "{tag}: jsonl");
+        assert_eq!(q::bubbles_table(&q::bubbles(fs)), q::bubbles_table(&q::bubbles(fp)), "{tag}");
+        let hs = q::histograms(fs);
+        assert_eq!(q::histograms_table(&hs), q::histograms_table(&q::histograms(fp)), "{tag}");
+    }
+}
+
+/// `trace_path` persists exactly the in-memory flight stream and is
+/// otherwise invisible; the archive codec is a byte fixed point on a
+/// real chaos run, strict about corruption, salvaging about torn tails.
+#[test]
+fn prop_archive_roundtrip_real_run() {
+    let (seed, n_jobs) = (71u64, 120usize);
+    let dir = std::env::temp_dir().join(format!("rollmux_prop_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("run.rmtrc");
+    let plain = SimConfig {
+        record_decisions: true,
+        ..cfg_for(seed, IntraPolicyKind::SloSlackPriority, Some(chaos()))
+    };
+    let traced = SimConfig { trace_path: Some(path.clone()), ..plain.clone() };
+    let without = mk_sim(&plain, seed, n_jobs).run_to_end();
+    let with = mk_sim(&traced, seed, n_jobs).run_to_end();
+    assert_scalars_bitwise(&without, &with, "trace_path invisibility");
+    assert_eq!(without.flight, with.flight, "trace_path: flight stream");
+
+    let frames = FlightArchive::read(&path).expect("read").expect("clean archive");
+    assert_eq!(frames, with.flight.frames(), "archive == in-memory stream");
+    let bytes = FlightArchive::encode(&frames);
+    assert_eq!(
+        FlightArchive::encode(&FlightArchive::decode(&bytes).expect("decode")),
+        bytes,
+        "encode-decode-encode fixed point"
+    );
+
+    // Trailing garbage: strict rejects, salvage drops exactly it.
+    let mut dirty = bytes.clone();
+    dirty.extend_from_slice(&[0x5a, 0x5a, 0x5a]);
+    assert!(FlightArchive::decode(&dirty).is_err(), "strict rejects trailing bytes");
+    let (got, dropped) = FlightArchive::decode_salvage(&dirty).expect("salvage");
+    assert_eq!(got, frames);
+    assert_eq!(dropped, 3);
+
+    // Torn tail (a daemon killed mid-append): strict rejects, salvage
+    // recovers every complete frame.
+    let torn = &bytes[..bytes.len() - 5];
+    assert!(FlightArchive::decode(torn).is_err(), "strict rejects a torn tail");
+    let (got, dropped) = FlightArchive::decode_salvage(torn).expect("salvage torn");
+    assert_eq!(got, frames[..frames.len() - 1], "salvage keeps the complete prefix");
+    assert!(dropped > 0);
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_dir(&dir).ok();
+}

@@ -4,7 +4,7 @@
 # across PRs; see EXPERIMENTS.md §Perf for methodology). ISSUE 1
 # produced BENCH_1.json, ISSUE 2 BENCH_2.json; the generation is a
 # parameter so each PR appends its own file instead of editing this
-# script (ISSUE 9 default: BENCH_9.json).
+# script (ISSUE 10 default: BENCH_10.json).
 #
 # Multi-round protocol (ISSUE 7): the whole bench suite runs
 # BENCH_ROUNDS times (default 5) plus ONE warmup round that is
@@ -20,7 +20,7 @@
 # bench_compare.sh's policy).
 #
 # Usage: scripts/bench.sh [gen] [extra cargo args...]
-#   gen                 bench generation number (default: 9 -> BENCH_9.json)
+#   gen                 bench generation number (default: 10 -> BENCH_10.json)
 #   BENCH_OUT=path      override the output file entirely
 #   BENCH_ROUNDS=n      kept measurement rounds (default 5; warmup extra)
 #   MAX_CV=x            acceptance ceiling on gated entries' cv (default 0.15)
@@ -29,7 +29,7 @@
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
-GEN="9"
+GEN="10"
 if [[ $# -ge 1 && "$1" =~ ^[0-9]+$ ]]; then
     GEN="$1"
     shift
@@ -65,6 +65,10 @@ run_suite() {
     # fork_sweep_vs_rerun acceptance pair (>= 3x for 8 branches off one
     # late checkpoint vs 8 independent re-runs).
     cargo bench --bench snapshot "$@"
+    # ISSUE 10: decision-provenance recording overhead (acceptance
+    # <= 5% over recording-off), RMTRC01 archive codec throughput, and
+    # trace-query throughput on a chaos archive.
+    cargo bench --bench obs "$@"
 }
 
 echo "== bench round 0/${ROUNDS} (warmup, discarded) =="
